@@ -1,0 +1,54 @@
+//! Serving benchmark: dynamic-batcher throughput/latency across batching
+//! policies (max_batch × max_wait), native backend so the numbers isolate
+//! coordinator overhead from backend compute.
+
+use std::time::Duration;
+
+use mergemoe::coordinator::{ScoringServer, ServerConfig};
+use mergemoe::eval::tasks::{gen_items, ALL_TASKS};
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::runtime::NativeEngine;
+use mergemoe::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
+    let model = ctx.load_model("beta")?;
+    println!("\n=== bench_batcher (policy sweep, native backend) ===");
+    for (max_batch, wait_ms) in [(1usize, 0u64), (8, 1), (8, 3), (32, 1), (32, 3), (32, 10)] {
+        let cfg = ServerConfig {
+            max_batch,
+            max_wait: Duration::from_millis(wait_ms),
+            seq_len: ctx.manifest.seq_len,
+        };
+        let server = ScoringServer::start(model.clone(), cfg, || Ok(NativeEngine));
+        let handle = server.handle();
+        let n_clients = 8;
+        let per = 25;
+        let mut joins = Vec::new();
+        for c in 0..n_clients {
+            let h = handle.clone();
+            joins.push(std::thread::spawn(move || {
+                let mut rng = Rng::new(300 + c as u64);
+                for i in 0..per {
+                    let t = ALL_TASKS[(c + i) % ALL_TASKS.len()];
+                    let item = gen_items(t, 1, rng.next_u64()).pop().unwrap();
+                    h.score(&item.prompt, &item.options[0]).unwrap();
+                }
+            }));
+        }
+        for j in joins {
+            j.join().unwrap();
+        }
+        drop(handle);
+        let m = server.shutdown();
+        println!(
+            "max_batch={max_batch:<3} wait={wait_ms:>2}ms  {:>6.1} req/s  mean_batch={:<5.2} \
+             p50={:?} p99={:?}",
+            m.throughput_rps(),
+            m.mean_batch_size(),
+            m.total_latency.quantile(0.5),
+            m.total_latency.quantile(0.99),
+        );
+    }
+    Ok(())
+}

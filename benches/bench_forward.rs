@@ -1,0 +1,41 @@
+//! Forward-path benchmark: native engine vs PJRT per-layer vs PJRT monolith
+//! (the §Perf dispatch-overhead ablation), across the batch buckets.
+
+use mergemoe::bench::Bencher;
+use mergemoe::calib;
+use mergemoe::config::Manifest;
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+
+fn main() -> anyhow::Result<()> {
+    let artifacts = mergemoe::config::artifacts_dir();
+    let ctx = Ctx::new(artifacts.clone(), EngineSel::Native)?;
+    let model = ctx.load_model("beta")?;
+    let s = ctx.manifest.seq_len;
+    let mut pjrt = PjrtEngine::new(Manifest::load(&artifacts)?)?;
+
+    let b = Bencher::default();
+    let mut out = Vec::new();
+    for &bb in &[1usize, 8, 32] {
+        let tokens = calib::sample_sequences(None, bb, s, 7);
+        let toks = bb as f64 * s as f64;
+        out.push(b.run_items(&format!("forward/native/b{bb}"), toks, || {
+            NativeEngine.logits(&model, &tokens, bb, s).unwrap()
+        }));
+        out.push(b.run_items(&format!("forward/pjrt_layered/b{bb}"), toks, || {
+            pjrt.logits(&model, &tokens, bb, s).unwrap()
+        }));
+        out.push(b.run_items(&format!("forward/pjrt_monolith/b{bb}"), toks, || {
+            pjrt.logits_bucketed(&model, &tokens, bb, s, true).unwrap()
+        }));
+    }
+    println!("\n=== bench_forward (engine comparison; items = tokens) ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+    println!(
+        "pjrt: {} executables compiled in {:.2}s, {} executions",
+        pjrt.n_compiled, pjrt.compile_seconds, pjrt.n_executions
+    );
+    Ok(())
+}

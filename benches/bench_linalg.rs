@@ -1,0 +1,48 @@
+//! Numerical-substrate benchmark: matmul variants, Cholesky/QR, and the
+//! ridge least-squares solve at the shapes the MergeMoE pipeline hits.
+
+use mergemoe::bench::Bencher;
+use mergemoe::linalg;
+use mergemoe::tensor::{ops, Tensor};
+use mergemoe::util::rng::Rng;
+
+fn main() {
+    let b = Bencher::default();
+    let mut rng = Rng::new(11);
+    let mut out = Vec::new();
+
+    for &(m, k, n) in &[(64usize, 64usize, 64usize), (256, 64, 64), (2048, 64, 64)] {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let bm = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let flops = (2 * m * k * n) as f64;
+        out.push(b.run_items(&format!("matmul/{m}x{k}x{n} (items=flops)"), flops, || {
+            ops::matmul(&a, &bm).unwrap()
+        }));
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        out.push(b.run_items(&format!("matmul_bt/{m}x{k}x{n}"), flops, || {
+            ops::matmul_bt(&a, &bt).unwrap()
+        }));
+    }
+
+    let spd = {
+        let a = Tensor::randn(&[64, 64], 1.0, &mut rng);
+        let mut m = ops::matmul_bt(&a, &a).unwrap();
+        for i in 0..64 {
+            *m.at2_mut(i, i) += 1.0;
+        }
+        m
+    };
+    out.push(b.run("cholesky/64", || linalg::cholesky(&spd).unwrap()));
+    let rhs = Tensor::randn(&[64, 64], 1.0, &mut rng);
+    out.push(b.run("solve_spd/64x64", || linalg::solve_spd(&spd, &rhs, 1e-8).unwrap()));
+    let tall = Tensor::randn(&[256, 64], 1.0, &mut rng);
+    out.push(b.run("qr/256x64", || linalg::qr(&tall).unwrap()));
+    let p = Tensor::randn(&[64, 4096], 1.0, &mut rng);
+    let y = Tensor::randn(&[64, 4096], 1.0, &mut rng);
+    out.push(b.run("lstsq_rows/64x4096", || linalg::lstsq_rows(&p, &y, 1e-8).unwrap()));
+
+    println!("\n=== bench_linalg ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+}

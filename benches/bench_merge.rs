@@ -1,0 +1,57 @@
+//! Fig. 3 benchmark: per-layer merging time, MergeMoE vs the baselines
+//! (`beta`, 12 → 6, 128 calibration sequences — the paper's batch-128
+//! setting), plus the isolated least-squares solve.
+
+use mergemoe::bench::Bencher;
+use mergemoe::calib;
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::merge::{self, Algorithm, NativeGram};
+use mergemoe::linalg;
+use mergemoe::tensor::Tensor;
+use mergemoe::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
+    let model = ctx.load_model("beta")?;
+    let seq_len = ctx.manifest.seq_len;
+    let tokens = calib::sample_sequences(None, 128, seq_len, 1);
+    let data = calib::capture(&model, &tokens, 128, seq_len)?;
+    let li = model.cfg.n_layers - 1;
+    let moe = &model.layers[li].moe;
+    let lc = &data.layers[li];
+    let plan = merge::clustering::build_plan(moe, &lc.stats, 6)?;
+
+    let b = Bencher::default();
+    let mut out = Vec::new();
+    for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe,
+                Algorithm::MergeMoe] {
+        out.push(b.run(&format!("merge_layer/{}", alg.name()), || {
+            merge::merge_layer(alg, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6)
+                .unwrap()
+        }));
+    }
+    // isolated pieces of the MergeMoE solve
+    out.push(b.run("clustering/build_plan", || {
+        merge::clustering::build_plan(moe, &lc.stats, 6).unwrap()
+    }));
+    let mut rng = Rng::new(5);
+    let p = Tensor::randn(&[64, 8192], 1.0, &mut rng);
+    let y = Tensor::randn(&[64, 8192], 1.0, &mut rng);
+    out.push(b.run_items("lstsq/gram_8192cols", 8192.0, || {
+        use mergemoe::merge::GramBackend;
+        NativeGram.gram(&p, &y).unwrap()
+    }));
+    let (pp, yp) = {
+        use mergemoe::merge::GramBackend;
+        NativeGram.gram(&p, &y).unwrap()
+    };
+    out.push(b.run("lstsq/solve_64x64", || {
+        linalg::lstsq_from_gram(&pp, &yp, 1e-6).unwrap()
+    }));
+
+    println!("\n=== bench_merge (fig. 3) ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,30 @@
+//! End-to-end compression-pipeline benchmark: calibration capture + merge
+//! across calibration sizes and algorithms (the cost model behind Fig. 3 and
+//! the paper's "completes within a minute" claim).
+
+use mergemoe::bench::Bencher;
+use mergemoe::coordinator::{compress, CompressSpec};
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::merge::{Algorithm, NativeGram};
+
+fn main() -> anyhow::Result<()> {
+    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
+    let model = ctx.load_model("beta")?;
+    let b = Bencher::quick();
+    let mut out = Vec::new();
+    for &seqs in &[16usize, 64, 128] {
+        for alg in [Algorithm::MSmoe, Algorithm::MergeMoe] {
+            let mut spec = CompressSpec::new(vec![2, 3], 6, alg);
+            spec.n_calib_seqs = seqs;
+            out.push(b.run(
+                &format!("pipeline/{}/calib{seqs}", alg.name()),
+                || compress(&model, &spec, &mut NativeGram).unwrap(),
+            ));
+        }
+    }
+    println!("\n=== bench_pipeline ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+    Ok(())
+}

@@ -1,0 +1,108 @@
+//! End-to-end driver (the EXPERIMENTS.md §E2E run): the full production
+//! story on a real workload —
+//!
+//!   1. load the trained Qwen1.5-analogue MoE model,
+//!   2. run the MergeMoE compression pipeline (calibration capture →
+//!      clustering → frequency weighting → least-squares T1) on the back
+//!      half of the layers,
+//!   3. cross-check the native and PJRT engines on the compressed model,
+//!   4. deploy the compressed model behind the dynamic batcher and serve
+//!      several hundred concurrent scoring requests,
+//!   5. report accuracy, latency percentiles, throughput, and memory saved.
+//!
+//! Run with:  cargo run --release --offline --example compress_and_serve
+
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mergemoe::config::Manifest;
+use mergemoe::coordinator::{compress, CompressSpec, ScoringServer, ServerConfig};
+use mergemoe::eval::tasks::{gen_items, ALL_TASKS};
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::merge::Algorithm;
+use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+use mergemoe::util::rng::Rng;
+
+fn main() -> Result<()> {
+    let artifacts = mergemoe::config::artifacts_dir();
+    let ctx = Ctx::new(artifacts.clone(), EngineSel::Pjrt)?;
+
+    // ---- 1+2: compress ----------------------------------------------------
+    let model = ctx.load_model("beta")?;
+    let mut spec = CompressSpec::new(vec![2, 3], 6, Algorithm::MergeMoe);
+    spec.n_calib_seqs = 64;
+    let mut gram = ctx.make_gram("beta")?;
+    let t0 = Instant::now();
+    let (merged, report) = compress(&model, &spec, &mut gram.as_backend())?;
+    println!(
+        "[compress] {:.2}M -> {:.2}M params ({:.1}%), calib {:.2}s + merge {:.2}s",
+        report.params_before as f64 / 1e6,
+        report.params_after as f64 / 1e6,
+        100.0 * report.compression_ratio(),
+        report.calib_seconds,
+        report.merge_seconds
+    );
+
+    // ---- 3: engine cross-check on the compressed model --------------------
+    let s = ctx.manifest.seq_len;
+    let tokens = mergemoe::calib::sample_sequences(None, 4, s, 99);
+    let native = NativeEngine.logits(&merged, &tokens, 4, s)?;
+    let mut pjrt = PjrtEngine::new(Manifest::load(&artifacts)?)?;
+    let pj = pjrt.logits(&merged, &tokens, 4, s)?;
+    let rel = pj.rel_err(&native);
+    println!("[selfcheck] native vs pjrt on compressed model: rel err {rel:.2e}");
+    anyhow::ensure!(rel < 1e-3, "engines disagree on the compressed model");
+
+    // ---- 4: serve ----------------------------------------------------------
+    let cfg = ServerConfig {
+        max_batch: 32,
+        max_wait: Duration::from_millis(3),
+        seq_len: s,
+    };
+    let art2 = artifacts.clone();
+    let server = ScoringServer::start(merged, cfg, move || {
+        PjrtEngine::new(Manifest::load(&art2)?)
+    });
+    let handle = server.handle();
+    let n_clients = 4;
+    let per_client = 60;
+    let t1 = Instant::now();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        joins.push(std::thread::spawn(move || -> Result<(usize, usize)> {
+            let mut rng = Rng::new(880 + c as u64);
+            let mut correct = 0;
+            for i in 0..per_client {
+                let t = ALL_TASKS[(c + i) % ALL_TASKS.len()];
+                let item = gen_items(t, 1, rng.next_u64()).pop().unwrap();
+                let s0 = h.score(&item.prompt, &item.options[0])?;
+                let s1 = h.score(&item.prompt, &item.options[1])?;
+                if (if s0 >= s1 { 0 } else { 1 }) == item.correct {
+                    correct += 1;
+                }
+            }
+            Ok((correct, per_client))
+        }));
+    }
+    let mut correct = 0;
+    let mut total = 0;
+    for j in joins {
+        let (c, t) = j.join().unwrap()?;
+        correct += c;
+        total += t;
+    }
+    drop(handle);
+    let metrics = server.shutdown();
+    let wall = t1.elapsed().as_secs_f64();
+
+    // ---- 5: report ----------------------------------------------------------
+    println!("[serve] {}", metrics.report());
+    println!(
+        "[serve] online accuracy {:.1}% over {total} items, wall {wall:.1}s, \
+         end-to-end (compress+serve) {:.1}s",
+        100.0 * correct as f64 / total as f64,
+        t0.elapsed().as_secs_f64()
+    );
+    Ok(())
+}

@@ -1,0 +1,66 @@
+//! Quickstart: load a trained MoE model, compress it with MergeMoE, and
+//! compare the paper's headline numbers (accuracy before/after, memory
+//! saved) in under a minute.
+//!
+//! Run with:  cargo run --release --offline --example quickstart
+
+use anyhow::Result;
+use mergemoe::coordinator::{compress, CompressSpec};
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::merge::Algorithm;
+
+fn main() -> Result<()> {
+    // Artifacts (weights + HLO + manifest) come from `make artifacts`.
+    let ctx = {
+        let mut c = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Pjrt)?;
+        c.items = 100; // items per task
+        c
+    };
+
+    // 1. Load the Qwen1.5-analogue model (12 experts, shared expert).
+    let model = ctx.load_model("beta")?;
+    println!(
+        "loaded beta: {} layers, {} experts (top-{}), {:.2}M params",
+        model.cfg.n_layers, model.cfg.n_experts, model.cfg.top_k,
+        model.n_params() as f64 / 1e6
+    );
+
+    // 2. Compress the back half of the layers 12 -> 6 experts with MergeMoE.
+    let mut spec = CompressSpec::new(vec![2, 3], 6, Algorithm::MergeMoe);
+    spec.n_calib_seqs = 64;
+    let mut gram = ctx.make_gram("beta")?;
+    let (merged, report) = compress(&model, &spec, &mut gram.as_backend())?;
+    println!(
+        "compressed to {:.2}M params ({:.1}% of original) in {:.2}s",
+        report.params_after as f64 / 1e6,
+        100.0 * report.compression_ratio(),
+        report.merge_seconds
+    );
+    for l in &report.layers {
+        println!(
+            "  layer {}: {} -> {} experts, output rel-err {:.4}",
+            l.layer, l.n_before, l.n_after, l.output_rel_err
+        );
+    }
+
+    // 3. Evaluate both models on the seven benchmark tasks (PJRT engine —
+    //    the same compiled executables the serving path uses).
+    let mut engine = ctx.make_engine()?;
+    let tasks = mergemoe::exp::paper_task_order();
+    let before = ctx.eval_suite(engine.as_mut(), &model, &tasks)?;
+    let after = ctx.eval_suite(engine.as_mut(), &merged, &tasks)?;
+    println!("\n{:<10} {:>8} {:>10}", "task", "full", "compressed");
+    for t in &tasks {
+        println!(
+            "{:<10} {:>7.2}% {:>9.2}%",
+            t.name(),
+            before[t.name()].percent(),
+            after[t.name()].percent()
+        );
+    }
+    let mean = |m: &std::collections::BTreeMap<&'static str, mergemoe::eval::Accuracy>| {
+        m.values().map(|a| a.percent()).sum::<f64>() / m.len() as f64
+    };
+    println!("{:<10} {:>7.2}% {:>9.2}%", "mean", mean(&before), mean(&after));
+    Ok(())
+}

@@ -1,0 +1,247 @@
+"""AOT lowering: JAX (L2, calling the L1 pallas kernels) -> HLO text artifacts.
+
+Emits one executable per *layer type × shape signature* so the rust
+coordinator can compose models whose layers have heterogeneous expert counts
+(compressed layers use the `moe_*_e{M}_*` artifact, untouched layers the
+`e{N}` one). Every weight is a runtime parameter: one executable serves
+original and merged weights of the same shape.
+
+Interchange is HLO **text**, not a serialized HloModuleProto: jax >= 0.5
+emits 64-bit instruction ids that the xla crate's xla_extension 0.5.1 rejects
+(`proto.id() <= INT_MAX`); the text parser reassigns ids (see
+/opt/xla-example/README.md). Lowered with return_tuple=True; rust unwraps
+with `decompose_tuple`.
+
+artifacts/manifest.json records, for every artifact, the ordered parameter
+list (name, shape, dtype) and output list, plus the model configurations and
+the charset fingerprint — the rust side is entirely manifest-driven.
+
+Usage: python -m compile.aot [--out ../artifacts] [--skip-train-check]
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from .configs import MODELS, SEQ_LEN, BATCH_BUCKETS, GRAM_COLS, VOCAB
+from .data import charset_fingerprint
+from . import model as M
+from .kernels.gram import gram as pallas_gram
+
+F32 = "f32"
+I32 = "i32"
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def spec(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+# --------------------------------------------------------------------------
+# layer-type entry points (weights as positional args, fixed order)
+# --------------------------------------------------------------------------
+
+def embed_fn(tokens, tok_emb, pos_emb):
+    return (tok_emb[tokens] + pos_emb[None, : tokens.shape[1]],)
+
+
+def attn_fn(n_heads, h, ln_g, ln_b, wq, wk, wv, wo):
+    return (M.attn_block(h, ln_g, ln_b, wq, wk, wv, wo, n_heads),)
+
+
+def moe_fn(top_k, h, ln_g, ln_b, router, amap, wg, wu, wd, *shared):
+    """Unified MoE block artifact (Appendix-B layout): the router stays
+    N-way and `amap` (M,N) redirects routing mass to the M real experts —
+    identity for uncompressed layers, A for merged layers, B·A for the
+    Table-5 oracle. See model.moe_block_mapped."""
+    sh = tuple(shared) if shared else None
+    return M.moe_block_mapped(h, ln_g, ln_b, router, amap, wg, wu, wd, sh,
+                              top_k, use_pallas=True)
+
+
+def lmhead_fn(h, lnf_g, lnf_b, head):
+    x = M.layernorm(h, lnf_g, lnf_b)
+    logits = x @ head.T
+    return (logits, jax.nn.log_softmax(logits, axis=-1))
+
+
+def monolith_fn(cfg, tokens, *weights):
+    keys = monolith_keys(cfg)
+    p = dict(zip(keys, weights))
+    logits, _ = M.forward(p, tokens, cfg, use_pallas=True)
+    return (logits,)
+
+
+def monolith_keys(cfg):
+    keys = ["tok_emb", "pos_emb"]
+    for i in range(cfg.n_layers):
+        keys += [f"L{i}.{n}" for n in
+                 ("ln1_g", "ln1_b", "wq", "wk", "wv", "wo",
+                  "ln2_g", "ln2_b", "router", "wg", "wu", "wd")]
+        if cfg.shared_expert:
+            keys += [f"L{i}.swg", f"L{i}.swu", f"L{i}.swd"]
+    keys += ["lnf_g", "lnf_b", "head"]
+    return keys
+
+
+def gram_fn(p, y):
+    pp, yp = pallas_gram(p, y)
+    return (pp, yp)
+
+
+# --------------------------------------------------------------------------
+# artifact enumeration
+# --------------------------------------------------------------------------
+
+def _params(*items):
+    return [{"name": n, "shape": list(s), "dtype": d} for n, s, d in items]
+
+
+def build_manifest():
+    """Enumerate every artifact (deduplicated by shape signature)."""
+    arts = {}
+
+    def add(name, fn, params, outputs, meta=None):
+        if name in arts:
+            return
+        arts[name] = {"fn": fn, "params": params, "outputs": outputs,
+                      "meta": meta or {}}
+
+    d_set = sorted({(c.d_model, c.n_heads) for c in MODELS.values()})
+    for b in BATCH_BUCKETS:
+        add(f"embed_v{VOCAB}_d64_b{b}",
+            embed_fn,
+            _params(("tokens", (b, SEQ_LEN), I32),
+                    ("tok_emb", (VOCAB, 64), F32),
+                    ("pos_emb", (SEQ_LEN, 64), F32)),
+            [{"shape": [b, SEQ_LEN, 64], "dtype": F32}])
+        for d, h in d_set:
+            add(f"attn_d{d}_h{h}_b{b}",
+                functools.partial(attn_fn, h),
+                _params(("h", (b, SEQ_LEN, d), F32),
+                        ("ln1_g", (d,), F32), ("ln1_b", (d,), F32),
+                        ("wq", (d, d), F32), ("wk", (d, d), F32),
+                        ("wv", (d, d), F32), ("wo", (d, d), F32)),
+                [{"shape": [b, SEQ_LEN, d], "dtype": F32}])
+            add(f"lmhead_v{VOCAB}_d{d}_b{b}",
+                lmhead_fn,
+                _params(("h", (b, SEQ_LEN, d), F32),
+                        ("lnf_g", (d,), F32), ("lnf_b", (d,), F32),
+                        ("head", (VOCAB, d), F32)),
+                [{"shape": [b, SEQ_LEN, VOCAB], "dtype": F32},
+                 {"shape": [b, SEQ_LEN, VOCAB], "dtype": F32}])
+
+    # moe blocks: every (d, f, N router rows, M real experts, K, shared)
+    # signature any experiment needs. (N,N) doubles as the oracle artifact
+    # (amap = B·A) and the uncompressed layer (amap = I).
+    for cfg in MODELS.values():
+        d, f, k = cfg.d_model, cfg.d_ff, cfg.top_k
+        n = cfg.n_experts
+        m_set = {n, *cfg.merge_targets}
+        sh = cfg.shared_expert
+        for m in sorted(m_set):
+            for b in BATCH_BUCKETS:
+                sig = f"moe_d{d}_f{f}_n{n}_m{m}_k{k}_{'sh' if sh else 'ns'}_b{b}"
+                shared_params = (_params((f"swg", (f, d), F32),
+                                         (f"swu", (f, d), F32),
+                                         (f"swd", (d, f), F32)) if sh else [])
+                add(sig, functools.partial(moe_fn, k),
+                    _params(("h", (b, SEQ_LEN, d), F32),
+                            ("ln2_g", (d,), F32), ("ln2_b", (d,), F32),
+                            ("router", (n, d), F32),
+                            ("amap", (m, n), F32),
+                            ("wg", (m, f, d), F32), ("wu", (m, f, d), F32),
+                            ("wd", (m, d, f), F32)) + shared_params,
+                    [{"shape": [b, SEQ_LEN, d], "dtype": F32},
+                     {"shape": [m], "dtype": F32},
+                     {"shape": [b, SEQ_LEN, k], "dtype": I32},
+                     {"shape": [b, SEQ_LEN, k], "dtype": F32}])
+
+    # monolithic full-model forwards (per-layer-dispatch overhead ablation)
+    for cfg in MODELS.values():
+        if not cfg.merge_targets:
+            continue
+        for b in BATCH_BUCKETS:
+            keys = monolith_keys(cfg)
+            init = M.init_params(cfg)
+            params = _params(("tokens", (b, SEQ_LEN), I32)) + _params(
+                *((k_, init[k_].shape, F32) for k_ in keys))
+            add(f"monolith_{cfg.name}_b{b}",
+                functools.partial(monolith_fn, cfg), params,
+                [{"shape": [b, SEQ_LEN, VOCAB], "dtype": F32}],
+                meta={"model": cfg.name, "keys": keys})
+
+    # gram accumulators for the lstsq solve (merge-time hot path)
+    for cfg in MODELS.values():
+        if not cfg.merge_targets:
+            continue
+        d, f = cfg.d_model, cfg.d_ff
+        for s in GRAM_COLS:
+            add(f"gram_f{f}_d{d}_s{s}", gram_fn,
+                _params(("p", (f, s), F32), ("y", (d, s), F32)),
+                [{"shape": [f, f], "dtype": F32},
+                 {"shape": [d, f], "dtype": F32}])
+    return arts
+
+
+def lower_artifact(name, art, out_dir):
+    path = os.path.join(out_dir, f"{name}.hlo.txt")
+    if os.path.exists(path):
+        return False
+    args = [spec(tuple(p["shape"]), jnp.int32 if p["dtype"] == I32 else jnp.float32)
+            for p in art["params"]]
+    lowered = jax.jit(art["fn"]).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as fp:
+        fp.write(text)
+    return True
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--only", default=None, help="comma-list of artifact names")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    arts = build_manifest()
+    only = set(args.only.split(",")) if args.only else None
+    n_new = 0
+    for name, art in arts.items():
+        if only and name not in only:
+            continue
+        if lower_artifact(name, art, args.out):
+            n_new += 1
+            print(f"lowered {name}")
+    manifest = {
+        "charset_fingerprint": charset_fingerprint(),
+        "seq_len": SEQ_LEN,
+        "vocab": VOCAB,
+        "batch_buckets": list(BATCH_BUCKETS),
+        "gram_cols": list(GRAM_COLS),
+        "models": {n: c.to_json() for n, c in MODELS.items()},
+        "artifacts": {
+            n: {"file": f"{n}.hlo.txt", "params": a["params"],
+                "outputs": a["outputs"], "meta": a["meta"]}
+            for n, a in arts.items()
+        },
+    }
+    with open(os.path.join(args.out, "manifest.json"), "w") as fp:
+        json.dump(manifest, fp, indent=1)
+    print(f"{n_new} artifacts lowered, manifest: {len(arts)} entries")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,114 @@
+"""Model configurations for the MergeMoE reproduction.
+
+Three MoE models mirror the paper's three evaluation targets (see DESIGN.md §2):
+
+  alpha  ~ Qwen3-30B-A3B      : no shared expert, many experts, top-2
+  beta   ~ Qwen1.5-MoE-A2.7B  : shared expert, top-2
+  gamma  ~ DeepSeekMoE-16B    : shared expert, higher K, odd merge target
+
+Three dense models provide the paper's dense-baseline rows; a dense model is
+simply an MoE model with a single always-selected expert (E=1, K=1), which lets
+every code path (python training, HLO artifacts, rust engines) be shared.
+
+This file is the single source of truth for model shapes; `aot.py` derives the
+artifact manifest from it and the rust side reads the JSON it emits.
+"""
+
+from dataclasses import dataclass, asdict, field
+
+
+# Byte-level alphabet shared with the rust evaluation harness
+# (rust/src/eval/tasks.rs mirrors this string; tests on both sides assert on a
+# SHA-ish fingerprint so the two can never drift silently).
+CHARSET = "abcdefghijklmnopqrstuvwxyz0123456789:|.+=#!>? \n"
+VOCAB = len(CHARSET)  # 47
+
+SEQ_LEN = 64
+BATCH_BUCKETS = (1, 8, 32)  # request-batch buckets served by the rust batcher
+GRAM_COLS = (256, 1024)  # sample-column buckets for the gram artifact
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    d_ff: int  # per-expert hidden width f
+    n_experts: int  # N (routed experts)
+    top_k: int  # K
+    shared_expert: bool  # DeepSeek/Qwen1.5-style shared expert (d_ff width)
+    seed: int
+    train_steps: int
+    batch_size: int  # sequences per training step
+    lr: float = 3e-3
+    # expert counts for which merged-layer HLO artifacts must exist
+    merge_targets: tuple = field(default=())
+
+    @property
+    def head_dim(self) -> int:
+        return self.d_model // self.n_heads
+
+    @property
+    def vocab(self) -> int:
+        return VOCAB
+
+    def n_params(self) -> int:
+        d, f, v = self.d_model, self.d_ff, VOCAB
+        emb = v * d + SEQ_LEN * d
+        attn = 4 * d * d + 2 * d
+        router = self.n_experts * d
+        experts = self.n_experts * 3 * f * d
+        shared = 3 * f * d if self.shared_expert else 0
+        per_layer = attn + router + experts + shared + 2 * d
+        return emb + self.n_layers * per_layer + v * d + 2 * d
+
+    def to_json(self) -> dict:
+        out = asdict(self)
+        out["vocab"] = VOCAB
+        out["seq_len"] = SEQ_LEN
+        out["n_params"] = self.n_params()
+        out["merge_targets"] = list(self.merge_targets)
+        return out
+
+
+MODELS = {
+    # ~Qwen3-30B-A3B analogue: no shared expert; table 1 merges 16 -> 8.
+    "alpha": ModelConfig(
+        name="alpha", n_layers=4, d_model=64, n_heads=4, d_ff=64,
+        n_experts=16, top_k=2, shared_expert=False, seed=101,
+        train_steps=1400, batch_size=16, merge_targets=(8,),
+    ),
+    # ~Qwen1.5-MoE-A2.7B analogue: shared expert; table 2 / figs 2-4 merge
+    # 12 -> 6 and sweep the reduced-expert count (fig 2a) from 2 to 12.
+    "beta": ModelConfig(
+        name="beta", n_layers=4, d_model=64, n_heads=4, d_ff=64,
+        n_experts=12, top_k=2, shared_expert=True, seed=202,
+        train_steps=1400, batch_size=16, merge_targets=(2, 3, 4, 6, 8, 10),
+    ),
+    # ~DeepSeekMoE-16B analogue: shared expert, higher K, odd target (16->7).
+    "gamma": ModelConfig(
+        name="gamma", n_layers=5, d_model=64, n_heads=4, d_ff=64,
+        n_experts=16, top_k=4, shared_expert=True, seed=303,
+        train_steps=1400, batch_size=16, merge_targets=(7,),
+    ),
+    # Dense baselines (single always-on expert). Sizes chosen so that
+    # dense_a / dense_b4 roughly match the *active* parameter count of the
+    # compressed alpha / beta models, and dense_b1 is the clearly-smaller
+    # baseline (paper's Qwen1.5-1.8B row).
+    "dense_a": ModelConfig(
+        name="dense_a", n_layers=4, d_model=64, n_heads=4, d_ff=128,
+        n_experts=1, top_k=1, shared_expert=False, seed=404,
+        train_steps=600, batch_size=16, merge_targets=(),
+    ),
+    "dense_b4": ModelConfig(
+        name="dense_b4", n_layers=4, d_model=64, n_heads=4, d_ff=96,
+        n_experts=1, top_k=1, shared_expert=False, seed=505,
+        train_steps=600, batch_size=16, merge_targets=(),
+    ),
+    "dense_b1": ModelConfig(
+        name="dense_b1", n_layers=2, d_model=64, n_heads=4, d_ff=48,
+        n_experts=1, top_k=1, shared_expert=False, seed=606,
+        train_steps=600, batch_size=16, merge_targets=(),
+    ),
+}

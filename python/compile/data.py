@@ -1,0 +1,128 @@
+"""Synthetic multi-domain corpus + task formats.
+
+The paper evaluates on seven NLP benchmarks; we substitute seven synthetic
+multiple-choice tasks over a byte-level alphabet (DESIGN.md §2). The *formats*
+defined here are mirrored exactly by `rust/src/eval/tasks.rs` — the training
+corpus (python, build time) and the evaluation items (rust, run time) must
+agree on every delimiter. Each task line looks like
+
+  copy      c:WORD|WORD.          copy the word
+  rev       r:WORD|DROW.          reverse the word
+  sort      s:WORD|ADORSTW.       sort the letters
+  arith     a:12+34=46.           2-digit addition (operands 10..49)
+  parity    p:010110#e.           e/o = even/odd number of '1's
+  maj       m:abbab!b.            majority letter of an odd-length a/b string
+  markov    t:qwertyu...          order-1 markov chain text (see chain below)
+
+A corpus document is task lines joined by '\n', tokenized with CHARSET.
+"""
+
+import numpy as np
+
+from .configs import CHARSET, SEQ_LEN
+
+C2I = {c: i for i, c in enumerate(CHARSET)}
+LETTERS = CHARSET[:26]
+TASKS = ("copy", "rev", "sort", "arith", "parity", "maj", "markov")
+
+# --- order-1 markov chain over the 26 letters -------------------------------
+# Successors of letter c are s0=(7c+3)%26, s1=(11c+5)%26, s2=(13c+1)%26 with
+# probabilities 0.6/0.3/0.1. The "correct" continuation of a prompt is the
+# greedy (always-s0) path; rust mirrors these constants.
+MK_COEF = ((7, 3), (11, 5), (13, 1))
+MK_PROB = (0.6, 0.3, 0.1)
+
+
+def mk_succ(c: int, k: int) -> int:
+    a, b = MK_COEF[k]
+    return (a * c + b) % 26
+
+
+def markov_sample(rng: np.random.RandomState, start: int, length: int) -> str:
+    out, c = [], start
+    for _ in range(length):
+        out.append(LETTERS[c])
+        r = rng.random_sample()
+        k = 0 if r < MK_PROB[0] else (1 if r < MK_PROB[0] + MK_PROB[1] else 2)
+        c = mk_succ(c, k)
+    return "".join(out)
+
+
+def markov_greedy(start: int, length: int) -> str:
+    out, c = [], start
+    for _ in range(length):
+        out.append(LETTERS[c])
+        c = mk_succ(c, 0)
+    return "".join(out)
+
+
+# --- task line generators (training corpus uses the *correct* completion) ---
+
+def _word(rng, lo=4, hi=8):
+    n = rng.randint(lo, hi + 1)
+    return "".join(LETTERS[rng.randint(0, 26)] for _ in range(n))
+
+
+def gen_line(task: str, rng: np.random.RandomState) -> str:
+    if task == "copy":
+        w = _word(rng)
+        return f"c:{w}|{w}."
+    if task == "rev":
+        w = _word(rng)
+        return f"r:{w}|{w[::-1]}."
+    if task == "sort":
+        w = _word(rng)
+        return f"s:{w}|{''.join(sorted(w))}."
+    if task == "arith":
+        a, b = rng.randint(10, 50), rng.randint(10, 50)
+        return f"a:{a}+{b}={a + b}."
+    if task == "parity":
+        n = rng.randint(6, 13)
+        bits = "".join("01"[rng.randint(0, 2)] for _ in range(n))
+        return f"p:{bits}#{'e' if bits.count('1') % 2 == 0 else 'o'}."
+    if task == "maj":
+        n = rng.choice([5, 7, 9, 11])
+        s = "".join("ab"[rng.randint(0, 2)] for _ in range(n))
+        return f"m:{s}!{'a' if s.count('a') > n // 2 else 'b'}."
+    if task == "markov":
+        return "t:" + markov_sample(rng, rng.randint(0, 26), rng.randint(18, 30))
+    raise ValueError(task)
+
+
+def encode(s: str) -> np.ndarray:
+    return np.array([C2I[c] for c in s], dtype=np.int32)
+
+
+def corpus_batches(seed: int, batch_size: int, n_steps: int):
+    """Yield (batch, targets) int32 arrays of shape (batch_size, SEQ_LEN).
+
+    Documents are task lines (uniform mixture over the seven domains) joined
+    by newlines and packed into fixed-length windows; the targets are the
+    inputs shifted by one (standard next-token LM objective).
+    """
+    rng = np.random.RandomState(seed)
+    # Hard tasks (parity, arith, copy, rev, sort) get extra corpus weight so
+    # the small models reach clearly-above-chance accuracy within the
+    # build-time training budget; the mixture is a training choice only and
+    # not part of the format contract with the rust side.
+    weighted = ("copy", "copy", "rev", "rev", "sort", "sort",
+                "arith", "arith", "arith", "parity", "parity", "parity",
+                "maj", "markov")
+    buf = []
+    for _ in range(n_steps):
+        batch = np.zeros((batch_size, SEQ_LEN + 1), dtype=np.int32)
+        for i in range(batch_size):
+            while len(buf) < SEQ_LEN + 1:
+                buf.extend(encode(gen_line(weighted[rng.randint(0, len(weighted))], rng)))
+                buf.append(C2I["\n"])
+            batch[i] = buf[: SEQ_LEN + 1]
+            del buf[: SEQ_LEN + 1]
+        yield batch[:, :-1], batch[:, 1:]
+
+
+def charset_fingerprint() -> int:
+    """Order-sensitive checksum mirrored by rust to guarantee identical vocab."""
+    h = 0
+    for i, c in enumerate(CHARSET):
+        h = (h * 131 + ord(c) * (i + 7)) % 1_000_000_007
+    return h

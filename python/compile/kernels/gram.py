@@ -1,0 +1,56 @@
+"""Pallas kernel for the MergeMoE least-squares Gram accumulation.
+
+The merge-time hot-spot of the paper's algorithm is building the normal
+equations for `T1 = Q P^+` over calibration samples: `PP^T` (f×f) and
+`YP^T` (d×f), streamed over sample columns. On GPU this is a split-K GEMM;
+on TPU we express it as a Pallas grid over sample chunks with the two Gram
+blocks accumulated in the (revisited) output tiles — both stay resident in
+VMEM for the whole sweep, which is the optimal schedule whenever
+f·f + d·f floats fit (always true here: f=d=64 .. 256).
+
+interpret=True (see swiglu.py).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(p_ref, y_ref, pp_ref, yp_ref):
+    s = pl.program_id(0)
+
+    @pl.when(s == 0)
+    def _init():
+        pp_ref[...] = jnp.zeros_like(pp_ref)
+        yp_ref[...] = jnp.zeros_like(yp_ref)
+
+    p = p_ref[...]
+    pp_ref[...] += jnp.dot(p, p.T, preferred_element_type=jnp.float32)
+    yp_ref[...] += jnp.dot(y_ref[...], p.T, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def gram(p, y, *, chunk: int = 256):
+    """P (f,s), Y (d,s) -> (PP^T (f,f), YP^T (d,f)). s % chunk == 0."""
+    f, s = p.shape
+    d, _ = y.shape
+    assert s % chunk == 0, (s, chunk)
+    return pl.pallas_call(
+        _kernel,
+        grid=(s // chunk,),
+        in_specs=[
+            pl.BlockSpec((f, chunk), lambda si: (0, si)),
+            pl.BlockSpec((d, chunk), lambda si: (0, si)),
+        ],
+        out_specs=[
+            pl.BlockSpec((f, f), lambda si: (0, 0)),
+            pl.BlockSpec((d, f), lambda si: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((f, f), jnp.float32),
+            jax.ShapeDtypeStruct((d, f), jnp.float32),
+        ],
+        interpret=True,
+    )(p, y)

@@ -1,0 +1,44 @@
+"""Pure-jnp oracles for the Pallas kernels (the CORE correctness signal).
+
+Everything here is straight-line jnp with no pallas, no custom control flow:
+slow but obviously right. `test_kernels.py` sweeps the pallas implementations
+against these with hypothesis; the rust native engine is in turn validated
+against HLO artifacts built from the pallas path, closing the loop
+pallas == ref == rust.
+"""
+
+import jax.numpy as jnp
+import jax.nn
+
+
+def swiglu(x, wg, wu, wd):
+    """Single SwiGLU expert: x (t,d), wg/wu (f,d), wd (d,f) -> (t,d)."""
+    g = x @ wg.T
+    u = x @ wu.T
+    return (jax.nn.silu(g) * u) @ wd.T
+
+
+def routed_swiglu(x, wg, wu, wd, r):
+    """Routed mixture of SwiGLU experts.
+
+    x  (t, d)      tokens
+    wg (e, f, d)   gate projections
+    wu (e, f, d)   up projections
+    wd (e, d, f)   down projections
+    r  (t, e)      dense routing weights (0 for unrouted token/expert pairs)
+    -> (t, d)      sum_e r[:, e] * swiglu_e(x)
+    """
+    g = jnp.einsum("td,efd->tef", x, wg)
+    u = jnp.einsum("td,efd->tef", x, wu)
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("tef,edf->ted", h, wd)
+    return jnp.einsum("ted,te->td", y, r)
+
+
+def gram(p, y):
+    """Streaming least-squares accumulators: P (f,s), Y (d,s).
+
+    Returns (P P^T, Y P^T) — the two Gram blocks consumed by the ridge solve
+    W_D' = (Y P^T)(P P^T + λI)^{-1} that is the heart of MergeMoE.
+    """
+    return p @ p.T, y @ p.T

@@ -1,0 +1,71 @@
+"""Pallas kernel for the routed-SwiGLU expert mixture — the model's hot-spot.
+
+GPU -> TPU adaptation (DESIGN.md §3): the CUDA implementation the paper's
+models run on launches one threadblock per (expert, token-tile) and stages
+expert weights through shared memory. Here the same schedule is expressed as a
+Pallas grid over (expert, token-tile) with BlockSpecs staging the expert's
+three projection matrices and one token tile through VMEM; the MXU consumes
+(tile_t × d)·(d × f) blocks and the output tile is accumulated across the
+expert grid dimension in place (the revisiting-output accumulation pattern,
+the TPU analogue of a split-K atomic add).
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls, so the kernel is lowered to plain HLO. Real-TPU VMEM/MXU
+estimates for this BlockSpec live in EXPERIMENTS.md §Perf.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, wg_ref, wu_ref, wd_ref, r_ref, o_ref):
+    """One (expert e, token-tile t) grid step.
+
+    x_ref (tile_t, d)    token tile                      (VMEM)
+    wg_ref/wu_ref (1, f, d), wd_ref (1, d, f)            expert e's weights
+    r_ref (tile_t, 1)    routing weights of the tile for expert e
+    o_ref (tile_t, d)    output tile, accumulated over the e grid dim
+    """
+    e = pl.program_id(0)
+
+    @pl.when(e == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    x = x_ref[...]
+    g = jnp.dot(x, wg_ref[0].T, preferred_element_type=jnp.float32)
+    u = jnp.dot(x, wu_ref[0].T, preferred_element_type=jnp.float32)
+    h = jax.nn.silu(g) * u
+    y = jnp.dot(h, wd_ref[0].T, preferred_element_type=jnp.float32)
+    o_ref[...] += y * r_ref[...]
+
+
+@functools.partial(jax.jit, static_argnames=("tile_t",))
+def routed_swiglu(x, wg, wu, wd, r, *, tile_t: int = 64):
+    """Mixture of SwiGLU experts: see kernels.ref.routed_swiglu for semantics.
+
+    x (t,d), wg/wu (e,f,d), wd (e,d,f), r (t,e) -> (t,d).
+    `t` must be a multiple of tile_t (callers pad; the batcher's shape buckets
+    guarantee it on the request path).
+    """
+    t, d = x.shape
+    e, f, _ = wg.shape
+    assert t % tile_t == 0, (t, tile_t)
+    grid = (e, t // tile_t)
+    return pl.pallas_call(
+        _kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_t, d), lambda ei, ti: (ti, 0)),
+            pl.BlockSpec((1, f, d), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, f, d), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((1, d, f), lambda ei, ti: (ei, 0, 0)),
+            pl.BlockSpec((tile_t, 1), lambda ei, ti: (ti, ei)),
+        ],
+        out_specs=pl.BlockSpec((tile_t, d), lambda ei, ti: (ti, 0)),
+        out_shape=jax.ShapeDtypeStruct((t, d), jnp.float32),
+        interpret=True,
+    )(x, wg, wu, wd, r)

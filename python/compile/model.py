@@ -1,0 +1,213 @@
+"""L2: the MoE transformer in JAX.
+
+One model definition serves three consumers:
+
+* `train.py` differentiates `loss_fn` (uses the jnp reference expert mixture,
+  which is autodiff-friendly);
+* `aot.py` lowers the *pallas* path (`use_pallas=True`) per layer type to the
+  HLO artifacts the rust runtime executes — every weight is a runtime
+  parameter so one executable serves both original and merged weights;
+* `tests/` cross-checks the two paths against each other.
+
+Weight naming convention (flat npz keys consumed by rust/src/model/):
+  tok_emb (V,d)  pos_emb (S,d)
+  L{i}.ln1_g/ln1_b (d,)  L{i}.wq/wk/wv/wo (d,d)
+  L{i}.ln2_g/ln2_b (d,)  L{i}.router (E,d)
+  L{i}.wg/wu (E,f,d)  L{i}.wd (E,d,f)
+  L{i}.swg/swu (f,d)  L{i}.swd (d,f)        [only if shared_expert]
+  lnf_g/lnf_b (d,)  head (V,d)
+All linear layers use the y = x @ W^T convention.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import ModelConfig, SEQ_LEN
+from .kernels import ref
+from .kernels.swiglu import routed_swiglu as pallas_routed_swiglu
+
+LN_EPS = 1e-5
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(cfg: ModelConfig) -> dict:
+    rng = np.random.RandomState(cfg.seed)
+    d, f, v, e = cfg.d_model, cfg.d_ff, cfg.vocab, cfg.n_experts
+
+    def w(*shape, scale=None):
+        s = scale if scale is not None else 1.0 / np.sqrt(shape[-1])
+        return (rng.randn(*shape) * s).astype(np.float32)
+
+    p = {
+        "tok_emb": w(v, d, scale=0.02),
+        "pos_emb": w(SEQ_LEN, d, scale=0.02),
+        "lnf_g": np.ones(d, np.float32),
+        "lnf_b": np.zeros(d, np.float32),
+        "head": w(v, d),
+    }
+    for i in range(cfg.n_layers):
+        p[f"L{i}.ln1_g"] = np.ones(d, np.float32)
+        p[f"L{i}.ln1_b"] = np.zeros(d, np.float32)
+        p[f"L{i}.ln2_g"] = np.ones(d, np.float32)
+        p[f"L{i}.ln2_b"] = np.zeros(d, np.float32)
+        for nm in ("wq", "wk", "wv", "wo"):
+            p[f"L{i}.{nm}"] = w(d, d)
+        p[f"L{i}.router"] = w(e, d)
+        p[f"L{i}.wg"] = w(e, f, d)
+        p[f"L{i}.wu"] = w(e, f, d)
+        p[f"L{i}.wd"] = w(e, d, f)
+        if cfg.shared_expert:
+            p[f"L{i}.swg"] = w(f, d)
+            p[f"L{i}.swu"] = w(f, d)
+            p[f"L{i}.swd"] = w(d, f)
+    return p
+
+
+# --------------------------------------------------------------------------
+# blocks (batch-of-sequences shapes: h is (B, S, d))
+# --------------------------------------------------------------------------
+
+def layernorm(x, g, b):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + LN_EPS) * g + b
+
+
+def embed(p, tokens):
+    """tokens (B,S) int32 -> h (B,S,d)."""
+    return p["tok_emb"][tokens] + p["pos_emb"][None, : tokens.shape[1]]
+
+
+def attn_block(h, ln_g, ln_b, wq, wk, wv, wo, n_heads: int):
+    """Pre-LN causal multi-head attention with residual."""
+    b, s, d = h.shape
+    hd = d // n_heads
+    x = layernorm(h, ln_g, ln_b)
+    q = (x @ wq.T).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    k = (x @ wk.T).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    v = (x @ wv.T).reshape(b, s, n_heads, hd).transpose(0, 2, 1, 3)
+    att = jnp.einsum("bhqe,bhke->bhqk", q, k) / np.sqrt(hd)
+    mask = jnp.tril(jnp.ones((s, s), bool))
+    att = jnp.where(mask[None, None], att, -1e30)
+    att = jax.nn.softmax(att, axis=-1)
+    o = jnp.einsum("bhqk,bhke->bhqe", att, v)
+    o = o.transpose(0, 2, 1, 3).reshape(b, s, d)
+    return h + o @ wo.T
+
+
+def route(x2d, router, top_k: int, via_sort: bool = False):
+    """Paper §3.1 routing: probs = softmax(W_r X); keep top-K entries.
+
+    Returns (dense routing matrix r (t,e), probs (t,e), idx (t,K), w (t,K)).
+    The top-K softmax entries are used as-is (no renormalization), exactly as
+    in Eq. 1's mask_top_K formulation.
+
+    `via_sort` selects an argsort-based top-k for the AOT path: lax.top_k
+    lowers to the `topk` HLO instruction, which xla_extension 0.5.1's text
+    parser cannot read; stable argsort of -probs reproduces lax.top_k's
+    tie-break (lower index first) and lowers to the classic `sort` op.
+    The training path keeps lax.top_k (this image's jax/jaxlib pairing
+    mis-handles the batched gather that argsort+take_along_axis emits under
+    autodiff).
+    """
+    logits = x2d @ router.T
+    probs = jax.nn.softmax(logits, axis=-1)
+    if via_sort:
+        idx = jnp.argsort(-probs, axis=-1)[:, :top_k]
+        w = jnp.take_along_axis(probs, idx, axis=-1)
+    else:
+        w, idx = jax.lax.top_k(probs, top_k)
+    r = jnp.zeros_like(probs).at[jnp.arange(x2d.shape[0])[:, None], idx].set(w)
+    return r, probs, idx, w
+
+
+def moe_block(h, ln_g, ln_b, router, wg, wu, wd, shared, top_k: int,
+              use_pallas: bool):
+    """Pre-LN MoE MLP with residual.
+
+    Returns (h', counts (E,), idx (B,S,K), w (B,S,K)); counts feed the
+    usage-frequency statistics that Theorem 1's weights are built from.
+    """
+    b, s, d = h.shape
+    x = layernorm(h, ln_g, ln_b).reshape(b * s, d)
+    r, probs, idx, w = route(x, router, top_k, via_sort=use_pallas)
+    fn = pallas_routed_swiglu if use_pallas else ref.routed_swiglu
+    y = fn(x, wg, wu, wd, r)
+    if shared is not None:
+        swg, swu, swd = shared
+        y = y + ref.swiglu(x, swg, swu, swd)
+    counts = (r > 0).astype(jnp.float32).sum(0)
+    return (h + y.reshape(b, s, d), counts,
+            idx.reshape(b, s, top_k), w.reshape(b, s, top_k))
+
+
+def moe_block_mapped(h, ln_g, ln_b, router, amap, wg, wu, wd, shared, top_k,
+                     use_pallas: bool):
+    """MoE block with an explicit routing map (the paper's Appendix-B layout).
+
+    The router stays N-way (N = original expert count, rows of `router`);
+    after top-K masking, the routing vector r (N,) is transformed by
+    `amap` (M, N) and dispatched to the M *real* experts:
+
+      amap = I    : uncompressed layer (M = N)
+      amap = A    : merged layer (summation matrix of Eq. 2; the N->M
+                    "expert references" of Appendix B)
+      amap = B·A  : Table-5 oracle — original experts kept, outputs merged
+                    exactly ("w/o merging errors")
+
+    Returns (h', counts over the M real experts, N-way top-K idx/weights).
+    """
+    b, s, d = h.shape
+    x = layernorm(h, ln_g, ln_b).reshape(b * s, d)
+    r, _, idx, w = route(x, router, top_k, via_sort=True)
+    r = r @ amap.T
+    fn = pallas_routed_swiglu if use_pallas else ref.routed_swiglu
+    y = fn(x, wg, wu, wd, r)
+    if shared is not None:
+        y = y + ref.swiglu(x, *shared)
+    counts = (r > 0).astype(jnp.float32).sum(0)
+    return (h + y.reshape(b, s, d), counts,
+            idx.reshape(b, s, top_k), w.reshape(b, s, top_k))
+
+
+def lm_head(p, h):
+    x = layernorm(h, p["lnf_g"], p["lnf_b"])
+    return x @ p["head"].T
+
+
+def forward(p, tokens, cfg: ModelConfig, use_pallas: bool = False):
+    """Full LM forward: tokens (B,S) -> logits (B,S,V). Also returns the
+    per-layer (counts, mean router prob) stats for the load-balance loss."""
+    h = embed(p, tokens)
+    aux = []
+    for i in range(cfg.n_layers):
+        h = attn_block(h, p[f"L{i}.ln1_g"], p[f"L{i}.ln1_b"], p[f"L{i}.wq"],
+                       p[f"L{i}.wk"], p[f"L{i}.wv"], p[f"L{i}.wo"], cfg.n_heads)
+        shared = ((p[f"L{i}.swg"], p[f"L{i}.swu"], p[f"L{i}.swd"])
+                  if cfg.shared_expert else None)
+        x_ln = layernorm(h, p[f"L{i}.ln2_g"], p[f"L{i}.ln2_b"])
+        probs = jax.nn.softmax(
+            x_ln.reshape(-1, cfg.d_model) @ p[f"L{i}.router"].T, -1)
+        h, counts, _, _ = moe_block(
+            h, p[f"L{i}.ln2_g"], p[f"L{i}.ln2_b"], p[f"L{i}.router"],
+            p[f"L{i}.wg"], p[f"L{i}.wu"], p[f"L{i}.wd"], shared,
+            cfg.top_k, use_pallas)
+        aux.append((counts, probs.mean(0)))
+    return lm_head(p, h), aux
+
+
+def loss_fn(p, tokens, targets, cfg: ModelConfig, aux_weight: float = 1e-2):
+    """Next-token cross entropy + Switch-style load-balance auxiliary loss."""
+    logits, aux = forward(p, tokens, cfg, use_pallas=False)
+    logp = jax.nn.log_softmax(logits, -1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], -1).mean()
+    bal = 0.0
+    n_tok = tokens.shape[0] * tokens.shape[1]
+    for counts, mean_prob in aux:
+        frac = counts / (n_tok * cfg.top_k)
+        bal = bal + cfg.n_experts * jnp.sum(frac * mean_prob)
+    return nll + aux_weight * bal / cfg.n_layers, nll

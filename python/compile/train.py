@@ -1,0 +1,96 @@
+"""Build-time trainer for the six models (3 MoE targets + 3 dense baselines).
+
+Runs ONCE (cached by weight-file existence; `make artifacts` skips it when
+`artifacts/weights_<name>.npz` already exists). Never on the request path.
+
+Outputs per model:
+  artifacts/weights_<name>.npz    flat weight dict (model.py naming)
+  artifacts/train_log_<name>.json loss curve (recorded in EXPERIMENTS.md)
+
+Usage: python -m compile.train [--models alpha,beta,...] [--out DIR]
+"""
+
+import argparse
+import functools
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .configs import MODELS, ModelConfig
+from .data import corpus_batches
+from .model import init_params, loss_fn
+
+
+def adam_init(p):
+    z = {k: np.zeros_like(v) for k, v in p.items()}
+    return z, {k: np.zeros_like(v) for k, v in p.items()}
+
+
+@functools.partial(jax.jit, static_argnames=("cfg",))
+def train_step(p, m, v, step, tokens, targets, cfg: ModelConfig):
+    """One Adam step (b1=.9, b2=.98, eps=1e-9) with cosine LR decay."""
+    (loss, nll), grads = jax.value_and_grad(loss_fn, has_aux=True)(
+        p, tokens, targets, cfg)
+    warm, total = 40.0, float(cfg.train_steps)
+    lr = cfg.lr * jnp.minimum(step / warm, 1.0) * (
+        0.5 * (1 + jnp.cos(jnp.pi * jnp.minimum(step / total, 1.0))) * 0.9 + 0.1)
+    b1, b2, eps = 0.9, 0.98, 1e-9
+    new_p, new_m, new_v = {}, {}, {}
+    for k in p:
+        g = grads[k]
+        new_m[k] = b1 * m[k] + (1 - b1) * g
+        new_v[k] = b2 * v[k] + (1 - b2) * g * g
+        mhat = new_m[k] / (1 - b1 ** step)
+        vhat = new_v[k] / (1 - b2 ** step)
+        new_p[k] = p[k] - lr * mhat / (jnp.sqrt(vhat) + eps)
+    return new_p, new_m, new_v, loss, nll
+
+
+def train_model(cfg: ModelConfig, out_dir: str) -> dict:
+    t0 = time.time()
+    p = {k: jnp.asarray(v) for k, v in init_params(cfg).items()}
+    m, v = adam_init(p)
+    m = {k: jnp.asarray(x) for k, x in m.items()}
+    v = {k: jnp.asarray(x) for k, x in v.items()}
+    log = {"model": cfg.name, "steps": [], "loss": [], "nll": []}
+    batches = corpus_batches(cfg.seed + 7, cfg.batch_size, cfg.train_steps)
+    for step, (tok, tgt) in enumerate(batches, start=1):
+        p, m, v, loss, nll = train_step(
+            p, m, v, jnp.float32(step), jnp.asarray(tok), jnp.asarray(tgt), cfg)
+        if step % 20 == 0 or step == 1:
+            log["steps"].append(step)
+            log["loss"].append(float(loss))
+            log["nll"].append(float(nll))
+            print(f"[{cfg.name}] step {step:4d}  loss {float(loss):.4f}  "
+                  f"nll {float(nll):.4f}  ({time.time()-t0:.0f}s)", flush=True)
+    log["wall_seconds"] = time.time() - t0
+    np.savez(os.path.join(out_dir, f"weights_{cfg.name}.npz"),
+             **{k: np.asarray(x) for k, x in p.items()})
+    with open(os.path.join(out_dir, f"train_log_{cfg.name}.json"), "w") as f:
+        json.dump(log, f)
+    print(f"[{cfg.name}] done in {log['wall_seconds']:.0f}s", flush=True)
+    return log
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--models", default=",".join(MODELS))
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    for name in args.models.split(","):
+        cfg = MODELS[name]
+        path = os.path.join(args.out, f"weights_{name}.npz")
+        if os.path.exists(path) and not args.force:
+            print(f"[{name}] cached at {path}, skipping")
+            continue
+        train_model(cfg, args.out)
+
+
+if __name__ == "__main__":
+    main()

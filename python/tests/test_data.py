@@ -1,0 +1,81 @@
+"""Corpus/task format contract tests — the python half of the cross-language
+format lock (rust mirrors these in rust/src/eval/tasks.rs)."""
+
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import data
+from compile.configs import CHARSET, SEQ_LEN
+
+
+def test_charset_has_no_duplicates():
+    assert len(set(CHARSET)) == len(CHARSET) == 47
+
+
+def test_fingerprint_value_is_stable():
+    # Pin the value: rust/src/eval/tasks.rs computes the same number with the
+    # same formula; a change on either side must update both.
+    fp = data.charset_fingerprint()
+    assert fp == data.charset_fingerprint()
+    h = 0
+    for i, c in enumerate(CHARSET):
+        h = (h * 131 + ord(c) * (i + 7)) % 1_000_000_007
+    assert fp == h
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       task=st.sampled_from(data.TASKS))
+def test_lines_stay_inside_alphabet_and_format(seed, task):
+    rng = np.random.RandomState(seed)
+    line = data.gen_line(task, rng)
+    assert all(c in data.C2I for c in line)
+    tag = {"copy": "c:", "rev": "r:", "sort": "s:", "arith": "a:",
+           "parity": "p:", "maj": "m:", "markov": "t:"}[task]
+    assert line.startswith(tag)
+    if task != "markov":
+        assert line.endswith(".")
+    assert len(line) < SEQ_LEN
+
+
+def test_task_correctness_of_generated_lines():
+    rng = np.random.RandomState(7)
+    for _ in range(50):
+        c = data.gen_line("copy", rng)
+        a, b = c[2:-1].split("|")
+        assert a == b
+        r = data.gen_line("rev", rng)
+        a, b = r[2:-1].split("|")
+        assert a[::-1] == b
+        s = data.gen_line("sort", rng)
+        a, b = s[2:-1].split("|")
+        assert "".join(sorted(a)) == b
+        ar = data.gen_line("arith", rng)
+        lhs, rhs = ar[2:-1].split("=")
+        x, y = lhs.split("+")
+        assert int(x) + int(y) == int(rhs)
+        p = data.gen_line("parity", rng)
+        bits, ans = p[2:-1].split("#")
+        assert ans == ("e" if bits.count("1") % 2 == 0 else "o")
+        m = data.gen_line("maj", rng)
+        s2, ans = m[2:-1].split("!")
+        assert ans == ("a" if s2.count("a") > len(s2) // 2 else "b")
+
+
+def test_markov_greedy_follows_chain():
+    text = data.markov_greedy(5, 10)
+    for a, b in zip(text, text[1:]):
+        ca, cb = ord(a) - 97, ord(b) - 97
+        assert cb == data.mk_succ(ca, 0)
+
+
+def test_corpus_batches_shapes_and_determinism():
+    a = list(data.corpus_batches(3, 4, 2))
+    b = list(data.corpus_batches(3, 4, 2))
+    assert len(a) == 2
+    for (x1, y1), (x2, y2) in zip(a, b):
+        assert x1.shape == (4, SEQ_LEN)
+        np.testing.assert_array_equal(x1, x2)
+        np.testing.assert_array_equal(y1, y2)
+        # targets are inputs shifted by one
+        np.testing.assert_array_equal(x1[:, 1:], y1[:, :-1])

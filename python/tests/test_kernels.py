@@ -1,0 +1,119 @@
+"""L1 correctness: pallas kernels vs the pure-jnp oracle, swept with
+hypothesis over shapes, seeds and value scales. This is the CORE correctness
+signal of the kernel layer (DESIGN.md §7)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import gram as gram_k
+from compile.kernels import ref
+from compile.kernels import swiglu as swiglu_k
+
+
+def rand(rng, *shape, scale=1.0):
+    return (rng.standard_normal(shape) * scale).astype(np.float32)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    e=st.integers(1, 6),
+    tiles=st.integers(1, 4),
+    f=st.sampled_from([8, 16, 64]),
+    d=st.sampled_from([8, 16, 64]),
+    # weight scales up to ~1.0 (trained weights sit near 0.1; beyond ~1 the
+    # SwiGLU products reach 1e4 and f32 accumulation-order differences
+    # between einsum and the blocked kernel dominate any fixed tolerance)
+    scale=st.sampled_from([0.1, 0.5, 1.0]),
+)
+def test_routed_swiglu_matches_ref(seed, e, tiles, f, d, scale):
+    tile_t = 16
+    t = tiles * tile_t
+    rng = np.random.default_rng(seed)
+    x = rand(rng, t, d)
+    wg = rand(rng, e, f, d, scale=scale)
+    wu = rand(rng, e, f, d, scale=scale)
+    wd = rand(rng, e, d, f, scale=scale)
+    # sparse-ish routing matrix with some exact zeros
+    r = rand(rng, t, e)
+    r[np.abs(r) < 0.7] = 0.0
+    got = swiglu_k.routed_swiglu(
+        jnp.array(x), jnp.array(wg), jnp.array(wu), jnp.array(wd), jnp.array(r),
+        tile_t=tile_t,
+    )
+    want = ref.routed_swiglu(x, wg, wu, wd, r)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-3, atol=1e-3)
+
+
+@settings(max_examples=12, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    f=st.sampled_from([8, 32, 64]),
+    d=st.sampled_from([8, 32, 64]),
+    chunks=st.integers(1, 4),
+)
+def test_gram_matches_ref(seed, f, d, chunks):
+    chunk = 64
+    s = chunks * chunk
+    rng = np.random.default_rng(seed)
+    p = rand(rng, f, s)
+    y = rand(rng, d, s)
+    pp, yp = gram_k.gram(jnp.array(p), jnp.array(y), chunk=chunk)
+    pp_ref, yp_ref = ref.gram(p, y)
+    np.testing.assert_allclose(np.asarray(pp), np.asarray(pp_ref), rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yp), np.asarray(yp_ref), rtol=1e-4, atol=1e-4)
+
+
+def test_routed_swiglu_zero_routing_is_zero():
+    rng = np.random.default_rng(0)
+    x = rand(rng, 32, 8)
+    wg = rand(rng, 2, 8, 8)
+    wu = rand(rng, 2, 8, 8)
+    wd = rand(rng, 2, 8, 8)
+    r = np.zeros((32, 2), np.float32)
+    out = swiglu_k.routed_swiglu(
+        jnp.array(x), jnp.array(wg), jnp.array(wu), jnp.array(wd), jnp.array(r),
+        tile_t=16)
+    assert float(jnp.abs(out).max()) == 0.0
+
+
+def test_routed_swiglu_rejects_unaligned_tokens():
+    rng = np.random.default_rng(1)
+    x = rand(rng, 30, 8)  # not a multiple of tile_t
+    w = rand(rng, 1, 8, 8)
+    with pytest.raises(AssertionError):
+        swiglu_k.routed_swiglu(jnp.array(x), jnp.array(w), jnp.array(w),
+                               jnp.array(w), jnp.array(rand(rng, 30, 1)),
+                               tile_t=16)
+
+
+def test_gram_additivity_over_chunks():
+    # PP^T and YP^T must be additive across column chunks — the invariant the
+    # streaming merge path relies on.
+    rng = np.random.default_rng(2)
+    p = rand(rng, 16, 128)
+    y = rand(rng, 8, 128)
+    pp, yp = gram_k.gram(jnp.array(p), jnp.array(y), chunk=64)
+    pp1, yp1 = ref.gram(p[:, :64], y[:, :64])
+    pp2, yp2 = ref.gram(p[:, 64:], y[:, 64:])
+    np.testing.assert_allclose(np.asarray(pp), pp1 + pp2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(yp), yp1 + yp2, rtol=1e-4, atol=1e-4)
+
+
+def test_swiglu_expert_formula():
+    # single expert through the kernel == W_D (silu(W_G x) * (W_U x))
+    rng = np.random.default_rng(3)
+    x = rand(rng, 16, 8)
+    wg = rand(rng, 1, 4, 8)
+    wu = rand(rng, 1, 4, 8)
+    wd = rand(rng, 1, 8, 4)
+    r = np.ones((16, 1), np.float32)
+    got = swiglu_k.routed_swiglu(
+        jnp.array(x), jnp.array(wg), jnp.array(wu), jnp.array(wd), jnp.array(r),
+        tile_t=16)
+    manual = (jax.nn.silu(x @ wg[0].T) * (x @ wu[0].T)) @ wd[0].T
+    np.testing.assert_allclose(np.asarray(got), np.asarray(manual), rtol=1e-5, atol=1e-5)

@@ -1,0 +1,136 @@
+//! Criterion-style benchmark harness (criterion itself is unavailable in the
+//! offline build). Provides warm-up, timed iterations, and robust summary
+//! statistics; the `benches/` targets (built with `harness = false`) and the
+//! §Perf pass are built on this.
+
+use std::time::{Duration, Instant};
+
+/// Summary statistics of one benchmark.
+#[derive(Debug, Clone)]
+pub struct Summary {
+    pub name: String,
+    pub iters: usize,
+    pub mean: Duration,
+    pub p50: Duration,
+    pub p90: Duration,
+    pub p99: Duration,
+    pub min: Duration,
+    pub max: Duration,
+    /// Optional throughput denominator (items per iteration).
+    pub items_per_iter: Option<f64>,
+}
+
+impl Summary {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items_per_iter
+            .map(|n| n / self.mean.as_secs_f64())
+    }
+
+    /// One human-readable report line (also the `cargo bench` output format).
+    pub fn report(&self) -> String {
+        let tp = match self.throughput() {
+            Some(t) if t >= 1000.0 => format!("  [{:.1}k items/s]", t / 1000.0),
+            Some(t) => format!("  [{t:.1} items/s]"),
+            None => String::new(),
+        };
+        format!(
+            "{:<44} mean {:>10.3?}  p50 {:>10.3?}  p99 {:>10.3?}  ({} iters){}",
+            self.name, self.mean, self.p50, self.p99, self.iters, tp
+        )
+    }
+}
+
+/// Benchmark runner with a wall-clock budget per benchmark.
+pub struct Bencher {
+    pub warmup_iters: usize,
+    pub min_iters: usize,
+    pub max_iters: usize,
+    pub budget: Duration,
+}
+
+impl Default for Bencher {
+    fn default() -> Self {
+        Bencher {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            budget: Duration::from_secs(5),
+        }
+    }
+}
+
+impl Bencher {
+    pub fn quick() -> Bencher {
+        Bencher { warmup_iters: 1, min_iters: 3, max_iters: 50,
+                  budget: Duration::from_secs(2) }
+    }
+
+    /// Run `f` repeatedly; the closure's return value is black-boxed so LLVM
+    /// cannot elide the work.
+    pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {
+        self.run_with_items(name, None, &mut f)
+    }
+
+    /// Like [`Bencher::run`], with a throughput denominator.
+    pub fn run_items<T>(&self, name: &str, items: f64, mut f: impl FnMut() -> T) -> Summary {
+        self.run_with_items(name, Some(items), &mut f)
+    }
+
+    fn run_with_items<T>(
+        &self,
+        name: &str,
+        items: Option<f64>,
+        f: &mut dyn FnMut() -> T,
+    ) -> Summary {
+        for _ in 0..self.warmup_iters {
+            std::hint::black_box(f());
+        }
+        let start = Instant::now();
+        let mut samples: Vec<Duration> = Vec::new();
+        while samples.len() < self.min_iters
+            || (samples.len() < self.max_iters && start.elapsed() < self.budget)
+        {
+            let t0 = Instant::now();
+            std::hint::black_box(f());
+            samples.push(t0.elapsed());
+        }
+        samples.sort();
+        let n = samples.len();
+        let total: Duration = samples.iter().sum();
+        let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+        Summary {
+            name: name.to_string(),
+            iters: n,
+            mean: total / n as u32,
+            p50: pct(0.50),
+            p90: pct(0.90),
+            p99: pct(0.99),
+            min: samples[0],
+            max: samples[n - 1],
+            items_per_iter: items,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_sleeps_roughly() {
+        let b = Bencher { warmup_iters: 0, min_iters: 3, max_iters: 5,
+                          budget: Duration::from_millis(100) };
+        let s = b.run("sleep", || std::thread::sleep(Duration::from_millis(5)));
+        assert!(s.mean >= Duration::from_millis(4), "{:?}", s.mean);
+        assert!(s.iters >= 3);
+        assert!(s.min <= s.p50 && s.p50 <= s.max);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let b = Bencher::quick();
+        let s = b.run_items("noop", 100.0, || 1 + 1);
+        assert!(s.throughput().unwrap() > 0.0);
+        assert!(s.report().contains("items/s"));
+    }
+}

@@ -1,0 +1,150 @@
+//! Calibration: sampling input batches and capturing per-layer activations
+//! plus routing statistics from the uncompressed model.
+//!
+//! The paper (Appendix B) merges layers back to front precisely so that one
+//! activation capture of the *original* model serves every layer: merging
+//! layer ℓ only changes activations downstream of ℓ, and layers are merged
+//! in decreasing ℓ. [`capture`] therefore runs the uncompressed model once
+//! over the calibration batch and records, per MoE layer, the post-LN inputs
+//! X̂ and the usage statistics that Theorem 1's weights need.
+
+use anyhow::Result;
+
+use crate::eval::tasks::{self, Task};
+use crate::model::native;
+use crate::model::ModelWeights;
+use crate::moe::UsageStats;
+use crate::tensor::Tensor;
+use crate::util::rng::Rng;
+
+/// Per-layer calibration data.
+#[derive(Debug, Clone)]
+pub struct LayerCalib {
+    /// Post-LN MoE inputs, one row per calibration token: (T, d).
+    pub x: Tensor,
+    pub stats: UsageStats,
+}
+
+/// Calibration data for a whole model (index = layer).
+#[derive(Debug, Clone)]
+pub struct CalibData {
+    pub layers: Vec<LayerCalib>,
+    pub n_sequences: usize,
+    pub seq_len: usize,
+}
+
+impl CalibData {
+    pub fn n_tokens(&self) -> usize {
+        self.n_sequences * self.seq_len
+    }
+}
+
+/// Pack task-corpus lines into `n_seqs` sequences of `seq_len` tokens —
+/// the same packing the trainer uses, so calibration inputs are
+/// in-distribution. `tasks` selects the source datasets (Table 4 varies
+/// this; `None` ⇒ uniform mixture over all seven).
+pub fn sample_sequences(
+    task_filter: Option<&[Task]>,
+    n_seqs: usize,
+    seq_len: usize,
+    seed: u64,
+) -> Vec<i32> {
+    let all: Vec<Task> = match task_filter {
+        Some(ts) => ts.to_vec(),
+        None => tasks::ALL_TASKS.to_vec(),
+    };
+    let mut rng = Rng::new(seed);
+    let newline = tasks::encode("\n")[0];
+    let mut buf: Vec<i32> = Vec::new();
+    let mut out = Vec::with_capacity(n_seqs * seq_len);
+    for _ in 0..n_seqs {
+        while buf.len() < seq_len {
+            let t = *rng.pick(&all);
+            let line = tasks::gen_corpus_line(t, &mut rng);
+            buf.extend(tasks::encode(&line));
+            buf.push(newline);
+        }
+        out.extend(buf.drain(..seq_len));
+    }
+    out
+}
+
+/// Run the uncompressed model over calibration sequences and capture all
+/// per-layer data in one pass (native engine — the capture path needs
+/// activations *between* layers, which the rust coordinator owns anyway).
+pub fn capture(
+    model: &ModelWeights,
+    tokens: &[i32],
+    n_seqs: usize,
+    seq_len: usize,
+) -> Result<CalibData> {
+    let mut caps = Vec::new();
+    // chunk to bound peak memory on large calibration sets
+    let chunk = 32usize.min(n_seqs.max(1));
+    let mut merged: Vec<LayerCalib> = Vec::new();
+    let mut done = 0;
+    while done < n_seqs {
+        let take = chunk.min(n_seqs - done);
+        let slice = &tokens[done * seq_len..(done + take) * seq_len];
+        caps.clear();
+        native::forward(model, slice, take, seq_len, Some(&mut caps))?;
+        if merged.is_empty() {
+            for c in &caps {
+                let mut stats = UsageStats::new(c.counts.len());
+                stats.add(&c.counts, &c.weight_mass, (take * seq_len) as u64);
+                merged.push(LayerCalib { x: c.x.clone(), stats });
+            }
+        } else {
+            for (dst, c) in merged.iter_mut().zip(&caps) {
+                let mut x = Tensor::zeros(&[dst.x.shape()[0] + c.x.shape()[0], c.x.shape()[1]]);
+                x.data_mut()[..dst.x.len()].copy_from_slice(dst.x.data());
+                x.data_mut()[dst.x.len()..].copy_from_slice(c.x.data());
+                dst.x = x;
+                dst.stats.add(&c.counts, &c.weight_mass, (take * seq_len) as u64);
+            }
+        }
+        done += take;
+    }
+    Ok(CalibData { layers: merged, n_sequences: n_seqs, seq_len })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn sequences_are_packed_and_in_alphabet() {
+        let toks = sample_sequences(None, 4, 64, 9);
+        assert_eq!(toks.len(), 256);
+        assert!(toks.iter().all(|&t| (0..47).contains(&t)));
+        // deterministic
+        assert_eq!(toks, sample_sequences(None, 4, 64, 9));
+        // different seed differs
+        assert_ne!(toks, sample_sequences(None, 4, 64, 10));
+    }
+
+    #[test]
+    fn task_filter_restricts_content() {
+        let toks = sample_sequences(Some(&[Task::Parity]), 2, 64, 3);
+        // parity lines contain only p : 0 1 # e o . \n — check no lowercase
+        // letters other than e/o/p appear
+        let allowed: Vec<i32> = tasks::encode("p:01#eo.\n");
+        assert!(toks.iter().all(|t| allowed.contains(t)), "{toks:?}");
+    }
+
+    #[test]
+    fn capture_accumulates_across_chunks() {
+        let model = tiny_model(4, 2, false, 60);
+        let n_seqs = 40; // forces two chunks of 32 + 8
+        let toks = sample_sequences(None, n_seqs, 64, 11);
+        let data = capture(&model, &toks, n_seqs, 64).unwrap();
+        assert_eq!(data.layers.len(), 2);
+        for l in &data.layers {
+            assert_eq!(l.x.shape(), &[n_seqs * 64, 16]);
+            assert_eq!(l.stats.tokens_seen, (n_seqs * 64) as u64);
+            let total: f64 = l.stats.counts.iter().sum();
+            assert_eq!(total, (n_seqs * 64 * 2) as f64); // top-2
+        }
+    }
+}

@@ -1,0 +1,320 @@
+//! Configuration system: model configs and the AOT artifact manifest.
+//!
+//! Everything the runtime knows about shapes comes from
+//! `artifacts/manifest.json`, written by `python/compile/aot.py`. The rust
+//! side never hard-codes a tensor shape: artifacts are looked up by semantic
+//! key (layer type + shape signature) built from the [`ModelConfig`]s that
+//! the same manifest carries.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::json::Json;
+
+/// Dtype of an artifact parameter/output.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dtype {
+    F32,
+    I32,
+}
+
+impl Dtype {
+    fn parse(s: &str) -> Result<Dtype> {
+        match s {
+            "f32" => Ok(Dtype::F32),
+            "i32" => Ok(Dtype::I32),
+            _ => bail!("unknown dtype {s:?}"),
+        }
+    }
+}
+
+/// One parameter of an HLO artifact (ordered).
+#[derive(Debug, Clone)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// One output of an HLO artifact (ordered; artifacts return tuples).
+#[derive(Debug, Clone)]
+pub struct OutputSpec {
+    pub shape: Vec<usize>,
+    pub dtype: Dtype,
+}
+
+/// Manifest entry for one AOT-lowered executable.
+#[derive(Debug, Clone)]
+pub struct ArtifactSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub params: Vec<ParamSpec>,
+    pub outputs: Vec<OutputSpec>,
+    /// monolith artifacts carry the ordered weight-key list here
+    pub monolith_keys: Option<Vec<String>>,
+}
+
+/// Mirror of `python/compile/configs.py::ModelConfig`.
+#[derive(Debug, Clone)]
+pub struct ModelConfig {
+    pub name: String,
+    pub n_layers: usize,
+    pub d_model: usize,
+    pub n_heads: usize,
+    pub d_ff: usize,
+    pub n_experts: usize,
+    pub top_k: usize,
+    pub shared_expert: bool,
+    pub n_params: usize,
+    pub merge_targets: Vec<usize>,
+}
+
+impl ModelConfig {
+    /// Parameter count of one routed expert (the unit of memory saving).
+    pub fn expert_params(&self) -> usize {
+        3 * self.d_ff * self.d_model
+    }
+
+    /// Total parameter count if `merged_layers` layers are reduced to `m`
+    /// experts each — the "Model Size" column of Tables 1–3.
+    pub fn params_after_merge(&self, merged_layers: usize, m: usize) -> usize {
+        self.n_params - merged_layers * (self.n_experts - m) * self.expert_params()
+    }
+}
+
+/// Parsed artifact manifest.
+#[derive(Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub seq_len: usize,
+    pub vocab: usize,
+    pub batch_buckets: Vec<usize>,
+    pub gram_cols: Vec<usize>,
+    pub charset_fingerprint: u64,
+    pub models: BTreeMap<String, ModelConfig>,
+    pub artifacts: BTreeMap<String, ArtifactSpec>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json` and validate the charset fingerprint
+    /// against the rust task generators (drift here would silently corrupt
+    /// every evaluation, so it is a hard error).
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let j = Json::parse_file(&dir.join("manifest.json"))?;
+        let fp = j.get("charset_fingerprint")?.as_f64()? as u64;
+        let ours = crate::eval::tasks::charset_fingerprint();
+        if fp != ours {
+            bail!(
+                "charset fingerprint mismatch: python {fp} vs rust {ours} — \
+                 python/compile/data.py and rust/src/eval/tasks.rs have diverged"
+            );
+        }
+        let mut models = BTreeMap::new();
+        for (name, mj) in j.get("models")?.as_obj()? {
+            models.insert(name.clone(), parse_model(name, mj)?);
+        }
+        let mut artifacts = BTreeMap::new();
+        for (name, aj) in j.get("artifacts")?.as_obj()? {
+            artifacts.insert(name.clone(), parse_artifact(dir, name, aj)?);
+        }
+        Ok(Manifest {
+            dir: dir.to_path_buf(),
+            seq_len: j.get("seq_len")?.as_usize()?,
+            vocab: j.get("vocab")?.as_usize()?,
+            batch_buckets: j.get("batch_buckets")?.as_usize_vec()?,
+            gram_cols: j.get("gram_cols")?.as_usize_vec()?,
+            charset_fingerprint: fp,
+            models,
+            artifacts,
+        })
+    }
+
+    pub fn model(&self, name: &str) -> Result<&ModelConfig> {
+        self.models
+            .get(name)
+            .with_context(|| format!("unknown model {name:?} (have: {:?})",
+                                     self.models.keys().collect::<Vec<_>>()))
+    }
+
+    pub fn artifact(&self, name: &str) -> Result<&ArtifactSpec> {
+        self.artifacts
+            .get(name)
+            .with_context(|| format!("artifact {name:?} not in manifest"))
+    }
+
+    // ------- semantic artifact keys (must match aot.py naming) -------
+
+    pub fn embed_key(&self, cfg: &ModelConfig, b: usize) -> String {
+        format!("embed_v{}_d{}_b{}", self.vocab, cfg.d_model, b)
+    }
+
+    pub fn attn_key(&self, cfg: &ModelConfig, b: usize) -> String {
+        format!("attn_d{}_h{}_b{}", cfg.d_model, cfg.n_heads, b)
+    }
+
+    pub fn moe_key(&self, cfg: &ModelConfig, n_experts: usize, b: usize) -> String {
+        format!(
+            "moe_d{}_f{}_e{}_k{}_{}_b{}",
+            cfg.d_model, cfg.d_ff, n_experts, cfg.top_k,
+            if cfg.shared_expert { "sh" } else { "ns" }, b
+        )
+    }
+
+    pub fn moe_oracle_key(&self, cfg: &ModelConfig, b: usize) -> String {
+        format!(
+            "moeoracle_d{}_f{}_e{}_k{}_{}_b{}",
+            cfg.d_model, cfg.d_ff, cfg.n_experts, cfg.top_k,
+            if cfg.shared_expert { "sh" } else { "ns" }, b
+        )
+    }
+
+    pub fn lmhead_key(&self, cfg: &ModelConfig, b: usize) -> String {
+        format!("lmhead_v{}_d{}_b{}", self.vocab, cfg.d_model, b)
+    }
+
+    pub fn monolith_key(&self, cfg: &ModelConfig, b: usize) -> String {
+        format!("monolith_{}_b{}", cfg.name, b)
+    }
+
+    pub fn gram_key(&self, cfg: &ModelConfig, s: usize) -> String {
+        format!("gram_f{}_d{}_s{}", cfg.d_ff, cfg.d_model, s)
+    }
+
+    /// Pick the smallest batch bucket that fits `n` sequences.
+    pub fn bucket_for(&self, n: usize) -> usize {
+        for &b in &self.batch_buckets {
+            if n <= b {
+                return b;
+            }
+        }
+        *self.batch_buckets.last().expect("no batch buckets")
+    }
+}
+
+fn parse_model(name: &str, j: &Json) -> Result<ModelConfig> {
+    Ok(ModelConfig {
+        name: name.to_string(),
+        n_layers: j.get("n_layers")?.as_usize()?,
+        d_model: j.get("d_model")?.as_usize()?,
+        n_heads: j.get("n_heads")?.as_usize()?,
+        d_ff: j.get("d_ff")?.as_usize()?,
+        n_experts: j.get("n_experts")?.as_usize()?,
+        top_k: j.get("top_k")?.as_usize()?,
+        shared_expert: j.get("shared_expert")?.as_bool()?,
+        n_params: j.get("n_params")?.as_usize()?,
+        merge_targets: j.get("merge_targets")?.as_usize_vec()?,
+    })
+}
+
+fn parse_artifact(dir: &Path, name: &str, j: &Json) -> Result<ArtifactSpec> {
+    let mut params = Vec::new();
+    for p in j.get("params")?.as_arr()? {
+        params.push(ParamSpec {
+            name: p.get("name")?.as_str()?.to_string(),
+            shape: p.get("shape")?.as_usize_vec()?,
+            dtype: Dtype::parse(p.get("dtype")?.as_str()?)?,
+        });
+    }
+    let mut outputs = Vec::new();
+    for o in j.get("outputs")?.as_arr()? {
+        outputs.push(OutputSpec {
+            shape: o.get("shape")?.as_usize_vec()?,
+            dtype: Dtype::parse(o.get("dtype")?.as_str()?)?,
+        });
+    }
+    let monolith_keys = match j.get("meta")?.opt("keys") {
+        Some(keys) => Some(
+            keys.as_arr()?
+                .iter()
+                .map(|k| Ok(k.as_str()?.to_string()))
+                .collect::<Result<Vec<_>>>()?,
+        ),
+        None => None,
+    };
+    Ok(ArtifactSpec {
+        name: name.to_string(),
+        file: dir.join(j.get("file")?.as_str()?),
+        params,
+        outputs,
+        monolith_keys,
+    })
+}
+
+/// Default artifacts directory: `$MERGEMOE_ARTIFACTS` or `./artifacts`.
+pub fn artifacts_dir() -> PathBuf {
+    std::env::var("MERGEMOE_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|_| PathBuf::from("artifacts"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mini_manifest_json() -> String {
+        let fp = crate::eval::tasks::charset_fingerprint();
+        format!(
+            r#"{{
+  "charset_fingerprint": {fp},
+  "seq_len": 64, "vocab": 47,
+  "batch_buckets": [1, 8, 32], "gram_cols": [256],
+  "models": {{
+    "tiny": {{"name":"tiny","n_layers":2,"d_model":8,"n_heads":2,"d_ff":8,
+              "n_experts":4,"top_k":2,"shared_expert":false,"seed":1,
+              "train_steps":1,"batch_size":1,"lr":0.001,
+              "merge_targets":[2],"vocab":47,"seq_len":64,"n_params":1000}}
+  }},
+  "artifacts": {{
+    "attn_d8_h2_b1": {{"file":"attn_d8_h2_b1.hlo.txt",
+      "params":[{{"name":"h","shape":[1,64,8],"dtype":"f32"}}],
+      "outputs":[{{"shape":[1,64,8],"dtype":"f32"}}],
+      "meta":{{}}}}
+  }}
+}}"#
+        )
+    }
+
+    #[test]
+    fn parses_and_keys() {
+        let dir = std::env::temp_dir().join("mergemoe_manifest_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), mini_manifest_json()).unwrap();
+        let m = Manifest::load(&dir).unwrap();
+        let cfg = m.model("tiny").unwrap();
+        assert_eq!(cfg.n_experts, 4);
+        assert_eq!(m.attn_key(cfg, 1), "attn_d8_h2_b1");
+        assert_eq!(m.moe_key(cfg, 2, 8), "moe_d8_f8_e2_k2_ns_b8");
+        assert_eq!(m.bucket_for(1), 1);
+        assert_eq!(m.bucket_for(5), 8);
+        assert_eq!(m.bucket_for(999), 32);
+        let a = m.artifact("attn_d8_h2_b1").unwrap();
+        assert_eq!(a.params[0].shape, vec![1, 64, 8]);
+        assert!(m.model("nope").is_err());
+    }
+
+    #[test]
+    fn fingerprint_mismatch_is_fatal() {
+        let dir = std::env::temp_dir().join("mergemoe_manifest_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let bad = mini_manifest_json().replacen(
+            &crate::eval::tasks::charset_fingerprint().to_string(),
+            "12345",
+            1,
+        );
+        std::fs::write(dir.join("manifest.json"), bad).unwrap();
+        assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn params_after_merge_accounting() {
+        let cfg = ModelConfig {
+            name: "x".into(), n_layers: 4, d_model: 64, n_heads: 4, d_ff: 64,
+            n_experts: 16, top_k: 2, shared_expert: false,
+            n_params: 1_000_000, merge_targets: vec![8],
+        };
+        let saved = 2 * (16 - 8) * 3 * 64 * 64;
+        assert_eq!(cfg.params_after_merge(2, 8), 1_000_000 - saved);
+    }
+}

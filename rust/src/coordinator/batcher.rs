@@ -1,0 +1,116 @@
+//! Dynamic batcher: groups concurrent scoring requests into engine-sized
+//! batches under a latency deadline — the vLLM-router-style admission layer
+//! in front of the single compiled backend.
+//!
+//! Policy: a batch is flushed when (a) it reaches `max_batch` sequences, or
+//! (b) `max_wait` has elapsed since the *oldest* queued request. Bucketed
+//! executables mean a flush at any size ≤ `max_batch` costs the same as the
+//! next bucket up, so the deadline only trades latency against padding
+//! waste, never against correctness (padding-invariance is a scorer test).
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::time::{Duration, Instant};
+
+/// One queued sequence to score.
+pub struct WorkItem<T> {
+    pub payload: T,
+    pub enqueued: Instant,
+}
+
+/// Outcome of one poll of the queue.
+pub enum BatchDecision<T> {
+    /// Run these items now.
+    Flush(Vec<WorkItem<T>>),
+    /// Channel closed and queue drained — shut down.
+    Shutdown,
+}
+
+/// Collect the next batch from `rx` under the (max_batch, max_wait) policy.
+/// Blocks until there is at least one item or the channel closes.
+pub fn next_batch<T>(
+    rx: &Receiver<T>,
+    max_batch: usize,
+    max_wait: Duration,
+) -> BatchDecision<T> {
+    // block for the first item
+    let first = match rx.recv() {
+        Ok(p) => WorkItem { payload: p, enqueued: Instant::now() },
+        Err(_) => return BatchDecision::Shutdown,
+    };
+    let deadline = first.enqueued + max_wait;
+    let mut items = vec![first];
+    while items.len() < max_batch {
+        let now = Instant::now();
+        if now >= deadline {
+            break;
+        }
+        match rx.recv_timeout(deadline - now) {
+            Ok(p) => items.push(WorkItem { payload: p, enqueued: Instant::now() }),
+            Err(RecvTimeoutError::Timeout) => break,
+            Err(RecvTimeoutError::Disconnected) => break,
+        }
+    }
+    BatchDecision::Flush(items)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::channel;
+
+    #[test]
+    fn flushes_full_batch_immediately() {
+        let (tx, rx) = channel();
+        for i in 0..10 {
+            tx.send(i).unwrap();
+        }
+        let t0 = Instant::now();
+        match next_batch(&rx, 4, Duration::from_secs(5)) {
+            BatchDecision::Flush(items) => {
+                assert_eq!(items.len(), 4);
+                assert!(t0.elapsed() < Duration::from_millis(500));
+            }
+            _ => panic!("expected flush"),
+        }
+    }
+
+    #[test]
+    fn flushes_partial_batch_at_deadline() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        let t0 = Instant::now();
+        match next_batch(&rx, 64, Duration::from_millis(30)) {
+            BatchDecision::Flush(items) => {
+                assert_eq!(items.len(), 1);
+                assert!(t0.elapsed() >= Duration::from_millis(25));
+            }
+            _ => panic!("expected flush"),
+        }
+    }
+
+    #[test]
+    fn shutdown_on_closed_channel() {
+        let (tx, rx) = channel::<u32>();
+        drop(tx);
+        assert!(matches!(
+            next_batch(&rx, 4, Duration::from_millis(1)),
+            BatchDecision::Shutdown
+        ));
+    }
+
+    #[test]
+    fn drains_queue_then_stops_waiting_when_closed() {
+        let (tx, rx) = channel();
+        tx.send(1).unwrap();
+        tx.send(2).unwrap();
+        drop(tx);
+        match next_batch(&rx, 10, Duration::from_secs(1)) {
+            BatchDecision::Flush(items) => assert_eq!(items.len(), 2),
+            _ => panic!("expected flush"),
+        }
+        assert!(matches!(
+            next_batch(&rx, 10, Duration::from_millis(1)),
+            BatchDecision::Shutdown
+        ));
+    }
+}

@@ -1,0 +1,155 @@
+//! Serving metrics: latency histogram + throughput counters (reported by the
+//! scoring server and the benches).
+
+use std::time::Duration;
+
+/// Fixed-bucket latency histogram (log-spaced, 1µs .. ~100s).
+#[derive(Debug, Clone)]
+pub struct LatencyHistogram {
+    /// bucket i covers [2^i µs, 2^{i+1} µs)
+    buckets: Vec<u64>,
+    count: u64,
+    sum_us: u64,
+    max_us: u64,
+}
+
+impl Default for LatencyHistogram {
+    fn default() -> Self {
+        LatencyHistogram { buckets: vec![0; 28], count: 0, sum_us: 0, max_us: 0 }
+    }
+}
+
+impl LatencyHistogram {
+    pub fn record(&mut self, d: Duration) {
+        let us = d.as_micros().max(1) as u64;
+        let idx = (63 - us.leading_zeros() as usize).min(self.buckets.len() - 1);
+        self.buckets[idx] += 1;
+        self.count += 1;
+        self.sum_us += us;
+        self.max_us = self.max_us.max(us);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count
+    }
+
+    pub fn mean(&self) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_micros(self.sum_us / self.count)
+    }
+
+    pub fn max(&self) -> Duration {
+        Duration::from_micros(self.max_us)
+    }
+
+    /// Approximate quantile (upper bound of the containing bucket).
+    pub fn quantile(&self, q: f64) -> Duration {
+        if self.count == 0 {
+            return Duration::ZERO;
+        }
+        let target = (self.count as f64 * q).ceil() as u64;
+        let mut acc = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            acc += c;
+            if acc >= target {
+                return Duration::from_micros(1u64 << (i + 1));
+            }
+        }
+        self.max()
+    }
+
+    pub fn merge(&mut self, other: &LatencyHistogram) {
+        for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
+            *a += b;
+        }
+        self.count += other.count;
+        self.sum_us += other.sum_us;
+        self.max_us = self.max_us.max(other.max_us);
+    }
+}
+
+/// Rolled-up serving metrics.
+#[derive(Debug, Clone, Default)]
+pub struct ServerMetrics {
+    pub queue_latency: LatencyHistogram,
+    pub total_latency: LatencyHistogram,
+    pub requests: u64,
+    pub batches: u64,
+    pub batched_sequences: u64,
+    pub wall_seconds: f64,
+}
+
+impl ServerMetrics {
+    pub fn mean_batch_size(&self) -> f64 {
+        if self.batches == 0 {
+            return 0.0;
+        }
+        self.batched_sequences as f64 / self.batches as f64
+    }
+
+    pub fn throughput_rps(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            return 0.0;
+        }
+        self.requests as f64 / self.wall_seconds
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} batches={} mean_batch={:.2} throughput={:.1} req/s \
+             latency: mean {:?} p50 {:?} p99 {:?} max {:?} (queue p99 {:?})",
+            self.requests,
+            self.batches,
+            self.mean_batch_size(),
+            self.throughput_rps(),
+            self.total_latency.mean(),
+            self.total_latency.quantile(0.5),
+            self.total_latency.quantile(0.99),
+            self.total_latency.max(),
+            self.queue_latency.quantile(0.99),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn histogram_quantiles_are_ordered() {
+        let mut h = LatencyHistogram::default();
+        for i in 1..=1000u64 {
+            h.record(Duration::from_micros(i * 17 % 5000 + 1));
+        }
+        assert_eq!(h.count(), 1000);
+        let p50 = h.quantile(0.5);
+        let p99 = h.quantile(0.99);
+        assert!(p50 <= p99);
+        assert!(h.mean() > Duration::ZERO);
+        assert!(p99 <= h.max() * 2);
+    }
+
+    #[test]
+    fn merge_accumulates() {
+        let mut a = LatencyHistogram::default();
+        let mut b = LatencyHistogram::default();
+        a.record(Duration::from_millis(1));
+        b.record(Duration::from_millis(2));
+        a.merge(&b);
+        assert_eq!(a.count(), 2);
+    }
+
+    #[test]
+    fn server_metrics_report() {
+        let mut m = ServerMetrics::default();
+        m.requests = 100;
+        m.batches = 10;
+        m.batched_sequences = 80;
+        m.wall_seconds = 2.0;
+        assert_eq!(m.mean_batch_size(), 8.0);
+        assert_eq!(m.throughput_rps(), 50.0);
+        assert!(m.report().contains("mean_batch=8.00"));
+    }
+}

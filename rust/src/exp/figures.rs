@@ -1,0 +1,268 @@
+//! Figures 2–5 of the paper's evaluation.
+
+use anyhow::Result;
+
+use super::report::save;
+use super::Ctx;
+use crate::coordinator::{compress, CompressSpec};
+use crate::eval::tasks::Task;
+use crate::merge::Algorithm;
+use crate::util::json::Json;
+
+/// ASCII bar chart for figure-style outputs.
+fn bars(series: &[(String, f64)], unit: &str) {
+    let max = series.iter().map(|(_, v)| *v).fold(0.0f64, f64::max).max(1e-9);
+    for (label, v) in series {
+        let n = ((v / max) * 40.0).round() as usize;
+        println!("  {label:<24} {:<40} {v:.2}{unit}", "█".repeat(n));
+    }
+}
+
+/// Fig. 2a — accuracy vs number of *reduced* experts, fixed merged-layer set
+/// (`beta`, layers 2–3; the paper fixes 14 layers on Qwen1.5 and varies the
+/// expert count; scored on the WinoGrande analogue `parity`).
+pub fn fig2a(ctx: &Ctx) -> Result<()> {
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let sweep = [12usize, 10, 8, 6, 4, 3, 2];
+    let mut series = Vec::new();
+    for &m in &sweep {
+        let acc = if m == model.cfg.n_experts {
+            ctx.eval_suite(engine.as_mut(), &model, &[Task::Maj])?["maj"]
+        } else {
+            let mut cs = CompressSpec::new(vec![0, 1, 2, 3], m, Algorithm::MergeMoe);
+            cs.n_calib_seqs = 64;
+            cs.seed = ctx.seed ^ 0xF2A;
+            let mut gram = ctx.make_gram("beta")?;
+            let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+            ctx.eval_suite(engine.as_mut(), &merged, &[Task::Maj])?["maj"]
+        };
+        series.push((format!("experts {} -> {m}", model.cfg.n_experts), acc.percent()));
+    }
+    println!("\nfig2a: accuracy vs reduced expert count (beta, all layers, maj)");
+    bars(&series, "%");
+    save(ctx, "fig2a", Json::Obj(
+        series.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    ))
+}
+
+/// Fig. 2b — accuracy vs number of *compressed layers*, fixed expert target
+/// (`beta`, 12 → 6; layers added back to front as in the paper).
+pub fn fig2b(ctx: &Ctx) -> Result<()> {
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let layer_sets: Vec<Vec<usize>> =
+        vec![vec![], vec![3], vec![2, 3], vec![1, 2, 3], vec![0, 1, 2, 3]];
+    let mut series = Vec::new();
+    for layers in &layer_sets {
+        let acc = if layers.is_empty() {
+            ctx.eval_suite(engine.as_mut(), &model, &[Task::Maj])?["maj"]
+        } else {
+            let mut cs = CompressSpec::new(layers.clone(), 6, Algorithm::MergeMoe);
+            cs.n_calib_seqs = 64;
+            cs.seed = ctx.seed ^ 0xF2B;
+            let mut gram = ctx.make_gram("beta")?;
+            let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+            ctx.eval_suite(engine.as_mut(), &merged, &[Task::Maj])?["maj"]
+        };
+        series.push((format!("{} layers merged", layers.len()), acc.percent()));
+    }
+    println!("\nfig2b: accuracy vs compressed layer count (beta, 12->6, maj)");
+    bars(&series, "%");
+    save(ctx, "fig2b", Json::Obj(
+        series.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    ))
+}
+
+/// Fig. 3 — merging-time cost: MergeMoE vs M-SMoE on the same layer set
+/// (`beta`, 12 → 6, 128 calibration sequences as in the paper's batch-128
+/// setting). Also regenerated as `benches/bench_merge.rs`.
+pub fn fig3(ctx: &Ctx) -> Result<()> {
+    let model = ctx.load_model("beta")?;
+    let mut series = Vec::new();
+    for alg in [Algorithm::MSmoe, Algorithm::MergeMoe] {
+        let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, alg);
+        cs.n_calib_seqs = 128;
+        cs.seed = ctx.seed ^ 0xF30;
+        let mut gram = ctx.make_gram("beta")?;
+        let t0 = std::time::Instant::now();
+        let (_, rep) = compress(&model, &cs, &mut gram.as_backend())?;
+        let total = t0.elapsed().as_secs_f64();
+        series.push((format!("{} merge", alg.name()), rep.merge_seconds));
+        series.push((format!("{} total(+calib)", alg.name()), total));
+    }
+    println!("\nfig3: merging time cost (beta, all layers, 12->6, 128 calib seqs)");
+    bars(&series, "s");
+    save(ctx, "fig3", Json::Obj(
+        series.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    ))
+}
+
+/// Fig. 4 — accuracy vs calibration sample count, including the
+/// below-threshold failure regime (`beta`; the rank threshold sits at
+/// d_ff = 64 calibration tokens — the analogue of the paper's 32-sample
+/// threshold).
+pub fn fig4(ctx: &Ctx) -> Result<()> {
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let token_counts = [8usize, 16, 32, 48, 64, 96, 128, 256, 512, 1024, 4096];
+    let mut series = Vec::new();
+    for &toks in &token_counts {
+        let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, Algorithm::MergeMoe);
+        cs.n_calib_seqs = toks.div_ceil(64).max(1) * 2; // capture enough, then cap
+        cs.max_calib_tokens = Some(toks);
+        cs.seed = ctx.seed ^ 0xF40;
+        let mut gram = ctx.make_gram("beta")?;
+        let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+        let acc = ctx.eval_suite(engine.as_mut(), &merged, &[Task::Maj])?["maj"];
+        series.push((format!("{toks} tokens"), acc.percent()));
+    }
+    println!(
+        "\nfig4: accuracy vs calibration sample count (beta, 12->6, maj; \
+         threshold expected near d_ff=64 tokens)"
+    );
+    bars(&series, "%");
+    save(ctx, "fig4", Json::Obj(
+        series.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    ))
+}
+
+/// Fig. 5 — generative/instruction-following analogue with knowledge
+/// distillation: the compressed model is evaluated on a held-out mixed-task
+/// suite before and after distilling the full model's logits into the
+/// merged experts' down-projections (the closed-form refit below is the
+/// coordinate-descent analogue of the paper's ShareGPT logit distillation;
+/// see exp::figures::distill_wd).
+pub fn fig5(ctx: &Ctx) -> Result<()> {
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let tasks = super::paper_task_order();
+
+    let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, Algorithm::MergeMoe);
+    cs.n_calib_seqs = 8; // deliberately small so distillation has headroom
+    cs.seed = ctx.seed ^ 0xF50;
+    let mut gram = ctx.make_gram("beta")?;
+    let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+
+    let mean = |m: &std::collections::BTreeMap<&'static str, crate::eval::Accuracy>| {
+        m.values().map(|a| a.percent()).sum::<f64>() / m.len() as f64
+    };
+    let acc_before = ctx.eval_suite(engine.as_mut(), &merged, &tasks)?;
+    let m_before = mean(&acc_before);
+
+    // distillation: refit every merged W_D against the *teacher layer
+    // output* on a fresh, larger corpus (the samples the merge never saw)
+    let distilled = distill_wd(ctx, &model, &merged, 192)?;
+    let acc_after = ctx.eval_suite(engine.as_mut(), &distilled, &tasks)?;
+    let m_after = mean(&acc_after);
+
+    let full_acc = ctx.eval_suite(engine.as_mut(), &model, &tasks)?;
+    let series = vec![
+        ("Full model".to_string(), mean(&full_acc)),
+        ("Compressed (8 calib seqs)".to_string(), m_before),
+        ("Compressed + distillation".to_string(), m_after),
+    ];
+    println!("\nfig5: distillation boost on the compressed model (beta, mean over 7 tasks)");
+    bars(&series, "%");
+    save(ctx, "fig5", Json::Obj(
+        series.iter().map(|(k, v)| (k.clone(), Json::Num(*v))).collect(),
+    ))
+}
+
+/// Knowledge distillation of the merged layers: with gate/up projections and
+/// routing frozen, the student's MoE-layer output is linear in each merged
+/// `W_D`, so matching the teacher's layer output in L2 over a distillation
+/// corpus is again a least-squares problem per expert — the closed-form
+/// equivalent of gradient distillation on this parameter subset.
+pub fn distill_wd(
+    ctx: &Ctx,
+    teacher: &crate::model::ModelWeights,
+    student: &crate::model::ModelWeights,
+    n_seqs: usize,
+) -> Result<crate::model::ModelWeights> {
+    use crate::calib;
+    use crate::linalg;
+    use crate::model::native;
+    use crate::tensor::{ops, Tensor};
+
+    let seq_len = ctx.manifest.seq_len;
+    let tokens = calib::sample_sequences(None, n_seqs, seq_len, ctx.seed ^ 0xD157);
+    let tcap = calib::capture(teacher, &tokens, n_seqs, seq_len)?;
+    let mut out = student.clone();
+    for (li, layer) in student.layers.iter().enumerate() {
+        if layer.moe.map.is_none() {
+            continue; // only merged layers are distilled
+        }
+        let x = &tcap.layers[li].x;
+        // teacher target: full layer output
+        let (y_t, _, _) = native::moe_forward(&teacher.layers[li].moe, x)?;
+        // The shared expert is frozen and identical in teacher and student:
+        // distill the *routed* part only, subtracting its output from BOTH
+        // sides (target here, student output below).
+        let shared_out = match &layer.moe.shared {
+            Some(sh) => Some(native::expert_forward(sh, x)?),
+            None => None,
+        };
+        let mut target = y_t;
+        if let Some(ys) = &shared_out {
+            target = target.sub(ys)?;
+        }
+        // student routing (frozen): dense (t, m) weights
+        let routing = crate::moe::routing::route_tokens(&layer.moe.router, x, layer.moe.top_k)?;
+        let n = layer.moe.router.shape()[0];
+        let mut r = Tensor::zeros(&[x.shape()[0], n]);
+        for (ti, tok) in routing.iter().enumerate() {
+            for &(ei, w) in tok {
+                *r.at2_mut(ti, ei) = w;
+            }
+        }
+        let r = ops::matmul_bt(&r, layer.moe.map.as_ref().unwrap())?; // (t, m)
+        // per merged expert e: rows where r[:,e] != 0 contribute
+        //   r_te * W_D h_e(x_t)  — solve W_D against the residual target,
+        // coordinate-descent style (re-evaluating the student between
+        // expert refits so each solve sees the latest other-expert output)
+        let n_experts = out.layers[li].moe.experts.len();
+        for ei in 0..n_experts {
+            let rows: Vec<usize> =
+                (0..x.shape()[0]).filter(|&t| r.at2(t, ei) != 0.0).collect();
+            let ex = out.layers[li].moe.experts[ei].clone();
+            if rows.len() < ex.wg.shape()[0] {
+                continue; // not enough support to refit
+            }
+            // gather inputs & weights
+            let mut xs = Tensor::zeros(&[rows.len(), x.shape()[1]]);
+            let mut ws = Vec::with_capacity(rows.len());
+            for (k, &t) in rows.iter().enumerate() {
+                xs.row_mut(k).copy_from_slice(x.row(t));
+                ws.push(r.at2(t, ei));
+            }
+            // target residual: remove the other experts' current contribution
+            let (y_s_full, _, _) = native::moe_forward(&out.layers[li].moe, x)?;
+            let y_s = match &shared_out {
+                Some(ys) => y_s_full.sub(ys)?, // routed part of the student
+                None => y_s_full,
+            };
+            let mut resid = Tensor::zeros(&[rows.len(), x.shape()[1]]);
+            let own = native::expert_forward(&ex, &xs)?;
+            for (k, &t) in rows.iter().enumerate() {
+                for c in 0..x.shape()[1] {
+                    // target minus (student output minus own contribution)
+                    let other = y_s.at2(t, c) - ws[k] * own.at2(k, c);
+                    *resid.at2_mut(k, c) = target.at2(t, c) - other;
+                }
+            }
+            // rows scaled by weight: solve  (w ⊗ h) W_Dᵀ = resid
+            let mut h = native::expert_inner(&ex, &xs)?; // (rows, f)
+            for (k, &w) in ws.iter().enumerate() {
+                for v in h.row_mut(k) {
+                    *v *= w;
+                }
+            }
+            let p = ops::transpose(&h)?; // (f, rows)
+            let y = ops::transpose(&resid)?; // (d, rows)
+            out.layers[li].moe.experts[ei].wd = linalg::lstsq_rows(&p, &y, 1e-6)?;
+        }
+    }
+    out.touch();
+    Ok(out)
+}

@@ -1,0 +1,179 @@
+//! Experiment drivers: one function per table/figure of the paper's
+//! evaluation (DESIGN.md §5 maps each to the paper artifact it regenerates).
+//!
+//! All drivers print a human-readable table to stdout and append a JSON
+//! record to `artifacts/reports/<exp>.json`; EXPERIMENTS.md quotes these
+//! outputs.
+
+pub mod figures;
+pub mod report;
+pub mod tables;
+
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::Manifest;
+use crate::eval::tasks::{gen_items, Task};
+use crate::eval::{score_items, Accuracy};
+use crate::merge::{GramBackend, NativeGram};
+use crate::model::ModelWeights;
+use crate::runtime::{Engine, NativeEngine, PjrtEngine};
+
+/// Which forward backend experiments run on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EngineSel {
+    Native,
+    Pjrt,
+}
+
+impl EngineSel {
+    pub fn parse(s: &str) -> Result<EngineSel> {
+        match s {
+            "native" => Ok(EngineSel::Native),
+            "pjrt" => Ok(EngineSel::Pjrt),
+            _ => bail!("unknown engine {s:?} (native|pjrt)"),
+        }
+    }
+}
+
+/// Shared experiment context: manifest, engine selection, sizes.
+pub struct Ctx {
+    pub artifacts: PathBuf,
+    pub manifest: Manifest,
+    pub engine: EngineSel,
+    /// Items per task in accuracy evaluations.
+    pub items: usize,
+    /// Eval batch (sequences per forward call).
+    pub batch: usize,
+    pub seed: u64,
+    /// Use the PJRT gram artifact (pallas kernel) in the MergeMoE solve.
+    pub pjrt_gram: bool,
+}
+
+impl Ctx {
+    pub fn new(artifacts: PathBuf, engine: EngineSel) -> Result<Ctx> {
+        let manifest = Manifest::load(&artifacts)
+            .with_context(|| format!("loading manifest from {}", artifacts.display()))?;
+        Ok(Ctx {
+            artifacts,
+            manifest,
+            engine,
+            items: 150,
+            batch: 32,
+            seed: 2026,
+            pjrt_gram: false,
+        })
+    }
+
+    pub fn load_model(&self, name: &str) -> Result<ModelWeights> {
+        let cfg = self.manifest.model(name)?;
+        ModelWeights::load(&self.artifacts, cfg)
+    }
+
+    pub fn make_engine(&self) -> Result<Box<dyn Engine>> {
+        match self.engine {
+            EngineSel::Native => Ok(Box::new(NativeEngine)),
+            EngineSel::Pjrt => {
+                let manifest = Manifest::load(&self.artifacts)?;
+                Ok(Box::new(PjrtEngine::new(manifest)?))
+            }
+        }
+    }
+
+    /// Gram backend for the compression pipeline. PJRT-gram routes the
+    /// least-squares accumulation through the pallas `gram_*` artifact.
+    pub fn make_gram(&self, model: &str) -> Result<GramBox> {
+        if self.pjrt_gram && self.engine == EngineSel::Pjrt {
+            let manifest = Manifest::load(&self.artifacts)?;
+            Ok(GramBox::Pjrt(PjrtEngine::new(manifest)?, model.to_string()))
+        } else {
+            Ok(GramBox::Native(NativeGram))
+        }
+    }
+
+    /// Evaluate one model on all (or selected) tasks.
+    pub fn eval_suite(
+        &self,
+        engine: &mut dyn Engine,
+        model: &ModelWeights,
+        tasks: &[Task],
+    ) -> Result<BTreeMap<&'static str, Accuracy>> {
+        let mut out = BTreeMap::new();
+        for &t in tasks {
+            let items = gen_items(t, self.items, self.seed);
+            let acc = score_items(engine, model, &items, self.manifest.seq_len, self.batch)?;
+            out.insert(t.name(), acc);
+        }
+        Ok(out)
+    }
+}
+
+/// Owned gram backend (PJRT engines are not `Send`/boxable trait objects
+/// with lifetimes, so a small enum keeps call sites simple).
+pub enum GramBox {
+    Native(NativeGram),
+    Pjrt(PjrtEngine, String),
+}
+
+impl GramBox {
+    pub fn as_backend(&mut self) -> GramRef<'_> {
+        GramRef(self)
+    }
+}
+
+/// Borrowing adapter implementing [`GramBackend`].
+pub struct GramRef<'a>(&'a mut GramBox);
+
+impl GramBackend for GramRef<'_> {
+    fn gram(
+        &mut self,
+        p: &crate::tensor::Tensor,
+        y: &crate::tensor::Tensor,
+    ) -> Result<(crate::tensor::Tensor, crate::tensor::Tensor)> {
+        match self.0 {
+            GramBox::Native(g) => g.gram(p, y),
+            GramBox::Pjrt(engine, model) => crate::runtime::pjrt::PjrtGram {
+                engine,
+                model: model.clone(),
+            }
+            .gram(p, y),
+        }
+    }
+}
+
+/// The default task order used in report tables (paper column order:
+/// WinoGrande, ARC easy, ARC challenge, Hellaswag, PIQA, SQuAD, MRPC).
+pub fn paper_task_order() -> Vec<Task> {
+    vec![
+        Task::Maj, Task::Copy, Task::Sort, Task::Markov,
+        Task::Parity, Task::Rev, Task::Arith,
+    ]
+}
+
+/// Dispatch an experiment by id.
+pub fn run(ctx: &Ctx, exp: &str) -> Result<()> {
+    match exp {
+        "table1" => tables::table1(ctx),
+        "table2" => tables::table2(ctx),
+        "table3" => tables::table3(ctx),
+        "table4" => tables::table4(ctx),
+        "table5" => tables::table5(ctx),
+        "fig2a" => figures::fig2a(ctx),
+        "fig2b" => figures::fig2b(ctx),
+        "fig3" => figures::fig3(ctx),
+        "fig4" => figures::fig4(ctx),
+        "fig5" => figures::fig5(ctx),
+        "loss" => report::loss_curves(ctx),
+        "all" => {
+            for e in ["table1", "table2", "table3", "table4", "table5",
+                      "fig2a", "fig2b", "fig3", "fig4", "fig5", "loss"] {
+                println!("\n================ {e} ================");
+                run(ctx, e)?;
+            }
+            Ok(())
+        }
+        _ => bail!("unknown experiment {exp:?}"),
+    }
+}

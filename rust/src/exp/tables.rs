@@ -1,0 +1,206 @@
+//! Tables 1–5 of the paper's evaluation (DESIGN.md §5 maps models/settings).
+
+use anyhow::Result;
+
+use super::report::{acc_json, fmt_params, save, TablePrinter};
+use super::{paper_task_order, Ctx};
+use crate::coordinator::{compress, CompressSpec};
+use crate::eval::tasks::Task;
+use crate::merge::{Algorithm, COMPARED};
+use crate::util::json::Json;
+
+/// Settings for one comparative table (model + compression config).
+pub struct TableSpec {
+    pub name: &'static str,
+    pub model: &'static str,
+    pub layers: Vec<usize>,
+    pub m: usize,
+    pub dense_baselines: Vec<&'static str>,
+    pub n_calib_seqs: usize,
+}
+
+/// Table 1 analogue — `alpha` (~Qwen3-30B-A3B: no shared expert), back half
+/// of the layers, experts 16 → 8.
+pub fn table1(ctx: &Ctx) -> Result<()> {
+    comparison_table(ctx, &TableSpec {
+        name: "table1",
+        model: "alpha",
+        layers: vec![0, 1, 2, 3],
+        m: 8,
+        dense_baselines: vec!["dense_a"],
+        n_calib_seqs: 40,
+    })
+}
+
+/// Table 2 analogue — `beta` (~Qwen1.5-MoE-A2.7B: shared expert), 12 → 6.
+pub fn table2(ctx: &Ctx) -> Result<()> {
+    comparison_table(ctx, &TableSpec {
+        name: "table2",
+        model: "beta",
+        layers: vec![0, 1, 2, 3],
+        m: 6,
+        dense_baselines: vec!["dense_b4", "dense_b1"],
+        n_calib_seqs: 64,
+    })
+}
+
+/// Table 3 analogue — `gamma` (~DeepSeekMoE-16B: shared expert, top-4),
+/// 16 → 7 over the back three layers.
+pub fn table3(ctx: &Ctx) -> Result<()> {
+    comparison_table(ctx, &TableSpec {
+        name: "table3",
+        model: "gamma",
+        layers: vec![0, 1, 2, 3, 4],
+        m: 7,
+        dense_baselines: vec![],
+        n_calib_seqs: 64,
+    })
+}
+
+fn comparison_table(ctx: &Ctx, spec: &TableSpec) -> Result<()> {
+    let tasks = paper_task_order();
+    let mut headers = vec!["Strategies".to_string(), "Model Size".to_string()];
+    headers.extend(tasks.iter().map(|t| format!("{} ({})", t.paper_name(), t.name())));
+    let mut printer = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut engine = ctx.make_engine()?;
+    let mut records: Vec<(String, Json)> = Vec::new();
+
+    // Full model
+    let full = ctx.load_model(spec.model)?;
+    let accs = ctx.eval_suite(engine.as_mut(), &full, &tasks)?;
+    let mut row = vec!["Full".to_string(), fmt_params(full.n_params())];
+    row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+    printer.row(row);
+    records.push(("Full".into(), acc_json(&accs)));
+
+    // Dense baselines
+    for dense in &spec.dense_baselines {
+        let dm = ctx.load_model(dense)?;
+        let accs = ctx.eval_suite(engine.as_mut(), &dm, &tasks)?;
+        let mut row = vec![format!("Dense ({dense})"), fmt_params(dm.n_params())];
+        row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+        printer.row(row);
+        records.push((format!("Dense-{dense}"), acc_json(&accs)));
+    }
+
+    // Merge algorithms at identical compression ratio
+    for alg in COMPARED {
+        let mut cs = CompressSpec::new(spec.layers.clone(), spec.m, alg);
+        cs.n_calib_seqs = spec.n_calib_seqs;
+        cs.seed = ctx.seed ^ 0x5EED;
+        let mut gram = ctx.make_gram(spec.model)?;
+        let (merged, rep) = compress(&full, &cs, &mut gram.as_backend())?;
+        let accs = ctx.eval_suite(engine.as_mut(), &merged, &tasks)?;
+        let mut row = vec![alg.name().to_string(), fmt_params(rep.params_after)];
+        row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+        printer.row(row);
+        let mut j = acc_json(&accs);
+        if let Json::Obj(o) = &mut j {
+            o.insert("params_after".into(), Json::Num(rep.params_after as f64));
+            o.insert("merge_seconds".into(), Json::Num(rep.merge_seconds));
+            o.insert(
+                "mean_layer_err".into(),
+                Json::Num(
+                    rep.layers.iter().map(|l| l.output_rel_err).sum::<f64>()
+                        / rep.layers.len().max(1) as f64,
+                ),
+            );
+        }
+        records.push((alg.name().into(), j));
+    }
+
+    println!(
+        "\n{}: model={} layers={:?} experts {}->{} ({} items/task, engine={})",
+        spec.name, spec.model, spec.layers, full.cfg.n_experts, spec.m, ctx.items,
+        match ctx.engine { super::EngineSel::Native => "native", _ => "pjrt" }
+    );
+    printer.print();
+    save(ctx, spec.name, Json::Obj(records.into_iter().map(|(k, v)| (k, v)).collect()))
+}
+
+/// Table 4 — cross-dataset generalization of the calibration source
+/// (`beta`): merge with samples from a single task, evaluate on all.
+pub fn table4(ctx: &Ctx) -> Result<()> {
+    let tasks = paper_task_order();
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let mut headers = vec!["Source of Input Samples".to_string()];
+    headers.extend(tasks.iter().map(|t| format!("{} ({})", t.paper_name(), t.name())));
+    let mut printer = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut records: Vec<(String, Json)> = Vec::new();
+
+    // Row 1: self-sourced — per evaluated task, calibrate on that task.
+    let mut self_row = vec!["Self-Sourced Samples".to_string()];
+    let mut self_rec = std::collections::BTreeMap::new();
+    for &t in &tasks {
+        let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, Algorithm::MergeMoe);
+        cs.n_calib_seqs = 64;
+        cs.calib_tasks = Some(vec![t]);
+        cs.seed = ctx.seed ^ 0x7A5;
+        let mut gram = ctx.make_gram("beta")?;
+        let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+        let accs = ctx.eval_suite(engine.as_mut(), &merged, &[t])?;
+        self_row.push(format!("{:.2}", accs[t.name()].percent()));
+        self_rec.insert(t.name(), accs[t.name()]);
+    }
+    printer.row(self_row);
+    records.push(("Self-Sourced".into(), acc_json(&self_rec)));
+
+    // Rows 2-4: single-source calibration (paper uses WinoGrande / ARC easy
+    // / Hellaswag → our parity / copy / markov), evaluated on all tasks.
+    for src in [Task::Maj, Task::Copy, Task::Markov] {
+        let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, Algorithm::MergeMoe);
+        cs.n_calib_seqs = 64;
+        cs.calib_tasks = Some(vec![src]);
+        cs.seed = ctx.seed ^ 0x7A5;
+        let mut gram = ctx.make_gram("beta")?;
+        let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+        let accs = ctx.eval_suite(engine.as_mut(), &merged, &tasks)?;
+        let mut row = vec![format!("{} ({})", src.paper_name(), src.name())];
+        row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+        printer.row(row);
+        records.push((src.name().into(), acc_json(&accs)));
+    }
+
+    println!("\ntable4: cross-dataset calibration generalization (beta, 12->6, all layers)");
+    printer.print();
+    save(ctx, "table4", Json::Obj(records.into_iter().collect()))
+}
+
+/// Table 5 — ablation on the compression errors (`beta`): Full vs
+/// w/o merging errors (output-merge oracle) vs w/ merging errors (MergeMoE).
+pub fn table5(ctx: &Ctx) -> Result<()> {
+    let tasks: Vec<Task> = paper_task_order().into_iter().take(5).collect(); // paper shows 5 tasks
+    let model = ctx.load_model("beta")?;
+    let mut engine = ctx.make_engine()?;
+    let mut headers = vec!["Strategies".to_string()];
+    headers.extend(tasks.iter().map(|t| format!("{} ({})", t.paper_name(), t.name())));
+    let mut printer = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    let mut records: Vec<(String, Json)> = Vec::new();
+
+    let accs = ctx.eval_suite(engine.as_mut(), &model, &tasks)?;
+    let mut row = vec!["Full".to_string()];
+    row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+    printer.row(row);
+    records.push(("Full".into(), acc_json(&accs)));
+
+    for (label, alg) in [
+        ("w/o merging errors", Algorithm::Oracle),
+        ("w/ merging errors", Algorithm::MergeMoe),
+    ] {
+        let mut cs = CompressSpec::new(vec![0, 1, 2, 3], 6, alg);
+        cs.n_calib_seqs = 64;
+        cs.seed = ctx.seed ^ 0xAB1;
+        let mut gram = ctx.make_gram("beta")?;
+        let (merged, _) = compress(&model, &cs, &mut gram.as_backend())?;
+        let accs = ctx.eval_suite(engine.as_mut(), &merged, &tasks)?;
+        let mut row = vec![label.to_string()];
+        row.extend(tasks.iter().map(|t| format!("{:.2}", accs[t.name()].percent())));
+        printer.row(row);
+        records.push((label.into(), acc_json(&accs)));
+    }
+
+    println!("\ntable5: ablation on compression errors (beta, 12->6, all layers)");
+    printer.print();
+    save(ctx, "table5", Json::Obj(records.into_iter().collect()))
+}

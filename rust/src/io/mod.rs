@@ -1,0 +1,8 @@
+//! Interchange with the build-time python trainer: NPY/NPZ reading and
+//! writing (weights, calibration dumps, compressed-model exports).
+
+pub mod npy;
+pub mod npz;
+
+pub use npy::{NpyArray, NpyDtype};
+pub use npz::{read_npz, write_npz};

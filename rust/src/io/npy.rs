@@ -1,0 +1,234 @@
+//! NPY (numpy array file) format v1.0 reader/writer.
+//!
+//! Supports the dtypes this project exchanges with the trainer: `<f4`, `<f8`,
+//! `<i4`, `<i8` in C order. Everything is converted to f32/i32 on load (the
+//! model is f32 end to end; i64 appears only in numpy defaults).
+
+use anyhow::{bail, Context, Result};
+
+use crate::tensor::Tensor;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum NpyDtype {
+    F32,
+    F64,
+    I32,
+    I64,
+}
+
+impl NpyDtype {
+    fn descr(self) -> &'static str {
+        match self {
+            NpyDtype::F32 => "<f4",
+            NpyDtype::F64 => "<f8",
+            NpyDtype::I32 => "<i4",
+            NpyDtype::I64 => "<i8",
+        }
+    }
+
+    fn size(self) -> usize {
+        match self {
+            NpyDtype::F32 | NpyDtype::I32 => 4,
+            NpyDtype::F64 | NpyDtype::I64 => 8,
+        }
+    }
+}
+
+/// A parsed NPY array (payload kept in its declared dtype).
+#[derive(Debug, Clone)]
+pub struct NpyArray {
+    pub dtype: NpyDtype,
+    pub shape: Vec<usize>,
+    data: Vec<u8>,
+}
+
+impl NpyArray {
+    pub fn parse(bytes: &[u8]) -> Result<NpyArray> {
+        if bytes.len() < 10 || &bytes[..6] != b"\x93NUMPY" {
+            bail!("not an NPY file");
+        }
+        let major = bytes[6];
+        let (header_len, header_start) = match major {
+            1 => (u16::from_le_bytes([bytes[8], bytes[9]]) as usize, 10),
+            2 | 3 => (
+                u32::from_le_bytes([bytes[8], bytes[9], bytes[10], bytes[11]]) as usize,
+                12,
+            ),
+            v => bail!("unsupported NPY version {v}"),
+        };
+        let header = std::str::from_utf8(&bytes[header_start..header_start + header_len])
+            .context("NPY header not utf-8")?;
+        let descr = extract_str(header, "descr")?;
+        let dtype = match descr.as_str() {
+            "<f4" => NpyDtype::F32,
+            "<f8" => NpyDtype::F64,
+            "<i4" => NpyDtype::I32,
+            "<i8" => NpyDtype::I64,
+            d => bail!("unsupported NPY dtype {d:?}"),
+        };
+        if extract_raw(header, "fortran_order")?.trim() != "False" {
+            bail!("fortran_order arrays not supported");
+        }
+        let shape = parse_shape(&extract_raw(header, "shape")?)?;
+        let n: usize = shape.iter().product();
+        let payload = &bytes[header_start + header_len..];
+        if payload.len() < n * dtype.size() {
+            bail!("NPY payload truncated: {} < {}", payload.len(), n * dtype.size());
+        }
+        Ok(NpyArray { dtype, shape, data: payload[..n * dtype.size()].to_vec() })
+    }
+
+    /// Convert to an f32 [`Tensor`] (lossy for i64/f64 beyond f32 range,
+    /// which never occurs for our weights).
+    pub fn to_tensor(&self) -> Result<Tensor> {
+        let n: usize = self.shape.iter().product();
+        let mut out = Vec::with_capacity(n);
+        match self.dtype {
+            NpyDtype::F32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(f32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            NpyDtype::F64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(f64::from_le_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+            NpyDtype::I32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]) as f32);
+                }
+            }
+            NpyDtype::I64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(i64::from_le_bytes(c.try_into().unwrap()) as f32);
+                }
+            }
+        }
+        Tensor::from_vec(&self.shape, out)
+    }
+
+    /// Integer view (router indices, token ids).
+    pub fn to_i32(&self) -> Result<Vec<i32>> {
+        let mut out = Vec::new();
+        match self.dtype {
+            NpyDtype::I32 => {
+                for c in self.data.chunks_exact(4) {
+                    out.push(i32::from_le_bytes([c[0], c[1], c[2], c[3]]));
+                }
+            }
+            NpyDtype::I64 => {
+                for c in self.data.chunks_exact(8) {
+                    out.push(i64::from_le_bytes(c.try_into().unwrap()) as i32);
+                }
+            }
+            d => bail!("to_i32 on non-integer dtype {d:?}"),
+        }
+        Ok(out)
+    }
+
+    /// Serialize an f32 tensor as NPY v1.0 bytes.
+    pub fn encode_f32(t: &Tensor) -> Vec<u8> {
+        let shape_str = match t.shape().len() {
+            1 => format!("({},)", t.shape()[0]),
+            _ => format!(
+                "({})",
+                t.shape().iter().map(|d| d.to_string()).collect::<Vec<_>>().join(", ")
+            ),
+        };
+        let mut header = format!(
+            "{{'descr': '{}', 'fortran_order': False, 'shape': {}, }}",
+            NpyDtype::F32.descr(),
+            shape_str
+        );
+        // Pad so that (10 + len) % 64 == 0, ending in \n.
+        let total = 10 + header.len() + 1;
+        let pad = (64 - total % 64) % 64;
+        header.push_str(&" ".repeat(pad));
+        header.push('\n');
+        let mut out = Vec::with_capacity(10 + header.len() + t.len() * 4);
+        out.extend_from_slice(b"\x93NUMPY\x01\x00");
+        out.extend_from_slice(&(header.len() as u16).to_le_bytes());
+        out.extend_from_slice(header.as_bytes());
+        for &v in t.data() {
+            out.extend_from_slice(&v.to_le_bytes());
+        }
+        out
+    }
+}
+
+fn extract_raw(header: &str, key: &str) -> Result<String> {
+    let pat = format!("'{key}':");
+    let idx = header.find(&pat).with_context(|| format!("NPY header missing {key}"))?;
+    let rest = &header[idx + pat.len()..];
+    // value runs until the next top-level comma or closing brace
+    let mut depth = 0usize;
+    let mut out = String::new();
+    for c in rest.chars() {
+        match c {
+            '(' | '[' => {
+                depth += 1;
+                out.push(c);
+            }
+            ')' | ']' => {
+                depth = depth.saturating_sub(1);
+                out.push(c);
+            }
+            ',' | '}' if depth == 0 => break,
+            c => out.push(c),
+        }
+    }
+    Ok(out.trim().to_string())
+}
+
+fn extract_str(header: &str, key: &str) -> Result<String> {
+    let raw = extract_raw(header, key)?;
+    Ok(raw.trim_matches(|c| c == '\'' || c == '"').to_string())
+}
+
+fn parse_shape(raw: &str) -> Result<Vec<usize>> {
+    let inner = raw.trim().trim_start_matches('(').trim_end_matches(')');
+    let mut out = Vec::new();
+    for part in inner.split(',') {
+        let p = part.trim();
+        if p.is_empty() {
+            continue;
+        }
+        out.push(p.parse::<usize>().with_context(|| format!("bad shape component {p:?}"))?);
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_f32() {
+        let mut rng = Rng::new(41);
+        for shape in [vec![7usize], vec![3, 5], vec![2, 3, 4]] {
+            let t = Tensor::randn(&shape, 1.0, &mut rng);
+            let bytes = NpyArray::encode_f32(&t);
+            let arr = NpyArray::parse(&bytes).unwrap();
+            assert_eq!(arr.shape, shape);
+            let back = arr.to_tensor().unwrap();
+            assert_eq!(back.data(), t.data());
+        }
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(NpyArray::parse(b"not an npy").is_err());
+        assert!(NpyArray::parse(b"\x93NUMPY\x09\x00\x00\x00").is_err());
+    }
+
+    #[test]
+    fn header_alignment() {
+        let t = Tensor::zeros(&[5]);
+        let bytes = NpyArray::encode_f32(&t);
+        // numpy requires the data section to start at a multiple of 64
+        let header_len = u16::from_le_bytes([bytes[8], bytes[9]]) as usize;
+        assert_eq!((10 + header_len) % 64, 0);
+    }
+}

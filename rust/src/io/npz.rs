@@ -1,0 +1,90 @@
+//! NPZ (zip of NPY members) reading/writing via the `zip` crate.
+//!
+//! `np.savez` produces stored or deflated members named `<key>.npy`; we
+//! accept both and write stored members (fast, and numpy reads them fine).
+
+use std::collections::BTreeMap;
+use std::io::{Read, Write};
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use super::npy::NpyArray;
+use crate::tensor::Tensor;
+
+/// Read every array in an `.npz` file into a name → array map.
+pub fn read_npz(path: &Path) -> Result<BTreeMap<String, NpyArray>> {
+    let file = std::fs::File::open(path)
+        .with_context(|| format!("opening {}", path.display()))?;
+    let mut zip = zip::ZipArchive::new(file)
+        .with_context(|| format!("reading zip {}", path.display()))?;
+    let mut out = BTreeMap::new();
+    for i in 0..zip.len() {
+        let mut entry = zip.by_index(i)?;
+        let name = entry
+            .name()
+            .strip_suffix(".npy")
+            .unwrap_or(entry.name())
+            .to_string();
+        let mut bytes = Vec::with_capacity(entry.size() as usize);
+        entry.read_to_end(&mut bytes)?;
+        let arr = NpyArray::parse(&bytes)
+            .with_context(|| format!("parsing member {name} of {}", path.display()))?;
+        out.insert(name, arr);
+    }
+    Ok(out)
+}
+
+/// Read an `.npz` file, converting every member to an f32 [`Tensor`].
+pub fn read_npz_tensors(path: &Path) -> Result<BTreeMap<String, Tensor>> {
+    read_npz(path)?
+        .into_iter()
+        .map(|(k, v)| Ok((k.clone(), v.to_tensor().with_context(|| k)?)))
+        .collect()
+}
+
+/// Write f32 tensors as an `.npz` file (stored, no compression — these are
+/// local interchange files, and stored members round-trip fastest).
+pub fn write_npz(path: &Path, arrays: &BTreeMap<String, Tensor>) -> Result<()> {
+    let file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    let mut zip = zip::ZipWriter::new(file);
+    let opts = zip::write::FileOptions::default()
+        .compression_method(zip::CompressionMethod::Stored);
+    for (name, t) in arrays {
+        zip.start_file(format!("{name}.npy"), opts)?;
+        zip.write_all(&NpyArray::encode_f32(t))?;
+    }
+    zip.finish()?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip() {
+        let dir = std::env::temp_dir().join("mergemoe_npz_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("rt.npz");
+        let mut rng = Rng::new(51);
+        let mut map = BTreeMap::new();
+        map.insert("alpha".to_string(), Tensor::randn(&[4, 6], 1.0, &mut rng));
+        map.insert("L0.wg".to_string(), Tensor::randn(&[2, 3, 5], 1.0, &mut rng));
+        write_npz(&path, &map).unwrap();
+        let back = read_npz_tensors(&path).unwrap();
+        assert_eq!(back.len(), 2);
+        for (k, t) in &map {
+            assert_eq!(back[k].shape(), t.shape());
+            assert_eq!(back[k].data(), t.data());
+        }
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        assert!(read_npz(Path::new("/nonexistent/x.npz")).is_err());
+    }
+}

@@ -1,0 +1,53 @@
+//! # mergemoe
+//!
+//! Production-quality reproduction of *MergeMoE: Efficient Compression of MoE
+//! Models via Expert Output Merging* (Miao et al., 2025) as a three-layer
+//! Rust + JAX + Pallas system.
+//!
+//! The crate is the **Layer-3 coordinator**: it owns the request path end to
+//! end — loading AOT-compiled HLO artifacts through the PJRT C API
+//! ([`runtime`]), composing models layer by layer so compressed and
+//! uncompressed MoE layers can mix ([`model`], [`runtime::engine`]), running
+//! the paper's compression pipeline back-to-front ([`coordinator::pipeline`],
+//! [`merge`]), evaluating the seven benchmark tasks ([`eval`]), and serving
+//! batched scoring requests through a dynamic batcher
+//! ([`coordinator::batcher`]). Python is build-time only.
+//!
+//! Module map (see DESIGN.md §4 for the full system inventory):
+//!
+//! * [`util`]    — substrates: RNG, JSON, CLI, logging (offline environment,
+//!   so `rand`/`serde`/`clap` are reimplemented here).
+//! * [`tensor`]  — dense f32 tensor library (blocked matmul, softmax, …).
+//! * [`linalg`]  — Cholesky / QR / ridge least squares / pseudoinverse: the
+//!   numerical core of the paper's `T1 = Q P†` solve.
+//! * [`io`]      — NPY/NPZ interchange with the build-time trainer.
+//! * [`config`]  — artifact manifest + model configurations.
+//! * [`model`]   — weights and the native reference forward engine.
+//! * [`moe`]     — routing and usage-frequency statistics (Theorem 1 inputs).
+//! * [`merge`]   — the contribution: MergeMoE + M-SMoE / Average / ZipIt
+//!   baselines and the Table-5 output-merge oracle.
+//! * [`calib`]   — calibration sample capture.
+//! * [`eval`]    — the seven synthetic multiple-choice tasks and the scorer.
+//! * [`runtime`] — PJRT client wrapper, executable cache, shape buckets.
+//! * [`coordinator`] — batcher, scoring server, compression pipeline, metrics.
+//! * [`bench`]   — criterion-style benchmark harness (criterion unavailable).
+//! * [`exp`]     — drivers that regenerate every table and figure.
+
+pub mod bench;
+pub mod calib;
+pub mod config;
+pub mod coordinator;
+pub mod eval;
+pub mod exp;
+pub mod io;
+pub mod linalg;
+pub mod merge;
+pub mod model;
+pub mod moe;
+pub mod runtime;
+pub mod tensor;
+pub mod util;
+
+/// Crate-wide result alias (anyhow is the only error substrate available
+/// offline; library APIs attach context at every fallible boundary).
+pub type Result<T> = anyhow::Result<T>;

@@ -1,0 +1,341 @@
+//! Numerical linear algebra substrate: Cholesky, Householder QR, ridge least
+//! squares and Moore–Penrose pseudoinverse.
+//!
+//! This is the mathematical core of the paper's method: MergeMoE's merged
+//! down-projection is the least-squares solution `W_D' = Ŷ P†` (§4, Eq. 6),
+//! which we compute through the normal equations `(P Pᵀ + λI) X = (Ŷ Pᵀ)ᵀ`
+//! with a Cholesky solve (fast path, λ = ridge jitter for rank-deficient
+//! calibration batches) and through Householder QR as the reference path the
+//! property tests cross-check against.
+
+use anyhow::{bail, Result};
+
+use crate::tensor::{ops, Tensor};
+
+/// Cholesky factorization `A = L Lᵀ` of a symmetric positive-definite matrix.
+/// Returns the lower-triangular factor. Errors if a pivot is non-positive
+/// (caller should add ridge jitter and retry).
+pub fn cholesky(a: &Tensor) -> Result<Tensor> {
+    let n = square_dim(a)?;
+    let mut l = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in 0..=i {
+            let mut s = a.at2(i, j) as f64;
+            for k in 0..j {
+                s -= l.at2(i, k) as f64 * l.at2(j, k) as f64;
+            }
+            if i == j {
+                if s <= 0.0 {
+                    bail!("cholesky: non-positive pivot {s:.3e} at {i}");
+                }
+                *l.at2_mut(i, j) = (s.sqrt()) as f32;
+            } else {
+                *l.at2_mut(i, j) = (s / l.at2(j, j) as f64) as f32;
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Solve `L y = b` (lower-triangular forward substitution) for each column of
+/// `b` (n × m).
+pub fn solve_lower(l: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let n = square_dim(l)?;
+    let m = b.shape()[1];
+    if b.shape()[0] != n {
+        bail!("solve_lower shape mismatch");
+    }
+    let mut y = b.clone();
+    for c in 0..m {
+        for i in 0..n {
+            let mut s = y.at2(i, c) as f64;
+            for k in 0..i {
+                s -= l.at2(i, k) as f64 * y.at2(k, c) as f64;
+            }
+            *y.at2_mut(i, c) = (s / l.at2(i, i) as f64) as f32;
+        }
+    }
+    Ok(y)
+}
+
+/// Solve `Lᵀ x = y` (upper-triangular back substitution) per column.
+pub fn solve_upper_t(l: &Tensor, y: &Tensor) -> Result<Tensor> {
+    let n = square_dim(l)?;
+    let m = y.shape()[1];
+    let mut x = y.clone();
+    for c in 0..m {
+        for i in (0..n).rev() {
+            let mut s = x.at2(i, c) as f64;
+            for k in i + 1..n {
+                s -= l.at2(k, i) as f64 * x.at2(k, c) as f64;
+            }
+            *x.at2_mut(i, c) = (s / l.at2(i, i) as f64) as f32;
+        }
+    }
+    Ok(x)
+}
+
+/// Solve the SPD system `A X = B` via Cholesky with escalating ridge jitter.
+/// This is the production path of the MergeMoE solve: calibration Gram
+/// matrices are often near-singular when the sample count is close to (or
+/// below!) the hidden width — exactly the paper's Fig. 4 regime.
+pub fn solve_spd(a: &Tensor, b: &Tensor, ridge: f64) -> Result<Tensor> {
+    let n = square_dim(a)?;
+    // Scale-invariant jitter: relative to the mean diagonal magnitude.
+    let diag_scale: f64 = (0..n).map(|i| a.at2(i, i).abs() as f64).sum::<f64>() / n as f64;
+    let mut jitter = ridge * diag_scale.max(1e-30);
+    for _attempt in 0..8 {
+        let mut aj = a.clone();
+        for i in 0..n {
+            *aj.at2_mut(i, i) += jitter as f32;
+        }
+        match cholesky(&aj) {
+            Ok(l) => {
+                let y = solve_lower(&l, b)?;
+                return solve_upper_t(&l, &y);
+            }
+            Err(_) => jitter = (jitter * 100.0).max(1e-12 * diag_scale.max(1e-30)),
+        }
+    }
+    bail!("solve_spd: matrix not PD even with jitter (n={n})")
+}
+
+/// Householder QR of `a` (m × n, m ≥ n): returns (Q (m,n) thin, R (n,n)).
+pub fn qr(a: &Tensor) -> Result<(Tensor, Tensor)> {
+    let (m, n) = match a.shape() {
+        [m, n] => (*m, *n),
+        s => bail!("qr expects 2-D, got {s:?}"),
+    };
+    if m < n {
+        bail!("qr expects m >= n, got {m}x{n}");
+    }
+    // Work in f64 for stability.
+    let mut r: Vec<f64> = a.data().iter().map(|&x| x as f64).collect();
+    let mut vs: Vec<Vec<f64>> = Vec::with_capacity(n);
+    for k in 0..n {
+        let mut norm = 0.0;
+        for i in k..m {
+            norm += r[i * n + k] * r[i * n + k];
+        }
+        let norm = norm.sqrt();
+        let mut v = vec![0.0; m];
+        let akk = r[k * n + k];
+        let alpha = if akk >= 0.0 { -norm } else { norm };
+        if norm < 1e-300 {
+            vs.push(v);
+            continue;
+        }
+        for i in k..m {
+            v[i] = r[i * n + k];
+        }
+        v[k] -= alpha;
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            vs.push(vec![0.0; m]);
+            continue;
+        }
+        // Apply H = I - 2vvᵀ/‖v‖² to R.
+        for j in k..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * r[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                r[i * n + j] -= f * v[i];
+            }
+        }
+        vs.push(v);
+    }
+    // Build thin Q by applying the reflectors to the first n columns of I.
+    let mut q = vec![0.0f64; m * n];
+    for j in 0..n {
+        q[j * n + j] = 1.0;
+    }
+    for k in (0..n).rev() {
+        let v = &vs[k];
+        let vnorm2: f64 = v.iter().map(|x| x * x).sum();
+        if vnorm2 < 1e-300 {
+            continue;
+        }
+        for j in 0..n {
+            let mut dot = 0.0;
+            for i in k..m {
+                dot += v[i] * q[i * n + j];
+            }
+            let f = 2.0 * dot / vnorm2;
+            for i in k..m {
+                q[i * n + j] -= f * v[i];
+            }
+        }
+    }
+    let qt = Tensor::from_vec(&[m, n], q.iter().map(|&x| x as f32).collect())?;
+    let mut rt = Tensor::zeros(&[n, n]);
+    for i in 0..n {
+        for j in i..n {
+            *rt.at2_mut(i, j) = r[i * n + j] as f32;
+        }
+    }
+    Ok((qt, rt))
+}
+
+/// Least squares `argmin_X ‖X A - B‖_F` for row-space problems of the form
+/// used by MergeMoE: `A` is (k × s) with s ≥ k samples, `B` is (d × s).
+/// Solved through the normal equations `X (A Aᵀ) = B Aᵀ`.
+pub fn lstsq_rows(a: &Tensor, b: &Tensor, ridge: f64) -> Result<Tensor> {
+    let aat = ops::matmul_bt(a, a)?; // (k,k)
+    let bat = ops::matmul_bt(b, a)?; // (d,k)
+    // Solve X aat = bat  ⇔  aatᵀ Xᵀ = batᵀ; aat symmetric.
+    let xt = solve_spd(&aat, &ops::transpose(&bat)?, ridge)?;
+    ops::transpose(&xt)
+}
+
+/// Same solve, but starting from precomputed Gram blocks
+/// `aat = A Aᵀ` and `bat = B Aᵀ` (the streaming path fed by the
+/// `gram_*` PJRT artifact / pallas kernel).
+pub fn lstsq_from_gram(aat: &Tensor, bat: &Tensor, ridge: f64) -> Result<Tensor> {
+    let xt = solve_spd(aat, &ops::transpose(bat)?, ridge)?;
+    ops::transpose(&xt)
+}
+
+/// Moore–Penrose pseudoinverse of a (k × s) matrix with s ≥ k (full-ish row
+/// rank), via `A† = Aᵀ (A Aᵀ + λI)⁻¹`. Exposed mainly for tests and for the
+/// literal Eq. 6 formulation; production code uses [`lstsq_rows`] which never
+/// materializes `A†`.
+pub fn pinv_rows(a: &Tensor, ridge: f64) -> Result<Tensor> {
+    let k = a.shape()[0];
+    let aat = ops::matmul_bt(a, a)?;
+    let inv = solve_spd(&aat, &Tensor::eye(k), ridge)?;
+    ops::matmul(&ops::transpose(a)?, &inv)
+}
+
+fn square_dim(a: &Tensor) -> Result<usize> {
+    match a.shape() {
+        [n, m] if n == m => Ok(*n),
+        s => bail!("expected square matrix, got {s:?}"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn spd(n: usize, rng: &mut Rng) -> Tensor {
+        let a = Tensor::randn(&[n, n], 1.0, rng);
+        let mut m = ops::matmul_bt(&a, &a).unwrap();
+        for i in 0..n {
+            *m.at2_mut(i, i) += 0.5;
+        }
+        m
+    }
+
+    #[test]
+    fn cholesky_reconstructs() {
+        let mut rng = Rng::new(31);
+        for _ in 0..10 {
+            let n = rng.range(1, 24) as usize;
+            let a = spd(n, &mut rng);
+            let l = cholesky(&a).unwrap();
+            let llt = ops::matmul_bt(&l, &l).unwrap();
+            assert!(llt.rel_err(&a) < 1e-4, "n={n}");
+        }
+    }
+
+    #[test]
+    fn cholesky_rejects_indefinite() {
+        let a = Tensor::from_vec(&[2, 2], vec![1.0, 2.0, 2.0, 1.0]).unwrap();
+        assert!(cholesky(&a).is_err());
+    }
+
+    #[test]
+    fn spd_solve_accuracy() {
+        let mut rng = Rng::new(32);
+        for _ in 0..10 {
+            let n = rng.range(2, 32) as usize;
+            let a = spd(n, &mut rng);
+            let x_true = Tensor::randn(&[n, 3], 1.0, &mut rng);
+            let b = ops::matmul(&a, &x_true).unwrap();
+            let x = solve_spd(&a, &b, 0.0).unwrap();
+            assert!(x.rel_err(&x_true) < 1e-3, "n={n} err={}", x.rel_err(&x_true));
+        }
+    }
+
+    #[test]
+    fn solve_spd_survives_singular_with_ridge() {
+        // Rank-1 Gram matrix — the "too few calibration samples" regime.
+        let v = Tensor::from_vec(&[3, 1], vec![1.0, 2.0, 3.0]).unwrap();
+        let a = ops::matmul_bt(&v, &v).unwrap();
+        let b = Tensor::eye(3);
+        let x = solve_spd(&a, &b, 1e-6).unwrap();
+        assert_eq!(x.shape(), &[3, 3]);
+        assert!(x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn qr_orthogonal_and_reconstructs() {
+        let mut rng = Rng::new(33);
+        for _ in 0..8 {
+            let m = rng.range(4, 40) as usize;
+            let n = rng.range(1, m as i64).max(1) as usize;
+            let a = Tensor::randn(&[m, n], 1.0, &mut rng);
+            let (q, r) = qr(&a).unwrap();
+            let qtq = ops::matmul_at(&q, &q).unwrap();
+            assert!(qtq.rel_err(&Tensor::eye(n)) < 1e-4, "QᵀQ≠I m={m} n={n}");
+            let qr_ = ops::matmul(&q, &r).unwrap();
+            assert!(qr_.rel_err(&a) < 1e-4, "QR≠A m={m} n={n}");
+        }
+    }
+
+    #[test]
+    fn lstsq_recovers_planted_solution() {
+        let mut rng = Rng::new(34);
+        let k = 16;
+        let s = 200;
+        let d = 8;
+        let a = Tensor::randn(&[k, s], 1.0, &mut rng);
+        let x_true = Tensor::randn(&[d, k], 1.0, &mut rng);
+        let b = ops::matmul(&x_true, &a).unwrap();
+        let x = lstsq_rows(&a, &b, 1e-10).unwrap();
+        assert!(x.rel_err(&x_true) < 1e-3, "err {}", x.rel_err(&x_true));
+    }
+
+    #[test]
+    fn lstsq_is_projection_optimal() {
+        // Residual of lstsq solution must not exceed residual of random
+        // perturbations of it (property: least-squares optimality).
+        let mut rng = Rng::new(35);
+        let a = Tensor::randn(&[8, 64], 1.0, &mut rng);
+        let b = Tensor::randn(&[4, 64], 1.0, &mut rng); // not in row space
+        let x = lstsq_rows(&a, &b, 1e-10).unwrap();
+        let res0 = ops::matmul(&x, &a).unwrap().sub(&b).unwrap().frob_norm();
+        for t in 0..10 {
+            let noise = Tensor::randn(&[4, 8], 0.05, &mut Rng::new(100 + t));
+            let xp = x.add(&noise).unwrap();
+            let res = ops::matmul(&xp, &a).unwrap().sub(&b).unwrap().frob_norm();
+            assert!(res >= res0 - 1e-6, "perturbation improved residual");
+        }
+    }
+
+    #[test]
+    fn lstsq_from_gram_matches_direct() {
+        let mut rng = Rng::new(36);
+        let a = Tensor::randn(&[12, 96], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 96], 1.0, &mut rng);
+        let direct = lstsq_rows(&a, &b, 1e-8).unwrap();
+        let aat = ops::matmul_bt(&a, &a).unwrap();
+        let bat = ops::matmul_bt(&b, &a).unwrap();
+        let from_gram = lstsq_from_gram(&aat, &bat, 1e-8).unwrap();
+        assert!(direct.rel_err(&from_gram) < 1e-4);
+    }
+
+    #[test]
+    fn pinv_satisfies_moore_penrose_identity() {
+        let mut rng = Rng::new(37);
+        let a = Tensor::randn(&[6, 40], 1.0, &mut rng);
+        let p = pinv_rows(&a, 1e-10).unwrap(); // (40, 6)
+        // A A† A ≈ A
+        let aa = ops::matmul(&ops::matmul(&a, &p).unwrap(), &a).unwrap();
+        assert!(aa.rel_err(&a) < 1e-3);
+    }
+}

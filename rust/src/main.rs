@@ -1,0 +1,258 @@
+//! `mergemoe` — CLI entrypoint of the L3 coordinator.
+//!
+//! Subcommands:
+//!   repro     regenerate a paper table/figure      (mergemoe repro --exp table2)
+//!   compress  run the compression pipeline         (mergemoe compress --model beta --m 6)
+//!   eval      evaluate a model on the task suite   (mergemoe eval --model beta)
+//!   serve     run the batched scoring server demo  (mergemoe serve --model beta)
+//!   stats     dump expert usage frequencies        (mergemoe stats --model beta)
+//!   selfcheck cross-check native vs pjrt engines   (mergemoe selfcheck --model beta)
+//!
+//! Global flags: --artifacts DIR (default ./artifacts), --engine native|pjrt
+//! (default pjrt), --items N, --seed N.
+
+use std::path::PathBuf;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use mergemoe::calib;
+use mergemoe::coordinator::{compress, CompressSpec, ScoringServer, ServerConfig};
+use mergemoe::eval::tasks::{Task, ALL_TASKS};
+use mergemoe::exp::{self, Ctx, EngineSel};
+use mergemoe::merge::Algorithm;
+use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+use mergemoe::util::cli::Args;
+use mergemoe::util::rng::Rng;
+use mergemoe::{config, info};
+
+fn main() {
+    mergemoe::util::logging::init();
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn usage() -> &'static str {
+    "usage: mergemoe <repro|compress|eval|serve|stats|selfcheck> [flags]\n\
+     common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
+     repro:     --exp table1..table5|fig2a|fig2b|fig3|fig4|fig5|loss|all\n\
+     compress:  --model NAME --layers 2,3 --m M --alg mergemoe|msmoe|average|zipit|oracle\n\
+                [--calib-seqs N] [--calib-tasks t1,t2] [--out FILE.npz]\n\
+     eval:      --model NAME [--compressed FILE.npz] [--tasks t1,t2]\n\
+     serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
+     stats:     --model NAME [--calib-seqs N]\n\
+     selfcheck: --model NAME"
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env(&["monolith", "pjrt-gram", "help"])?;
+    if args.has("help") || args.subcommand.is_none() {
+        println!("{}", usage());
+        return Ok(());
+    }
+    let artifacts = PathBuf::from(args.get_or(
+        "artifacts",
+        config::artifacts_dir().to_str().unwrap_or("artifacts"),
+    ));
+    let engine = EngineSel::parse(args.get_or("engine", "pjrt"))?;
+    let mut ctx = Ctx::new(artifacts.clone(), engine)?;
+    ctx.items = args.usize("items", ctx.items)?;
+    ctx.batch = args.usize("batch", ctx.batch)?;
+    ctx.seed = args.usize("seed", ctx.seed as usize)? as u64;
+    ctx.pjrt_gram = args.has("pjrt-gram");
+
+    match args.subcommand.as_deref().unwrap() {
+        "repro" => {
+            let exp = args.require("exp")?;
+            exp::run(&ctx, exp)
+        }
+        "compress" => cmd_compress(&ctx, &args),
+        "eval" => cmd_eval(&mut ctx, &args),
+        "serve" => cmd_serve(&ctx, &args),
+        "stats" => cmd_stats(&ctx, &args),
+        "selfcheck" => cmd_selfcheck(&ctx, &args),
+        other => bail!("unknown subcommand {other:?}\n{}", usage()),
+    }
+}
+
+fn parse_layers(args: &Args, default: &[usize]) -> Result<Vec<usize>> {
+    match args.get("layers") {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse::<usize>().context("bad --layers"))
+            .collect(),
+    }
+}
+
+fn parse_tasks(args: &Args, key: &str) -> Result<Option<Vec<Task>>> {
+    match args.get(key) {
+        None => Ok(None),
+        Some(v) => {
+            let mut out = Vec::new();
+            for name in v.split(',') {
+                out.push(
+                    Task::from_name(name.trim())
+                        .with_context(|| format!("unknown task {name:?}"))?,
+                );
+            }
+            Ok(Some(out))
+        }
+    }
+}
+
+fn cmd_compress(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model_name = args.require("model")?;
+    let model = ctx.load_model(model_name)?;
+    let last = model.cfg.n_layers - 1;
+    let layers = parse_layers(args, &[last.saturating_sub(1), last])?;
+    let m = args.usize("m", model.cfg.merge_targets.first().copied().unwrap_or(1))?;
+    let alg = Algorithm::from_name(args.get_or("alg", "mergemoe"))
+        .context("bad --alg")?;
+    let mut spec = CompressSpec::new(layers, m, alg);
+    spec.n_calib_seqs = args.usize("calib-seqs", 64)?;
+    spec.calib_tasks = parse_tasks(args, "calib-tasks")?;
+    spec.seed = ctx.seed;
+    let mut gram = ctx.make_gram(model_name)?;
+    info!("compressing {model_name} layers {:?} -> {m} experts via {}", spec.layers, alg.name());
+    let (merged, rep) = compress(&model, &spec, &mut gram.as_backend())?;
+    println!(
+        "compressed {model_name}: {} -> {} params ({:.1}% of original), merge {:.2}s (+calib {:.2}s)",
+        rep.params_before, rep.params_after, 100.0 * rep.compression_ratio(),
+        rep.merge_seconds, rep.calib_seconds,
+    );
+    for l in &rep.layers {
+        println!(
+            "  layer {:>2}: {} -> {} experts, output rel-err {:.4} ({:.3}s)",
+            l.layer, l.n_before, l.n_after, l.output_rel_err, l.merge_seconds
+        );
+    }
+    if let Some(out) = args.get("out") {
+        merged.save(&PathBuf::from(out))?;
+        println!("saved compressed weights to {out} (note: routing maps are \
+                  structural — rerun compression or keep the plan to redeploy)");
+    }
+    Ok(())
+}
+
+fn cmd_eval(ctx: &mut Ctx, args: &Args) -> Result<()> {
+    let model_name = args.require("model")?;
+    let model = ctx.load_model(model_name)?;
+    let tasks = parse_tasks(args, "tasks")?
+        .unwrap_or_else(|| ALL_TASKS.to_vec());
+    let mut engine = ctx.make_engine()?;
+    let t0 = std::time::Instant::now();
+    let accs = ctx.eval_suite(engine.as_mut(), &model, &tasks)?;
+    for (name, acc) in &accs {
+        println!("{name:<8} {:>6.2}%  ({}/{})", acc.percent(), acc.correct, acc.total);
+    }
+    let mean: f64 = accs.values().map(|a| a.percent()).sum::<f64>() / accs.len() as f64;
+    println!("mean     {mean:>6.2}%   [{} items/task, engine={}, {:.1}s]",
+             ctx.items, engine.name(), t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model_name = args.require("model")?.to_string();
+    let model = ctx.load_model(&model_name)?;
+    let n_requests = args.usize("requests", 200)?;
+    let n_clients = args.usize("clients", 4)?;
+    let cfg = ServerConfig {
+        max_batch: args.usize("max-batch", 32)?,
+        max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
+        seq_len: ctx.manifest.seq_len,
+    };
+    let sel = ctx.engine;
+    let artifacts = ctx.artifacts.clone();
+    let server = ScoringServer::start(model, cfg, move || -> Result<Box<dyn Engine>> {
+        match sel {
+            EngineSel::Native => Ok(Box::new(NativeEngine)),
+            EngineSel::Pjrt => {
+                let manifest = config::Manifest::load(&artifacts)?;
+                Ok(Box::new(PjrtEngine::new(manifest)?))
+            }
+        }
+    });
+    info!("serving {n_requests} requests from {n_clients} clients");
+    let handle = server.handle();
+    let mut joins = Vec::new();
+    for c in 0..n_clients {
+        let h = handle.clone();
+        let per = n_requests / n_clients;
+        joins.push(std::thread::spawn(move || -> Result<usize> {
+            let mut rng = Rng::new(7000 + c as u64);
+            let mut correct = 0;
+            for _ in 0..per {
+                let t = *rng.pick(&ALL_TASKS);
+                let item = mergemoe::eval::tasks::gen_items(t, 1, rng.next_u64())
+                    .pop()
+                    .unwrap();
+                let s0 = h.score(&item.prompt, &item.options[0])?;
+                let s1 = h.score(&item.prompt, &item.options[1])?;
+                let pick = if s0 >= s1 { 0 } else { 1 };
+                if pick == item.correct {
+                    correct += 1;
+                }
+            }
+            Ok(correct)
+        }));
+    }
+    let mut correct = 0;
+    for j in joins {
+        correct += j.join().unwrap()?;
+    }
+    drop(handle);
+    let m = server.shutdown();
+    println!("served: {}", m.report());
+    println!(
+        "online accuracy {:.1}% over {} items",
+        100.0 * correct as f64 / (n_requests / n_clients * n_clients) as f64,
+        n_requests / n_clients * n_clients
+    );
+    Ok(())
+}
+
+fn cmd_stats(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model_name = args.require("model")?;
+    let model = ctx.load_model(model_name)?;
+    let n_seqs = args.usize("calib-seqs", 32)?;
+    let tokens = calib::sample_sequences(None, n_seqs, ctx.manifest.seq_len, ctx.seed);
+    let data = calib::capture(&model, &tokens, n_seqs, ctx.manifest.seq_len)?;
+    for (li, l) in data.layers.iter().enumerate() {
+        let freq = l.stats.frequencies();
+        let order = l.stats.by_usage_desc();
+        let top: Vec<String> = order
+            .iter()
+            .take(6)
+            .map(|&e| format!("E{e}:{:.1}%", 100.0 * freq[e]))
+            .collect();
+        println!("layer {li}: top experts {}", top.join("  "));
+    }
+    Ok(())
+}
+
+fn cmd_selfcheck(ctx: &Ctx, args: &Args) -> Result<()> {
+    let model_name = args.require("model")?;
+    let model = ctx.load_model(model_name)?;
+    let s = ctx.manifest.seq_len;
+    let b = 4;
+    let tokens = calib::sample_sequences(None, b, s, 42);
+    let native = NativeEngine.logits(&model, &tokens, b, s)?;
+    let manifest = config::Manifest::load(&ctx.artifacts)?;
+    let mut pjrt = PjrtEngine::new(manifest)?;
+    let layered = pjrt.logits(&model, &tokens, b, s)?;
+    let rel = layered.rel_err(&native);
+    println!("native vs pjrt(per-layer): rel err {rel:.2e}");
+    let mono = pjrt.logits_bucketed(&model, &tokens, b, s, true);
+    match mono {
+        Ok(m) => println!("native vs pjrt(monolith):  rel err {:.2e}", m.rel_err(&native)),
+        Err(e) => println!("monolith unavailable for {model_name}: {e:#}"),
+    }
+    if rel > 1e-3 {
+        bail!("selfcheck FAILED: engines disagree (rel err {rel})");
+    }
+    println!("selfcheck OK");
+    Ok(())
+}

@@ -1,0 +1,89 @@
+//! Average baseline (Choshen et al., 2022, adapted to expert merging as in
+//! the M-SMoE paper's comparison): merged expert = *uniform* mean of the
+//! member experts' weight matrices.
+
+use anyhow::Result;
+
+use super::plan::MergePlan;
+use crate::model::{Expert, MoeLayer};
+use crate::tensor::Tensor;
+
+/// Weighted parameter average of the cluster members (shared by the Average
+/// and M-SMoE baselines — they differ only in the weights).
+pub fn weighted_param_merge(moe: &MoeLayer, plan: &MergePlan, weights: &[f64]) -> Vec<Expert> {
+    plan.clusters
+        .iter()
+        .map(|members| {
+            let proto = &moe.experts[members[0]];
+            let mut wg = Tensor::zeros(proto.wg.shape());
+            let mut wu = Tensor::zeros(proto.wu.shape());
+            let mut wd = Tensor::zeros(proto.wd.shape());
+            for &j in members {
+                let w = weights[j] as f32;
+                wg.axpy(w, &moe.experts[j].wg).unwrap();
+                wu.axpy(w, &moe.experts[j].wu).unwrap();
+                wd.axpy(w, &moe.experts[j].wd).unwrap();
+            }
+            Expert { wg, wu, wd }
+        })
+        .collect()
+}
+
+pub fn merge(moe: &MoeLayer, plan: &MergePlan) -> Result<MoeLayer> {
+    // uniform weights within each cluster
+    let mut w = vec![0.0f64; plan.n];
+    for members in &plan.clusters {
+        for &j in members {
+            w[j] = 1.0 / members.len() as f64;
+        }
+    }
+    Ok(MoeLayer {
+        router: moe.router.clone(),
+        experts: weighted_param_merge(moe, plan, &w),
+        shared: moe.shared.clone(),
+        top_k: moe.top_k,
+        map: Some(plan.matrix_a()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn uniform_average_of_identical_experts_is_identity() {
+        let model = tiny_model(4, 2, false, 20);
+        let mut moe = model.layers[0].moe.clone();
+        moe.experts[1] = moe.experts[0].clone();
+        moe.experts[3] = moe.experts[2].clone();
+        let plan = MergePlan {
+            n: 4,
+            m: 2,
+            clusters: vec![vec![0, 1], vec![2, 3]],
+            assign: vec![0, 0, 1, 1],
+            weights: vec![0.5; 4],
+        };
+        let merged = merge(&moe, &plan).unwrap();
+        assert_eq!(merged.n_experts(), 2);
+        assert!(merged.experts[0].wg.rel_err(&moe.experts[0].wg) < 1e-6);
+        assert!(merged.experts[1].wd.rel_err(&moe.experts[2].wd) < 1e-6);
+    }
+
+    #[test]
+    fn average_midpoint() {
+        let model = tiny_model(2, 1, false, 21);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan {
+            n: 2,
+            m: 1,
+            clusters: vec![vec![0, 1]],
+            assign: vec![0, 0],
+            // plan weights are frequencies (ignored by Average)
+            weights: vec![0.9, 0.1],
+        };
+        let merged = merge(moe, &plan).unwrap();
+        let mid = moe.experts[0].wg.add(&moe.experts[1].wg).unwrap().scale(0.5);
+        assert!(merged.experts[0].wg.rel_err(&mid) < 1e-6);
+    }
+}

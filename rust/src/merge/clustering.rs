@@ -1,0 +1,158 @@
+//! Clustering (paper §4 step 1): the M most-used experts are the cluster
+//! centers; every remaining expert joins the center with the highest cosine
+//! similarity of its concatenated `[W_U; W_G]` matrix. Intra-cluster weights
+//! are the relative usage frequencies (Theorem 1).
+
+use anyhow::{bail, Result};
+
+use super::plan::MergePlan;
+use crate::model::MoeLayer;
+use crate::moe::UsageStats;
+
+/// Cosine similarity of two experts' `[W_U; W_G]` concatenations (flattened;
+/// the metric the paper uses so that "weighted average is performed among
+/// experts with similar W_U and W_G").
+pub fn expert_similarity(moe: &MoeLayer, a: usize, b: usize) -> f64 {
+    let ea = &moe.experts[a];
+    let eb = &moe.experts[b];
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in ea
+        .wu
+        .data()
+        .iter()
+        .chain(ea.wg.data())
+        .zip(eb.wu.data().iter().chain(eb.wg.data()))
+    {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-30)
+}
+
+/// Build the merge plan for reducing `moe` to `m` experts.
+pub fn build_plan(moe: &MoeLayer, stats: &UsageStats, m: usize) -> Result<MergePlan> {
+    let n = moe.n_experts();
+    if m == 0 || m > n {
+        bail!("cannot merge {n} experts into {m}");
+    }
+    if stats.n_experts() != n {
+        bail!("usage stats cover {} experts, layer has {n}", stats.n_experts());
+    }
+    // centers: top-M usage
+    let order = stats.by_usage_desc();
+    let centers: Vec<usize> = order[..m].to_vec();
+    let mut assign = vec![usize::MAX; n];
+    let mut clusters: Vec<Vec<usize>> = vec![Vec::new(); m];
+    for (ci, &c) in centers.iter().enumerate() {
+        assign[c] = ci;
+        clusters[ci].push(c);
+    }
+    // assign the rest by similarity to centers
+    for &j in &order[m..] {
+        let mut best = 0usize;
+        let mut best_sim = f64::NEG_INFINITY;
+        for (ci, &c) in centers.iter().enumerate() {
+            let sim = expert_similarity(moe, j, c);
+            if sim > best_sim {
+                best_sim = sim;
+                best = ci;
+            }
+        }
+        assign[j] = best;
+        clusters[best].push(j);
+    }
+    for members in &mut clusters {
+        members.sort();
+    }
+    // Theorem-1 weights: relative usage frequency inside each cluster
+    let freq = stats.frequencies();
+    let mut weights = vec![0.0f64; n];
+    for members in &clusters {
+        let total: f64 = members.iter().map(|&j| freq[j]).sum();
+        for &j in members {
+            weights[j] = freq[j] / total;
+        }
+    }
+    let plan = MergePlan { n, m, clusters, assign, weights };
+    plan.validate(n)?;
+    Ok(plan)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    fn stats_with_counts(counts: &[f64]) -> UsageStats {
+        let mut s = UsageStats::new(counts.len());
+        let mass: Vec<f64> = counts.iter().map(|c| c * 0.5).collect();
+        s.add(counts, &mass, counts.iter().sum::<f64>() as u64);
+        s
+    }
+
+    #[test]
+    fn centers_are_top_usage() {
+        let model = tiny_model(6, 2, false, 10);
+        let moe = &model.layers[0].moe;
+        let stats = stats_with_counts(&[5.0, 50.0, 1.0, 40.0, 2.0, 30.0]);
+        let plan = build_plan(moe, &stats, 3).unwrap();
+        // experts 1, 3, 5 are the centers — each must be in its own cluster
+        let c1 = plan.assign[1];
+        let c3 = plan.assign[3];
+        let c5 = plan.assign[5];
+        assert_ne!(c1, c3);
+        assert_ne!(c3, c5);
+        assert_ne!(c1, c5);
+    }
+
+    #[test]
+    fn self_similarity_is_max() {
+        let model = tiny_model(5, 2, false, 11);
+        let moe = &model.layers[0].moe;
+        for i in 0..5 {
+            assert!((expert_similarity(moe, i, i) - 1.0).abs() < 1e-6);
+            for j in 0..5 {
+                if i != j {
+                    assert!(expert_similarity(moe, i, j) < 0.999);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn identical_experts_cluster_together() {
+        let model = tiny_model(6, 2, false, 12);
+        let mut moe = model.layers[0].moe.clone();
+        // make expert 4 a copy of expert 0 (a center)
+        moe.experts[4] = moe.experts[0].clone();
+        let stats = stats_with_counts(&[50.0, 40.0, 30.0, 2.0, 1.0, 2.0]);
+        let plan = build_plan(&moe, &stats, 3).unwrap();
+        assert_eq!(plan.assign[4], plan.assign[0], "copy must join its twin");
+    }
+
+    #[test]
+    fn weights_are_relative_frequencies() {
+        let model = tiny_model(4, 2, false, 13);
+        let moe = &model.layers[0].moe;
+        let stats = stats_with_counts(&[30.0, 10.0, 5.0, 5.0]);
+        let plan = build_plan(moe, &stats, 2).unwrap();
+        for members in &plan.clusters {
+            let total: f64 = members.iter().map(|&j| stats.counts[j]).sum();
+            for &j in members {
+                let expect = stats.counts[j] / total;
+                assert!((plan.weights[j] - expect).abs() < 1e-6);
+            }
+        }
+    }
+
+    #[test]
+    fn rejects_bad_m() {
+        let model = tiny_model(4, 2, false, 14);
+        let stats = stats_with_counts(&[1.0; 4]);
+        assert!(build_plan(&model.layers[0].moe, &stats, 0).is_err());
+        assert!(build_plan(&model.layers[0].moe, &stats, 5).is_err());
+    }
+}

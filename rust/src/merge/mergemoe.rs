@@ -1,0 +1,213 @@
+//! **MergeMoE** — the paper's method (§4).
+//!
+//! For each cluster C with frequency weights `w_j` (Theorem 1):
+//!
+//! 1. `T2 W'_G = Σ_j w_j W_Gj` and `T3 W'_U = Σ_j w_j W_Uj` — the merged
+//!    gate/up projections are the frequency-weighted averages (the paper
+//!    fixes T2, T3 to Eq. 4 because the non-linearity precludes a closed
+//!    form for them).
+//! 2. `T1` is solved by least squares on calibration activations X̂ (Eq. 5):
+//!    `T1 P = Q` with `P = σ(T2 W'_G X̂) ⊙ (T3 W'_U X̂)` (f × S) and
+//!    `Q = σ(W'_G X̂) ⊙ (W'_U X̂)` (N_c·f × S), giving `T1 = Q P†` (Eq. 6).
+//! 3. The merged down-projection is `W'_D T1` where
+//!    `W'_D = [B_1i W_D1, …]`. We use the identity
+//!    `W'_D Q = Σ_j w_j W_Dj Q_j = Σ_j w_j E_j(X̂) = Ŷ` — the target merged
+//!    *output* — so the final weight is obtained directly as
+//!    `W_D' = Ŷ P† = (Ŷ Pᵀ)(P Pᵀ + λI)⁻¹` without ever materializing the
+//!    (N_c·f × f) matrix `T1`. The Gram blocks stream through a
+//!    [`GramBackend`] in fixed-size column chunks (the L1 pallas kernel on
+//!    the PJRT path).
+
+use anyhow::Result;
+
+use super::plan::MergePlan;
+use super::GramBackend;
+use crate::linalg;
+use crate::model::native::{expert_forward, expert_inner};
+use crate::model::{Expert, MoeLayer};
+use crate::tensor::{ops, Tensor};
+
+/// Column-chunk size for streaming the Gram accumulation (matches the
+/// `gram_*` artifact buckets; the backend may further split internally).
+pub const GRAM_CHUNK: usize = 1024;
+
+/// Merge one cluster: returns the merged expert.
+fn merge_cluster(
+    moe: &MoeLayer,
+    members: &[usize],
+    weights: &[f64],
+    x: &Tensor, // calibration inputs (T, d)
+    gram: &mut dyn GramBackend,
+    ridge: f64,
+) -> Result<Expert> {
+    // (1) frequency-weighted gate/up projections
+    let proto = &moe.experts[members[0]];
+    let mut wg = Tensor::zeros(proto.wg.shape());
+    let mut wu = Tensor::zeros(proto.wu.shape());
+    for &j in members {
+        wg.axpy(weights[j] as f32, &moe.experts[j].wg)?;
+        wu.axpy(weights[j] as f32, &moe.experts[j].wu)?;
+    }
+    if members.len() == 1 {
+        // singleton cluster: exact, no solve needed
+        return Ok(Expert { wg, wu, wd: moe.experts[members[0]].wd.clone() });
+    }
+    let avg = Expert { wg, wu, wd: proto.wd.clone() }; // wd unused below
+
+    // (2)+(3): stream P (f,S) and Ŷ (d,S) in chunks, accumulate Gram blocks.
+    let t = x.shape()[0];
+    let f = avg.wg.shape()[0];
+    let d = x.shape()[1];
+    let mut ppt = Tensor::zeros(&[f, f]);
+    let mut ypt = Tensor::zeros(&[d, f]);
+    let mut lo = 0;
+    while lo < t {
+        let hi = (lo + GRAM_CHUNK).min(t);
+        let xs = x.rows_slice(lo, hi);
+        // P chunk: inner activations of the averaged gate/up, transposed
+        let p_rows = expert_inner(&avg, &xs)?; // (chunk, f)
+        let p = ops::transpose(&p_rows)?; // (f, chunk)
+        // Ŷ chunk: frequency-weighted member outputs, transposed
+        let mut yhat_rows = Tensor::zeros(&[hi - lo, d]);
+        for &j in members {
+            let yj = expert_forward(&moe.experts[j], &xs)?;
+            yhat_rows.axpy(weights[j] as f32, &yj)?;
+        }
+        let y = ops::transpose(&yhat_rows)?; // (d, chunk)
+        let (pp, yp) = gram.gram(&p, &y)?;
+        ppt = ppt.add(&pp)?;
+        ypt = ypt.add(&yp)?;
+        lo = hi;
+    }
+    // ridge-regularized normal-equation solve: W_D' (f columns)
+    let wd = linalg::lstsq_from_gram(&ppt, &ypt, ridge)?; // (d, f)
+    Ok(Expert { wg: avg.wg, wu: avg.wu, wd })
+}
+
+pub fn merge(
+    moe: &MoeLayer,
+    plan: &MergePlan,
+    x: &Tensor,
+    gram: &mut dyn GramBackend,
+    ridge: f64,
+) -> Result<MoeLayer> {
+    let experts = plan
+        .clusters
+        .iter()
+        .map(|members| merge_cluster(moe, members, &plan.weights, x, gram, ridge))
+        .collect::<Result<Vec<_>>>()?;
+    Ok(MoeLayer {
+        router: moe.router.clone(),
+        experts,
+        shared: moe.shared.clone(),
+        top_k: moe.top_k,
+        map: Some(plan.matrix_a()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::NativeGram;
+    use crate::model::testutil::tiny_model;
+    use crate::util::rng::Rng;
+
+    fn two_cluster_plan() -> MergePlan {
+        MergePlan {
+            n: 4,
+            m: 2,
+            clusters: vec![vec![0, 1], vec![2, 3]],
+            assign: vec![0, 0, 1, 1],
+            weights: vec![0.6, 0.4, 0.3, 0.7],
+        }
+    }
+
+    #[test]
+    fn merged_expert_approximates_weighted_output() {
+        let model = tiny_model(4, 2, false, 30);
+        let moe = &model.layers[0].moe;
+        let mut rng = Rng::new(31);
+        let x = Tensor::randn(&[512, 16], 1.0, &mut rng);
+        let plan = two_cluster_plan();
+        let merged = merge(moe, &plan, &x, &mut NativeGram, 1e-8).unwrap();
+
+        // held-out batch: merged expert vs the exact weighted output target
+        let xt = Tensor::randn(&[128, 16], 1.0, &mut Rng::new(32));
+        for (ci, members) in plan.clusters.iter().enumerate() {
+            let got = expert_forward(&merged.experts[ci], &xt).unwrap();
+            let mut want = Tensor::zeros(&[128, 16]);
+            for &j in members {
+                let yj = expert_forward(&moe.experts[j], &xt).unwrap();
+                want.axpy(plan.weights[j] as f32, &yj).unwrap();
+            }
+            let rel = got.sub(&want).unwrap().frob_norm() / (want.frob_norm() + 1e-12);
+            // approximation, not exact — but must capture most of the signal
+            assert!(rel < 0.9, "cluster {ci}: rel err {rel}");
+        }
+    }
+
+    #[test]
+    fn wd_solve_beats_msmoe_wd_on_calibration() {
+        // Optimality of the lstsq W_D against the fixed-T1 (M-SMoE) W_D,
+        // measured on the merged expert's own output error.
+        let model = tiny_model(4, 2, false, 33);
+        let moe = &model.layers[0].moe;
+        let mut rng = Rng::new(34);
+        let x = Tensor::randn(&[512, 16], 1.0, &mut rng);
+        let plan = two_cluster_plan();
+        let mm = merge(moe, &plan, &x, &mut NativeGram, 1e-10).unwrap();
+        let ms = crate::merge::msmoe::merge(moe, &plan).unwrap();
+        for (ci, members) in plan.clusters.iter().enumerate() {
+            let mut want = Tensor::zeros(&[512, 16]);
+            for &j in members {
+                let yj = expert_forward(&moe.experts[j], &x).unwrap();
+                want.axpy(plan.weights[j] as f32, &yj).unwrap();
+            }
+            let e_mm = expert_forward(&mm.experts[ci], &x)
+                .unwrap()
+                .sub(&want)
+                .unwrap()
+                .frob_norm();
+            let e_ms = expert_forward(&ms.experts[ci], &x)
+                .unwrap()
+                .sub(&want)
+                .unwrap()
+                .frob_norm();
+            assert!(
+                e_mm <= e_ms + 1e-6,
+                "cluster {ci}: mergemoe {e_mm} vs msmoe {e_ms}"
+            );
+        }
+    }
+
+    #[test]
+    fn singleton_cluster_is_exact_copy() {
+        let model = tiny_model(3, 1, false, 35);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan {
+            n: 3,
+            m: 3,
+            clusters: vec![vec![0], vec![1], vec![2]],
+            assign: vec![0, 1, 2],
+            weights: vec![1.0; 3],
+        };
+        let x = Tensor::randn(&[64, 16], 1.0, &mut Rng::new(36));
+        let merged = merge(moe, &plan, &x, &mut NativeGram, 1e-8).unwrap();
+        for i in 0..3 {
+            assert_eq!(merged.experts[i].wd.data(), moe.experts[i].wd.data());
+        }
+    }
+
+    #[test]
+    fn tiny_sample_count_still_finite() {
+        // Below-threshold regime of Fig. 4: with fewer samples than d_ff the
+        // Gram matrix is singular; ridge must keep the solve finite.
+        let model = tiny_model(4, 2, false, 37);
+        let moe = &model.layers[0].moe;
+        let x = Tensor::randn(&[4, 16], 1.0, &mut Rng::new(38));
+        let merged = merge(moe, &two_cluster_plan(), &x, &mut NativeGram, 1e-6).unwrap();
+        for e in &merged.experts {
+            assert!(e.wd.data().iter().all(|v| v.is_finite()));
+        }
+    }
+}

@@ -1,0 +1,246 @@
+//! Expert merging — the paper's contribution and all of its baselines.
+//!
+//! The pipeline for one MoE layer (paper §4 "Summary of the algorithm
+//! design"):
+//!
+//! 1. [`clustering::build_plan`] fixes the summation matrix `A` (Eq. 2) and
+//!    the Theorem-1 frequency weights (matrix `B`): the top-M most-used
+//!    experts become cluster centers; every other expert joins the center
+//!    with the most similar `concat(W_U, W_G)` (cosine).
+//! 2. An [`Algorithm`] constructs the M merged experts:
+//!    * [`average`]  — uniform parameter averaging (Choshen et al. baseline),
+//!    * [`zipit`]    — feature-matching merge (Stoica et al., adapted),
+//!    * [`msmoe`]    — frequency-weighted parameter averaging (Li et al.;
+//!      equivalently Eq. 4's fixed `T1,T2,T3`),
+//!    * [`mergemoe`] — the paper's method: `T2,T3` = frequency-weighted
+//!      average, `T1` solved by least squares on calibration activations
+//!      (Eq. 5–6),
+//!    * [`oracle`]   — Table-5's "w/o merging errors": original experts
+//!      kept, outputs merged exactly through the routing map `B·A`.
+//! 3. The result is a new [`MoeLayer`] whose router is untouched (Appendix
+//!    B: N expert references pointing at M real experts — the routing map
+//!    `A`) and whose shared expert, if any, is byte-identical.
+
+pub mod average;
+pub mod clustering;
+pub mod mergemoe;
+pub mod msmoe;
+pub mod oracle;
+pub mod plan;
+pub mod zipit;
+
+use anyhow::{bail, Result};
+
+pub use plan::MergePlan;
+
+use crate::model::native::moe_forward;
+use crate::model::MoeLayer;
+use crate::tensor::{ops, Tensor};
+
+/// Backend for the Gram accumulations `(P Pᵀ, Y Pᵀ)` that dominate the
+/// MergeMoE solve. [`NativeGram`] computes them with the tensor substrate;
+/// the PJRT runtime provides an implementation backed by the `gram_*` HLO
+/// artifact (the L1 pallas kernel), which the pipeline injects here.
+pub trait GramBackend {
+    /// `p` (f, s), `y` (d, s) -> (`P Pᵀ` (f,f), `Y Pᵀ` (d,f)).
+    fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)>;
+}
+
+/// Pure-rust Gram backend.
+pub struct NativeGram;
+
+impl GramBackend for NativeGram {
+    fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)> {
+        Ok((ops::matmul_bt(p, p)?, ops::matmul_bt(y, p)?))
+    }
+}
+
+/// The merge algorithms compared in Tables 1–3 (plus the Table-5 oracle).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Algorithm {
+    Average,
+    ZipIt,
+    MSmoe,
+    MergeMoe,
+    /// Table-5 "w/o merging errors" — not a compression scheme (keeps all
+    /// N experts) but isolates the clustering error.
+    Oracle,
+}
+
+pub const COMPARED: [Algorithm; 4] =
+    [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe, Algorithm::MergeMoe];
+
+impl Algorithm {
+    pub fn name(self) -> &'static str {
+        match self {
+            Algorithm::Average => "Average",
+            Algorithm::ZipIt => "ZipIt",
+            Algorithm::MSmoe => "M-SMoE",
+            Algorithm::MergeMoe => "MergeMoE",
+            Algorithm::Oracle => "Oracle",
+        }
+    }
+
+    pub fn from_name(s: &str) -> Option<Algorithm> {
+        match s.to_ascii_lowercase().as_str() {
+            "average" | "avg" => Some(Algorithm::Average),
+            "zipit" => Some(Algorithm::ZipIt),
+            "m-smoe" | "msmoe" => Some(Algorithm::MSmoe),
+            "mergemoe" => Some(Algorithm::MergeMoe),
+            "oracle" => Some(Algorithm::Oracle),
+            _ => None,
+        }
+    }
+
+    /// Whether the algorithm consumes calibration activations.
+    pub fn needs_calibration(self) -> bool {
+        matches!(self, Algorithm::MergeMoe)
+    }
+}
+
+/// Merge one MoE layer according to `plan`.
+///
+/// `calib_x`: post-LN layer inputs X̂ (T, d); required by MergeMoE,
+/// ignored by the parameter-space baselines. `ridge` is the relative
+/// regularization of the normal-equation solve.
+pub fn merge_layer(
+    alg: Algorithm,
+    moe: &MoeLayer,
+    plan: &MergePlan,
+    calib_x: Option<&Tensor>,
+    gram: &mut dyn GramBackend,
+    ridge: f64,
+) -> Result<MoeLayer> {
+    plan.validate(moe.n_experts())?;
+    match alg {
+        Algorithm::Average => average::merge(moe, plan),
+        Algorithm::ZipIt => zipit::merge(moe, plan),
+        Algorithm::MSmoe => msmoe::merge(moe, plan),
+        Algorithm::MergeMoe => {
+            let Some(x) = calib_x else {
+                bail!("MergeMoE requires calibration activations")
+            };
+            mergemoe::merge(moe, plan, x, gram, ridge)
+        }
+        Algorithm::Oracle => oracle::merge(moe, plan),
+    }
+}
+
+/// Output-space error of a merged layer against the original on a batch of
+/// inputs — ‖MoE'(X) − MoE(X)‖_F / ‖MoE(X)‖_F. This is the quantity the
+/// paper's optimization minimizes; tests assert the algorithm ordering on
+/// it, and the pipeline logs it per layer.
+pub fn layer_output_error(original: &MoeLayer, merged: &MoeLayer, x: &Tensor) -> Result<f64> {
+    let (y0, _, _) = moe_forward(original, x)?;
+    let (y1, _, _) = moe_forward(merged, x)?;
+    Ok(y1.sub(&y0)?.frob_norm() / (y0.frob_norm() + 1e-12))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::moe::UsageStats;
+    use crate::util::rng::Rng;
+
+    fn setup(e: usize, m: usize) -> (MoeLayer, MergePlan, Tensor) {
+        let model = tiny_model(e, 2, false, 77);
+        let moe = model.layers[0].moe.clone();
+        let mut rng = Rng::new(1234);
+        let x = Tensor::randn(&[256, 16], 1.0, &mut rng);
+        let mut stats = UsageStats::new(e);
+        let (_, counts, mass) = moe_forward(&moe, &x).unwrap();
+        stats.add(&counts, &mass, 256);
+        let plan = clustering::build_plan(&moe, &stats, m).unwrap();
+        (moe, plan, x)
+    }
+
+    #[test]
+    fn all_algorithms_produce_valid_layers() {
+        let (moe, plan, x) = setup(8, 4);
+        for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe,
+                    Algorithm::MergeMoe, Algorithm::Oracle] {
+            let merged =
+                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-6).unwrap();
+            let expected_experts =
+                if alg == Algorithm::Oracle { 8 } else { 4 };
+            assert_eq!(merged.n_experts(), expected_experts, "{alg:?}");
+            assert_eq!(merged.router.shape(), moe.router.shape(), "{alg:?}");
+            assert!(merged.map.is_some(), "{alg:?} must carry a routing map");
+            // merged layer must run
+            let (y, _, _) = moe_forward(&merged, &x).unwrap();
+            assert!(y.data().iter().all(|v| v.is_finite()), "{alg:?}");
+        }
+    }
+
+    #[test]
+    fn mergemoe_beats_msmoe_on_calibration_batch() {
+        // Least-squares optimality: on the *same* batch it was fitted to,
+        // MergeMoE's output error can only be <= M-SMoE's (M-SMoE is the
+        // T1-fixed special case of the same parametrization).
+        let (moe, plan, x) = setup(8, 4);
+        let msmoe =
+            merge_layer(Algorithm::MSmoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+                .unwrap();
+        let mm =
+            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+                .unwrap();
+        let e_msmoe = layer_output_error(&moe, &msmoe, &x).unwrap();
+        let e_mm = layer_output_error(&moe, &mm, &x).unwrap();
+        assert!(
+            e_mm <= e_msmoe + 1e-6,
+            "MergeMoE {e_mm} must not exceed M-SMoE {e_msmoe}"
+        );
+    }
+
+    #[test]
+    fn oracle_error_below_mergemoe() {
+        // Table 5: removing the T1/T2/T3 approximation (keeping clustering)
+        // must not increase the output error.
+        let (moe, plan, x) = setup(8, 4);
+        let mm =
+            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+                .unwrap();
+        let or = merge_layer(Algorithm::Oracle, &moe, &plan, None, &mut NativeGram, 0.0)
+            .unwrap();
+        let e_mm = layer_output_error(&moe, &mm, &x).unwrap();
+        let e_or = layer_output_error(&moe, &or, &x).unwrap();
+        assert!(e_or <= e_mm + 1e-6, "oracle {e_or} vs mergemoe {e_mm}");
+    }
+
+    #[test]
+    fn singleton_clusters_are_lossless_for_all_param_algorithms() {
+        // M = N ⇒ every cluster is a singleton ⇒ merging must be exact.
+        let (moe, plan, x) = setup(4, 4);
+        for alg in [Algorithm::Average, Algorithm::MSmoe, Algorithm::MergeMoe,
+                    Algorithm::ZipIt] {
+            let merged =
+                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-12).unwrap();
+            let err = layer_output_error(&moe, &merged, &x).unwrap();
+            assert!(err < 2e-3, "{alg:?}: singleton merge err {err}");
+        }
+    }
+
+    #[test]
+    fn mergemoe_requires_calibration() {
+        let (moe, plan, _) = setup(8, 4);
+        assert!(merge_layer(Algorithm::MergeMoe, &moe, &plan, None, &mut NativeGram, 1e-6)
+            .is_err());
+    }
+
+    #[test]
+    fn native_gram_matches_definition() {
+        let mut rng = Rng::new(9);
+        let p = Tensor::randn(&[6, 50], 1.0, &mut rng);
+        let y = Tensor::randn(&[4, 50], 1.0, &mut rng);
+        let (pp, yp) = NativeGram.gram(&p, &y).unwrap();
+        assert_eq!(pp.shape(), &[6, 6]);
+        assert_eq!(yp.shape(), &[4, 6]);
+        // symmetry of PPᵀ
+        for i in 0..6 {
+            for j in 0..6 {
+                assert!((pp.at2(i, j) - pp.at2(j, i)).abs() < 1e-4);
+            }
+        }
+    }
+}

@@ -1,0 +1,64 @@
+//! M-SMoE baseline (Li et al., 2023): frequency-weighted *parameter*
+//! averaging. Under the paper's output-merging view this is Eq. 4 —
+//! `T1 = [I;I;…]`, `T2 = T3 = [B_1i I, …, B_Ni I]` — i.e. the same
+//! parametrization as MergeMoE with `T1` fixed instead of optimized.
+
+use anyhow::Result;
+
+use super::average::weighted_param_merge;
+use super::plan::MergePlan;
+use crate::model::MoeLayer;
+
+pub fn merge(moe: &MoeLayer, plan: &MergePlan) -> Result<MoeLayer> {
+    Ok(MoeLayer {
+        router: moe.router.clone(),
+        experts: weighted_param_merge(moe, plan, &plan.weights),
+        shared: moe.shared.clone(),
+        top_k: moe.top_k,
+        map: Some(plan.matrix_a()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn uses_frequency_weights() {
+        let model = tiny_model(2, 1, false, 22);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan {
+            n: 2,
+            m: 1,
+            clusters: vec![vec![0, 1]],
+            assign: vec![0, 0],
+            weights: vec![0.75, 0.25],
+        };
+        let merged = merge(moe, &plan).unwrap();
+        let want = {
+            let mut t = moe.experts[0].wu.clone().scale(0.75);
+            t.axpy(0.25, &moe.experts[1].wu).unwrap();
+            t
+        };
+        assert!(merged.experts[0].wu.rel_err(&want) < 1e-6);
+    }
+
+    #[test]
+    fn shared_expert_untouched() {
+        let model = tiny_model(4, 2, true, 23);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan {
+            n: 4,
+            m: 2,
+            clusters: vec![vec![0, 1], vec![2, 3]],
+            assign: vec![0, 0, 1, 1],
+            weights: vec![0.5; 4],
+        };
+        let merged = merge(moe, &plan).unwrap();
+        let orig = moe.shared.as_ref().unwrap();
+        let kept = merged.shared.as_ref().unwrap();
+        assert_eq!(orig.wg.data(), kept.wg.data());
+        assert_eq!(orig.wd.data(), kept.wd.data());
+    }
+}

@@ -1,0 +1,58 @@
+//! Table-5 oracle: "clustering is retained but expert outputs are directly
+//! merged, thereby removing merging errors". All N original experts are
+//! kept; the routing vector is transformed `r' = (B·A) r`, which realizes
+//! `Y B A mask_top_K(·)` exactly — the only remaining error is the
+//! clustering error. Not a compression scheme (no memory saved); used to
+//! isolate the two error sources in the ablation.
+
+use anyhow::Result;
+
+use super::plan::MergePlan;
+use crate::model::MoeLayer;
+
+pub fn merge(moe: &MoeLayer, plan: &MergePlan) -> Result<MoeLayer> {
+    Ok(MoeLayer {
+        router: moe.router.clone(),
+        experts: moe.experts.clone(),
+        shared: moe.shared.clone(),
+        top_k: moe.top_k,
+        map: Some(plan.matrix_ba()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::native::moe_forward;
+    use crate::model::testutil::tiny_model;
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn identity_plan_oracle_is_exact() {
+        let model = tiny_model(4, 2, true, 50);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan::identity(4);
+        let o = merge(moe, &plan).unwrap();
+        let x = Tensor::randn(&[32, 16], 1.0, &mut Rng::new(51));
+        let (y0, _, _) = moe_forward(moe, &x).unwrap();
+        let (y1, _, _) = moe_forward(&o, &x).unwrap();
+        assert!(y0.rel_err(&y1) < 1e-6);
+    }
+
+    #[test]
+    fn oracle_keeps_all_experts() {
+        let model = tiny_model(6, 2, false, 52);
+        let moe = &model.layers[0].moe;
+        let plan = MergePlan {
+            n: 6,
+            m: 2,
+            clusters: vec![vec![0, 1, 2], vec![3, 4, 5]],
+            assign: vec![0, 0, 0, 1, 1, 1],
+            weights: vec![1.0 / 3.0; 6],
+        };
+        let o = merge(moe, &plan).unwrap();
+        assert_eq!(o.n_experts(), 6);
+        assert_eq!(o.map.as_ref().unwrap().shape(), &[6, 6]);
+    }
+}

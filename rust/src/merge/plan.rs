@@ -1,0 +1,179 @@
+//! The merge plan: clustering assignment (matrix `A`, Eq. 2) plus the
+//! intra-cluster weights (matrix `B`, Theorem 1).
+
+use anyhow::{bail, Result};
+
+use crate::tensor::Tensor;
+
+/// Cluster assignment + merge weights for one MoE layer.
+#[derive(Debug, Clone)]
+pub struct MergePlan {
+    /// Original expert count N.
+    pub n: usize,
+    /// Merged expert count M.
+    pub m: usize,
+    /// `clusters[i]` lists the original experts merged into expert i
+    /// (ascending; `clusters[i][0..]` always non-empty).
+    pub clusters: Vec<Vec<usize>>,
+    /// `assign[j]` = cluster of original expert j (column structure of A).
+    pub assign: Vec<usize>,
+    /// `weights[j]` = B_{j,assign[j]} — the relative usage frequency within
+    /// its cluster. Within every cluster they sum to 1.
+    pub weights: Vec<f64>,
+}
+
+impl MergePlan {
+    /// Identity plan (M = N, every cluster a singleton).
+    pub fn identity(n: usize) -> MergePlan {
+        MergePlan {
+            n,
+            m: n,
+            clusters: (0..n).map(|i| vec![i]).collect(),
+            assign: (0..n).collect(),
+            weights: vec![1.0; n],
+        }
+    }
+
+    /// Structural invariants (checked before every merge; the property tests
+    /// fuzz these).
+    pub fn validate(&self, n_experts: usize) -> Result<()> {
+        if self.n != n_experts {
+            bail!("plan built for {} experts, layer has {}", self.n, n_experts);
+        }
+        if self.clusters.len() != self.m || self.assign.len() != self.n
+            || self.weights.len() != self.n {
+            bail!("plan size mismatch");
+        }
+        let mut seen = vec![false; self.n];
+        for (ci, members) in self.clusters.iter().enumerate() {
+            if members.is_empty() {
+                bail!("cluster {ci} is empty");
+            }
+            let mut wsum = 0.0;
+            for &j in members {
+                if j >= self.n || seen[j] {
+                    bail!("expert {j} missing or assigned twice");
+                }
+                seen[j] = true;
+                if self.assign[j] != ci {
+                    bail!("assign[{j}] != {ci}");
+                }
+                if self.weights[j] < 0.0 {
+                    bail!("negative weight for expert {j}");
+                }
+                wsum += self.weights[j];
+            }
+            if (wsum - 1.0).abs() > 1e-6 {
+                bail!("cluster {ci} weights sum to {wsum}, expected 1");
+            }
+        }
+        if !seen.iter().all(|&s| s) {
+            bail!("some experts unassigned");
+        }
+        Ok(())
+    }
+
+    /// Summation matrix `A` (M × N): `A[i][j] = 1` iff expert j ∈ cluster i.
+    pub fn matrix_a(&self) -> Tensor {
+        let mut a = Tensor::zeros(&[self.m, self.n]);
+        for (j, &ci) in self.assign.iter().enumerate() {
+            *a.at2_mut(ci, j) = 1.0;
+        }
+        a
+    }
+
+    /// Weighting matrix `B` (N × M): `B[j][i] = w_j` iff expert j ∈ cluster i.
+    pub fn matrix_b(&self) -> Tensor {
+        let mut b = Tensor::zeros(&[self.n, self.m]);
+        for (j, &ci) in self.assign.iter().enumerate() {
+            *b.at2_mut(j, ci) = self.weights[j] as f32;
+        }
+        b
+    }
+
+    /// `B·A` (N × N) — the Table-5 oracle routing transform.
+    pub fn matrix_ba(&self) -> Tensor {
+        let mut ba = Tensor::zeros(&[self.n, self.n]);
+        for (j, &cj) in self.assign.iter().enumerate() {
+            for (k, &ck) in self.assign.iter().enumerate() {
+                if cj == ck {
+                    *ba.at2_mut(j, k) = self.weights[j] as f32;
+                }
+            }
+        }
+        ba
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::ops;
+    use crate::util::rng::Rng;
+
+    fn sample_plan(n: usize, m: usize, rng: &mut Rng) -> MergePlan {
+        // random assignment with every cluster non-empty
+        let mut assign: Vec<usize> = (0..m).collect();
+        assign.extend((m..n).map(|_| rng.below(m as u64) as usize));
+        rng.shuffle(&mut assign);
+        let mut clusters = vec![Vec::new(); m];
+        for (j, &c) in assign.iter().enumerate() {
+            clusters[c].push(j);
+        }
+        let mut weights = vec![0.0; n];
+        for members in &clusters {
+            let raw: Vec<f64> = members.iter().map(|_| rng.f64() + 0.1).collect();
+            let s: f64 = raw.iter().sum();
+            for (&j, w) in members.iter().zip(raw) {
+                weights[j] = w / s;
+            }
+        }
+        MergePlan { n, m, clusters, assign, weights }
+    }
+
+    #[test]
+    fn identity_plan_valid() {
+        let p = MergePlan::identity(5);
+        p.validate(5).unwrap();
+        assert_eq!(p.matrix_a(), Tensor::eye(5));
+        assert_eq!(p.matrix_b(), Tensor::eye(5));
+        assert_eq!(p.matrix_ba(), Tensor::eye(5));
+    }
+
+    #[test]
+    fn random_plans_satisfy_matrix_structure() {
+        // property test: A columns one-hot, B columns cluster-supported,
+        // BA = B @ A for 50 random plans
+        let mut rng = Rng::new(91);
+        for _ in 0..50 {
+            let n = rng.range(2, 16) as usize;
+            let m = rng.range(1, n as i64) as usize;
+            let p = sample_plan(n, m, &mut rng);
+            p.validate(n).unwrap();
+            let a = p.matrix_a();
+            for j in 0..n {
+                let col_sum: f32 = (0..m).map(|i| a.at2(i, j)).sum();
+                assert_eq!(col_sum, 1.0, "A column {j} not one-hot");
+            }
+            let b = p.matrix_b();
+            let ba = ops::matmul(&b, &a).unwrap();
+            assert!(ba.rel_err(&p.matrix_ba()) < 1e-6);
+            // row sums of A·Bᵀ... and B column sums = 1 per cluster
+            for (ci, members) in p.clusters.iter().enumerate() {
+                let s: f32 = members.iter().map(|&j| b.at2(j, ci)).sum();
+                assert!((s - 1.0).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn validate_rejects_broken_plans() {
+        let mut p = MergePlan::identity(4);
+        p.weights[2] = 0.5;
+        assert!(p.validate(4).is_err());
+        let mut p2 = MergePlan::identity(4);
+        p2.assign[1] = 0;
+        assert!(p2.validate(4).is_err());
+        assert!(MergePlan::identity(4).validate(5).is_err());
+    }
+}

@@ -1,0 +1,170 @@
+//! ZipIt baseline (Stoica et al., 2023), adapted to the expert-merging
+//! scenario as in the M-SMoE paper's comparison.
+//!
+//! ZipIt merges networks by *matching features* rather than averaging
+//! position-wise: hidden units that compute similar functions are "zipped"
+//! together. Adapted to a SwiGLU expert cluster: starting from the cluster
+//! center, each other member's hidden units are greedily matched one-to-one
+//! to the center's units by cosine similarity of their `[w_u; w_g]` rows,
+//! then the matched rows (and the corresponding `W_D` columns) are averaged
+//! with the cluster frequency weights.
+
+use anyhow::Result;
+
+use super::plan::MergePlan;
+use crate::model::{Expert, MoeLayer};
+
+/// Cosine similarity between hidden unit `a` of expert `ea` and unit `b` of
+/// `eb` (concatenated gate+up rows).
+fn unit_sim(ea: &Expert, eb: &Expert, a: usize, b: usize) -> f64 {
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (x, y) in ea
+        .wg
+        .row(a)
+        .iter()
+        .chain(ea.wu.row(a))
+        .zip(eb.wg.row(b).iter().chain(eb.wu.row(b)))
+    {
+        dot += (*x as f64) * (*y as f64);
+        na += (*x as f64) * (*x as f64);
+        nb += (*y as f64) * (*y as f64);
+    }
+    dot / (na.sqrt() * nb.sqrt() + 1e-30)
+}
+
+/// Greedy one-to-one matching of `other`'s units onto the center's units:
+/// highest-similarity pairs first (the ZipIt "zip" step).
+fn match_units(center: &Expert, other: &Expert) -> Vec<usize> {
+    let f = center.wg.shape()[0];
+    let mut pairs: Vec<(f64, usize, usize)> = Vec::with_capacity(f * f);
+    for a in 0..f {
+        for b in 0..f {
+            pairs.push((unit_sim(center, other, a, b), a, b));
+        }
+    }
+    pairs.sort_by(|x, y| y.0.partial_cmp(&x.0).unwrap());
+    let mut center_used = vec![false; f];
+    let mut other_used = vec![false; f];
+    let mut map = vec![usize::MAX; f]; // center unit -> other unit
+    let mut matched = 0;
+    for (_, a, b) in pairs {
+        if !center_used[a] && !other_used[b] {
+            center_used[a] = true;
+            other_used[b] = true;
+            map[a] = b;
+            matched += 1;
+            if matched == f {
+                break;
+            }
+        }
+    }
+    map
+}
+
+pub fn merge(moe: &MoeLayer, plan: &MergePlan) -> Result<MoeLayer> {
+    let experts = plan
+        .clusters
+        .iter()
+        .map(|members| {
+            // center = highest-frequency member (plan weights are relative
+            // frequencies, so argmax weight)
+            let center = *members
+                .iter()
+                .max_by(|&&a, &&b| plan.weights[a].partial_cmp(&plan.weights[b]).unwrap())
+                .unwrap();
+            let ce = &moe.experts[center];
+            let f = ce.wg.shape()[0];
+            let d = ce.wg.shape()[1];
+            let mut wg = ce.wg.clone().scale(plan.weights[center] as f32);
+            let mut wu = ce.wu.clone().scale(plan.weights[center] as f32);
+            let mut wd = ce.wd.clone().scale(plan.weights[center] as f32);
+            for &j in members {
+                if j == center {
+                    continue;
+                }
+                let oe = &moe.experts[j];
+                let m = match_units(ce, oe);
+                let w = plan.weights[j] as f32;
+                for a in 0..f {
+                    let b = m[a];
+                    for c in 0..d {
+                        *wg.at2_mut(a, c) += w * oe.wg.at2(b, c);
+                        *wu.at2_mut(a, c) += w * oe.wu.at2(b, c);
+                    }
+                    // W_D columns follow the hidden-unit permutation
+                    for r in 0..d {
+                        *wd.at2_mut(r, a) += w * oe.wd.at2(r, b);
+                    }
+                }
+            }
+            Ok(Expert { wg, wu, wd })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(MoeLayer {
+        router: moe.router.clone(),
+        experts,
+        shared: moe.shared.clone(),
+        top_k: moe.top_k,
+        map: Some(plan.matrix_a()),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn matching_is_a_permutation() {
+        let model = tiny_model(2, 1, false, 40);
+        let a = &model.layers[0].moe.experts[0];
+        let b = &model.layers[0].moe.experts[1];
+        let m = match_units(a, b);
+        let mut seen = vec![false; m.len()];
+        for &x in &m {
+            assert!(!seen[x]);
+            seen[x] = true;
+        }
+    }
+
+    #[test]
+    fn permuted_twin_merges_losslessly() {
+        // If the other expert is the center with its hidden units permuted,
+        // ZipIt must undo the permutation (this is ZipIt's defining property
+        // vs plain averaging).
+        let model = tiny_model(2, 1, false, 41);
+        let mut moe = model.layers[0].moe.clone();
+        let f = moe.experts[0].wg.shape()[0];
+        let d = moe.experts[0].wg.shape()[1];
+        let mut perm: Vec<usize> = (0..f).collect();
+        Rng::new(42).shuffle(&mut perm);
+        let src = moe.experts[0].clone();
+        let mut twin = src.clone();
+        for a in 0..f {
+            let b = perm[a];
+            for c in 0..d {
+                *twin.wg.at2_mut(b, c) = src.wg.at2(a, c);
+                *twin.wu.at2_mut(b, c) = src.wu.at2(a, c);
+            }
+            for r in 0..d {
+                *twin.wd.at2_mut(r, b) = src.wd.at2(r, a);
+            }
+        }
+        moe.experts[1] = twin;
+        let plan = MergePlan {
+            n: 2,
+            m: 1,
+            clusters: vec![vec![0, 1]],
+            assign: vec![0, 0],
+            weights: vec![0.6, 0.4], // expert 0 (src) is the center
+        };
+        let merged = merge(&moe, &plan).unwrap();
+        // matching undoes the permutation, so the weighted combination
+        // 0.6·src + 0.4·matched(twin) must equal src exactly
+        assert!(merged.experts[0].wg.rel_err(&src.wg) < 1e-5);
+        assert!(merged.experts[0].wd.rel_err(&src.wd) < 1e-5);
+    }
+}

@@ -1,0 +1,377 @@
+//! Model weights: loading from the trainer's NPZ dump, per-layer expert
+//! storage (experts are kept as individual matrices so merge algorithms can
+//! splice them), and export back to NPZ.
+
+pub mod native;
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::io::npz;
+use crate::tensor::Tensor;
+
+/// One routed SwiGLU expert: `E(x) = W_D (silu(W_G x) ⊙ (W_U x))`.
+#[derive(Debug, Clone)]
+pub struct Expert {
+    pub wg: Tensor, // (f, d)
+    pub wu: Tensor, // (f, d)
+    pub wd: Tensor, // (d, f)
+}
+
+impl Expert {
+    /// Parameter count (the unit of the paper's memory accounting).
+    pub fn n_params(&self) -> usize {
+        self.wg.len() + self.wu.len() + self.wd.len()
+    }
+}
+
+/// The MoE MLP of one transformer layer, in the paper's Appendix-B layout:
+/// the router always stays N-way (N = original expert count), and a routing
+/// map redirects the top-K mass to the M *real* experts.
+#[derive(Debug, Clone)]
+pub struct MoeLayer {
+    pub router: Tensor,       // (N, d) — row j scores original expert j
+    pub experts: Vec<Expert>, // length M (shrinks after merging)
+    pub shared: Option<Expert>,
+    pub top_k: usize,
+    /// Routing map (M, N): `None` ⇔ identity (uncompressed, M = N).
+    /// Merged layers carry the summation matrix A of Eq. 2; the Table-5
+    /// oracle carries B·A (original experts kept, outputs merged exactly).
+    pub map: Option<Tensor>,
+}
+
+impl MoeLayer {
+    pub fn n_experts(&self) -> usize {
+        self.experts.len()
+    }
+
+    /// Stack per-expert matrices into the (E,f,d)/(E,d,f) layout the PJRT
+    /// artifacts take as parameters.
+    pub fn stacked(&self) -> (Tensor, Tensor, Tensor) {
+        let e = self.experts.len();
+        let (f, d) = {
+            let s = self.experts[0].wg.shape();
+            (s[0], s[1])
+        };
+        let mut wg = Vec::with_capacity(e * f * d);
+        let mut wu = Vec::with_capacity(e * f * d);
+        let mut wd = Vec::with_capacity(e * f * d);
+        for ex in &self.experts {
+            wg.extend_from_slice(ex.wg.data());
+            wu.extend_from_slice(ex.wu.data());
+            wd.extend_from_slice(ex.wd.data());
+        }
+        (
+            Tensor::from_vec(&[e, f, d], wg).unwrap(),
+            Tensor::from_vec(&[e, f, d], wu).unwrap(),
+            Tensor::from_vec(&[e, d, f], wd).unwrap(),
+        )
+    }
+}
+
+/// One transformer layer (attention + MoE MLP, both pre-LN residual).
+#[derive(Debug, Clone)]
+pub struct Layer {
+    pub ln1_g: Vec<f32>,
+    pub ln1_b: Vec<f32>,
+    pub wq: Tensor,
+    pub wk: Tensor,
+    pub wv: Tensor,
+    pub wo: Tensor,
+    pub ln2_g: Vec<f32>,
+    pub ln2_b: Vec<f32>,
+    pub moe: MoeLayer,
+}
+
+/// Full model weights.
+#[derive(Debug, Clone)]
+pub struct ModelWeights {
+    pub cfg: ModelConfig,
+    pub tok_emb: Tensor, // (V, d)
+    pub pos_emb: Tensor, // (S, d)
+    pub layers: Vec<Layer>,
+    pub lnf_g: Vec<f32>,
+    pub lnf_b: Vec<f32>,
+    pub head: Tensor, // (V, d)
+    /// Weight-version identity for runtime-side caching (staged device
+    /// literals are keyed by this). Freshly assigned on load; **any code
+    /// that mutates weights must call [`ModelWeights::touch`]** — the
+    /// compression pipeline and the distillation refit do.
+    pub uid: u64,
+}
+
+/// Monotonic uid source for [`ModelWeights::touch`].
+static NEXT_UID: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(1);
+
+pub fn fresh_uid() -> u64 {
+    NEXT_UID.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+}
+
+impl ModelWeights {
+    /// Load `weights_<name>.npz` as written by `python/compile/train.py`.
+    pub fn load(dir: &Path, cfg: &ModelConfig) -> Result<ModelWeights> {
+        let path = dir.join(format!("weights_{}.npz", cfg.name));
+        let mut m = npz::read_npz_tensors(&path)
+            .with_context(|| format!("loading weights for model {}", cfg.name))?;
+        let mut take = |k: &str| -> Result<Tensor> {
+            m.remove(k).with_context(|| format!("weights missing key {k:?}"))
+        };
+        let mut layers = Vec::with_capacity(cfg.n_layers);
+        for i in 0..cfg.n_layers {
+            let pre = |n: &str| format!("L{i}.{n}");
+            let wg = take(&pre("wg"))?;
+            let wu = take(&pre("wu"))?;
+            let wd = take(&pre("wd"))?;
+            let experts = split_experts(&wg, &wu, &wd, cfg)?;
+            let shared = if cfg.shared_expert {
+                Some(Expert {
+                    wg: take(&pre("swg"))?,
+                    wu: take(&pre("swu"))?,
+                    wd: take(&pre("swd"))?,
+                })
+            } else {
+                None
+            };
+            layers.push(Layer {
+                ln1_g: take(&pre("ln1_g"))?.into_vec(),
+                ln1_b: take(&pre("ln1_b"))?.into_vec(),
+                wq: take(&pre("wq"))?,
+                wk: take(&pre("wk"))?,
+                wv: take(&pre("wv"))?,
+                wo: take(&pre("wo"))?,
+                ln2_g: take(&pre("ln2_g"))?.into_vec(),
+                ln2_b: take(&pre("ln2_b"))?.into_vec(),
+                moe: MoeLayer {
+                    router: take(&pre("router"))?,
+                    experts,
+                    shared,
+                    top_k: cfg.top_k,
+                    map: None,
+                },
+            });
+        }
+        Ok(ModelWeights {
+            cfg: cfg.clone(),
+            tok_emb: take("tok_emb")?,
+            pos_emb: take("pos_emb")?,
+            layers,
+            lnf_g: take("lnf_g")?.into_vec(),
+            lnf_b: take("lnf_b")?.into_vec(),
+            head: take("head")?,
+            uid: fresh_uid(),
+        })
+    }
+
+    /// Declare the weights modified: invalidates any runtime-side caches
+    /// keyed on this model's identity.
+    pub fn touch(&mut self) {
+        self.uid = fresh_uid();
+    }
+
+    /// Total parameter count (matches `configs.py::n_params` before merging,
+    /// and accounts per-layer expert counts after).
+    pub fn n_params(&self) -> usize {
+        let mut n = self.tok_emb.len() + self.pos_emb.len() + self.head.len()
+            + self.lnf_g.len() + self.lnf_b.len();
+        for l in &self.layers {
+            n += l.ln1_g.len() + l.ln1_b.len() + l.ln2_g.len() + l.ln2_b.len();
+            n += l.wq.len() + l.wk.len() + l.wv.len() + l.wo.len();
+            n += l.moe.router.len();
+            n += l.moe.experts.iter().map(Expert::n_params).sum::<usize>();
+            if let Some(s) = &l.moe.shared {
+                n += s.n_params();
+            }
+        }
+        n
+    }
+
+    /// Export back to a flat NPZ (compressed-model artifact for deployment;
+    /// also used by tests to round-trip).
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut m: BTreeMap<String, Tensor> = BTreeMap::new();
+        m.insert("tok_emb".into(), self.tok_emb.clone());
+        m.insert("pos_emb".into(), self.pos_emb.clone());
+        m.insert("lnf_g".into(), Tensor::from_vec(&[self.lnf_g.len()], self.lnf_g.clone())?);
+        m.insert("lnf_b".into(), Tensor::from_vec(&[self.lnf_b.len()], self.lnf_b.clone())?);
+        m.insert("head".into(), self.head.clone());
+        for (i, l) in self.layers.iter().enumerate() {
+            let pre = |n: &str| format!("L{i}.{n}");
+            m.insert(pre("ln1_g"), Tensor::from_vec(&[l.ln1_g.len()], l.ln1_g.clone())?);
+            m.insert(pre("ln1_b"), Tensor::from_vec(&[l.ln1_b.len()], l.ln1_b.clone())?);
+            m.insert(pre("ln2_g"), Tensor::from_vec(&[l.ln2_g.len()], l.ln2_g.clone())?);
+            m.insert(pre("ln2_b"), Tensor::from_vec(&[l.ln2_b.len()], l.ln2_b.clone())?);
+            m.insert(pre("wq"), l.wq.clone());
+            m.insert(pre("wk"), l.wk.clone());
+            m.insert(pre("wv"), l.wv.clone());
+            m.insert(pre("wo"), l.wo.clone());
+            m.insert(pre("router"), l.moe.router.clone());
+            let (wg, wu, wd) = l.moe.stacked();
+            m.insert(pre("wg"), wg);
+            m.insert(pre("wu"), wu);
+            m.insert(pre("wd"), wd);
+            if let Some(s) = &l.moe.shared {
+                m.insert(pre("swg"), s.wg.clone());
+                m.insert(pre("swu"), s.wu.clone());
+                m.insert(pre("swd"), s.wd.clone());
+            }
+        }
+        npz::write_npz(path, &m)
+    }
+}
+
+fn split_experts(wg: &Tensor, wu: &Tensor, wd: &Tensor, cfg: &ModelConfig) -> Result<Vec<Expert>> {
+    let (e, f, d) = match wg.shape() {
+        [e, f, d] => (*e, *f, *d),
+        s => bail!("expert stack must be 3-D, got {s:?}"),
+    };
+    if e != cfg.n_experts || f != cfg.d_ff || d != cfg.d_model {
+        bail!("expert stack shape {:?} disagrees with config {}x{}x{}",
+              wg.shape(), cfg.n_experts, cfg.d_ff, cfg.d_model);
+    }
+    let mut out = Vec::with_capacity(e);
+    for i in 0..e {
+        let slice = |t: &Tensor, rows: usize, cols: usize| {
+            Tensor::from_vec(
+                &[rows, cols],
+                t.data()[i * rows * cols..(i + 1) * rows * cols].to_vec(),
+            )
+            .unwrap()
+        };
+        out.push(Expert {
+            wg: slice(wg, f, d),
+            wu: slice(wu, f, d),
+            wd: slice(wd, d, f),
+        });
+    }
+    Ok(out)
+}
+
+/// Synthetic-model builders for the crate's integration/property tests
+/// (public so `tests/*.rs` can use them; hidden from docs).
+#[doc(hidden)]
+pub mod testprops {
+    use super::{Expert, MoeLayer};
+    use crate::tensor::Tensor;
+    use crate::util::rng::Rng;
+
+    /// A random MoE layer with `n` experts over d=16, f=8 (matches
+    /// `testutil::tiny_model`'s layer shape).
+    pub fn tiny_moe(n: usize, top_k: usize, seed: u64) -> MoeLayer {
+        let mut rng = Rng::new(seed ^ 0x7E57_0000);
+        let (d, f) = (16, 8);
+        let mk = |rng: &mut Rng| Expert {
+            wg: Tensor::randn(&[f, d], 0.3, rng),
+            wu: Tensor::randn(&[f, d], 0.3, rng),
+            wd: Tensor::randn(&[d, f], 0.3, rng),
+        };
+        MoeLayer {
+            router: Tensor::randn(&[n, d], 0.4, &mut rng),
+            experts: (0..n).map(|_| mk(&mut rng)).collect(),
+            shared: None,
+            top_k,
+            map: None,
+        }
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Synthetic model builder shared by unit tests across modules.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    pub fn tiny_config(e: usize, k: usize, shared: bool) -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 8,
+            n_experts: e,
+            top_k: k,
+            shared_expert: shared,
+            n_params: 0,
+            merge_targets: vec![e / 2],
+        }
+    }
+
+    pub fn tiny_model(e: usize, k: usize, shared: bool, seed: u64) -> ModelWeights {
+        let cfg = tiny_config(e, k, shared);
+        let mut rng = Rng::new(seed);
+        let d = cfg.d_model;
+        let f = cfg.d_ff;
+        let v = 47;
+        let s = 64;
+        let mk_expert = |rng: &mut Rng| Expert {
+            wg: Tensor::randn(&[f, d], 0.3, rng),
+            wu: Tensor::randn(&[f, d], 0.3, rng),
+            wd: Tensor::randn(&[d, f], 0.3, rng),
+        };
+        let layers = (0..cfg.n_layers)
+            .map(|_| Layer {
+                ln1_g: vec![1.0; d],
+                ln1_b: vec![0.0; d],
+                wq: Tensor::randn(&[d, d], 0.2, &mut rng),
+                wk: Tensor::randn(&[d, d], 0.2, &mut rng),
+                wv: Tensor::randn(&[d, d], 0.2, &mut rng),
+                wo: Tensor::randn(&[d, d], 0.2, &mut rng),
+                ln2_g: vec![1.0; d],
+                ln2_b: vec![0.0; d],
+                moe: MoeLayer {
+                    router: Tensor::randn(&[e, d], 0.4, &mut rng),
+                    experts: (0..e).map(|_| mk_expert(&mut rng)).collect(),
+                    shared: if shared { Some(mk_expert(&mut rng)) } else { None },
+                    top_k: k,
+                    map: None,
+                },
+            })
+            .collect();
+        ModelWeights {
+            cfg,
+            tok_emb: Tensor::randn(&[v, d], 0.5, &mut rng),
+            pos_emb: Tensor::randn(&[s, d], 0.1, &mut rng),
+            layers,
+            lnf_g: vec![1.0; d],
+            lnf_b: vec![0.0; d],
+            head: Tensor::randn(&[v, d], 0.3, &mut rng),
+            uid: super::fresh_uid(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::testutil::tiny_model;
+    use super::*;
+
+    #[test]
+    fn stacked_roundtrip() {
+        let m = tiny_model(4, 2, true, 1);
+        let moe = &m.layers[0].moe;
+        let (wg, _, wd) = moe.stacked();
+        assert_eq!(wg.shape(), &[4, 8, 16]);
+        assert_eq!(wd.shape(), &[4, 16, 8]);
+        assert_eq!(&wg.data()[0..moe.experts[0].wg.len()], moe.experts[0].wg.data());
+    }
+
+    #[test]
+    fn save_load_roundtrip() {
+        let dir = std::env::temp_dir().join("mergemoe_model_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let m = tiny_model(4, 2, true, 2);
+        let path = dir.join("weights_tiny.npz");
+        m.save(&path).unwrap();
+        let back = ModelWeights::load(&dir, &m.cfg).unwrap();
+        assert_eq!(back.layers.len(), 2);
+        assert_eq!(back.layers[1].moe.experts.len(), 4);
+        assert_eq!(
+            back.layers[1].moe.experts[3].wd.data(),
+            m.layers[1].moe.experts[3].wd.data()
+        );
+        assert_eq!(back.n_params(), m.n_params());
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,272 @@
+//! Native (pure-rust) reference forward engine.
+//!
+//! Role: (a) bit-level-independent cross-check of the PJRT path — the
+//! integration tests require `native ≈ pjrt ≈ python` on identical weights;
+//! (b) the compute backend of merge-time math (evaluating member experts on
+//! calibration samples); (c) a fallback engine so every experiment can run
+//! without artifacts present.
+//!
+//! Numerics mirror `python/compile/model.py` exactly: pre-LN blocks,
+//! softmax-then-top-K routing without renormalization, silu gating,
+//! eps=1e-5 layernorm.
+
+use anyhow::{bail, Result};
+
+use super::{Expert, Layer, ModelWeights, MoeLayer};
+use crate::moe::routing::route_tokens;
+use crate::tensor::{ops, Tensor};
+
+/// Per-layer calibration capture (§4: the sampled inputs X̂ and the routing
+/// statistics that define the frequency weights f_i).
+#[derive(Debug, Clone)]
+pub struct LayerCapture {
+    /// Post-LN inputs to the MoE module, one row per token: (T, d).
+    pub x: Tensor,
+    /// Expert usage counts over these tokens: len E.
+    pub counts: Vec<f64>,
+    /// Sum of routing weights per expert (soft frequency): len E.
+    pub weight_mass: Vec<f64>,
+}
+
+/// Apply one expert to a batch of rows: `W_D (silu(W_G x) ⊙ (W_U x))`.
+pub fn expert_forward(ex: &Expert, x: &Tensor) -> Result<Tensor> {
+    let h = expert_inner(ex, x)?;
+    ops::matmul_bt(&h, &ex.wd)
+}
+
+/// The pre-down-projection activations `silu(W_G x) ⊙ (W_U x)` — the `Q`/`P`
+/// rows of the least-squares system (transposed: returned as (T, f)).
+pub fn expert_inner(ex: &Expert, x: &Tensor) -> Result<Tensor> {
+    let g = ops::matmul_bt(x, &ex.wg)?;
+    let u = ops::matmul_bt(x, &ex.wu)?;
+    let mut h = g;
+    for (hv, uv) in h.data_mut().iter_mut().zip(u.data()) {
+        *hv = ops::silu(*hv) * uv;
+    }
+    Ok(h)
+}
+
+/// MoE MLP forward on token rows (T, d) -> (T, d), plus capture stats.
+/// Implements Eq. 1 in the Appendix-B layout: the router scores the N
+/// original experts; when `map` (M,N) is set the masked routing vector is
+/// redirected to the M real experts (`r' = map · r`).
+pub fn moe_forward(moe: &MoeLayer, x: &Tensor) -> Result<(Tensor, Vec<f64>, Vec<f64>)> {
+    let t = x.shape()[0];
+    let n = moe.router.shape()[0];
+    let e = moe.n_experts();
+    let routing = route_tokens(&moe.router, x, moe.top_k)?;
+    // dense (t, n) routing weights over the N-way router
+    let mut r = Tensor::zeros(&[t, n]);
+    for (ti, tok) in routing.iter().enumerate() {
+        for &(ei, w) in tok {
+            *r.at2_mut(ti, ei) = w;
+        }
+    }
+    if let Some(map) = &moe.map {
+        r = ops::matmul_bt(&r, map)?; // (t,n) @ (m,n)ᵀ = (t,m)
+    } else if e != n {
+        anyhow::bail!("moe layer has {e} experts but {n}-way router and no map");
+    }
+    let mut counts = vec![0.0f64; e];
+    let mut mass = vec![0.0f64; e];
+    let mut out = Tensor::zeros(&[t, x.shape()[1]]);
+    // gather tokens per expert so each expert runs one batched matmul
+    for ei in 0..e {
+        let tok_idx: Vec<usize> = (0..t).filter(|&ti| r.at2(ti, ei) != 0.0).collect();
+        if tok_idx.is_empty() {
+            continue;
+        }
+        counts[ei] = tok_idx.len() as f64;
+        let mut xs = Tensor::zeros(&[tok_idx.len(), x.shape()[1]]);
+        for (row, &ti) in tok_idx.iter().enumerate() {
+            xs.row_mut(row).copy_from_slice(x.row(ti));
+        }
+        let ys = expert_forward(&moe.experts[ei], &xs)?;
+        for (row, &ti) in tok_idx.iter().enumerate() {
+            let w = r.at2(ti, ei);
+            mass[ei] += w as f64;
+            let orow = out.row_mut(ti);
+            for (o, &y) in orow.iter_mut().zip(ys.row(row)) {
+                *o += w * y;
+            }
+        }
+    }
+    if let Some(sh) = &moe.shared {
+        let ys = expert_forward(sh, x)?;
+        out = out.add(&ys)?;
+    }
+    Ok((out, counts, mass))
+}
+
+/// Causal multi-head attention (pre-LN, residual) on (B, S, d).
+fn attn_forward(layer: &Layer, h: &Tensor, n_heads: usize, b: usize, s: usize) -> Result<Tensor> {
+    let d = h.cols();
+    let hd = d / n_heads;
+    let x = ops::layernorm(h, &layer.ln1_g, &layer.ln1_b)?;
+    let q = ops::matmul_bt(&x, &layer.wq)?;
+    let k = ops::matmul_bt(&x, &layer.wk)?;
+    let v = ops::matmul_bt(&x, &layer.wv)?;
+    let scale = 1.0 / (hd as f32).sqrt();
+    let mut ctx = Tensor::zeros(&[b * s, d]);
+    for bi in 0..b {
+        for head in 0..n_heads {
+            let off = head * hd;
+            // scores (s, s) for this (batch, head)
+            for qi in 0..s {
+                let qrow = &q.row(bi * s + qi)[off..off + hd];
+                let mut scores = vec![f32::NEG_INFINITY; s];
+                for ki in 0..=qi {
+                    let krow = &k.row(bi * s + ki)[off..off + hd];
+                    let mut dot = 0.0;
+                    for (a, b2) in qrow.iter().zip(krow) {
+                        dot += a * b2;
+                    }
+                    scores[ki] = dot * scale;
+                }
+                // softmax over the causal prefix
+                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                let mut z = 0.0;
+                for v2 in scores.iter_mut() {
+                    *v2 = (*v2 - m).exp();
+                    z += *v2;
+                }
+                let orow = &mut ctx.row_mut(bi * s + qi)[off..off + hd];
+                for ki in 0..=qi {
+                    let w = scores[ki] / z;
+                    if w == 0.0 {
+                        continue;
+                    }
+                    let vrow = &v.row(bi * s + ki)[off..off + hd];
+                    for (o, &vv) in orow.iter_mut().zip(vrow) {
+                        *o += w * vv;
+                    }
+                }
+            }
+        }
+    }
+    let proj = ops::matmul_bt(&ctx, &layer.wo)?;
+    h.add(&proj)
+}
+
+/// Full forward pass. `tokens` is (B, S) of vocab ids; returns logits
+/// (B*S, V) and, if `capture` is set, per-layer calibration records.
+pub fn forward(
+    model: &ModelWeights,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    mut capture: Option<&mut Vec<LayerCapture>>,
+) -> Result<Tensor> {
+    if tokens.len() != b * s {
+        bail!("token buffer {} != {b}x{s}", tokens.len());
+    }
+    let d = model.cfg.d_model;
+    // embed
+    let mut h = Tensor::zeros(&[b * s, d]);
+    for (i, &tk) in tokens.iter().enumerate() {
+        let tk = tk as usize;
+        let pos = i % s;
+        let row = h.row_mut(i);
+        for j in 0..d {
+            row[j] = model.tok_emb.at2(tk, j) + model.pos_emb.at2(pos, j);
+        }
+    }
+    // layers
+    for layer in &model.layers {
+        h = attn_forward(layer, &h, model.cfg.n_heads, b, s)?;
+        let x = ops::layernorm(&h, &layer.ln2_g, &layer.ln2_b)?;
+        let (y, counts, mass) = moe_forward(&layer.moe, &x)?;
+        if let Some(cap) = capture.as_deref_mut() {
+            cap.push(LayerCapture { x: x.clone(), counts, weight_mass: mass });
+        }
+        h = h.add(&y)?;
+    }
+    // head
+    let x = ops::layernorm(&h, &model.lnf_g, &model.lnf_b)?;
+    ops::matmul_bt(&x, &model.head)
+}
+
+/// Log-probabilities of `targets[i]` under a causal LM: `logits` (B*S, V)
+/// row i predicts token i+1 of the same sequence.
+pub fn target_logprobs(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> Vec<f32> {
+    let lp = ops::log_softmax_rows(logits);
+    let mut out = vec![0.0f32; b * s];
+    for bi in 0..b {
+        for si in 0..s - 1 {
+            let row = bi * s + si;
+            out[row] = lp.at2(row, tokens[bi * s + si + 1] as usize);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn forward_shapes_and_finiteness() {
+        let m = tiny_model(4, 2, true, 3);
+        let tokens: Vec<i32> = (0..2 * 64).map(|i| (i % 47) as i32).collect();
+        let logits = forward(&m, &tokens, 2, 64, None).unwrap();
+        assert_eq!(logits.shape(), &[128, 47]);
+        assert!(logits.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn capture_collects_all_layers() {
+        let m = tiny_model(4, 2, false, 4);
+        let tokens: Vec<i32> = (0..64).map(|i| (i % 47) as i32).collect();
+        let mut cap = Vec::new();
+        forward(&m, &tokens, 1, 64, Some(&mut cap)).unwrap();
+        assert_eq!(cap.len(), 2);
+        assert_eq!(cap[0].x.shape(), &[64, 16]);
+        // top-2 of 4 experts over 64 tokens: total count = 128
+        let total: f64 = cap[0].counts.iter().sum();
+        assert_eq!(total, 128.0);
+        assert!(cap[0].weight_mass.iter().sum::<f64>() > 0.0);
+    }
+
+    #[test]
+    fn moe_forward_is_topk_sparse_mixture() {
+        let m = tiny_model(8, 2, false, 5);
+        let moe = &m.layers[0].moe;
+        let x = Tensor::randn(&[10, 16], 1.0, &mut crate::util::rng::Rng::new(6));
+        let (y, counts, _) = moe_forward(moe, &x).unwrap();
+        assert_eq!(y.shape(), &[10, 16]);
+        assert_eq!(counts.iter().sum::<f64>(), 20.0);
+        // manual recomputation for token 0
+        let routing = route_tokens(&moe.router, &x, 2).unwrap();
+        let x0 = x.rows_slice(0, 1);
+        let mut want = Tensor::zeros(&[1, 16]);
+        for &(ei, w) in &routing[0] {
+            let e_out = expert_forward(&moe.experts[ei], &x0).unwrap();
+            want.axpy(w, &e_out).unwrap();
+        }
+        let got = y.rows_slice(0, 1);
+        assert!(got.rel_err(&want) < 1e-5);
+    }
+
+    #[test]
+    fn identity_map_is_noop() {
+        let m = tiny_model(4, 2, true, 7);
+        let x = Tensor::randn(&[12, 16], 1.0, &mut crate::util::rng::Rng::new(8));
+        let (y0, _, _) = moe_forward(&m.layers[0].moe, &x).unwrap();
+        let mut moe = m.layers[0].moe.clone();
+        moe.map = Some(Tensor::eye(4));
+        let (y1, _, _) = moe_forward(&moe, &x).unwrap();
+        assert!(y0.rel_err(&y1) < 1e-6);
+    }
+
+    #[test]
+    fn target_logprobs_alignment() {
+        let m = tiny_model(4, 2, false, 9);
+        let tokens: Vec<i32> = (0..64).map(|i| (i * 3 % 47) as i32).collect();
+        let logits = forward(&m, &tokens, 1, 64, None).unwrap();
+        let lps = target_logprobs(&logits, &tokens, 1, 64);
+        assert_eq!(lps.len(), 64);
+        assert_eq!(lps[63], 0.0); // last position predicts nothing
+        assert!(lps[..63].iter().all(|&v| v < 0.0));
+    }
+}

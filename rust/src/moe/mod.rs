@@ -1,0 +1,6 @@
+//! MoE-specific primitives: routing and usage-frequency statistics.
+
+pub mod routing;
+pub mod stats;
+
+pub use stats::UsageStats;

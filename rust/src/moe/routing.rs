@@ -1,0 +1,62 @@
+//! Router math, mirroring the paper's §3.1 formulation (and the L2 model):
+//! `probs = softmax(W_r x)`, keep the top-K entries as mixing weights
+//! (no renormalization — Eq. 1's `mask_top_K`).
+
+use anyhow::Result;
+
+use crate::tensor::{ops, Tensor};
+
+/// Route each row of `x` (T, d) with router weights (E, d).
+/// Returns, per token, the selected `(expert, weight)` pairs in descending
+/// weight order (ties broken by lower expert index, matching
+/// `jax.lax.top_k`).
+pub fn route_tokens(router: &Tensor, x: &Tensor, top_k: usize) -> Result<Vec<Vec<(usize, f32)>>> {
+    let logits = ops::matmul_bt(x, router)?; // (T, E)
+    let probs = ops::softmax_rows(&logits);
+    let t = probs.rows();
+    let mut out = Vec::with_capacity(t);
+    for ti in 0..t {
+        let (idx, vals) = ops::top_k(probs.row(ti), top_k);
+        out.push(idx.into_iter().zip(vals).collect());
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn routing_selects_topk_softmax() {
+        let mut rng = Rng::new(61);
+        let router = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let routes = route_tokens(&router, &x, 2).unwrap();
+        assert_eq!(routes.len(), 5);
+        for r in &routes {
+            assert_eq!(r.len(), 2);
+            assert!(r[0].1 >= r[1].1);
+            // weights are softmax probs: in (0,1), sum <= 1
+            let s: f32 = r.iter().map(|&(_, w)| w).sum();
+            assert!(s > 0.0 && s <= 1.0 + 1e-6);
+            assert_ne!(r[0].0, r[1].0);
+        }
+    }
+
+    #[test]
+    fn topk_equals_full_sort() {
+        let mut rng = Rng::new(62);
+        let router = Tensor::randn(&[9, 4], 1.0, &mut rng);
+        let x = Tensor::randn(&[3, 4], 1.0, &mut rng);
+        let logits = ops::matmul_bt(&x, &router).unwrap();
+        let probs = ops::softmax_rows(&logits);
+        let routes = route_tokens(&router, &x, 3).unwrap();
+        for (ti, r) in routes.iter().enumerate() {
+            let mut full: Vec<(usize, f32)> =
+                probs.row(ti).iter().cloned().enumerate().collect();
+            full.sort_by(|a, b| b.1.partial_cmp(&a.1).unwrap().then(a.0.cmp(&b.0)));
+            assert_eq!(r[..], full[..3]);
+        }
+    }
+}

@@ -1,0 +1,91 @@
+//! Expert usage-frequency statistics.
+//!
+//! Theorem 1 shows the optimal intra-cluster merge weights are the relative
+//! usage frequencies `f_j / Σ_{k∈C} f_k`; this accumulator collects the
+//! `f_i` over calibration batches (per layer) from either engine's routing
+//! outputs.
+
+/// Per-layer expert usage accumulator.
+#[derive(Debug, Clone)]
+pub struct UsageStats {
+    /// Hard assignment counts (tokens that selected the expert in top-K).
+    pub counts: Vec<f64>,
+    /// Soft mass (sum of routing weights) — exposed for ablations.
+    pub weight_mass: Vec<f64>,
+    pub tokens_seen: u64,
+}
+
+impl UsageStats {
+    pub fn new(n_experts: usize) -> UsageStats {
+        UsageStats {
+            counts: vec![0.0; n_experts],
+            weight_mass: vec![0.0; n_experts],
+            tokens_seen: 0,
+        }
+    }
+
+    pub fn n_experts(&self) -> usize {
+        self.counts.len()
+    }
+
+    pub fn add(&mut self, counts: &[f64], mass: &[f64], tokens: u64) {
+        assert_eq!(counts.len(), self.counts.len());
+        for (a, b) in self.counts.iter_mut().zip(counts) {
+            *a += b;
+        }
+        for (a, b) in self.weight_mass.iter_mut().zip(mass) {
+            *a += b;
+        }
+        self.tokens_seen += tokens;
+    }
+
+    /// Relative frequencies `f_i / Σ f` with a floor so that never-used
+    /// experts still receive an infinitesimal weight (keeps Theorem-1
+    /// denominators non-zero; the paper's models never hit the floor but
+    /// tiny calibration sets can).
+    pub fn frequencies(&self) -> Vec<f64> {
+        let total: f64 = self.counts.iter().sum();
+        if total <= 0.0 {
+            return vec![1.0 / self.counts.len() as f64; self.counts.len()];
+        }
+        self.counts.iter().map(|&c| (c + 1e-9) / total).collect()
+    }
+
+    /// Expert indices sorted by descending usage (cluster-center selection:
+    /// "experts with top-M usage frequencies are selected as the clustering
+    /// center").
+    pub fn by_usage_desc(&self) -> Vec<usize> {
+        let mut idx: Vec<usize> = (0..self.counts.len()).collect();
+        idx.sort_by(|&a, &b| {
+            self.counts[b]
+                .partial_cmp(&self.counts[a])
+                .unwrap()
+                .then(a.cmp(&b))
+        });
+        idx
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn accumulates_and_normalizes() {
+        let mut s = UsageStats::new(3);
+        s.add(&[2.0, 0.0, 6.0], &[0.9, 0.0, 2.4], 4);
+        s.add(&[2.0, 0.0, 2.0], &[0.8, 0.0, 0.9], 2);
+        assert_eq!(s.tokens_seen, 6);
+        let f = s.frequencies();
+        assert!((f[0] - 4.0 / 12.0).abs() < 1e-6);
+        assert!((f[2] - 8.0 / 12.0).abs() < 1e-6);
+        assert_eq!(s.by_usage_desc(), vec![2, 0, 1]);
+    }
+
+    #[test]
+    fn empty_stats_fall_back_to_uniform() {
+        let s = UsageStats::new(4);
+        let f = s.frequencies();
+        assert!(f.iter().all(|&x| (x - 0.25).abs() < 1e-9));
+    }
+}

@@ -1,0 +1,56 @@
+//! The engine abstraction: everything downstream (scorer, server,
+//! experiments) talks to a [`Engine`], so the native reference path and the
+//! PJRT artifact path are interchangeable and cross-checkable.
+
+use anyhow::Result;
+
+use crate::model::{native, ModelWeights};
+use crate::tensor::Tensor;
+
+/// A forward-pass backend. `tokens` is a row-major (b, s) id buffer;
+/// the result is logits with shape (b*s, vocab).
+pub trait Engine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor>;
+
+    fn name(&self) -> &'static str;
+}
+
+impl Engine for Box<dyn Engine> {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        (**self).logits(model, tokens, b, s)
+    }
+
+    fn name(&self) -> &'static str {
+        (**self).name()
+    }
+}
+
+/// Pure-rust reference engine (see [`crate::model::native`]).
+pub struct NativeEngine;
+
+impl Engine for NativeEngine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        native::forward(model, tokens, b, s, None)
+    }
+
+    fn name(&self) -> &'static str {
+        "native"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    #[test]
+    fn native_engine_runs() {
+        let m = tiny_model(4, 2, false, 70);
+        let tokens: Vec<i32> = (0..2 * 64).map(|i| (i % 47) as i32).collect();
+        let logits = NativeEngine.logits(&m, &tokens, 2, 64).unwrap();
+        assert_eq!(logits.shape(), &[128, 47]);
+    }
+}

@@ -1,0 +1,9 @@
+//! Runtime: the engine abstraction and the PJRT-backed implementation that
+//! executes the AOT-compiled HLO artifacts on the request path.
+
+pub mod engine;
+#[allow(clippy::module_inception)]
+pub mod pjrt;
+
+pub use engine::{Engine, NativeEngine};
+pub use pjrt::PjrtEngine;

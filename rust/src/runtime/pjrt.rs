@@ -1,0 +1,557 @@
+//! PJRT-backed engine: loads HLO-text artifacts, compiles them once on the
+//! CPU PJRT client, caches the executables, and composes full model
+//! forwards layer by layer — the request-path backend.
+//!
+//! Per-layer composition is what lets compressed and uncompressed MoE layers
+//! mix freely in one model (the merged layers use the `moe_*_n{N}_m{M}_*`
+//! artifact with the plan's A-matrix as the routing map, untouched layers
+//! the `m{N}` one with an identity map). A `monolith_*` artifact covers the
+//! uncompressed configuration as a fused-graph ablation of the per-layer
+//! dispatch overhead (EXPERIMENTS.md §Perf).
+//!
+//! Interchange is HLO **text** — see `python/compile/aot.py` and
+//! DESIGN.md §9 for why serialized protos are rejected by xla_extension
+//! 0.5.1.
+
+use std::collections::HashMap;
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::{ArtifactSpec, Dtype, Manifest};
+use crate::merge::GramBackend;
+use crate::model::{ModelWeights, MoeLayer};
+use crate::runtime::engine::Engine;
+use crate::tensor::Tensor;
+
+/// A compiled artifact plus its spec.
+struct Compiled {
+    exe: xla::PjRtLoadedExecutable,
+    spec: ArtifactSpec,
+}
+
+/// The PJRT engine. Executables are compiled lazily on first use and cached
+/// for the lifetime of the engine (compile time is reported via the public
+/// counters).
+pub struct PjrtEngine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    cache: HashMap<String, Compiled>,
+    /// Staged weight literals keyed by (model uid, artifact, param index) —
+    /// weight uploads are paid once per model version instead of per call
+    /// (§Perf optimization L3-1; invalidated via [`ModelWeights::touch`]).
+    literal_cache: HashMap<(u64, String, usize), xla::Literal>,
+    pub n_compiled: usize,
+    pub compile_seconds: f64,
+    pub n_executions: u64,
+    pub n_literal_uploads: u64,
+}
+
+/// Bound on staged weight literals before stale model versions are evicted.
+const LITERAL_CACHE_CAP: usize = 4096;
+
+impl PjrtEngine {
+    pub fn new(manifest: Manifest) -> Result<PjrtEngine> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(PjrtEngine {
+            client,
+            manifest,
+            cache: HashMap::new(),
+            literal_cache: HashMap::new(),
+            n_compiled: 0,
+            compile_seconds: 0.0,
+            n_executions: 0,
+            n_literal_uploads: 0,
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Compile (or fetch from cache) an artifact by name.
+    fn compiled(&mut self, name: &str) -> Result<&Compiled> {
+        if !self.cache.contains_key(name) {
+            let spec = self.manifest.artifact(name)?.clone();
+            let t0 = std::time::Instant::now();
+            let proto = xla::HloModuleProto::from_text_file(
+                spec.file.to_str().context("artifact path not utf-8")?,
+            )
+            .with_context(|| format!("parsing HLO text for {name}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.compile_seconds += t0.elapsed().as_secs_f64();
+            self.n_compiled += 1;
+            crate::debuglog!("compiled {name} in {:.3}s", t0.elapsed().as_secs_f64());
+            self.cache.insert(name.to_string(), Compiled { exe, spec });
+        }
+        Ok(&self.cache[name])
+    }
+
+    /// Pre-compile every artifact a model needs at batch bucket `b`
+    /// (server warm-up path).
+    pub fn warmup(&mut self, model: &ModelWeights, b: usize) -> Result<()> {
+        let keys = self.model_keys(model, b);
+        for k in keys {
+            self.compiled(&k)?;
+        }
+        Ok(())
+    }
+
+    fn model_keys(&self, model: &ModelWeights, b: usize) -> Vec<String> {
+        let cfg = &model.cfg;
+        let mut keys = vec![
+            self.manifest.embed_key(cfg, b),
+            self.manifest.attn_key(cfg, b),
+            self.manifest.lmhead_key(cfg, b),
+        ];
+        for layer in &model.layers {
+            keys.push(self.moe_layer_key(model, &layer.moe, b));
+        }
+        keys.dedup();
+        keys
+    }
+
+    fn moe_layer_key(&self, model: &ModelWeights, moe: &MoeLayer, b: usize) -> String {
+        let n = moe.router.shape()[0];
+        let m = moe.n_experts();
+        let cfg = &model.cfg;
+        format!(
+            "moe_d{}_f{}_n{}_m{}_k{}_{}_b{}",
+            cfg.d_model, cfg.d_ff, n, m, cfg.top_k,
+            if cfg.shared_expert { "sh" } else { "ns" }, b
+        )
+    }
+
+    /// Execute an artifact on f32/i32 values, in manifest parameter order.
+    /// `ArgValue::Staged*` arguments are uploaded once per (model uid,
+    /// artifact, position) and reused from the literal cache afterwards.
+    pub fn run(&mut self, name: &str, inputs: &[ArgValue]) -> Result<Vec<Tensor>> {
+        self.n_executions += 1;
+        // 1. make sure the executable exists (mutable phase)
+        self.compiled(name)?;
+        // 2. populate cache misses for staged params (mutable phase)
+        {
+            let spec = &self.cache[name].spec;
+            if inputs.len() != spec.params.len() {
+                bail!("{name}: {} inputs, spec wants {}", inputs.len(), spec.params.len());
+            }
+            let mut to_insert: Vec<((u64, String, usize), xla::Literal)> = Vec::new();
+            for (idx, (arg, p)) in inputs.iter().zip(&spec.params).enumerate() {
+                if let Some(uid) = arg.stage_uid() {
+                    let key = (uid, name.to_string(), idx);
+                    if !self.literal_cache.contains_key(&key) {
+                        to_insert.push((key, arg.to_literal(p, name)?));
+                    }
+                }
+            }
+            if !to_insert.is_empty() {
+                self.n_literal_uploads += to_insert.len() as u64;
+                if self.literal_cache.len() + to_insert.len() > LITERAL_CACHE_CAP {
+                    // evict everything staged for other model versions
+                    let keep = to_insert[0].0 .0;
+                    self.literal_cache.retain(|k, _| k.0 == keep);
+                }
+                for (k, v) in to_insert {
+                    self.literal_cache.insert(k, v);
+                }
+            }
+        }
+        // 3. build fresh literals + assemble references (immutable phase)
+        let compiled = &self.cache[name];
+        let spec = &compiled.spec;
+        let mut fresh: Vec<(usize, xla::Literal)> = Vec::new();
+        for (idx, (arg, p)) in inputs.iter().zip(&spec.params).enumerate() {
+            if arg.stage_uid().is_none() {
+                fresh.push((idx, arg.to_literal(p, name)?));
+            }
+        }
+        let n_fresh = fresh.len() as u64;
+        let mut refs: Vec<&xla::Literal> = Vec::with_capacity(inputs.len());
+        let mut fresh_it = fresh.iter().peekable();
+        for (idx, arg) in inputs.iter().enumerate() {
+            match arg.stage_uid() {
+                Some(uid) => {
+                    refs.push(&self.literal_cache[&(uid, name.to_string(), idx)]);
+                }
+                None => {
+                    let (fidx, lit) = fresh_it.next().expect("fresh literal");
+                    debug_assert_eq!(*fidx, idx);
+                    refs.push(lit);
+                }
+            }
+        }
+        let result = compiled
+            .exe
+            .execute::<&xla::Literal>(&refs)
+            .with_context(|| format!("executing {name}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .with_context(|| format!("fetching result of {name}"))?;
+        let parts = tuple.to_tuple().context("decomposing result tuple")?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: got {} outputs, spec says {}", parts.len(), spec.outputs.len());
+        }
+        let mut out = Vec::with_capacity(parts.len());
+        for (lit, ospec) in parts.into_iter().zip(&spec.outputs) {
+            out.push(literal_to_tensor(&lit, &ospec.shape, ospec.dtype)?);
+        }
+        self.n_literal_uploads += n_fresh;
+        Ok(out)
+    }
+
+    /// Full model forward via per-layer artifacts.
+    /// `tokens` must already be padded to a manifest batch bucket.
+    fn forward_layered(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+    ) -> Result<Tensor> {
+        let cfg = &model.cfg;
+        let v = self.manifest.vocab;
+        if s != self.manifest.seq_len {
+            bail!("seq len {s} != manifest {}", self.manifest.seq_len);
+        }
+        let uid = model.uid;
+        // embed
+        let key = self.manifest.embed_key(cfg, b);
+        let mut h = self
+            .run(&key, &[
+                ArgValue::I32(tokens.to_vec()),
+                ArgValue::staged(&model.tok_emb, uid),
+                ArgValue::staged(&model.pos_emb, uid),
+            ])?
+            .into_iter()
+            .next()
+            .unwrap();
+        // layers — per-layer uid offset keeps weight literals of different
+        // layers distinct under the shared attn/moe artifact names
+        for (li, layer) in model.layers.iter().enumerate() {
+            let luid = uid.wrapping_mul(1000).wrapping_add(li as u64);
+            let attn_key = self.manifest.attn_key(cfg, b);
+            h = self
+                .run(&attn_key, &[
+                    ArgValue::F32(h),
+                    ArgValue::f32s(&layer.ln1_g, luid),
+                    ArgValue::f32s(&layer.ln1_b, luid),
+                    ArgValue::staged(&layer.wq, luid),
+                    ArgValue::staged(&layer.wk, luid),
+                    ArgValue::staged(&layer.wv, luid),
+                    ArgValue::staged(&layer.wo, luid),
+                ])?
+                .into_iter()
+                .next()
+                .unwrap();
+            let moe_key = self.moe_layer_key(model, &layer.moe, b);
+            let n = layer.moe.router.shape()[0];
+            let m = layer.moe.n_experts();
+            if let Some(map) = &layer.moe.map {
+                if map.shape() != [m, n] {
+                    bail!("routing map shape {:?} != ({m},{n})", map.shape());
+                }
+            } else if m != n {
+                bail!("moe layer has {m} experts but {n}-way router and no map");
+            }
+            let amap_arg = match &layer.moe.map {
+                Some(map) => ArgValue::Staged(luid, LazyF32::Owned(map.clone())),
+                None => ArgValue::Staged(luid, LazyF32::Owned(Tensor::eye(n))),
+            };
+            let mut args = vec![
+                ArgValue::F32(h),
+                ArgValue::f32s(&layer.ln2_g, luid),
+                ArgValue::f32s(&layer.ln2_b, luid),
+                ArgValue::staged(&layer.moe.router, luid),
+                amap_arg,
+                ArgValue::Staged(luid, LazyF32::Stacked(&layer.moe, 0)),
+                ArgValue::Staged(luid, LazyF32::Stacked(&layer.moe, 1)),
+                ArgValue::Staged(luid, LazyF32::Stacked(&layer.moe, 2)),
+            ];
+            if let Some(sh) = &layer.moe.shared {
+                args.push(ArgValue::staged(&sh.wg, luid));
+                args.push(ArgValue::staged(&sh.wu, luid));
+                args.push(ArgValue::staged(&sh.wd, luid));
+            }
+            let outs = self.run(&moe_key, &args)?;
+            h = outs.into_iter().next().unwrap();
+        }
+        // head
+        let key = self.manifest.lmhead_key(cfg, b);
+        let outs = self.run(&key, &[
+            ArgValue::F32(h),
+            ArgValue::f32s(&model.lnf_g, uid),
+            ArgValue::f32s(&model.lnf_b, uid),
+            ArgValue::staged(&model.head, uid),
+        ])?;
+        let logits = outs.into_iter().next().unwrap(); // (b, s, v)
+        logits.reshape(&[b * s, v])
+    }
+
+    /// Monolithic (single fused executable) forward for the uncompressed
+    /// configuration — the per-layer-dispatch ablation.
+    pub fn forward_monolith(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+    ) -> Result<Tensor> {
+        let key = self.manifest.monolith_key(&model.cfg, b);
+        let spec = self.manifest.artifact(&key)?.clone();
+        let keys = spec
+            .monolith_keys
+            .as_ref()
+            .context("monolith artifact without key list")?
+            .clone();
+        let mut args = vec![ArgValue::I32(tokens.to_vec())];
+        for k in &keys {
+            args.push(ArgValue::Staged(model.uid, LazyF32::MonolithKey(model, k)));
+        }
+        let outs = self.run(&key, &args)?;
+        outs.into_iter()
+            .next()
+            .unwrap()
+            .reshape(&[b * s, self.manifest.vocab])
+    }
+
+    /// Pad sequences up to the nearest batch bucket, run, and slice back.
+    pub fn logits_bucketed(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        monolith: bool,
+    ) -> Result<Tensor> {
+        let bucket = self.manifest.bucket_for(b);
+        let mut padded = tokens.to_vec();
+        padded.resize(bucket * s, 0);
+        let full = if monolith {
+            self.forward_monolith(model, &padded, bucket, s)?
+        } else {
+            self.forward_layered(model, &padded, bucket, s)?
+        };
+        if bucket == b {
+            return Ok(full);
+        }
+        Ok(full.rows_slice(0, b * s))
+    }
+}
+
+impl Engine for PjrtEngine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        self.logits_bucketed(model, tokens, b, s, false)
+    }
+
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+}
+
+/// Gram backend executing the `gram_*` artifact (the L1 pallas kernel) —
+/// injected into the MergeMoE solve by the compression pipeline.
+pub struct PjrtGram<'a> {
+    pub engine: &'a mut PjrtEngine,
+    pub model: String,
+}
+
+impl GramBackend for PjrtGram<'_> {
+    fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)> {
+        let (f, s_cols) = (p.shape()[0], p.shape()[1]);
+        let d = y.shape()[0];
+        let cfg = self.engine.manifest.model(&self.model)?.clone();
+        let max_bucket = *self
+            .engine
+            .manifest
+            .gram_cols
+            .last()
+            .context("no gram buckets")?;
+        if s_cols > max_bucket {
+            // split along columns and accumulate (zero-overhead: Gram blocks
+            // are additive over column chunks)
+            let mid = s_cols / 2;
+            let (pp1, yp1) =
+                self.gram(&cols_slice(p, 0, mid)?, &cols_slice(y, 0, mid)?)?;
+            let (pp2, yp2) =
+                self.gram(&cols_slice(p, mid, s_cols)?, &cols_slice(y, mid, s_cols)?)?;
+            return Ok((pp1.add(&pp2)?, yp1.add(&yp2)?));
+        }
+        // smallest bucket that fits; zero-pad extra columns (they contribute
+        // nothing to either Gram block)
+        let bucket = *self
+            .engine
+            .manifest
+            .gram_cols
+            .iter()
+            .find(|&&g| g >= s_cols)
+            .unwrap();
+        let key = self.engine.manifest.gram_key(&cfg, bucket);
+        let pad = |t: &Tensor, rows: usize| -> Tensor {
+            let mut out = Tensor::zeros(&[rows, bucket]);
+            for r in 0..rows {
+                out.row_mut(r)[..s_cols].copy_from_slice(t.row(r));
+            }
+            out
+        };
+        let outs = self
+            .engine
+            .run(&key, &[ArgValue::F32(pad(p, f)), ArgValue::F32(pad(y, d))])?;
+        let mut it = outs.into_iter();
+        Ok((it.next().unwrap(), it.next().unwrap()))
+    }
+}
+
+fn cols_slice(t: &Tensor, lo: usize, hi: usize) -> Result<Tensor> {
+    let rows = t.shape()[0];
+    let mut out = Tensor::zeros(&[rows, hi - lo]);
+    for r in 0..rows {
+        out.row_mut(r).copy_from_slice(&t.row(r)[lo..hi]);
+    }
+    Ok(out)
+}
+
+/// Lazily-materialized f32 payload for staged (weight) parameters: on a
+/// literal-cache hit nothing is copied or stacked at all.
+pub enum LazyF32<'a> {
+    Owned(Tensor),
+    Slice(&'a [f32]),
+    /// Stack the layer's experts on demand: 0 = wg, 1 = wu, 2 = wd.
+    Stacked(&'a MoeLayer, u8),
+    /// A monolith weight by key (see `monolith_weight`).
+    MonolithKey(&'a ModelWeights, &'a str),
+}
+
+impl LazyF32<'_> {
+    fn materialize(&self) -> Result<std::borrow::Cow<'_, [f32]>> {
+        use std::borrow::Cow;
+        Ok(match self {
+            LazyF32::Owned(t) => Cow::Borrowed(t.data()),
+            LazyF32::Slice(s) => Cow::Borrowed(s),
+            LazyF32::Stacked(moe, which) => {
+                let (wg, wu, wd) = moe.stacked();
+                Cow::Owned(match which {
+                    0 => wg.into_vec(),
+                    1 => wu.into_vec(),
+                    _ => wd.into_vec(),
+                })
+            }
+            LazyF32::MonolithKey(model, key) => {
+                Cow::Owned(monolith_weight(model, key)?.into_vec())
+            }
+        })
+    }
+}
+
+/// Argument value for an artifact call. `Staged` args carry the owning
+/// model's uid and are cached as XLA literals across calls.
+pub enum ArgValue<'a> {
+    F32(Tensor),
+    I32(Vec<i32>),
+    Staged(u64, LazyF32<'a>),
+}
+
+impl<'a> ArgValue<'a> {
+    pub fn f32s(v: &'a [f32], uid: u64) -> ArgValue<'a> {
+        ArgValue::Staged(uid, LazyF32::Slice(v))
+    }
+
+    pub fn staged(t: &Tensor, uid: u64) -> ArgValue<'a> {
+        // weight tensors are small; an owned copy on the miss path keeps
+        // lifetimes simple (hit path never reaches here)
+        ArgValue::Staged(uid, LazyF32::Owned(t.clone()))
+    }
+
+    fn stage_uid(&self) -> Option<u64> {
+        // §Perf A/B switch: MERGEMOE_NO_STAGE=1 disables the weight-literal
+        // cache so benches can measure the unoptimized upload-per-call path.
+        static DISABLED: std::sync::OnceLock<bool> = std::sync::OnceLock::new();
+        if *DISABLED.get_or_init(|| std::env::var("MERGEMOE_NO_STAGE").is_ok()) {
+            return None;
+        }
+        match self {
+            ArgValue::Staged(uid, _) => Some(*uid),
+            _ => None,
+        }
+    }
+
+    fn to_literal(&self, p: &crate::config::ParamSpec, art: &str) -> Result<xla::Literal> {
+        let dims: Vec<i64> = p.shape.iter().map(|&d| d as i64).collect();
+        let want: usize = p.shape.iter().product();
+        match (self, p.dtype) {
+            (ArgValue::F32(t), Dtype::F32) => {
+                if t.len() != want {
+                    bail!("{art}: param {} length {} != shape {:?}",
+                          p.name, t.len(), p.shape);
+                }
+                Ok(xla::Literal::vec1(t.data()).reshape(&dims)?)
+            }
+            (ArgValue::Staged(_, lazy), Dtype::F32) => {
+                let data = lazy.materialize()?;
+                if data.len() != want {
+                    bail!("{art}: staged param {} length {} != shape {:?}",
+                          p.name, data.len(), p.shape);
+                }
+                Ok(xla::Literal::vec1(&data).reshape(&dims)?)
+            }
+            (ArgValue::I32(v), Dtype::I32) => {
+                if v.len() != want {
+                    bail!("{art}: param {} length {} != shape {:?}",
+                          p.name, v.len(), p.shape);
+                }
+                Ok(xla::Literal::vec1(v.as_slice()).reshape(&dims)?)
+            }
+            _ => bail!("{art}: dtype mismatch for param {}", p.name),
+        }
+    }
+}
+
+fn literal_to_tensor(lit: &xla::Literal, shape: &[usize], dtype: Dtype) -> Result<Tensor> {
+    match dtype {
+        Dtype::F32 => {
+            let v: Vec<f32> = lit.to_vec()?;
+            Tensor::from_vec(shape, v)
+        }
+        Dtype::I32 => {
+            let v: Vec<i32> = lit.to_vec()?;
+            Tensor::from_vec(shape, v.into_iter().map(|x| x as f32).collect())
+        }
+    }
+}
+
+fn monolith_weight(model: &ModelWeights, key: &str) -> Result<Tensor> {
+    let t = |v: &[f32]| Tensor::from_vec(&[v.len()], v.to_vec()).unwrap();
+    if let Some(rest) = key.strip_prefix('L') {
+        let (idx, name) = rest.split_once('.').context("bad monolith key")?;
+        let l = &model.layers[idx.parse::<usize>()?];
+        return Ok(match name {
+            "ln1_g" => t(&l.ln1_g),
+            "ln1_b" => t(&l.ln1_b),
+            "ln2_g" => t(&l.ln2_g),
+            "ln2_b" => t(&l.ln2_b),
+            "wq" => l.wq.clone(),
+            "wk" => l.wk.clone(),
+            "wv" => l.wv.clone(),
+            "wo" => l.wo.clone(),
+            "router" => l.moe.router.clone(),
+            "wg" => l.moe.stacked().0,
+            "wu" => l.moe.stacked().1,
+            "wd" => l.moe.stacked().2,
+            "swg" => l.moe.shared.as_ref().context("no shared")?.wg.clone(),
+            "swu" => l.moe.shared.as_ref().context("no shared")?.wu.clone(),
+            "swd" => l.moe.shared.as_ref().context("no shared")?.wd.clone(),
+            _ => bail!("unknown monolith key {key}"),
+        });
+    }
+    Ok(match key {
+        "tok_emb" => model.tok_emb.clone(),
+        "pos_emb" => model.pos_emb.clone(),
+        "lnf_g" => t(&model.lnf_g),
+        "lnf_b" => t(&model.lnf_b),
+        "head" => model.head.clone(),
+        _ => bail!("unknown monolith key {key}"),
+    })
+}

@@ -1,0 +1,281 @@
+//! Dense row-major f32 tensor substrate.
+//!
+//! This backs (a) the native reference engine that cross-checks the PJRT
+//! path, and (b) all merge-time math (clustering distances, expert
+//! evaluation on calibration samples, the Gram accumulations). It is a small
+//! library by design: shapes are `Vec<usize>`, storage is a flat `Vec<f32>`,
+//! and the only heavily optimized routine is [`ops::matmul`] (cache-blocked,
+//! written so LLVM auto-vectorizes the inner kernel).
+
+pub mod ops;
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Row-major dense f32 tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    shape: Vec<usize>,
+    data: Vec<f32>,
+}
+
+impl Tensor {
+    // ---------------- constructors ----------------
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![0.0; shape.iter().product()] }
+    }
+
+    pub fn full(shape: &[usize], v: f32) -> Tensor {
+        Tensor { shape: shape.to_vec(), data: vec![v; shape.iter().product()] }
+    }
+
+    pub fn from_vec(shape: &[usize], data: Vec<f32>) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != data.len() {
+            bail!("shape {:?} needs {} elements, got {}", shape, n, data.len());
+        }
+        Ok(Tensor { shape: shape.to_vec(), data })
+    }
+
+    /// Identity matrix (n × n).
+    pub fn eye(n: usize) -> Tensor {
+        let mut t = Tensor::zeros(&[n, n]);
+        for i in 0..n {
+            t.data[i * n + i] = 1.0;
+        }
+        t
+    }
+
+    /// I.i.d. N(0, scale²) entries — property tests & synthetic weights.
+    pub fn randn(shape: &[usize], scale: f32, rng: &mut Rng) -> Tensor {
+        let mut t = Tensor::zeros(shape);
+        for v in &mut t.data {
+            *v = rng.normal() as f32 * scale;
+        }
+        t
+    }
+
+    // ---------------- shape ----------------
+
+    pub fn shape(&self) -> &[usize] {
+        &self.shape
+    }
+
+    pub fn ndim(&self) -> usize {
+        self.shape.len()
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Rows of the matrix view (product of all but the last dim).
+    pub fn rows(&self) -> usize {
+        self.len() / self.cols().max(1)
+    }
+
+    /// Last dimension.
+    pub fn cols(&self) -> usize {
+        *self.shape.last().unwrap_or(&1)
+    }
+
+    pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
+        let n: usize = shape.iter().product();
+        if n != self.data.len() {
+            bail!("cannot reshape {:?} ({} elems) to {:?}", self.shape, self.data.len(), shape);
+        }
+        self.shape = shape.to_vec();
+        Ok(self)
+    }
+
+    // ---------------- access ----------------
+
+    pub fn data(&self) -> &[f32] {
+        &self.data
+    }
+
+    pub fn data_mut(&mut self) -> &mut [f32] {
+        &mut self.data
+    }
+
+    pub fn into_vec(self) -> Vec<f32> {
+        self.data
+    }
+
+    /// 2-D indexing helper (row-major).
+    #[inline]
+    pub fn at2(&self, i: usize, j: usize) -> f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        self.data[i * self.shape[1] + j]
+    }
+
+    #[inline]
+    pub fn at2_mut(&mut self, i: usize, j: usize) -> &mut f32 {
+        debug_assert_eq!(self.ndim(), 2);
+        &mut self.data[i * self.shape[1] + j]
+    }
+
+    /// Borrow row `i` of a 2-D tensor.
+    pub fn row(&self, i: usize) -> &[f32] {
+        let c = self.cols();
+        &self.data[i * c..(i + 1) * c]
+    }
+
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        let c = self.cols();
+        &mut self.data[i * c..(i + 1) * c]
+    }
+
+    /// Copy of a contiguous sub-block of rows `[lo, hi)` (2-D view).
+    pub fn rows_slice(&self, lo: usize, hi: usize) -> Tensor {
+        let c = self.cols();
+        Tensor {
+            shape: vec![hi - lo, c],
+            data: self.data[lo * c..hi * c].to_vec(),
+        }
+    }
+
+    // ---------------- elementwise ----------------
+
+    pub fn map(mut self, f: impl Fn(f32) -> f32) -> Tensor {
+        for v in &mut self.data {
+            *v = f(*v);
+        }
+        self
+    }
+
+    pub fn scale(self, s: f32) -> Tensor {
+        self.map(|x| x * s)
+    }
+
+    pub fn add(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("add shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a += b;
+        }
+        Ok(out)
+    }
+
+    pub fn sub(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("sub shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a -= b;
+        }
+        Ok(out)
+    }
+
+    /// In-place `self += alpha * other`.
+    pub fn axpy(&mut self, alpha: f32, other: &Tensor) -> Result<()> {
+        if self.shape != other.shape {
+            bail!("axpy shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        for (a, b) in self.data.iter_mut().zip(&other.data) {
+            *a += alpha * b;
+        }
+        Ok(())
+    }
+
+    pub fn hadamard(&self, other: &Tensor) -> Result<Tensor> {
+        if self.shape != other.shape {
+            bail!("hadamard shape mismatch {:?} vs {:?}", self.shape, other.shape);
+        }
+        let mut out = self.clone();
+        for (a, b) in out.data.iter_mut().zip(&other.data) {
+            *a *= b;
+        }
+        Ok(out)
+    }
+
+    // ---------------- reductions / norms ----------------
+
+    pub fn frob_norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn max_abs_diff(&self, other: &Tensor) -> f32 {
+        self.data
+            .iter()
+            .zip(&other.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0, f32::max)
+    }
+
+    /// Relative Frobenius error ‖a−b‖/(‖b‖+eps) — the metric used by all
+    /// cross-engine tolerance checks.
+    pub fn rel_err(&self, other: &Tensor) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (a, b) in self.data.iter().zip(&other.data) {
+            num += ((a - b) as f64).powi(2);
+            den += (*b as f64).powi(2);
+        }
+        (num.sqrt()) / (den.sqrt() + 1e-12)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn construct_and_reshape() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 4., 5., 6.]).unwrap();
+        assert_eq!(t.at2(1, 2), 6.0);
+        let r = t.reshape(&[3, 2]).unwrap();
+        assert_eq!(r.at2(2, 1), 6.0);
+        assert!(Tensor::from_vec(&[2, 2], vec![1.0]).is_err());
+    }
+
+    #[test]
+    fn eye_and_rows() {
+        let i = Tensor::eye(3);
+        assert_eq!(i.row(1), &[0., 1., 0.]);
+        let s = i.rows_slice(1, 3);
+        assert_eq!(s.shape(), &[2, 3]);
+        assert_eq!(s.at2(0, 1), 1.0);
+    }
+
+    #[test]
+    fn elementwise() {
+        let a = Tensor::from_vec(&[2], vec![1., 2.]).unwrap();
+        let b = Tensor::from_vec(&[2], vec![3., 5.]).unwrap();
+        assert_eq!(a.add(&b).unwrap().data(), &[4., 7.]);
+        assert_eq!(b.sub(&a).unwrap().data(), &[2., 3.]);
+        assert_eq!(a.hadamard(&b).unwrap().data(), &[3., 10.]);
+        let mut c = a.clone();
+        c.axpy(2.0, &b).unwrap();
+        assert_eq!(c.data(), &[7., 12.]);
+        assert!(a.add(&Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn norms() {
+        let a = Tensor::from_vec(&[2], vec![3., 4.]).unwrap();
+        assert!((a.frob_norm() - 5.0).abs() < 1e-12);
+        let b = Tensor::from_vec(&[2], vec![3., 5.]).unwrap();
+        assert_eq!(a.max_abs_diff(&b), 1.0);
+        assert!(a.rel_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn randn_distribution() {
+        let mut rng = Rng::new(11);
+        let t = Tensor::randn(&[100, 100], 0.5, &mut rng);
+        let mean: f64 = t.data().iter().map(|&x| x as f64).sum::<f64>() / 1e4;
+        let var: f64 = t.data().iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / 1e4;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 0.25).abs() < 0.02, "var {var}");
+    }
+}

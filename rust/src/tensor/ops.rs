@@ -1,0 +1,305 @@
+//! Tensor operations: cache-blocked matmul plus the neural-net primitives the
+//! native engine needs (softmax, layernorm, silu, top-k).
+//!
+//! The matmul kernel is the native engine's hot path; it is written i-k-j
+//! with a register-blocked inner loop over contiguous rows of `b`, which LLVM
+//! auto-vectorizes. `matmul_bt` (a @ bᵀ) exists because every linear layer in
+//! the model uses the `y = x Wᵀ` convention, and transposing on the fly
+//! would destroy the contiguous access pattern.
+
+use anyhow::{bail, Result};
+
+use super::Tensor;
+
+/// Block size for the k-dimension (fits comfortably in L1 with 64-wide rows).
+const KB: usize = 64;
+
+/// `a (m,k) @ b (k,n) -> (m,n)`.
+pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = mat_dims(a)?;
+    let (k2, n) = mat_dims(b)?;
+    if k != k2 {
+        bail!("matmul inner dim mismatch: {:?} @ {:?}", a.shape(), b.shape());
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for kb in (0..k).step_by(KB) {
+        let kend = (kb + KB).min(k);
+        for i in 0..m {
+            let arow = &ad[i * k..(i + 1) * k];
+            let orow = &mut od[i * n..(i + 1) * n];
+            for kk in kb..kend {
+                let av = arow[kk];
+                if av == 0.0 {
+                    continue; // routing matrices are mostly zero
+                }
+                let brow = &bd[kk * n..(kk + 1) * n];
+                for (o, &bv) in orow.iter_mut().zip(brow) {
+                    *o += av * bv;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// `a (m,k) @ bᵀ where b is (n,k) -> (m,n)`; both operands read row-major.
+pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, k) = mat_dims(a)?;
+    let (n, k2) = mat_dims(b)?;
+    if k != k2 {
+        bail!("matmul_bt inner dim mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for i in 0..m {
+        let arow = &ad[i * k..(i + 1) * k];
+        let orow = &mut od[i * n..(i + 1) * n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            let brow = &bd[j * k..(j + 1) * k];
+            let mut acc = 0.0f32;
+            for (x, y) in arow.iter().zip(brow) {
+                acc += x * y;
+            }
+            *o = acc;
+        }
+    }
+    Ok(out)
+}
+
+/// `aᵀ (k,m)ᵀ @ b (k,n) -> (m,n)` — used by Gram accumulations (PPᵀ, YPᵀ
+/// arrive column-chunked).
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (k, m) = mat_dims(a)?;
+    let (k2, n) = mat_dims(b)?;
+    if k != k2 {
+        bail!("matmul_at inner dim mismatch: {:?}ᵀ @ {:?}", a.shape(), b.shape());
+    }
+    let mut out = Tensor::zeros(&[m, n]);
+    let ad = a.data();
+    let bd = b.data();
+    let od = out.data_mut();
+    for kk in 0..k {
+        let arow = &ad[kk * m..(kk + 1) * m];
+        let brow = &bd[kk * n..(kk + 1) * n];
+        for (i, &av) in arow.iter().enumerate() {
+            if av == 0.0 {
+                continue;
+            }
+            let orow = &mut od[i * n..(i + 1) * n];
+            for (o, &bv) in orow.iter_mut().zip(brow) {
+                *o += av * bv;
+            }
+        }
+    }
+    Ok(out)
+}
+
+fn mat_dims(t: &Tensor) -> Result<(usize, usize)> {
+    match t.shape() {
+        [m, n] => Ok((*m, *n)),
+        s => bail!("expected 2-D tensor, got {s:?}"),
+    }
+}
+
+/// 2-D transpose.
+pub fn transpose(t: &Tensor) -> Result<Tensor> {
+    let (m, n) = mat_dims(t)?;
+    let mut out = Tensor::zeros(&[n, m]);
+    for i in 0..m {
+        for j in 0..n {
+            *out.at2_mut(j, i) = t.at2(i, j);
+        }
+    }
+    Ok(out)
+}
+
+/// Row-wise softmax over the last dimension (numerically stabilized).
+pub fn softmax_rows(t: &Tensor) -> Tensor {
+    let c = t.cols();
+    let mut out = t.clone();
+    for i in 0..out.rows() {
+        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+    out
+}
+
+/// Row-wise log-softmax over the last dimension.
+pub fn log_softmax_rows(t: &Tensor) -> Tensor {
+    let c = t.cols();
+    let mut out = t.clone();
+    for i in 0..out.rows() {
+        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
+        let lz = z.ln() + m;
+        for v in row.iter_mut() {
+            *v -= lz;
+        }
+    }
+    out
+}
+
+/// LayerNorm over the last dimension with affine params (eps matches the L2
+/// model: 1e-5).
+pub fn layernorm(t: &Tensor, gamma: &[f32], beta: &[f32]) -> Result<Tensor> {
+    let c = t.cols();
+    if gamma.len() != c || beta.len() != c {
+        bail!("layernorm param size mismatch: {} vs {}", gamma.len(), c);
+    }
+    let mut out = t.clone();
+    for i in 0..out.rows() {
+        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+        let mean = row.iter().sum::<f32>() / c as f32;
+        let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
+        let inv = 1.0 / (var + 1e-5).sqrt();
+        for (j, v) in row.iter_mut().enumerate() {
+            *v = (*v - mean) * inv * gamma[j] + beta[j];
+        }
+    }
+    Ok(out)
+}
+
+/// SiLU (swish) activation, matching `jax.nn.silu`.
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+/// Indices and values of the top-k entries of a row (descending, stable on
+/// ties by lower index — matches `jax.lax.top_k`).
+pub fn top_k(row: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
+    let mut idx: Vec<usize> = (0..row.len()).collect();
+    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    idx.truncate(k);
+    let vals = idx.iter().map(|&i| row[i]).collect();
+    (idx, vals)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+        let (m, k) = (a.shape()[0], a.shape()[1]);
+        let n = b.shape()[1];
+        let mut o = Tensor::zeros(&[m, n]);
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0;
+                for kk in 0..k {
+                    s += a.at2(i, kk) * b.at2(kk, j);
+                }
+                *o.at2_mut(i, j) = s;
+            }
+        }
+        o
+    }
+
+    #[test]
+    fn matmul_matches_naive_random_shapes() {
+        let mut rng = Rng::new(21);
+        for _ in 0..20 {
+            let m = rng.range(1, 33) as usize;
+            let k = rng.range(1, 90) as usize;
+            let n = rng.range(1, 40) as usize;
+            let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+            let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+            let got = matmul(&a, &b).unwrap();
+            let want = naive_matmul(&a, &b);
+            assert!(got.rel_err(&want) < 1e-5, "m={m} k={k} n={n}");
+        }
+    }
+
+    #[test]
+    fn matmul_bt_and_at_agree_with_transpose() {
+        let mut rng = Rng::new(22);
+        let a = Tensor::randn(&[17, 23], 1.0, &mut rng);
+        let b = Tensor::randn(&[9, 23], 1.0, &mut rng);
+        let want = matmul(&a, &transpose(&b).unwrap()).unwrap();
+        let got = matmul_bt(&a, &b).unwrap();
+        assert!(got.rel_err(&want) < 1e-5);
+
+        let c = Tensor::randn(&[23, 11], 1.0, &mut rng);
+        let at = Tensor::randn(&[23, 6], 1.0, &mut rng);
+        let want2 = matmul(&transpose(&at).unwrap(), &c).unwrap();
+        let got2 = matmul_at(&at, &c).unwrap();
+        assert!(got2.rel_err(&want2) < 1e-5);
+    }
+
+    #[test]
+    fn shape_errors() {
+        let a = Tensor::zeros(&[2, 3]);
+        let b = Tensor::zeros(&[4, 5]);
+        assert!(matmul(&a, &b).is_err());
+        assert!(matmul_bt(&a, &b).is_err());
+        assert!(matmul(&a, &Tensor::zeros(&[3])).is_err());
+    }
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]).unwrap();
+        let s = softmax_rows(&t);
+        for i in 0..2 {
+            let sum: f32 = s.row(i).iter().sum();
+            assert!((sum - 1.0).abs() < 1e-5);
+        }
+        // large-value row must not produce NaN
+        assert!((s.at2(1, 0) - 1.0 / 3.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn log_softmax_consistent() {
+        let t = Tensor::from_vec(&[1, 4], vec![0.1, -2.0, 3.0, 0.5]).unwrap();
+        let ls = log_softmax_rows(&t);
+        let s = softmax_rows(&t);
+        for j in 0..4 {
+            assert!((ls.at2(0, j).exp() - s.at2(0, j)).abs() < 1e-5);
+        }
+    }
+
+    #[test]
+    fn layernorm_zero_mean_unit_var() {
+        let mut rng = Rng::new(4);
+        let t = Tensor::randn(&[5, 64], 3.0, &mut rng);
+        let g = vec![1.0; 64];
+        let b = vec![0.0; 64];
+        let o = layernorm(&t, &g, &b).unwrap();
+        for i in 0..5 {
+            let row = o.row(i);
+            let mean: f32 = row.iter().sum::<f32>() / 64.0;
+            let var: f32 = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / 64.0;
+            assert!(mean.abs() < 1e-4);
+            assert!((var - 1.0).abs() < 1e-2);
+        }
+    }
+
+    #[test]
+    fn top_k_matches_sort() {
+        let row = [0.1, 0.7, 0.3, 0.7, 0.05];
+        let (idx, vals) = top_k(&row, 3);
+        assert_eq!(idx, vec![1, 3, 2]); // stable tie-break by index
+        assert_eq!(vals, vec![0.7, 0.7, 0.3]);
+    }
+
+    #[test]
+    fn silu_values() {
+        assert!((silu(0.0)).abs() < 1e-7);
+        assert!((silu(10.0) - 10.0).abs() < 1e-3);
+        assert!(silu(-10.0).abs() < 1e-3);
+    }
+}

@@ -1,0 +1,133 @@
+//! Tiny command-line argument parser (clap is unavailable offline).
+//!
+//! Model: `binary <subcommand> [--flag value] [--switch] [positional...]`.
+//! Flags may be given as `--key value` or `--key=value`.
+
+use std::collections::BTreeMap;
+
+use anyhow::{bail, Context, Result};
+
+/// Parsed command line.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub flags: BTreeMap<String, String>,
+    pub switches: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse `std::env::args()` (skipping argv[0]). `known_switches` lists
+    /// boolean flags that take no value.
+    pub fn parse(argv: &[String], known_switches: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = argv.iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(stripped) = a.strip_prefix("--") {
+                if let Some((k, v)) = stripped.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if known_switches.contains(&stripped) {
+                    out.switches.push(stripped.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .with_context(|| format!("flag --{stripped} expects a value"))?;
+                    out.flags.insert(stripped.to_string(), v.clone());
+                }
+            } else if out.subcommand.is_none() && out.positional.is_empty() {
+                out.subcommand = Some(a.clone());
+            } else {
+                out.positional.push(a.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env(known_switches: &[&str]) -> Result<Args> {
+        let argv: Vec<String> = std::env::args().skip(1).collect();
+        Args::parse(&argv, known_switches)
+    }
+
+    pub fn has(&self, switch: &str) -> bool {
+        self.switches.iter().any(|s| s == switch)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    pub fn usize(&self, key: &str, default: usize) -> Result<usize> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects an integer, got {v:?}")),
+        }
+    }
+
+    pub fn f64(&self, key: &str, default: f64) -> Result<f64> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v.parse().with_context(|| format!("--{key} expects a number, got {v:?}")),
+        }
+    }
+
+    pub fn require(&self, key: &str) -> Result<&str> {
+        match self.get(key) {
+            Some(v) => Ok(v),
+            None => bail!("missing required flag --{key}"),
+        }
+    }
+
+    /// Comma-separated list flag, e.g. `--tasks copy,rev`.
+    pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_subcommand_flags_switches() {
+        let a = Args::parse(
+            &sv(&["eval", "--model", "beta", "--verbose", "--n=5", "extra"]),
+            &["verbose"],
+        )
+        .unwrap();
+        assert_eq!(a.subcommand.as_deref(), Some("eval"));
+        assert_eq!(a.get("model"), Some("beta"));
+        assert!(a.has("verbose"));
+        assert_eq!(a.usize("n", 0).unwrap(), 5);
+        assert_eq!(a.positional, vec!["extra"]);
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(Args::parse(&sv(&["x", "--flag"]), &[]).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = Args::parse(&sv(&["run"]), &[]).unwrap();
+        assert_eq!(a.usize("n", 7).unwrap(), 7);
+        assert_eq!(a.get_or("mode", "fast"), "fast");
+        assert_eq!(a.list("tasks", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn list_flag() {
+        let a = Args::parse(&sv(&["run", "--tasks", "copy, rev,sort"]), &[]).unwrap();
+        assert_eq!(a.list("tasks", &[]), vec!["copy", "rev", "sort"]);
+    }
+}

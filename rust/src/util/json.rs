@@ -1,0 +1,406 @@
+//! Minimal but complete JSON parser/serializer (serde is unavailable in the
+//! offline build). Used for the artifact manifest, model configs, metrics
+//! dumps and experiment reports.
+//!
+//! Supports the full JSON grammar (objects, arrays, strings with escapes,
+//! numbers, booleans, null); numbers are stored as f64, which is lossless for
+//! every integer this project serializes (|n| < 2^53).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Json {
+    Null,
+    Bool(bool),
+    Num(f64),
+    Str(String),
+    Arr(Vec<Json>),
+    Obj(BTreeMap<String, Json>),
+}
+
+impl Json {
+    // ---------------- accessors ----------------
+
+    pub fn get(&self, key: &str) -> Result<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key).ok_or_else(|| anyhow!("missing key {key:?}")),
+            _ => bail!("not an object (looking up {key:?})"),
+        }
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&Json> {
+        match self {
+            Json::Obj(m) => m.get(key),
+            _ => None,
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            Json::Num(x) => Ok(*x),
+            _ => bail!("not a number: {self:?}"),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        let x = self.as_f64()?;
+        if x < 0.0 || x.fract() != 0.0 {
+            bail!("not a non-negative integer: {x}");
+        }
+        Ok(x as usize)
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            Json::Bool(b) => Ok(*b),
+            _ => bail!("not a bool: {self:?}"),
+        }
+    }
+
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            Json::Str(s) => Ok(s),
+            _ => bail!("not a string: {self:?}"),
+        }
+    }
+
+    pub fn as_arr(&self) -> Result<&[Json]> {
+        match self {
+            Json::Arr(v) => Ok(v),
+            _ => bail!("not an array: {self:?}"),
+        }
+    }
+
+    pub fn as_obj(&self) -> Result<&BTreeMap<String, Json>> {
+        match self {
+            Json::Obj(m) => Ok(m),
+            _ => bail!("not an object: {self:?}"),
+        }
+    }
+
+    /// `[1,2,3]` -> `vec![1,2,3]` (shapes in the manifest).
+    pub fn as_usize_vec(&self) -> Result<Vec<usize>> {
+        self.as_arr()?.iter().map(|x| x.as_usize()).collect()
+    }
+
+    // ---------------- constructors ----------------
+
+    pub fn obj(pairs: Vec<(&str, Json)>) -> Json {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
+    }
+
+    pub fn arr<I: IntoIterator<Item = Json>>(items: I) -> Json {
+        Json::Arr(items.into_iter().collect())
+    }
+
+    pub fn num(x: f64) -> Json {
+        Json::Num(x)
+    }
+
+    pub fn str(s: &str) -> Json {
+        Json::Str(s.to_string())
+    }
+
+    pub fn from_f64s(xs: &[f64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    // ---------------- parse / serialize ----------------
+
+    pub fn parse(text: &str) -> Result<Json> {
+        let mut p = Parser { b: text.as_bytes(), i: 0 };
+        p.ws();
+        let v = p.value().context("parsing json")?;
+        p.ws();
+        if p.i != p.b.len() {
+            bail!("trailing data at byte {}", p.i);
+        }
+        Ok(v)
+    }
+
+    pub fn parse_file(path: &std::path::Path) -> Result<Json> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        Json::parse(&text).with_context(|| format!("parsing {}", path.display()))
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut s = String::new();
+        self.write(&mut s);
+        s
+    }
+
+    fn write(&self, out: &mut String) {
+        match self {
+            Json::Null => out.push_str("null"),
+            Json::Bool(b) => out.push_str(if *b { "true" } else { "false" }),
+            Json::Num(x) => {
+                if x.fract() == 0.0 && x.abs() < 9e15 {
+                    let _ = write!(out, "{}", *x as i64);
+                } else {
+                    let _ = write!(out, "{x}");
+                }
+            }
+            Json::Str(s) => {
+                out.push('"');
+                for c in s.chars() {
+                    match c {
+                        '"' => out.push_str("\\\""),
+                        '\\' => out.push_str("\\\\"),
+                        '\n' => out.push_str("\\n"),
+                        '\t' => out.push_str("\\t"),
+                        '\r' => out.push_str("\\r"),
+                        c if (c as u32) < 0x20 => {
+                            let _ = write!(out, "\\u{:04x}", c as u32);
+                        }
+                        c => out.push(c),
+                    }
+                }
+                out.push('"');
+            }
+            Json::Arr(v) => {
+                out.push('[');
+                for (i, x) in v.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    x.write(out);
+                }
+                out.push(']');
+            }
+            Json::Obj(m) => {
+                out.push('{');
+                for (i, (k, v)) in m.iter().enumerate() {
+                    if i > 0 {
+                        out.push(',');
+                    }
+                    Json::Str(k.clone()).write(out);
+                    out.push(':');
+                    v.write(out);
+                }
+                out.push('}');
+            }
+        }
+    }
+}
+
+struct Parser<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn ws(&mut self) {
+        while self.i < self.b.len() && self.b[self.i].is_ascii_whitespace() {
+            self.i += 1;
+        }
+    }
+
+    fn peek(&self) -> Result<u8> {
+        self.b.get(self.i).copied().ok_or_else(|| anyhow!("unexpected eof"))
+    }
+
+    fn eat(&mut self, c: u8) -> Result<()> {
+        if self.peek()? != c {
+            bail!("expected {:?} at byte {}, found {:?}",
+                  c as char, self.i, self.peek()? as char);
+        }
+        self.i += 1;
+        Ok(())
+    }
+
+    fn lit(&mut self, s: &str, v: Json) -> Result<Json> {
+        if self.b[self.i..].starts_with(s.as_bytes()) {
+            self.i += s.len();
+            Ok(v)
+        } else {
+            bail!("bad literal at byte {}", self.i)
+        }
+    }
+
+    fn value(&mut self) -> Result<Json> {
+        match self.peek()? {
+            b'{' => self.object(),
+            b'[' => self.array(),
+            b'"' => Ok(Json::Str(self.string()?)),
+            b't' => self.lit("true", Json::Bool(true)),
+            b'f' => self.lit("false", Json::Bool(false)),
+            b'n' => self.lit("null", Json::Null),
+            _ => self.number(),
+        }
+    }
+
+    fn object(&mut self) -> Result<Json> {
+        self.eat(b'{')?;
+        let mut m = BTreeMap::new();
+        self.ws();
+        if self.peek()? == b'}' {
+            self.i += 1;
+            return Ok(Json::Obj(m));
+        }
+        loop {
+            self.ws();
+            let k = self.string()?;
+            self.ws();
+            self.eat(b':')?;
+            self.ws();
+            m.insert(k, self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b'}' => {
+                    self.i += 1;
+                    return Ok(Json::Obj(m));
+                }
+                c => bail!("expected , or }} at byte {}, got {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<Json> {
+        self.eat(b'[')?;
+        let mut v = Vec::new();
+        self.ws();
+        if self.peek()? == b']' {
+            self.i += 1;
+            return Ok(Json::Arr(v));
+        }
+        loop {
+            self.ws();
+            v.push(self.value()?);
+            self.ws();
+            match self.peek()? {
+                b',' => self.i += 1,
+                b']' => {
+                    self.i += 1;
+                    return Ok(Json::Arr(v));
+                }
+                c => bail!("expected , or ] at byte {}, got {:?}", self.i, c as char),
+            }
+        }
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.eat(b'"')?;
+        let mut s = String::new();
+        loop {
+            let c = self.peek()?;
+            self.i += 1;
+            match c {
+                b'"' => return Ok(s),
+                b'\\' => {
+                    let e = self.peek()?;
+                    self.i += 1;
+                    match e {
+                        b'"' => s.push('"'),
+                        b'\\' => s.push('\\'),
+                        b'/' => s.push('/'),
+                        b'n' => s.push('\n'),
+                        b't' => s.push('\t'),
+                        b'r' => s.push('\r'),
+                        b'b' => s.push('\u{8}'),
+                        b'f' => s.push('\u{c}'),
+                        b'u' => {
+                            if self.i + 4 > self.b.len() {
+                                bail!("truncated \\u escape");
+                            }
+                            let hex = std::str::from_utf8(&self.b[self.i..self.i + 4])?;
+                            let cp = u32::from_str_radix(hex, 16)?;
+                            self.i += 4;
+                            // Surrogate pairs are not produced by any of our
+                            // writers; map lone surrogates to U+FFFD.
+                            s.push(char::from_u32(cp).unwrap_or('\u{FFFD}'));
+                        }
+                        _ => bail!("bad escape at byte {}", self.i),
+                    }
+                }
+                c => {
+                    // Collect the full UTF-8 sequence starting at c.
+                    if c < 0x80 {
+                        s.push(c as char);
+                    } else {
+                        let start = self.i - 1;
+                        let len = match c {
+                            0xC0..=0xDF => 2,
+                            0xE0..=0xEF => 3,
+                            _ => 4,
+                        };
+                        let chunk = self
+                            .b
+                            .get(start..start + len)
+                            .ok_or_else(|| anyhow!("truncated utf-8"))?;
+                        s.push_str(std::str::from_utf8(chunk)?);
+                        self.i = start + len;
+                    }
+                }
+            }
+        }
+    }
+
+    fn number(&mut self) -> Result<Json> {
+        let start = self.i;
+        while self.i < self.b.len()
+            && matches!(self.b[self.i], b'0'..=b'9' | b'-' | b'+' | b'.' | b'e' | b'E')
+        {
+            self.i += 1;
+        }
+        let txt = std::str::from_utf8(&self.b[start..self.i])?;
+        Ok(Json::Num(txt.parse::<f64>().with_context(|| format!("bad number {txt:?}"))?))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_basic() {
+        let src = r#"{"a": [1, 2.5, -3], "b": {"c": true, "d": null}, "e": "hi\nthere"}"#;
+        let v = Json::parse(src).unwrap();
+        assert_eq!(v.get("a").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(v.get("b").unwrap().get("c").unwrap().as_bool().unwrap(), true);
+        assert_eq!(v.get("e").unwrap().as_str().unwrap(), "hi\nthere");
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn numbers() {
+        let v = Json::parse("[0, -1, 3.25, 1e3, 2.5e-2]").unwrap();
+        let xs: Vec<f64> = v.as_arr().unwrap().iter().map(|x| x.as_f64().unwrap()).collect();
+        assert_eq!(xs, vec![0.0, -1.0, 3.25, 1000.0, 0.025]);
+    }
+
+    #[test]
+    fn unicode_and_escapes() {
+        let v = Json::parse(r#""café — ✓""#).unwrap();
+        assert_eq!(v.as_str().unwrap(), "café — ✓");
+        let re = Json::parse(&v.to_string()).unwrap();
+        assert_eq!(v, re);
+    }
+
+    #[test]
+    fn rejects_garbage() {
+        assert!(Json::parse("{").is_err());
+        assert!(Json::parse("[1,]").is_err());
+        assert!(Json::parse("12 34").is_err());
+        assert!(Json::parse("'single'").is_err());
+    }
+
+    #[test]
+    fn integer_serialization_is_exact() {
+        let v = Json::Num(123456789.0);
+        assert_eq!(v.to_string(), "123456789");
+    }
+
+    #[test]
+    fn usize_vec() {
+        let v = Json::parse("[8, 64, 64]").unwrap();
+        assert_eq!(v.as_usize_vec().unwrap(), vec![8, 64, 64]);
+        assert!(Json::parse("[1.5]").unwrap().as_usize_vec().is_err());
+    }
+}

@@ -1,0 +1,39 @@
+//! Substrate utilities reimplemented for the offline environment:
+//! deterministic RNG, JSON, CLI parsing, logging and small helpers.
+
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod rng;
+
+/// Monotonic wall-clock helper used by metrics and the bench harness.
+pub fn now() -> std::time::Instant {
+    std::time::Instant::now()
+}
+
+/// Format a byte count human-readably (metrics/report output).
+pub fn human_bytes(n: usize) -> String {
+    let f = n as f64;
+    if f >= 1e9 {
+        format!("{:.2} GB", f / 1e9)
+    } else if f >= 1e6 {
+        format!("{:.2} MB", f / 1e6)
+    } else if f >= 1e3 {
+        format!("{:.2} KB", f / 1e3)
+    } else {
+        format!("{} B", n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn human_bytes_units() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(1_500), "1.50 KB");
+        assert_eq!(human_bytes(2_500_000), "2.50 MB");
+        assert_eq!(human_bytes(3_210_000_000), "3.21 GB");
+    }
+}

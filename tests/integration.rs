@@ -1,0 +1,179 @@
+//! Integration tests across the whole stack: real artifacts + trained
+//! weights, cross-engine numerics, end-to-end compression, serving.
+//!
+//! These tests need `make artifacts` to have run; they skip (pass
+//! vacuously, with a note) when artifacts are absent so `cargo test` works
+//! on a fresh checkout.
+
+use std::path::PathBuf;
+
+use mergemoe::calib;
+use mergemoe::config::Manifest;
+use mergemoe::coordinator::{compress, CompressSpec, ScoringServer, ServerConfig};
+use mergemoe::eval::tasks::Task;
+use mergemoe::exp::{Ctx, EngineSel};
+use mergemoe::merge::{Algorithm, NativeGram};
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+
+fn artifacts() -> Option<PathBuf> {
+    let dir = mergemoe::config::artifacts_dir();
+    let ok = dir.join("manifest.json").exists()
+        && dir.join("weights_beta.npz").exists();
+    if !ok {
+        eprintln!("[skip] artifacts not built — run `make artifacts`");
+        return None;
+    }
+    Some(dir)
+}
+
+fn load(dir: &PathBuf, name: &str) -> (Manifest, ModelWeights) {
+    let manifest = Manifest::load(dir).expect("manifest");
+    let model = ModelWeights::load(dir, manifest.model(name).unwrap()).expect("weights");
+    (manifest, model)
+}
+
+#[test]
+fn native_and_pjrt_agree_on_trained_model() {
+    let Some(dir) = artifacts() else { return };
+    let (manifest, model) = load(&dir, "beta");
+    let s = manifest.seq_len;
+    let tokens = calib::sample_sequences(None, 2, s, 5);
+    let native = NativeEngine.logits(&model, &tokens, 2, s).unwrap();
+    let mut pjrt = PjrtEngine::new(manifest).unwrap();
+    let pj = pjrt.logits(&model, &tokens, 2, s).unwrap();
+    let rel = pj.rel_err(&native);
+    assert!(rel < 1e-4, "engines disagree: rel err {rel}");
+}
+
+#[test]
+fn monolith_equals_layered_path() {
+    let Some(dir) = artifacts() else { return };
+    let (manifest, model) = load(&dir, "beta");
+    let s = manifest.seq_len;
+    let tokens = calib::sample_sequences(None, 1, s, 6);
+    let mut pjrt = PjrtEngine::new(manifest).unwrap();
+    let layered = pjrt.logits_bucketed(&model, &tokens, 1, s, false).unwrap();
+    let mono = pjrt.logits_bucketed(&model, &tokens, 1, s, true).unwrap();
+    assert!(mono.rel_err(&layered) < 1e-4);
+}
+
+#[test]
+fn bucket_padding_does_not_change_logits() {
+    let Some(dir) = artifacts() else { return };
+    let (manifest, model) = load(&dir, "beta");
+    let s = manifest.seq_len;
+    let tokens = calib::sample_sequences(None, 3, s, 7);
+    let mut pjrt = PjrtEngine::new(manifest).unwrap();
+    // b=3 pads to bucket 8; compare against running the identical 3
+    // sequences as the first rows of an explicit bucket-8 batch
+    let got = pjrt.logits(&model, &tokens, 3, s).unwrap();
+    let mut padded = tokens.clone();
+    padded.resize(8 * s, 0);
+    let full = pjrt.logits(&model, &padded, 8, s).unwrap();
+    let want = full.rows_slice(0, 3 * s);
+    assert!(got.rel_err(&want) < 1e-5);
+}
+
+#[test]
+fn compressed_model_runs_on_pjrt_and_matches_native() {
+    let Some(dir) = artifacts() else { return };
+    let (manifest, model) = load(&dir, "beta");
+    let mut spec = CompressSpec::new(vec![2, 3], 6, Algorithm::MergeMoe);
+    spec.n_calib_seqs = 16;
+    let (merged, rep) = compress(&model, &spec, &mut NativeGram).unwrap();
+    assert!(rep.params_after < rep.params_before);
+    let s = manifest.seq_len;
+    let tokens = calib::sample_sequences(None, 2, s, 8);
+    let native = NativeEngine.logits(&merged, &tokens, 2, s).unwrap();
+    let mut pjrt = PjrtEngine::new(manifest).unwrap();
+    let pj = pjrt.logits(&merged, &tokens, 2, s).unwrap();
+    assert!(pj.rel_err(&native) < 1e-4);
+}
+
+#[test]
+fn pjrt_gram_matches_native_gram() {
+    let Some(dir) = artifacts() else { return };
+    let manifest = Manifest::load(&dir).unwrap();
+    let mut engine = PjrtEngine::new(manifest).unwrap();
+    use mergemoe::merge::GramBackend;
+    use mergemoe::tensor::Tensor;
+    use mergemoe::util::rng::Rng;
+    let mut rng = Rng::new(9);
+    // non-bucket column count exercises padding; > max bucket exercises split
+    for s_cols in [100usize, 256, 3000] {
+        let p = Tensor::randn(&[64, s_cols], 1.0, &mut rng);
+        let y = Tensor::randn(&[64, s_cols], 1.0, &mut rng);
+        let (pp_n, yp_n) = NativeGram.gram(&p, &y).unwrap();
+        let mut pg = mergemoe::runtime::pjrt::PjrtGram {
+            engine: &mut engine,
+            model: "beta".to_string(),
+        };
+        let (pp_p, yp_p) = pg.gram(&p, &y).unwrap();
+        assert!(pp_p.rel_err(&pp_n) < 1e-4, "cols={s_cols}");
+        assert!(yp_p.rel_err(&yp_n) < 1e-4, "cols={s_cols}");
+    }
+}
+
+#[test]
+fn oracle_beats_or_ties_mergemoe_on_task_error() {
+    let Some(dir) = artifacts() else { return };
+    let (_, model) = load(&dir, "beta");
+    let mk = |alg| {
+        let mut spec = CompressSpec::new(vec![3], 6, alg);
+        spec.n_calib_seqs = 24;
+        let (_, rep) = compress(&model, &spec, &mut NativeGram).unwrap();
+        rep.layers[0].output_rel_err
+    };
+    let e_oracle = mk(Algorithm::Oracle);
+    let e_mm = mk(Algorithm::MergeMoe);
+    let e_ms = mk(Algorithm::MSmoe);
+    assert!(e_oracle <= e_mm + 1e-9, "oracle {e_oracle} vs mergemoe {e_mm}");
+    assert!(e_mm <= e_ms + 1e-9, "mergemoe {e_mm} vs msmoe {e_ms}");
+}
+
+#[test]
+fn full_model_beats_chance_on_every_task() {
+    let Some(dir) = artifacts() else { return };
+    let mut ctx = Ctx::new(dir, EngineSel::Native).unwrap();
+    ctx.items = 40;
+    let model = ctx.load_model("beta").unwrap();
+    let mut engine = NativeEngine;
+    // markov is the easiest task — a trained model must be far above chance
+    let accs = ctx
+        .eval_suite(&mut engine, &model, &[Task::Markov])
+        .unwrap();
+    assert!(
+        accs["markov"].percent() > 70.0,
+        "trained model near chance on markov: {}",
+        accs["markov"].percent()
+    );
+}
+
+#[test]
+fn server_on_pjrt_answers_concurrent_clients() {
+    let Some(dir) = artifacts() else { return };
+    let (_, model) = load(&dir, "beta");
+    let cfg = ServerConfig {
+        max_batch: 8,
+        max_wait: std::time::Duration::from_millis(5),
+        seq_len: 64,
+    };
+    let dir2 = dir.clone();
+    let server = ScoringServer::start(model, cfg, move || {
+        PjrtEngine::new(Manifest::load(&dir2)?)
+    });
+    let h = server.handle();
+    let mut joins = Vec::new();
+    for i in 0..6 {
+        let h = h.clone();
+        joins.push(std::thread::spawn(move || {
+            h.score("a:12+34=", if i % 2 == 0 { "46." } else { "99." }).unwrap()
+        }));
+    }
+    let scores: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    assert!(scores.iter().all(|s| s.is_finite()));
+    drop(h);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 6);
+}
