@@ -4,21 +4,28 @@
 
 use std::time::Duration;
 
+use mergemoe::bench;
 use mergemoe::coordinator::{ScoringServer, ServerConfig};
 use mergemoe::eval::tasks::{gen_items, ALL_TASKS};
-use mergemoe::exp::{Ctx, EngineSel};
 use mergemoe::runtime::NativeEngine;
+use mergemoe::util::json::Json;
+use mergemoe::util::par;
 use mergemoe::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
-    let model = ctx.load_model("beta")?;
-    println!("\n=== bench_batcher (policy sweep, native backend) ===");
+    let bm = bench::load_or_synth("beta");
+    let model = bm.model;
+    println!(
+        "\n=== bench_batcher (policy sweep, native backend; model={}, {} threads) ===",
+        if bm.from_artifacts { "trained" } else { "synthetic" },
+        par::max_threads()
+    );
+    let mut records: Vec<Json> = Vec::new();
     for (max_batch, wait_ms) in [(1usize, 0u64), (8, 1), (8, 3), (32, 1), (32, 3), (32, 10)] {
         let cfg = ServerConfig {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
-            seq_len: ctx.manifest.seq_len,
+            seq_len: bm.seq_len,
         };
         let server = ScoringServer::start(model.clone(), cfg, || Ok(NativeEngine));
         let handle = server.handle();
@@ -49,6 +56,25 @@ fn main() -> anyhow::Result<()> {
             m.total_latency.quantile(0.5),
             m.total_latency.quantile(0.99),
         );
+        records.push(Json::obj(vec![
+            ("max_batch", Json::num(max_batch as f64)),
+            ("max_wait_ms", Json::num(wait_ms as f64)),
+            ("req_per_s", Json::num(m.throughput_rps())),
+            ("mean_batch", Json::num(m.mean_batch_size())),
+            ("p50_s", Json::num(m.total_latency.quantile(0.5).as_secs_f64())),
+            ("p99_s", Json::num(m.total_latency.quantile(0.99).as_secs_f64())),
+        ]));
     }
+    // same BENCH_<name>.json trajectory record as the other benches, but
+    // with the batcher's own policy-sweep schema
+    let report = Json::obj(vec![
+        ("bench", Json::str("batcher")),
+        ("threads", Json::num(par::max_threads() as f64)),
+        ("results", Json::arr(records)),
+    ]);
+    let dir = std::env::var("MERGEMOE_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    let path = std::path::Path::new(&dir).join("BENCH_batcher.json");
+    std::fs::write(&path, report.to_string())?;
+    println!("wrote {}", path.display());
     Ok(())
 }

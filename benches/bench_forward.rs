@@ -1,41 +1,75 @@
-//! Forward-path benchmark: native engine vs PJRT per-layer vs PJRT monolith
-//! (the §Perf dispatch-overhead ablation), across the batch buckets.
+//! Forward-path benchmark: native engine at 1 thread vs all threads (the
+//! §Perf speedup quoted per PR), plus PJRT per-layer vs PJRT monolith (the
+//! dispatch-overhead ablation) when compiled artifacts exist on disk,
+//! across the batch buckets. Falls back to a synthetic `beta`-shaped model
+//! on a bare checkout. Emits `BENCH_forward.json`.
 
-use mergemoe::bench::Bencher;
+use mergemoe::bench::{self, Bencher};
 use mergemoe::calib;
 use mergemoe::config::Manifest;
-use mergemoe::exp::{Ctx, EngineSel};
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+use mergemoe::util::par;
 
 fn main() -> anyhow::Result<()> {
-    let artifacts = mergemoe::config::artifacts_dir();
-    let ctx = Ctx::new(artifacts.clone(), EngineSel::Native)?;
-    let model = ctx.load_model("beta")?;
-    let s = ctx.manifest.seq_len;
-    let mut pjrt = PjrtEngine::new(Manifest::load(&artifacts)?)?;
+    let bm = bench::load_or_synth("beta");
+    let model = bm.model;
+    let s = bm.seq_len;
+    let threads = par::max_threads();
+    println!(
+        "bench_forward: model=beta ({}), {threads} threads",
+        if bm.from_artifacts { "trained artifacts" } else { "synthetic weights" }
+    );
 
     let b = Bencher::default();
     let mut out = Vec::new();
     for &bb in &[1usize, 8, 32] {
         let tokens = calib::sample_sequences(None, bb, s, 7);
         let toks = bb as f64 * s as f64;
-        out.push(b.run_items(&format!("forward/native/b{bb}"), toks, || {
+        par::set_max_threads(1);
+        out.push(b.run_items(&format!("forward/native/serial/b{bb}"), toks, || {
             NativeEngine.logits(&model, &tokens, bb, s).unwrap()
         }));
-        out.push(b.run_items(&format!("forward/pjrt_layered/b{bb}"), toks, || {
-            pjrt.logits(&model, &tokens, bb, s).unwrap()
-        }));
-        out.push(b.run_items(&format!("forward/pjrt_monolith/b{bb}"), toks, || {
-            pjrt.logits_bucketed(&model, &tokens, bb, s, true).unwrap()
+        par::set_max_threads(threads);
+        out.push(b.run_items(&format!("forward/native/t{threads}/b{bb}"), toks, || {
+            NativeEngine.logits(&model, &tokens, bb, s).unwrap()
         }));
     }
-    println!("\n=== bench_forward (engine comparison; items = tokens) ===");
-    for s in &out {
-        println!("{}", s.report());
+
+    if bm.from_artifacts {
+        if let Ok(manifest) = Manifest::load(&mergemoe::config::artifacts_dir()) {
+            let mut pjrt = PjrtEngine::new(manifest)?;
+            for &bb in &[1usize, 8, 32] {
+                let tokens = calib::sample_sequences(None, bb, s, 7);
+                let toks = bb as f64 * s as f64;
+                out.push(b.run_items(&format!("forward/pjrt_layered/b{bb}"), toks, || {
+                    pjrt.logits(&model, &tokens, bb, s).unwrap()
+                }));
+                out.push(b.run_items(&format!("forward/pjrt_monolith/b{bb}"), toks, || {
+                    pjrt.logits_bucketed(&model, &tokens, bb, s, true).unwrap()
+                }));
+            }
+            println!(
+                "pjrt: {} executables compiled in {:.2}s, {} executions",
+                pjrt.n_compiled, pjrt.compile_seconds, pjrt.n_executions
+            );
+        }
     }
-    println!(
-        "pjrt: {} executables compiled in {:.2}s, {} executions",
-        pjrt.n_compiled, pjrt.compile_seconds, pjrt.n_executions
-    );
+
+    println!("\n=== bench_forward (items = tokens) ===");
+    for summary in &out {
+        println!("{}", summary.report());
+    }
+    for &bb in &[1usize, 8, 32] {
+        let ser = out.iter().find(|x| x.name == format!("forward/native/serial/b{bb}"));
+        let par_ = out.iter().find(|x| x.name == format!("forward/native/t{threads}/b{bb}"));
+        if let (Some(a), Some(p)) = (ser, par_) {
+            println!(
+                "speedup b{bb}: {:.2}x over serial",
+                a.mean.as_secs_f64() / p.mean.as_secs_f64()
+            );
+        }
+    }
+    let path = bench::write_report("forward", &out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

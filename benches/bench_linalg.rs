@@ -1,12 +1,16 @@
-//! Numerical-substrate benchmark: matmul variants, Cholesky/QR, and the
-//! ridge least-squares solve at the shapes the MergeMoE pipeline hits.
+//! Numerical-substrate benchmark: the tiled matmul variants at 1 thread vs
+//! all threads, Cholesky/QR, and the ridge least-squares solve at the shapes
+//! the MergeMoE pipeline hits. Emits `BENCH_linalg.json`.
 
-use mergemoe::bench::Bencher;
+use mergemoe::bench::{self, Bencher};
 use mergemoe::linalg;
 use mergemoe::tensor::{ops, Tensor};
+use mergemoe::util::par;
 use mergemoe::util::rng::Rng;
 
-fn main() {
+fn main() -> anyhow::Result<()> {
+    let threads = par::max_threads();
+    println!("bench_linalg: {threads} threads");
     let b = Bencher::default();
     let mut rng = Rng::new(11);
     let mut out = Vec::new();
@@ -14,13 +18,26 @@ fn main() {
     for &(m, k, n) in &[(64usize, 64usize, 64usize), (256, 64, 64), (2048, 64, 64)] {
         let a = Tensor::randn(&[m, k], 1.0, &mut rng);
         let bm = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
         let flops = (2 * m * k * n) as f64;
-        out.push(b.run_items(&format!("matmul/{m}x{k}x{n} (items=flops)"), flops, || {
+        par::set_max_threads(1);
+        out.push(b.run_items(&format!("matmul/serial/{m}x{k}x{n} (items=flops)"), flops, || {
             ops::matmul(&a, &bm).unwrap()
         }));
-        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
-        out.push(b.run_items(&format!("matmul_bt/{m}x{k}x{n}"), flops, || {
+        out.push(b.run_items(&format!("matmul_bt/serial/{m}x{k}x{n}"), flops, || {
             ops::matmul_bt(&a, &bt).unwrap()
+        }));
+        par::set_max_threads(threads);
+        out.push(b.run_items(&format!("matmul/t{threads}/{m}x{k}x{n}"), flops, || {
+            ops::matmul(&a, &bm).unwrap()
+        }));
+        out.push(b.run_items(&format!("matmul_bt/t{threads}/{m}x{k}x{n}"), flops, || {
+            ops::matmul_bt(&a, &bt).unwrap()
+        }));
+        // zero-alloc steady-state path
+        let mut pre = Tensor::zeros(&[m, n]);
+        out.push(b.run_items(&format!("matmul_bt_into/t{threads}/{m}x{k}x{n}"), flops, || {
+            ops::matmul_bt_into(&a, &bt, &mut pre).unwrap()
         }));
     }
 
@@ -39,10 +56,18 @@ fn main() {
     out.push(b.run("qr/256x64", || linalg::qr(&tall).unwrap()));
     let p = Tensor::randn(&[64, 4096], 1.0, &mut rng);
     let y = Tensor::randn(&[64, 4096], 1.0, &mut rng);
-    out.push(b.run("lstsq_rows/64x4096", || linalg::lstsq_rows(&p, &y, 1e-8).unwrap()));
+    par::set_max_threads(1);
+    out.push(b.run("lstsq_rows/serial/64x4096", || linalg::lstsq_rows(&p, &y, 1e-8).unwrap()));
+    par::set_max_threads(threads);
+    out.push(b.run(&format!("lstsq_rows/t{threads}/64x4096"), || {
+        linalg::lstsq_rows(&p, &y, 1e-8).unwrap()
+    }));
 
     println!("\n=== bench_linalg ===");
     for s in &out {
         println!("{}", s.report());
     }
+    let path = bench::write_report("linalg", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
 }

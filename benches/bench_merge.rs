@@ -1,19 +1,26 @@
 //! Fig. 3 benchmark: per-layer merging time, MergeMoE vs the baselines
 //! (`beta`, 12 → 6, 128 calibration sequences — the paper's batch-128
-//! setting), plus the isolated least-squares solve.
+//! setting), the isolated least-squares solve, and the serial-vs-parallel
+//! MergeMoE comparison. Falls back to a synthetic `beta`-shaped model on a
+//! bare checkout. Emits `BENCH_merge.json`.
 
-use mergemoe::bench::Bencher;
+use mergemoe::bench::{self, Bencher};
 use mergemoe::calib;
-use mergemoe::exp::{Ctx, EngineSel};
-use mergemoe::merge::{self, Algorithm, NativeGram};
 use mergemoe::linalg;
+use mergemoe::merge::{self, Algorithm, NativeGram};
 use mergemoe::tensor::Tensor;
+use mergemoe::util::par;
 use mergemoe::util::rng::Rng;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
-    let model = ctx.load_model("beta")?;
-    let seq_len = ctx.manifest.seq_len;
+    let bm = bench::load_or_synth("beta");
+    let model = bm.model;
+    let seq_len = bm.seq_len;
+    let threads = par::max_threads();
+    println!(
+        "bench_merge: model=beta ({}), {threads} threads",
+        if bm.from_artifacts { "trained artifacts" } else { "synthetic weights" }
+    );
     let tokens = calib::sample_sequences(None, 128, seq_len, 1);
     let data = calib::capture(&model, &tokens, 128, seq_len)?;
     let li = model.cfg.n_layers - 1;
@@ -23,13 +30,19 @@ fn main() -> anyhow::Result<()> {
 
     let b = Bencher::default();
     let mut out = Vec::new();
-    for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe,
-                Algorithm::MergeMoe] {
+    for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe, Algorithm::MergeMoe] {
         out.push(b.run(&format!("merge_layer/{}", alg.name()), || {
-            merge::merge_layer(alg, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6)
-                .unwrap()
+            merge::merge_layer(alg, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6).unwrap()
         }));
     }
+    // serial baseline for the paper-method path (the §Perf speedup)
+    par::set_max_threads(1);
+    out.push(b.run("merge_layer/MergeMoE/serial", || {
+        merge::merge_layer(Algorithm::MergeMoe, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6)
+            .unwrap()
+    }));
+    par::set_max_threads(threads);
+
     // isolated pieces of the MergeMoE solve
     out.push(b.run("clustering/build_plan", || {
         merge::clustering::build_plan(moe, &lc.stats, 6).unwrap()
@@ -45,13 +58,21 @@ fn main() -> anyhow::Result<()> {
         use mergemoe::merge::GramBackend;
         NativeGram.gram(&p, &y).unwrap()
     };
-    out.push(b.run("lstsq/solve_64x64", || {
-        linalg::lstsq_from_gram(&pp, &yp, 1e-6).unwrap()
-    }));
+    out.push(b.run("lstsq/solve_64x64", || linalg::lstsq_from_gram(&pp, &yp, 1e-6).unwrap()));
 
     println!("\n=== bench_merge (fig. 3) ===");
     for s in &out {
         println!("{}", s.report());
     }
+    let ser = out.iter().find(|x| x.name == "merge_layer/MergeMoE/serial");
+    let par_ = out.iter().find(|x| x.name == "merge_layer/MergeMoE");
+    if let (Some(a), Some(p2)) = (ser, par_) {
+        println!(
+            "speedup merge_layer/MergeMoE: {:.2}x over serial",
+            a.mean.as_secs_f64() / p2.mean.as_secs_f64()
+        );
+    }
+    let path = bench::write_report("merge", &out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,30 +1,46 @@
 //! End-to-end compression-pipeline benchmark: calibration capture + merge
 //! across calibration sizes and algorithms (the cost model behind Fig. 3 and
-//! the paper's "completes within a minute" claim).
+//! the paper's "completes within a minute" claim). Falls back to a synthetic
+//! `beta`-shaped model on a bare checkout. Emits `BENCH_pipeline.json`.
 
-use mergemoe::bench::Bencher;
+use mergemoe::bench::{self, Bencher};
 use mergemoe::coordinator::{compress, CompressSpec};
-use mergemoe::exp::{Ctx, EngineSel};
 use mergemoe::merge::{Algorithm, NativeGram};
+use mergemoe::util::par;
 
 fn main() -> anyhow::Result<()> {
-    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), EngineSel::Native)?;
-    let model = ctx.load_model("beta")?;
+    let bm = bench::load_or_synth("beta");
+    let model = bm.model;
+    let threads = par::max_threads();
+    println!(
+        "bench_pipeline: model=beta ({}), {threads} threads",
+        if bm.from_artifacts { "trained artifacts" } else { "synthetic weights" }
+    );
     let b = Bencher::quick();
     let mut out = Vec::new();
     for &seqs in &[16usize, 64, 128] {
         for alg in [Algorithm::MSmoe, Algorithm::MergeMoe] {
             let mut spec = CompressSpec::new(vec![2, 3], 6, alg);
             spec.n_calib_seqs = seqs;
-            out.push(b.run(
-                &format!("pipeline/{}/calib{seqs}", alg.name()),
-                || compress(&model, &spec, &mut NativeGram).unwrap(),
-            ));
+            out.push(b.run(&format!("pipeline/{}/calib{seqs}", alg.name()), || {
+                compress(&model, &spec, &mut NativeGram).unwrap()
+            }));
         }
     }
+    // serial baseline of the full paper pipeline
+    let mut spec = CompressSpec::new(vec![2, 3], 6, Algorithm::MergeMoe);
+    spec.n_calib_seqs = 128;
+    par::set_max_threads(1);
+    out.push(b.run("pipeline/MergeMoE/calib128/serial", || {
+        compress(&model, &spec, &mut NativeGram).unwrap()
+    }));
+    par::set_max_threads(threads);
+
     println!("\n=== bench_pipeline ===");
     for s in &out {
         println!("{}", s.report());
     }
+    let path = bench::write_report("pipeline", &out)?;
+    println!("wrote {}", path.display());
     Ok(())
 }

@@ -1,0 +1,26 @@
+#!/usr/bin/env bash
+# CI gate for the mergemoe workspace.
+#
+#   ./ci.sh            build + test + fmt + clippy
+#   SKIP_LINT=1 ./ci.sh   build + test only (bootstrap environments without
+#                         rustfmt/clippy components installed)
+#
+# Tier-1 (must always pass): cargo build --release && cargo test -q
+set -euo pipefail
+cd "$(dirname "$0")"
+
+echo "==> cargo build --release"
+cargo build --release
+
+echo "==> cargo test -q"
+cargo test -q
+
+if [[ "${SKIP_LINT:-0}" != "1" ]]; then
+    echo "==> cargo fmt --check"
+    cargo fmt --check
+
+    echo "==> cargo clippy -D warnings"
+    cargo clippy --all-targets -- -D warnings
+fi
+
+echo "ci: OK"

@@ -1,9 +1,15 @@
 //! Criterion-style benchmark harness (criterion itself is unavailable in the
-//! offline build). Provides warm-up, timed iterations, and robust summary
-//! statistics; the `benches/` targets (built with `harness = false`) and the
-//! §Perf pass are built on this.
+//! offline build). Provides warm-up, timed iterations, robust summary
+//! statistics, and machine-readable `BENCH_<name>.json` reports so future
+//! PRs have a perf trajectory to compare against; the `benches/` targets
+//! (built with `harness = false`) and the §Perf pass are built on this.
 
+use std::path::{Path, PathBuf};
 use std::time::{Duration, Instant};
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
 
 /// Summary statistics of one benchmark.
 #[derive(Debug, Clone)]
@@ -24,6 +30,23 @@ impl Summary {
     pub fn throughput(&self) -> Option<f64> {
         self.items_per_iter
             .map(|n| n / self.mean.as_secs_f64())
+    }
+
+    /// Machine-readable record (durations in seconds).
+    pub fn to_json(&self) -> Json {
+        let opt = |v: Option<f64>| v.map(Json::num).unwrap_or(Json::Null);
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("iters", Json::num(self.iters as f64)),
+            ("mean_s", Json::num(self.mean.as_secs_f64())),
+            ("p50_s", Json::num(self.p50.as_secs_f64())),
+            ("p90_s", Json::num(self.p90.as_secs_f64())),
+            ("p99_s", Json::num(self.p99.as_secs_f64())),
+            ("min_s", Json::num(self.min.as_secs_f64())),
+            ("max_s", Json::num(self.max.as_secs_f64())),
+            ("items_per_iter", opt(self.items_per_iter)),
+            ("items_per_s", opt(self.throughput())),
+        ])
     }
 
     /// One human-readable report line (also the `cargo bench` output format).
@@ -112,6 +135,67 @@ impl Bencher {
     }
 }
 
+/// A model resolved for benchmarking: trained artifacts when present, a
+/// synthetic stand-in of the same published shape otherwise.
+pub struct BenchModel {
+    pub model: crate::model::ModelWeights,
+    pub seq_len: usize,
+    pub from_artifacts: bool,
+}
+
+/// Load `name` from the artifacts directory, or fall back to a synthetic
+/// model so the `benches/` targets run (and the kernel-level numbers stay
+/// meaningful) on a bare checkout with no trained NPZ artifacts.
+pub fn load_or_synth(name: &str) -> BenchModel {
+    use crate::exp::{Ctx, EngineSel};
+    if let Ok(ctx) = Ctx::new(crate::config::artifacts_dir(), EngineSel::Native) {
+        if let Ok(model) = ctx.load_model(name) {
+            return BenchModel { model, seq_len: ctx.manifest.seq_len, from_artifacts: true };
+        }
+    }
+    // Shape of the published `beta` config (configs.py): the model every
+    // bench quotes numbers on.
+    let cfg = crate::config::ModelConfig {
+        name: name.to_string(),
+        n_layers: 4,
+        d_model: 64,
+        n_heads: 4,
+        d_ff: 64,
+        n_experts: 12,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2, 3, 4, 6, 8, 10],
+    };
+    BenchModel {
+        model: crate::model::testprops::synth_model(&cfg, 0xBE7A),
+        seq_len: 64,
+        from_artifacts: false,
+    }
+}
+
+/// Write `BENCH_<name>.json` into `dir` with every summary plus the thread
+/// count the run used. Returns the path written.
+pub fn write_report_to(dir: &Path, name: &str, summaries: &[Summary]) -> Result<PathBuf> {
+    let path = dir.join(format!("BENCH_{name}.json"));
+    let json = Json::obj(vec![
+        ("bench", Json::str(name)),
+        ("threads", Json::num(crate::util::par::max_threads() as f64)),
+        ("results", Json::arr(summaries.iter().map(Summary::to_json))),
+    ]);
+    std::fs::write(&path, json.to_string())
+        .with_context(|| format!("writing bench report {}", path.display()))?;
+    Ok(path)
+}
+
+/// [`write_report_to`] with the directory taken from `MERGEMOE_BENCH_DIR`
+/// (default `.`, which `.gitignore` covers) — the entry point the
+/// `benches/` targets use.
+pub fn write_report(name: &str, summaries: &[Summary]) -> Result<PathBuf> {
+    let dir = std::env::var("MERGEMOE_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+    write_report_to(Path::new(&dir), name, summaries)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -132,5 +216,24 @@ mod tests {
         let s = b.run_items("noop", 100.0, || 1 + 1);
         assert!(s.throughput().unwrap() > 0.0);
         assert!(s.report().contains("items/s"));
+    }
+
+    #[test]
+    fn json_report_roundtrips() {
+        let b = Bencher::quick();
+        let s = b.run_items("noop", 10.0, || 1 + 1);
+        let parsed = Json::parse(&s.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("name").unwrap().as_str().unwrap(), "noop");
+        assert!(parsed.get("mean_s").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(parsed.get("items_per_iter").unwrap().as_f64().unwrap(), 10.0);
+
+        let dir = std::env::temp_dir().join("mergemoe_bench_report_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = write_report_to(&dir, "unit", &[s]).unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        assert_eq!(back.get("bench").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(back.get("results").unwrap().as_arr().unwrap().len(), 1);
+        assert!(back.get("threads").unwrap().as_usize().unwrap() >= 1);
+        std::fs::remove_file(&path).ok();
     }
 }

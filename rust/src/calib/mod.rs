@@ -81,28 +81,36 @@ pub fn capture(
     let mut caps = Vec::new();
     // chunk to bound peak memory on large calibration sets
     let chunk = 32usize.min(n_seqs.max(1));
+    let total_rows = n_seqs * seq_len;
     let mut merged: Vec<LayerCalib> = Vec::new();
     let mut done = 0;
+    let mut row_off = 0; // calibration rows already copied per layer
     while done < n_seqs {
         let take = chunk.min(n_seqs - done);
         let slice = &tokens[done * seq_len..(done + take) * seq_len];
         caps.clear();
         native::forward(model, slice, take, seq_len, Some(&mut caps))?;
         if merged.is_empty() {
+            // First chunk reveals the layer count and width: preallocate the
+            // full (total_rows, d) capture per layer once, instead of
+            // reallocating and copying the whole prefix on every chunk.
             for c in &caps {
+                let d = c.x.shape()[1];
+                let mut x = Tensor::zeros(&[total_rows, d]);
+                x.data_mut()[..c.x.len()].copy_from_slice(c.x.data());
                 let mut stats = UsageStats::new(c.counts.len());
                 stats.add(&c.counts, &c.weight_mass, (take * seq_len) as u64);
-                merged.push(LayerCalib { x: c.x.clone(), stats });
+                merged.push(LayerCalib { x, stats });
             }
         } else {
             for (dst, c) in merged.iter_mut().zip(&caps) {
-                let mut x = Tensor::zeros(&[dst.x.shape()[0] + c.x.shape()[0], c.x.shape()[1]]);
-                x.data_mut()[..dst.x.len()].copy_from_slice(dst.x.data());
-                x.data_mut()[dst.x.len()..].copy_from_slice(c.x.data());
-                dst.x = x;
+                let d = c.x.shape()[1];
+                let lo = row_off * d;
+                dst.x.data_mut()[lo..lo + c.x.len()].copy_from_slice(c.x.data());
                 dst.stats.add(&c.counts, &c.weight_mass, (take * seq_len) as u64);
             }
         }
+        row_off += take * seq_len;
         done += take;
     }
     Ok(CalibData { layers: merged, n_sequences: n_seqs, seq_len })

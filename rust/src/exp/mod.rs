@@ -141,6 +141,16 @@ impl GramBackend for GramRef<'_> {
             .gram(p, y),
         }
     }
+
+    fn fork(&self) -> Option<Box<dyn GramBackend + Send>> {
+        match self.0 {
+            // The native backend is stateless: forked instances unlock
+            // per-cluster parallelism in the MergeMoE solve.
+            GramBox::Native(_) => Some(Box::new(NativeGram)),
+            // PJRT device state is single-threaded — stay serial.
+            GramBox::Pjrt(..) => None,
+        }
+    }
 }
 
 /// The default task order used in report tables (paper column order:

@@ -15,11 +15,31 @@
 //!
 //! Module map (see DESIGN.md §4 for the full system inventory):
 //!
-//! * [`util`]    — substrates: RNG, JSON, CLI, logging (offline environment,
-//!   so `rand`/`serde`/`clap` are reimplemented here).
-//! * [`tensor`]  — dense f32 tensor library (blocked matmul, softmax, …).
+//! * [`util`]    — substrates: RNG, JSON, CLI, logging, and [`util::par`] —
+//!   the scoped-thread data-parallelism layer every hot path runs on
+//!   (offline environment, so `rand`/`serde`/`clap`/`rayon` are
+//!   reimplemented here).
+//! * [`tensor`]  — dense f32 tensor library (parallel register-tiled
+//!   matmul with zero-alloc `*_into` variants, softmax, …).
 //! * [`linalg`]  — Cholesky / QR / ridge least squares / pseudoinverse: the
-//!   numerical core of the paper's `T1 = Q P†` solve.
+//!   numerical core of the paper's `T1 = Q P†` solve (triangular solves
+//!   fan out per right-hand-side column).
+//!
+//! ## Threading model
+//!
+//! Parallelism lives in exactly one place — [`util::par`] — and is consumed
+//! at two levels: the matmul kernels split output rows across threads, and
+//! the independent units above them fan out whole work items (attention per
+//! sequence, MoE per expert batch, MergeMoE per cluster and per calibration
+//! chunk, triangular solves per column). Nested regions automatically
+//! degrade to serial, so the two levels compose without oversubscription.
+//! One knob controls everything: `--threads N` on the CLI, falling back to
+//! the `MERGEMOE_THREADS` environment variable, then to the core count;
+//! `threads = 1` is exactly the serial execution, and kernels below a
+//! work cutoff (`par::PAR_MIN_FLOPS`) stay serial so single-token latency
+//! never pays thread spawn/join. Reductions always run in
+//! a fixed order on the coordinating thread, so results are bit-identical
+//! at every thread count (`tests/par_consistency.rs` enforces this).
 //! * [`io`]      — NPY/NPZ interchange with the build-time trainer.
 //! * [`config`]  — artifact manifest + model configurations.
 //! * [`model`]   — weights and the native reference forward engine.

@@ -11,6 +11,7 @@
 use anyhow::{bail, Result};
 
 use crate::tensor::{ops, Tensor};
+use crate::util::par;
 
 /// Cholesky factorization `A = L Lᵀ` of a symmetric positive-definite matrix.
 /// Returns the lower-triangular factor. Errors if a pivot is non-positive
@@ -38,41 +39,56 @@ pub fn cholesky(a: &Tensor) -> Result<Tensor> {
 }
 
 /// Solve `L y = b` (lower-triangular forward substitution) for each column of
-/// `b` (n × m).
+/// `b` (n × m). Columns are independent, so the solve runs one column per
+/// parallel work item on a transposed (column-contiguous) panel — the per-
+/// column recurrence itself is sequential.
 pub fn solve_lower(l: &Tensor, b: &Tensor) -> Result<Tensor> {
     let n = square_dim(l)?;
-    let m = b.shape()[1];
     if b.shape()[0] != n {
         bail!("solve_lower shape mismatch");
     }
-    let mut y = b.clone();
-    for c in 0..m {
-        for i in 0..n {
-            let mut s = y.at2(i, c) as f64;
-            for k in 0..i {
-                s -= l.at2(i, k) as f64 * y.at2(k, c) as f64;
-            }
-            *y.at2_mut(i, c) = (s / l.at2(i, i) as f64) as f32;
-        }
+    if n == 0 || b.shape()[1] == 0 {
+        return Ok(b.clone());
     }
-    Ok(y)
+    let ld = l.data();
+    let mut yt = ops::transpose(b)?; // (m, n): row c = column c of b
+    let parallel = n * n * b.shape()[1] >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, yt.data_mut(), n, |_c, col| {
+        for i in 0..n {
+            let lrow = &ld[i * n..i * n + i + 1];
+            let mut s = col[i] as f64;
+            for k in 0..i {
+                s -= lrow[k] as f64 * col[k] as f64;
+            }
+            col[i] = (s / lrow[i] as f64) as f32;
+        }
+    });
+    ops::transpose(&yt)
 }
 
-/// Solve `Lᵀ x = y` (upper-triangular back substitution) per column.
+/// Solve `Lᵀ x = y` (upper-triangular back substitution), one column per
+/// parallel work item (same transposed-panel layout as [`solve_lower`]).
 pub fn solve_upper_t(l: &Tensor, y: &Tensor) -> Result<Tensor> {
     let n = square_dim(l)?;
-    let m = y.shape()[1];
-    let mut x = y.clone();
-    for c in 0..m {
-        for i in (0..n).rev() {
-            let mut s = x.at2(i, c) as f64;
-            for k in i + 1..n {
-                s -= l.at2(k, i) as f64 * x.at2(k, c) as f64;
-            }
-            *x.at2_mut(i, c) = (s / l.at2(i, i) as f64) as f32;
-        }
+    if y.shape()[0] != n {
+        bail!("solve_upper_t shape mismatch");
     }
-    Ok(x)
+    if n == 0 || y.shape()[1] == 0 {
+        return Ok(y.clone());
+    }
+    let ld = l.data();
+    let mut xt = ops::transpose(y)?;
+    let parallel = n * n * y.shape()[1] >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, xt.data_mut(), n, |_c, col| {
+        for i in (0..n).rev() {
+            let mut s = col[i] as f64;
+            for k in i + 1..n {
+                s -= ld[k * n + i] as f64 * col[k] as f64;
+            }
+            col[i] = (s / ld[i * n + i] as f64) as f32;
+        }
+    });
+    ops::transpose(&xt)
 }
 
 /// Solve the SPD system `A X = B` via Cholesky with escalating ridge jitter.

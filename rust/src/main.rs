@@ -37,6 +37,8 @@ fn main() {
 fn usage() -> &'static str {
     "usage: mergemoe <repro|compress|eval|serve|stats|selfcheck> [flags]\n\
      common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
+                   --threads N (worker threads; default: MERGEMOE_THREADS env\n\
+                   or all cores; 1 = fully serial)\n\
      repro:     --exp table1..table5|fig2a|fig2b|fig3|fig4|fig5|loss|all\n\
      compress:  --model NAME --layers 2,3 --m M --alg mergemoe|msmoe|average|zipit|oracle\n\
                 [--calib-seqs N] [--calib-tasks t1,t2] [--out FILE.npz]\n\
@@ -56,6 +58,10 @@ fn run() -> Result<()> {
         "artifacts",
         config::artifacts_dir().to_str().unwrap_or("artifacts"),
     ));
+    let threads = args.apply_threads()?;
+    if threads > 1 {
+        info!("compute: {threads} worker threads");
+    }
     let engine = EngineSel::parse(args.get_or("engine", "pjrt"))?;
     let mut ctx = Ctx::new(artifacts.clone(), engine)?;
     ctx.items = args.usize("items", ctx.items)?;

@@ -26,6 +26,7 @@ use crate::linalg;
 use crate::model::native::{expert_forward, expert_inner};
 use crate::model::{Expert, MoeLayer};
 use crate::tensor::{ops, Tensor};
+use crate::util::par;
 
 /// Column-chunk size for streaming the Gram accumulation (matches the
 /// `gram_*` artifact buckets; the backend may further split internally).
@@ -55,29 +56,44 @@ fn merge_cluster(
     let avg = Expert { wg, wu, wd: proto.wd.clone() }; // wd unused below
 
     // (2)+(3): stream P (f,S) and Ŷ (d,S) in chunks, accumulate Gram blocks.
+    // Chunks are independent until the Gram reduction, so they are computed
+    // in waves of up to `max_threads` chunks in parallel (bounding peak
+    // memory to one wave of P/Ŷ panels) and reduced serially in chunk order
+    // — the accumulation order is identical at every thread count.
     let t = x.shape()[0];
     let f = avg.wg.shape()[0];
     let d = x.shape()[1];
     let mut ppt = Tensor::zeros(&[f, f]);
     let mut ypt = Tensor::zeros(&[d, f]);
+    let mut ranges: Vec<(usize, usize)> = Vec::new();
     let mut lo = 0;
     while lo < t {
         let hi = (lo + GRAM_CHUNK).min(t);
-        let xs = x.rows_slice(lo, hi);
-        // P chunk: inner activations of the averaged gate/up, transposed
-        let p_rows = expert_inner(&avg, &xs)?; // (chunk, f)
-        let p = ops::transpose(&p_rows)?; // (f, chunk)
-        // Ŷ chunk: frequency-weighted member outputs, transposed
-        let mut yhat_rows = Tensor::zeros(&[hi - lo, d]);
-        for &j in members {
-            let yj = expert_forward(&moe.experts[j], &xs)?;
-            yhat_rows.axpy(weights[j] as f32, &yj)?;
-        }
-        let y = ops::transpose(&yhat_rows)?; // (d, chunk)
-        let (pp, yp) = gram.gram(&p, &y)?;
-        ppt = ppt.add(&pp)?;
-        ypt = ypt.add(&yp)?;
+        ranges.push((lo, hi));
         lo = hi;
+    }
+    let avg_ref = &avg;
+    for wave in ranges.chunks(par::max_threads().max(1)) {
+        let panels: Vec<Result<(Tensor, Tensor)>> = par::par_map(wave, |_, &(clo, chi)| {
+            let xs = x.rows_slice(clo, chi);
+            // P chunk: inner activations of the averaged gate/up, transposed
+            let p_rows = expert_inner(avg_ref, &xs)?; // (chunk, f)
+            let p = ops::transpose(&p_rows)?; // (f, chunk)
+            // Ŷ chunk: frequency-weighted member outputs, transposed
+            let mut yhat_rows = Tensor::zeros(&[chi - clo, d]);
+            for &j in members {
+                let yj = expert_forward(&moe.experts[j], &xs)?;
+                yhat_rows.axpy(weights[j] as f32, &yj)?;
+            }
+            let y = ops::transpose(&yhat_rows)?; // (d, chunk)
+            Ok((p, y))
+        });
+        for panel in panels {
+            let (p, y) = panel?;
+            let (pp, yp) = gram.gram(&p, &y)?;
+            ppt = ppt.add(&pp)?;
+            ypt = ypt.add(&yp)?;
+        }
     }
     // ridge-regularized normal-equation solve: W_D' (f columns)
     let wd = linalg::lstsq_from_gram(&ppt, &ypt, ridge)?; // (d, f)
@@ -91,11 +107,47 @@ pub fn merge(
     gram: &mut dyn GramBackend,
     ridge: f64,
 ) -> Result<MoeLayer> {
-    let experts = plan
-        .clusters
-        .iter()
-        .map(|members| merge_cluster(moe, members, &plan.weights, x, gram, ridge))
-        .collect::<Result<Vec<_>>>()?;
+    // Clusters are independent solves. If the backend can fork (native
+    // path), each cluster gets its own backend instance and the solves run
+    // in parallel; otherwise (PJRT device state) the loop stays serial on
+    // the caller's backend.
+    let n_clusters = plan.clusters.len();
+    let forks: Option<Vec<Box<dyn GramBackend + Send>>> = if n_clusters > 1 {
+        (0..n_clusters).map(|_| gram.fork()).collect()
+    } else {
+        None
+    };
+    let experts = match forks {
+        Some(mut forked) => {
+            let mut slots: Vec<Option<Result<Expert>>> = Vec::new();
+            slots.resize_with(n_clusters, || None);
+            {
+                let mut items: Vec<(&mut Box<dyn GramBackend + Send>, &mut Option<Result<Expert>>)> =
+                    forked.iter_mut().zip(slots.iter_mut()).collect();
+                // cluster solves are coarse by construction — always fan out
+                par::par_chunks_mut_if(true, &mut items, 1, |ci, slot| {
+                    let (g, out) = &mut slot[0];
+                    **out = Some(merge_cluster(
+                        moe,
+                        &plan.clusters[ci],
+                        &plan.weights,
+                        x,
+                        g.as_mut(),
+                        ridge,
+                    ));
+                });
+            }
+            slots
+                .into_iter()
+                .map(|s| s.expect("cluster solve missing"))
+                .collect::<Result<Vec<_>>>()?
+        }
+        None => plan
+            .clusters
+            .iter()
+            .map(|members| merge_cluster(moe, members, &plan.weights, x, gram, ridge))
+            .collect::<Result<Vec<_>>>()?,
+    };
     Ok(MoeLayer {
         router: moe.router.clone(),
         experts,

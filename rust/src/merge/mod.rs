@@ -44,14 +44,27 @@ use crate::tensor::{ops, Tensor};
 pub trait GramBackend {
     /// `p` (f, s), `y` (d, s) -> (`P Pᵀ` (f,f), `Y Pᵀ` (d,f)).
     fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)>;
+
+    /// An independent backend instance usable from a worker thread, if the
+    /// backend supports concurrent use. `Some` unlocks per-cluster
+    /// parallelism in [`mergemoe::merge`]; the default `None` keeps the
+    /// cluster loop serial (the PJRT engine owns non-shareable device
+    /// state, so its backend stays on the calling thread).
+    fn fork(&self) -> Option<Box<dyn GramBackend + Send>> {
+        None
+    }
 }
 
-/// Pure-rust Gram backend.
+/// Pure-rust Gram backend (stateless — forks freely).
 pub struct NativeGram;
 
 impl GramBackend for NativeGram {
     fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)> {
         Ok((ops::matmul_bt(p, p)?, ops::matmul_bt(y, p)?))
+    }
+
+    fn fork(&self) -> Option<Box<dyn GramBackend + Send>> {
+        Some(Box::new(NativeGram))
     }
 }
 

@@ -253,7 +253,8 @@ fn split_experts(wg: &Tensor, wu: &Tensor, wd: &Tensor, cfg: &ModelConfig) -> Re
 /// (public so `tests/*.rs` can use them; hidden from docs).
 #[doc(hidden)]
 pub mod testprops {
-    use super::{Expert, MoeLayer};
+    use super::{fresh_uid, Expert, Layer, ModelWeights, MoeLayer};
+    use crate::config::ModelConfig;
     use crate::tensor::Tensor;
     use crate::util::rng::Rng;
 
@@ -275,34 +276,15 @@ pub mod testprops {
             map: None,
         }
     }
-}
 
-#[cfg(test)]
-pub mod testutil {
-    //! Synthetic model builder shared by unit tests across modules.
-    use super::*;
-    use crate::util::rng::Rng;
-
-    pub fn tiny_config(e: usize, k: usize, shared: bool) -> ModelConfig {
-        ModelConfig {
-            name: "tiny".into(),
-            n_layers: 2,
-            d_model: 16,
-            n_heads: 2,
-            d_ff: 8,
-            n_experts: e,
-            top_k: k,
-            shared_expert: shared,
-            n_params: 0,
-            merge_targets: vec![e / 2],
-        }
-    }
-
-    pub fn tiny_model(e: usize, k: usize, shared: bool, seed: u64) -> ModelWeights {
-        let cfg = tiny_config(e, k, shared);
+    /// A fully synthetic model with the given config (vocab 47 / seq 64,
+    /// matching the task corpus). Used by benches and property tests when no
+    /// trained NPZ artifacts are on disk; deterministic in `seed`.
+    pub fn synth_model(cfg: &ModelConfig, seed: u64) -> ModelWeights {
         let mut rng = Rng::new(seed);
         let d = cfg.d_model;
         let f = cfg.d_ff;
+        let e = cfg.n_experts;
         let v = 47;
         let s = 64;
         let mk_expert = |rng: &mut Rng| Expert {
@@ -323,22 +305,49 @@ pub mod testutil {
                 moe: MoeLayer {
                     router: Tensor::randn(&[e, d], 0.4, &mut rng),
                     experts: (0..e).map(|_| mk_expert(&mut rng)).collect(),
-                    shared: if shared { Some(mk_expert(&mut rng)) } else { None },
-                    top_k: k,
+                    shared: if cfg.shared_expert { Some(mk_expert(&mut rng)) } else { None },
+                    top_k: cfg.top_k,
                     map: None,
                 },
             })
             .collect();
         ModelWeights {
-            cfg,
+            cfg: cfg.clone(),
             tok_emb: Tensor::randn(&[v, d], 0.5, &mut rng),
             pos_emb: Tensor::randn(&[s, d], 0.1, &mut rng),
             layers,
             lnf_g: vec![1.0; d],
             lnf_b: vec![0.0; d],
             head: Tensor::randn(&[v, d], 0.3, &mut rng),
-            uid: super::fresh_uid(),
+            uid: fresh_uid(),
         }
+    }
+}
+
+#[cfg(test)]
+pub mod testutil {
+    //! Synthetic model builder shared by unit tests across modules.
+    use super::*;
+
+    pub fn tiny_config(e: usize, k: usize, shared: bool) -> ModelConfig {
+        ModelConfig {
+            name: "tiny".into(),
+            n_layers: 2,
+            d_model: 16,
+            n_heads: 2,
+            d_ff: 8,
+            n_experts: e,
+            top_k: k,
+            shared_expert: shared,
+            n_params: 0,
+            merge_targets: vec![e / 2],
+        }
+    }
+
+    pub fn tiny_model(e: usize, k: usize, shared: bool, seed: u64) -> ModelWeights {
+        // Same RNG draw order/scales as before the refactor — seeds keep
+        // producing identical weights (tests depend on them).
+        super::testprops::synth_model(&tiny_config(e, k, shared), seed)
     }
 }
 

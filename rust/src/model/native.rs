@@ -9,12 +9,19 @@
 //! Numerics mirror `python/compile/model.py` exactly: pre-LN blocks,
 //! softmax-then-top-K routing without renormalization, silu gating,
 //! eps=1e-5 layernorm.
+//!
+//! Parallelism (see `util::par`): attention fans out per sequence, the MoE
+//! MLP per expert batch, and the matmul kernels underneath per output row —
+//! nested regions degrade to serial automatically, so the layers compose.
+//! The scatter-accumulate back into the output always runs serially in
+//! expert order, keeping results bit-identical at every thread count.
 
 use anyhow::{bail, Result};
 
 use super::{Expert, Layer, ModelWeights, MoeLayer};
 use crate::moe::routing::route_tokens;
 use crate::tensor::{ops, Tensor};
+use crate::util::par;
 
 /// Per-layer calibration capture (§4: the sampled inputs X̂ and the routing
 /// statistics that define the frequency weights f_i).
@@ -67,21 +74,37 @@ pub fn moe_forward(moe: &MoeLayer, x: &Tensor) -> Result<(Tensor, Vec<f64>, Vec<
     } else if e != n {
         anyhow::bail!("moe layer has {e} experts but {n}-way router and no map");
     }
-    let mut counts = vec![0.0f64; e];
-    let mut mass = vec![0.0f64; e];
-    let mut out = Tensor::zeros(&[t, x.shape()[1]]);
-    // gather tokens per expert so each expert runs one batched matmul
-    for ei in 0..e {
-        let tok_idx: Vec<usize> = (0..t).filter(|&ti| r.at2(ti, ei) != 0.0).collect();
+    // gather tokens per expert so each expert runs one batched matmul;
+    // expert batches are independent and run in parallel. Tokens may be
+    // routed to several experts (top-K), so the weighted scatter back into
+    // `out` stays serial, in expert order — deterministic at any thread
+    // count.
+    let d = x.shape()[1];
+    let r_ref = &r;
+    // rough per-layer MoE work: top_k experts each run 3 (f,d) matmuls per
+    // routed token — skip the fan-out when the whole batch is tiny
+    let f_dim = moe.experts.first().map(|ex| ex.wg.shape()[0]).unwrap_or(0);
+    let parallel = 6 * t * moe.top_k * f_dim * d >= par::PAR_MIN_FLOPS;
+    let per_expert: Vec<Result<Option<(Vec<usize>, Tensor)>>> = par::par_map_range_if(parallel, e, |ei| {
+        let tok_idx: Vec<usize> = (0..t).filter(|&ti| r_ref.at2(ti, ei) != 0.0).collect();
         if tok_idx.is_empty() {
-            continue;
+            return Ok(None);
         }
-        counts[ei] = tok_idx.len() as f64;
-        let mut xs = Tensor::zeros(&[tok_idx.len(), x.shape()[1]]);
+        let mut xs = Tensor::zeros(&[tok_idx.len(), d]);
         for (row, &ti) in tok_idx.iter().enumerate() {
             xs.row_mut(row).copy_from_slice(x.row(ti));
         }
         let ys = expert_forward(&moe.experts[ei], &xs)?;
+        Ok(Some((tok_idx, ys)))
+    });
+    let mut counts = vec![0.0f64; e];
+    let mut mass = vec![0.0f64; e];
+    let mut out = Tensor::zeros(&[t, d]);
+    for (ei, item) in per_expert.into_iter().enumerate() {
+        let Some((tok_idx, ys)) = item? else {
+            continue;
+        };
+        counts[ei] = tok_idx.len() as f64;
         for (row, &ti) in tok_idx.iter().enumerate() {
             let w = r.at2(ti, ei);
             mass[ei] += w as f64;
@@ -108,41 +131,54 @@ fn attn_forward(layer: &Layer, h: &Tensor, n_heads: usize, b: usize, s: usize) -
     let v = ops::matmul_bt(&x, &layer.wv)?;
     let scale = 1.0 / (hd as f32).sqrt();
     let mut ctx = Tensor::zeros(&[b * s, d]);
-    for bi in 0..b {
-        for head in 0..n_heads {
-            let off = head * hd;
-            // scores (s, s) for this (batch, head)
-            for qi in 0..s {
-                let qrow = &q.row(bi * s + qi)[off..off + hd];
-                let mut scores = vec![f32::NEG_INFINITY; s];
-                for ki in 0..=qi {
-                    let krow = &k.row(bi * s + ki)[off..off + hd];
-                    let mut dot = 0.0;
-                    for (a, b2) in qrow.iter().zip(krow) {
-                        dot += a * b2;
+    if b * s > 0 && s > 0 {
+        let qd = q.data();
+        let kd = k.data();
+        let vd = v.data();
+        // One sequence (an s×d slab of `ctx`) per parallel work item; the
+        // scores buffer is allocated once per sequence and reused across
+        // every (head, query) pair — the old code allocated it per pair.
+        let parallel = b * s * s * d >= par::PAR_MIN_FLOPS;
+        par::par_chunks_mut_if(parallel, ctx.data_mut(), s * d, |bi, cslab| {
+            let mut scores = vec![0.0f32; s];
+            for head in 0..n_heads {
+                let off = head * hd;
+                for qi in 0..s {
+                    let qbase = (bi * s + qi) * d + off;
+                    let qrow = &qd[qbase..qbase + hd];
+                    for ki in 0..=qi {
+                        let kbase = (bi * s + ki) * d + off;
+                        let krow = &kd[kbase..kbase + hd];
+                        let mut dot = 0.0;
+                        for (a, b2) in qrow.iter().zip(krow) {
+                            dot += a * b2;
+                        }
+                        scores[ki] = dot * scale;
                     }
-                    scores[ki] = dot * scale;
-                }
-                // softmax over the causal prefix
-                let m = scores.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                let mut z = 0.0;
-                for v2 in scores.iter_mut() {
-                    *v2 = (*v2 - m).exp();
-                    z += *v2;
-                }
-                let orow = &mut ctx.row_mut(bi * s + qi)[off..off + hd];
-                for ki in 0..=qi {
-                    let w = scores[ki] / z;
-                    if w == 0.0 {
-                        continue;
+                    // softmax over the causal prefix only — entries past qi
+                    // are stale scratch and never read
+                    let pre = &mut scores[..=qi];
+                    let m = pre.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                    let mut z = 0.0;
+                    for v2 in pre.iter_mut() {
+                        *v2 = (*v2 - m).exp();
+                        z += *v2;
                     }
-                    let vrow = &v.row(bi * s + ki)[off..off + hd];
-                    for (o, &vv) in orow.iter_mut().zip(vrow) {
-                        *o += w * vv;
+                    let orow = &mut cslab[qi * d + off..qi * d + off + hd];
+                    for ki in 0..=qi {
+                        let w = pre[ki] / z;
+                        if w == 0.0 {
+                            continue;
+                        }
+                        let vbase = (bi * s + ki) * d + off;
+                        let vrow = &vd[vbase..vbase + hd];
+                        for (o, &vv) in orow.iter_mut().zip(vrow) {
+                            *o += w * vv;
+                        }
                     }
                 }
             }
-        }
+        });
     }
     let proj = ops::matmul_bt(&ctx, &layer.wo)?;
     h.add(&proj)
@@ -161,15 +197,16 @@ pub fn forward(
         bail!("token buffer {} != {b}x{s}", tokens.len());
     }
     let d = model.cfg.d_model;
-    // embed
+    // embed (row-parallel: token rows are independent)
     let mut h = Tensor::zeros(&[b * s, d]);
-    for (i, &tk) in tokens.iter().enumerate() {
-        let tk = tk as usize;
-        let pos = i % s;
-        let row = h.row_mut(i);
-        for j in 0..d {
-            row[j] = model.tok_emb.at2(tk, j) + model.pos_emb.at2(pos, j);
-        }
+    if d > 0 {
+        par::par_chunks_mut(h.data_mut(), d, |i, row| {
+            let tk = tokens[i] as usize;
+            let pos = i % s;
+            for (j, o) in row.iter_mut().enumerate() {
+                *o = model.tok_emb.at2(tk, j) + model.pos_emb.at2(pos, j);
+            }
+        });
     }
     // layers
     for layer in &model.layers {

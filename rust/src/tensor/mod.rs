@@ -4,8 +4,9 @@
 //! path, and (b) all merge-time math (clustering distances, expert
 //! evaluation on calibration samples, the Gram accumulations). It is a small
 //! library by design: shapes are `Vec<usize>`, storage is a flat `Vec<f32>`,
-//! and the only heavily optimized routine is [`ops::matmul`] (cache-blocked,
-//! written so LLVM auto-vectorizes the inner kernel).
+//! and the only heavily optimized routines are the [`ops`] matmul family —
+//! register-tiled micro-kernels, row-parallel across worker threads, with
+//! zero-alloc `*_into` variants for steady-state serving loops.
 
 pub mod ops;
 

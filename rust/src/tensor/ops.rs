@@ -1,102 +1,197 @@
-//! Tensor operations: cache-blocked matmul plus the neural-net primitives the
-//! native engine needs (softmax, layernorm, silu, top-k).
+//! Tensor operations: parallel register-tiled matmul kernels plus the
+//! neural-net primitives the native engine needs (softmax, layernorm, silu,
+//! top-k).
 //!
-//! The matmul kernel is the native engine's hot path; it is written i-k-j
-//! with a register-blocked inner loop over contiguous rows of `b`, which LLVM
-//! auto-vectorizes. `matmul_bt` (a @ bᵀ) exists because every linear layer in
-//! the model uses the `y = x Wᵀ` convention, and transposing on the fly
-//! would destroy the contiguous access pattern.
+//! The matmul family is the native engine's hot path. All three variants are
+//! parallelized over output rows through [`par::par_chunks_mut`] and use
+//! register-tiled micro-kernels (4-wide unrolling with independent
+//! accumulators, which LLVM turns into vector FMAs):
+//!
+//! * [`matmul`]    — dense i-k-j kernel, 4 `a`-values per pass over the
+//!   output row. No sparsity branch: the dense path is branch-free so it
+//!   vectorizes.
+//! * [`matmul_bt`] — `a @ bᵀ`, 4 output columns per pass sharing one read of
+//!   the `a` row (every linear layer uses the `y = x Wᵀ` convention).
+//! * [`matmul_at`] — `aᵀ @ b`; keeps the zero-skip because its `a` operands
+//!   (Theorem-1 usage/assignment masses, column-chunked accumulation
+//!   panels) are the ones that arrive sparse. The dense routing redirect
+//!   `r @ mapᵀ` goes through `matmul_bt`, whose branch-free kernel already
+//!   handles top-K-sparse `r` rows at full vector speed.
+//!
+//! Every variant has a `*_into` twin that writes a caller-owned output
+//! tensor, so steady-state serving loops can run without per-call
+//! allocation. Outputs are fully overwritten — buffers need not be zeroed.
+//!
+//! Determinism: each output element is reduced in a fixed order that does
+//! not depend on the thread count, so results are bit-identical for any
+//! `MERGEMOE_THREADS` setting.
 
 use anyhow::{bail, Result};
 
 use super::Tensor;
-
-/// Block size for the k-dimension (fits comfortably in L1 with 64-wide rows).
-const KB: usize = 64;
+use crate::util::par;
 
 /// `a (m,k) @ b (k,n) -> (m,n)`.
 pub fn matmul(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, _) = mat_dims(a)?;
+    let (_, n) = mat_dims(b)?;
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_into(a, b, &mut out)?;
+    Ok(out)
+}
+
+/// [`matmul`] into a preallocated `(m,n)` output (fully overwritten).
+pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     let (m, k) = mat_dims(a)?;
     let (k2, n) = mat_dims(b)?;
     if k != k2 {
         bail!("matmul inner dim mismatch: {:?} @ {:?}", a.shape(), b.shape());
     }
-    let mut out = Tensor::zeros(&[m, n]);
+    check_out_shape("matmul", out, m, n)?;
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
     let ad = a.data();
     let bd = b.data();
-    let od = out.data_mut();
-    for kb in (0..k).step_by(KB) {
-        let kend = (kb + KB).min(k);
-        for i in 0..m {
-            let arow = &ad[i * k..(i + 1) * k];
-            let orow = &mut od[i * n..(i + 1) * n];
-            for kk in kb..kend {
-                let av = arow[kk];
-                if av == 0.0 {
-                    continue; // routing matrices are mostly zero
-                }
-                let brow = &bd[kk * n..(kk + 1) * n];
-                for (o, &bv) in orow.iter_mut().zip(brow) {
-                    *o += av * bv;
-                }
-            }
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
+        matmul_row(&ad[i * k..(i + 1) * k], bd, n, orow);
+    });
+    Ok(())
+}
+
+/// One dense output row: `orow = arow @ b`, 4 `a` entries per sweep so the
+/// inner loop is a branch-free chain of independent multiply-adds.
+#[inline]
+fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+    orow.fill(0.0);
+    let k = arow.len();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let a0 = arow[kk];
+        let a1 = arow[kk + 1];
+        let a2 = arow[kk + 2];
+        let a3 = arow[kk + 3];
+        let b0 = &bd[kk * n..kk * n + n];
+        let b1 = &bd[(kk + 1) * n..(kk + 1) * n + n];
+        let b2 = &bd[(kk + 2) * n..(kk + 2) * n + n];
+        let b3 = &bd[(kk + 3) * n..(kk + 3) * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
         }
+        kk += 4;
     }
-    Ok(out)
+    while kk < k {
+        let av = arow[kk];
+        let brow = &bd[kk * n..kk * n + n];
+        for (o, &bv) in orow.iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+        kk += 1;
+    }
 }
 
 /// `a (m,k) @ bᵀ where b is (n,k) -> (m,n)`; both operands read row-major.
 pub fn matmul_bt(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (m, _) = mat_dims(a)?;
+    let (n, _) = mat_dims(b)?;
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_bt_into(a, b, &mut out)?;
+    Ok(out)
+}
+
+/// [`matmul_bt`] into a preallocated `(m,n)` output (fully overwritten).
+pub fn matmul_bt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     let (m, k) = mat_dims(a)?;
     let (n, k2) = mat_dims(b)?;
     if k != k2 {
         bail!("matmul_bt inner dim mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
     }
-    let mut out = Tensor::zeros(&[m, n]);
+    check_out_shape("matmul_bt", out, m, n)?;
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
     let ad = a.data();
     let bd = b.data();
-    let od = out.data_mut();
-    for i in 0..m {
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
         let arow = &ad[i * k..(i + 1) * k];
-        let orow = &mut od[i * n..(i + 1) * n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            let brow = &bd[j * k..(j + 1) * k];
+        // 4 output columns per pass: one read of `arow` feeds 4 independent
+        // dot-product accumulators.
+        let mut j = 0;
+        while j + 4 <= n {
+            let b0 = &bd[j * k..j * k + k];
+            let b1 = &bd[(j + 1) * k..(j + 1) * k + k];
+            let b2 = &bd[(j + 2) * k..(j + 2) * k + k];
+            let b3 = &bd[(j + 3) * k..(j + 3) * k + k];
+            let mut s0 = 0.0f32;
+            let mut s1 = 0.0f32;
+            let mut s2 = 0.0f32;
+            let mut s3 = 0.0f32;
+            for (kk, &av) in arow.iter().enumerate() {
+                s0 += av * b0[kk];
+                s1 += av * b1[kk];
+                s2 += av * b2[kk];
+                s3 += av * b3[kk];
+            }
+            orow[j] = s0;
+            orow[j + 1] = s1;
+            orow[j + 2] = s2;
+            orow[j + 3] = s3;
+            j += 4;
+        }
+        while j < n {
+            let brow = &bd[j * k..j * k + k];
             let mut acc = 0.0f32;
             for (x, y) in arow.iter().zip(brow) {
                 acc += x * y;
             }
-            *o = acc;
+            orow[j] = acc;
+            j += 1;
         }
-    }
+    });
+    Ok(())
+}
+
+/// `aᵀ (k,m)ᵀ @ b (k,n) -> (m,n)` — the column-major accumulation form
+/// (Theorem-1 quadratic forms, QᵀQ checks). Its `a` operands are the ones
+/// that arrive sparse, so the zero-skip stays on this path only.
+pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let (_, m) = mat_dims(a)?;
+    let (_, n) = mat_dims(b)?;
+    let mut out = Tensor::zeros(&[m, n]);
+    matmul_at_into(a, b, &mut out)?;
     Ok(out)
 }
 
-/// `aᵀ (k,m)ᵀ @ b (k,n) -> (m,n)` — used by Gram accumulations (PPᵀ, YPᵀ
-/// arrive column-chunked).
-pub fn matmul_at(a: &Tensor, b: &Tensor) -> Result<Tensor> {
+/// [`matmul_at`] into a preallocated `(m,n)` output (fully overwritten).
+pub fn matmul_at_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     let (k, m) = mat_dims(a)?;
     let (k2, n) = mat_dims(b)?;
     if k != k2 {
         bail!("matmul_at inner dim mismatch: {:?}ᵀ @ {:?}", a.shape(), b.shape());
     }
-    let mut out = Tensor::zeros(&[m, n]);
+    check_out_shape("matmul_at", out, m, n)?;
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
     let ad = a.data();
     let bd = b.data();
-    let od = out.data_mut();
-    for kk in 0..k {
-        let arow = &ad[kk * m..(kk + 1) * m];
-        let brow = &bd[kk * n..(kk + 1) * n];
-        for (i, &av) in arow.iter().enumerate() {
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
+        orow.fill(0.0);
+        for kk in 0..k {
+            let av = ad[kk * m + i];
             if av == 0.0 {
-                continue;
+                continue; // routing masses are top-K sparse
             }
-            let orow = &mut od[i * n..(i + 1) * n];
+            let brow = &bd[kk * n..kk * n + n];
             for (o, &bv) in orow.iter_mut().zip(brow) {
                 *o += av * bv;
             }
         }
-    }
-    Ok(out)
+    });
+    Ok(())
 }
 
 fn mat_dims(t: &Tensor) -> Result<(usize, usize)> {
@@ -106,24 +201,45 @@ fn mat_dims(t: &Tensor) -> Result<(usize, usize)> {
     }
 }
 
+fn check_out_shape(op: &str, out: &Tensor, m: usize, n: usize) -> Result<()> {
+    if out.shape() != [m, n] {
+        bail!("{op}_into: output shape {:?} != ({m}, {n})", out.shape());
+    }
+    Ok(())
+}
+
 /// 2-D transpose.
 pub fn transpose(t: &Tensor) -> Result<Tensor> {
     let (m, n) = mat_dims(t)?;
     let mut out = Tensor::zeros(&[n, m]);
-    for i in 0..m {
-        for j in 0..n {
-            *out.at2_mut(j, i) = t.at2(i, j);
-        }
-    }
+    transpose_into(t, &mut out)?;
     Ok(out)
+}
+
+/// [`transpose`] into a preallocated `(n,m)` output (fully overwritten).
+pub fn transpose_into(t: &Tensor, out: &mut Tensor) -> Result<()> {
+    let (m, n) = mat_dims(t)?;
+    check_out_shape("transpose", out, n, m)?;
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+    let td = t.data();
+    par::par_chunks_mut(out.data_mut(), m, |j, orow| {
+        for (i, o) in orow.iter_mut().enumerate() {
+            *o = td[i * n + j];
+        }
+    });
+    Ok(())
 }
 
 /// Row-wise softmax over the last dimension (numerically stabilized).
 pub fn softmax_rows(t: &Tensor) -> Tensor {
     let c = t.cols();
     let mut out = t.clone();
-    for i in 0..out.rows() {
-        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+    if c == 0 {
+        return out;
+    }
+    par::par_chunks_mut(out.data_mut(), c, |_i, row| {
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
         for v in row.iter_mut() {
@@ -133,7 +249,7 @@ pub fn softmax_rows(t: &Tensor) -> Tensor {
         for v in row.iter_mut() {
             *v /= z;
         }
-    }
+    });
     out
 }
 
@@ -141,15 +257,17 @@ pub fn softmax_rows(t: &Tensor) -> Tensor {
 pub fn log_softmax_rows(t: &Tensor) -> Tensor {
     let c = t.cols();
     let mut out = t.clone();
-    for i in 0..out.rows() {
-        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+    if c == 0 {
+        return out;
+    }
+    par::par_chunks_mut(out.data_mut(), c, |_i, row| {
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let z: f32 = row.iter().map(|v| (v - m).exp()).sum();
         let lz = z.ln() + m;
         for v in row.iter_mut() {
             *v -= lz;
         }
-    }
+    });
     out
 }
 
@@ -161,15 +279,17 @@ pub fn layernorm(t: &Tensor, gamma: &[f32], beta: &[f32]) -> Result<Tensor> {
         bail!("layernorm param size mismatch: {} vs {}", gamma.len(), c);
     }
     let mut out = t.clone();
-    for i in 0..out.rows() {
-        let row = &mut out.data_mut()[i * c..(i + 1) * c];
+    if c == 0 {
+        return Ok(out);
+    }
+    par::par_chunks_mut(out.data_mut(), c, |_i, row| {
         let mean = row.iter().sum::<f32>() / c as f32;
         let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
         let inv = 1.0 / (var + 1e-5).sqrt();
         for (j, v) in row.iter_mut().enumerate() {
             *v = (*v - mean) * inv * gamma[j] + beta[j];
         }
-    }
+    });
     Ok(out)
 }
 
@@ -180,10 +300,12 @@ pub fn silu(x: f32) -> f32 {
 }
 
 /// Indices and values of the top-k entries of a row (descending, stable on
-/// ties by lower index — matches `jax.lax.top_k`).
+/// ties by lower index — matches `jax.lax.top_k`). Ordering is total
+/// (`f32::total_cmp`), so NaN logits sort deterministically (NaN compares
+/// greater than +inf) instead of panicking.
 pub fn top_k(row: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
     let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&a, &b| row[b].partial_cmp(&row[a]).unwrap().then(a.cmp(&b)));
+    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
     idx.truncate(k);
     let vals = idx.iter().map(|&i| row[i]).collect();
     (idx, vals)
@@ -242,6 +364,49 @@ mod tests {
     }
 
     #[test]
+    fn into_variants_overwrite_dirty_buffers() {
+        let mut rng = Rng::new(23);
+        let a = Tensor::randn(&[13, 31], 1.0, &mut rng);
+        let b = Tensor::randn(&[31, 9], 1.0, &mut rng);
+        let want = matmul(&a, &b).unwrap();
+        let mut out = Tensor::full(&[13, 9], f32::NAN); // dirty reuse buffer
+        matmul_into(&a, &b, &mut out).unwrap();
+        assert_eq!(out.data(), want.data());
+
+        let bt = Tensor::randn(&[9, 31], 1.0, &mut rng);
+        let want_bt = matmul_bt(&a, &bt).unwrap();
+        let mut out_bt = Tensor::full(&[13, 9], 7.0);
+        matmul_bt_into(&a, &bt, &mut out_bt).unwrap();
+        assert_eq!(out_bt.data(), want_bt.data());
+
+        let at = Tensor::randn(&[31, 5], 1.0, &mut rng);
+        let c = Tensor::randn(&[31, 6], 1.0, &mut rng);
+        let want_at = matmul_at(&at, &c).unwrap();
+        let mut out_at = Tensor::full(&[5, 6], -3.0);
+        matmul_at_into(&at, &c, &mut out_at).unwrap();
+        assert_eq!(out_at.data(), want_at.data());
+
+        // shape mismatch on the out tensor is an error, not a panic
+        let mut bad = Tensor::zeros(&[2, 2]);
+        assert!(matmul_into(&a, &b, &mut bad).is_err());
+    }
+
+    #[test]
+    fn degenerate_shapes_are_ok() {
+        let a = Tensor::zeros(&[0, 5]);
+        let b = Tensor::zeros(&[5, 4]);
+        assert_eq!(matmul(&a, &b).unwrap().shape(), &[0, 4]);
+        let a2 = Tensor::zeros(&[3, 0]);
+        let b2 = Tensor::zeros(&[0, 4]);
+        let z = matmul(&a2, &b2).unwrap();
+        assert_eq!(z.shape(), &[3, 4]);
+        assert!(z.data().iter().all(|&v| v == 0.0));
+        let bt = Tensor::zeros(&[0, 5]);
+        assert_eq!(matmul_bt(&Tensor::zeros(&[2, 5]), &bt).unwrap().shape(), &[2, 0]);
+        assert_eq!(transpose(&Tensor::zeros(&[0, 3])).unwrap().shape(), &[3, 0]);
+    }
+
+    #[test]
     fn shape_errors() {
         let a = Tensor::zeros(&[2, 3]);
         let b = Tensor::zeros(&[4, 5]);
@@ -294,6 +459,21 @@ mod tests {
         let (idx, vals) = top_k(&row, 3);
         assert_eq!(idx, vec![1, 3, 2]); // stable tie-break by index
         assert_eq!(vals, vec![0.7, 0.7, 0.3]);
+    }
+
+    #[test]
+    fn top_k_tolerates_nan() {
+        // Regression: partial_cmp().unwrap() used to panic here. total_cmp
+        // orders NaN above +inf, so NaN logits win deterministically and the
+        // remaining entries keep their descending stable order.
+        let row = [0.5, f32::NAN, 0.9, f32::NAN, 0.1];
+        let (idx, vals) = top_k(&row, 4);
+        assert_eq!(idx, vec![1, 3, 2, 0]);
+        assert!(vals[0].is_nan() && vals[1].is_nan());
+        assert_eq!(vals[2], 0.9);
+        // all-NaN rows still produce k stable indices
+        let (idx2, _) = top_k(&[f32::NAN; 3], 2);
+        assert_eq!(idx2, vec![0, 1]);
     }
 
     #[test]

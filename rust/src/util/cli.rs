@@ -81,6 +81,23 @@ impl Args {
         }
     }
 
+    /// Resolve and apply the worker-thread budget: an explicit `--threads N`
+    /// flag overrides the `MERGEMOE_THREADS` environment variable, which
+    /// overrides core-count auto-detection (see `util::par`). Returns the
+    /// effective thread count.
+    pub fn apply_threads(&self) -> Result<usize> {
+        if let Some(v) = self.get("threads") {
+            let n: usize = v
+                .parse()
+                .with_context(|| format!("--threads expects a positive integer, got {v:?}"))?;
+            if n == 0 {
+                bail!("--threads must be >= 1");
+            }
+            crate::util::par::set_max_threads(n);
+        }
+        Ok(crate::util::par::max_threads())
+    }
+
     /// Comma-separated list flag, e.g. `--tasks copy,rev`.
     pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -123,6 +140,19 @@ mod tests {
         assert_eq!(a.usize("n", 7).unwrap(), 7);
         assert_eq!(a.get_or("mode", "fast"), "fast");
         assert_eq!(a.list("tasks", &["a", "b"]), vec!["a", "b"]);
+    }
+
+    #[test]
+    fn threads_flag_applies_and_validates() {
+        let prev = crate::util::par::max_threads();
+        let a = Args::parse(&sv(&["run", "--threads", "3"]), &[]).unwrap();
+        assert_eq!(a.apply_threads().unwrap(), 3);
+        assert_eq!(crate::util::par::max_threads(), 3);
+        crate::util::par::set_max_threads(prev);
+        let bad = Args::parse(&sv(&["run", "--threads", "0"]), &[]).unwrap();
+        assert!(bad.apply_threads().is_err());
+        let nan = Args::parse(&sv(&["run", "--threads", "lots"]), &[]).unwrap();
+        assert!(nan.apply_threads().is_err());
     }
 
     #[test]

@@ -4,6 +4,7 @@
 pub mod cli;
 pub mod json;
 pub mod logging;
+pub mod par;
 pub mod rng;
 
 /// Monotonic wall-clock helper used by metrics and the bench harness.

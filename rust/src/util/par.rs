@@ -1,0 +1,300 @@
+//! Dependency-free data parallelism over `std::thread::scope`.
+//!
+//! This is the compute substrate every hot path shares: the tiled matmul
+//! kernels parallelize over output rows, the native engine over sequences
+//! and experts, the merge pipeline over clusters and calibration chunks, and
+//! the triangular solves over right-hand-side columns.
+//!
+//! Design rules:
+//!
+//! * **One global thread-count knob.** [`max_threads`] resolves, in order:
+//!   an explicit [`set_max_threads`] call (the `--threads` CLI flag), the
+//!   `MERGEMOE_THREADS` environment variable, then the machine's available
+//!   parallelism. `threads = 1` turns every primitive into a plain serial
+//!   loop with no thread spawns.
+//! * **No nested pools.** Worker closures run with a thread-local flag set;
+//!   any `par_*` call made from inside a worker degrades to the serial path.
+//!   Outer-level parallelism (per expert, per cluster) therefore composes
+//!   with kernel-level parallelism without oversubscription.
+//! * **Determinism.** Work is split into contiguous index blocks and every
+//!   item is processed with the same per-item instruction sequence as the
+//!   serial path, so results are bit-identical for every thread count.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicUsize, Ordering};
+
+/// 0 = unresolved; resolved lazily on first use.
+static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
+
+thread_local! {
+    static IN_POOL: Cell<bool> = Cell::new(false);
+}
+
+fn env_or_available() -> usize {
+    match std::env::var("MERGEMOE_THREADS")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+    {
+        Some(n) if n >= 1 => n,
+        _ => std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1),
+    }
+}
+
+/// The worker-thread budget for parallel regions.
+pub fn max_threads() -> usize {
+    let n = MAX_THREADS.load(Ordering::Relaxed);
+    if n != 0 {
+        return n;
+    }
+    let resolved = env_or_available();
+    // Benign race: every racer computes the same value.
+    MAX_THREADS.store(resolved, Ordering::Relaxed);
+    resolved
+}
+
+/// Override the thread budget (the `--threads` CLI flag). Clamped to >= 1.
+pub fn set_max_threads(n: usize) {
+    MAX_THREADS.store(n.max(1), Ordering::Relaxed);
+}
+
+/// True while running inside a `par_*` worker (nested calls go serial).
+pub fn in_parallel_region() -> bool {
+    IN_POOL.with(|f| f.get())
+}
+
+/// Run `f` with the in-pool flag set, restoring it afterwards.
+fn with_pool_flag<R>(f: impl FnOnce() -> R) -> R {
+    IN_POOL.with(|flag| {
+        let prev = flag.replace(true);
+        let out = f();
+        flag.set(prev);
+        out
+    })
+}
+
+/// Split `n` items into at most `parts` contiguous `(lo, hi)` blocks.
+fn blocks(n: usize, parts: usize) -> Vec<(usize, usize)> {
+    let parts = parts.max(1).min(n.max(1));
+    let base = n / parts;
+    let extra = n % parts;
+    let mut out = Vec::with_capacity(parts);
+    let mut lo = 0;
+    for p in 0..parts {
+        let len = base + usize::from(p < extra);
+        if len == 0 {
+            break;
+        }
+        out.push((lo, lo + len));
+        lo += len;
+    }
+    out
+}
+
+/// Below this many output elements, elementwise row ops (layernorm,
+/// softmax, embed, transpose) run serially: a few flops per element cannot
+/// amortize thread spawn/join.
+pub const PAR_MIN_ELEMS: usize = 16 * 1024;
+
+/// Below roughly this many flops, compute kernels (matmul family,
+/// triangular solves, attention) run serially. Callers with a better cost
+/// model pass `work >= PAR_MIN_FLOPS` through the `*_if` variants.
+pub const PAR_MIN_FLOPS: usize = 256 * 1024;
+
+/// Apply `f(chunk_index, chunk)` to every `chunk_len`-sized chunk of `data`
+/// (the last chunk may be shorter), fanning contiguous chunk blocks out to
+/// worker threads. This is the mutable-output primitive: matmul rows, tensor
+/// rows, per-sequence attention slabs. Inputs smaller than
+/// [`PAR_MIN_ELEMS`] run serially — use [`par_chunks_mut_if`] with a work
+/// estimate when the per-element cost is far from O(1).
+///
+/// `chunk_len` must be non-zero unless `data` is empty.
+pub fn par_chunks_mut<T, F>(data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    let parallel = data.len() >= PAR_MIN_ELEMS;
+    par_chunks_mut_if(parallel, data, chunk_len, f);
+}
+
+/// [`par_chunks_mut`] with an explicit fan-out decision: callers estimate
+/// the total work (e.g. `2*m*k*n` flops for a matmul) and pass
+/// `work >= PAR_MIN_FLOPS`, so tiny kernels skip thread spawn/join
+/// entirely.
+pub fn par_chunks_mut_if<T, F>(parallel: bool, data: &mut [T], chunk_len: usize, f: F)
+where
+    T: Send,
+    F: Fn(usize, &mut [T]) + Sync,
+{
+    if data.is_empty() {
+        return;
+    }
+    assert!(chunk_len > 0, "par_chunks_mut: chunk_len must be > 0");
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let threads = max_threads().min(n_chunks);
+    if !parallel || threads <= 1 || in_parallel_region() {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    let chunk_blocks = blocks(n_chunks, threads);
+    // Slice `data` into per-thread sub-slices along chunk boundaries.
+    let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(chunk_blocks.len());
+    let mut rest = data;
+    for &(lo, hi) in &chunk_blocks {
+        let elems = ((hi - lo) * chunk_len).min(rest.len());
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(elems);
+        rest = tail;
+        parts.push((lo, head));
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        let mut iter = parts.into_iter();
+        // Keep the first block on the calling thread; spawn the rest.
+        let first = iter.next();
+        for (chunk0, slab) in iter {
+            s.spawn(move || {
+                with_pool_flag(|| {
+                    for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
+                        f(chunk0 + ci, chunk);
+                    }
+                })
+            });
+        }
+        if let Some((chunk0, slab)) = first {
+            with_pool_flag(|| {
+                for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
+                    f(chunk0 + ci, chunk);
+                }
+            });
+        }
+    });
+}
+
+/// Map `f` over `0..n` in parallel, returning results in index order. The
+/// read-only fan-out primitive: per-expert batches, per-cluster merges,
+/// calibration chunk computation. Items are assumed coarse (whole expert
+/// batches, 1024-row calibration chunks); use [`par_map_range_if`] when the
+/// caller can tell the work is too small to fan out.
+pub fn par_map_range<R, F>(n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    par_map_range_if(true, n, f)
+}
+
+/// [`par_map_range`] with an explicit fan-out decision (same contract as
+/// [`par_chunks_mut_if`]).
+pub fn par_map_range_if<R, F>(parallel: bool, n: usize, f: F) -> Vec<R>
+where
+    R: Send,
+    F: Fn(usize) -> R + Sync,
+{
+    let threads = max_threads().min(n);
+    if !parallel || threads <= 1 || in_parallel_region() {
+        return (0..n).map(f).collect();
+    }
+    let idx_blocks = blocks(n, threads);
+    let f = &f;
+    let mut block_results: Vec<Vec<R>> = Vec::with_capacity(idx_blocks.len());
+    std::thread::scope(|s| {
+        let mut handles = Vec::with_capacity(idx_blocks.len());
+        let mut iter = idx_blocks.into_iter();
+        let first = iter.next();
+        for (lo, hi) in iter {
+            handles.push(s.spawn(move || with_pool_flag(|| (lo..hi).map(f).collect::<Vec<R>>())));
+        }
+        if let Some((lo, hi)) = first {
+            block_results.push(with_pool_flag(|| (lo..hi).map(f).collect::<Vec<R>>()));
+        }
+        for h in handles {
+            block_results.push(h.join().expect("parallel worker panicked"));
+        }
+    });
+    block_results.into_iter().flatten().collect()
+}
+
+/// Map `f(index, &item)` over a slice in parallel, preserving order.
+pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
+where
+    T: Sync,
+    R: Send,
+    F: Fn(usize, &T) -> R + Sync,
+{
+    par_map_range(items.len(), |i| f(i, &items[i]))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn blocks_cover_range_exactly() {
+        for n in [0usize, 1, 2, 7, 16, 100] {
+            for parts in [1usize, 2, 3, 8, 200] {
+                let bs = blocks(n, parts);
+                let mut next = 0;
+                for &(lo, hi) in &bs {
+                    assert_eq!(lo, next);
+                    assert!(hi > lo);
+                    next = hi;
+                }
+                assert_eq!(next, n);
+                assert_eq!(bs.iter().map(|&(l, h)| h - l).sum::<usize>(), n);
+                assert!(bs.len() <= parts.max(1));
+            }
+        }
+    }
+
+    #[test]
+    fn par_chunks_mut_visits_every_chunk_once() {
+        // force the parallel path even though the input is tiny
+        for force in [true, false] {
+            let mut data = vec![0u32; 103];
+            par_chunks_mut_if(force, &mut data, 10, |ci, chunk| {
+                for v in chunk.iter_mut() {
+                    *v += 1 + ci as u32;
+                }
+            });
+            // chunk i covers [10i, 10i+10): value = 1 + i
+            for (i, v) in data.iter().enumerate() {
+                assert_eq!(*v, 1 + (i / 10) as u32, "force={force} index {i}");
+            }
+        }
+        // empty input is a no-op even with chunk_len 0
+        let mut empty: Vec<u32> = Vec::new();
+        par_chunks_mut(&mut empty, 0, |_, _| panic!("must not be called"));
+    }
+
+    #[test]
+    fn par_map_range_ordered_and_complete() {
+        let out = par_map_range(1000, |i| i * i);
+        assert_eq!(out.len(), 1000);
+        for (i, v) in out.iter().enumerate() {
+            assert_eq!(*v, i * i);
+        }
+        assert!(par_map_range(0, |i| i).is_empty());
+    }
+
+    #[test]
+    fn par_map_matches_serial_map() {
+        let items: Vec<i64> = (0..257).collect();
+        let par: Vec<i64> = par_map(&items, |i, &x| x * 3 + i as i64);
+        let ser: Vec<i64> = items.iter().enumerate().map(|(i, &x)| x * 3 + i as i64).collect();
+        assert_eq!(par, ser);
+    }
+
+    #[test]
+    fn nested_calls_degrade_to_serial() {
+        // A nested par_map_range inside a worker must not deadlock or spawn;
+        // results stay correct either way.
+        let out = par_map_range(8, |i| par_map_range(8, move |j| i * 8 + j));
+        for (i, inner) in out.iter().enumerate() {
+            for (j, v) in inner.iter().enumerate() {
+                assert_eq!(*v, i * 8 + j);
+            }
+        }
+    }
+}

@@ -1,0 +1,179 @@
+//! Thread-count invariance: every parallel code path must produce the same
+//! result at 1, 2, and N worker threads (the ISSUE tolerance is 1e-5
+//! rel-err; the kernels are designed to be bit-identical because work is
+//! split only across independent output regions, so the kernel checks
+//! assert exact equality).
+
+use std::sync::Mutex;
+
+use mergemoe::merge::plan::MergePlan;
+use mergemoe::merge::{self, Algorithm, NativeGram};
+use mergemoe::model::native::{forward, moe_forward};
+use mergemoe::model::testprops::tiny_moe;
+use mergemoe::tensor::{ops, Tensor};
+use mergemoe::util::par;
+use mergemoe::util::rng::Rng;
+
+/// Serializes tests that sweep the global thread knob.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+const SWEEP: [usize; 3] = [1, 2, 8];
+
+fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    par::set_max_threads(n);
+    let out = f();
+    par::set_max_threads(1);
+    out
+}
+
+#[test]
+fn kernels_bit_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let mut rng = Rng::new(0x9A11E1);
+    for case in 0..12 {
+        let m = rng.range(1, 70) as usize;
+        let k = rng.range(1, 70) as usize;
+        let n = rng.range(1, 70) as usize;
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let at = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let ref_mm = with_threads(1, || ops::matmul(&a, &b).unwrap());
+        let ref_bt = with_threads(1, || ops::matmul_bt(&a, &bt).unwrap());
+        let ref_at = with_threads(1, || ops::matmul_at(&at, &b).unwrap());
+        let ref_tr = with_threads(1, || ops::transpose(&a).unwrap());
+        for t in SWEEP {
+            let mm = with_threads(t, || ops::matmul(&a, &b).unwrap());
+            let mbt = with_threads(t, || ops::matmul_bt(&a, &bt).unwrap());
+            let mat = with_threads(t, || ops::matmul_at(&at, &b).unwrap());
+            let tr = with_threads(t, || ops::transpose(&a).unwrap());
+            assert_eq!(mm.data(), ref_mm.data(), "matmul case {case} threads {t}");
+            assert_eq!(mbt.data(), ref_bt.data(), "matmul_bt case {case} threads {t}");
+            assert_eq!(mat.data(), ref_at.data(), "matmul_at case {case} threads {t}");
+            assert_eq!(tr.data(), ref_tr.data(), "transpose case {case} threads {t}");
+        }
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn degenerate_shapes_at_every_thread_count() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    for t in SWEEP {
+        with_threads(t, || {
+            // empty row/col/inner dimensions
+            let z = ops::matmul(&Tensor::zeros(&[0, 3]), &Tensor::zeros(&[3, 4])).unwrap();
+            assert_eq!(z.shape(), &[0, 4]);
+            let z2 = ops::matmul(&Tensor::zeros(&[3, 0]), &Tensor::zeros(&[0, 4])).unwrap();
+            assert!(z2.data().iter().all(|&v| v == 0.0));
+            let z3 = ops::matmul_bt(&Tensor::zeros(&[2, 5]), &Tensor::zeros(&[0, 5])).unwrap();
+            assert_eq!(z3.shape(), &[2, 0]);
+            // single element
+            let one = Tensor::from_vec(&[1, 1], vec![3.0]).unwrap();
+            assert_eq!(ops::matmul(&one, &one).unwrap().data(), &[9.0]);
+            // softmax / layernorm on a single row
+            let s = ops::softmax_rows(&one);
+            assert_eq!(s.data(), &[1.0]);
+        });
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn moe_forward_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let moe = tiny_moe(8, 2, 0xF00D);
+    let x = Tensor::randn(&[65, 16], 1.0, &mut Rng::new(0xF00E));
+    let (ref_y, ref_counts, ref_mass) = with_threads(1, || moe_forward(&moe, &x).unwrap());
+    for t in SWEEP {
+        let (y, counts, mass) = with_threads(t, || moe_forward(&moe, &x).unwrap());
+        assert!(y.rel_err(&ref_y) < 1e-5, "threads {t}: rel err {}", y.rel_err(&ref_y));
+        assert_eq!(counts, ref_counts, "threads {t}");
+        assert_eq!(mass, ref_mass, "threads {t}");
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn full_forward_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let cfg = mergemoe::config::ModelConfig {
+        name: "sweep".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    let model = mergemoe::model::testprops::synth_model(&cfg, 0xCAFE);
+    let tokens: Vec<i32> = (0..3 * 64).map(|i| (i % 47) as i32).collect();
+    let ref_logits = with_threads(1, || forward(&model, &tokens, 3, 64, None).unwrap());
+    for t in SWEEP {
+        let logits = with_threads(t, || forward(&model, &tokens, 3, 64, None).unwrap());
+        let rel = logits.rel_err(&ref_logits);
+        assert!(rel < 1e-5, "threads {t}: rel err {rel}");
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn mergemoe_solve_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let moe = tiny_moe(6, 2, 0xD00D);
+    let x = Tensor::randn(&[300, 16], 1.0, &mut Rng::new(0xD00E));
+    let plan = MergePlan {
+        n: 6,
+        m: 3,
+        clusters: vec![vec![0, 3], vec![1, 4], vec![2, 5]],
+        assign: vec![0, 1, 2, 0, 1, 2],
+        weights: vec![0.5, 0.4, 0.7, 0.5, 0.6, 0.3],
+    };
+    let reference = with_threads(1, || {
+        merge::merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8)
+            .unwrap()
+    });
+    for t in SWEEP {
+        let merged = with_threads(t, || {
+            merge::merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8)
+                .unwrap()
+        });
+        for (ci, (got, want)) in merged.experts.iter().zip(&reference.experts).enumerate() {
+            assert!(
+                got.wd.rel_err(&want.wd) < 1e-5,
+                "threads {t} cluster {ci}: wd rel err {}",
+                got.wd.rel_err(&want.wd)
+            );
+            assert_eq!(got.wg.data(), want.wg.data(), "threads {t} cluster {ci}: wg");
+            assert_eq!(got.wu.data(), want.wu.data(), "threads {t} cluster {ci}: wu");
+        }
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn linalg_solves_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let mut rng = Rng::new(0x50151);
+    let a = Tensor::randn(&[24, 24], 1.0, &mut rng);
+    let mut spd = ops::matmul_bt(&a, &a).unwrap();
+    for i in 0..24 {
+        *spd.at2_mut(i, i) += 0.5;
+    }
+    let b = Tensor::randn(&[24, 17], 1.0, &mut rng);
+    let reference = with_threads(1, || mergemoe::linalg::solve_spd(&spd, &b, 1e-9).unwrap());
+    for t in SWEEP {
+        let x = with_threads(t, || mergemoe::linalg::solve_spd(&spd, &b, 1e-9).unwrap());
+        assert_eq!(x.data(), reference.data(), "threads {t}");
+    }
+    par::set_max_threads(prev);
+}

@@ -1,0 +1,261 @@
+//! Vendored, dependency-free reimplementation of the subset of the `anyhow`
+//! API this workspace uses: [`Error`], [`Result`], the [`Context`] extension
+//! trait, and the `anyhow!` / `bail!` / `ensure!` macros.
+//!
+//! The build environment has no registry access, so the real crate cannot be
+//! fetched; this stand-in keeps the same call-site syntax and semantics
+//! (context chaining, `{:#}` alternate formatting, `From<impl std::error::
+//! Error>`) while storing the chain as plain strings.
+
+use std::fmt::{self, Display};
+
+/// `anyhow::Result<T>` — result alias with [`Error`] as the default error.
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+/// A context-chained error. Deliberately does **not** implement
+/// `std::error::Error`, exactly like the real `anyhow::Error`, so the blanket
+/// `From<E: std::error::Error>` impl below is coherent.
+pub struct Error {
+    msg: String,
+    source: Option<Box<Error>>,
+}
+
+impl Error {
+    /// Create an error from a printable message.
+    pub fn msg<M: Display>(message: M) -> Error {
+        Error { msg: message.to_string(), source: None }
+    }
+
+    /// Wrap this error with an outer context message.
+    pub fn context<C: Display>(self, context: C) -> Error {
+        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+    }
+
+    /// The error chain, outermost context first.
+    pub fn chain(&self) -> impl Iterator<Item = &str> {
+        let mut items = Vec::new();
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            items.push(e.msg.as_str());
+            cur = e.source.as_deref();
+        }
+        items.into_iter()
+    }
+
+    /// The innermost error in the chain.
+    pub fn root_cause(&self) -> &str {
+        let mut cur = self;
+        while let Some(s) = cur.source.as_deref() {
+            cur = s;
+        }
+        &cur.msg
+    }
+
+    fn from_std(e: &(dyn std::error::Error)) -> Error {
+        Error {
+            msg: e.to_string(),
+            source: e.source().map(|s| Box::new(Error::from_std(s))),
+        }
+    }
+}
+
+impl Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        if f.alternate() {
+            // `{:#}` — the whole chain, colon-separated (anyhow semantics).
+            let mut first = true;
+            for part in self.chain() {
+                if !first {
+                    write!(f, ": ")?;
+                }
+                write!(f, "{part}")?;
+                first = false;
+            }
+            Ok(())
+        } else {
+            write!(f, "{}", self.msg)
+        }
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        if self.source.is_some() {
+            write!(f, "\n\nCaused by:")?;
+            for part in self.chain().skip(1) {
+                write!(f, "\n    {part}")?;
+            }
+        }
+        Ok(())
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        Error::from_std(&e)
+    }
+}
+
+mod ext {
+    use super::Error;
+
+    /// Private extension enabling `Context` over both `std::error::Error`
+    /// values and `Error` itself (the same sealed-trait construction the
+    /// real `anyhow` uses; coherent because `Error` is not `std::error::
+    /// Error`).
+    pub trait StdError {
+        fn ext_context(self, msg: String) -> Error;
+    }
+
+    impl<E> StdError for E
+    where
+        E: std::error::Error + Send + Sync + 'static,
+    {
+        fn ext_context(self, msg: String) -> Error {
+            Error::from_std(&self).context(msg)
+        }
+    }
+
+    impl StdError for Error {
+        fn ext_context(self, msg: String) -> Error {
+            self.context(msg)
+        }
+    }
+}
+
+/// Extension trait adding `.context(..)` / `.with_context(|| ..)` to
+/// `Result` and `Option`.
+pub trait Context<T, E>: Sized {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static;
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C;
+}
+
+impl<T, E> Context<T, E> for Result<T, E>
+where
+    E: ext::StdError + Send + Sync + 'static,
+{
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.map_err(|e| ext::StdError::ext_context(e, context.to_string()))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.map_err(|e| ext::StdError::ext_context(e, f().to_string()))
+    }
+}
+
+impl<T> Context<T, std::convert::Infallible> for Option<T> {
+    fn context<C>(self, context: C) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+    {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C, F>(self, f: F) -> Result<T, Error>
+    where
+        C: Display + Send + Sync + 'static,
+        F: FnOnce() -> C,
+    {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Construct an [`Error`] from a format string or a printable value.
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(::std::format!($msg))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+    ($fmt:expr, $($arg:tt)*) => {
+        $crate::Error::msg(::std::format!($fmt, $($arg)*))
+    };
+}
+
+/// Return early with an [`Error`].
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return ::std::result::Result::Err($crate::anyhow!($($t)*))
+    };
+}
+
+/// Return early with an [`Error`] if a condition is false.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr $(,)?) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::Error::msg(::std::concat!(
+                "condition failed: ",
+                ::std::stringify!($cond)
+            )));
+        }
+    };
+    ($cond:expr, $($t:tt)*) => {
+        if !$cond {
+            return ::std::result::Result::Err($crate::anyhow!($($t)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_err() -> std::io::Error {
+        std::io::Error::new(std::io::ErrorKind::Other, "disk on fire")
+    }
+
+    #[test]
+    fn context_chains_and_formats() {
+        let e: Error = Err::<(), _>(io_err()).context("reading manifest").unwrap_err();
+        assert_eq!(format!("{e}"), "reading manifest");
+        assert_eq!(format!("{e:#}"), "reading manifest: disk on fire");
+        assert_eq!(e.root_cause(), "disk on fire");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let r: Result<i32> = None.with_context(|| format!("missing {}", "key"));
+        assert_eq!(format!("{}", r.unwrap_err()), "missing key");
+        fn inner(flag: bool) -> Result<i32> {
+            ensure!(flag, "flag was {flag}");
+            bail!("always fails with {}", 7);
+        }
+        assert_eq!(format!("{}", inner(false).unwrap_err()), "flag was false");
+        assert_eq!(format!("{}", inner(true).unwrap_err()), "always fails with 7");
+        let owned = String::from("owned message");
+        let e = anyhow!(owned.clone());
+        assert_eq!(format!("{e}"), "owned message");
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        fn parse(s: &str) -> Result<i32> {
+            Ok(s.parse::<i32>()?)
+        }
+        assert!(parse("12").is_ok());
+        assert!(parse("nope").is_err());
+        let e = parse("nope").unwrap_err();
+        assert!(format!("{e:?}").contains("invalid digit"));
+    }
+}
