@@ -1,14 +1,56 @@
 //! Forward-path benchmark: native engine at 1 thread vs all threads (the
-//! §Perf speedup quoted per PR), plus PJRT per-layer vs PJRT monolith (the
+//! §Perf speedup quoted per PR), the workspace-backed serving path vs the
+//! allocating path, plus PJRT per-layer vs PJRT monolith (the
 //! dispatch-overhead ablation) when compiled artifacts exist on disk,
 //! across the batch buckets. Falls back to a synthetic `beta`-shaped model
 //! on a bare checkout. Emits `BENCH_forward.json`.
+//!
+//! This binary also carries the **allocation probe** for the zero-alloc
+//! acceptance check: a counting global allocator measures heap allocations
+//! per request in the steady-state serving loop (tokens → logits →
+//! per-token log-probs through one warm `Workspace`). After warmup the
+//! count must be 0.
+
+use std::alloc::{GlobalAlloc, Layout, System};
+use std::sync::atomic::{AtomicU64, Ordering};
 
 use mergemoe::bench::{self, Bencher};
 use mergemoe::calib;
 use mergemoe::config::Manifest;
+use mergemoe::model::native::target_logprobs_into;
+use mergemoe::model::workspace::Workspace;
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
+use mergemoe::tensor::Tensor;
 use mergemoe::util::par;
+
+/// Counts every allocator entry point; `System` does the real work.
+struct CountingAlloc;
+
+static ALLOC_CALLS: AtomicU64 = AtomicU64::new(0);
+
+unsafe impl GlobalAlloc for CountingAlloc {
+    unsafe fn alloc(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc(l)
+    }
+
+    unsafe fn dealloc(&self, p: *mut u8, l: Layout) {
+        System.dealloc(p, l)
+    }
+
+    unsafe fn realloc(&self, p: *mut u8, l: Layout, new_size: usize) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.realloc(p, l, new_size)
+    }
+
+    unsafe fn alloc_zeroed(&self, l: Layout) -> *mut u8 {
+        ALLOC_CALLS.fetch_add(1, Ordering::Relaxed);
+        System.alloc_zeroed(l)
+    }
+}
+
+#[global_allocator]
+static GLOBAL: CountingAlloc = CountingAlloc;
 
 fn main() -> anyhow::Result<()> {
     let bm = bench::load_or_synth("beta");
@@ -20,8 +62,10 @@ fn main() -> anyhow::Result<()> {
         if bm.from_artifacts { "trained artifacts" } else { "synthetic weights" }
     );
 
-    let b = Bencher::default();
+    let b = Bencher::from_env();
     let mut out = Vec::new();
+    let mut ws = Workspace::new();
+    let mut ws_logits = Tensor::default();
     for &bb in &[1usize, 8, 32] {
         let tokens = calib::sample_sequences(None, bb, s, 7);
         let toks = bb as f64 * s as f64;
@@ -33,6 +77,47 @@ fn main() -> anyhow::Result<()> {
         out.push(b.run_items(&format!("forward/native/t{threads}/b{bb}"), toks, || {
             NativeEngine.logits(&model, &tokens, bb, s).unwrap()
         }));
+        out.push(b.run_items(&format!("forward/native/ws/t{threads}/b{bb}"), toks, || {
+            NativeEngine
+                .logits_ws(&model, &tokens, bb, s, &mut ws, &mut ws_logits)
+                .unwrap()
+        }));
+    }
+
+    // ---- allocation probe: steady-state serving loop ----
+    println!("\n=== allocation probe (serving loop through one workspace) ===");
+    let mut zero_alloc = true;
+    for &bb in &[1usize, 32] {
+        let tokens = calib::sample_sequences(None, bb, s, 9);
+        // warmup: grow every arena buffer to its high-water size, spawn the
+        // worker pool, warm the job queue
+        for _ in 0..3 {
+            NativeEngine.logits_ws(&model, &tokens, bb, s, &mut ws, &mut ws_logits)?;
+            target_logprobs_into(&ws_logits, &tokens, bb, s, &mut ws.lps);
+        }
+        let iters = 20u64;
+        let before = ALLOC_CALLS.load(Ordering::Relaxed);
+        for _ in 0..iters {
+            NativeEngine.logits_ws(&model, &tokens, bb, s, &mut ws, &mut ws_logits)?;
+            target_logprobs_into(&ws_logits, &tokens, bb, s, &mut ws.lps);
+            std::hint::black_box(&ws.lps);
+        }
+        let after = ALLOC_CALLS.load(Ordering::Relaxed);
+        let per_req = (after - before) as f64 / iters as f64;
+        println!("steady-state allocs/request b{bb}: {per_req:.2} (target 0)");
+        if per_req > 0.0 {
+            zero_alloc = false;
+        }
+    }
+    println!(
+        "zero-alloc steady state: {}",
+        if zero_alloc { "PASS" } else { "FAIL (see counts above)" }
+    );
+    // Opt-in hard gate: once a reference machine has confirmed PASS, export
+    // MERGEMOE_STRICT_ALLOC=1 in CI so any future per-request allocation
+    // fails the bench run instead of scrolling by in the log.
+    if !zero_alloc && std::env::var("MERGEMOE_STRICT_ALLOC").map(|v| v == "1").unwrap_or(false) {
+        anyhow::bail!("steady-state serving loop allocated (MERGEMOE_STRICT_ALLOC=1)");
     }
 
     if bm.from_artifacts {
@@ -62,10 +147,17 @@ fn main() -> anyhow::Result<()> {
     for &bb in &[1usize, 8, 32] {
         let ser = out.iter().find(|x| x.name == format!("forward/native/serial/b{bb}"));
         let par_ = out.iter().find(|x| x.name == format!("forward/native/t{threads}/b{bb}"));
+        let wsr = out.iter().find(|x| x.name == format!("forward/native/ws/t{threads}/b{bb}"));
         if let (Some(a), Some(p)) = (ser, par_) {
             println!(
                 "speedup b{bb}: {:.2}x over serial",
                 a.mean.as_secs_f64() / p.mean.as_secs_f64()
+            );
+        }
+        if let (Some(p), Some(w)) = (par_, wsr) {
+            println!(
+                "workspace b{bb}: {:.2}x over allocating parallel path",
+                p.mean.as_secs_f64() / w.mean.as_secs_f64()
             );
         }
     }

@@ -8,6 +8,7 @@ use mergemoe::bench::{self, Bencher};
 use mergemoe::calib;
 use mergemoe::linalg;
 use mergemoe::merge::{self, Algorithm, NativeGram};
+use mergemoe::model::workspace::Workspace;
 use mergemoe::tensor::Tensor;
 use mergemoe::util::par;
 use mergemoe::util::rng::Rng;
@@ -28,18 +29,22 @@ fn main() -> anyhow::Result<()> {
     let lc = &data.layers[li];
     let plan = merge::clustering::build_plan(moe, &lc.stats, 6)?;
 
-    let b = Bencher::default();
+    let b = Bencher::from_env();
     let mut out = Vec::new();
+    let mut ws = Workspace::new();
     for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe, Algorithm::MergeMoe] {
         out.push(b.run(&format!("merge_layer/{}", alg.name()), || {
-            merge::merge_layer(alg, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6).unwrap()
+            merge::merge_layer(alg, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6, &mut ws)
+                .unwrap()
         }));
     }
     // serial baseline for the paper-method path (the §Perf speedup)
     par::set_max_threads(1);
     out.push(b.run("merge_layer/MergeMoE/serial", || {
-        merge::merge_layer(Algorithm::MergeMoe, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6)
-            .unwrap()
+        merge::merge_layer(
+            Algorithm::MergeMoe, moe, &plan, Some(&lc.x), &mut NativeGram, 1e-6, &mut ws,
+        )
+        .unwrap()
     }));
     par::set_max_threads(threads);
 

@@ -1,0 +1,112 @@
+//! Parallel-region dispatch overhead: the persistent pool vs PR 1's
+//! spawn-per-region scoped threads vs plain serial, across small/medium
+//! shapes (the regime the batcher's 2 ms deadline lives in). The spawn
+//! baseline is reimplemented here verbatim so every future PR can re-measure
+//! the gap on the same machine. Emits `BENCH_par.json`.
+
+use mergemoe::bench::{self, Bencher};
+use mergemoe::util::par;
+
+/// PR 1's threading primitive: spawn + join scoped threads per region.
+/// Kept as the reference implementation the pool is benchmarked against.
+fn spawn_parallel_for<F>(data: &mut [f32], chunk_len: usize, threads: usize, f: F)
+where
+    F: Fn(usize, &mut [f32]) + Sync,
+{
+    let n_chunks = (data.len() + chunk_len - 1) / chunk_len;
+    let threads = threads.min(n_chunks).max(1);
+    if threads <= 1 {
+        for (ci, chunk) in data.chunks_mut(chunk_len).enumerate() {
+            f(ci, chunk);
+        }
+        return;
+    }
+    let per = (n_chunks + threads - 1) / threads;
+    let mut parts: Vec<(usize, &mut [f32])> = Vec::with_capacity(threads);
+    let mut rest = data;
+    let mut chunk0 = 0;
+    while !rest.is_empty() {
+        let take = (per * chunk_len).min(rest.len());
+        let (head, tail) = std::mem::take(&mut rest).split_at_mut(take);
+        rest = tail;
+        parts.push((chunk0, head));
+        chunk0 += per;
+    }
+    let f = &f;
+    std::thread::scope(|s| {
+        for (c0, slab) in parts {
+            s.spawn(move || {
+                for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
+                    f(c0 + ci, chunk);
+                }
+            });
+        }
+    });
+}
+
+fn main() -> anyhow::Result<()> {
+    let threads = par::max_threads();
+    println!("bench_par: {threads} threads, pool size before warmup {}", par::pool_size());
+    let b = Bencher::from_env();
+    let mut out = Vec::new();
+
+    // warm the pool so the pool numbers measure dispatch, not spawn
+    let mut warm = vec![0.0f32; 1 << 16];
+    par::par_chunks_mut_if(true, &mut warm, 1024, |_ci, c| {
+        for v in c.iter_mut() {
+            *v += 1.0;
+        }
+    });
+    println!("pool size after warmup: {}", par::pool_size());
+
+    for &(elems, label) in &[(4_096usize, "4k"), (65_536usize, "64k"), (1_048_576usize, "1m")] {
+        let chunk = 256usize;
+        let mut data = vec![0.0f32; elems];
+        out.push(b.run_items(&format!("par/pool/{label}"), elems as f64, || {
+            par::par_chunks_mut_if(true, &mut data, chunk, |_ci, c| {
+                for v in c.iter_mut() {
+                    *v = v.mul_add(1.000001, 1.0);
+                }
+            });
+        }));
+        out.push(b.run_items(&format!("par/spawn/{label}"), elems as f64, || {
+            spawn_parallel_for(&mut data, chunk, threads, |_ci, c| {
+                for v in c.iter_mut() {
+                    *v = v.mul_add(1.000001, 1.0);
+                }
+            });
+        }));
+        out.push(b.run_items(&format!("par/serial/{label}"), elems as f64, || {
+            for c in data.chunks_mut(chunk) {
+                for v in c.iter_mut() {
+                    *v = v.mul_add(1.000001, 1.0);
+                }
+            }
+        }));
+    }
+
+    println!("\n=== bench_par (items = elements) ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+    for &label in &["4k", "64k", "1m"] {
+        let pool = out.iter().find(|x| x.name == format!("par/pool/{label}"));
+        let spawn = out.iter().find(|x| x.name == format!("par/spawn/{label}"));
+        let serial = out.iter().find(|x| x.name == format!("par/serial/{label}"));
+        if let (Some(p), Some(sp)) = (pool, spawn) {
+            println!(
+                "speedup {label}: pool {:.2}x over spawn-per-region",
+                sp.mean.as_secs_f64() / p.mean.as_secs_f64()
+            );
+        }
+        if let (Some(p), Some(se)) = (pool, serial) {
+            println!(
+                "        {label}: pool {:.2}x vs serial",
+                se.mean.as_secs_f64() / p.mean.as_secs_f64()
+            );
+        }
+    }
+    let path = bench::write_report("par", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI gate for the mergemoe workspace.
 #
-#   ./ci.sh            build + test + fmt + clippy
-#   SKIP_LINT=1 ./ci.sh   build + test only (bootstrap environments without
+#   ./ci.sh            build + test + fmt + clippy + quick bench + bench-diff
+#   SKIP_LINT=1 ./ci.sh   skip fmt/clippy (bootstrap environments without
 #                         rustfmt/clippy components installed)
+#   SKIP_BENCH=1 ./ci.sh  skip the quick bench + bench-diff step
 #
 # Tier-1 (must always pass): cargo build --release && cargo test -q
 set -euo pipefail
@@ -21,6 +22,28 @@ if [[ "${SKIP_LINT:-0}" != "1" ]]; then
 
     echo "==> cargo clippy -D warnings"
     cargo clippy --all-targets -- -D warnings
+fi
+
+if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
+    # Perf trajectory: one quick-mode bench on every run, diffed against the
+    # committed baseline so regressions surface in CI output, not archaeology.
+    echo "==> quick bench (bench_par + bench_forward)"
+    REPORT_DIR=target/bench-reports
+    mkdir -p "$REPORT_DIR"
+    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_par
+    # Set MERGEMOE_STRICT_ALLOC=1 (once confirmed green on a reference
+    # machine) to turn bench_forward's zero-alloc probe into a hard failure.
+    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_forward
+
+    if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
+        echo "==> bench-diff vs benches/baseline"
+        cargo run --release --bin bench_diff -- benches/baseline "$REPORT_DIR"
+    else
+        echo "==> no benches/baseline yet — capturing this run as the baseline"
+        mkdir -p benches/baseline
+        cp "$REPORT_DIR"/BENCH_*.json benches/baseline/
+        echo "    (commit benches/baseline/*.json to pin the trajectory)"
+    fi
 fi
 
 echo "ci: OK"

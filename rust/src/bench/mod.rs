@@ -88,6 +88,15 @@ impl Bencher {
                   budget: Duration::from_secs(2) }
     }
 
+    /// [`Bencher::quick`] when `MERGEMOE_BENCH_QUICK` is set (CI runs every
+    /// bench in quick mode on every PR), [`Bencher::default`] otherwise.
+    pub fn from_env() -> Bencher {
+        match std::env::var("MERGEMOE_BENCH_QUICK") {
+            Ok(v) if !v.is_empty() && v != "0" => Bencher::quick(),
+            _ => Bencher::default(),
+        }
+    }
+
     /// Run `f` repeatedly; the closure's return value is black-boxed so LLVM
     /// cannot elide the work.
     pub fn run<T>(&self, name: &str, mut f: impl FnMut() -> T) -> Summary {

@@ -79,6 +79,10 @@ pub fn capture(
     seq_len: usize,
 ) -> Result<CalibData> {
     let mut caps = Vec::new();
+    // One workspace (plus one logits buffer) reused across every chunk:
+    // the per-chunk forward passes only allocate their capture clones.
+    let mut ws = crate::model::workspace::Workspace::new();
+    let mut logits = Tensor::default();
     // chunk to bound peak memory on large calibration sets
     let chunk = 32usize.min(n_seqs.max(1));
     let total_rows = n_seqs * seq_len;
@@ -89,7 +93,7 @@ pub fn capture(
         let take = chunk.min(n_seqs - done);
         let slice = &tokens[done * seq_len..(done + take) * seq_len];
         caps.clear();
-        native::forward(model, slice, take, seq_len, Some(&mut caps))?;
+        native::forward_ws(model, slice, take, seq_len, Some(&mut caps), &mut ws, &mut logits)?;
         if merged.is_empty() {
             // First chunk reveals the layer count and width: preallocate the
             // full (total_rows, d) capture per layer once, instead of

@@ -73,8 +73,14 @@ impl LatencyHistogram {
 /// Rolled-up serving metrics.
 #[derive(Debug, Clone, Default)]
 pub struct ServerMetrics {
+    /// Submission → batcher pickup, per request.
     pub queue_latency: LatencyHistogram,
+    /// Submission → reply, per request.
     pub total_latency: LatencyHistogram,
+    /// Forward + scoring compute, per batch (the quantity pool dispatch and
+    /// workspace reuse shave — visible from the serving side, not just
+    /// microbenches).
+    pub batch_latency: LatencyHistogram,
     pub requests: u64,
     pub batches: u64,
     pub batched_sequences: u64,
@@ -96,10 +102,31 @@ impl ServerMetrics {
         self.requests as f64 / self.wall_seconds
     }
 
+    /// Median queue wait (submission → batcher pickup).
+    pub fn queue_wait_p50(&self) -> Duration {
+        self.queue_latency.quantile(0.5)
+    }
+
+    /// Tail queue wait.
+    pub fn queue_wait_p99(&self) -> Duration {
+        self.queue_latency.quantile(0.99)
+    }
+
+    /// Median per-batch compute time.
+    pub fn batch_latency_p50(&self) -> Duration {
+        self.batch_latency.quantile(0.5)
+    }
+
+    /// Tail per-batch compute time.
+    pub fn batch_latency_p99(&self) -> Duration {
+        self.batch_latency.quantile(0.99)
+    }
+
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} throughput={:.1} req/s \
-             latency: mean {:?} p50 {:?} p99 {:?} max {:?} (queue p99 {:?})",
+             latency: mean {:?} p50 {:?} p99 {:?} max {:?} \
+             (queue p50 {:?} p99 {:?}; batch compute p50 {:?} p99 {:?})",
             self.requests,
             self.batches,
             self.mean_batch_size(),
@@ -108,7 +135,10 @@ impl ServerMetrics {
             self.total_latency.quantile(0.5),
             self.total_latency.quantile(0.99),
             self.total_latency.max(),
-            self.queue_latency.quantile(0.99),
+            self.queue_wait_p50(),
+            self.queue_wait_p99(),
+            self.batch_latency_p50(),
+            self.batch_latency_p99(),
         )
     }
 }
@@ -151,5 +181,20 @@ mod tests {
         assert_eq!(m.mean_batch_size(), 8.0);
         assert_eq!(m.throughput_rps(), 50.0);
         assert!(m.report().contains("mean_batch=8.00"));
+        assert!(m.report().contains("batch compute"));
+    }
+
+    #[test]
+    fn queue_and_batch_summaries_track_recorded_latencies() {
+        let mut m = ServerMetrics::default();
+        for i in 1..=100u64 {
+            m.queue_latency.record(Duration::from_micros(i * 10));
+            m.batch_latency.record(Duration::from_micros(i * 100));
+        }
+        assert!(m.queue_wait_p50() <= m.queue_wait_p99());
+        assert!(m.batch_latency_p50() <= m.batch_latency_p99());
+        // batches are ~10x slower than queue waits here; the bucketed
+        // quantiles must preserve that separation
+        assert!(m.batch_latency_p50() > m.queue_wait_p50());
     }
 }

@@ -17,6 +17,7 @@ use anyhow::{bail, Result};
 use crate::calib::{self, CalibData};
 use crate::eval::tasks::Task;
 use crate::merge::{self, Algorithm, GramBackend, MergePlan};
+use crate::model::workspace::Workspace;
 use crate::model::ModelWeights;
 
 /// What to compress and how.
@@ -114,7 +115,11 @@ pub fn compress(
     let calib: CalibData = calib::capture(model, &tokens, spec.n_calib_seqs, seq_len)?;
     let calib_seconds = t0.elapsed().as_secs_f64();
 
-    // (3)–(5) merge back to front
+    // (3)–(5) merge back to front. One workspace serves every layer's
+    // MergeMoE solve: the Gram panels reach their high-water size on the
+    // first layer and are reused for the rest (workspaces are per-thread;
+    // the pipeline is the only owner of this one).
+    let mut ws = Workspace::new();
     let mut out = model.clone();
     let mut layer_reports = Vec::new();
     let mut order = spec.layers.clone();
@@ -143,6 +148,7 @@ pub fn compress(
             Some(&x),
             gram,
             spec.ridge,
+            &mut ws,
         )?;
         let err = merge::layer_output_error(moe, &merged, &lc.x)?;
         layer_reports.push(LayerReport {

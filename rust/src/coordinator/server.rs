@@ -6,6 +6,12 @@
 //! Engine objects wrap PJRT client state and are not `Send`, so the worker
 //! *constructs* its engine inside the thread from a factory closure; clients
 //! hold a cheap cloneable handle.
+//!
+//! The worker owns one [`Workspace`] (plus a logits tensor, a batch token
+//! buffer and a log-prob buffer) and reuses them across every batch, so the
+//! steady-state loop — gather tokens, forward, score, reply — runs without
+//! touching the allocator once the arena is warm. Workspaces are per-worker
+//! by contract: never shared across threads.
 
 use std::sync::mpsc::{channel, Sender};
 use std::sync::{Arc, Mutex};
@@ -16,9 +22,11 @@ use anyhow::{anyhow, Context, Result};
 use super::batcher::{next_batch, BatchDecision};
 use super::metrics::ServerMetrics;
 use crate::eval::tasks;
-use crate::model::native::target_logprobs;
+use crate::model::native::target_logprobs_into;
+use crate::model::workspace::Workspace;
 use crate::model::ModelWeights;
 use crate::runtime::Engine;
+use crate::tensor::Tensor;
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
@@ -52,6 +60,9 @@ struct Request {
 pub struct ServerHandle {
     tx: Sender<Request>,
     seq_len: usize,
+    /// Padding token, resolved once at server construction instead of
+    /// re-tokenizing "\n" on every request.
+    pad: i32,
 }
 
 impl ServerHandle {
@@ -68,10 +79,9 @@ impl ServerHandle {
         if prompt_len + completion_len > self.seq_len {
             return Err(anyhow!("request longer than seq_len"));
         }
-        let pad = tasks::encode("\n")[0];
         let mut toks = ptoks;
         toks.extend(ctoks);
-        toks.resize(self.seq_len, pad);
+        toks.resize(self.seq_len, self.pad);
         let (rtx, rrx) = channel();
         self.tx
             .send(Request {
@@ -84,6 +94,23 @@ impl ServerHandle {
             .map_err(|_| anyhow!("server stopped"))?;
         rrx.recv().context("server dropped request")?
     }
+}
+
+/// Record the per-batch counters shared by the success and failure paths
+/// (one `batch_latency` sample per batch, always) and hand the still-locked
+/// guard back for any per-request bookkeeping.
+fn record_batch(
+    metrics: &Mutex<ServerMetrics>,
+    batch_size: usize,
+    wall_seconds: f64,
+    compute: Duration,
+) -> std::sync::MutexGuard<'_, ServerMetrics> {
+    let mut m = metrics.lock().unwrap();
+    m.batches += 1;
+    m.batched_sequences += batch_size as u64;
+    m.batch_latency.record(compute);
+    m.wall_seconds = wall_seconds;
+    m
 }
 
 /// The scoring server. Owns the worker thread; dropping it (or calling
@@ -107,6 +134,7 @@ impl ScoringServer {
         let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
         let metrics2 = metrics.clone();
         let cfg2 = cfg.clone();
+        let pad = tasks::encode("\n")[0];
         let join = std::thread::spawn(move || {
             let mut engine = match make_engine() {
                 Ok(e) => e,
@@ -119,6 +147,12 @@ impl ScoringServer {
                     return;
                 }
             };
+            // Steady-state serving buffers: one workspace per worker, one
+            // logits tensor, one token gather, one log-prob buffer — reused
+            // across every batch.
+            let mut ws = Workspace::new();
+            let mut logits = Tensor::default();
+            let mut tokens: Vec<i32> = Vec::new();
             let start = Instant::now();
             loop {
                 match next_batch(&rx, cfg2.max_batch, cfg2.max_wait) {
@@ -126,25 +160,29 @@ impl ScoringServer {
                     BatchDecision::Flush(items) => {
                         let b = items.len();
                         let s = cfg2.seq_len;
-                        let mut tokens = Vec::with_capacity(b * s);
+                        let t_batch = Instant::now();
+                        tokens.clear();
                         for it in &items {
                             tokens.extend_from_slice(&it.payload.tokens);
                         }
-                        let result = engine.logits(&model, &tokens, b, s);
-                        let mut m = metrics2.lock().unwrap();
-                        m.batches += 1;
-                        m.batched_sequences += b as u64;
-                        m.wall_seconds = start.elapsed().as_secs_f64();
+                        let result =
+                            engine.logits_ws(&model, &tokens, b, s, &mut ws, &mut logits);
                         match result {
-                            Ok(logits) => {
-                                let lps = target_logprobs(&logits, &tokens, b, s);
+                            Ok(()) => {
+                                target_logprobs_into(&logits, &tokens, b, s, &mut ws.lps);
+                                let mut m = record_batch(
+                                    &metrics2,
+                                    b,
+                                    start.elapsed().as_secs_f64(),
+                                    t_batch.elapsed(),
+                                );
                                 for (bi, it) in items.iter().enumerate() {
                                     let r = &it.payload;
                                     let mut sum = 0.0f64;
                                     for si in (r.prompt_len - 1)
                                         ..(r.prompt_len + r.completion_len - 1)
                                     {
-                                        sum += lps[bi * s + si] as f64;
+                                        sum += ws.lps[bi * s + si] as f64;
                                     }
                                     m.requests += 1;
                                     m.queue_latency
@@ -156,6 +194,12 @@ impl ScoringServer {
                                 }
                             }
                             Err(e) => {
+                                drop(record_batch(
+                                    &metrics2,
+                                    b,
+                                    start.elapsed().as_secs_f64(),
+                                    t_batch.elapsed(),
+                                ));
                                 let msg = format!("{e:#}");
                                 for it in items {
                                     let _ =
@@ -168,7 +212,7 @@ impl ScoringServer {
             }
         });
         ScoringServer {
-            handle: ServerHandle { tx: tx.clone(), seq_len: cfg.seq_len },
+            handle: ServerHandle { tx: tx.clone(), seq_len: cfg.seq_len, pad },
             metrics,
             join: Some(join),
             _keep_tx: Some(tx),
@@ -196,6 +240,7 @@ impl ScoringServer {
                 dead_tx
             },
             seq_len: self.handle.seq_len,
+            pad: self.handle.pad,
         };
         if let Some(j) = self.join.take() {
             let _ = j.join();
@@ -211,7 +256,11 @@ impl Drop for ScoringServer {
         // observes disconnect (client-held handle clones must already be
         // dropped by now, as documented on `handle()`).
         let (dead_tx, _) = channel();
-        self.handle = ServerHandle { tx: dead_tx, seq_len: self.handle.seq_len };
+        self.handle = ServerHandle {
+            tx: dead_tx,
+            seq_len: self.handle.seq_len,
+            pad: self.handle.pad,
+        };
         if let Some(j) = self.join.take() {
             let _ = j.join();
         }
@@ -250,6 +299,9 @@ mod tests {
         assert_eq!(m.requests, 12);
         assert!(m.batches <= 12);
         assert!(m.mean_batch_size() >= 1.0);
+        // the worker records one batch-compute sample per batch
+        assert_eq!(m.batch_latency.count(), m.batches);
+        assert!(m.batch_latency_p50() <= m.batch_latency_p99());
     }
 
     #[test]

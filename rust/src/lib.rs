@@ -16,7 +16,7 @@
 //! Module map (see DESIGN.md §4 for the full system inventory):
 //!
 //! * [`util`]    — substrates: RNG, JSON, CLI, logging, and [`util::par`] —
-//!   the scoped-thread data-parallelism layer every hot path runs on
+//!   the persistent-pool data-parallelism layer every hot path runs on
 //!   (offline environment, so `rand`/`serde`/`clap`/`rayon` are
 //!   reimplemented here).
 //! * [`tensor`]  — dense f32 tensor library (parallel register-tiled
@@ -27,19 +27,41 @@
 //!
 //! ## Threading model
 //!
-//! Parallelism lives in exactly one place — [`util::par`] — and is consumed
-//! at two levels: the matmul kernels split output rows across threads, and
-//! the independent units above them fan out whole work items (attention per
-//! sequence, MoE per expert batch, MergeMoE per cluster and per calibration
-//! chunk, triangular solves per column). Nested regions automatically
-//! degrade to serial, so the two levels compose without oversubscription.
-//! One knob controls everything: `--threads N` on the CLI, falling back to
-//! the `MERGEMOE_THREADS` environment variable, then to the core count;
-//! `threads = 1` is exactly the serial execution, and kernels below a
+//! Parallelism lives in exactly one place — [`util::par`] — and runs on a
+//! **persistent worker pool**: no threads exist until the first parallel
+//! region (lazy init), idle workers park on a condvar between regions, and
+//! [`util::par::shutdown_pool`] joins them for orderly teardown (the next
+//! region respawns lazily). A region publishes a job — a block table plus
+//! an atomic cursor — and the submitting thread works alongside the pool,
+//! so `threads = n` bounds the lanes touching a region even when the pool
+//! holds more workers. The pool is consumed at two levels: the matmul
+//! kernels split output rows across lanes, and the independent units above
+//! them fan out whole work items (attention per sequence, MoE per expert
+//! slot, MergeMoE per cluster and per calibration chunk, triangular solves
+//! per column). Nested regions automatically degrade to serial, so the two
+//! levels compose without oversubscription. One knob controls everything:
+//! `--threads N` on the CLI, falling back to the `MERGEMOE_THREADS`
+//! environment variable, then to the core count; `threads = 1` is exactly
+//! the serial execution and never touches the pool, and kernels below a
 //! work cutoff (`par::PAR_MIN_FLOPS`) stay serial so single-token latency
-//! never pays thread spawn/join. Reductions always run in
-//! a fixed order on the coordinating thread, so results are bit-identical
-//! at every thread count (`tests/par_consistency.rs` enforces this).
+//! never pays even a pool dispatch. Block boundaries depend only on the
+//! thread knob and reductions always run in a fixed order on the
+//! coordinating thread, so results are bit-identical at every thread count
+//! (`tests/par_consistency.rs` enforces this against the pool).
+//!
+//! ## Workspace arenas
+//!
+//! The inference stack threads a [`model::workspace::Workspace`] scratch
+//! arena through every stage (`forward_ws`, `moe_forward_ws`,
+//! `Engine::logits_ws`, the MergeMoE Gram panels), so a serving loop that
+//! holds one workspace runs with **zero heap allocations at steady state**
+//! (`benches/bench_forward.rs` proves it with a counting allocator).
+//! Ownership rules: one workspace per worker thread — the scoring server's
+//! engine thread owns one and reuses it across batches — and never shared
+//! across threads; parallel lanes receive disjoint slots
+//! (`Workspace::experts`, `Workspace::panels`) instead. Thin allocating
+//! wrappers (`forward`, `moe_forward`, …) keep the historical signatures
+//! and are bit-identical (`tests/workspace_reuse.rs`).
 //! * [`io`]      — NPY/NPZ interchange with the build-time trainer.
 //! * [`config`]  — artifact manifest + model configurations.
 //! * [`model`]   — weights and the native reference forward engine.

@@ -38,6 +38,34 @@ pub fn cholesky(a: &Tensor) -> Result<Tensor> {
     Ok(l)
 }
 
+/// One column of `L y = b` (forward substitution), in place. `ld` is the
+/// row-major n×n lower factor. Shared by every triangular solve so the
+/// f64 recurrence exists exactly once (the bit-identity contract between
+/// the chained and fused solves depends on it).
+#[inline]
+fn forward_subst_col(ld: &[f32], n: usize, col: &mut [f32]) {
+    for i in 0..n {
+        let lrow = &ld[i * n..i * n + i + 1];
+        let mut s = col[i] as f64;
+        for k in 0..i {
+            s -= lrow[k] as f64 * col[k] as f64;
+        }
+        col[i] = (s / lrow[i] as f64) as f32;
+    }
+}
+
+/// One column of `Lᵀ x = y` (back substitution), in place.
+#[inline]
+fn back_subst_col(ld: &[f32], n: usize, col: &mut [f32]) {
+    for i in (0..n).rev() {
+        let mut s = col[i] as f64;
+        for k in i + 1..n {
+            s -= ld[k * n + i] as f64 * col[k] as f64;
+        }
+        col[i] = (s / ld[i * n + i] as f64) as f32;
+    }
+}
+
 /// Solve `L y = b` (lower-triangular forward substitution) for each column of
 /// `b` (n × m). Columns are independent, so the solve runs one column per
 /// parallel work item on a transposed (column-contiguous) panel — the per-
@@ -54,14 +82,7 @@ pub fn solve_lower(l: &Tensor, b: &Tensor) -> Result<Tensor> {
     let mut yt = ops::transpose(b)?; // (m, n): row c = column c of b
     let parallel = n * n * b.shape()[1] >= par::PAR_MIN_FLOPS;
     par::par_chunks_mut_if(parallel, yt.data_mut(), n, |_c, col| {
-        for i in 0..n {
-            let lrow = &ld[i * n..i * n + i + 1];
-            let mut s = col[i] as f64;
-            for k in 0..i {
-                s -= lrow[k] as f64 * col[k] as f64;
-            }
-            col[i] = (s / lrow[i] as f64) as f32;
-        }
+        forward_subst_col(ld, n, col);
     });
     ops::transpose(&yt)
 }
@@ -80,13 +101,7 @@ pub fn solve_upper_t(l: &Tensor, y: &Tensor) -> Result<Tensor> {
     let mut xt = ops::transpose(y)?;
     let parallel = n * n * y.shape()[1] >= par::PAR_MIN_FLOPS;
     par::par_chunks_mut_if(parallel, xt.data_mut(), n, |_c, col| {
-        for i in (0..n).rev() {
-            let mut s = col[i] as f64;
-            for k in i + 1..n {
-                s -= ld[k * n + i] as f64 * col[k] as f64;
-            }
-            col[i] = (s / ld[i * n + i] as f64) as f32;
-        }
+        back_subst_col(ld, n, col);
     });
     ops::transpose(&xt)
 }
@@ -106,14 +121,36 @@ pub fn solve_spd(a: &Tensor, b: &Tensor, ridge: f64) -> Result<Tensor> {
             *aj.at2_mut(i, i) += jitter as f32;
         }
         match cholesky(&aj) {
-            Ok(l) => {
-                let y = solve_lower(&l, b)?;
-                return solve_upper_t(&l, &y);
-            }
+            Ok(l) => return solve_chol(&l, b),
             Err(_) => jitter = (jitter * 100.0).max(1e-12 * diag_scale.max(1e-30)),
         }
     }
     bail!("solve_spd: matrix not PD even with jitter (n={n})")
+}
+
+/// Solve `L Lᵀ X = B` given the Cholesky factor. One transposed
+/// (column-contiguous) panel carries each right-hand-side column through
+/// *both* triangular substitutions — the chained
+/// [`solve_lower`]/[`solve_upper_t`] would materialize (and transpose) the
+/// intermediate `Y` twice; this fused path runs one parallel region over
+/// columns instead of two and allocates half the intermediates. Per-column
+/// arithmetic is identical, so results match the chained solves bit for bit.
+fn solve_chol(l: &Tensor, b: &Tensor) -> Result<Tensor> {
+    let n = square_dim(l)?;
+    if b.shape()[0] != n {
+        bail!("solve_chol shape mismatch");
+    }
+    if n == 0 || b.shape()[1] == 0 {
+        return Ok(b.clone());
+    }
+    let ld = l.data();
+    let mut panel = ops::transpose(b)?; // (m, n): row c = column c of b
+    let parallel = n * n * b.shape()[1] >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, panel.data_mut(), n, |_c, col| {
+        forward_subst_col(ld, n, col);
+        back_subst_col(ld, n, col);
+    });
+    ops::transpose(&panel)
 }
 
 /// Householder QR of `a` (m × n, m ≥ n): returns (Q (m,n) thin, R (n,n)).
@@ -286,6 +323,20 @@ mod tests {
         let x = solve_spd(&a, &b, 1e-6).unwrap();
         assert_eq!(x.shape(), &[3, 3]);
         assert!(x.data().iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn fused_solve_matches_chained_triangular_solves() {
+        // solve_spd's fused panel must equal solve_lower ∘ solve_upper_t
+        // bit for bit (it elides two exact transposes, nothing else).
+        let mut rng = Rng::new(38);
+        let a = spd(16, &mut rng);
+        let b = Tensor::randn(&[16, 5], 1.0, &mut rng);
+        let l = cholesky(&a).unwrap();
+        let y = solve_lower(&l, &b).unwrap();
+        let chained = solve_upper_t(&l, &y).unwrap();
+        let fused = solve_spd(&a, &b, 0.0).unwrap();
+        assert_eq!(fused.data(), chained.data());
     }
 
     #[test]

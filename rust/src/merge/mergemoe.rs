@@ -17,13 +17,21 @@
 //!    (N_c·f × f) matrix `T1`. The Gram blocks stream through a
 //!    [`GramBackend`] in fixed-size column chunks (the L1 pallas kernel on
 //!    the PJRT path).
+//!
+//! All P/Ŷ panels are drawn from a [`Workspace`] arena
+//! ([`crate::model::workspace::PanelScratch`] — one slot per concurrent
+//! chunk), so a multi-layer compression run re-streams every chunk through
+//! the same buffers instead of churning the allocator. Workspaces are
+//! per-thread: the serial cluster loop reuses the caller's, the forked
+//! parallel path gives each cluster lane its own.
 
 use anyhow::Result;
 
 use super::plan::MergePlan;
 use super::GramBackend;
 use crate::linalg;
-use crate::model::native::{expert_forward, expert_inner};
+use crate::model::native::expert_inner_into;
+use crate::model::workspace::{PanelScratch, Workspace};
 use crate::model::{Expert, MoeLayer};
 use crate::tensor::{ops, Tensor};
 use crate::util::par;
@@ -32,7 +40,46 @@ use crate::util::par;
 /// `gram_*` artifact buckets; the backend may further split internally).
 pub const GRAM_CHUNK: usize = 1024;
 
-/// Merge one cluster: returns the merged expert.
+/// Compute one chunk's panels into `sc`: P (f, chunk) from the averaged
+/// expert's inner activations and Ŷ (d, chunk) from the frequency-weighted
+/// member outputs.
+#[allow(clippy::too_many_arguments)]
+fn panel_compute(
+    moe: &MoeLayer,
+    members: &[usize],
+    weights: &[f64],
+    avg: &Expert,
+    x: &Tensor,
+    clo: usize,
+    chi: usize,
+    sc: &mut PanelScratch,
+) -> Result<()> {
+    let d = x.shape()[1];
+    let rows = chi - clo;
+    sc.xs.reuse2(rows, d);
+    sc.xs.data_mut().copy_from_slice(&x.data()[clo * d..chi * d]);
+    // Ŷ chunk: frequency-weighted member outputs, transposed
+    sc.yhat.reuse2(rows, d);
+    sc.yhat.data_mut().fill(0.0);
+    for &j in members {
+        let ex = &moe.experts[j];
+        expert_inner_into(ex, &sc.xs, &mut sc.g, &mut sc.u)?;
+        sc.ey.reuse2(rows, ex.wd.shape()[0]);
+        ops::matmul_bt_into(&sc.g, &ex.wd, &mut sc.ey)?;
+        sc.yhat.axpy(weights[j] as f32, &sc.ey)?;
+    }
+    sc.y.reuse2(d, rows);
+    ops::transpose_into(&sc.yhat, &mut sc.y)?;
+    // P chunk: inner activations of the averaged gate/up, transposed
+    expert_inner_into(avg, &sc.xs, &mut sc.g, &mut sc.u)?;
+    let f = avg.wg.shape()[0];
+    sc.p.reuse2(f, rows);
+    ops::transpose_into(&sc.g, &mut sc.p)
+}
+
+/// Merge one cluster: returns the merged expert. Panel scratch comes from
+/// `ws` (never shared across threads — each parallel cluster lane owns one).
+#[allow(clippy::too_many_arguments)]
 fn merge_cluster(
     moe: &MoeLayer,
     members: &[usize],
@@ -40,6 +87,7 @@ fn merge_cluster(
     x: &Tensor, // calibration inputs (T, d)
     gram: &mut dyn GramBackend,
     ridge: f64,
+    ws: &mut Workspace,
 ) -> Result<Expert> {
     // (1) frequency-weighted gate/up projections
     let proto = &moe.experts[members[0]];
@@ -58,7 +106,7 @@ fn merge_cluster(
     // (2)+(3): stream P (f,S) and Ŷ (d,S) in chunks, accumulate Gram blocks.
     // Chunks are independent until the Gram reduction, so they are computed
     // in waves of up to `max_threads` chunks in parallel (bounding peak
-    // memory to one wave of P/Ŷ panels) and reduced serially in chunk order
+    // memory to one wave of panel slots) and reduced serially in chunk order
     // — the accumulation order is identical at every thread count.
     let t = x.shape()[0];
     let f = avg.wg.shape()[0];
@@ -74,25 +122,25 @@ fn merge_cluster(
     }
     let avg_ref = &avg;
     for wave in ranges.chunks(par::max_threads().max(1)) {
-        let panels: Vec<Result<(Tensor, Tensor)>> = par::par_map(wave, |_, &(clo, chi)| {
-            let xs = x.rows_slice(clo, chi);
-            // P chunk: inner activations of the averaged gate/up, transposed
-            let p_rows = expert_inner(avg_ref, &xs)?; // (chunk, f)
-            let p = ops::transpose(&p_rows)?; // (f, chunk)
-            // Ŷ chunk: frequency-weighted member outputs, transposed
-            let mut yhat_rows = Tensor::zeros(&[chi - clo, d]);
-            for &j in members {
-                let yj = expert_forward(&moe.experts[j], &xs)?;
-                yhat_rows.axpy(weights[j] as f32, &yj)?;
-            }
-            let y = ops::transpose(&yhat_rows)?; // (d, chunk)
-            Ok((p, y))
+        let nw = wave.len();
+        if ws.panels.len() < nw {
+            ws.panels.resize_with(nw, PanelScratch::new);
+        }
+        let slots = &mut ws.panels[..nw];
+        // chunk panels are coarse by construction — always fan out
+        par::par_chunks_mut_if(true, slots, 1, |wi, slot| {
+            let sc = &mut slot[0];
+            let (clo, chi) = wave[wi];
+            let result = panel_compute(moe, members, weights, avg_ref, x, clo, chi, sc);
+            sc.err = result.err();
         });
-        for panel in panels {
-            let (p, y) = panel?;
-            let (pp, yp) = gram.gram(&p, &y)?;
-            ppt = ppt.add(&pp)?;
-            ypt = ypt.add(&yp)?;
+        for sc in ws.panels[..nw].iter_mut() {
+            if let Some(err) = sc.err.take() {
+                return Err(err);
+            }
+            let (pp, yp) = gram.gram(&sc.p, &sc.y)?;
+            ppt.axpy(1.0, &pp)?;
+            ypt.axpy(1.0, &yp)?;
         }
     }
     // ridge-regularized normal-equation solve: W_D' (f columns)
@@ -100,12 +148,18 @@ fn merge_cluster(
     Ok(Expert { wg: avg.wg, wu: avg.wu, wd })
 }
 
+/// Merge a whole layer according to `plan`, drawing panel scratch from `ws`:
+/// the serial path uses it directly, the forked parallel path hands each
+/// cluster lane its own sub-workspace from `ws.cluster_ws` (workspaces are
+/// never shared across threads; the slots are reused across layers when the
+/// pipeline merges several).
 pub fn merge(
     moe: &MoeLayer,
     plan: &MergePlan,
     x: &Tensor,
     gram: &mut dyn GramBackend,
     ridge: f64,
+    ws: &mut Workspace,
 ) -> Result<MoeLayer> {
     // Clusters are independent solves. If the backend can fork (native
     // path), each cluster gets its own backend instance and the solves run
@@ -121,12 +175,27 @@ pub fn merge(
         Some(mut forked) => {
             let mut slots: Vec<Option<Result<Expert>>> = Vec::new();
             slots.resize_with(n_clusters, || None);
+            // One sub-workspace per cluster lane, drawn from (and returned
+            // to) the caller's arena so repeated merges — the pipeline's
+            // back-to-front layer loop — reuse warm panels.
+            if ws.cluster_ws.len() < n_clusters {
+                ws.cluster_ws.resize_with(n_clusters, Workspace::new);
+            }
             {
-                let mut items: Vec<(&mut Box<dyn GramBackend + Send>, &mut Option<Result<Expert>>)> =
-                    forked.iter_mut().zip(slots.iter_mut()).collect();
+                type Lane<'a> = (
+                    &'a mut Box<dyn GramBackend + Send>,
+                    &'a mut Option<Result<Expert>>,
+                    &'a mut Workspace,
+                );
+                let mut items: Vec<Lane<'_>> = forked
+                    .iter_mut()
+                    .zip(slots.iter_mut())
+                    .zip(ws.cluster_ws.iter_mut())
+                    .map(|((g, s), w)| (g, s, w))
+                    .collect();
                 // cluster solves are coarse by construction — always fan out
                 par::par_chunks_mut_if(true, &mut items, 1, |ci, slot| {
-                    let (g, out) = &mut slot[0];
+                    let (g, out, cluster_ws) = &mut slot[0];
                     **out = Some(merge_cluster(
                         moe,
                         &plan.clusters[ci],
@@ -134,6 +203,7 @@ pub fn merge(
                         x,
                         g.as_mut(),
                         ridge,
+                        cluster_ws,
                     ));
                 });
             }
@@ -145,7 +215,7 @@ pub fn merge(
         None => plan
             .clusters
             .iter()
-            .map(|members| merge_cluster(moe, members, &plan.weights, x, gram, ridge))
+            .map(|members| merge_cluster(moe, members, &plan.weights, x, gram, ridge, ws))
             .collect::<Result<Vec<_>>>()?,
     };
     Ok(MoeLayer {
@@ -161,6 +231,7 @@ pub fn merge(
 mod tests {
     use super::*;
     use crate::merge::NativeGram;
+    use crate::model::native::expert_forward;
     use crate::model::testutil::tiny_model;
     use crate::util::rng::Rng;
 
@@ -181,7 +252,8 @@ mod tests {
         let mut rng = Rng::new(31);
         let x = Tensor::randn(&[512, 16], 1.0, &mut rng);
         let plan = two_cluster_plan();
-        let merged = merge(moe, &plan, &x, &mut NativeGram, 1e-8).unwrap();
+        let merged =
+            merge(moe, &plan, &x, &mut NativeGram, 1e-8, &mut Workspace::new()).unwrap();
 
         // held-out batch: merged expert vs the exact weighted output target
         let xt = Tensor::randn(&[128, 16], 1.0, &mut Rng::new(32));
@@ -207,7 +279,8 @@ mod tests {
         let mut rng = Rng::new(34);
         let x = Tensor::randn(&[512, 16], 1.0, &mut rng);
         let plan = two_cluster_plan();
-        let mm = merge(moe, &plan, &x, &mut NativeGram, 1e-10).unwrap();
+        let mm =
+            merge(moe, &plan, &x, &mut NativeGram, 1e-10, &mut Workspace::new()).unwrap();
         let ms = crate::merge::msmoe::merge(moe, &plan).unwrap();
         for (ci, members) in plan.clusters.iter().enumerate() {
             let mut want = Tensor::zeros(&[512, 16]);
@@ -244,7 +317,8 @@ mod tests {
             weights: vec![1.0; 3],
         };
         let x = Tensor::randn(&[64, 16], 1.0, &mut Rng::new(36));
-        let merged = merge(moe, &plan, &x, &mut NativeGram, 1e-8).unwrap();
+        let merged =
+            merge(moe, &plan, &x, &mut NativeGram, 1e-8, &mut Workspace::new()).unwrap();
         for i in 0..3 {
             assert_eq!(merged.experts[i].wd.data(), moe.experts[i].wd.data());
         }
@@ -257,9 +331,28 @@ mod tests {
         let model = tiny_model(4, 2, false, 37);
         let moe = &model.layers[0].moe;
         let x = Tensor::randn(&[4, 16], 1.0, &mut Rng::new(38));
-        let merged = merge(moe, &two_cluster_plan(), &x, &mut NativeGram, 1e-6).unwrap();
+        let merged =
+            merge(moe, &two_cluster_plan(), &x, &mut NativeGram, 1e-6, &mut Workspace::new())
+                .unwrap();
         for e in &merged.experts {
             assert!(e.wd.data().iter().all(|v| v.is_finite()));
+        }
+    }
+
+    #[test]
+    fn workspace_reuse_across_merges_is_bit_identical() {
+        // Re-running the same merge through one warm workspace must produce
+        // byte-identical weights to a fresh workspace.
+        let model = tiny_model(4, 2, false, 39);
+        let moe = &model.layers[0].moe;
+        let x = Tensor::randn(&[300, 16], 1.0, &mut Rng::new(40));
+        let plan = two_cluster_plan();
+        let mut ws = Workspace::new();
+        let first = merge(moe, &plan, &x, &mut NativeGram, 1e-8, &mut ws).unwrap();
+        let second = merge(moe, &plan, &x, &mut NativeGram, 1e-8, &mut ws).unwrap();
+        for (a, b) in first.experts.iter().zip(&second.experts) {
+            assert_eq!(a.wd.data(), b.wd.data());
+            assert_eq!(a.wg.data(), b.wg.data());
         }
     }
 }

@@ -34,6 +34,7 @@ use anyhow::{bail, Result};
 pub use plan::MergePlan;
 
 use crate::model::native::moe_forward;
+use crate::model::workspace::Workspace;
 use crate::model::MoeLayer;
 use crate::tensor::{ops, Tensor};
 
@@ -115,7 +116,10 @@ impl Algorithm {
 ///
 /// `calib_x`: post-LN layer inputs X̂ (T, d); required by MergeMoE,
 /// ignored by the parameter-space baselines. `ridge` is the relative
-/// regularization of the normal-equation solve.
+/// regularization of the normal-equation solve. `ws` supplies the MergeMoE
+/// Gram-panel scratch — callers merging several layers (the compression
+/// pipeline) pass one workspace so the panels are reused throughout;
+/// one-shot callers pass `&mut Workspace::new()`.
 pub fn merge_layer(
     alg: Algorithm,
     moe: &MoeLayer,
@@ -123,6 +127,7 @@ pub fn merge_layer(
     calib_x: Option<&Tensor>,
     gram: &mut dyn GramBackend,
     ridge: f64,
+    ws: &mut Workspace,
 ) -> Result<MoeLayer> {
     plan.validate(moe.n_experts())?;
     match alg {
@@ -133,7 +138,7 @@ pub fn merge_layer(
             let Some(x) = calib_x else {
                 bail!("MergeMoE requires calibration activations")
             };
-            mergemoe::merge(moe, plan, x, gram, ridge)
+            mergemoe::merge(moe, plan, x, gram, ridge, ws)
         }
         Algorithm::Oracle => oracle::merge(moe, plan),
     }
@@ -174,7 +179,8 @@ mod tests {
         for alg in [Algorithm::Average, Algorithm::ZipIt, Algorithm::MSmoe,
                     Algorithm::MergeMoe, Algorithm::Oracle] {
             let merged =
-                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-6).unwrap();
+                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-6, &mut Workspace::new())
+                    .unwrap();
             let expected_experts =
                 if alg == Algorithm::Oracle { 8 } else { 4 };
             assert_eq!(merged.n_experts(), expected_experts, "{alg:?}");
@@ -193,10 +199,12 @@ mod tests {
         // T1-fixed special case of the same parametrization).
         let (moe, plan, x) = setup(8, 4);
         let msmoe =
-            merge_layer(Algorithm::MSmoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+            merge_layer(Algorithm::MSmoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9,
+                        &mut Workspace::new())
                 .unwrap();
         let mm =
-            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9,
+                        &mut Workspace::new())
                 .unwrap();
         let e_msmoe = layer_output_error(&moe, &msmoe, &x).unwrap();
         let e_mm = layer_output_error(&moe, &mm, &x).unwrap();
@@ -212,9 +220,11 @@ mod tests {
         // must not increase the output error.
         let (moe, plan, x) = setup(8, 4);
         let mm =
-            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9)
+            merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-9,
+                        &mut Workspace::new())
                 .unwrap();
-        let or = merge_layer(Algorithm::Oracle, &moe, &plan, None, &mut NativeGram, 0.0)
+        let or = merge_layer(Algorithm::Oracle, &moe, &plan, None, &mut NativeGram, 0.0,
+                &mut Workspace::new())
             .unwrap();
         let e_mm = layer_output_error(&moe, &mm, &x).unwrap();
         let e_or = layer_output_error(&moe, &or, &x).unwrap();
@@ -228,7 +238,9 @@ mod tests {
         for alg in [Algorithm::Average, Algorithm::MSmoe, Algorithm::MergeMoe,
                     Algorithm::ZipIt] {
             let merged =
-                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-12).unwrap();
+                merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-12,
+                            &mut Workspace::new())
+                .unwrap();
             let err = layer_output_error(&moe, &merged, &x).unwrap();
             assert!(err < 2e-3, "{alg:?}: singleton merge err {err}");
         }
@@ -237,7 +249,8 @@ mod tests {
     #[test]
     fn mergemoe_requires_calibration() {
         let (moe, plan, _) = setup(8, 4);
-        assert!(merge_layer(Algorithm::MergeMoe, &moe, &plan, None, &mut NativeGram, 1e-6)
+        assert!(merge_layer(Algorithm::MergeMoe, &moe, &plan, None, &mut NativeGram, 1e-6,
+            &mut Workspace::new())
             .is_err());
     }
 

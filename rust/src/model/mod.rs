@@ -3,6 +3,7 @@
 //! splice them), and export back to NPZ.
 
 pub mod native;
+pub mod workspace;
 
 use std::collections::BTreeMap;
 use std::path::Path;

@@ -10,16 +10,24 @@
 //! softmax-then-top-K routing without renormalization, silu gating,
 //! eps=1e-5 layernorm.
 //!
+//! Every stage comes in two forms: a `*_ws` function that draws all
+//! intermediates from a caller-owned [`Workspace`] (the steady-state
+//! serving path — zero heap allocations once the arena is warm) and a thin
+//! allocating wrapper with the historical signature that spins up a
+//! throwaway workspace. Results are bit-identical either way
+//! (`tests/workspace_reuse.rs`).
+//!
 //! Parallelism (see `util::par`): attention fans out per sequence, the MoE
-//! MLP per expert batch, and the matmul kernels underneath per output row —
+//! MLP per expert slot, and the matmul kernels underneath per output row —
 //! nested regions degrade to serial automatically, so the layers compose.
 //! The scatter-accumulate back into the output always runs serially in
 //! expert order, keeping results bit-identical at every thread count.
 
 use anyhow::{bail, Result};
 
+use super::workspace::{ExpertScratch, Workspace};
 use super::{Expert, Layer, ModelWeights, MoeLayer};
-use crate::moe::routing::route_tokens;
+use crate::moe::routing::route_tokens_into;
 use crate::tensor::{ops, Tensor};
 use crate::util::par;
 
@@ -35,205 +43,378 @@ pub struct LayerCapture {
     pub weight_mass: Vec<f64>,
 }
 
+fn dims2(x: &Tensor, what: &str) -> Result<(usize, usize)> {
+    match x.shape() {
+        [a, b] => Ok((*a, *b)),
+        s => bail!("{what} must be 2-D, got {s:?}"),
+    }
+}
+
+/// The pre-down-projection activations `silu(W_G x) ⊙ (W_U x)` computed
+/// into caller-owned panels: the result lands in `g` (shape (T, f)); `u`
+/// is overwritten scratch.
+pub fn expert_inner_into(ex: &Expert, x: &Tensor, g: &mut Tensor, u: &mut Tensor) -> Result<()> {
+    let (t, _) = dims2(x, "expert input")?;
+    let f = ex.wg.shape()[0];
+    g.reuse2(t, f);
+    u.reuse2(t, f);
+    ops::matmul_bt_into(x, &ex.wg, g)?;
+    ops::matmul_bt_into(x, &ex.wu, u)?;
+    for (hv, uv) in g.data_mut().iter_mut().zip(u.data()) {
+        *hv = ops::silu(*hv) * uv;
+    }
+    Ok(())
+}
+
+/// Apply one expert to the gathered batch in `sc.xs`, leaving the output in
+/// `sc.ys` (and the SwiGLU panels in `sc.g`/`sc.u`).
+fn expert_forward_scratch(ex: &Expert, sc: &mut ExpertScratch) -> Result<()> {
+    expert_inner_into(ex, &sc.xs, &mut sc.g, &mut sc.u)?;
+    let t = sc.xs.shape()[0];
+    sc.ys.reuse2(t, ex.wd.shape()[0]);
+    ops::matmul_bt_into(&sc.g, &ex.wd, &mut sc.ys)
+}
+
 /// Apply one expert to a batch of rows: `W_D (silu(W_G x) ⊙ (W_U x))`.
+/// Allocating wrapper around [`expert_inner_into`].
 pub fn expert_forward(ex: &Expert, x: &Tensor) -> Result<Tensor> {
-    let h = expert_inner(ex, x)?;
-    ops::matmul_bt(&h, &ex.wd)
+    let mut g = Tensor::default();
+    let mut u = Tensor::default();
+    expert_inner_into(ex, x, &mut g, &mut u)?;
+    let mut out = Tensor::default();
+    out.reuse2(x.shape()[0], ex.wd.shape()[0]);
+    ops::matmul_bt_into(&g, &ex.wd, &mut out)?;
+    Ok(out)
 }
 
 /// The pre-down-projection activations `silu(W_G x) ⊙ (W_U x)` — the `Q`/`P`
 /// rows of the least-squares system (transposed: returned as (T, f)).
 pub fn expert_inner(ex: &Expert, x: &Tensor) -> Result<Tensor> {
-    let g = ops::matmul_bt(x, &ex.wg)?;
-    let u = ops::matmul_bt(x, &ex.wu)?;
-    let mut h = g;
-    for (hv, uv) in h.data_mut().iter_mut().zip(u.data()) {
-        *hv = ops::silu(*hv) * uv;
-    }
-    Ok(h)
+    let mut g = Tensor::default();
+    let mut u = Tensor::default();
+    expert_inner_into(ex, x, &mut g, &mut u)?;
+    Ok(g)
 }
 
-/// MoE MLP forward on token rows (T, d) -> (T, d), plus capture stats.
+/// MoE MLP forward on token rows (T, d), all scratch drawn from `ws`.
 /// Implements Eq. 1 in the Appendix-B layout: the router scores the N
 /// original experts; when `map` (M,N) is set the masked routing vector is
 /// redirected to the M real experts (`r' = map · r`).
-pub fn moe_forward(moe: &MoeLayer, x: &Tensor) -> Result<(Tensor, Vec<f64>, Vec<f64>)> {
-    let t = x.shape()[0];
+///
+/// Outputs land in the workspace: `ws.moe_out` (T, d), `ws.counts` and
+/// `ws.mass` (len E). `x` is typically `ws.x` handed over via
+/// `std::mem::take` (a workspace is one coherent arena; the input buffer
+/// returns to it afterwards).
+pub fn moe_forward_ws(moe: &MoeLayer, x: &Tensor, ws: &mut Workspace) -> Result<()> {
+    let (t, d) = dims2(x, "moe input")?;
     let n = moe.router.shape()[0];
     let e = moe.n_experts();
-    let routing = route_tokens(&moe.router, x, moe.top_k)?;
+    let k = route_tokens_into(
+        &moe.router,
+        x,
+        moe.top_k,
+        &mut ws.route_logits,
+        &mut ws.route_order,
+        &mut ws.route_pairs,
+    )?;
     // dense (t, n) routing weights over the N-way router
-    let mut r = Tensor::zeros(&[t, n]);
-    for (ti, tok) in routing.iter().enumerate() {
-        for &(ei, w) in tok {
-            *r.at2_mut(ti, ei) = w;
+    ws.r.reuse2(t, n);
+    ws.r.data_mut().fill(0.0);
+    for ti in 0..t {
+        for &(ei, w) in &ws.route_pairs[ti * k..(ti + 1) * k] {
+            *ws.r.at2_mut(ti, ei) = w;
         }
     }
-    if let Some(map) = &moe.map {
-        r = ops::matmul_bt(&r, map)?; // (t,n) @ (m,n)ᵀ = (t,m)
+    let r: &Tensor = if let Some(map) = &moe.map {
+        ws.r2.reuse2(t, map.shape()[0]);
+        ops::matmul_bt_into(&ws.r, map, &mut ws.r2)?; // (t,n) @ (m,n)ᵀ = (t,m)
+        &ws.r2
     } else if e != n {
-        anyhow::bail!("moe layer has {e} experts but {n}-way router and no map");
-    }
+        bail!("moe layer has {e} experts but {n}-way router and no map")
+    } else {
+        &ws.r
+    };
     // gather tokens per expert so each expert runs one batched matmul;
-    // expert batches are independent and run in parallel. Tokens may be
+    // expert slots are independent lanes and run in parallel. Tokens may be
     // routed to several experts (top-K), so the weighted scatter back into
-    // `out` stays serial, in expert order — deterministic at any thread
+    // `moe_out` stays serial, in expert order — deterministic at any thread
     // count.
-    let d = x.shape()[1];
-    let r_ref = &r;
+    if ws.experts.len() < e {
+        ws.experts.resize_with(e, ExpertScratch::new);
+    }
     // rough per-layer MoE work: top_k experts each run 3 (f,d) matmuls per
     // routed token — skip the fan-out when the whole batch is tiny
     let f_dim = moe.experts.first().map(|ex| ex.wg.shape()[0]).unwrap_or(0);
     let parallel = 6 * t * moe.top_k * f_dim * d >= par::PAR_MIN_FLOPS;
-    let per_expert: Vec<Result<Option<(Vec<usize>, Tensor)>>> = par::par_map_range_if(parallel, e, |ei| {
-        let tok_idx: Vec<usize> = (0..t).filter(|&ti| r_ref.at2(ti, ei) != 0.0).collect();
-        if tok_idx.is_empty() {
-            return Ok(None);
+    {
+        let experts = &moe.experts;
+        let slots = &mut ws.experts[..e];
+        par::par_chunks_mut_if(parallel, slots, 1, |ei, slot| {
+            let sc = &mut slot[0];
+            sc.err = None;
+            sc.tok_idx.clear();
+            for ti in 0..t {
+                if r.at2(ti, ei) != 0.0 {
+                    sc.tok_idx.push(ti);
+                }
+            }
+            let tn = sc.tok_idx.len();
+            sc.xs.reuse2(tn, d);
+            if tn == 0 {
+                sc.ys.reuse2(0, d);
+                return;
+            }
+            for (row, &ti) in sc.tok_idx.iter().enumerate() {
+                sc.xs.row_mut(row).copy_from_slice(x.row(ti));
+            }
+            if let Err(err) = expert_forward_scratch(&experts[ei], sc) {
+                sc.err = Some(err);
+            }
+        });
+    }
+    ws.counts.clear();
+    ws.counts.resize(e, 0.0);
+    ws.mass.clear();
+    ws.mass.resize(e, 0.0);
+    ws.moe_out.reuse2(t, d);
+    ws.moe_out.data_mut().fill(0.0);
+    for ei in 0..e {
+        let sc = &mut ws.experts[ei];
+        if let Some(err) = sc.err.take() {
+            return Err(err);
         }
-        let mut xs = Tensor::zeros(&[tok_idx.len(), d]);
-        for (row, &ti) in tok_idx.iter().enumerate() {
-            xs.row_mut(row).copy_from_slice(x.row(ti));
-        }
-        let ys = expert_forward(&moe.experts[ei], &xs)?;
-        Ok(Some((tok_idx, ys)))
-    });
-    let mut counts = vec![0.0f64; e];
-    let mut mass = vec![0.0f64; e];
-    let mut out = Tensor::zeros(&[t, d]);
-    for (ei, item) in per_expert.into_iter().enumerate() {
-        let Some((tok_idx, ys)) = item? else {
+        if sc.tok_idx.is_empty() {
             continue;
-        };
-        counts[ei] = tok_idx.len() as f64;
-        for (row, &ti) in tok_idx.iter().enumerate() {
+        }
+        ws.counts[ei] = sc.tok_idx.len() as f64;
+        for (row, &ti) in sc.tok_idx.iter().enumerate() {
             let w = r.at2(ti, ei);
-            mass[ei] += w as f64;
-            let orow = out.row_mut(ti);
-            for (o, &y) in orow.iter_mut().zip(ys.row(row)) {
+            ws.mass[ei] += w as f64;
+            let orow = ws.moe_out.row_mut(ti);
+            for (o, &y) in orow.iter_mut().zip(sc.ys.row(row)) {
                 *o += w * y;
             }
         }
     }
     if let Some(sh) = &moe.shared {
-        let ys = expert_forward(sh, x)?;
-        out = out.add(&ys)?;
+        let sc = &mut ws.shared;
+        expert_inner_into(sh, x, &mut sc.g, &mut sc.u)?;
+        sc.ys.reuse2(t, d);
+        ops::matmul_bt_into(&sc.g, &sh.wd, &mut sc.ys)?;
+        ws.moe_out.axpy(1.0, &sc.ys)?;
     }
-    Ok((out, counts, mass))
+    Ok(())
 }
 
-/// Causal multi-head attention (pre-LN, residual) on (B, S, d).
-fn attn_forward(layer: &Layer, h: &Tensor, n_heads: usize, b: usize, s: usize) -> Result<Tensor> {
+/// MoE MLP forward on token rows (T, d) -> (T, d), plus capture stats.
+/// Allocating wrapper around [`moe_forward_ws`].
+pub fn moe_forward(moe: &MoeLayer, x: &Tensor) -> Result<(Tensor, Vec<f64>, Vec<f64>)> {
+    let mut ws = Workspace::new();
+    moe_forward_ws(moe, x, &mut ws)?;
+    Ok((
+        std::mem::take(&mut ws.moe_out),
+        std::mem::take(&mut ws.counts),
+        std::mem::take(&mut ws.mass),
+    ))
+}
+
+/// Causal multi-head attention (pre-LN, residual) on (B, S, d), updating the
+/// residual stream `h` in place; all intermediates live in `ws`.
+fn attn_forward_ws(
+    layer: &Layer,
+    h: &mut Tensor,
+    n_heads: usize,
+    b: usize,
+    s: usize,
+    ws: &mut Workspace,
+) -> Result<()> {
     let d = h.cols();
     let hd = d / n_heads;
-    let x = ops::layernorm(h, &layer.ln1_g, &layer.ln1_b)?;
-    let q = ops::matmul_bt(&x, &layer.wq)?;
-    let k = ops::matmul_bt(&x, &layer.wk)?;
-    let v = ops::matmul_bt(&x, &layer.wv)?;
+    ops::layernorm_into(h, &layer.ln1_g, &layer.ln1_b, &mut ws.x)?;
+    ws.q.reuse2(b * s, d);
+    ws.k.reuse2(b * s, d);
+    ws.v.reuse2(b * s, d);
+    ops::matmul_bt_into(&ws.x, &layer.wq, &mut ws.q)?;
+    ops::matmul_bt_into(&ws.x, &layer.wk, &mut ws.k)?;
+    ops::matmul_bt_into(&ws.x, &layer.wv, &mut ws.v)?;
     let scale = 1.0 / (hd as f32).sqrt();
-    let mut ctx = Tensor::zeros(&[b * s, d]);
-    if b * s > 0 && s > 0 {
-        let qd = q.data();
-        let kd = k.data();
-        let vd = v.data();
-        // One sequence (an s×d slab of `ctx`) per parallel work item; the
-        // scores buffer is allocated once per sequence and reused across
-        // every (head, query) pair — the old code allocated it per pair.
+    ws.ctx.reuse2(b * s, d);
+    ws.ctx.data_mut().fill(0.0);
+    if b * s > 0 && s > 0 && d > 0 {
+        ws.scores.reuse2(b, s);
+        let qd = ws.q.data();
+        let kd = ws.k.data();
+        let vd = ws.v.data();
+        // One sequence (an s×d slab of `ctx`) per parallel lane, paired in
+        // lockstep with its private scores row from the workspace — no
+        // per-sequence allocation. Scores entries [0..=qi] are always
+        // written before they are read, so the dirty buffer is fine.
         let parallel = b * s * s * d >= par::PAR_MIN_FLOPS;
-        par::par_chunks_mut_if(parallel, ctx.data_mut(), s * d, |bi, cslab| {
-            let mut scores = vec![0.0f32; s];
-            for head in 0..n_heads {
-                let off = head * hd;
-                for qi in 0..s {
-                    let qbase = (bi * s + qi) * d + off;
-                    let qrow = &qd[qbase..qbase + hd];
-                    for ki in 0..=qi {
-                        let kbase = (bi * s + ki) * d + off;
-                        let krow = &kd[kbase..kbase + hd];
-                        let mut dot = 0.0;
-                        for (a, b2) in qrow.iter().zip(krow) {
-                            dot += a * b2;
+        par::par_chunks2_mut_if(
+            parallel,
+            ws.ctx.data_mut(),
+            s * d,
+            ws.scores.data_mut(),
+            s,
+            |bi, cslab, scores| {
+                for head in 0..n_heads {
+                    let off = head * hd;
+                    for qi in 0..s {
+                        let qbase = (bi * s + qi) * d + off;
+                        let qrow = &qd[qbase..qbase + hd];
+                        for ki in 0..=qi {
+                            let kbase = (bi * s + ki) * d + off;
+                            let krow = &kd[kbase..kbase + hd];
+                            let mut dot = 0.0;
+                            for (a, b2) in qrow.iter().zip(krow) {
+                                dot += a * b2;
+                            }
+                            scores[ki] = dot * scale;
                         }
-                        scores[ki] = dot * scale;
-                    }
-                    // softmax over the causal prefix only — entries past qi
-                    // are stale scratch and never read
-                    let pre = &mut scores[..=qi];
-                    let m = pre.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
-                    let mut z = 0.0;
-                    for v2 in pre.iter_mut() {
-                        *v2 = (*v2 - m).exp();
-                        z += *v2;
-                    }
-                    let orow = &mut cslab[qi * d + off..qi * d + off + hd];
-                    for ki in 0..=qi {
-                        let w = pre[ki] / z;
-                        if w == 0.0 {
-                            continue;
+                        // softmax over the causal prefix only — entries past
+                        // qi are stale scratch and never read
+                        let pre = &mut scores[..=qi];
+                        let m = pre.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+                        let mut z = 0.0;
+                        for v2 in pre.iter_mut() {
+                            *v2 = (*v2 - m).exp();
+                            z += *v2;
                         }
-                        let vbase = (bi * s + ki) * d + off;
-                        let vrow = &vd[vbase..vbase + hd];
-                        for (o, &vv) in orow.iter_mut().zip(vrow) {
-                            *o += w * vv;
+                        let orow = &mut cslab[qi * d + off..qi * d + off + hd];
+                        for ki in 0..=qi {
+                            let w = pre[ki] / z;
+                            if w == 0.0 {
+                                continue;
+                            }
+                            let vbase = (bi * s + ki) * d + off;
+                            let vrow = &vd[vbase..vbase + hd];
+                            for (o, &vv) in orow.iter_mut().zip(vrow) {
+                                *o += w * vv;
+                            }
                         }
                     }
                 }
-            }
-        });
+            },
+        );
     }
-    let proj = ops::matmul_bt(&ctx, &layer.wo)?;
-    h.add(&proj)
+    ws.proj.reuse2(b * s, d);
+    ops::matmul_bt_into(&ws.ctx, &layer.wo, &mut ws.proj)?;
+    // residual: h += proj (x + 1.0*y is exactly x + y, so this matches the
+    // old out-of-place `h.add(&proj)` bit for bit)
+    h.axpy(1.0, &ws.proj)
 }
 
-/// Full forward pass. `tokens` is (B, S) of vocab ids; returns logits
-/// (B*S, V) and, if `capture` is set, per-layer calibration records.
-pub fn forward(
+/// Full forward pass through a caller-owned workspace. `tokens` is (B, S)
+/// of vocab ids; the logits (B·S, V) land in `logits` (resized in place).
+/// If `capture` is set, per-layer calibration records are appended (the
+/// capture clones allocate — serving passes `None`).
+pub fn forward_ws(
     model: &ModelWeights,
     tokens: &[i32],
     b: usize,
     s: usize,
     mut capture: Option<&mut Vec<LayerCapture>>,
-) -> Result<Tensor> {
+    ws: &mut Workspace,
+    logits: &mut Tensor,
+) -> Result<()> {
     if tokens.len() != b * s {
         bail!("token buffer {} != {b}x{s}", tokens.len());
     }
     let d = model.cfg.d_model;
     // embed (row-parallel: token rows are independent)
-    let mut h = Tensor::zeros(&[b * s, d]);
+    let mut h = std::mem::take(&mut ws.h);
+    h.reuse2(b * s, d);
     if d > 0 {
+        let tok_emb = &model.tok_emb;
+        let pos_emb = &model.pos_emb;
         par::par_chunks_mut(h.data_mut(), d, |i, row| {
             let tk = tokens[i] as usize;
             let pos = i % s;
             for (j, o) in row.iter_mut().enumerate() {
-                *o = model.tok_emb.at2(tk, j) + model.pos_emb.at2(pos, j);
+                *o = tok_emb.at2(tk, j) + pos_emb.at2(pos, j);
             }
         });
     }
-    // layers
+    // layers (on error the taken buffers are simply dropped — the next
+    // successful call regrows them)
     for layer in &model.layers {
-        h = attn_forward(layer, &h, model.cfg.n_heads, b, s)?;
-        let x = ops::layernorm(&h, &layer.ln2_g, &layer.ln2_b)?;
-        let (y, counts, mass) = moe_forward(&layer.moe, &x)?;
-        if let Some(cap) = capture.as_deref_mut() {
-            cap.push(LayerCapture { x: x.clone(), counts, weight_mass: mass });
+        attn_forward_ws(layer, &mut h, model.cfg.n_heads, b, s, ws)?;
+        ops::layernorm_into(&h, &layer.ln2_g, &layer.ln2_b, &mut ws.x)?;
+        let x = std::mem::take(&mut ws.x);
+        let moe_result = moe_forward_ws(&layer.moe, &x, ws);
+        if moe_result.is_ok() {
+            if let Some(cap) = capture.as_deref_mut() {
+                cap.push(LayerCapture {
+                    x: x.clone(),
+                    counts: ws.counts.clone(),
+                    weight_mass: ws.mass.clone(),
+                });
+            }
         }
-        h = h.add(&y)?;
+        ws.x = x; // return the buffer to the arena
+        moe_result?;
+        h.axpy(1.0, &ws.moe_out)?;
     }
     // head
-    let x = ops::layernorm(&h, &model.lnf_g, &model.lnf_b)?;
-    ops::matmul_bt(&x, &model.head)
+    ops::layernorm_into(&h, &model.lnf_g, &model.lnf_b, &mut ws.x)?;
+    logits.reuse2(b * s, model.head.shape()[0]);
+    ops::matmul_bt_into(&ws.x, &model.head, logits)?;
+    ws.h = h; // return the residual buffer to the arena
+    Ok(())
 }
 
-/// Log-probabilities of `targets[i]` under a causal LM: `logits` (B*S, V)
-/// row i predicts token i+1 of the same sequence.
-pub fn target_logprobs(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> Vec<f32> {
-    let lp = ops::log_softmax_rows(logits);
-    let mut out = vec![0.0f32; b * s];
-    for bi in 0..b {
+/// Full forward pass. Allocating wrapper around [`forward_ws`]: spins up a
+/// throwaway workspace, so callers that serve at steady state should hold
+/// their own and call [`forward_ws`] directly.
+pub fn forward(
+    model: &ModelWeights,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    capture: Option<&mut Vec<LayerCapture>>,
+) -> Result<Tensor> {
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    forward_ws(model, tokens, b, s, capture, &mut ws, &mut logits)?;
+    Ok(logits)
+}
+
+/// Log-probabilities of `targets[i]` under a causal LM, written into a
+/// reusable buffer: `logits` (B·S, V) row i predicts token i+1 of the same
+/// sequence; `out[last position of each sequence]` stays 0. Computes each
+/// row's log-partition directly (identical arithmetic to a full
+/// `log_softmax_rows`, minus materializing the (B·S, V) matrix).
+pub fn target_logprobs_into(
+    logits: &Tensor,
+    tokens: &[i32],
+    b: usize,
+    s: usize,
+    out: &mut Vec<f32>,
+) {
+    let v = logits.cols();
+    out.clear();
+    out.resize(b * s, 0.0);
+    if s == 0 || v == 0 {
+        return;
+    }
+    let ld = logits.data();
+    let parallel = b * s * v >= par::PAR_MIN_ELEMS;
+    par::par_chunks_mut_if(parallel, out.as_mut_slice(), s, |bi, oseq| {
         for si in 0..s - 1 {
             let row = bi * s + si;
-            out[row] = lp.at2(row, tokens[bi * s + si + 1] as usize);
+            let rowd = &ld[row * v..(row + 1) * v];
+            let m = rowd.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let z: f32 = rowd.iter().map(|val| (val - m).exp()).sum();
+            let lz = z.ln() + m;
+            oseq[si] = rowd[tokens[bi * s + si + 1] as usize] - lz;
         }
-    }
+    });
+}
+
+/// Allocating wrapper around [`target_logprobs_into`].
+pub fn target_logprobs(logits: &Tensor, tokens: &[i32], b: usize, s: usize) -> Vec<f32> {
+    let mut out = Vec::new();
+    target_logprobs_into(logits, tokens, b, s, &mut out);
     out
 }
 
@@ -274,7 +455,7 @@ mod tests {
         assert_eq!(y.shape(), &[10, 16]);
         assert_eq!(counts.iter().sum::<f64>(), 20.0);
         // manual recomputation for token 0
-        let routing = route_tokens(&moe.router, &x, 2).unwrap();
+        let routing = crate::moe::routing::route_tokens(&moe.router, &x, 2).unwrap();
         let x0 = x.rows_slice(0, 1);
         let mut want = Tensor::zeros(&[1, 16]);
         for &(ei, w) in &routing[0] {
@@ -305,5 +486,24 @@ mod tests {
         assert_eq!(lps.len(), 64);
         assert_eq!(lps[63], 0.0); // last position predicts nothing
         assert!(lps[..63].iter().all(|&v| v < 0.0));
+    }
+
+    #[test]
+    fn target_logprobs_matches_full_log_softmax() {
+        // the direct per-row log-partition must equal reading the entry out
+        // of the materialized log-softmax matrix, bit for bit
+        let m = tiny_model(4, 2, true, 10);
+        let tokens: Vec<i32> = (0..2 * 64).map(|i| (i * 5 % 47) as i32).collect();
+        let logits = forward(&m, &tokens, 2, 64, None).unwrap();
+        let got = target_logprobs(&logits, &tokens, 2, 64);
+        let lp = ops::log_softmax_rows(&logits);
+        for bi in 0..2 {
+            for si in 0..63 {
+                let row = bi * 64 + si;
+                let want = lp.at2(row, tokens[bi * 64 + si + 1] as usize);
+                assert_eq!(got[row], want, "row {row}");
+            }
+            assert_eq!(got[bi * 64 + 63], 0.0);
+        }
     }
 }

@@ -1,0 +1,167 @@
+//! Reusable scratch arena for the inference and merge hot paths.
+//!
+//! PR 1 made the matmul kernels zero-alloc (`*_into` variants) but every
+//! layer above them still heap-allocated its activations per call:
+//! `expert_forward` its g/u panels, attention its q/k/v/context slabs, the
+//! MoE layer its routing tables and per-expert batches, the MergeMoE solve
+//! its Gram panels. A [`Workspace`] owns all of those buffers and is
+//! threaded through `model::native::forward_ws`, `moe_forward_ws`,
+//! `runtime::Engine::logits_ws` and `merge::mergemoe`, so a serving loop
+//! that holds one workspace reaches a true zero-allocation steady state:
+//! after warmup every buffer has its high-water size and
+//! [`Tensor::reuse2`] re-points it without touching the allocator
+//! (`benches/bench_forward.rs` counts allocations to prove it).
+//!
+//! ## Ownership rules
+//!
+//! * **One workspace per worker thread** — the scoring server's engine
+//!   thread owns one, the calibration capture owns one, each parallel
+//!   merge-cluster lane owns one. A workspace is plain `&mut` state and is
+//!   **never shared across threads**; the only parallelism-aware pieces are
+//!   the slot vectors ([`Workspace::experts`], [`Workspace::panels`]),
+//!   whose elements are handed out one-per-lane through
+//!   `par::par_chunks_mut_if` so concurrent lanes never touch the same
+//!   scratch.
+//! * **Contents are scratch.** No buffer's value survives a call; shapes
+//!   are re-established with [`Tensor::reuse2`] at every use site. Buffers
+//!   only ever grow (shrink keeps capacity), so alternating batch shapes
+//!   settle at the high-water mark.
+//! * **Allocating wrappers stay.** Callers that don't care about
+//!   steady-state allocation keep the old signatures (`forward`,
+//!   `moe_forward`, `expert_forward`, …), which spin up a throwaway
+//!   workspace internally — results are bit-identical either way
+//!   (`tests/workspace_reuse.rs`).
+
+use crate::tensor::Tensor;
+
+/// Per-expert (or shared-expert) scratch: the token gather, the SwiGLU
+/// gate/up activation panels, and the expert output batch. One slot per
+/// expert lane so the per-expert fan-out runs without allocation.
+#[derive(Default)]
+pub struct ExpertScratch {
+    /// Tokens routed to this expert (indices into the layer input).
+    pub tok_idx: Vec<usize>,
+    /// Gathered input rows: (T_e, d).
+    pub xs: Tensor,
+    /// Gate activations, reused as the SwiGLU product: (T_e, f).
+    pub g: Tensor,
+    /// Up-projection activations: (T_e, f).
+    pub u: Tensor,
+    /// Expert output batch: (T_e, d).
+    pub ys: Tensor,
+    /// Error raised inside a parallel lane (checked after the region).
+    pub err: Option<anyhow::Error>,
+}
+
+impl ExpertScratch {
+    pub fn new() -> ExpertScratch {
+        ExpertScratch::default()
+    }
+}
+
+/// Per-chunk scratch of the MergeMoE Gram accumulation: one slot per
+/// concurrent calibration chunk (a "wave" processes at most `max_threads`
+/// chunks at a time, bounding peak memory exactly as before).
+#[derive(Default)]
+pub struct PanelScratch {
+    /// Calibration input rows of this chunk: (chunk, d).
+    pub xs: Tensor,
+    /// Expert-eval scratch (gate/up panels): (chunk, f).
+    pub g: Tensor,
+    pub u: Tensor,
+    /// One member expert's output: (chunk, d).
+    pub ey: Tensor,
+    /// Frequency-weighted member outputs: (chunk, d).
+    pub yhat: Tensor,
+    /// P panel (transposed inner activations of the averaged expert): (f, chunk).
+    pub p: Tensor,
+    /// Ŷ panel (transposed weighted outputs): (d, chunk).
+    pub y: Tensor,
+    /// Error raised inside a parallel lane (checked after the region).
+    pub err: Option<anyhow::Error>,
+}
+
+impl PanelScratch {
+    pub fn new() -> PanelScratch {
+        PanelScratch::default()
+    }
+}
+
+/// The scratch arena for one worker's forward/merge hot path. All fields
+/// are public by design: the forward pass borrows disjoint fields
+/// simultaneously (e.g. reading `q`/`k`/`v` while writing `ctx`), which
+/// only the field-level borrow checker can express.
+#[derive(Default)]
+pub struct Workspace {
+    // ---- transformer forward pass ----
+    /// Residual stream: (B·S, d).
+    pub h: Tensor,
+    /// Post-layernorm activations (attention input, MoE input, head input).
+    pub x: Tensor,
+    pub q: Tensor,
+    pub k: Tensor,
+    pub v: Tensor,
+    /// Attention context: (B·S, d).
+    pub ctx: Tensor,
+    /// Per-sequence attention score rows: (B, S).
+    pub scores: Tensor,
+    /// Attention output projection: (B·S, d).
+    pub proj: Tensor,
+
+    // ---- MoE layer ----
+    /// Router logits→probs: (T, N).
+    pub route_logits: Tensor,
+    /// Per-row top-k ordering scratch.
+    pub route_order: Vec<usize>,
+    /// Flat (expert, weight) pairs, `k` per token.
+    pub route_pairs: Vec<(usize, f32)>,
+    /// Dense routing weights over the N-way router: (T, N).
+    pub r: Tensor,
+    /// Redirected routing weights `r · mapᵀ`: (T, M).
+    pub r2: Tensor,
+    /// Per-expert lanes (sized to the widest layer seen).
+    pub experts: Vec<ExpertScratch>,
+    /// Shared-expert scratch.
+    pub shared: ExpertScratch,
+    /// MoE layer output: (T, d).
+    pub moe_out: Tensor,
+    /// Per-expert usage counts / routing-weight mass of the last MoE call.
+    pub counts: Vec<f64>,
+    pub mass: Vec<f64>,
+
+    // ---- scoring ----
+    /// Target log-probabilities of the last scored batch: len B·S.
+    pub lps: Vec<f32>,
+
+    // ---- merge-time Gram accumulation ----
+    /// Per-chunk panel lanes for the MergeMoE solve.
+    pub panels: Vec<PanelScratch>,
+    /// Per-cluster sub-workspaces for the forked parallel merge path: each
+    /// concurrent cluster lane owns one (never shared), and because they
+    /// live in the parent workspace they are reused across layers when the
+    /// compression pipeline merges several.
+    pub cluster_ws: Vec<Workspace>,
+}
+
+impl Workspace {
+    pub fn new() -> Workspace {
+        Workspace::default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workspace_starts_empty_and_grows_on_demand() {
+        let mut ws = Workspace::new();
+        assert_eq!(ws.h.len(), 0);
+        assert!(ws.experts.is_empty());
+        ws.h.reuse2(8, 16);
+        assert_eq!(ws.h.shape(), &[8, 16]);
+        ws.experts.resize_with(4, ExpertScratch::new);
+        ws.experts[3].tok_idx.push(7);
+        assert_eq!(ws.experts.len(), 4);
+    }
+}

@@ -22,6 +22,38 @@ pub fn route_tokens(router: &Tensor, x: &Tensor, top_k: usize) -> Result<Vec<Vec
     Ok(out)
 }
 
+/// [`route_tokens`] into reusable buffers — the zero-alloc serving path.
+/// `logits` receives the (T, E) routing probabilities, `order` is per-row
+/// top-k scratch, and `pairs` receives the flat token-major selection:
+/// entry `ti * k + j` is the j-th `(expert, weight)` pair of token `ti`,
+/// in the same descending order as [`route_tokens`]. Returns `k`, the
+/// number of pairs per token (`top_k` clamped to the expert count).
+pub fn route_tokens_into(
+    router: &Tensor,
+    x: &Tensor,
+    top_k: usize,
+    logits: &mut Tensor,
+    order: &mut Vec<usize>,
+    pairs: &mut Vec<(usize, f32)>,
+) -> Result<usize> {
+    let t = x.shape()[0];
+    let e = router.shape()[0];
+    logits.reuse2(t, e);
+    ops::matmul_bt_into(x, router, logits)?;
+    ops::softmax_rows_inplace(logits);
+    let k = top_k.min(e);
+    pairs.clear();
+    pairs.reserve(t * k);
+    for ti in 0..t {
+        let row = logits.row(ti);
+        ops::top_k_order(row, k, order);
+        for &ei in order.iter() {
+            pairs.push((ei, row[ei]));
+        }
+    }
+    Ok(k)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -42,6 +74,30 @@ mod tests {
             assert!(s > 0.0 && s <= 1.0 + 1e-6);
             assert_ne!(r[0].0, r[1].0);
         }
+    }
+
+    #[test]
+    fn into_variant_matches_allocating_route_exactly() {
+        let mut rng = Rng::new(63);
+        let router = Tensor::randn(&[6, 8], 1.0, &mut rng);
+        let x = Tensor::randn(&[5, 8], 1.0, &mut rng);
+        let want = route_tokens(&router, &x, 2).unwrap();
+        let mut logits = Tensor::default();
+        let mut order = Vec::new();
+        let mut pairs = Vec::new();
+        // run twice through the same buffers: reuse must not change results
+        for round in 0..2 {
+            let k =
+                route_tokens_into(&router, &x, 2, &mut logits, &mut order, &mut pairs).unwrap();
+            assert_eq!(k, 2);
+            for (ti, tok) in want.iter().enumerate() {
+                assert_eq!(&pairs[ti * k..(ti + 1) * k], &tok[..], "round {round} token {ti}");
+            }
+        }
+        // top_k larger than the expert count clamps
+        let k = route_tokens_into(&router, &x, 99, &mut logits, &mut order, &mut pairs).unwrap();
+        assert_eq!(k, 6);
+        assert_eq!(pairs.len(), 5 * 6);
     }
 
     #[test]

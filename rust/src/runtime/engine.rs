@@ -4,6 +4,7 @@
 
 use anyhow::Result;
 
+use crate::model::workspace::Workspace;
 use crate::model::{native, ModelWeights};
 use crate::tensor::Tensor;
 
@@ -13,6 +14,24 @@ pub trait Engine {
     fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
         -> Result<Tensor>;
 
+    /// Workspace-backed variant for steady-state serving loops: writes the
+    /// logits into `out` (resized in place) and draws every intermediate
+    /// from `ws`, so a warm caller allocates nothing per request. The
+    /// default falls back to the allocating path — backends that own device
+    /// buffers (PJRT) allocate host tensors regardless.
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        _ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        *out = self.logits(model, tokens, b, s)?;
+        Ok(())
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -20,6 +39,18 @@ impl Engine for Box<dyn Engine> {
     fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
         -> Result<Tensor> {
         (**self).logits(model, tokens, b, s)
+    }
+
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        (**self).logits_ws(model, tokens, b, s, ws, out)
     }
 
     fn name(&self) -> &'static str {
@@ -34,6 +65,18 @@ impl Engine for NativeEngine {
     fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
         -> Result<Tensor> {
         native::forward(model, tokens, b, s, None)
+    }
+
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        native::forward_ws(model, tokens, b, s, None, ws, out)
     }
 
     fn name(&self) -> &'static str {
@@ -52,5 +95,18 @@ mod tests {
         let tokens: Vec<i32> = (0..2 * 64).map(|i| (i % 47) as i32).collect();
         let logits = NativeEngine.logits(&m, &tokens, 2, 64).unwrap();
         assert_eq!(logits.shape(), &[128, 47]);
+    }
+
+    #[test]
+    fn ws_path_matches_allocating_path() {
+        let m = tiny_model(4, 2, true, 71);
+        let tokens: Vec<i32> = (0..2 * 64).map(|i| (i % 47) as i32).collect();
+        let want = NativeEngine.logits(&m, &tokens, 2, 64).unwrap();
+        let mut ws = Workspace::new();
+        let mut got = Tensor::default();
+        for round in 0..3 {
+            NativeEngine.logits_ws(&m, &tokens, 2, 64, &mut ws, &mut got).unwrap();
+            assert_eq!(got.data(), want.data(), "round {round}");
+        }
     }
 }

@@ -21,6 +21,14 @@ pub struct Tensor {
     data: Vec<f32>,
 }
 
+/// The empty tensor (0 elements, 0 dims) — the cheap placeholder workspace
+/// buffers start from and `std::mem::take` leaves behind.
+impl Default for Tensor {
+    fn default() -> Tensor {
+        Tensor { shape: Vec::new(), data: Vec::new() }
+    }
+}
+
 impl Tensor {
     // ---------------- constructors ----------------
 
@@ -84,6 +92,26 @@ impl Tensor {
     /// Last dimension.
     pub fn cols(&self) -> usize {
         *self.shape.last().unwrap_or(&1)
+    }
+
+    /// Re-point this tensor at a 2-D `(m, n)` shape, growing or shrinking
+    /// the storage as needed. This is the workspace-arena primitive: once a
+    /// buffer has seen its steady-state size, calling `reuse2` again is
+    /// allocation-free (capacity is retained; shrink is a truncate, regrow
+    /// zero-fills only the delta). Contents are **unspecified** — callers
+    /// must fully overwrite (all `*_into` kernels do) or `fill` explicitly.
+    pub fn reuse2(&mut self, m: usize, n: usize) {
+        self.data.resize(m * n, 0.0);
+        self.shape.clear();
+        self.shape.push(m);
+        self.shape.push(n);
+    }
+
+    /// [`Tensor::reuse2`] generalized to any shape (copied from `other`).
+    pub fn reuse_like(&mut self, other: &Tensor) {
+        self.data.resize(other.len(), 0.0);
+        self.shape.clear();
+        self.shape.extend_from_slice(other.shape());
     }
 
     pub fn reshape(mut self, shape: &[usize]) -> Result<Tensor> {
@@ -268,6 +296,25 @@ mod tests {
         let b = Tensor::from_vec(&[2], vec![3., 5.]).unwrap();
         assert_eq!(a.max_abs_diff(&b), 1.0);
         assert!(a.rel_err(&a) < 1e-12);
+    }
+
+    #[test]
+    fn reuse_resizes_without_losing_capacity() {
+        let mut t = Tensor::default();
+        assert_eq!(t.len(), 0);
+        t.reuse2(3, 4);
+        assert_eq!(t.shape(), &[3, 4]);
+        assert!(t.data().iter().all(|&v| v == 0.0));
+        t.data_mut().fill(7.0);
+        // shrink keeps storage; regrow zero-fills only the new tail
+        t.reuse2(2, 2);
+        assert_eq!(t.shape(), &[2, 2]);
+        t.reuse2(3, 4);
+        assert_eq!(t.shape(), &[3, 4]);
+        let other = Tensor::zeros(&[5]);
+        t.reuse_like(&other);
+        assert_eq!(t.shape(), &[5]);
+        assert_eq!(t.len(), 5);
     }
 
     #[test]

@@ -234,12 +234,19 @@ pub fn transpose_into(t: &Tensor, out: &mut Tensor) -> Result<()> {
 
 /// Row-wise softmax over the last dimension (numerically stabilized).
 pub fn softmax_rows(t: &Tensor) -> Tensor {
-    let c = t.cols();
     let mut out = t.clone();
+    softmax_rows_inplace(&mut out);
+    out
+}
+
+/// [`softmax_rows`] applied in place — the zero-alloc routing path writes
+/// logits into a workspace buffer and normalizes them where they sit.
+pub fn softmax_rows_inplace(t: &mut Tensor) {
+    let c = t.cols();
     if c == 0 {
-        return out;
+        return;
     }
-    par::par_chunks_mut(out.data_mut(), c, |_i, row| {
+    par::par_chunks_mut(t.data_mut(), c, |_i, row| {
         let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
         let mut z = 0.0f32;
         for v in row.iter_mut() {
@@ -250,7 +257,6 @@ pub fn softmax_rows(t: &Tensor) -> Tensor {
             *v /= z;
         }
     });
-    out
 }
 
 /// Row-wise log-softmax over the last dimension.
@@ -274,15 +280,29 @@ pub fn log_softmax_rows(t: &Tensor) -> Tensor {
 /// LayerNorm over the last dimension with affine params (eps matches the L2
 /// model: 1e-5).
 pub fn layernorm(t: &Tensor, gamma: &[f32], beta: &[f32]) -> Result<Tensor> {
+    let mut out = t.clone();
+    layernorm_rows(&mut out, gamma, beta)?;
+    Ok(out)
+}
+
+/// [`layernorm`] into a caller-owned output buffer (resized to match `t`,
+/// fully overwritten) — the workspace path of the forward pass.
+pub fn layernorm_into(t: &Tensor, gamma: &[f32], beta: &[f32], out: &mut Tensor) -> Result<()> {
+    out.reuse_like(t);
+    out.data_mut().copy_from_slice(t.data());
+    layernorm_rows(out, gamma, beta)
+}
+
+/// Normalize each row of `t` in place.
+fn layernorm_rows(t: &mut Tensor, gamma: &[f32], beta: &[f32]) -> Result<()> {
     let c = t.cols();
     if gamma.len() != c || beta.len() != c {
         bail!("layernorm param size mismatch: {} vs {}", gamma.len(), c);
     }
-    let mut out = t.clone();
     if c == 0 {
-        return Ok(out);
+        return Ok(());
     }
-    par::par_chunks_mut(out.data_mut(), c, |_i, row| {
+    par::par_chunks_mut(t.data_mut(), c, |_i, row| {
         let mean = row.iter().sum::<f32>() / c as f32;
         let var = row.iter().map(|v| (v - mean) * (v - mean)).sum::<f32>() / c as f32;
         let inv = 1.0 / (var + 1e-5).sqrt();
@@ -290,7 +310,7 @@ pub fn layernorm(t: &Tensor, gamma: &[f32], beta: &[f32]) -> Result<Tensor> {
             *v = (*v - mean) * inv * gamma[j] + beta[j];
         }
     });
-    Ok(out)
+    Ok(())
 }
 
 /// SiLU (swish) activation, matching `jax.nn.silu`.
@@ -304,11 +324,23 @@ pub fn silu(x: f32) -> f32 {
 /// (`f32::total_cmp`), so NaN logits sort deterministically (NaN compares
 /// greater than +inf) instead of panicking.
 pub fn top_k(row: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
-    let mut idx: Vec<usize> = (0..row.len()).collect();
-    idx.sort_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
-    idx.truncate(k);
+    let mut idx = Vec::new();
+    top_k_order(row, k, &mut idx);
     let vals = idx.iter().map(|&i| row[i]).collect();
     (idx, vals)
+}
+
+/// [`top_k`] writing the selected indices into a reusable buffer (cleared
+/// first) — the zero-alloc routing path. Same ordering contract as
+/// [`top_k`]; values are read back through the returned indices.
+pub fn top_k_order(row: &[f32], k: usize, order: &mut Vec<usize>) {
+    order.clear();
+    order.extend(0..row.len());
+    // The comparator is a total order with no ties (index breaks them), so
+    // the unstable sort returns exactly the stable ordering — and, unlike
+    // the stable sort, never allocates a scratch buffer.
+    order.sort_unstable_by(|&a, &b| row[b].total_cmp(&row[a]).then(a.cmp(&b)));
+    order.truncate(k);
 }
 
 #[cfg(test)]

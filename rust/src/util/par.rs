@@ -1,27 +1,57 @@
-//! Dependency-free data parallelism over `std::thread::scope`.
+//! Dependency-free data parallelism on a **persistent worker pool**.
 //!
 //! This is the compute substrate every hot path shares: the tiled matmul
 //! kernels parallelize over output rows, the native engine over sequences
 //! and experts, the merge pipeline over clusters and calibration chunks, and
 //! the triangular solves over right-hand-side columns.
 //!
-//! Design rules:
+//! ## Pool lifecycle
+//!
+//! PR 1 spawned and joined OS threads inside every parallel region; that
+//! fixed tax (tens of microseconds per region) dominated small-shape kernels
+//! and single-token serving latency. Regions now run on a process-wide pool:
+//!
+//! * **Lazy init.** No threads exist until the first parallel region; the
+//!   first region that wants `n` lanes spawns `n - 1` workers (named
+//!   `mergemoe-par-*`). Later regions reuse them; the pool only ever grows,
+//!   up to the largest thread count requested.
+//! * **Parking.** Idle workers block on a condvar — zero CPU between
+//!   regions. Submitting a region publishes a job (a lifetime-erased
+//!   closure plus an atomic block cursor) and wakes the workers; the
+//!   *calling thread participates too*, so `threads = n` means at most `n`
+//!   lanes touch a region even when the pool holds more workers.
+//! * **Work distribution.** A region is split into at most
+//!   [`MAX_BLOCKS`] contiguous index blocks; lanes claim blocks from an
+//!   atomic cursor. Block *boundaries* depend only on the thread knob, never
+//!   on claim order, so scheduling jitter cannot change results.
+//! * **Shutdown.** Workers live for the process by default (they are
+//!   parked, not spinning). [`shutdown_pool`] parks the pool permanently —
+//!   joins every worker — for orderly teardown or tests; the next parallel
+//!   region lazily respawns.
+//!
+//! Design rules (unchanged from PR 1):
 //!
 //! * **One global thread-count knob.** [`max_threads`] resolves, in order:
 //!   an explicit [`set_max_threads`] call (the `--threads` CLI flag), the
 //!   `MERGEMOE_THREADS` environment variable, then the machine's available
 //!   parallelism. `threads = 1` turns every primitive into a plain serial
-//!   loop with no thread spawns.
-//! * **No nested pools.** Worker closures run with a thread-local flag set;
-//!   any `par_*` call made from inside a worker degrades to the serial path.
+//!   loop that never touches the pool.
+//! * **No nested pools.** Lane closures run with a thread-local flag set;
+//!   any `par_*` call made from inside a lane degrades to the serial path.
 //!   Outer-level parallelism (per expert, per cluster) therefore composes
 //!   with kernel-level parallelism without oversubscription.
 //! * **Determinism.** Work is split into contiguous index blocks and every
 //!   item is processed with the same per-item instruction sequence as the
 //!   serial path, so results are bit-identical for every thread count.
+//! * **Zero steady-state allocation.** After the workers exist and the job
+//!   queue has warmed its capacity, submitting a region allocates nothing:
+//!   the job lives on the caller's stack and block tables live in a
+//!   fixed-size array.
 
 use std::cell::Cell;
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
+use std::sync::{Condvar, Mutex};
 
 /// 0 = unresolved; resolved lazily on first use.
 static MAX_THREADS: AtomicUsize = AtomicUsize::new(0);
@@ -53,11 +83,13 @@ pub fn max_threads() -> usize {
 }
 
 /// Override the thread budget (the `--threads` CLI flag). Clamped to >= 1.
+/// Raising it takes effect on the next parallel region (the pool grows
+/// lazily); lowering it simply leaves the extra workers parked.
 pub fn set_max_threads(n: usize) {
     MAX_THREADS.store(n.max(1), Ordering::Relaxed);
 }
 
-/// True while running inside a `par_*` worker (nested calls go serial).
+/// True while running inside a `par_*` lane (nested calls go serial).
 pub fn in_parallel_region() -> bool {
     IN_POOL.with(|f| f.get())
 }
@@ -72,27 +104,257 @@ fn with_pool_flag<R>(f: impl FnOnce() -> R) -> R {
     })
 }
 
-/// Split `n` items into at most `parts` contiguous `(lo, hi)` blocks.
-fn blocks(n: usize, parts: usize) -> Vec<(usize, usize)> {
-    let parts = parts.max(1).min(n.max(1));
+// ---------------------------------------------------------------------------
+// The pool.
+// ---------------------------------------------------------------------------
+
+/// Hard cap on blocks per region (and therefore on lanes per region). Keeps
+/// the block table on the caller's stack (4 KiB) while comfortably covering
+/// every machine this serves; machines with even more cores still use every
+/// worker across *concurrent* regions.
+pub const MAX_BLOCKS: usize = 256;
+
+/// One parallel region, living on the submitting thread's stack. Workers
+/// reach it through a raw address published in the pool queue; the submitter
+/// does not return until every block has finished **and** no worker still
+/// holds the address, so the borrow the `run` pointer erases can never
+/// dangle.
+struct Job {
+    /// Lifetime-erased `&dyn Fn(block_index)`; only dereferenced by lanes
+    /// that claimed a block below `n_blocks`.
+    run: *const (dyn Fn(usize) + Sync),
+    n_blocks: usize,
+    /// Next unclaimed block (may overshoot `n_blocks`; claimers that read
+    /// past the end just leave).
+    next: AtomicUsize,
+    /// Blocks not yet finished; 0 ⇒ all work done.
+    remaining: AtomicUsize,
+    /// Workers currently executing (or about to execute) this job. Pins the
+    /// stack slot: the submitter waits for 0 before returning.
+    visitors: AtomicUsize,
+    panicked: AtomicBool,
+    /// First lane panic's payload, re-raised on the submitting thread so
+    /// the original message/location survives (scoped threads did the same).
+    panic_payload: Mutex<Option<Box<dyn std::any::Any + Send>>>,
+}
+
+struct PoolState {
+    /// Addresses of live jobs with (potentially) unclaimed blocks.
+    queue: Vec<usize>,
+    handles: Vec<std::thread::JoinHandle<()>>,
+    workers: usize,
+    shutdown: bool,
+}
+
+struct Pool {
+    state: Mutex<PoolState>,
+    /// Signals workers: new job queued, or shutdown requested.
+    work_cv: Condvar,
+    /// Signals submitters: a worker left a job (visitor count dropped).
+    done_cv: Condvar,
+}
+
+static POOL: Pool = Pool {
+    state: Mutex::new(PoolState {
+        queue: Vec::new(),
+        handles: Vec::new(),
+        workers: 0,
+        shutdown: false,
+    }),
+    work_cv: Condvar::new(),
+    done_cv: Condvar::new(),
+};
+
+/// Number of live pool workers (0 until the first parallel region).
+pub fn pool_size() -> usize {
+    POOL.state.lock().unwrap().workers
+}
+
+/// Serializes [`shutdown_pool`] callers: a second caller must not reset the
+/// shutdown flag while the first is still joining (a worker could observe
+/// the reset, re-park, and leave the first join hanging forever).
+static SHUTDOWN_LOCK: Mutex<()> = Mutex::new(());
+
+/// Join every pool worker. Call only when no parallel region is active
+/// (orderly teardown, tests); the next region lazily respawns the pool.
+/// Concurrent callers are serialized — the second becomes a no-op.
+pub fn shutdown_pool() {
+    let _serialize = SHUTDOWN_LOCK.lock().unwrap();
+    let handles = {
+        let mut st = POOL.state.lock().unwrap();
+        st.shutdown = true;
+        std::mem::take(&mut st.handles)
+    };
+    POOL.work_cv.notify_all();
+    for h in handles {
+        let _ = h.join();
+    }
+    let mut st = POOL.state.lock().unwrap();
+    st.shutdown = false;
+    st.workers = 0;
+}
+
+/// Claim and run blocks of `job` until the cursor is exhausted. Runs with
+/// the in-pool flag set so nested `par_*` calls degrade to serial. Panics in
+/// the closure are caught and recorded; the submitter re-raises.
+fn execute_blocks(job: &Job) {
+    with_pool_flag(|| loop {
+        let b = job.next.fetch_add(1, Ordering::Relaxed);
+        if b >= job.n_blocks {
+            break;
+        }
+        // SAFETY: `b < n_blocks` means the submitter is still inside
+        // `run_region`, so the closure behind `run` is alive.
+        let run = unsafe { &*job.run };
+        if let Err(payload) = catch_unwind(AssertUnwindSafe(|| run(b))) {
+            job.panicked.store(true, Ordering::Relaxed);
+            let mut slot = job.panic_payload.lock().unwrap();
+            if slot.is_none() {
+                *slot = Some(payload);
+            }
+        }
+        // AcqRel: RMWs on `remaining` form a release sequence, so whoever
+        // observes 0 also observes every lane's writes to the output data.
+        job.remaining.fetch_sub(1, Ordering::AcqRel);
+    });
+}
+
+fn worker_loop() {
+    let mut st = POOL.state.lock().unwrap();
+    loop {
+        if st.shutdown {
+            return;
+        }
+        // Drop fully-claimed jobs; queued addresses are valid because a
+        // submitter only frees its job after removing it here (which needs
+        // this lock) and seeing its visitor count reach zero.
+        st.queue.retain(|&p| {
+            let j = unsafe { &*(p as *const Job) };
+            j.next.load(Ordering::Relaxed) < j.n_blocks
+        });
+        if let Some(&p) = st.queue.first() {
+            let job = unsafe { &*(p as *const Job) };
+            job.visitors.fetch_add(1, Ordering::Relaxed);
+            drop(st);
+            execute_blocks(job);
+            st = POOL.state.lock().unwrap();
+            job.visitors.fetch_sub(1, Ordering::Release);
+            POOL.done_cv.notify_all();
+        } else {
+            st = POOL.work_cv.wait(st).unwrap();
+        }
+    }
+}
+
+/// Run `run(0..n_blocks)` across the pool plus the calling thread. `threads`
+/// is the lane budget the caller derived from [`max_threads`] — the pool
+/// grows to `threads - 1` workers if smaller. Callers guarantee
+/// `n_blocks >= 1` and must not call this from inside a parallel region.
+fn run_region(n_blocks: usize, threads: usize, run: &(dyn Fn(usize) + Sync)) {
+    // SAFETY (lifetime erasure): the raw pointer outlives no one — this
+    // function does not return until `remaining == 0` (all dereference
+    // sites are done) and `visitors == 0` (no worker still holds `&job`).
+    let run_static = unsafe {
+        std::mem::transmute::<&(dyn Fn(usize) + Sync), *const (dyn Fn(usize) + Sync)>(run)
+    };
+    let job = Job {
+        run: run_static,
+        n_blocks,
+        next: AtomicUsize::new(0),
+        remaining: AtomicUsize::new(n_blocks),
+        visitors: AtomicUsize::new(0),
+        panicked: AtomicBool::new(false),
+        panic_payload: Mutex::new(None),
+    };
+    let addr = &job as *const Job as usize;
+    let workers;
+    {
+        let mut st = POOL.state.lock().unwrap();
+        let want = threads.saturating_sub(1);
+        while st.workers < want {
+            // A transient spawn failure (EAGAIN under pids/memory limits)
+            // must not panic while holding the pool mutex — that would
+            // poison it for the whole process. Run with the lanes we have
+            // (zero workers still completes: the submitter claims every
+            // block itself) and let a later region retry the growth.
+            match std::thread::Builder::new()
+                .name(format!("mergemoe-par-{}", st.workers))
+                .spawn(worker_loop)
+            {
+                Ok(h) => {
+                    st.handles.push(h);
+                    st.workers += 1;
+                }
+                Err(e) => {
+                    crate::warnlog!("pool worker spawn failed ({e}); running degraded");
+                    break;
+                }
+            }
+        }
+        st.queue.push(addr);
+        workers = st.workers;
+    }
+    // Wake only as many workers as the region has claimable blocks (the
+    // submitter takes one lane itself): a 2-block region on a big pool must
+    // not thundering-herd every parked worker through the mutex. Workers
+    // that are busy re-scan the queue between jobs, so an unconsumed
+    // notify_one is never a lost job.
+    let wake = n_blocks.saturating_sub(1);
+    if wake >= workers {
+        POOL.work_cv.notify_all();
+    } else {
+        for _ in 0..wake {
+            POOL.work_cv.notify_one();
+        }
+    }
+    execute_blocks(&job);
+    {
+        let mut st = POOL.state.lock().unwrap();
+        st.queue.retain(|&p| p != addr);
+        while job.remaining.load(Ordering::Acquire) != 0
+            || job.visitors.load(Ordering::Acquire) != 0
+        {
+            st = POOL.done_cv.wait(st).unwrap();
+        }
+    }
+    if job.panicked.load(Ordering::Relaxed) {
+        // Re-raise the first lane's payload so the original panic message
+        // and location reach the submitting thread (matching what
+        // std::thread::scope's join propagation used to surface).
+        match job.panic_payload.lock().unwrap().take() {
+            Some(payload) => std::panic::resume_unwind(payload),
+            None => panic!("parallel worker panicked"),
+        }
+    }
+}
+
+/// Split `n` items into at most `parts` contiguous `(lo, hi)` blocks,
+/// writing them into `buf`. Returns the number of blocks (≤ [`MAX_BLOCKS`]).
+fn blocks_into(n: usize, parts: usize, buf: &mut [(usize, usize); MAX_BLOCKS]) -> usize {
+    let parts = parts.clamp(1, MAX_BLOCKS).min(n.max(1));
     let base = n / parts;
     let extra = n % parts;
-    let mut out = Vec::with_capacity(parts);
+    let mut count = 0;
     let mut lo = 0;
     for p in 0..parts {
         let len = base + usize::from(p < extra);
         if len == 0 {
             break;
         }
-        out.push((lo, lo + len));
+        buf[count] = (lo, lo + len);
+        count += 1;
         lo += len;
     }
-    out
+    count
 }
+
+// ---------------------------------------------------------------------------
+// Public primitives.
+// ---------------------------------------------------------------------------
 
 /// Below this many output elements, elementwise row ops (layernorm,
 /// softmax, embed, transpose) run serially: a few flops per element cannot
-/// amortize thread spawn/join.
+/// amortize even a pool dispatch.
 pub const PAR_MIN_ELEMS: usize = 16 * 1024;
 
 /// Below roughly this many flops, compute kernels (matmul family,
@@ -102,7 +364,7 @@ pub const PAR_MIN_FLOPS: usize = 256 * 1024;
 
 /// Apply `f(chunk_index, chunk)` to every `chunk_len`-sized chunk of `data`
 /// (the last chunk may be shorter), fanning contiguous chunk blocks out to
-/// worker threads. This is the mutable-output primitive: matmul rows, tensor
+/// pool lanes. This is the mutable-output primitive: matmul rows, tensor
 /// rows, per-sequence attention slabs. Inputs smaller than
 /// [`PAR_MIN_ELEMS`] run serially — use [`par_chunks_mut_if`] with a work
 /// estimate when the per-element cost is far from O(1).
@@ -119,8 +381,7 @@ where
 
 /// [`par_chunks_mut`] with an explicit fan-out decision: callers estimate
 /// the total work (e.g. `2*m*k*n` flops for a matmul) and pass
-/// `work >= PAR_MIN_FLOPS`, so tiny kernels skip thread spawn/join
-/// entirely.
+/// `work >= PAR_MIN_FLOPS`, so tiny kernels never touch the pool.
 pub fn par_chunks_mut_if<T, F>(parallel: bool, data: &mut [T], chunk_len: usize, f: F)
 where
     T: Send,
@@ -138,36 +399,80 @@ where
         }
         return;
     }
-    let chunk_blocks = blocks(n_chunks, threads);
-    // Slice `data` into per-thread sub-slices along chunk boundaries.
-    let mut parts: Vec<(usize, &mut [T])> = Vec::with_capacity(chunk_blocks.len());
-    let mut rest = data;
-    for &(lo, hi) in &chunk_blocks {
-        let elems = ((hi - lo) * chunk_len).min(rest.len());
-        let (head, tail) = std::mem::take(&mut rest).split_at_mut(elems);
-        rest = tail;
-        parts.push((lo, head));
-    }
-    let f = &f;
-    std::thread::scope(|s| {
-        let mut iter = parts.into_iter();
-        // Keep the first block on the calling thread; spawn the rest.
-        let first = iter.next();
-        for (chunk0, slab) in iter {
-            s.spawn(move || {
-                with_pool_flag(|| {
-                    for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
-                        f(chunk0 + ci, chunk);
-                    }
-                })
-            });
+    let mut bbuf = [(0usize, 0usize); MAX_BLOCKS];
+    let nb = blocks_into(n_chunks, threads, &mut bbuf);
+    let chunk_blocks = &bbuf[..nb];
+    let base = data.as_mut_ptr() as usize;
+    let total = data.len();
+    let f_ref = &f;
+    run_region(nb, threads, &|bi| {
+        let (lo, hi) = chunk_blocks[bi];
+        let start = lo * chunk_len;
+        let end = (hi * chunk_len).min(total);
+        // SAFETY: blocks are disjoint chunk ranges of `data`, which outlives
+        // the region; `T: Send` licenses touching it from a pool lane.
+        let slab =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut T).add(start), end - start) };
+        for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
+            f_ref(lo + ci, chunk);
         }
-        if let Some((chunk0, slab)) = first {
-            with_pool_flag(|| {
-                for (ci, chunk) in slab.chunks_mut(chunk_len).enumerate() {
-                    f(chunk0 + ci, chunk);
-                }
-            });
+    });
+}
+
+/// Two-slice lockstep variant: chunk `ci` of `a` (length `a_chunk`) and
+/// chunk `ci` of `b` (length `b_chunk`) are handed to `f` together. The
+/// serving hot path uses this to pair each output slab with its private
+/// scratch slab (attention: one context row-block + one scores row per
+/// sequence) without allocating inside the region. Both slices must cover
+/// the same number of chunks.
+pub fn par_chunks2_mut_if<T, U, F>(
+    parallel: bool,
+    a: &mut [T],
+    a_chunk: usize,
+    b: &mut [U],
+    b_chunk: usize,
+    f: F,
+) where
+    T: Send,
+    U: Send,
+    F: Fn(usize, &mut [T], &mut [U]) + Sync,
+{
+    if a.is_empty() {
+        assert!(b.is_empty(), "par_chunks2_mut: chunk counts differ (a empty, b not)");
+        return;
+    }
+    assert!(
+        a_chunk > 0 && b_chunk > 0,
+        "par_chunks2_mut: chunk lengths must be > 0"
+    );
+    let n_chunks = (a.len() + a_chunk - 1) / a_chunk;
+    let nb_b = (b.len() + b_chunk - 1) / b_chunk;
+    assert_eq!(n_chunks, nb_b, "par_chunks2_mut: chunk counts differ");
+    let threads = max_threads().min(n_chunks);
+    if !parallel || threads <= 1 || in_parallel_region() {
+        for (ci, (ca, cb)) in a.chunks_mut(a_chunk).zip(b.chunks_mut(b_chunk)).enumerate() {
+            f(ci, ca, cb);
+        }
+        return;
+    }
+    let mut bbuf = [(0usize, 0usize); MAX_BLOCKS];
+    let nb = blocks_into(n_chunks, threads, &mut bbuf);
+    let chunk_blocks = &bbuf[..nb];
+    let a_base = a.as_mut_ptr() as usize;
+    let a_total = a.len();
+    let b_base = b.as_mut_ptr() as usize;
+    let b_total = b.len();
+    let f_ref = &f;
+    run_region(nb, threads, &|bi| {
+        let (lo, hi) = chunk_blocks[bi];
+        let (s1, e1) = (lo * a_chunk, (hi * a_chunk).min(a_total));
+        let (s2, e2) = (lo * b_chunk, (hi * b_chunk).min(b_total));
+        // SAFETY: disjoint chunk ranges per block, same argument as
+        // `par_chunks_mut_if`, applied to each slice independently.
+        let sa = unsafe { std::slice::from_raw_parts_mut((a_base as *mut T).add(s1), e1 - s1) };
+        let sb = unsafe { std::slice::from_raw_parts_mut((b_base as *mut U).add(s2), e2 - s2) };
+        for (ci, (ca, cb)) in sa.chunks_mut(a_chunk).zip(sb.chunks_mut(b_chunk)).enumerate() {
+            f_ref(lo + ci, ca, cb);
         }
     });
 }
@@ -196,24 +501,28 @@ where
     if !parallel || threads <= 1 || in_parallel_region() {
         return (0..n).map(f).collect();
     }
-    let idx_blocks = blocks(n, threads);
-    let f = &f;
-    let mut block_results: Vec<Vec<R>> = Vec::with_capacity(idx_blocks.len());
-    std::thread::scope(|s| {
-        let mut handles = Vec::with_capacity(idx_blocks.len());
-        let mut iter = idx_blocks.into_iter();
-        let first = iter.next();
-        for (lo, hi) in iter {
-            handles.push(s.spawn(move || with_pool_flag(|| (lo..hi).map(f).collect::<Vec<R>>())));
-        }
-        if let Some((lo, hi)) = first {
-            block_results.push(with_pool_flag(|| (lo..hi).map(f).collect::<Vec<R>>()));
-        }
-        for h in handles {
-            block_results.push(h.join().expect("parallel worker panicked"));
-        }
-    });
-    block_results.into_iter().flatten().collect()
+    let mut bbuf = [(0usize, 0usize); MAX_BLOCKS];
+    let nb = blocks_into(n, threads, &mut bbuf);
+    let idx_blocks = &bbuf[..nb];
+    let mut block_results: Vec<Option<Vec<R>>> = Vec::with_capacity(nb);
+    block_results.resize_with(nb, || None);
+    {
+        let slots = block_results.as_mut_ptr() as usize;
+        let f_ref = &f;
+        run_region(nb, threads, &|bi| {
+            let (lo, hi) = idx_blocks[bi];
+            let out: Vec<R> = (lo..hi).map(f_ref).collect();
+            // SAFETY: slot `bi` is written by exactly one block; the vec
+            // outlives the region.
+            unsafe {
+                *(slots as *mut Option<Vec<R>>).add(bi) = Some(out);
+            }
+        });
+    }
+    block_results
+        .into_iter()
+        .flat_map(|s| s.expect("parallel block result missing"))
+        .collect()
 }
 
 /// Map `f(index, &item)` over a slice in parallel, preserving order.
@@ -234,16 +543,18 @@ mod tests {
     fn blocks_cover_range_exactly() {
         for n in [0usize, 1, 2, 7, 16, 100] {
             for parts in [1usize, 2, 3, 8, 200] {
-                let bs = blocks(n, parts);
+                let mut buf = [(0usize, 0usize); MAX_BLOCKS];
+                let count = blocks_into(n, parts, &mut buf);
+                let bs = &buf[..count];
                 let mut next = 0;
-                for &(lo, hi) in &bs {
+                for &(lo, hi) in bs {
                     assert_eq!(lo, next);
                     assert!(hi > lo);
                     next = hi;
                 }
                 assert_eq!(next, n);
                 assert_eq!(bs.iter().map(|&(l, h)| h - l).sum::<usize>(), n);
-                assert!(bs.len() <= parts.max(1));
+                assert!(bs.len() <= parts.max(1).min(MAX_BLOCKS));
             }
         }
     }
@@ -269,6 +580,41 @@ mod tests {
     }
 
     #[test]
+    fn par_chunks2_mut_pairs_lockstep_chunks() {
+        for force in [true, false] {
+            let mut a = vec![0u32; 60]; // 6 chunks of 10
+            let mut b = vec![0u32; 18]; // 6 chunks of 3
+            par_chunks2_mut_if(force, &mut a, 10, &mut b, 3, |ci, ca, cb| {
+                for v in ca.iter_mut() {
+                    *v = ci as u32 + 1;
+                }
+                for v in cb.iter_mut() {
+                    *v = 10 * (ci as u32 + 1);
+                }
+            });
+            for (i, v) in a.iter().enumerate() {
+                assert_eq!(*v, (i / 10) as u32 + 1, "force={force} a[{i}]");
+            }
+            for (i, v) in b.iter().enumerate() {
+                assert_eq!(*v, 10 * ((i / 3) as u32 + 1), "force={force} b[{i}]");
+            }
+        }
+        // ragged tails on both sides
+        let mut a = vec![0u32; 25]; // chunks 10,10,5
+        let mut b = vec![0u32; 7]; // chunks 3,3,1
+        par_chunks2_mut_if(true, &mut a, 10, &mut b, 3, |ci, ca, cb| {
+            for v in ca.iter_mut() {
+                *v = ci as u32;
+            }
+            for v in cb.iter_mut() {
+                *v = ci as u32;
+            }
+        });
+        assert_eq!(a[24], 2);
+        assert_eq!(b[6], 2);
+    }
+
+    #[test]
     fn par_map_range_ordered_and_complete() {
         let out = par_map_range(1000, |i| i * i);
         assert_eq!(out.len(), 1000);
@@ -288,7 +634,7 @@ mod tests {
 
     #[test]
     fn nested_calls_degrade_to_serial() {
-        // A nested par_map_range inside a worker must not deadlock or spawn;
+        // A nested par_map_range inside a lane must not deadlock or spawn;
         // results stay correct either way.
         let out = par_map_range(8, |i| par_map_range(8, move |j| i * 8 + j));
         for (i, inner) in out.iter().enumerate() {
@@ -296,5 +642,82 @@ mod tests {
                 assert_eq!(*v, i * 8 + j);
             }
         }
+    }
+
+    #[test]
+    fn pool_workers_persist_across_regions() {
+        // Persistence: workers never retire between regions, so the pool
+        // size is monotonically non-decreasing (nothing in the lib tests
+        // calls shutdown_pool). The *strict* no-growth bound lives in
+        // tests/par_consistency.rs under the serialized thread knob —
+        // here, concurrent lib tests may legally raise the knob and grow
+        // the pool mid-loop.
+        let n = max_threads().max(64);
+        let warm = par_map_range(n, |i| i + 1);
+        assert_eq!(warm[n - 1], n);
+        let mut high_water = pool_size();
+        let mut data = vec![0u64; 4096];
+        for round in 0..200 {
+            par_chunks_mut_if(true, &mut data, 64, |ci, c| {
+                for v in c.iter_mut() {
+                    *v += 1 + (ci as u64 % 3);
+                }
+            });
+            let now = pool_size();
+            assert!(
+                now >= high_water,
+                "round {round}: pool shrank from {high_water} to {now}"
+            );
+            high_water = now;
+        }
+    }
+
+    #[test]
+    fn concurrent_regions_from_many_threads() {
+        // Several user threads submitting regions at once must all complete
+        // with correct results (jobs queue up and share the pool).
+        std::thread::scope(|s| {
+            for t in 0..4u64 {
+                s.spawn(move || {
+                    for round in 0..50u64 {
+                        let mut data = vec![0u64; 512];
+                        par_chunks_mut_if(true, &mut data, 16, |ci, c| {
+                            for v in c.iter_mut() {
+                                *v = t * 1000 + round + ci as u64;
+                            }
+                        });
+                        for (i, v) in data.iter().enumerate() {
+                            assert_eq!(*v, t * 1000 + round + (i / 16) as u64);
+                        }
+                    }
+                });
+            }
+        });
+    }
+
+    #[test]
+    fn worker_panic_propagates_and_pool_survives() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            let mut data = vec![0u32; 100];
+            par_chunks_mut_if(true, &mut data, 10, |ci, _c| {
+                if ci == 3 {
+                    panic!("intentional test panic");
+                }
+            });
+        }));
+        let payload = result.expect_err("panic in a lane must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(
+            msg.contains("intentional test panic"),
+            "original panic payload must survive re-raising, got {msg:?}"
+        );
+        // the pool keeps working after a panicked region
+        let mut data = vec![0u32; 100];
+        par_chunks_mut_if(true, &mut data, 10, |_ci, c| {
+            for v in c.iter_mut() {
+                *v += 1;
+            }
+        });
+        assert!(data.iter().all(|&v| v == 1));
     }
 }

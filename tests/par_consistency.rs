@@ -8,8 +8,9 @@ use std::sync::Mutex;
 
 use mergemoe::merge::plan::MergePlan;
 use mergemoe::merge::{self, Algorithm, NativeGram};
-use mergemoe::model::native::{forward, moe_forward};
+use mergemoe::model::native::{forward, forward_ws, moe_forward};
 use mergemoe::model::testprops::tiny_moe;
+use mergemoe::model::workspace::Workspace;
 use mergemoe::tensor::{ops, Tensor};
 use mergemoe::util::par;
 use mergemoe::util::rng::Rng;
@@ -138,13 +139,19 @@ fn mergemoe_solve_identical_across_thread_counts() {
         weights: vec![0.5, 0.4, 0.7, 0.5, 0.6, 0.3],
     };
     let reference = with_threads(1, || {
-        merge::merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8)
-            .unwrap()
+        merge::merge_layer(
+            Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8,
+            &mut Workspace::new(),
+        )
+        .unwrap()
     });
     for t in SWEEP {
         let merged = with_threads(t, || {
-            merge::merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8)
-                .unwrap()
+            merge::merge_layer(
+                Algorithm::MergeMoe, &moe, &plan, Some(&x), &mut NativeGram, 1e-8,
+                &mut Workspace::new(),
+            )
+            .unwrap()
         });
         for (ci, (got, want)) in merged.experts.iter().zip(&reference.experts).enumerate() {
             assert!(
@@ -174,6 +181,96 @@ fn linalg_solves_identical_across_thread_counts() {
     for t in SWEEP {
         let x = with_threads(t, || mergemoe::linalg::solve_spd(&spd, &b, 1e-9).unwrap());
         assert_eq!(x.data(), reference.data(), "threads {t}");
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn forward_ws_identical_across_thread_counts_through_one_workspace() {
+    // The pool AND the workspace arena together: one warm workspace swept
+    // across thread counts must reproduce the serial fresh-allocation run
+    // bit for bit.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let cfg = mergemoe::config::ModelConfig {
+        name: "wssweep".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    let model = mergemoe::model::testprops::synth_model(&cfg, 0xB0B5);
+    let tokens: Vec<i32> = (0..2 * 64).map(|i| ((i * 11) % 47) as i32).collect();
+    let ref_logits = with_threads(1, || forward(&model, &tokens, 2, 64, None).unwrap());
+    let mut ws = Workspace::new();
+    let mut logits = mergemoe::tensor::Tensor::default();
+    for t in SWEEP {
+        for round in 0..2 {
+            with_threads(t, || {
+                forward_ws(&model, &tokens, 2, 64, None, &mut ws, &mut logits).unwrap()
+            });
+            assert_eq!(
+                logits.data(),
+                ref_logits.data(),
+                "threads {t} round {round}: workspace path diverged"
+            );
+        }
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn pool_persists_and_nested_regions_degrade() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    par::set_max_threads(8);
+    // warm the pool, then verify no further growth across many regions
+    let warm = par::par_map_range(64, |i| i * 2);
+    assert_eq!(warm[63], 126);
+    let size = par::pool_size();
+    assert!(size >= 1, "8-thread region must have spawned workers");
+    for _ in 0..50 {
+        let out = par::par_map_range(32, |i| i + 1);
+        assert_eq!(out[31], 32);
+    }
+    assert_eq!(par::pool_size(), size, "pool must not grow per region");
+    // every lane of a multi-thread region runs with the in-pool flag set,
+    // so nested regions degrade to serial instead of re-entering the pool
+    let flags = par::par_map_range(8, |_| par::in_parallel_region());
+    assert!(flags.iter().all(|&f| f), "lanes must be flagged in-pool");
+    // nested fan-out still yields correct, ordered results
+    let nested = par::par_map_range(4, |i| par::par_map_range(4, move |j| i * 4 + j));
+    for (i, inner) in nested.iter().enumerate() {
+        for (j, v) in inner.iter().enumerate() {
+            assert_eq!(*v, i * 4 + j);
+        }
+    }
+    // threads=1 never touches the pool: the serial path leaves the flag off
+    par::set_max_threads(1);
+    let serial_flags = par::par_map_range(4, |_| par::in_parallel_region());
+    assert!(serial_flags.iter().all(|&f| !f));
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn pool_shutdown_and_lazy_respawn() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    par::set_max_threads(4);
+    let out = par::par_map_range(16, |i| i * i);
+    assert_eq!(out[15], 225);
+    par::shutdown_pool();
+    assert_eq!(par::pool_size(), 0, "shutdown joins every worker");
+    // the next region lazily respawns the pool and still computes correctly
+    let out2 = par::par_map_range(16, |i| i * 3);
+    assert_eq!(out2[15], 45);
+    if par::max_threads() > 1 {
+        assert!(par::pool_size() >= 1, "region must respawn workers");
     }
     par::set_max_threads(prev);
 }

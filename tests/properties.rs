@@ -6,6 +6,7 @@ use mergemoe::merge::plan::MergePlan;
 use mergemoe::merge::{self, Algorithm, NativeGram};
 use mergemoe::model::native::moe_forward;
 use mergemoe::model::testprops::tiny_moe;
+use mergemoe::model::workspace::Workspace;
 use mergemoe::tensor::{ops, Tensor};
 use mergemoe::util::rng::Rng;
 
@@ -102,7 +103,8 @@ fn merged_layer_preserves_routing_mass() {
         let x = Tensor::randn(&[20, 16], 1.0, &mut rng);
         for alg in [Algorithm::Average, Algorithm::MSmoe, Algorithm::MergeMoe] {
             let merged =
-                merge::merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-6)
+                merge::merge_layer(alg, &moe, &plan, Some(&x), &mut NativeGram, 1e-6,
+                                   &mut Workspace::new())
                     .unwrap();
             let (_, _, mass_merged) = moe_forward(&merged, &x).unwrap();
             let (_, _, mass_orig) = moe_forward(&moe, &x).unwrap();
@@ -133,9 +135,11 @@ fn mergemoe_never_worse_than_msmoe_against_merge_target() {
         let plan = random_plan_with_weights(n, m, &freqs, &mut rng);
         let x = Tensor::randn(&[160, 16], 1.0, &mut rng);
         let mm = merge::merge_layer(Algorithm::MergeMoe, &moe, &plan, Some(&x),
-                                    &mut NativeGram, 1e-10).unwrap();
+                                    &mut NativeGram, 1e-10, &mut Workspace::new())
+            .unwrap();
         let ms = merge::merge_layer(Algorithm::MSmoe, &moe, &plan, Some(&x),
-                                    &mut NativeGram, 1e-10).unwrap();
+                                    &mut NativeGram, 1e-10, &mut Workspace::new())
+            .unwrap();
         for (ci, members) in plan.clusters.iter().enumerate() {
             let mut target = Tensor::zeros(&[160, 16]);
             for &j in members {

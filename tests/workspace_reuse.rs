@@ -1,0 +1,94 @@
+//! Workspace-arena correctness: reusing one `Workspace` across calls (and
+//! across changing batch shapes) must be numerically invisible — every
+//! `*_ws` path reproduces its fresh-allocation wrapper bit for bit.
+
+use mergemoe::config::ModelConfig;
+use mergemoe::model::native::{
+    forward, forward_ws, moe_forward, moe_forward_ws, target_logprobs, target_logprobs_into,
+};
+use mergemoe::model::testprops::{synth_model, tiny_moe};
+use mergemoe::model::workspace::Workspace;
+use mergemoe::tensor::Tensor;
+use mergemoe::util::rng::Rng;
+
+fn test_model(shared: bool, seed: u64) -> mergemoe::model::ModelWeights {
+    let cfg = ModelConfig {
+        name: "wsreuse".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: shared,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    synth_model(&cfg, seed)
+}
+
+#[test]
+fn repeated_forward_through_one_workspace_is_bit_identical() {
+    let model = test_model(true, 0xA11CE);
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    // alternating batch shapes stress buffer resizing in both directions
+    for &(b, reps) in &[(1usize, 3usize), (4, 3), (1, 2), (3, 2)] {
+        for r in 0..reps {
+            let tokens: Vec<i32> =
+                (0..b * 64).map(|i| ((i * 7 + r + b) % 47) as i32).collect();
+            forward_ws(&model, &tokens, b, 64, None, &mut ws, &mut logits).unwrap();
+            let fresh = forward(&model, &tokens, b, 64, None).unwrap();
+            assert_eq!(logits.shape(), fresh.shape(), "b={b} rep={r}");
+            assert_eq!(logits.data(), fresh.data(), "b={b} rep={r}");
+        }
+    }
+}
+
+#[test]
+fn capture_through_reused_workspace_matches_fresh() {
+    let model = test_model(false, 0xCAB);
+    let tokens: Vec<i32> = (0..2 * 64).map(|i| ((i * 13) % 47) as i32).collect();
+    let mut fresh_cap = Vec::new();
+    forward(&model, &tokens, 2, 64, Some(&mut fresh_cap)).unwrap();
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    // warm the arena with a different batch first
+    let warm: Vec<i32> = (0..64).map(|i| (i % 47) as i32).collect();
+    forward_ws(&model, &warm, 1, 64, None, &mut ws, &mut logits).unwrap();
+    let mut ws_cap = Vec::new();
+    forward_ws(&model, &tokens, 2, 64, Some(&mut ws_cap), &mut ws, &mut logits).unwrap();
+    assert_eq!(fresh_cap.len(), ws_cap.len());
+    for (a, b) in fresh_cap.iter().zip(&ws_cap) {
+        assert_eq!(a.x.data(), b.x.data());
+        assert_eq!(a.counts, b.counts);
+        assert_eq!(a.weight_mass, b.weight_mass);
+    }
+}
+
+#[test]
+fn moe_forward_ws_reuse_matches_wrapper() {
+    let moe = tiny_moe(8, 2, 0xBEE);
+    let mut ws = Workspace::new();
+    for round in 0..3usize {
+        let x = Tensor::randn(&[40 + round, 16], 1.0, &mut Rng::new(100 + round as u64));
+        let (want_y, want_counts, want_mass) = moe_forward(&moe, &x).unwrap();
+        moe_forward_ws(&moe, &x, &mut ws).unwrap();
+        assert_eq!(ws.moe_out.data(), want_y.data(), "round {round}");
+        assert_eq!(ws.counts, want_counts, "round {round}");
+        assert_eq!(ws.mass, want_mass, "round {round}");
+    }
+}
+
+#[test]
+fn logprob_buffer_reuse_matches_wrapper() {
+    let model = test_model(true, 0x10C);
+    let mut out = Vec::new();
+    for b in [1usize, 3, 2] {
+        let tokens: Vec<i32> = (0..b * 64).map(|i| ((i * 5 + b) % 47) as i32).collect();
+        let logits = forward(&model, &tokens, b, 64, None).unwrap();
+        let want = target_logprobs(&logits, &tokens, b, 64);
+        target_logprobs_into(&logits, &tokens, b, 64, &mut out);
+        assert_eq!(out, want, "b={b}");
+    }
+}

@@ -1,0 +1,122 @@
+//! Compare two directories of `BENCH_<name>.json` reports (as written by
+//! `mergemoe::bench::write_report`) and print per-benchmark speedup or
+//! regression — the perf-trajectory check every PR runs.
+//!
+//! Usage:
+//!
+//! ```text
+//! bench_diff <baseline_dir> <current_dir>
+//! ```
+//!
+//! Reports present on only one side are listed but not compared. The exit
+//! code is always 0: perf deltas on shared CI machines are informative, not
+//! a gate (the human reading the PR decides).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{bail, Context, Result};
+use mergemoe::util::json::Json;
+
+/// `name -> mean seconds` for every result entry of one report file.
+fn load_report(path: &Path) -> Result<BTreeMap<String, f64>> {
+    let json = Json::parse_file(path)?;
+    let mut out = BTreeMap::new();
+    for entry in json.get("results")?.as_arr()? {
+        let name = entry.get("name")?.as_str()?.to_string();
+        let mean = entry.get("mean_s")?.as_f64()?;
+        out.insert(name, mean);
+    }
+    Ok(out)
+}
+
+/// `BENCH_<x>.json` files in a directory, keyed by `<x>`.
+fn reports_in(dir: &Path) -> Result<BTreeMap<String, PathBuf>> {
+    let mut out = BTreeMap::new();
+    let entries = std::fs::read_dir(dir)
+        .with_context(|| format!("reading report dir {}", dir.display()))?;
+    for entry in entries {
+        let path = entry?.path();
+        let Some(name) = path.file_name().and_then(|n| n.to_str()) else {
+            continue;
+        };
+        if let Some(stem) = name.strip_prefix("BENCH_").and_then(|n| n.strip_suffix(".json")) {
+            out.insert(stem.to_string(), path);
+        }
+    }
+    Ok(out)
+}
+
+fn human(mean_s: f64) -> String {
+    if mean_s >= 1.0 {
+        format!("{mean_s:.3}s")
+    } else if mean_s >= 1e-3 {
+        format!("{:.3}ms", mean_s * 1e3)
+    } else {
+        format!("{:.1}µs", mean_s * 1e6)
+    }
+}
+
+fn main() -> Result<()> {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if args.len() != 2 {
+        bail!("usage: bench_diff <baseline_dir> <current_dir>");
+    }
+    let base_dir = Path::new(&args[0]);
+    let cur_dir = Path::new(&args[1]);
+    let base = reports_in(base_dir)?;
+    let cur = reports_in(cur_dir)?;
+    if cur.is_empty() {
+        bail!("no BENCH_*.json reports in {}", cur_dir.display());
+    }
+
+    let mut improved = 0usize;
+    let mut regressed = 0usize;
+    let mut compared = 0usize;
+    for (bench, cur_path) in &cur {
+        let Some(base_path) = base.get(bench) else {
+            println!("[new]  BENCH_{bench}: no baseline — skipping comparison");
+            continue;
+        };
+        let old = load_report(base_path)?;
+        let new = load_report(cur_path)?;
+        println!("== {bench} ==");
+        for (name, new_mean) in &new {
+            let Some(old_mean) = old.get(name) else {
+                println!("  [new entry]   {name:<44} {}", human(*new_mean));
+                continue;
+            };
+            compared += 1;
+            let speedup = old_mean / new_mean;
+            // >10% either way is signal; in between is machine noise
+            let tag = if speedup >= 1.10 {
+                improved += 1;
+                "FASTER "
+            } else if speedup <= 0.90 {
+                regressed += 1;
+                "SLOWER "
+            } else {
+                "  ~    "
+            };
+            println!(
+                "  {tag} {name:<44} {:>10} -> {:>10}  ({speedup:.2}x)",
+                human(*old_mean),
+                human(*new_mean)
+            );
+        }
+        for name in old.keys() {
+            if !new.contains_key(name) {
+                println!("  [dropped]     {name}");
+            }
+        }
+    }
+    for bench in base.keys() {
+        if !cur.contains_key(bench) {
+            println!("[gone] BENCH_{bench}: present in baseline only");
+        }
+    }
+    println!(
+        "\nbench_diff: {compared} compared, {improved} faster (>1.10x), {regressed} slower (<0.90x)"
+    );
+    Ok(())
+}
