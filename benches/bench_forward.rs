@@ -5,11 +5,14 @@
 //! across the batch buckets. Falls back to a synthetic `beta`-shaped model
 //! on a bare checkout. Emits `BENCH_forward.json`.
 //!
-//! This binary also carries the **allocation probe** for the zero-alloc
+//! This binary also carries the **allocation probes** for the zero-alloc
 //! acceptance check: a counting global allocator measures heap allocations
-//! per request in the steady-state serving loop (tokens → logits →
-//! per-token log-probs through one warm `Workspace`). After warmup the
-//! count must be 0.
+//! (a) per request in the steady-state serving loop (tokens → logits →
+//! per-token log-probs through one warm `Workspace`) and (b) per scored
+//! chunk in the evaluation-sweep scorer path (prepared items streamed
+//! through one warm `EvalScratch`). After warmup both counts must be 0;
+//! `MERGEMOE_STRICT_ALLOC=1` (set by ci.sh) turns a non-zero count into a
+//! hard failure.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -17,8 +20,10 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use mergemoe::bench::{self, Bencher};
 use mergemoe::calib;
 use mergemoe::config::Manifest;
+use mergemoe::eval::scorer::{score_prepared_ws, PreparedItems};
+use mergemoe::eval::tasks::{gen_items, Task};
 use mergemoe::model::native::target_logprobs_into;
-use mergemoe::model::workspace::Workspace;
+use mergemoe::model::workspace::{EvalScratch, Workspace};
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
 use mergemoe::tensor::Tensor;
 use mergemoe::util::par;
@@ -109,16 +114,45 @@ fn main() -> anyhow::Result<()> {
             zero_alloc = false;
         }
     }
+    // ---- allocation probe: evaluation-sweep scorer path ----
+    println!("\n=== allocation probe (scorer path through one EvalScratch) ===");
+    let eval_items = gen_items(Task::Parity, 32, 11);
+    let mut prep = PreparedItems::new();
+    prep.prepare(&eval_items, s)?;
+    let mut es = EvalScratch::new();
+    // warmup: grow the lane's arena + score buffers to high-water size
+    for _ in 0..3 {
+        score_prepared_ws(&mut NativeEngine, &model, &prep, 16, &mut es)?;
+    }
+    let iters = 10u64;
+    let chunks_per_pass = (prep.n_seqs() as u64 + 15) / 16;
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        let acc = score_prepared_ws(&mut NativeEngine, &model, &prep, 16, &mut es)?;
+        std::hint::black_box(acc.correct);
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    let per_chunk = (after - before) as f64 / (iters * chunks_per_pass) as f64;
+    println!("steady-state allocs/chunk (scorer): {per_chunk:.2} (target 0)");
+    if per_chunk > 0.0 {
+        zero_alloc = false;
+    }
+
     println!(
         "zero-alloc steady state: {}",
         if zero_alloc { "PASS" } else { "FAIL (see counts above)" }
     );
-    // Opt-in hard gate: once a reference machine has confirmed PASS, export
-    // MERGEMOE_STRICT_ALLOC=1 in CI so any future per-request allocation
-    // fails the bench run instead of scrolling by in the log.
+    // Hard gate (ci.sh exports MERGEMOE_STRICT_ALLOC=1): any steady-state
+    // allocation on the serving or scorer path fails the bench run instead
+    // of scrolling by in the log.
     if !zero_alloc && std::env::var("MERGEMOE_STRICT_ALLOC").map(|v| v == "1").unwrap_or(false) {
-        anyhow::bail!("steady-state serving loop allocated (MERGEMOE_STRICT_ALLOC=1)");
+        anyhow::bail!("steady-state hot path allocated (MERGEMOE_STRICT_ALLOC=1)");
     }
+    out.push(b.run_items(
+        "eval/scorer_ws/b16",
+        prep.n_seqs() as f64 * s as f64,
+        || score_prepared_ws(&mut NativeEngine, &model, &prep, 16, &mut es).unwrap(),
+    ));
 
     if bm.from_artifacts {
         if let Ok(manifest) = Manifest::load(&mergemoe::config::artifacts_dir()) {

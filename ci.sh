@@ -31,14 +31,19 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     REPORT_DIR=target/bench-reports
     mkdir -p "$REPORT_DIR"
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_par
-    # Set MERGEMOE_STRICT_ALLOC=1 (once confirmed green on a reference
-    # machine) to turn bench_forward's zero-alloc probe into a hard failure.
-    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_forward
+    # Zero-alloc gate: the counting-allocator probes (serving loop + sweep
+    # scorer path) hard-fail the run on any steady-state allocation.
+    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" MERGEMOE_STRICT_ALLOC=1 \
+        cargo bench --bench bench_forward
 
     if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
         echo "==> bench-diff vs benches/baseline"
         cargo run --release --bin bench_diff -- benches/baseline "$REPORT_DIR"
     else
+        # Reference-runner path: the first run on a machine captures its
+        # reports as the pinned baseline; commit benches/baseline/*.json on
+        # the reference runner so bench_diff has a trajectory (ephemeral
+        # runners re-capture and effectively diff against themselves).
         echo "==> no benches/baseline yet — capturing this run as the baseline"
         mkdir -p benches/baseline
         cp "$REPORT_DIR"/BENCH_*.json benches/baseline/

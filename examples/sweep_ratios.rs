@@ -1,44 +1,36 @@
 //! Compression-ratio sweep: how each merge algorithm degrades as the expert
 //! count shrinks — the full Figure-2a story, but for *all four* algorithms
-//! side by side (the paper shows only MergeMoE).
+//! side by side (the paper shows only MergeMoE). Driven by the
+//! `eval::sweep` subsystem: one tokenization pass, one calibration capture,
+//! one compression per (method, ratio), parallel (model, task) scoring.
 //!
 //! Run with:  cargo run --release --offline --example sweep_ratios
 //!            [-- --items 100 --engine native]
 
 use anyhow::Result;
-use mergemoe::coordinator::{compress, CompressSpec};
 use mergemoe::eval::tasks::Task;
-use mergemoe::exp::{Ctx, EngineSel};
-use mergemoe::merge::COMPARED;
+use mergemoe::eval::{run_sweep, SweepSpec};
+use mergemoe::exp::{self, Ctx, EngineSel};
+use mergemoe::merge::{NativeGram, COMPARED};
 use mergemoe::util::cli::Args;
 
 fn main() -> Result<()> {
     let args = Args::parse(&std::env::args().skip(1).collect::<Vec<_>>(), &[])?;
     let engine_sel = EngineSel::parse(args.get_or("engine", "pjrt"))?;
-    let mut ctx = Ctx::new(mergemoe::config::artifacts_dir(), engine_sel)?;
-    ctx.items = args.usize("items", 100)?;
-
+    let ctx = Ctx::new(mergemoe::config::artifacts_dir(), engine_sel)?;
     let model = ctx.load_model("beta")?;
     let mut engine = ctx.make_engine()?;
-    let sweep = [10usize, 8, 6, 4, 2];
 
-    println!("{:<10} {}", "experts",
-             COMPARED.map(|a| format!("{:>10}", a.name())).join(" "));
-    let full = ctx.eval_suite(engine.as_mut(), &model, &[Task::Parity])?["parity"];
-    println!("{:<10} {}", format!("12 (full)"),
-             COMPARED.map(|_| format!("{:>9.1}%", full.percent())).join(" "));
-    for &m in &sweep {
-        let mut row = Vec::new();
-        for alg in COMPARED {
-            let mut spec = CompressSpec::new(vec![2, 3], m, alg);
-            spec.n_calib_seqs = 64;
-            let mut gram = ctx.make_gram("beta")?;
-            let (merged, _) = compress(&model, &spec, &mut gram.as_backend())?;
-            let acc = ctx.eval_suite(engine.as_mut(), &merged, &[Task::Parity])?["parity"];
-            row.push(format!("{:>9.1}%", acc.percent()));
-        }
-        println!("{:<10} {}", m, row.join(" "));
-    }
+    let mut spec = SweepSpec::new(
+        COMPARED.to_vec(),
+        vec![10, 8, 6, 4, 2],
+        vec![Task::Parity],
+        vec![2, 3],
+    );
+    spec.items = args.usize("items", 100)?;
+    spec.seq_len = ctx.manifest.seq_len;
+    let rep = run_sweep(&model, &spec, &mut NativeGram, engine.as_mut())?;
+    exp::tables::sweep_table(&rep).print();
     println!("\n(task: parity — the WinoGrande analogue; layers 2-3 merged)");
     Ok(())
 }

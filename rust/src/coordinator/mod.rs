@@ -6,5 +6,7 @@ pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
-pub use pipeline::{compress, CompressReport, CompressSpec};
+pub use pipeline::{
+    capture_calibration, compress, compress_with_calib, CompressReport, CompressSpec,
+};
 pub use server::{ScoringServer, ServerConfig};

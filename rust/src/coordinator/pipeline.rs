@@ -85,13 +85,26 @@ impl CompressReport {
     }
 }
 
-/// Run the pipeline. Returns the compressed model and the report.
-/// `gram` is the Gram backend for the MergeMoE solve (native or PJRT/pallas).
-pub fn compress(
+/// Steps (1)+(2) of the pipeline: sample a calibration batch and capture
+/// per-layer activations + routing statistics on the uncompressed model.
+/// Because merging runs back to front, **one capture of the original model
+/// serves every merge built from it** — the evaluation sweep captures once
+/// and reuses the data across all of its (method, ratio) variants through
+/// [`compress_with_calib`].
+pub fn capture_calibration(
     model: &ModelWeights,
-    spec: &CompressSpec,
-    gram: &mut dyn GramBackend,
-) -> Result<(ModelWeights, CompressReport)> {
+    n_calib_seqs: usize,
+    calib_tasks: Option<&[Task]>,
+    seed: u64,
+) -> Result<CalibData> {
+    let seq_len = 64; // = configs.SEQ_LEN; manifest-checked on the PJRT path
+    let tokens = calib::sample_sequences(calib_tasks, n_calib_seqs, seq_len, seed);
+    calib::capture(model, &tokens, n_calib_seqs, seq_len)
+}
+
+/// Spec checks shared by [`compress`] (before the expensive capture) and
+/// [`compress_with_calib`] (callers may pass hand-built specs directly).
+fn validate_spec(model: &ModelWeights, spec: &CompressSpec) -> Result<()> {
     for &l in &spec.layers {
         if l >= model.layers.len() {
             bail!("layer {l} out of range ({} layers)", model.layers.len());
@@ -103,23 +116,49 @@ pub fn compress(
     if spec.algorithm != Algorithm::Oracle && spec.m > model.cfg.n_experts {
         bail!("target {} > {} experts", spec.m, model.cfg.n_experts);
     }
-    // (1)+(2) calibration capture on the uncompressed model
-    let t0 = Instant::now();
-    let seq_len = 64; // = configs.SEQ_LEN; manifest-checked on the PJRT path
-    let tokens = calib::sample_sequences(
-        spec.calib_tasks.as_deref(),
-        spec.n_calib_seqs,
-        seq_len,
-        spec.seed,
-    );
-    let calib: CalibData = calib::capture(model, &tokens, spec.n_calib_seqs, seq_len)?;
-    let calib_seconds = t0.elapsed().as_secs_f64();
+    Ok(())
+}
 
-    // (3)–(5) merge back to front. One workspace serves every layer's
-    // MergeMoE solve: the Gram panels reach their high-water size on the
-    // first layer and are reused for the rest (workspaces are per-thread;
-    // the pipeline is the only owner of this one).
+/// Run the pipeline. Returns the compressed model and the report.
+/// `gram` is the Gram backend for the MergeMoE solve (native or PJRT/pallas).
+pub fn compress(
+    model: &ModelWeights,
+    spec: &CompressSpec,
+    gram: &mut dyn GramBackend,
+) -> Result<(ModelWeights, CompressReport)> {
+    validate_spec(model, spec)?; // fail fast, before the capture
+    let t0 = Instant::now();
+    let calib = capture_calibration(
+        model,
+        spec.n_calib_seqs,
+        spec.calib_tasks.as_deref(),
+        spec.seed,
+    )?;
+    let calib_seconds = t0.elapsed().as_secs_f64();
     let mut ws = Workspace::new();
+    let (out, mut report) = compress_with_calib(model, spec, gram, &calib, &mut ws)?;
+    report.calib_seconds = calib_seconds;
+    Ok((out, report))
+}
+
+/// Steps (3)–(5) against a pre-captured calibration set: merge back to
+/// front and report. `calib` must come from [`capture_calibration`] (or
+/// [`calib::capture`]) on *this* model; `ws` supplies the MergeMoE
+/// Gram-panel scratch — callers compressing several variants (the sweep)
+/// pass one workspace so the panels are reused throughout.
+pub fn compress_with_calib(
+    model: &ModelWeights,
+    spec: &CompressSpec,
+    gram: &mut dyn GramBackend,
+    calib: &CalibData,
+    ws: &mut Workspace,
+) -> Result<(ModelWeights, CompressReport)> {
+    validate_spec(model, spec)?;
+    for &l in &spec.layers {
+        if l >= calib.layers.len() {
+            bail!("calibration capture has {} layers, need layer {l}", calib.layers.len());
+        }
+    }
     let mut out = model.clone();
     let mut layer_reports = Vec::new();
     let mut order = spec.layers.clone();
@@ -148,7 +187,7 @@ pub fn compress(
             Some(&x),
             gram,
             spec.ridge,
-            &mut ws,
+            ws,
         )?;
         let err = merge::layer_output_error(moe, &merged, &lc.x)?;
         layer_reports.push(LayerReport {
@@ -166,7 +205,7 @@ pub fn compress(
         layers: layer_reports,
         params_before: model.n_params(),
         params_after: out.n_params(),
-        calib_seconds,
+        calib_seconds: 0.0, // the capture is the caller's (amortized) cost
         merge_seconds: t1.elapsed().as_secs_f64(),
         n_calib_tokens: calib.n_tokens(),
     };
@@ -196,6 +235,35 @@ mod tests {
             out.layers[1].moe.shared.as_ref().unwrap().wg.data(),
             model.layers[1].moe.shared.as_ref().unwrap().wg.data()
         );
+    }
+
+    #[test]
+    fn compress_with_shared_calib_matches_compress() {
+        // one capture + one workspace reused across variants (the sweep's
+        // pattern) must reproduce the capture-per-call wrapper exactly
+        let model = tiny_model(8, 2, false, 94);
+        let mut spec = CompressSpec::new(vec![0, 1], 4, Algorithm::MergeMoe);
+        spec.n_calib_seqs = 8;
+        let (want, _) = compress(&model, &spec, &mut NativeGram).unwrap();
+        let calib =
+            capture_calibration(&model, spec.n_calib_seqs, None, spec.seed).unwrap();
+        let mut ws = Workspace::new();
+        for alg in [Algorithm::Average, Algorithm::MergeMoe] {
+            let mut s2 = spec.clone();
+            s2.algorithm = alg;
+            let (got, rep) =
+                compress_with_calib(&model, &s2, &mut NativeGram, &calib, &mut ws).unwrap();
+            assert_eq!(rep.n_calib_tokens, calib.n_tokens());
+            if alg == Algorithm::MergeMoe {
+                for (a, b) in got.layers.iter().zip(&want.layers) {
+                    for (ea, eb) in a.moe.experts.iter().zip(&b.moe.experts) {
+                        assert_eq!(ea.wd.data(), eb.wd.data());
+                        assert_eq!(ea.wg.data(), eb.wg.data());
+                        assert_eq!(ea.wu.data(), eb.wu.data());
+                    }
+                }
+            }
+        }
     }
 
     #[test]

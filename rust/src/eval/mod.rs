@@ -1,9 +1,14 @@
 //! Evaluation harness: the seven synthetic multiple-choice benchmark tasks
 //! (substitutes for WinoGrande / ARC / Hellaswag / PIQA / SQuAD / MRPC, see
-//! DESIGN.md §2) and the likelihood-based scorer that grades them.
+//! DESIGN.md §2), the workspace-backed likelihood scorer that grades them,
+//! and the [`sweep`] subsystem that evaluates a whole
+//! {method × ratio × task} comparison grid in one invocation
+//! (`mergemoe sweep`).
 
 pub mod scorer;
+pub mod sweep;
 pub mod tasks;
 
-pub use scorer::{score_items, Accuracy};
+pub use scorer::{score_items, score_items_scored, Accuracy, PreparedItems};
+pub use sweep::{run_sweep, SweepReport, SweepSpec};
 pub use tasks::{gen_items, Task, TaskItem, ALL_TASKS};

@@ -6,17 +6,29 @@
 //! model's sequence length and scored in one batched forward pass per chunk;
 //! the option with the higher mean per-token log-probability wins. Padding
 //! sits *after* the completion and is never scored, so bucket padding cannot
-//! change results (asserted by the padding-invariance test).
+//! change results (asserted by `padding_does_not_change_scores` below and by
+//! the 64-vs-96 case in `tests/eval_consistency.rs`).
+//!
+//! The hot path is workspace-backed: [`PreparedItems`] tokenizes and pads
+//! every sequence once into one flat reusable buffer, and
+//! [`score_prepared_ws`] streams chunks of it through
+//! [`Engine::logits_ws`] + [`target_logprobs_into`] with all scratch drawn
+//! from a caller-owned [`EvalScratch`] — zero heap allocations per chunk
+//! once the lane is warm (`benches/bench_forward.rs` proves it with the
+//! counting allocator). The historical entry point [`score_items`] is a
+//! thin allocating wrapper and is bit-identical to the pre-workspace path
+//! (`tests/eval_consistency.rs`).
 
 use anyhow::{bail, Result};
 
 use super::tasks::{self, TaskItem};
-use crate::model::native::target_logprobs;
+use crate::model::native::target_logprobs_into;
+use crate::model::workspace::EvalScratch;
 use crate::model::ModelWeights;
 use crate::runtime::Engine;
 
 /// Accuracy over a set of items.
-#[derive(Debug, Clone, Copy, Default)]
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct Accuracy {
     pub correct: usize,
     pub total: usize,
@@ -31,35 +43,142 @@ impl Accuracy {
     }
 }
 
-/// Score one batch of (tokens, prompt_len, option_len) sequences; returns
-/// the mean option log-probability for each.
-fn score_batch(
-    engine: &mut dyn Engine,
-    model: &ModelWeights,
-    seqs: &[(Vec<i32>, usize, usize)],
+/// Tokenized, padded, flattened two-option items, ready to stream through
+/// an engine chunk by chunk. The buffers are reusable: [`PreparedItems::prepare`]
+/// clears and refills them, allocating only while growing past the
+/// high-water mark — a sweep that prepares task after task into one
+/// instance settles at the largest task's footprint, and the prepared
+/// buffer is shared read-only by every (model, task) cell that scores it.
+#[derive(Default)]
+pub struct PreparedItems {
     seq_len: usize,
-) -> Result<Vec<f64>> {
-    let b = seqs.len();
-    let mut tokens = Vec::with_capacity(b * seq_len);
-    for (t, _, _) in seqs {
-        tokens.extend_from_slice(t);
-    }
-    let logits = engine.logits(model, &tokens, b, seq_len)?;
-    let lps = target_logprobs(&logits, &tokens, b, seq_len);
-    let mut out = Vec::with_capacity(b);
-    for (bi, (_, plen, olen)) in seqs.iter().enumerate() {
-        // positions plen-1 .. plen+olen-2 predict the option tokens
-        let mut sum = 0.0f64;
-        for si in (*plen - 1)..(*plen + *olen - 1) {
-            sum += lps[bi * seq_len + si] as f64;
-        }
-        out.push(sum / *olen as f64);
-    }
-    Ok(out)
+    /// Flat (2·n_items, seq_len) padded token rows, option-interleaved.
+    tokens: Vec<i32>,
+    /// Per sequence: (prompt_len, option_len) in tokens.
+    spans: Vec<(usize, usize)>,
+    /// Per item: index of the correct option.
+    correct: Vec<usize>,
 }
 
-/// Evaluate items; returns the accuracy. `batch` bounds the number of
-/// sequences per forward pass (two per item).
+impl PreparedItems {
+    pub fn new() -> PreparedItems {
+        PreparedItems::default()
+    }
+
+    /// Tokenize and pad `items` (two sequences per item, interleaved).
+    /// Errors if any full sequence exceeds `seq_len`.
+    pub fn prepare(&mut self, items: &[TaskItem], seq_len: usize) -> Result<()> {
+        let pad = tasks::CHARSET.find('\n').expect("charset newline") as i32;
+        self.seq_len = seq_len;
+        self.tokens.clear();
+        self.spans.clear();
+        self.correct.clear();
+        for item in items {
+            self.correct.push(item.correct);
+            for opt in 0..2 {
+                let start = self.tokens.len();
+                tasks::encode_into(&item.prompt, &mut self.tokens);
+                let plen = self.tokens.len() - start;
+                tasks::encode_into(&item.options[opt], &mut self.tokens);
+                let full = self.tokens.len() - start;
+                if full > seq_len {
+                    bail!("item longer than seq_len: {full} > {seq_len}");
+                }
+                self.tokens.resize(start + seq_len, pad);
+                self.spans.push((plen, full - plen));
+            }
+        }
+        Ok(())
+    }
+
+    pub fn n_items(&self) -> usize {
+        self.correct.len()
+    }
+
+    pub fn n_seqs(&self) -> usize {
+        self.spans.len()
+    }
+
+    /// Correct-option index per item.
+    pub fn correct(&self) -> &[usize] {
+        &self.correct
+    }
+}
+
+/// Sequences per forward pass: `batch` rounded **up** to the next even
+/// count, so an item's two options always travel together and an odd
+/// `batch` never silently halves the chunk (the seed rounded down:
+/// `batch.max(2) / 2 * 2` turned `--batch 33` into chunks of 32... and
+/// `--batch 3` into chunks of 2).
+fn even_chunk(batch: usize) -> usize {
+    (batch.max(1) + 1) / 2 * 2
+}
+
+/// Score every prepared sequence through one scratch lane. Fills
+/// `es.scores` with the mean option log-probability of each sequence (two
+/// per item, option-interleaved) and returns the accuracy. After the first
+/// call has warmed `es`, subsequent calls allocate nothing per chunk.
+pub fn score_prepared_ws(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    prep: &PreparedItems,
+    batch: usize,
+    es: &mut EvalScratch,
+) -> Result<Accuracy> {
+    let s = prep.seq_len;
+    let chunk = even_chunk(batch);
+    es.scores.clear();
+    let mut lo = 0;
+    while lo < prep.n_seqs() {
+        let hi = (lo + chunk).min(prep.n_seqs());
+        let b = hi - lo;
+        let toks = &prep.tokens[lo * s..hi * s];
+        engine.logits_ws(model, toks, b, s, &mut es.ws, &mut es.logits)?;
+        target_logprobs_into(&es.logits, toks, b, s, &mut es.ws.lps);
+        for bi in 0..b {
+            let (plen, olen) = prep.spans[lo + bi];
+            // positions plen-1 .. plen+olen-2 predict the option tokens
+            let mut sum = 0.0f64;
+            for si in (plen - 1)..(plen + olen - 1) {
+                sum += es.ws.lps[bi * s + si] as f64;
+            }
+            es.scores.push(sum / olen as f64);
+        }
+        lo = hi;
+    }
+    let mut acc = Accuracy::default();
+    for (i, &c) in prep.correct.iter().enumerate() {
+        let pick = if es.scores[2 * i] >= es.scores[2 * i + 1] { 0 } else { 1 };
+        if pick == c {
+            acc.correct += 1;
+        }
+        acc.total += 1;
+    }
+    Ok(acc)
+}
+
+/// Mean log-probability of the *correct* options over per-option `scores`
+/// (as filled by [`score_prepared_ws`]) — the sweep's fidelity metric on
+/// the calibration distribution, banded by the method-ordering regression
+/// test.
+pub fn mean_correct_lp(prep: &PreparedItems, scores: &[f64]) -> f64 {
+    if prep.n_items() == 0 {
+        return 0.0;
+    }
+    let sum: f64 = prep
+        .correct
+        .iter()
+        .enumerate()
+        .map(|(i, &c)| scores[2 * i + c])
+        .sum();
+    sum / prep.n_items() as f64
+}
+
+/// Evaluate items; returns the accuracy. `batch` sets the sequences per
+/// forward pass (two per item; odd values round **up** to the next even
+/// count so option pairs travel together). Thin allocating wrapper around
+/// [`score_prepared_ws`] — callers scoring in a loop (the sweep) hold
+/// their own [`PreparedItems`] + [`EvalScratch`] instead.
 pub fn score_items(
     engine: &mut dyn Engine,
     model: &ModelWeights,
@@ -67,35 +186,24 @@ pub fn score_items(
     seq_len: usize,
     batch: usize,
 ) -> Result<Accuracy> {
-    let pad = tasks::encode("\n")[0];
-    // two sequences per item, interleaved
-    let mut seqs: Vec<(Vec<i32>, usize, usize)> = Vec::with_capacity(items.len() * 2);
-    for item in items {
-        for opt in 0..2 {
-            let toks = item.full_tokens(opt);
-            if toks.len() > seq_len {
-                bail!("item longer than seq_len: {} > {seq_len}", toks.len());
-            }
-            let plen = item.prompt_len();
-            let olen = toks.len() - plen;
-            let mut padded = toks;
-            padded.resize(seq_len, pad);
-            seqs.push((padded, plen, olen));
-        }
-    }
-    let mut scores = Vec::with_capacity(seqs.len());
-    for chunk in seqs.chunks(batch.max(2) / 2 * 2) {
-        scores.extend(score_batch(engine, model, chunk, seq_len)?);
-    }
-    let mut acc = Accuracy::default();
-    for (i, item) in items.iter().enumerate() {
-        let pick = if scores[2 * i] >= scores[2 * i + 1] { 0 } else { 1 };
-        if pick == item.correct {
-            acc.correct += 1;
-        }
-        acc.total += 1;
-    }
-    Ok(acc)
+    Ok(score_items_scored(engine, model, items, seq_len, batch)?.0)
+}
+
+/// [`score_items`] that also returns the per-option mean log-probabilities
+/// (two per item, option-interleaved) — the padding-invariance and
+/// method-ordering tests compare these directly.
+pub fn score_items_scored(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    items: &[TaskItem],
+    seq_len: usize,
+    batch: usize,
+) -> Result<(Accuracy, Vec<f64>)> {
+    let mut prep = PreparedItems::new();
+    prep.prepare(items, seq_len)?;
+    let mut es = EvalScratch::new();
+    let acc = score_prepared_ws(engine, model, &prep, batch, &mut es)?;
+    Ok((acc, std::mem::take(&mut es.scores)))
 }
 
 #[cfg(test)]
@@ -121,11 +229,66 @@ mod tests {
 
     #[test]
     fn batch_size_does_not_change_results() {
+        // odd sizes included: the chunking used to round odd batches *down*
+        // (silently halving --batch 3 to 2); all sizes must agree exactly,
+        // per-option scores included.
         let model = tiny_model(4, 2, true, 81);
         let items = gen_items(Task::Copy, 30, 2);
-        let a = score_items(&mut NativeEngine, &model, &items, 64, 4).unwrap();
-        let b = score_items(&mut NativeEngine, &model, &items, 64, 60).unwrap();
-        assert_eq!(a.correct, b.correct);
+        let (ref_acc, ref_scores) =
+            score_items_scored(&mut NativeEngine, &model, &items, 64, 60).unwrap();
+        for batch in [1usize, 3, 4, 5, 7, 16, 59] {
+            let (acc, scores) =
+                score_items_scored(&mut NativeEngine, &model, &items, 64, batch).unwrap();
+            assert_eq!(acc, ref_acc, "batch {batch}");
+            assert_eq!(scores, ref_scores, "batch {batch}");
+        }
+    }
+
+    #[test]
+    fn even_chunk_rounds_up() {
+        assert_eq!(even_chunk(1), 2);
+        assert_eq!(even_chunk(2), 2);
+        assert_eq!(even_chunk(3), 4);
+        assert_eq!(even_chunk(32), 32);
+        assert_eq!(even_chunk(33), 34);
+    }
+
+    #[test]
+    fn padding_does_not_change_scores() {
+        // the module-doc promise: bucket padding after the completion is
+        // never scored, so the same items at different seq_len produce
+        // identical accuracy AND identical per-option scores (the causal
+        // forward makes scored positions independent of trailing pad)
+        let model = tiny_model(4, 2, true, 83);
+        let items = gen_items(Task::Arith, 25, 4);
+        let (acc_a, scores_a) =
+            score_items_scored(&mut NativeEngine, &model, &items, 48, 16).unwrap();
+        let (acc_b, scores_b) =
+            score_items_scored(&mut NativeEngine, &model, &items, 64, 16).unwrap();
+        assert_eq!(acc_a, acc_b);
+        assert_eq!(scores_a, scores_b);
+    }
+
+    #[test]
+    fn prepared_buffers_reuse_across_tasks() {
+        // one PreparedItems + one EvalScratch carried across tasks (the
+        // sweep's lane pattern) must match fresh per-task scoring
+        let model = tiny_model(4, 2, false, 84);
+        let mut prep = PreparedItems::new();
+        let mut es = EvalScratch::new();
+        for task in [Task::Copy, Task::Parity, Task::Copy, Task::Maj] {
+            let items = gen_items(task, 20, 5);
+            prep.prepare(&items, 64).unwrap();
+            let acc = score_prepared_ws(&mut NativeEngine, &model, &prep, 8, &mut es).unwrap();
+            let (want_acc, want_scores) =
+                score_items_scored(&mut NativeEngine, &model, &items, 64, 8).unwrap();
+            assert_eq!(acc, want_acc, "{task:?}");
+            assert_eq!(es.scores, want_scores, "{task:?}");
+            assert_eq!(
+                mean_correct_lp(&prep, &es.scores),
+                mean_correct_lp(&prep, &want_scores)
+            );
+        }
     }
 
     #[test]

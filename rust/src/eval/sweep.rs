@@ -1,0 +1,472 @@
+//! Evaluation sweeps: the paper's accuracy-vs-ratio comparison grid —
+//! {compression method} × {ratio} × {task} — in one invocation
+//! (`mergemoe sweep`). This is the machinery behind the headline claim:
+//! MergeMoE must beat averaging/ZipIt/M-SMoE at the *same* compression
+//! ratio (PAPER.md §5), and the method-ordering regression test in
+//! `tests/eval_consistency.rs` keeps that ordering under test.
+//!
+//! Execution model:
+//!
+//! 1. **Prepare once.** Every task's items are tokenized and padded into a
+//!    [`PreparedItems`] buffer up front; the buffers are shared read-only
+//!    by every (model, task) cell.
+//! 2. **Capture once, compress per variant.** One calibration capture of
+//!    the uncompressed model (`capture_calibration`) serves every
+//!    (method, ratio) variant through `compress_with_calib`; each merge is
+//!    internally parallel (per cluster / per calibration chunk), so the
+//!    variant loop stays serial.
+//! 3. **Score the grid in parallel.** Independent (variant, task) cells fan
+//!    out across the `util::par` worker pool via `par_items_with_slots`,
+//!    one forked engine + one [`EvalScratch`] per lane — workspaces are
+//!    never shared across threads (the `model::workspace` ownership rule).
+//!    Per-cell scoring is strictly serial inside its lane and nested
+//!    regions degrade, so sweep results are **bit-identical at every
+//!    thread count** (`tests/eval_consistency.rs`). Engines that cannot
+//!    fork (PJRT) run the cells serially on the calling thread.
+//!
+//! The outcome is a [`SweepReport`]: `exp::tables::sweep_table` renders the
+//! accuracy-vs-ratio markdown table and `exp::report::save_sweep` persists
+//! `SWEEP_<model>.json` + `SWEEP_<model>.md` for bench_diff-style
+//! comparison across commits.
+
+use anyhow::{bail, Context, Result};
+
+use super::scorer::{self, PreparedItems};
+use super::tasks::{gen_items, Task};
+use super::Accuracy;
+use crate::coordinator::{capture_calibration, compress_with_calib, CompressSpec};
+use crate::merge::{Algorithm, GramBackend};
+use crate::model::workspace::{EvalScratch, Workspace};
+use crate::model::ModelWeights;
+use crate::runtime::Engine;
+use crate::util::json::Json;
+use crate::util::par;
+
+/// The evaluation grid: every method × target expert count × task.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Compression methods to compare (each evaluated at every target).
+    pub methods: Vec<Algorithm>,
+    /// Target expert counts per merged layer — one compression ratio each.
+    pub targets: Vec<usize>,
+    /// Tasks every variant is evaluated on.
+    pub tasks: Vec<Task>,
+    /// Layer indices to merge.
+    pub layers: Vec<usize>,
+    /// Items per task.
+    pub items: usize,
+    pub seq_len: usize,
+    /// Sequences per forward chunk (rounded up to even by the scorer).
+    pub batch: usize,
+    /// Calibration sequences per capture.
+    pub n_calib_seqs: usize,
+    /// Restrict calibration data to these tasks (None = uniform mixture).
+    pub calib_tasks: Option<Vec<Task>>,
+    pub seed: u64,
+    /// Evaluate the uncompressed model as the first row.
+    pub include_full: bool,
+}
+
+impl SweepSpec {
+    pub fn new(
+        methods: Vec<Algorithm>,
+        targets: Vec<usize>,
+        tasks: Vec<Task>,
+        layers: Vec<usize>,
+    ) -> SweepSpec {
+        SweepSpec {
+            methods,
+            targets,
+            tasks,
+            layers,
+            items: 100,
+            seq_len: 64,
+            batch: 32,
+            n_calib_seqs: 64,
+            calib_tasks: None,
+            seed: 2026,
+            include_full: true,
+        }
+    }
+}
+
+/// One (variant, task) cell of the grid.
+#[derive(Debug, Clone)]
+pub struct TaskCell {
+    pub task: Task,
+    pub acc: Accuracy,
+    /// Mean log-probability of the correct option — the fidelity metric on
+    /// the calibration distribution that the method-ordering regression
+    /// test bands (oracle ≥ mergemoe ≥ average).
+    pub mean_correct_lp: f64,
+}
+
+/// One compressed (or full) model variant with its per-task results.
+#[derive(Debug, Clone)]
+pub struct VariantResult {
+    /// Row label: `"Full"` or the algorithm name.
+    pub label: String,
+    /// Target expert count (the original count for the full row).
+    pub m: usize,
+    pub params: usize,
+    /// `params / params(full)`.
+    pub ratio: f64,
+    pub merge_seconds: f64,
+    /// Mean per-layer output relative error of the merge (0 for Full).
+    pub mean_layer_err: f64,
+    /// One cell per task, in `SweepSpec::tasks` order.
+    pub cells: Vec<TaskCell>,
+}
+
+impl VariantResult {
+    /// Mean accuracy across the variant's tasks (the paper's "Avg" column).
+    pub fn mean_percent(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        self.cells.iter().map(|c| c.acc.percent()).sum::<f64>() / self.cells.len() as f64
+    }
+
+    /// Mean correct-option log-probability across the variant's tasks.
+    pub fn mean_correct_lp(&self) -> f64 {
+        if self.cells.is_empty() {
+            return 0.0;
+        }
+        self.cells.iter().map(|c| c.mean_correct_lp).sum::<f64>() / self.cells.len() as f64
+    }
+
+    /// The cell for `task`, if the sweep evaluated it.
+    pub fn cell(&self, task: Task) -> Option<&TaskCell> {
+        self.cells.iter().find(|c| c.task == task)
+    }
+}
+
+/// Full sweep outcome (serialized as `SWEEP_<model>.json`).
+#[derive(Debug, Clone)]
+pub struct SweepReport {
+    pub model: String,
+    pub items: usize,
+    pub seq_len: usize,
+    pub seed: u64,
+    /// Thread budget the sweep ran under (results do not depend on it).
+    pub threads: usize,
+    pub n_calib_tokens: usize,
+    pub wall_seconds: f64,
+    /// Full first (if requested), then method-major per target in spec
+    /// order.
+    pub variants: Vec<VariantResult>,
+}
+
+impl SweepReport {
+    /// The variant row for `(label, m)` — e.g. `("MergeMoE", 6)`.
+    pub fn variant(&self, label: &str, m: usize) -> Option<&VariantResult> {
+        self.variants.iter().find(|v| v.label == label && v.m == m)
+    }
+
+    /// Machine-readable record (`SWEEP_<model>.json`), shaped for
+    /// bench_diff-style comparison: stable keys, accuracy in percent.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("model", Json::str(&self.model)),
+            ("items", Json::num(self.items as f64)),
+            ("seq_len", Json::num(self.seq_len as f64)),
+            ("seed", Json::num(self.seed as f64)),
+            ("threads", Json::num(self.threads as f64)),
+            ("n_calib_tokens", Json::num(self.n_calib_tokens as f64)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            (
+                "variants",
+                Json::arr(self.variants.iter().map(|v| {
+                    Json::obj(vec![
+                        ("label", Json::str(&v.label)),
+                        ("m", Json::num(v.m as f64)),
+                        ("params", Json::num(v.params as f64)),
+                        ("ratio", Json::num(v.ratio)),
+                        ("merge_seconds", Json::num(v.merge_seconds)),
+                        ("mean_layer_err", Json::num(v.mean_layer_err)),
+                        ("mean_acc", Json::num(v.mean_percent())),
+                        (
+                            "tasks",
+                            Json::Obj(
+                                v.cells
+                                    .iter()
+                                    .map(|c| {
+                                        (
+                                            c.task.name().to_string(),
+                                            Json::obj(vec![
+                                                ("acc", Json::num(c.acc.percent())),
+                                                ("correct", Json::num(c.acc.correct as f64)),
+                                                ("total", Json::num(c.acc.total as f64)),
+                                                (
+                                                    "mean_correct_lp",
+                                                    Json::num(c.mean_correct_lp),
+                                                ),
+                                            ]),
+                                        )
+                                    })
+                                    .collect(),
+                            ),
+                        ),
+                    ])
+                })),
+            ),
+        ])
+    }
+}
+
+/// A variant awaiting scoring. `model: None` is the uncompressed input
+/// model (borrowed from the caller — no clone for the Full row).
+struct Variant {
+    label: String,
+    m: usize,
+    params: usize,
+    merge_seconds: f64,
+    mean_layer_err: f64,
+    model: Option<ModelWeights>,
+}
+
+/// One scoring lane: a forked engine plus its private scratch (never
+/// shared across threads).
+struct Lane {
+    engine: Box<dyn Engine + Send>,
+    scratch: EvalScratch,
+}
+
+/// Run the whole grid. `gram` backs the MergeMoE solves; `engine` scores —
+/// if it forks ([`Engine::fork`]), cells run across the worker pool.
+pub fn run_sweep(
+    model: &ModelWeights,
+    spec: &SweepSpec,
+    gram: &mut dyn GramBackend,
+    engine: &mut dyn Engine,
+) -> Result<SweepReport> {
+    if spec.methods.is_empty() || spec.targets.is_empty() || spec.tasks.is_empty() {
+        bail!("sweep needs at least one method, one target and one task");
+    }
+    let t0 = std::time::Instant::now();
+
+    // (1) tokenize/pad every task once; shared read-only by all cells
+    let mut preps: Vec<PreparedItems> = Vec::with_capacity(spec.tasks.len());
+    for &task in &spec.tasks {
+        let items = gen_items(task, spec.items, spec.seed);
+        let mut p = PreparedItems::new();
+        p.prepare(&items, spec.seq_len)
+            .with_context(|| format!("preparing task {}", task.name()))?;
+        preps.push(p);
+    }
+
+    // (2) one capture serves every variant; one workspace serves every solve
+    let calib = capture_calibration(
+        model,
+        spec.n_calib_seqs,
+        spec.calib_tasks.as_deref(),
+        spec.seed,
+    )?;
+    let full_params = model.n_params();
+    let mut variants: Vec<Variant> = Vec::new();
+    if spec.include_full {
+        variants.push(Variant {
+            label: "Full".into(),
+            m: model.cfg.n_experts,
+            params: full_params,
+            merge_seconds: 0.0,
+            mean_layer_err: 0.0,
+            model: None,
+        });
+    }
+    let mut ws = Workspace::new();
+    for &m in &spec.targets {
+        for &alg in &spec.methods {
+            let mut cs = CompressSpec::new(spec.layers.clone(), m, alg);
+            cs.n_calib_seqs = spec.n_calib_seqs;
+            cs.calib_tasks = spec.calib_tasks.clone();
+            cs.seed = spec.seed;
+            let (merged, rep) = compress_with_calib(model, &cs, gram, &calib, &mut ws)
+                .with_context(|| format!("compressing to {m} experts via {}", alg.name()))?;
+            let mean_err = rep.layers.iter().map(|l| l.output_rel_err).sum::<f64>()
+                / rep.layers.len().max(1) as f64;
+            variants.push(Variant {
+                label: alg.name().to_string(),
+                m,
+                params: rep.params_after,
+                merge_seconds: rep.merge_seconds,
+                mean_layer_err: mean_err,
+                model: Some(merged),
+            });
+        }
+    }
+
+    // (3) score the (variant, task) grid; cell i = (variant i/n_tasks,
+    // task i%n_tasks)
+    type CellOut = Option<Result<(Accuracy, f64)>>;
+    let n_tasks = spec.tasks.len();
+    let mut cells: Vec<CellOut> = Vec::new();
+    cells.resize_with(variants.len() * n_tasks, || None);
+    let score_cell = |vi: usize,
+                      ti: usize,
+                      eng: &mut dyn Engine,
+                      es: &mut EvalScratch|
+     -> Result<(Accuracy, f64)> {
+        let mdl = variants[vi].model.as_ref().unwrap_or(model);
+        let acc = scorer::score_prepared_ws(eng, mdl, &preps[ti], spec.batch, es)?;
+        let lp = scorer::mean_correct_lp(&preps[ti], &es.scores);
+        Ok((acc, lp))
+    };
+    // Fan cells out only when the grid can occupy the whole thread budget:
+    // inside a lane, nested kernel regions degrade to serial, so a grid
+    // *smaller* than the budget scores faster cell-by-cell with parallel
+    // kernels (results are bit-identical either way).
+    let mut lanes: Vec<Lane> = Vec::new();
+    let want = par::max_threads();
+    if want > 1 && cells.len() >= want {
+        if let Some(first) = engine.fork() {
+            lanes.push(Lane { engine: first, scratch: EvalScratch::new() });
+            while lanes.len() < want {
+                match engine.fork() {
+                    Some(e) => lanes.push(Lane { engine: e, scratch: EvalScratch::new() }),
+                    None => break,
+                }
+            }
+        }
+    }
+    if lanes.len() > 1 {
+        par::par_items_with_slots(true, &mut cells, &mut lanes, |i, cell, lane| {
+            let (vi, ti) = (i / n_tasks, i % n_tasks);
+            *cell = Some(score_cell(vi, ti, lane.engine.as_mut(), &mut lane.scratch));
+        });
+    } else {
+        // non-forking engine (PJRT) or single-thread budget: every cell on
+        // the calling thread through one scratch
+        let mut es = EvalScratch::new();
+        for (i, cell) in cells.iter_mut().enumerate() {
+            let (vi, ti) = (i / n_tasks, i % n_tasks);
+            *cell = Some(score_cell(vi, ti, &mut *engine, &mut es));
+        }
+    }
+
+    // (4) assemble, in (variant, task) order
+    let mut results: Vec<Vec<TaskCell>> = Vec::with_capacity(variants.len());
+    results.resize_with(variants.len(), Vec::new);
+    for (idx, out) in cells.into_iter().enumerate() {
+        let (vi, ti) = (idx / n_tasks, idx % n_tasks);
+        let (acc, lp) = out
+            .expect("cell not scored")
+            .with_context(|| {
+                format!("scoring {} (m={}) on {}", variants[vi].label, variants[vi].m,
+                        spec.tasks[ti].name())
+            })?;
+        results[vi].push(TaskCell { task: spec.tasks[ti], acc, mean_correct_lp: lp });
+    }
+    let variants_out = variants
+        .into_iter()
+        .zip(results)
+        .map(|(v, cells)| VariantResult {
+            label: v.label,
+            m: v.m,
+            params: v.params,
+            ratio: v.params as f64 / full_params as f64,
+            merge_seconds: v.merge_seconds,
+            mean_layer_err: v.mean_layer_err,
+            cells,
+        })
+        .collect();
+    Ok(SweepReport {
+        model: model.cfg.name.clone(),
+        items: spec.items,
+        seq_len: spec.seq_len,
+        seed: spec.seed,
+        threads: par::max_threads(),
+        n_calib_tokens: calib.n_tokens(),
+        wall_seconds: t0.elapsed().as_secs_f64(),
+        variants: variants_out,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::merge::NativeGram;
+    use crate::model::testutil::tiny_model;
+    use crate::runtime::NativeEngine;
+
+    fn small_spec() -> SweepSpec {
+        let mut spec = SweepSpec::new(
+            vec![Algorithm::Average, Algorithm::MSmoe],
+            vec![2],
+            vec![Task::Copy, Task::Parity],
+            vec![0, 1],
+        );
+        spec.items = 10;
+        spec.n_calib_seqs = 4;
+        spec.batch = 8;
+        spec
+    }
+
+    #[test]
+    fn sweep_covers_the_whole_grid() {
+        let model = tiny_model(4, 2, false, 95);
+        let rep =
+            run_sweep(&model, &small_spec(), &mut NativeGram, &mut NativeEngine).unwrap();
+        // Full + 2 methods × 1 target
+        assert_eq!(rep.variants.len(), 3);
+        assert_eq!(rep.variants[0].label, "Full");
+        assert_eq!(rep.variants[0].ratio, 1.0);
+        for v in &rep.variants {
+            assert_eq!(v.cells.len(), 2);
+            assert_eq!(v.cells[0].task, Task::Copy);
+            assert_eq!(v.cells[1].task, Task::Parity);
+            for c in &v.cells {
+                assert_eq!(c.acc.total, 10);
+                assert!(c.mean_correct_lp.is_finite() && c.mean_correct_lp < 0.0);
+            }
+        }
+        // compressed variants really shrank
+        assert!(rep.variants[1].ratio < 1.0);
+        assert!(rep.variant("Average", 2).is_some());
+        assert!(rep.variant("M-SMoE", 2).is_some());
+        assert!(rep.variant("MergeMoE", 2).is_none());
+    }
+
+    #[test]
+    fn sweep_reruns_are_identical() {
+        let model = tiny_model(4, 2, true, 96);
+        let spec = small_spec();
+        let a = run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+        let b = run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+        for (va, vb) in a.variants.iter().zip(&b.variants) {
+            assert_eq!(va.label, vb.label);
+            assert_eq!(va.params, vb.params);
+            for (ca, cb) in va.cells.iter().zip(&vb.cells) {
+                assert_eq!(ca.acc, cb.acc, "{}/{}", va.label, ca.task.name());
+                assert_eq!(
+                    ca.mean_correct_lp, cb.mean_correct_lp,
+                    "{}/{}", va.label, ca.task.name()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn sweep_json_has_stable_shape() {
+        let model = tiny_model(4, 2, false, 97);
+        let rep =
+            run_sweep(&model, &small_spec(), &mut NativeGram, &mut NativeEngine).unwrap();
+        let parsed = Json::parse(&rep.to_json().to_string()).unwrap();
+        assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "tiny");
+        let variants = parsed.get("variants").unwrap().as_arr().unwrap();
+        assert_eq!(variants.len(), rep.variants.len());
+        let copy = variants[0].get("tasks").unwrap().get("copy").unwrap();
+        assert!(copy.get("acc").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(copy.get("mean_correct_lp").unwrap().as_f64().unwrap() < 0.0);
+    }
+
+    #[test]
+    fn sweep_rejects_empty_grid() {
+        let model = tiny_model(4, 2, false, 98);
+        let mut spec = small_spec();
+        spec.tasks.clear();
+        assert!(
+            run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).is_err()
+        );
+    }
+}

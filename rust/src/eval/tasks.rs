@@ -40,13 +40,22 @@ pub fn charset_fingerprint() -> u64 {
 /// Tokenize against CHARSET. Panics on out-of-alphabet chars (all task
 /// generators stay inside the alphabet by construction).
 pub fn encode(s: &str) -> Vec<i32> {
-    s.chars()
-        .map(|c| {
-            CHARSET
-                .find(c)
-                .unwrap_or_else(|| panic!("char {c:?} not in CHARSET")) as i32
-        })
-        .collect()
+    let mut out = Vec::with_capacity(s.len());
+    encode_into(s, &mut out);
+    out
+}
+
+/// [`encode`] appending into a caller-owned buffer: once the buffer has its
+/// high-water capacity this allocates nothing, which is what lets the
+/// scorer's prepare step build whole padded sequence batches without
+/// per-item Vecs (`eval::scorer::PreparedItems`).
+pub fn encode_into(s: &str, out: &mut Vec<i32>) {
+    for c in s.chars() {
+        let id = CHARSET
+            .find(c)
+            .unwrap_or_else(|| panic!("char {c:?} not in CHARSET")) as i32;
+        out.push(id);
+    }
 }
 
 /// The seven tasks.
@@ -282,6 +291,14 @@ mod tests {
         for (i, &id) in ids.iter().enumerate() {
             assert_eq!(id, i as i32);
         }
+    }
+
+    #[test]
+    fn encode_into_appends_without_reset() {
+        let mut buf = vec![7i32];
+        encode_into("ab", &mut buf);
+        assert_eq!(buf, vec![7, 0, 1]);
+        assert_eq!(encode("ab"), vec![0, 1]);
     }
 
     #[test]

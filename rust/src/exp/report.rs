@@ -26,7 +26,10 @@ impl TablePrinter {
         self.rows.push(cells);
     }
 
-    pub fn print(&self) {
+    /// The table as a markdown string (one trailing newline) — what
+    /// [`TablePrinter::print`] writes to stdout and what `save_sweep`
+    /// persists as `SWEEP_<model>.md`.
+    pub fn render(&self) -> String {
         let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
         for row in &self.rows {
             for (i, c) in row.iter().enumerate() {
@@ -40,14 +43,20 @@ impl TablePrinter {
             for (i, c) in cells.iter().enumerate() {
                 s.push_str(&format!(" {:<w$} |", c, w = widths.get(i).copied().unwrap_or(4)));
             }
+            s.push('\n');
             s
         };
-        println!("{}", line(&self.headers));
+        let mut out = line(&self.headers);
         let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
-        println!("{}", line(&sep));
+        out.push_str(&line(&sep));
         for row in &self.rows {
-            println!("{}", line(row));
+            out.push_str(&line(row));
         }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
     }
 }
 
@@ -60,6 +69,25 @@ pub fn save(ctx: &Ctx, name: &str, payload: Json) -> Result<()> {
         .with_context(|| format!("writing {}", path.display()))?;
     println!("[report saved to {}]", path.display());
     Ok(())
+}
+
+/// Persist a sweep report: `SWEEP_<model>.json` (the machine-readable
+/// record a `tools/bench_diff`-style comparison consumes) plus
+/// `SWEEP_<model>.md` (the accuracy-vs-ratio table). Takes a directory
+/// rather than a [`Ctx`] so sweeps run on bare checkouts without a
+/// manifest. Returns the JSON path.
+pub fn save_sweep(
+    dir: &std::path::Path,
+    rep: &crate::eval::sweep::SweepReport,
+) -> Result<std::path::PathBuf> {
+    std::fs::create_dir_all(dir)?;
+    let json_path = dir.join(format!("SWEEP_{}.json", rep.model));
+    std::fs::write(&json_path, rep.to_json().to_string())
+        .with_context(|| format!("writing {}", json_path.display()))?;
+    let md_path = dir.join(format!("SWEEP_{}.md", rep.model));
+    std::fs::write(&md_path, super::tables::sweep_table(rep).render())
+        .with_context(|| format!("writing {}", md_path.display()))?;
+    Ok(json_path)
 }
 
 /// Convert an accuracy map to a JSON object.
@@ -130,5 +158,46 @@ mod tests {
     fn fmt_params_units() {
         assert_eq!(fmt_params(4_300_000), "4.30M");
         assert_eq!(fmt_params(32_000), "32K");
+    }
+
+    #[test]
+    fn render_and_save_sweep_roundtrip() {
+        use crate::eval::sweep::{SweepReport, TaskCell, VariantResult};
+        use crate::eval::tasks::Task;
+        let rep = SweepReport {
+            model: "unit".into(),
+            items: 4,
+            seq_len: 64,
+            seed: 1,
+            threads: 1,
+            n_calib_tokens: 0,
+            wall_seconds: 0.0,
+            variants: vec![VariantResult {
+                label: "Full".into(),
+                m: 4,
+                params: 100,
+                ratio: 1.0,
+                merge_seconds: 0.0,
+                mean_layer_err: 0.0,
+                cells: vec![TaskCell {
+                    task: Task::Copy,
+                    acc: crate::eval::Accuracy { correct: 2, total: 4 },
+                    mean_correct_lp: -1.0,
+                }],
+            }],
+        };
+        let md = crate::exp::tables::sweep_table(&rep).render();
+        assert!(md.contains("Full"), "{md}");
+        assert!(md.contains("50.00"), "{md}");
+        assert_eq!(md.lines().count(), 3, "{md}");
+        // per-process dir: concurrent test runs must not race on the files
+        let dir = std::env::temp_dir()
+            .join(format!("mergemoe_sweep_report_test_{}", std::process::id()));
+        let path = save_sweep(&dir, &rep).unwrap();
+        let back = Json::parse_file(&path).unwrap();
+        assert_eq!(back.get("model").unwrap().as_str().unwrap(), "unit");
+        assert!(dir.join("SWEEP_unit.md").exists());
+        std::fs::remove_file(&path).ok();
+        std::fs::remove_file(dir.join("SWEEP_unit.md")).ok();
     }
 }

@@ -118,6 +118,42 @@ fn comparison_table(ctx: &Ctx, spec: &TableSpec) -> Result<()> {
     save(ctx, spec.name, Json::Obj(records.into_iter().map(|(k, v)| (k, v)).collect()))
 }
 
+/// The accuracy-vs-ratio table of an evaluation sweep: one row per variant
+/// (Full first, then each method at each compression ratio), one column per
+/// task plus the mean — the same layout Tables 1–3 print, generalized over
+/// ratios. `exp::report::save_sweep` persists its [`TablePrinter::render`]
+/// as `SWEEP_<model>.md`.
+pub fn sweep_table(rep: &crate::eval::sweep::SweepReport) -> TablePrinter {
+    let mut headers = vec![
+        "Method".to_string(),
+        "m".to_string(),
+        "Params".to_string(),
+        "Ratio".to_string(),
+    ];
+    if let Some(first) = rep.variants.first() {
+        headers.extend(
+            first
+                .cells
+                .iter()
+                .map(|c| format!("{} ({})", c.task.paper_name(), c.task.name())),
+        );
+    }
+    headers.push("Mean".to_string());
+    let mut t = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+    for v in &rep.variants {
+        let mut row = vec![
+            v.label.clone(),
+            format!("{}", v.m),
+            fmt_params(v.params),
+            format!("{:.1}%", 100.0 * v.ratio),
+        ];
+        row.extend(v.cells.iter().map(|c| format!("{:.2}", c.acc.percent())));
+        row.push(format!("{:.2}", v.mean_percent()));
+        t.row(row);
+    }
+    t
+}
+
 /// Table 4 — cross-dataset generalization of the calibration source
 /// (`beta`): merge with samples from a single task, evaluate on all.
 pub fn table4(ctx: &Ctx) -> Result<()> {

@@ -62,6 +62,28 @@
 //! (`Workspace::experts`, `Workspace::panels`) instead. Thin allocating
 //! wrappers (`forward`, `moe_forward`, …) keep the historical signatures
 //! and are bit-identical (`tests/workspace_reuse.rs`).
+//!
+//! ## Evaluation sweeps
+//!
+//! The paper's headline claim is quality-at-ratio, so the repo reproduces
+//! its comparison tables in one command: `mergemoe sweep` (backed by
+//! [`eval::sweep::run_sweep`]) evaluates the whole
+//! {method × ratio × task} grid — e.g.
+//!
+//! ```text
+//! mergemoe sweep --model beta --methods average,msmoe,mergemoe --ms 6,8 \
+//!                --tasks copy,parity,markov --items 100
+//! ```
+//!
+//! tokenizes each task once, captures calibration activations once,
+//! compresses once per (method, ratio) via the pipeline, then fans the
+//! independent (model, task) cells across the worker pool — one forked
+//! engine + one `EvalScratch` per lane (workspaces are never shared across
+//! threads), with the scorer on the zero-alloc `Engine::logits_ws` path.
+//! Results are bit-identical at every thread count
+//! (`tests/eval_consistency.rs`) and land as an accuracy-vs-ratio markdown
+//! table plus machine-readable `SWEEP_<model>.json` under
+//! `artifacts/reports/`.
 //! * [`io`]      — NPY/NPZ interchange with the build-time trainer.
 //! * [`config`]  — artifact manifest + model configurations.
 //! * [`model`]   — weights and the native reference forward engine.
@@ -69,7 +91,8 @@
 //! * [`merge`]   — the contribution: MergeMoE + M-SMoE / Average / ZipIt
 //!   baselines and the Table-5 output-merge oracle.
 //! * [`calib`]   — calibration sample capture.
-//! * [`eval`]    — the seven synthetic multiple-choice tasks and the scorer.
+//! * [`eval`]    — the seven synthetic multiple-choice tasks, the
+//!   workspace-backed scorer, and the `eval::sweep` comparison grid.
 //! * [`runtime`] — PJRT client wrapper, executable cache, shape buckets.
 //! * [`coordinator`] — batcher, scoring server, compression pipeline, metrics.
 //! * [`bench`]   — criterion-style benchmark harness (criterion unavailable).

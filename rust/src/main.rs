@@ -4,6 +4,8 @@
 //!   repro     regenerate a paper table/figure      (mergemoe repro --exp table2)
 //!   compress  run the compression pipeline         (mergemoe compress --model beta --m 6)
 //!   eval      evaluate a model on the task suite   (mergemoe eval --model beta)
+//!   sweep     evaluate the whole method × ratio ×  (mergemoe sweep --model beta
+//!             task comparison grid in one run          --methods average,msmoe,mergemoe --ms 6,8)
 //!   serve     run the batched scoring server demo  (mergemoe serve --model beta)
 //!   stats     dump expert usage frequencies        (mergemoe stats --model beta)
 //!   selfcheck cross-check native vs pjrt engines   (mergemoe selfcheck --model beta)
@@ -19,8 +21,10 @@ use anyhow::{bail, Context, Result};
 use mergemoe::calib;
 use mergemoe::coordinator::{compress, CompressSpec, ScoringServer, ServerConfig};
 use mergemoe::eval::tasks::{Task, ALL_TASKS};
+use mergemoe::eval::{run_sweep, SweepSpec};
 use mergemoe::exp::{self, Ctx, EngineSel};
-use mergemoe::merge::Algorithm;
+use mergemoe::merge::{Algorithm, NativeGram};
+use mergemoe::model::ModelWeights;
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
 use mergemoe::util::cli::Args;
 use mergemoe::util::rng::Rng;
@@ -35,7 +39,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: mergemoe <repro|compress|eval|serve|stats|selfcheck> [flags]\n\
+    "usage: mergemoe <repro|compress|eval|sweep|serve|stats|selfcheck> [flags]\n\
      common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
                    --threads N (worker threads; default: MERGEMOE_THREADS env\n\
                    or all cores; 1 = fully serial)\n\
@@ -43,13 +47,19 @@ fn usage() -> &'static str {
      compress:  --model NAME --layers 2,3 --m M --alg mergemoe|msmoe|average|zipit|oracle\n\
                 [--calib-seqs N] [--calib-tasks t1,t2] [--out FILE.npz]\n\
      eval:      --model NAME [--compressed FILE.npz] [--tasks t1,t2]\n\
+     sweep:     [--model NAME] [--methods m1,m2,..] [--ms M1,M2,..] [--tasks t1,t2]\n\
+                [--layers l1,l2] [--items N] [--batch N] [--calib-seqs N]\n\
+                [--calib-tasks t1,t2] [--no-full]\n\
+                evaluates every {method x ratio x task} cell in one run and\n\
+                writes SWEEP_<model>.json + .md under <artifacts>/reports\n\
+                (falls back to a synthetic model when no artifacts exist)\n\
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
      stats:     --model NAME [--calib-seqs N]\n\
      selfcheck: --model NAME"
 }
 
 fn run() -> Result<()> {
-    let args = Args::from_env(&["monolith", "pjrt-gram", "help"])?;
+    let args = Args::from_env(&["monolith", "pjrt-gram", "no-full", "help"])?;
     if args.has("help") || args.subcommand.is_none() {
         println!("{}", usage());
         return Ok(());
@@ -63,6 +73,11 @@ fn run() -> Result<()> {
         info!("compute: {threads} worker threads");
     }
     let engine = EngineSel::parse(args.get_or("engine", "pjrt"))?;
+    if args.subcommand.as_deref() == Some("sweep") {
+        // sweeps run even on a bare checkout (synthetic-model fallback), so
+        // they must not require the manifest that Ctx::new loads
+        return cmd_sweep(&artifacts, engine, &args);
+    }
     let mut ctx = Ctx::new(artifacts.clone(), engine)?;
     ctx.items = args.usize("items", ctx.items)?;
     ctx.batch = args.usize("batch", ctx.batch)?;
@@ -157,6 +172,77 @@ fn cmd_eval(ctx: &mut Ctx, args: &Args) -> Result<()> {
     let mean: f64 = accs.values().map(|a| a.percent()).sum::<f64>() / accs.len() as f64;
     println!("mean     {mean:>6.2}%   [{} items/task, engine={}, {:.1}s]",
              ctx.items, engine.name(), t0.elapsed().as_secs_f64());
+    Ok(())
+}
+
+fn cmd_sweep(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "beta").to_string();
+    // Artifacts are optional here: a bare checkout falls back to a synthetic
+    // model of the published shape (the benches' fallback), so the
+    // comparison grid always runs.
+    let ctx = match Ctx::new(artifacts.to_path_buf(), engine_sel) {
+        Ok(mut c) => {
+            c.pjrt_gram = args.has("pjrt-gram");
+            Some(c)
+        }
+        Err(e) => {
+            info!(
+                "no artifacts ({e:#}); sweeping a synthetic {model_name}-shaped \
+                 model on the native engine"
+            );
+            None
+        }
+    };
+    let (model, seq_len, mut engine): (ModelWeights, usize, Box<dyn Engine>) = match &ctx {
+        Some(c) => (c.load_model(&model_name)?, c.manifest.seq_len, c.make_engine()?),
+        None => {
+            let bm = mergemoe::bench::load_or_synth(&model_name);
+            (bm.model, bm.seq_len, Box::new(NativeEngine))
+        }
+    };
+    let n = model.cfg.n_experts;
+    let mut default_targets = vec![(n / 2).max(1), (2 * n / 3).max(1)];
+    default_targets.dedup();
+    let targets = args.usize_list("ms", &default_targets)?;
+    let mut methods = Vec::new();
+    for name in args.list("methods", &["average", "zipit", "msmoe", "mergemoe"]) {
+        methods.push(
+            Algorithm::from_name(&name).with_context(|| format!("unknown method {name:?}"))?,
+        );
+    }
+    let tasks = parse_tasks(args, "tasks")?.unwrap_or_else(|| ALL_TASKS.to_vec());
+    let all_layers: Vec<usize> = (0..model.cfg.n_layers).collect();
+    let layers = parse_layers(args, &all_layers)?;
+    let mut spec = SweepSpec::new(methods, targets, tasks, layers);
+    spec.items = args.usize("items", 50)?;
+    spec.batch = args.usize("batch", 32)?;
+    spec.seq_len = seq_len;
+    spec.n_calib_seqs = args.usize("calib-seqs", 48)?;
+    spec.calib_tasks = parse_tasks(args, "calib-tasks")?;
+    spec.seed = args.usize("seed", 2026)? as u64;
+    spec.include_full = !args.has("no-full");
+    info!(
+        "sweep: {} methods x {} ratios x {} tasks on {model_name} ({} items/task)",
+        spec.methods.len(),
+        spec.targets.len(),
+        spec.tasks.len(),
+        spec.items
+    );
+    // Gram backend: honor --pjrt-gram exactly like `compress` does (routes
+    // the MergeMoE solves through the pallas artifact when artifacts exist).
+    let mut gram = match &ctx {
+        Some(c) => c.make_gram(&model_name)?,
+        None => exp::GramBox::Native(NativeGram),
+    };
+    let rep = run_sweep(&model, &spec, &mut gram.as_backend(), engine.as_mut())?;
+    println!(
+        "\nsweep: model={model_name} layers={:?} targets={:?} ({} items/task, engine={}, \
+         {} threads, {:.1}s)",
+        spec.layers, spec.targets, spec.items, engine.name(), rep.threads, rep.wall_seconds
+    );
+    exp::tables::sweep_table(&rep).print();
+    let path = exp::report::save_sweep(&artifacts.join("reports"), &rep)?;
+    println!("[sweep report saved to {} (+ .md)]", path.display());
     Ok(())
 }
 

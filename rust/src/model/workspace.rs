@@ -87,6 +87,32 @@ impl PanelScratch {
     }
 }
 
+/// Per-lane scorer scratch: the forward-pass arena plus the logits and
+/// per-option score buffers of the evaluation hot path
+/// (`eval::scorer::score_prepared_ws`). Ownership follows the same rule as
+/// [`Workspace`]: **one scratch per sweep lane, never shared across
+/// threads** — `eval::sweep` hands each pool lane exactly one of these for
+/// its whole block of (model, task) cells. A warm scratch scores chunk
+/// after chunk with zero heap allocations (`benches/bench_forward.rs`
+/// probes this path with the counting allocator).
+#[derive(Default)]
+pub struct EvalScratch {
+    /// Forward-pass arena ([`crate::runtime::Engine::logits_ws`] draws every
+    /// intermediate from here; `ws.lps` holds the per-token log-probs).
+    pub ws: Workspace,
+    /// Logits of the last scored chunk: (chunk·S, V).
+    pub logits: Tensor,
+    /// Mean option log-probabilities of the last scored item set, two per
+    /// item, option-interleaved `[item0-opt0, item0-opt1, item1-opt0, …]`.
+    pub scores: Vec<f64>,
+}
+
+impl EvalScratch {
+    pub fn new() -> EvalScratch {
+        EvalScratch::default()
+    }
+}
+
 /// The scratch arena for one worker's forward/merge hot path. All fields
 /// are public by design: the forward pass borrows disjoint fields
 /// simultaneously (e.g. reading `q`/`k`/`v` while writing `ctx`), which

@@ -32,6 +32,16 @@ pub trait Engine {
         Ok(())
     }
 
+    /// An independent engine instance usable from a worker thread, if the
+    /// backend supports concurrent use (mirrors
+    /// [`crate::merge::GramBackend::fork`]). `Some` unlocks the parallel
+    /// (model, task) cell fan-out in [`crate::eval::sweep`]; the default
+    /// `None` keeps every cell on the calling thread — the PJRT engine owns
+    /// non-shareable device state, so it stays serial.
+    fn fork(&self) -> Option<Box<dyn Engine + Send>> {
+        None
+    }
+
     fn name(&self) -> &'static str;
 }
 
@@ -51,6 +61,10 @@ impl Engine for Box<dyn Engine> {
         out: &mut Tensor,
     ) -> Result<()> {
         (**self).logits_ws(model, tokens, b, s, ws, out)
+    }
+
+    fn fork(&self) -> Option<Box<dyn Engine + Send>> {
+        (**self).fork()
     }
 
     fn name(&self) -> &'static str {
@@ -79,6 +93,11 @@ impl Engine for NativeEngine {
         native::forward_ws(model, tokens, b, s, None, ws, out)
     }
 
+    fn fork(&self) -> Option<Box<dyn Engine + Send>> {
+        // Stateless: forked instances unlock the parallel sweep fan-out.
+        Some(Box::new(NativeEngine))
+    }
+
     fn name(&self) -> &'static str {
         "native"
     }
@@ -95,6 +114,14 @@ mod tests {
         let tokens: Vec<i32> = (0..2 * 64).map(|i| (i % 47) as i32).collect();
         let logits = NativeEngine.logits(&m, &tokens, 2, 64).unwrap();
         assert_eq!(logits.shape(), &[128, 47]);
+    }
+
+    #[test]
+    fn native_engine_forks_boxed_forwards() {
+        let forked = NativeEngine.fork();
+        assert!(forked.is_some());
+        let boxed: Box<dyn Engine> = Box::new(NativeEngine);
+        assert!(boxed.fork().is_some(), "Box<dyn Engine> must forward fork");
     }
 
     #[test]

@@ -98,6 +98,22 @@ impl Args {
         Ok(crate::util::par::max_threads())
     }
 
+    /// Comma-separated integer list flag, e.g. `--ms 6,8` (the sweep's
+    /// target expert counts).
+    pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(key) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|s| {
+                    s.trim()
+                        .parse::<usize>()
+                        .with_context(|| format!("--{key} expects integers, got {v:?}"))
+                })
+                .collect(),
+        }
+    }
+
     /// Comma-separated list flag, e.g. `--tasks copy,rev`.
     pub fn list(&self, key: &str, default: &[&str]) -> Vec<String> {
         match self.get(key) {
@@ -159,5 +175,14 @@ mod tests {
     fn list_flag() {
         let a = Args::parse(&sv(&["run", "--tasks", "copy, rev,sort"]), &[]).unwrap();
         assert_eq!(a.list("tasks", &[]), vec!["copy", "rev", "sort"]);
+    }
+
+    #[test]
+    fn usize_list_flag() {
+        let a = Args::parse(&sv(&["run", "--ms", "6, 8"]), &[]).unwrap();
+        assert_eq!(a.usize_list("ms", &[]).unwrap(), vec![6, 8]);
+        assert_eq!(a.usize_list("absent", &[4, 2]).unwrap(), vec![4, 2]);
+        let bad = Args::parse(&sv(&["run", "--ms", "6,x"]), &[]).unwrap();
+        assert!(bad.usize_list("ms", &[]).is_err());
     }
 }

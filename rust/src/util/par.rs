@@ -525,6 +525,37 @@ where
         .collect()
 }
 
+/// Fan `items` across at most `slots.len()` lanes: contiguous item blocks
+/// are paired one-to-one with scratch slots (the lockstep
+/// [`par_chunks2_mut_if`] underneath), so each lane owns exactly one slot
+/// for its whole block — the one-workspace-per-lane ownership rule the
+/// evaluation sweep runs on. `f(i, item, slot)` sees every item exactly
+/// once, with `i` the item's global index; block boundaries depend only on
+/// `items.len()` and `slots.len()`, never on scheduling, and a slot's state
+/// must not affect results (it is scratch), so outputs are deterministic.
+/// With `parallel == false`, one slot, or from inside a nested region,
+/// everything runs serially.
+pub fn par_items_with_slots<T, S, F>(parallel: bool, items: &mut [T], slots: &mut [S], f: F)
+where
+    T: Send,
+    S: Send,
+    F: Fn(usize, &mut T, &mut S) + Sync,
+{
+    let n = items.len();
+    if n == 0 {
+        return;
+    }
+    assert!(!slots.is_empty(), "par_items_with_slots: need at least one slot");
+    let lanes = slots.len().min(n);
+    let per = (n + lanes - 1) / lanes;
+    let n_blocks = (n + per - 1) / per;
+    par_chunks2_mut_if(parallel, items, per, &mut slots[..n_blocks], 1, |bi, chunk, slot| {
+        for (ci, item) in chunk.iter_mut().enumerate() {
+            f(bi * per + ci, item, &mut slot[0]);
+        }
+    });
+}
+
 /// Map `f(index, &item)` over a slice in parallel, preserving order.
 pub fn par_map<T, R, F>(items: &[T], f: F) -> Vec<R>
 where
@@ -612,6 +643,37 @@ mod tests {
         });
         assert_eq!(a[24], 2);
         assert_eq!(b[6], 2);
+    }
+
+    #[test]
+    fn par_items_with_slots_visits_every_item_once() {
+        for force in [true, false] {
+            for (n, n_slots) in [(10usize, 3usize), (3, 8), (1, 1), (7, 7), (64, 4)] {
+                let mut items = vec![0u32; n];
+                // each slot stamps its identity so we can verify block-wise
+                // pairing: a slot is touched by one contiguous block only
+                let mut slots: Vec<u32> = (1..=n_slots as u32).collect();
+                par_items_with_slots(force, &mut items, &mut slots, |i, item, slot| {
+                    *item = (i as u32 + 1) * 1000 + *slot;
+                });
+                let lanes = n_slots.min(n);
+                let per = (n + lanes - 1) / lanes;
+                for (i, v) in items.iter().enumerate() {
+                    let expect_slot = (i / per) as u32 + 1;
+                    assert_eq!(
+                        *v,
+                        (i as u32 + 1) * 1000 + expect_slot,
+                        "force={force} n={n} slots={n_slots} item {i}"
+                    );
+                }
+            }
+            // empty input is a no-op
+            let mut none: Vec<u32> = Vec::new();
+            let mut slots = vec![0u32; 2];
+            par_items_with_slots(force, &mut none, &mut slots, |_, _, _| {
+                panic!("must not be called")
+            });
+        }
     }
 
     #[test]

@@ -1,0 +1,245 @@
+//! Scorer + sweep consistency (mirrors `tests/workspace_reuse.rs` and
+//! `tests/par_consistency.rs` methodology for the evaluation stack):
+//!
+//! * the workspace-backed scorer is **bit-identical** to the seed repo's
+//!   allocating path (reproduced verbatim below);
+//! * scoring and whole sweeps are bit-identical across `--threads` 1/2/8
+//!   and across repeated runs on a warm scratch;
+//! * padding the sequence length (64 → 96) changes neither accuracy nor
+//!   any per-option score;
+//! * the compression-quality ordering — oracle ≥ mergemoe ≥ average mean
+//!   correct-option log-likelihood on calibration-matched tasks — is a
+//!   tier-1 regression gate instead of a silent science break.
+
+use std::sync::Mutex;
+
+use mergemoe::config::ModelConfig;
+use mergemoe::eval::scorer::{score_items_scored, score_prepared_ws, PreparedItems};
+use mergemoe::eval::sweep::{run_sweep, SweepReport, SweepSpec};
+use mergemoe::eval::tasks::{gen_items, Task, TaskItem};
+use mergemoe::merge::{Algorithm, NativeGram};
+use mergemoe::model::native::target_logprobs;
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::workspace::EvalScratch;
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine};
+use mergemoe::tensor::Tensor;
+use mergemoe::util::par;
+
+/// Serializes tests that sweep the global thread knob.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+const SWEEP_THREADS: [usize; 3] = [1, 2, 8];
+
+/// Run `f` under an `n`-thread budget, restoring the knob it found (safe
+/// to use bare — no caller-side save/restore bookkeeping needed).
+fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    let prev = par::max_threads();
+    par::set_max_threads(n);
+    let out = f();
+    par::set_max_threads(prev);
+    out
+}
+
+fn test_model(e: usize, shared: bool, seed: u64) -> ModelWeights {
+    let cfg = ModelConfig {
+        name: "evalc".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: e,
+        top_k: 2,
+        shared_expert: shared,
+        n_params: 0,
+        merge_targets: vec![e / 2],
+    };
+    synth_model(&cfg, seed)
+}
+
+/// The seed repo's scorer, reproduced verbatim: allocating engine path,
+/// per-item padded Vecs, round-*down* even chunking. The workspace rework
+/// must match it bit for bit (use an even `batch`; odd batches only differ
+/// in chunking, which the scorer's own unit tests prove is score-neutral).
+fn seed_reference_scores(
+    model: &ModelWeights,
+    items: &[TaskItem],
+    seq_len: usize,
+    batch: usize,
+) -> Vec<f64> {
+    let pad = mergemoe::eval::tasks::encode("\n")[0];
+    let mut seqs: Vec<(Vec<i32>, usize, usize)> = Vec::new();
+    for item in items {
+        for opt in 0..2 {
+            let toks = item.full_tokens(opt);
+            let plen = item.prompt_len();
+            let olen = toks.len() - plen;
+            let mut padded = toks;
+            padded.resize(seq_len, pad);
+            seqs.push((padded, plen, olen));
+        }
+    }
+    let mut scores = Vec::new();
+    for chunk in seqs.chunks(batch.max(2) / 2 * 2) {
+        let b = chunk.len();
+        let mut tokens = Vec::with_capacity(b * seq_len);
+        for (t, _, _) in chunk {
+            tokens.extend_from_slice(t);
+        }
+        let logits = NativeEngine.logits(model, &tokens, b, seq_len).unwrap();
+        let lps = target_logprobs(&logits, &tokens, b, seq_len);
+        for (bi, (_, plen, olen)) in chunk.iter().enumerate() {
+            let mut sum = 0.0f64;
+            for si in (*plen - 1)..(*plen + *olen - 1) {
+                sum += lps[bi * seq_len + si] as f64;
+            }
+            scores.push(sum / *olen as f64);
+        }
+    }
+    scores
+}
+
+#[test]
+fn ws_scorer_bit_identical_to_seed_allocating_path() {
+    for (e, shared, seed, task) in [
+        (4usize, true, 0xA71u64, Task::Copy),
+        (6, false, 0xA72, Task::Markov),
+    ] {
+        let model = test_model(e, shared, seed);
+        let items = gen_items(task, 30, 3);
+        let want = seed_reference_scores(&model, &items, 64, 16);
+        let (acc, got) =
+            score_items_scored(&mut NativeEngine, &model, &items, 64, 16).unwrap();
+        assert_eq!(got, want, "{task:?}");
+        let mut correct = 0;
+        for (i, item) in items.iter().enumerate() {
+            let pick = if want[2 * i] >= want[2 * i + 1] { 0 } else { 1 };
+            if pick == item.correct {
+                correct += 1;
+            }
+        }
+        assert_eq!(acc.correct, correct, "{task:?}");
+        assert_eq!(acc.total, items.len(), "{task:?}");
+    }
+}
+
+#[test]
+fn warm_scratch_rescoring_bit_identical_across_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let model = test_model(4, false, 0xE7A1);
+    let items = gen_items(Task::Maj, 24, 7);
+    let mut prep = PreparedItems::new();
+    prep.prepare(&items, 64).unwrap();
+    let (ref_acc, ref_scores) = with_threads(1, || {
+        let mut es = EvalScratch::new();
+        let acc = score_prepared_ws(&mut NativeEngine, &model, &prep, 8, &mut es).unwrap();
+        (acc, es.scores.clone())
+    });
+    // one scratch carried across every thread count and round: reuse must
+    // be numerically invisible (the workspace_reuse methodology)
+    let mut es = EvalScratch::new();
+    for t in SWEEP_THREADS {
+        for round in 0..3 {
+            let acc = with_threads(t, || {
+                score_prepared_ws(&mut NativeEngine, &model, &prep, 8, &mut es).unwrap()
+            });
+            assert_eq!(acc, ref_acc, "threads {t} round {round}");
+            assert_eq!(es.scores, ref_scores, "threads {t} round {round}");
+        }
+    }
+}
+
+fn assert_reports_identical(a: &SweepReport, b: &SweepReport, what: &str) {
+    assert_eq!(a.variants.len(), b.variants.len(), "{what}");
+    for (va, vb) in a.variants.iter().zip(&b.variants) {
+        assert_eq!(va.label, vb.label, "{what}");
+        assert_eq!(va.m, vb.m, "{what}");
+        assert_eq!(va.params, vb.params, "{what}: {}", va.label);
+        for (ca, cb) in va.cells.iter().zip(&vb.cells) {
+            assert_eq!(
+                ca.acc, cb.acc,
+                "{what}: {} m={} {}", va.label, va.m, ca.task.name()
+            );
+            assert_eq!(
+                ca.mean_correct_lp.to_bits(),
+                cb.mean_correct_lp.to_bits(),
+                "{what}: {} m={} {}", va.label, va.m, ca.task.name()
+            );
+        }
+    }
+}
+
+#[test]
+fn sweep_bit_identical_across_thread_counts_and_reruns() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let model = test_model(4, true, 0x5EED1);
+    let mut spec = SweepSpec::new(
+        vec![Algorithm::Average, Algorithm::MergeMoe],
+        vec![2],
+        vec![Task::Copy, Task::Parity],
+        vec![0, 1],
+    );
+    spec.items = 12;
+    spec.n_calib_seqs = 6;
+    spec.batch = 8;
+    let run = || run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+    let reference = with_threads(1, run);
+    for t in SWEEP_THREADS {
+        for round in 0..2 {
+            let rep = with_threads(t, run);
+            assert_reports_identical(&reference, &rep, &format!("threads {t} round {round}"));
+        }
+    }
+}
+
+#[test]
+fn padding_invariance_seq_64_vs_96() {
+    // the scorer module doc's promise at bucket scale: growing seq_len from
+    // 64 to 96 (pad-only tail; position table zero-extended) changes
+    // neither accuracy nor any per-option score — causal attention keeps
+    // every scored position independent of trailing pad
+    let mut model = test_model(4, true, 0x9AD);
+    let d = model.cfg.d_model;
+    let mut pos = model.pos_emb.data().to_vec();
+    pos.resize(96 * d, 0.0);
+    model.pos_emb = Tensor::from_vec(&[96, d], pos).unwrap();
+    let items = gen_items(Task::Arith, 30, 9);
+    let (acc64, s64) = score_items_scored(&mut NativeEngine, &model, &items, 64, 16).unwrap();
+    let (acc96, s96) = score_items_scored(&mut NativeEngine, &model, &items, 96, 16).unwrap();
+    assert_eq!(acc64, acc96);
+    assert_eq!(s64, s96);
+}
+
+#[test]
+fn method_ordering_on_calibration_distribution() {
+    // Compression-quality regression gate: on calibration-matched tasks the
+    // mean correct-option log-likelihood must order
+    // oracle ≥ mergemoe ≥ average (tolerance-banded, seeded). The ordering
+    // holds in expectation because a larger merge output error is a larger
+    // logit perturbation, and E[logit - logsumexp(logits + ε)] falls with
+    // the perturbation's size (Jensen on the convex logsumexp).
+    let model = test_model(8, false, 0x0DE2);
+    let tasks = vec![Task::Copy, Task::Parity, Task::Markov];
+    let mut spec = SweepSpec::new(
+        vec![Algorithm::Oracle, Algorithm::MergeMoe, Algorithm::Average],
+        vec![3],
+        tasks.clone(),
+        vec![0, 1],
+    );
+    spec.items = 60;
+    spec.n_calib_seqs = 24;
+    spec.batch = 32;
+    spec.calib_tasks = Some(tasks);
+    spec.seed = 20260;
+    let rep = run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+    let lp = |label: &str| rep.variant(label, 3).expect(label).mean_correct_lp();
+    let (or, mm, av) = (lp("Oracle"), lp("MergeMoE"), lp("Average"));
+    assert!(or + 0.05 >= mm, "oracle {or} must be >= mergemoe {mm} (band 0.05)");
+    assert!(mm + 0.05 >= av, "mergemoe {mm} must be >= average {av} (band 0.05)");
+    // and the uncompressed model sits at or above the oracle band
+    let full = rep
+        .variant("Full", model.cfg.n_experts)
+        .expect("full row")
+        .mean_correct_lp();
+    assert!(full + 0.05 >= or, "full {full} must be >= oracle {or} (band 0.05)");
+}
