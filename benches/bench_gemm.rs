@@ -1,0 +1,102 @@
+//! GEMM microkernel benchmark: the kernel layer's headline numbers. Sweeps
+//! square shapes {64..1024}² across {scalar, SIMD} kernels × {1, N}
+//! threads for both hot GEMM forms (`a @ b` and `a @ bᵀ`), reports GFLOP/s
+//! (items = flops), and prints the single-thread SIMD-over-scalar speedup
+//! at 512³ — the PR acceptance number. Emits `BENCH_gemm.json`.
+//!
+//! Kernel forcing uses `kernel::set_kernel`, the bench/test override of the
+//! per-process dispatch (exactly like `par::set_max_threads` for threads);
+//! the process is restored to its detected kernel before the report is
+//! written.
+
+use mergemoe::bench::{self, Bencher};
+use mergemoe::kernel::{self, Kind};
+use mergemoe::tensor::{ops, Tensor};
+use mergemoe::util::par;
+use mergemoe::util::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    let threads = par::max_threads();
+    let detected = kernel::active();
+    let quick = bench::quick_mode();
+    let sizes: Vec<usize> =
+        if quick { vec![64, 256, 512] } else { vec![64, 128, 256, 512, 1024] };
+    let kinds: Vec<Kind> = if detected == Kind::Scalar {
+        // active() == Scalar either because the hardware has no SIMD
+        // family or because MERGEMOE_KERNEL forced a non-auto choice —
+        // say which (empty/"auto" is not a force, mirroring resolve()).
+        let forced = std::env::var("MERGEMOE_KERNEL")
+            .map(|v| !matches!(v.trim().to_ascii_lowercase().as_str(), "" | "auto"))
+            .unwrap_or(false);
+        if forced {
+            println!("bench_gemm: MERGEMOE_KERNEL forces scalar — skipping the SIMD half");
+        } else {
+            println!("bench_gemm: no SIMD kernel on this host — scalar only");
+        }
+        vec![Kind::Scalar]
+    } else {
+        vec![Kind::Scalar, detected]
+    };
+    println!(
+        "bench_gemm: detected kernel {}, {threads} threads, sizes {sizes:?}",
+        detected.name()
+    );
+
+    let b = Bencher::from_env();
+    let mut out = Vec::new();
+    let mut rng = Rng::new(0x6E44);
+    let max = *sizes.iter().max().unwrap();
+    // one operand set at the largest size; smaller shapes slice its prefix
+    let a = Tensor::randn(&[max, max], 1.0, &mut rng);
+    let bt = Tensor::randn(&[max, max], 1.0, &mut rng);
+    for &s in &sizes {
+        // square (s, s) operands sliced out of the shared buffers
+        let mut asq = Tensor::zeros(&[s, s]);
+        let mut bsq = Tensor::zeros(&[s, s]);
+        for i in 0..s {
+            asq.row_mut(i).copy_from_slice(&a.row(i)[..s]);
+            bsq.row_mut(i).copy_from_slice(&bt.row(i)[..s]);
+        }
+        let flops = 2.0 * (s as f64).powi(3);
+        let mut c = Tensor::zeros(&[s, s]);
+        let tset: Vec<usize> = if threads > 1 { vec![1, threads] } else { vec![1] };
+        for &kind in &kinds {
+            kernel::set_kernel(kind);
+            for &t in &tset {
+                par::set_max_threads(t);
+                let tag = |op: &str| format!("gemm/{op}/{s}/{}/t{t}", kind.name());
+                out.push(b.run_items(&tag("nn"), flops, || {
+                    ops::matmul_into(&asq, &bsq, &mut c).unwrap()
+                }));
+                out.push(b.run_items(&tag("nt"), flops, || {
+                    ops::matmul_bt_into(&asq, &bsq, &mut c).unwrap()
+                }));
+            }
+        }
+        par::set_max_threads(threads);
+    }
+    kernel::set_kernel(detected);
+
+    println!("\n=== bench_gemm (items = flops; items/s = FLOP/s) ===");
+    for s in &out {
+        println!("{}", s.report());
+    }
+    if kinds.len() > 1 {
+        for op in ["nn", "nt"] {
+            let scalar = out.iter().find(|x| x.name == format!("gemm/{op}/512/scalar/t1"));
+            let simd = out
+                .iter()
+                .find(|x| x.name == format!("gemm/{op}/512/{}/t1", detected.name()));
+            if let (Some(sc), Some(si)) = (scalar, simd) {
+                println!(
+                    "speedup 512³ {op}: {} {:.2}x over scalar (single thread)",
+                    detected.name(),
+                    sc.mean.as_secs_f64() / si.mean.as_secs_f64()
+                );
+            }
+        }
+    }
+    let path = bench::write_report("gemm", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

@@ -27,18 +27,24 @@ fi
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     # Perf trajectory: one quick-mode bench on every run, diffed against the
     # committed baseline so regressions surface in CI output, not archaeology.
-    echo "==> quick bench (bench_par + bench_forward)"
+    echo "==> quick bench (bench_par + bench_gemm + bench_forward)"
     REPORT_DIR=target/bench-reports
     mkdir -p "$REPORT_DIR"
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_par
+    # Kernel trajectory: scalar-vs-SIMD GEMM sweep, so the per-core win (or
+    # a regression in it) lands in every PR's perf report.
+    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_gemm
     # Zero-alloc gate: the counting-allocator probes (serving loop + sweep
     # scorer path) hard-fail the run on any steady-state allocation.
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" MERGEMOE_STRICT_ALLOC=1 \
         cargo bench --bench bench_forward
 
     if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
-        echo "==> bench-diff vs benches/baseline"
-        cargo run --release --bin bench_diff -- benches/baseline "$REPORT_DIR"
+        # --max-regress makes the diff a gate: >15% p50 regression on any
+        # benchmark (baseline p50 >= 100µs; smaller entries are quick-mode
+        # noise) exits nonzero instead of only printing.
+        echo "==> bench-diff vs benches/baseline (gate: 15% p50 regression)"
+        cargo run --release --bin bench_diff -- --max-regress 15 benches/baseline "$REPORT_DIR"
     else
         # Reference-runner path: the first run on a machine captures its
         # reports as the pinned baseline; commit benches/baseline/*.json on

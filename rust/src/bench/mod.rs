@@ -88,12 +88,13 @@ impl Bencher {
                   budget: Duration::from_secs(2) }
     }
 
-    /// [`Bencher::quick`] when `MERGEMOE_BENCH_QUICK` is set (CI runs every
-    /// bench in quick mode on every PR), [`Bencher::default`] otherwise.
+    /// [`Bencher::quick`] when [`quick_mode`] is on (CI runs every bench in
+    /// quick mode on every PR), [`Bencher::default`] otherwise.
     pub fn from_env() -> Bencher {
-        match std::env::var("MERGEMOE_BENCH_QUICK") {
-            Ok(v) if !v.is_empty() && v != "0" => Bencher::quick(),
-            _ => Bencher::default(),
+        if quick_mode() {
+            Bencher::quick()
+        } else {
+            Bencher::default()
         }
     }
 
@@ -144,6 +145,17 @@ impl Bencher {
     }
 }
 
+/// Whether `MERGEMOE_BENCH_QUICK` requests the fast bench profile — the
+/// single definition of the truthiness rule, shared by
+/// [`Bencher::from_env`] and benches that also scale their *workload*
+/// (e.g. `bench_gemm`'s shape sweep) to the profile.
+pub fn quick_mode() -> bool {
+    match std::env::var("MERGEMOE_BENCH_QUICK") {
+        Ok(v) => !v.is_empty() && v != "0",
+        Err(_) => false,
+    }
+}
+
 /// A model resolved for benchmarking: trained artifacts when present, a
 /// synthetic stand-in of the same published shape otherwise.
 pub struct BenchModel {
@@ -184,12 +196,17 @@ pub fn load_or_synth(name: &str) -> BenchModel {
 }
 
 /// Write `BENCH_<name>.json` into `dir` with every summary plus the thread
-/// count the run used. Returns the path written.
+/// count and compute kernel the run used (so the bench-diff trajectory can
+/// tell kernel drift from real regressions). The kernel field records the
+/// process's *default dispatch* at write time; benches that deliberately
+/// force kernels per entry (`bench_gemm`) carry the real kernel in each
+/// entry's name. Returns the path written.
 pub fn write_report_to(dir: &Path, name: &str, summaries: &[Summary]) -> Result<PathBuf> {
     let path = dir.join(format!("BENCH_{name}.json"));
     let json = Json::obj(vec![
         ("bench", Json::str(name)),
         ("threads", Json::num(crate::util::par::max_threads() as f64)),
+        ("kernel", Json::str(crate::kernel::name())),
         ("results", Json::arr(summaries.iter().map(Summary::to_json))),
     ]);
     std::fs::write(&path, json.to_string())

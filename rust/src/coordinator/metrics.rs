@@ -125,12 +125,13 @@ impl ServerMetrics {
     pub fn report(&self) -> String {
         format!(
             "requests={} batches={} mean_batch={:.2} throughput={:.1} req/s \
-             latency: mean {:?} p50 {:?} p99 {:?} max {:?} \
+             kernel={} latency: mean {:?} p50 {:?} p99 {:?} max {:?} \
              (queue p50 {:?} p99 {:?}; batch compute p50 {:?} p99 {:?})",
             self.requests,
             self.batches,
             self.mean_batch_size(),
             self.throughput_rps(),
+            crate::kernel::name(),
             self.total_latency.mean(),
             self.total_latency.quantile(0.5),
             self.total_latency.quantile(0.99),

@@ -150,6 +150,11 @@ pub struct SweepReport {
     pub seed: u64,
     /// Thread budget the sweep ran under (results do not depend on it).
     pub threads: usize,
+    /// Compute kernel the sweep ran on (`scalar`/`avx2`/`neon`; scalar vs
+    /// SIMD results agree to tolerance, not bit-for-bit — recorded so
+    /// cross-machine report diffs can tell kernel drift from science
+    /// drift).
+    pub kernel: String,
     pub n_calib_tokens: usize,
     pub wall_seconds: f64,
     /// Full first (if requested), then method-major per target in spec
@@ -172,6 +177,7 @@ impl SweepReport {
             ("seq_len", Json::num(self.seq_len as f64)),
             ("seed", Json::num(self.seed as f64)),
             ("threads", Json::num(self.threads as f64)),
+            ("kernel", Json::str(&self.kernel)),
             ("n_calib_tokens", Json::num(self.n_calib_tokens as f64)),
             ("wall_seconds", Json::num(self.wall_seconds)),
             (
@@ -376,6 +382,7 @@ pub fn run_sweep(
         seq_len: spec.seq_len,
         seed: spec.seed,
         threads: par::max_threads(),
+        kernel: crate::kernel::name().to_string(),
         n_calib_tokens: calib.n_tokens(),
         wall_seconds: t0.elapsed().as_secs_f64(),
         variants: variants_out,

@@ -170,6 +170,7 @@ mod tests {
             seq_len: 64,
             seed: 1,
             threads: 1,
+            kernel: "scalar".into(),
             n_calib_tokens: 0,
             wall_seconds: 0.0,
             variants: vec![VariantResult {

@@ -1,0 +1,446 @@
+//! AVX2 + FMA microkernels (x86_64). 8-lane f32 FMA everywhere, 4-lane f64
+//! FMA for the triangular-solve dots.
+//!
+//! Every function is `unsafe` + `#[target_feature(enable = "avx2,fma")]`;
+//! the dispatcher in `kernel::mod` only reaches them after
+//! `is_x86_feature_detected!` has confirmed both features, so the only
+//! remaining obligations are the slice-shape contracts documented per
+//! function (all enforced by the `tensor::ops` wrappers).
+//!
+//! The same two invariants as the scalar family hold:
+//!
+//! * **Row independence** — each output row's instruction sequence depends
+//!   only on its own A row, the B operand and the shape.
+//! * **Grouping invariance** — a column dot is always `fma` over 8-wide
+//!   k-chunks in order, one horizontal sum, then the scalar k-tail —
+//!   identical whether the column sits in a multi-column group, a single
+//!   column, or a SYRK-truncated row.
+//!
+//! FMA contracts the multiply-add rounding step, so these kernels are *not*
+//! bit-identical to the scalar family — `tests/kernel_consistency.rs` pins
+//! the tolerance. Within this family, results are bit-identical across
+//! thread counts and row positions.
+
+#![allow(clippy::missing_safety_doc)]
+
+use core::arch::x86_64::*;
+
+use super::silu;
+
+/// Fixed-order horizontal sum of 8 lanes: (lo+hi) quad, then pairwise.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn hsum8(v: __m256) -> f32 {
+    let lo = _mm256_castps256_ps128(v);
+    let hi = _mm256_extractf128_ps(v, 1);
+    let s = _mm_add_ps(lo, hi);
+    let s = _mm_add_ps(s, _mm_movehl_ps(s, s));
+    let s = _mm_add_ss(s, _mm_shuffle_ps(s, s, 1));
+    _mm_cvtss_f32(s)
+}
+
+/// One column dot with the canonical sequence: 8-wide FMA chain, horizontal
+/// sum, scalar tail. Every multi-column group below replays exactly this
+/// per-column sequence.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot1(a: *const f32, b: *const f32, k: usize) -> f32 {
+    let mut acc = _mm256_setzero_ps();
+    let mut kk = 0;
+    while kk + 8 <= k {
+        acc = _mm256_fmadd_ps(_mm256_loadu_ps(a.add(kk)), _mm256_loadu_ps(b.add(kk)), acc);
+        kk += 8;
+    }
+    let mut s = hsum8(acc);
+    while kk < k {
+        s += *a.add(kk) * *b.add(kk);
+        kk += 1;
+    }
+    s
+}
+
+/// Four column dots sharing one stream of `arow` (4 independent 8-lane
+/// accumulators, one horizontal sum each, shared scalar k-tail). The single
+/// copy of this loop carries the grouping-invariance contract: per column
+/// it is exactly [`dot1`]'s sequence, and every `A @ Bᵀ` epilogue below
+/// reuses it verbatim.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+unsafe fn dot4(
+    a: *const f32,
+    b0: *const f32,
+    b1: *const f32,
+    b2: *const f32,
+    b3: *const f32,
+    k: usize,
+) -> (f32, f32, f32, f32) {
+    let mut c0 = _mm256_setzero_ps();
+    let mut c1 = _mm256_setzero_ps();
+    let mut c2 = _mm256_setzero_ps();
+    let mut c3 = _mm256_setzero_ps();
+    let mut kk = 0;
+    while kk + 8 <= k {
+        let av = _mm256_loadu_ps(a.add(kk));
+        c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b0.add(kk)), c0);
+        c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b1.add(kk)), c1);
+        c2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b2.add(kk)), c2);
+        c3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(b3.add(kk)), c3);
+        kk += 8;
+    }
+    let mut s0 = hsum8(c0);
+    let mut s1 = hsum8(c1);
+    let mut s2 = hsum8(c2);
+    let mut s3 = hsum8(c3);
+    while kk < k {
+        let av = *a.add(kk);
+        s0 += av * *b0.add(kk);
+        s1 += av * *b1.add(kk);
+        s2 += av * *b2.add(kk);
+        s3 += av * *b3.add(kk);
+        kk += 1;
+    }
+    (s0, s1, s2, s3)
+}
+
+/// `orow[j] = arow · b_j` for row-major `b` (n, k): 4 columns per pass
+/// share one stream of `arow`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn nt_row(arow: &[f32], bd: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let n = orow.len();
+    let ap = arow.as_ptr();
+    let bp = bd.as_ptr();
+    let mut j = 0;
+    while j + 4 <= n {
+        let (s0, s1, s2, s3) = dot4(
+            ap,
+            bp.add(j * k),
+            bp.add((j + 1) * k),
+            bp.add((j + 2) * k),
+            bp.add((j + 3) * k),
+            k,
+        );
+        orow[j] = s0;
+        orow[j + 1] = s1;
+        orow[j + 2] = s2;
+        orow[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        orow[j] = dot1(ap, bp.add(j * k), k);
+        j += 1;
+    }
+}
+
+/// [`nt_row`] with the scale-and-accumulate epilogue
+/// `orow[j] += alpha · dot`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn nt_row_scaled_add(arow: &[f32], bd: &[f32], alpha: f32, orow: &mut [f32]) {
+    let k = arow.len();
+    let n = orow.len();
+    let ap = arow.as_ptr();
+    let bp = bd.as_ptr();
+    let mut j = 0;
+    while j + 4 <= n {
+        let (s0, s1, s2, s3) = dot4(
+            ap,
+            bp.add(j * k),
+            bp.add((j + 1) * k),
+            bp.add((j + 2) * k),
+            bp.add((j + 3) * k),
+            k,
+        );
+        orow[j] += alpha * s0;
+        orow[j + 1] += alpha * s1;
+        orow[j + 2] += alpha * s2;
+        orow[j + 3] += alpha * s3;
+        j += 4;
+    }
+    while j < n {
+        orow[j] += alpha * dot1(ap, bp.add(j * k), k);
+        j += 1;
+    }
+}
+
+/// Fused SwiGLU row: `orow[j] = silu(arow · wg_j) · (arow · wu_j)`, two
+/// gate + two up columns per [`dot4`] pass sharing one stream of `arow`.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn nt_row_swiglu(arow: &[f32], wg: &[f32], wu: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let f = orow.len();
+    let ap = arow.as_ptr();
+    let gp = wg.as_ptr();
+    let up = wu.as_ptr();
+    let mut j = 0;
+    while j + 2 <= f {
+        let (sg0, sg1, su0, su1) = dot4(
+            ap,
+            gp.add(j * k),
+            gp.add((j + 1) * k),
+            up.add(j * k),
+            up.add((j + 1) * k),
+            k,
+        );
+        orow[j] = silu(sg0) * su0;
+        orow[j + 1] = silu(sg1) * su1;
+        j += 2;
+    }
+    while j < f {
+        let sg = dot1(ap, gp.add(j * k), k);
+        let su = dot1(ap, up.add(j * k), k);
+        orow[j] = silu(sg) * su;
+        j += 1;
+    }
+}
+
+/// One dense output row of `A @ B` (direct, unpacked): broadcast `a[kk]`,
+/// FMA into 32/8/scalar column tiles of the output row.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn nn_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+    let k = arow.len();
+    let ap = arow.as_ptr();
+    let bp = bd.as_ptr();
+    let op = orow.as_mut_ptr();
+    let mut j = 0;
+    while j + 32 <= n {
+        let mut c0 = _mm256_setzero_ps();
+        let mut c1 = _mm256_setzero_ps();
+        let mut c2 = _mm256_setzero_ps();
+        let mut c3 = _mm256_setzero_ps();
+        for kk in 0..k {
+            let av = _mm256_set1_ps(*ap.add(kk));
+            let base = bp.add(kk * n + j);
+            c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(base), c0);
+            c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(base.add(8)), c1);
+            c2 = _mm256_fmadd_ps(av, _mm256_loadu_ps(base.add(16)), c2);
+            c3 = _mm256_fmadd_ps(av, _mm256_loadu_ps(base.add(24)), c3);
+        }
+        _mm256_storeu_ps(op.add(j), c0);
+        _mm256_storeu_ps(op.add(j + 8), c1);
+        _mm256_storeu_ps(op.add(j + 16), c2);
+        _mm256_storeu_ps(op.add(j + 24), c3);
+        j += 32;
+    }
+    while j + 8 <= n {
+        let mut c = _mm256_setzero_ps();
+        for kk in 0..k {
+            let av = _mm256_set1_ps(*ap.add(kk));
+            c = _mm256_fmadd_ps(av, _mm256_loadu_ps(bp.add(kk * n + j)), c);
+        }
+        _mm256_storeu_ps(op.add(j), c);
+        j += 8;
+    }
+    while j < n {
+        let mut s = 0.0f32;
+        for kk in 0..k {
+            s += *ap.add(kk) * *bp.add(kk * n + j);
+        }
+        *op.add(j) = s;
+        j += 1;
+    }
+}
+
+/// One output row of `aᵀ @ b` (`a` read down column `i` with stride `m`),
+/// zero-skip preserved for the sparse Theorem-1 operands.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn tn_row(
+    ad: &[f32],
+    m: usize,
+    k: usize,
+    i: usize,
+    bd: &[f32],
+    orow: &mut [f32],
+) {
+    let n = orow.len();
+    orow.fill(0.0);
+    let bp = bd.as_ptr();
+    let op = orow.as_mut_ptr();
+    for kk in 0..k {
+        let av = ad[kk * m + i];
+        if av == 0.0 {
+            continue; // routing masses are top-K sparse
+        }
+        let avv = _mm256_set1_ps(av);
+        let brow = bp.add(kk * n);
+        let mut j = 0;
+        while j + 8 <= n {
+            let o = _mm256_loadu_ps(op.add(j));
+            _mm256_storeu_ps(op.add(j), _mm256_fmadd_ps(avv, _mm256_loadu_ps(brow.add(j)), o));
+            j += 8;
+        }
+        while j < n {
+            *op.add(j) += av * *brow.add(j);
+            j += 1;
+        }
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Packed A @ B path (see `kernel::gemm_nn`): B k-panels are packed into
+// 16-column strips so the inner loop streams contiguous memory.
+// ---------------------------------------------------------------------------
+
+/// One output row × one *zero-padded tail* panel (width `w` < 16): the
+/// accumulators round-trip through a 16-wide stack buffer so partial sums
+/// are stored in f32 per k-block exactly like the full-panel path.
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_tail_row(
+    arow: *const f32,
+    kb: usize,
+    kc: usize,
+    pb: *const f32,
+    otail: *mut f32,
+    w: usize,
+    first: bool,
+) {
+    let mut tmp = [0.0f32; 16];
+    if !first {
+        for (c, t) in tmp.iter_mut().enumerate().take(w) {
+            *t = *otail.add(c);
+        }
+    }
+    let mut c0 = _mm256_loadu_ps(tmp.as_ptr());
+    let mut c1 = _mm256_loadu_ps(tmp.as_ptr().add(8));
+    for kk in 0..kc {
+        let av = _mm256_set1_ps(*arow.add(kb + kk));
+        c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(pb.add(kk * 16)), c0);
+        c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(pb.add(kk * 16 + 8)), c1);
+    }
+    _mm256_storeu_ps(tmp.as_mut_ptr(), c0);
+    _mm256_storeu_ps(tmp.as_mut_ptr().add(8), c1);
+    for (c, t) in tmp.iter().enumerate().take(w) {
+        *otail.add(c) = *t;
+    }
+}
+
+/// One output row over every packed panel (the `rows < 4` fallback; the
+/// per-row instruction sequence matches the quad kernel exactly).
+#[inline]
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+unsafe fn packed_row(
+    arow: *const f32,
+    kb: usize,
+    kc: usize,
+    pp: *const f32,
+    np: usize,
+    n: usize,
+    orow: *mut f32,
+    first: bool,
+) {
+    for p in 0..np {
+        let j0 = p * 16;
+        let w = (n - j0).min(16);
+        let pb = pp.add(p * kc * 16);
+        if w == 16 {
+            let (mut c0, mut c1) = if first {
+                (_mm256_setzero_ps(), _mm256_setzero_ps())
+            } else {
+                (_mm256_loadu_ps(orow.add(j0)), _mm256_loadu_ps(orow.add(j0 + 8)))
+            };
+            for kk in 0..kc {
+                let av = _mm256_set1_ps(*arow.add(kb + kk));
+                c0 = _mm256_fmadd_ps(av, _mm256_loadu_ps(pb.add(kk * 16)), c0);
+                c1 = _mm256_fmadd_ps(av, _mm256_loadu_ps(pb.add(kk * 16 + 8)), c1);
+            }
+            _mm256_storeu_ps(orow.add(j0), c0);
+            _mm256_storeu_ps(orow.add(j0 + 8), c1);
+        } else {
+            packed_tail_row(arow, kb, kc, pb, orow.add(j0), w, first);
+        }
+    }
+}
+
+/// Accumulate `rows` (1..=4) output rows for one k-block from packed B
+/// panels. `ablock` holds the rows' full A rows (stride `lda`); the k-block
+/// starts at `kb` and spans `kc` of it. `oblock` holds the rows' output
+/// (stride `n`). Overwrites when `first`, accumulates the stored f32
+/// partials otherwise — so each output element is reduced in plain `kk`
+/// order across k-blocks, independent of threading.
+#[target_feature(enable = "avx2", enable = "fma")]
+#[allow(clippy::too_many_arguments)]
+pub(super) unsafe fn nn_packed_chunk(
+    ablock: &[f32],
+    lda: usize,
+    kb: usize,
+    kc: usize,
+    packed: &[f32],
+    n: usize,
+    oblock: &mut [f32],
+    rows: usize,
+    first: bool,
+) {
+    let np = (n + 15) / 16;
+    let ap = ablock.as_ptr();
+    let op = oblock.as_mut_ptr();
+    let pp = packed.as_ptr();
+    if rows < 4 {
+        for r in 0..rows {
+            packed_row(ap.add(r * lda), kb, kc, pp, np, n, op.add(r * n), first);
+        }
+        return;
+    }
+    for p in 0..np {
+        let j0 = p * 16;
+        let w = (n - j0).min(16);
+        let pb = pp.add(p * kc * 16);
+        if w < 16 {
+            for r in 0..4 {
+                packed_tail_row(ap.add(r * lda), kb, kc, pb, op.add(r * n + j0), w, first);
+            }
+            continue;
+        }
+        // 4 rows × 2 accumulator vectors; one packed-B load pair feeds all
+        // four rows.
+        let mut acc = [[_mm256_setzero_ps(); 2]; 4];
+        if !first {
+            for (r, a) in acc.iter_mut().enumerate() {
+                a[0] = _mm256_loadu_ps(op.add(r * n + j0));
+                a[1] = _mm256_loadu_ps(op.add(r * n + j0 + 8));
+            }
+        }
+        for kk in 0..kc {
+            let b0 = _mm256_loadu_ps(pb.add(kk * 16));
+            let b1 = _mm256_loadu_ps(pb.add(kk * 16 + 8));
+            for (r, a) in acc.iter_mut().enumerate() {
+                let av = _mm256_set1_ps(*ap.add(r * lda + kb + kk));
+                a[0] = _mm256_fmadd_ps(av, b0, a[0]);
+                a[1] = _mm256_fmadd_ps(av, b1, a[1]);
+            }
+        }
+        for (r, a) in acc.iter().enumerate() {
+            _mm256_storeu_ps(op.add(r * n + j0), a[0]);
+            _mm256_storeu_ps(op.add(r * n + j0 + 8), a[1]);
+        }
+    }
+}
+
+/// Mixed-precision dot `Σ l[i]·c[i]` accumulated in f64 (4-lane FMA chain,
+/// fixed-order horizontal sum, scalar tail) — the triangular-solve panels.
+#[target_feature(enable = "avx2", enable = "fma")]
+pub(super) unsafe fn dot_f64(l: &[f32], c: &[f32]) -> f64 {
+    let k = l.len();
+    debug_assert_eq!(k, c.len());
+    let lp = l.as_ptr();
+    let cp = c.as_ptr();
+    let mut acc = _mm256_setzero_pd();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let lv = _mm256_cvtps_pd(_mm_loadu_ps(lp.add(kk)));
+        let cv = _mm256_cvtps_pd(_mm_loadu_ps(cp.add(kk)));
+        acc = _mm256_fmadd_pd(lv, cv, acc);
+        kk += 4;
+    }
+    let lo = _mm256_castpd256_pd128(acc);
+    let hi = _mm256_extractf128_pd(acc, 1);
+    let s2 = _mm_add_pd(lo, hi);
+    let s1 = _mm_add_sd(s2, _mm_unpackhi_pd(s2, s2));
+    let mut s = _mm_cvtsd_f64(s1);
+    while kk < k {
+        s += *lp.add(kk) as f64 * *cp.add(kk) as f64;
+        kk += 1;
+    }
+    s
+}

@@ -1,0 +1,665 @@
+//! Runtime-dispatched SIMD GEMM microkernels with fused epilogues — the
+//! per-core compute substrate under `tensor::ops`.
+//!
+//! PRs 1–3 bought thread-level parallelism and zero-alloc steady state, but
+//! every hot loop still bottomed out in scalar register tiles compiled for
+//! the baseline target (SSE2 on x86_64). This module adds the missing
+//! per-core axis: explicit 8-wide FMA microkernels (AVX2+FMA) on x86_64 and
+//! 4-wide NEON kernels on aarch64, behind cache-blocked, panel-packed GEMM
+//! drivers, selected **once per process**.
+//!
+//! ## Dispatch
+//!
+//! [`active`] resolves the kernel exactly once (benign-race atomic, same
+//! pattern as `par::max_threads`):
+//!
+//! * `MERGEMOE_KERNEL=auto` (or unset) — detect at startup:
+//!   `is_x86_feature_detected!("avx2")` + `fma` on x86_64, NEON on aarch64
+//!   (baseline there), scalar everywhere else.
+//! * `MERGEMOE_KERNEL=scalar` — the seed repo's register-tiled loops,
+//!   preserved **bit for bit** (see `scalar.rs`); the reference every SIMD
+//!   path is tested against.
+//! * `MERGEMOE_KERNEL=avx2` / `neon` — force a SIMD path; falls back to
+//!   scalar with a warning when the host cannot run it.
+//!
+//! [`set_kernel`] overrides the choice programmatically — for benches and
+//! tests only (mirrors `par::set_max_threads`); production code never calls
+//! it, so the per-process fixed-choice contract holds.
+//!
+//! ## Determinism contract
+//!
+//! The kernel choice is fixed per process, and within a kernel every output
+//! element is reduced in an order that depends **only on shapes** (k-block
+//! boundaries, column-tile classes), never on the thread count or on which
+//! row block a lane claimed. Concretely, every driver computes each output
+//! *row* with arithmetic that is independent of the row's position in the
+//! matrix, so results are bit-identical across `--threads` 1/2/8
+//! (`tests/par_consistency.rs`). For the `A @ Bᵀ` forms (every serving
+//! GEMM) the kernel never depends on the row count, so padding-only batch
+//! growth is also bit-invariant; `A @ B` alone may switch between the
+//! direct and packed driver as `m` crosses the pack threshold.
+//! Scalar-vs-SIMD agreement is a tolerance contract, not a bit contract
+//! (FMA contracts rounding steps): `tests/kernel_consistency.rs` pins it.
+//!
+//! ## Packing
+//!
+//! The `A @ B` driver ([`gemm_nn`]) is cache-blocked over k and, on the
+//! AVX2 path at large shapes, packs B k-panels into contiguous
+//! 16-column-wide panels so the inner loop streams packed memory instead
+//! of striding `n` floats between FMA operands. The pack
+//! buffer is **per-thread** (pool workers persist across regions, so after
+//! warmup it is as long-lived as a workspace field) and reused at its
+//! high-water size — the counting-allocator probes in
+//! `benches/bench_forward.rs` stay green because the serving hot path is
+//! entirely `A @ Bᵀ`-shaped (never packs) and the pack buffer never churns.
+//! Every epilogue below writes the output exactly once, eliminating the
+//! write+re-read of a full intermediate:
+//!
+//! * [`gemm_nt_swiglu`] — `silu(x W_Gᵀ) ⊙ (x W_Uᵀ)` for the expert FFN
+//!   (the U panel is never materialized);
+//! * [`gemm_nt_scaled_add`] / [`gemm_nt_scatter_add`] — scale-and-accumulate
+//!   merged-expert recombination in `moe_forward_ws` (the per-expert output
+//!   batch is never materialized);
+//! * [`syrk_nt`] — the symmetric rank-k Gram update `P Pᵀ` computes the
+//!   lower triangle only and mirrors it (exactly equal to the full product,
+//!   column dots are grouping-invariant by construction).
+
+pub mod scalar;
+
+#[cfg(target_arch = "x86_64")]
+pub mod avx2;
+
+#[cfg(target_arch = "aarch64")]
+pub mod neon;
+
+use std::sync::atomic::{AtomicU8, Ordering};
+
+use crate::util::par;
+
+/// Which microkernel family the process runs on.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Seed-exact register-tiled loops (the portable fallback).
+    Scalar,
+    /// 8-wide AVX2 + FMA (x86_64 only).
+    Avx2,
+    /// 4-wide NEON (aarch64 only).
+    Neon,
+}
+
+impl Kind {
+    pub fn name(self) -> &'static str {
+        match self {
+            Kind::Scalar => "scalar",
+            Kind::Avx2 => "avx2",
+            Kind::Neon => "neon",
+        }
+    }
+}
+
+/// 0 = unresolved; resolved lazily on first use (benign race: every racer
+/// computes the same value from the same env + CPUID).
+static KERNEL: AtomicU8 = AtomicU8::new(0);
+
+fn encode(k: Kind) -> u8 {
+    match k {
+        Kind::Scalar => 1,
+        Kind::Avx2 => 2,
+        Kind::Neon => 3,
+    }
+}
+
+fn decode(v: u8) -> Option<Kind> {
+    match v {
+        1 => Some(Kind::Scalar),
+        2 => Some(Kind::Avx2),
+        3 => Some(Kind::Neon),
+        _ => None,
+    }
+}
+
+/// What `auto` resolves to on this host.
+fn detect() -> Kind {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") && is_x86_feature_detected!("fma") {
+            return Kind::Avx2;
+        }
+        Kind::Scalar
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        // NEON is part of the aarch64 baseline.
+        Kind::Neon
+    }
+    #[cfg(not(any(target_arch = "x86_64", target_arch = "aarch64")))]
+    {
+        Kind::Scalar
+    }
+}
+
+fn resolve() -> Kind {
+    let choice = std::env::var("MERGEMOE_KERNEL").unwrap_or_default();
+    match choice.trim().to_ascii_lowercase().as_str() {
+        "" | "auto" => detect(),
+        "scalar" => Kind::Scalar,
+        "avx2" if detect() == Kind::Avx2 => Kind::Avx2,
+        "neon" if detect() == Kind::Neon => Kind::Neon,
+        // arch-neutral alias: whatever SIMD family this host detects
+        "simd" if detect() != Kind::Scalar => detect(),
+        other => {
+            // Same contract as `set_kernel`: an unsupported (or mistyped)
+            // choice degrades to the seed-exact scalar family, never to a
+            // silently different SIMD one.
+            crate::warnlog!("MERGEMOE_KERNEL={other} unsupported on this host; using scalar");
+            Kind::Scalar
+        }
+    }
+}
+
+/// The microkernel family every GEMM in this process dispatches to.
+/// Resolved once from `MERGEMOE_KERNEL` (auto/scalar/avx2/neon) + CPU
+/// detection; fixed for the life of the process unless a bench/test calls
+/// [`set_kernel`].
+pub fn active() -> Kind {
+    if let Some(k) = decode(KERNEL.load(Ordering::Relaxed)) {
+        return k;
+    }
+    let resolved = resolve();
+    KERNEL.store(encode(resolved), Ordering::Relaxed);
+    resolved
+}
+
+/// Name of the active kernel (`"scalar"`, `"avx2"`, `"neon"`) — stamped
+/// into every `BENCH_*.json` / `SWEEP_*.json` report and the serve summary.
+pub fn name() -> &'static str {
+    active().name()
+}
+
+/// Override the kernel choice — **benches and tests only** (the production
+/// contract is one kernel per process). Forcing a SIMD kind the host cannot
+/// run degrades to scalar with a warning instead of executing illegal
+/// instructions.
+pub fn set_kernel(k: Kind) {
+    let k = match k {
+        Kind::Scalar => Kind::Scalar,
+        other if other == detect() => other,
+        other => {
+            crate::warnlog!("kernel {} unavailable on this host; using scalar", other.name());
+            Kind::Scalar
+        }
+    };
+    KERNEL.store(encode(k), Ordering::Relaxed);
+}
+
+/// SiLU (swish) — the expert-FFN epilogue nonlinearity. One definition
+/// shared by every kernel family so fused and unfused paths agree bit for
+/// bit (`tensor::ops::silu` re-exports it).
+#[inline]
+pub fn silu(x: f32) -> f32 {
+    x / (1.0 + (-x).exp())
+}
+
+// ---------------------------------------------------------------------------
+// Packing.
+// ---------------------------------------------------------------------------
+
+/// k-block height of the packed `A @ B` driver: B panels of `KC` rows are
+/// packed contiguously so the inner FMA loop streams L2-resident memory.
+pub const KC: usize = 256;
+
+// The packing machinery below is only *driven* from the x86_64 packed
+// path, but stays arch-neutral (pack_b has unit tests that run
+// everywhere); allow dead_code on other arches instead of cfg-gating so
+// an aarch64 `cargo clippy -D warnings` run stays clean.
+
+/// Column width of one packed B panel (two 8-lane vectors).
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+const NR: usize = 16;
+
+/// Pack when the B operand clearly exceeds the L2-friendly direct regime
+/// and there are enough output rows to amortize the copy.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+const PACK_MIN_B_ELEMS: usize = 64 * 1024;
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+const PACK_MIN_ROWS: usize = 16;
+
+/// Reusable panel-packing scratch for the blocked `A @ B` driver. Grows to
+/// its high-water size and is then allocation-free; private to the driver —
+/// one per thread (see the module docs for why per-thread storage preserves
+/// the zero-alloc guarantee).
+#[derive(Default)]
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+struct PackBuf {
+    buf: Vec<f32>,
+}
+
+thread_local! {
+    /// The calling thread's pack scratch. Taken out of the cell for the
+    /// duration of a GEMM (never borrowed across the parallel region), so
+    /// nested calls cannot alias it.
+    #[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+    static TL_PACK: std::cell::RefCell<PackBuf> = std::cell::RefCell::new(PackBuf::default());
+}
+
+/// Pack rows `[kb, kb+kc)` of the row-major `b` (k, n) into
+/// `ceil(n/NR)` panels of `kc`×`NR` (kk-major, zero-padded tail columns).
+/// Panels are independent pure copies, so they fan across the pool (with
+/// the caller's parallel decision) instead of leaving workers idle between
+/// the driver's compute regions.
+#[cfg_attr(not(target_arch = "x86_64"), allow(dead_code))]
+fn pack_b(b: &[f32], n: usize, kb: usize, kc: usize, packed: &mut [f32], parallel: bool) {
+    let np = (n + NR - 1) / NR;
+    let base = packed.as_mut_ptr() as usize;
+    par::par_for_range_if(parallel, np, |p| {
+        let j0 = p * NR;
+        let w = (n - j0).min(NR);
+        // SAFETY: panel p owns exactly `packed[p*kc*NR .. (p+1)*kc*NR]` —
+        // disjoint per lane; `packed` outlives the region.
+        let dst_panel =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(p * kc * NR), kc * NR) };
+        for kk in 0..kc {
+            let src = (kb + kk) * n + j0;
+            let dst = kk * NR;
+            dst_panel[dst..dst + w].copy_from_slice(&b[src..src + w]);
+            for c in w..NR {
+                dst_panel[dst + c] = 0.0;
+            }
+        }
+    });
+}
+
+// ---------------------------------------------------------------------------
+// Row-kernel dispatch.
+// ---------------------------------------------------------------------------
+
+// Every `match` below carries a trailing `_ => scalar` arm: on x86_64 it
+// covers `Kind::Neon` (never produced there by `resolve`/`set_kernel`) and
+// vice versa, keeping the enum portable without per-arch variants.
+
+#[inline]
+fn nt_row(kind: Kind, arow: &[f32], b: &[f32], orow: &mut [f32]) {
+    match kind {
+        Kind::Scalar => scalar::nt_row(arow, b, orow),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::nt_row(arow, b, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::nt_row(arow, b, orow),
+        _ => scalar::nt_row(arow, b, orow),
+    }
+}
+
+#[inline]
+fn nt_row_scaled_add(kind: Kind, arow: &[f32], b: &[f32], alpha: f32, orow: &mut [f32]) {
+    match kind {
+        Kind::Scalar => scalar::nt_row_scaled_add(arow, b, alpha, orow),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::nt_row_scaled_add(arow, b, alpha, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::nt_row_scaled_add(arow, b, alpha, orow),
+        _ => scalar::nt_row_scaled_add(arow, b, alpha, orow),
+    }
+}
+
+#[inline]
+fn nt_row_swiglu(kind: Kind, arow: &[f32], wg: &[f32], wu: &[f32], orow: &mut [f32]) {
+    match kind {
+        Kind::Scalar => scalar::nt_row_swiglu(arow, wg, wu, orow),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::nt_row_swiglu(arow, wg, wu, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::nt_row_swiglu(arow, wg, wu, orow),
+        _ => scalar::nt_row_swiglu(arow, wg, wu, orow),
+    }
+}
+
+#[inline]
+fn nn_row(kind: Kind, arow: &[f32], b: &[f32], n: usize, orow: &mut [f32]) {
+    match kind {
+        Kind::Scalar => scalar::nn_row(arow, b, n, orow),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::nn_row(arow, b, n, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::nn_row(arow, b, n, orow),
+        _ => scalar::nn_row(arow, b, n, orow),
+    }
+}
+
+#[inline]
+fn tn_row(kind: Kind, ad: &[f32], m: usize, k: usize, i: usize, b: &[f32], orow: &mut [f32]) {
+    match kind {
+        Kind::Scalar => scalar::tn_row(ad, m, k, i, b, orow),
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::tn_row(ad, m, k, i, b, orow) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::tn_row(ad, m, k, i, b, orow),
+        _ => scalar::tn_row(ad, m, k, i, b, orow),
+    }
+}
+
+// ---------------------------------------------------------------------------
+// GEMM drivers. Shapes are trusted (validated by the `tensor::ops`
+// wrappers); every driver parallelizes over independent output regions with
+// the same work threshold the seed kernels used.
+// ---------------------------------------------------------------------------
+
+/// `out (m,n) = a (m,k) @ bᵀ` with `b` row-major (n,k). Fully overwrites.
+pub fn gemm_nt(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let kind = active();
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out, n, |i, orow| {
+        nt_row(kind, &a[i * k..(i + 1) * k], b, orow);
+    });
+}
+
+/// `out (m,n) += alpha · (a (m,k) @ bᵀ)` — the scale-and-accumulate
+/// epilogue (merged-expert recombination, shared-expert residual,
+/// frequency-weighted Ŷ panels). Fuses what used to be a full GEMM output
+/// write plus an `axpy` re-read.
+pub fn gemm_nt_scaled_add(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    alpha: f32,
+    out: &mut [f32],
+) {
+    let kind = active();
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out, n, |i, orow| {
+        nt_row_scaled_add(kind, &a[i * k..(i + 1) * k], b, alpha, orow);
+    });
+}
+
+/// Scatter variant: `out[dst[r]] += scales[r] · (a_r @ bᵀ)` for each input
+/// row `r`.
+///
+/// # Safety
+///
+/// `dst` must be strictly increasing (distinct destination rows, so
+/// parallel row lanes never alias) and every `dst[r] * n + n` must be
+/// `<= out.len()`; violating either fabricates overlapping or
+/// out-of-bounds `&mut` row slices. The `tensor::ops` wrapper
+/// (`matmul_bt_scatter_add_into`) validates both and is the safe entry
+/// point.
+#[allow(clippy::too_many_arguments)]
+pub unsafe fn gemm_nt_scatter_add(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    scales: &[f32],
+    dst: &[usize],
+    out: &mut [f32],
+) {
+    debug_assert!(dst.windows(2).all(|w| w[0] < w[1]));
+    let kind = active();
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    let base = out.as_mut_ptr() as usize;
+    par::par_for_range_if(parallel, m, |r| {
+        // SAFETY: dst is strictly increasing and bounds-checked by the
+        // caller, so each lane writes a distinct, in-bounds row of `out`.
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(dst[r] * n), n) };
+        nt_row_scaled_add(kind, &a[r * k..(r + 1) * k], b, scales[r], orow);
+    });
+}
+
+/// Fused SwiGLU: `out (m,f) = silu(a @ wgᵀ) ⊙ (a @ wuᵀ)` with `wg`/`wu`
+/// row-major (f,k). One pass over `a` feeds both dot products; the U panel
+/// is never materialized.
+pub fn gemm_nt_swiglu(
+    a: &[f32],
+    wg: &[f32],
+    wu: &[f32],
+    m: usize,
+    k: usize,
+    f: usize,
+    out: &mut [f32],
+) {
+    let kind = active();
+    // two matmuls' worth of flops per output element
+    let parallel = 4 * m * k * f >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out, f, |i, orow| {
+        nt_row_swiglu(kind, &a[i * k..(i + 1) * k], wg, wu, orow);
+    });
+}
+
+/// `out (m,n) = a (m,k) @ b (k,n)`, both row-major. Fully overwrites.
+/// Cache-blocked over k; the AVX2 path additionally packs B k-panels into
+/// `pack` when the shape is past the direct-streaming regime.
+pub fn gemm_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize, out: &mut [f32]) {
+    let kind = active();
+    if k == 0 {
+        out.fill(0.0);
+        return;
+    }
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    #[cfg(target_arch = "x86_64")]
+    if kind == Kind::Avx2 && m >= PACK_MIN_ROWS && k * n >= PACK_MIN_B_ELEMS {
+        // Take the pack scratch out of its cell for the whole GEMM so the
+        // parallel region never observes a live borrow.
+        let mut pack = TL_PACK.with(|p| std::mem::take(&mut *p.borrow_mut()));
+        gemm_nn_packed_avx2(a, b, m, k, n, out, &mut pack, parallel);
+        TL_PACK.with(|p| *p.borrow_mut() = pack);
+        return;
+    }
+    par::par_chunks_mut_if(parallel, out, n, |i, orow| {
+        nn_row(kind, &a[i * k..(i + 1) * k], b, n, orow);
+    });
+}
+
+/// The packed AVX2 `A @ B` path: serial loop over k-blocks, pack the block
+/// of B once, then fan output row-quads across the pool. Reduction order
+/// per output element is the plain `kk` order (the FMA chain never
+/// reassociates across the k-block boundary — partial sums are carried in
+/// the output row), so results depend only on shapes.
+#[cfg(target_arch = "x86_64")]
+#[allow(clippy::too_many_arguments)]
+fn gemm_nn_packed_avx2(
+    a: &[f32],
+    b: &[f32],
+    m: usize,
+    k: usize,
+    n: usize,
+    out: &mut [f32],
+    pack: &mut PackBuf,
+    parallel: bool,
+) {
+    debug_assert_eq!(a.len(), m * k);
+    debug_assert_eq!(out.len(), m * n);
+    let np = (n + NR - 1) / NR;
+    pack.buf.resize(np * KC * NR, 0.0);
+    let mut kb = 0;
+    while kb < k {
+        let kc = (k - kb).min(KC);
+        pack_b(b, n, kb, kc, &mut pack.buf[..np * kc * NR], parallel);
+        let packed: &[f32] = &pack.buf[..np * kc * NR];
+        let first = kb == 0;
+        // 4 output rows per chunk: the quad kernel shares each packed B
+        // load across four row accumulators.
+        par::par_chunks_mut_if(parallel, out, 4 * n, |ci, chunk| {
+            let rows = chunk.len() / n;
+            let r0 = ci * 4;
+            let ablock = &a[r0 * k..(r0 + rows) * k];
+            // SAFETY: AVX2+FMA verified by `active()` before dispatch.
+            unsafe { avx2::nn_packed_chunk(ablock, k, kb, kc, packed, n, chunk, rows, first) };
+        });
+        kb += kc;
+    }
+}
+
+/// `out (m,n) = aᵀ @ b` with `a` row-major (k,m), `b` row-major (k,n).
+/// Keeps the zero-skip on `a` (Theorem-1 usage masses arrive sparse).
+pub fn gemm_tn(a: &[f32], b: &[f32], k: usize, m: usize, n: usize, out: &mut [f32]) {
+    let kind = active();
+    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
+    par::par_chunks_mut_if(parallel, out, n, |i, orow| {
+        tn_row(kind, a, m, k, i, b, orow);
+    });
+}
+
+/// Symmetric rank-k update `out (f,f) = p (f,s) @ pᵀ`: computes the lower
+/// triangle (row i needs only columns `0..=i`) and mirrors it. Because
+/// every kernel family computes a column dot with a grouping-invariant
+/// instruction sequence, the mirrored upper triangle is bit-identical to
+/// what the full `gemm_nt(p, p)` would have produced.
+pub fn syrk_nt(p: &[f32], f: usize, s: usize, out: &mut [f32]) {
+    let kind = active();
+    let parallel = f * f * s >= par::PAR_MIN_FLOPS;
+    // Row i of the lower triangle costs O(i+1) dots, so contiguous row
+    // blocks would hand the last lane ~2x the mean work. Interleave cheap
+    // and expensive rows (index 0,1,2,.. -> row 0, f-1, 1, f-2, ..) so
+    // every contiguous index block carries near-equal flops; which lane
+    // computes a row never affects its value, so determinism is untouched.
+    let base = out.as_mut_ptr() as usize;
+    par::par_for_range_if(parallel, f, |idx| {
+        let i = if idx % 2 == 0 { idx / 2 } else { f - 1 - idx / 2 };
+        // SAFETY: the index map is a bijection on 0..f, so each lane writes
+        // a distinct row prefix `out[i*f .. i*f+i+1]`; `out` outlives the
+        // region.
+        let orow =
+            unsafe { std::slice::from_raw_parts_mut((base as *mut f32).add(i * f), i + 1) };
+        nt_row(kind, &p[i * s..(i + 1) * s], &p[..(i + 1) * s], orow);
+    });
+    // Mirror: strictly-upper writes read strictly-lower entries — the two
+    // index sets never intersect, so the row fan-out is race-free.
+    let base = out.as_mut_ptr() as usize;
+    let mirror_parallel = f * f >= par::PAR_MIN_ELEMS;
+    par::par_for_range_if(mirror_parallel, f, |i| {
+        let p = base as *mut f32;
+        for j in i + 1..f {
+            // SAFETY: reads out[j][i] (strictly lower), writes out[i][j]
+            // (strictly upper); `out` outlives the region.
+            unsafe { *p.add(i * f + j) = *p.add(j * f + i) };
+        }
+    });
+}
+
+/// Mixed-precision dot `Σ l[i] as f64 · c[i] as f64` — the inner product of
+/// the blocked triangular-solve panels in `linalg`. The scalar path there
+/// keeps the seed's interleaved subtract; this is the SIMD half.
+pub fn dot_f64(l: &[f32], c: &[f32]) -> f64 {
+    match active() {
+        #[cfg(target_arch = "x86_64")]
+        // SAFETY: `active()` only yields Avx2 after feature detection.
+        Kind::Avx2 => unsafe { avx2::dot_f64(l, c) },
+        #[cfg(target_arch = "aarch64")]
+        Kind::Neon => neon::dot_f64(l, c),
+        _ => {
+            let mut s = 0.0f64;
+            for (a, b) in l.iter().zip(c) {
+                s += *a as f64 * *b as f64;
+            }
+            s
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    // Kernel-*switching* coverage lives in `tests/kernel_consistency.rs`,
+    // a separate process: flipping the process-wide knob here would race
+    // with concurrent lib tests that assert bit-exact kernel outputs. These
+    // tests only exercise the kernel that is already active.
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn randv(n: usize, rng: &mut Rng) -> Vec<f32> {
+        (0..n).map(|_| rng.normal() as f32).collect()
+    }
+
+    fn naive_nn(a: &[f32], b: &[f32], m: usize, k: usize, n: usize) -> Vec<f32> {
+        let mut out = vec![0.0f32; m * n];
+        for i in 0..m {
+            for j in 0..n {
+                let mut s = 0.0f64;
+                for kk in 0..k {
+                    s += a[i * k + kk] as f64 * b[kk * n + j] as f64;
+                }
+                out[i * n + j] = s as f32;
+            }
+        }
+        out
+    }
+
+    fn rel_err(a: &[f32], b: &[f32]) -> f64 {
+        let mut num = 0.0f64;
+        let mut den = 0.0f64;
+        for (x, y) in a.iter().zip(b) {
+            num += ((x - y) as f64).powi(2);
+            den += (*y as f64).powi(2);
+        }
+        num.sqrt() / (den.sqrt() + 1e-12)
+    }
+
+    #[test]
+    fn dispatch_resolves_to_a_named_kernel() {
+        let k = active();
+        assert!(matches!(k, Kind::Scalar | Kind::Avx2 | Kind::Neon));
+        assert!(["scalar", "avx2", "neon"].contains(&name()));
+        // the choice is sticky: repeated reads agree
+        assert_eq!(active(), k);
+    }
+
+    #[test]
+    fn packed_nn_matches_naive_above_threshold() {
+        // m >= PACK_MIN_ROWS and k*n >= PACK_MIN_B_ELEMS force the packed
+        // path on AVX2 hosts; elsewhere this still covers the direct path.
+        let (m, k, n) = (21, 330, 210);
+        assert!(k * n >= PACK_MIN_B_ELEMS && m >= PACK_MIN_ROWS);
+        let mut rng = Rng::new(0x9ACC);
+        let a = randv(m * k, &mut rng);
+        let b = randv(k * n, &mut rng);
+        let want = naive_nn(&a, &b, m, k, n);
+        let mut out = vec![f32::NAN; m * n];
+        gemm_nn(&a, &b, m, k, n, &mut out);
+        let err = rel_err(&out, &want);
+        assert!(err < 1e-4, "{}: rel err {err}", name());
+        // a second run through the warm per-thread pack buffer agrees
+        let mut out2 = vec![f32::NAN; m * n];
+        gemm_nn(&a, &b, m, k, n, &mut out2);
+        assert_eq!(out, out2);
+    }
+
+    #[test]
+    fn syrk_mirror_is_exactly_symmetric_and_matches_nt() {
+        let (f, s) = (37, 113);
+        let mut rng = Rng::new(0x57);
+        let p = randv(f * s, &mut rng);
+        let mut full = vec![f32::NAN; f * f];
+        gemm_nt(&p, &p, f, s, f, &mut full);
+        let mut half = vec![f32::NAN; f * f];
+        syrk_nt(&p, f, s, &mut half);
+        assert_eq!(half, full, "{}", name());
+    }
+
+    #[test]
+    fn pack_b_layout_and_padding() {
+        // 2 panels over n=20: second panel is 4 wide + 12 zeros per row.
+        let k = 3;
+        let n = 20;
+        let b: Vec<f32> = (0..k * n).map(|i| i as f32).collect();
+        let np = (n + NR - 1) / NR;
+        let mut packed = vec![f32::NAN; np * k * NR];
+        pack_b(&b, n, 0, k, &mut packed, false);
+        for kk in 0..k {
+            for c in 0..NR {
+                assert_eq!(packed[kk * NR + c], b[kk * n + c]);
+            }
+            for c in 0..4 {
+                assert_eq!(packed[k * NR + kk * NR + c], b[kk * n + NR + c]);
+            }
+            for c in 4..NR {
+                assert_eq!(packed[k * NR + kk * NR + c], 0.0);
+            }
+        }
+    }
+}

@@ -1,0 +1,167 @@
+//! NEON microkernels (aarch64). 4-lane f32 FMA, 2-lane f64 FMA for the
+//! triangular-solve dots. NEON is part of the aarch64 baseline, so these
+//! are safe functions with `unsafe` only around the intrinsics.
+//!
+//! Same invariants as the scalar/AVX2 families: row independence and
+//! grouping invariance (a column dot is always a 4-wide FMA chain in k
+//! order, one horizontal sum, then the scalar tail). Like AVX2, FMA
+//! contracts rounding steps, so agreement with scalar is a tolerance
+//! contract (`tests/kernel_consistency.rs`); within this family results
+//! are bit-identical across thread counts and row positions.
+
+use core::arch::aarch64::*;
+
+use super::silu;
+
+/// One column dot with the canonical sequence: 4-wide FMA chain, horizontal
+/// sum (`vaddvq`), scalar tail.
+#[inline]
+fn dot1(a: &[f32], b: *const f32) -> f32 {
+    let k = a.len();
+    let ap = a.as_ptr();
+    unsafe {
+        let mut acc = vdupq_n_f32(0.0);
+        let mut kk = 0;
+        while kk + 4 <= k {
+            acc = vfmaq_f32(acc, vld1q_f32(ap.add(kk)), vld1q_f32(b.add(kk)));
+            kk += 4;
+        }
+        let mut s = vaddvq_f32(acc);
+        while kk < k {
+            s += *ap.add(kk) * *b.add(kk);
+            kk += 1;
+        }
+        s
+    }
+}
+
+/// `orow[j] = arow · b_j` for row-major `b` (n, k).
+pub(super) fn nt_row(arow: &[f32], bd: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let bp = bd.as_ptr();
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o = dot1(arow, unsafe { bp.add(j * k) });
+    }
+}
+
+/// [`nt_row`] with the scale-and-accumulate epilogue.
+pub(super) fn nt_row_scaled_add(arow: &[f32], bd: &[f32], alpha: f32, orow: &mut [f32]) {
+    let k = arow.len();
+    let bp = bd.as_ptr();
+    for (j, o) in orow.iter_mut().enumerate() {
+        *o += alpha * dot1(arow, unsafe { bp.add(j * k) });
+    }
+}
+
+/// Fused SwiGLU row: `orow[j] = silu(arow · wg_j) · (arow · wu_j)`.
+pub(super) fn nt_row_swiglu(arow: &[f32], wg: &[f32], wu: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let gp = wg.as_ptr();
+    let up = wu.as_ptr();
+    for (j, o) in orow.iter_mut().enumerate() {
+        let sg = dot1(arow, unsafe { gp.add(j * k) });
+        let su = dot1(arow, unsafe { up.add(j * k) });
+        *o = silu(sg) * su;
+    }
+}
+
+/// One dense output row of `A @ B`: broadcast `a[kk]`, FMA into 16/4/scalar
+/// column tiles of the output row.
+pub(super) fn nn_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+    let k = arow.len();
+    let ap = arow.as_ptr();
+    let bp = bd.as_ptr();
+    let op = orow.as_mut_ptr();
+    unsafe {
+        let mut j = 0;
+        while j + 16 <= n {
+            let mut c0 = vdupq_n_f32(0.0);
+            let mut c1 = vdupq_n_f32(0.0);
+            let mut c2 = vdupq_n_f32(0.0);
+            let mut c3 = vdupq_n_f32(0.0);
+            for kk in 0..k {
+                let av = vdupq_n_f32(*ap.add(kk));
+                let base = bp.add(kk * n + j);
+                c0 = vfmaq_f32(c0, av, vld1q_f32(base));
+                c1 = vfmaq_f32(c1, av, vld1q_f32(base.add(4)));
+                c2 = vfmaq_f32(c2, av, vld1q_f32(base.add(8)));
+                c3 = vfmaq_f32(c3, av, vld1q_f32(base.add(12)));
+            }
+            vst1q_f32(op.add(j), c0);
+            vst1q_f32(op.add(j + 4), c1);
+            vst1q_f32(op.add(j + 8), c2);
+            vst1q_f32(op.add(j + 12), c3);
+            j += 16;
+        }
+        while j + 4 <= n {
+            let mut c = vdupq_n_f32(0.0);
+            for kk in 0..k {
+                c = vfmaq_f32(c, vdupq_n_f32(*ap.add(kk)), vld1q_f32(bp.add(kk * n + j)));
+            }
+            vst1q_f32(op.add(j), c);
+            j += 4;
+        }
+        while j < n {
+            let mut s = 0.0f32;
+            for kk in 0..k {
+                s += *ap.add(kk) * *bp.add(kk * n + j);
+            }
+            *op.add(j) = s;
+            j += 1;
+        }
+    }
+}
+
+/// One output row of `aᵀ @ b` (`a` read down column `i` with stride `m`),
+/// zero-skip preserved for the sparse Theorem-1 operands.
+pub(super) fn tn_row(ad: &[f32], m: usize, k: usize, i: usize, bd: &[f32], orow: &mut [f32]) {
+    let n = orow.len();
+    orow.fill(0.0);
+    let bp = bd.as_ptr();
+    let op = orow.as_mut_ptr();
+    for kk in 0..k {
+        let av = ad[kk * m + i];
+        if av == 0.0 {
+            continue; // routing masses are top-K sparse
+        }
+        unsafe {
+            let avv = vdupq_n_f32(av);
+            let brow = bp.add(kk * n);
+            let mut j = 0;
+            while j + 4 <= n {
+                let o = vld1q_f32(op.add(j));
+                vst1q_f32(op.add(j), vfmaq_f32(o, avv, vld1q_f32(brow.add(j))));
+                j += 4;
+            }
+            while j < n {
+                *op.add(j) += av * *brow.add(j);
+                j += 1;
+            }
+        }
+    }
+}
+
+/// Mixed-precision dot `Σ l[i]·c[i]` accumulated in f64 (2-lane FMA chain,
+/// horizontal sum, scalar tail).
+pub(super) fn dot_f64(l: &[f32], c: &[f32]) -> f64 {
+    let k = l.len();
+    debug_assert_eq!(k, c.len());
+    let lp = l.as_ptr();
+    let cp = c.as_ptr();
+    unsafe {
+        let mut acc = vdupq_n_f64(0.0);
+        let mut kk = 0;
+        while kk + 2 <= k {
+            let lv = vcvt_f64_f32(vld1_f32(lp.add(kk)));
+            let cv = vcvt_f64_f32(vld1_f32(cp.add(kk)));
+            acc = vfmaq_f64(acc, lv, cv);
+            kk += 2;
+        }
+        let mut s = vaddvq_f64(acc);
+        while kk < k {
+            s += *lp.add(kk) as f64 * *cp.add(kk) as f64;
+            kk += 1;
+        }
+        s
+    }
+}

@@ -1,0 +1,224 @@
+//! Scalar reference microkernels — the seed repo's register-tiled loops,
+//! preserved **bit for bit**. `MERGEMOE_KERNEL=scalar` therefore reproduces
+//! the pre-kernel-layer numerics exactly, and every SIMD family is tested
+//! against these functions (`tests/kernel_consistency.rs`).
+//!
+//! Two invariants every function here upholds (the SIMD twins must too):
+//!
+//! * **Row independence** — an output row's arithmetic depends only on its
+//!   own A row, the B operand and the shape, never on the row's position,
+//!   so work can be split across threads at any boundary.
+//! * **Grouping invariance** — a column's dot product is accumulated with
+//!   the same instruction sequence whether the column sits in a 4-wide
+//!   group or the tail loop, so restricting the column range (the SYRK
+//!   lower triangle) yields exactly the full-product values.
+//!
+//! The invariance is structural: every `A @ Bᵀ`-shaped kernel below calls
+//! the same [`dot4`]/[`dot`] cores and differs only in its store epilogue.
+
+use super::silu;
+
+/// One dense output row of `A @ B`: `orow = arow @ b`, 4 `a` entries per
+/// sweep so the inner loop is a branch-free chain of independent
+/// multiply-adds (the seed `matmul_row`).
+pub(super) fn nn_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
+    orow.fill(0.0);
+    let k = arow.len();
+    let mut kk = 0;
+    while kk + 4 <= k {
+        let a0 = arow[kk];
+        let a1 = arow[kk + 1];
+        let a2 = arow[kk + 2];
+        let a3 = arow[kk + 3];
+        let b0 = &bd[kk * n..kk * n + n];
+        let b1 = &bd[(kk + 1) * n..(kk + 1) * n + n];
+        let b2 = &bd[(kk + 2) * n..(kk + 2) * n + n];
+        let b3 = &bd[(kk + 3) * n..(kk + 3) * n + n];
+        for (j, o) in orow.iter_mut().enumerate() {
+            *o += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
+        }
+        kk += 4;
+    }
+    while kk < k {
+        let av = arow[kk];
+        let brow = &bd[kk * n..kk * n + n];
+        for (o, &bv) in orow.iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+        kk += 1;
+    }
+}
+
+/// One column dot `arow · b_j` with the seed accumulation order (the 4-wide
+/// group of `matmul_bt` accumulated each column independently, so a single
+/// sequential sum reproduces it exactly).
+#[inline]
+fn dot(arow: &[f32], brow: &[f32]) -> f32 {
+    let mut acc = 0.0f32;
+    for (x, y) in arow.iter().zip(brow) {
+        acc += x * y;
+    }
+    acc
+}
+
+/// Four column dots sharing one read of `arow` — the seed `matmul_bt`
+/// 4-column group. The single copy of this loop carries the
+/// grouping-invariance contract: per column it is exactly [`dot`]'s
+/// sequential sum, and every `A @ Bᵀ` epilogue below reuses it verbatim.
+#[inline]
+fn dot4(arow: &[f32], b0: &[f32], b1: &[f32], b2: &[f32], b3: &[f32]) -> (f32, f32, f32, f32) {
+    let mut s0 = 0.0f32;
+    let mut s1 = 0.0f32;
+    let mut s2 = 0.0f32;
+    let mut s3 = 0.0f32;
+    for (kk, &av) in arow.iter().enumerate() {
+        s0 += av * b0[kk];
+        s1 += av * b1[kk];
+        s2 += av * b2[kk];
+        s3 += av * b3[kk];
+    }
+    (s0, s1, s2, s3)
+}
+
+/// One output row of `A @ Bᵀ` (`b` row-major (n,k)): `orow[j] = arow · b_j`.
+pub(super) fn nt_row(arow: &[f32], bd: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let n = orow.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        let (s0, s1, s2, s3) = dot4(
+            arow,
+            &bd[j * k..j * k + k],
+            &bd[(j + 1) * k..(j + 1) * k + k],
+            &bd[(j + 2) * k..(j + 2) * k + k],
+            &bd[(j + 3) * k..(j + 3) * k + k],
+        );
+        orow[j] = s0;
+        orow[j + 1] = s1;
+        orow[j + 2] = s2;
+        orow[j + 3] = s3;
+        j += 4;
+    }
+    while j < n {
+        orow[j] = dot(arow, &bd[j * k..j * k + k]);
+        j += 1;
+    }
+}
+
+/// [`nt_row`] with the scale-and-accumulate epilogue:
+/// `orow[j] += alpha · (arow · b_j)`. Identical dot arithmetic; the
+/// epilogue matches the old `axpy`/scatter element update (`o += w * y`).
+pub(super) fn nt_row_scaled_add(arow: &[f32], bd: &[f32], alpha: f32, orow: &mut [f32]) {
+    let k = arow.len();
+    let n = orow.len();
+    let mut j = 0;
+    while j + 4 <= n {
+        let (s0, s1, s2, s3) = dot4(
+            arow,
+            &bd[j * k..j * k + k],
+            &bd[(j + 1) * k..(j + 1) * k + k],
+            &bd[(j + 2) * k..(j + 2) * k + k],
+            &bd[(j + 3) * k..(j + 3) * k + k],
+        );
+        orow[j] += alpha * s0;
+        orow[j + 1] += alpha * s1;
+        orow[j + 2] += alpha * s2;
+        orow[j + 3] += alpha * s3;
+        j += 4;
+    }
+    while j < n {
+        orow[j] += alpha * dot(arow, &bd[j * k..j * k + k]);
+        j += 1;
+    }
+}
+
+/// One output row of the fused SwiGLU panel:
+/// `orow[j] = silu(arow · wg_j) · (arow · wu_j)` — both dots accumulated in
+/// one [`dot4`] pass (two gate + two up columns), each with the seed
+/// per-column order, so the result equals the unfused two-GEMM +
+/// elementwise path bit for bit.
+pub(super) fn nt_row_swiglu(arow: &[f32], wg: &[f32], wu: &[f32], orow: &mut [f32]) {
+    let k = arow.len();
+    let f = orow.len();
+    let mut j = 0;
+    while j + 2 <= f {
+        let (sg0, sg1, su0, su1) = dot4(
+            arow,
+            &wg[j * k..j * k + k],
+            &wg[(j + 1) * k..(j + 1) * k + k],
+            &wu[j * k..j * k + k],
+            &wu[(j + 1) * k..(j + 1) * k + k],
+        );
+        orow[j] = silu(sg0) * su0;
+        orow[j + 1] = silu(sg1) * su1;
+        j += 2;
+    }
+    while j < f {
+        let sg = dot(arow, &wg[j * k..j * k + k]);
+        let su = dot(arow, &wu[j * k..j * k + k]);
+        orow[j] = silu(sg) * su;
+        j += 1;
+    }
+}
+
+/// One output row of `aᵀ @ b` (`a` row-major (k,m), read down column `i`)
+/// with the seed zero-skip — Theorem-1 usage/assignment masses arrive
+/// sparse on this path.
+pub(super) fn tn_row(ad: &[f32], m: usize, k: usize, i: usize, bd: &[f32], orow: &mut [f32]) {
+    let n = orow.len();
+    orow.fill(0.0);
+    for kk in 0..k {
+        let av = ad[kk * m + i];
+        if av == 0.0 {
+            continue; // routing masses are top-K sparse
+        }
+        let brow = &bd[kk * n..kk * n + n];
+        for (o, &bv) in orow.iter_mut().zip(brow) {
+            *o += av * bv;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nt_grouping_invariance() {
+        // column j's value must not depend on whether it sat in a 4-group
+        // or the tail: shrink n from 6 to 5 and compare the shared prefix
+        let a: Vec<f32> = (0..7).map(|i| 0.3 * i as f32 - 1.0).collect();
+        let b: Vec<f32> = (0..6 * 7).map(|i| (i as f32 * 0.11).sin()).collect();
+        let mut full = vec![0.0f32; 6];
+        nt_row(&a, &b[..6 * 7], &mut full);
+        let mut partial = vec![0.0f32; 5];
+        nt_row(&a, &b[..5 * 7], &mut partial);
+        assert_eq!(&full[..5], &partial[..]);
+    }
+
+    #[test]
+    fn scaled_add_accumulates() {
+        let a = [1.0f32, 2.0];
+        let b = [3.0f32, 4.0, 5.0, 6.0]; // two rows of k=2
+        let mut out = [10.0f32, 20.0];
+        nt_row_scaled_add(&a, &b, 0.5, &mut out);
+        // dots: 1*3+2*4=11, 1*5+2*6=17
+        assert_eq!(out, [10.0 + 0.5 * 11.0, 20.0 + 0.5 * 17.0]);
+    }
+
+    #[test]
+    fn swiglu_matches_unfused() {
+        let a: Vec<f32> = (0..9).map(|i| 0.2 * i as f32 - 0.7).collect();
+        let wg: Vec<f32> = (0..5 * 9).map(|i| (i as f32 * 0.07).cos()).collect();
+        let wu: Vec<f32> = (0..5 * 9).map(|i| (i as f32 * 0.13).sin()).collect();
+        let mut fused = vec![0.0f32; 5];
+        nt_row_swiglu(&a, &wg, &wu, &mut fused);
+        let mut g = vec![0.0f32; 5];
+        let mut u = vec![0.0f32; 5];
+        nt_row(&a, &wg, &mut g);
+        nt_row(&a, &wu, &mut u);
+        for j in 0..5 {
+            assert_eq!(fused[j], silu(g[j]) * u[j], "col {j}");
+        }
+    }
+}

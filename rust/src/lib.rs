@@ -19,11 +19,16 @@
 //!   the persistent-pool data-parallelism layer every hot path runs on
 //!   (offline environment, so `rand`/`serde`/`clap`/`rayon` are
 //!   reimplemented here).
-//! * [`tensor`]  — dense f32 tensor library (parallel register-tiled
-//!   matmul with zero-alloc `*_into` variants, softmax, …).
+//! * [`kernel`]  — runtime-dispatched SIMD GEMM microkernels with fused
+//!   epilogues (AVX2+FMA / NEON / seed-exact scalar) — the per-core
+//!   compute substrate under every matmul.
+//! * [`tensor`]  — dense f32 tensor library (kernel-dispatched matmul
+//!   family with zero-alloc `*_into` variants, fused SwiGLU /
+//!   scale-and-accumulate / SYRK epilogues, softmax, …).
 //! * [`linalg`]  — Cholesky / QR / ridge least squares / pseudoinverse: the
 //!   numerical core of the paper's `T1 = Q P†` solve (triangular solves
-//!   fan out per right-hand-side column).
+//!   fan out per right-hand-side column; Gram products on the SYRK
+//!   kernel).
 //!
 //! ## Threading model
 //!
@@ -48,6 +53,29 @@
 //! thread knob and reductions always run in a fixed order on the
 //! coordinating thread, so results are bit-identical at every thread count
 //! (`tests/par_consistency.rs` enforces this against the pool).
+//!
+//! ## Kernel dispatch
+//!
+//! Below the thread level, every GEMM runs on a runtime-selected SIMD
+//! microkernel family ([`kernel`]): AVX2+FMA on x86_64 (detected via
+//! `is_x86_feature_detected!`), NEON on aarch64, and a scalar family that
+//! preserves the seed repo's arithmetic bit for bit. Selection happens
+//! **once per process** — `MERGEMOE_KERNEL={auto,scalar,avx2,neon}`
+//! overrides detection (unsupported choices degrade to scalar with a
+//! warning), and the resolved name is stamped into every bench/sweep
+//! report plus the serve summary. The `A @ B` driver is cache-blocked over
+//! k and panel-packs B on the AVX2 path at large shapes (per-thread pack
+//! scratch, high-water reuse); the `A @ Bᵀ` form every linear layer uses
+//! streams both operands contiguously and needs no packing. Fused epilogues
+//! remove a full intermediate write+re-read each: SwiGLU for the expert
+//! FFN, scale-and-accumulate (dense and scatter) for merged-expert output
+//! recombination, and the symmetric rank-k update for MergeMoE's Gram
+//! panels. Determinism contract: per-element reduction order depends only
+//! on shapes, so results are bit-identical across `--threads` 1/2/8 under
+//! any fixed kernel (`tests/par_consistency.rs`); scalar-vs-SIMD agreement
+//! is a tolerance contract pinned by `tests/kernel_consistency.rs`, and
+//! `MERGEMOE_KERNEL=scalar` reproduces the pre-kernel-layer numerics
+//! exactly.
 //!
 //! ## Workspace arenas
 //!
@@ -105,6 +133,7 @@ pub mod coordinator;
 pub mod eval;
 pub mod exp;
 pub mod io;
+pub mod kernel;
 pub mod linalg;
 pub mod merge;
 pub mod model;

@@ -7,9 +7,20 @@
 //! with a Cholesky solve (fast path, λ = ridge jitter for rank-deficient
 //! calibration batches) and through Householder QR as the reference path the
 //! property tests cross-check against.
+//!
+//! Kernel-layer integration: the Gram products run on the symmetric
+//! rank-k kernel (`ops::syrk_bt` — lower triangle + mirror, half the
+//! flops), and the *forward* substitution's dominant inner product (rows
+//! of L are contiguous) runs on the dispatched mixed-precision dot
+//! (`kernel::dot_f64` — 4-lane f64 FMA on AVX2). Back substitution reads L
+//! down a column (stride n), so it stays on the seed scalar recurrence.
+//! The per-column recurrence order is fixed per process, so the
+//! fused-vs-chained solve bit contract and thread-count invariance both
+//! survive kernel selection.
 
 use anyhow::{bail, Result};
 
+use crate::kernel;
 use crate::tensor::{ops, Tensor};
 use crate::util::par;
 
@@ -42,15 +53,29 @@ pub fn cholesky(a: &Tensor) -> Result<Tensor> {
 /// row-major n×n lower factor. Shared by every triangular solve so the
 /// f64 recurrence exists exactly once (the bit-identity contract between
 /// the chained and fused solves depends on it).
+///
+/// The dominant inner product `Σ_k l[i,k]·col[k]` runs on the dispatched
+/// mixed-precision kernel ([`kernel::dot_f64`]): the scalar family keeps
+/// the seed's interleaved subtract order; the SIMD families accumulate the
+/// dot in 4-lane f64 FMA and subtract once. Both orders are fixed per
+/// process, so the chained-vs-fused bit contract holds either way.
 #[inline]
 fn forward_subst_col(ld: &[f32], n: usize, col: &mut [f32]) {
+    if kernel::active() == kernel::Kind::Scalar {
+        for i in 0..n {
+            let lrow = &ld[i * n..i * n + i + 1];
+            let mut s = col[i] as f64;
+            for k in 0..i {
+                s -= lrow[k] as f64 * col[k] as f64;
+            }
+            col[i] = (s / lrow[i] as f64) as f32;
+        }
+        return;
+    }
     for i in 0..n {
         let lrow = &ld[i * n..i * n + i + 1];
-        let mut s = col[i] as f64;
-        for k in 0..i {
-            s -= lrow[k] as f64 * col[k] as f64;
-        }
-        col[i] = (s / lrow[i] as f64) as f32;
+        let dot = kernel::dot_f64(&lrow[..i], &col[..i]);
+        col[i] = ((col[i] as f64 - dot) / lrow[i] as f64) as f32;
     }
 }
 
@@ -236,7 +261,7 @@ pub fn qr(a: &Tensor) -> Result<(Tensor, Tensor)> {
 /// used by MergeMoE: `A` is (k × s) with s ≥ k samples, `B` is (d × s).
 /// Solved through the normal equations `X (A Aᵀ) = B Aᵀ`.
 pub fn lstsq_rows(a: &Tensor, b: &Tensor, ridge: f64) -> Result<Tensor> {
-    let aat = ops::matmul_bt(a, a)?; // (k,k)
+    let aat = ops::syrk_bt(a)?; // (k,k) — symmetric rank-k, half the flops
     let bat = ops::matmul_bt(b, a)?; // (d,k)
     // Solve X aat = bat  ⇔  aatᵀ Xᵀ = batᵀ; aat symmetric.
     let xt = solve_spd(&aat, &ops::transpose(&bat)?, ridge)?;
@@ -257,7 +282,7 @@ pub fn lstsq_from_gram(aat: &Tensor, bat: &Tensor, ridge: f64) -> Result<Tensor>
 /// materializes `A†`.
 pub fn pinv_rows(a: &Tensor, ridge: f64) -> Result<Tensor> {
     let k = a.shape()[0];
-    let aat = ops::matmul_bt(a, a)?;
+    let aat = ops::syrk_bt(a)?;
     let inv = solve_spd(&aat, &Tensor::eye(k), ridge)?;
     ops::matmul(&ops::transpose(a)?, &inv)
 }

@@ -43,6 +43,9 @@ fn usage() -> &'static str {
      common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
                    --threads N (worker threads; default: MERGEMOE_THREADS env\n\
                    or all cores; 1 = fully serial)\n\
+                   MERGEMOE_KERNEL=auto|scalar|avx2|neon (compute kernel,\n\
+                   fixed per process; default auto-detects, scalar is the\n\
+                   seed-exact reference)\n\
      repro:     --exp table1..table5|fig2a|fig2b|fig3|fig4|fig5|loss|all\n\
      compress:  --model NAME --layers 2,3 --m M --alg mergemoe|msmoe|average|zipit|oracle\n\
                 [--calib-seqs N] [--calib-tasks t1,t2] [--out FILE.npz]\n\
@@ -72,6 +75,7 @@ fn run() -> Result<()> {
     if threads > 1 {
         info!("compute: {threads} worker threads");
     }
+    info!("compute: {} kernel", mergemoe::kernel::name());
     let engine = EngineSel::parse(args.get_or("engine", "pjrt"))?;
     if args.subcommand.as_deref() == Some("sweep") {
         // sweeps run even on a bare checkout (synthetic-model fallback), so

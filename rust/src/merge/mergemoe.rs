@@ -30,7 +30,7 @@ use anyhow::Result;
 use super::plan::MergePlan;
 use super::GramBackend;
 use crate::linalg;
-use crate::model::native::expert_inner_into;
+use crate::model::native::expert_swiglu_into;
 use crate::model::workspace::{PanelScratch, Workspace};
 use crate::model::{Expert, MoeLayer};
 use crate::tensor::{ops, Tensor};
@@ -58,20 +58,21 @@ fn panel_compute(
     let rows = chi - clo;
     sc.xs.reuse2(rows, d);
     sc.xs.data_mut().copy_from_slice(&x.data()[clo * d..chi * d]);
-    // Ŷ chunk: frequency-weighted member outputs, transposed
+    // Ŷ chunk: frequency-weighted member outputs, transposed. Each member's
+    // contribution `w_j · E_j(X̂)` accumulates through the fused
+    // scale-and-add GEMM epilogue — the member output batch is never
+    // materialized.
     sc.yhat.reuse2(rows, d);
     sc.yhat.data_mut().fill(0.0);
     for &j in members {
         let ex = &moe.experts[j];
-        expert_inner_into(ex, &sc.xs, &mut sc.g, &mut sc.u)?;
-        sc.ey.reuse2(rows, ex.wd.shape()[0]);
-        ops::matmul_bt_into(&sc.g, &ex.wd, &mut sc.ey)?;
-        sc.yhat.axpy(weights[j] as f32, &sc.ey)?;
+        expert_swiglu_into(ex, &sc.xs, &mut sc.g)?;
+        ops::matmul_bt_scaled_add_into(&sc.g, &ex.wd, weights[j] as f32, &mut sc.yhat)?;
     }
     sc.y.reuse2(d, rows);
     ops::transpose_into(&sc.yhat, &mut sc.y)?;
-    // P chunk: inner activations of the averaged gate/up, transposed
-    expert_inner_into(avg, &sc.xs, &mut sc.g, &mut sc.u)?;
+    // P chunk: fused SwiGLU activations of the averaged gate/up, transposed
+    expert_swiglu_into(avg, &sc.xs, &mut sc.g)?;
     let f = avg.wg.shape()[0];
     sc.p.reuse2(f, rows);
     ops::transpose_into(&sc.g, &mut sc.p)

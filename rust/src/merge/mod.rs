@@ -61,7 +61,9 @@ pub struct NativeGram;
 
 impl GramBackend for NativeGram {
     fn gram(&mut self, p: &Tensor, y: &Tensor) -> Result<(Tensor, Tensor)> {
-        Ok((ops::matmul_bt(p, p)?, ops::matmul_bt(y, p)?))
+        // P Pᵀ through the symmetric rank-k kernel: lower triangle only,
+        // mirrored — exactly equal to the full product at half the flops.
+        Ok((ops::syrk_bt(p)?, ops::matmul_bt(y, p)?))
     }
 
     fn fork(&self) -> Option<Box<dyn GramBackend + Send>> {

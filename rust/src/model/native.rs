@@ -18,10 +18,19 @@
 //! (`tests/workspace_reuse.rs`).
 //!
 //! Parallelism (see `util::par`): attention fans out per sequence, the MoE
-//! MLP per expert slot, and the matmul kernels underneath per output row —
-//! nested regions degrade to serial automatically, so the layers compose.
-//! The scatter-accumulate back into the output always runs serially in
-//! expert order, keeping results bit-identical at every thread count.
+//! gather + SwiGLU phase per expert slot, and the matmul kernels underneath
+//! per output row — nested regions degrade to serial automatically, so the
+//! layers compose. The down-projection runs as a fused scale-and-scatter
+//! GEMM (`ops::matmul_bt_scatter_add_into`), serial in expert order with
+//! row-parallel lanes inside (gathered token rows are distinct), keeping
+//! results bit-identical at every thread count.
+//!
+//! Fused epilogues (kernel layer): the expert FFN computes
+//! `silu(x W_Gᵀ) ⊙ (x W_Uᵀ)` in one pass ([`expert_swiglu_into`] — the U
+//! panel is never materialized), and the merged-expert recombination
+//! accumulates `w · (g W_Dᵀ)` straight into the layer output (the
+//! per-expert output batch is never materialized). Under the scalar kernel
+//! both fusions are arithmetic-identical to the historical unfused path.
 
 use anyhow::{bail, Result};
 
@@ -51,36 +60,20 @@ fn dims2(x: &Tensor, what: &str) -> Result<(usize, usize)> {
 }
 
 /// The pre-down-projection activations `silu(W_G x) ⊙ (W_U x)` computed
-/// into caller-owned panels: the result lands in `g` (shape (T, f)); `u`
-/// is overwritten scratch.
-pub fn expert_inner_into(ex: &Expert, x: &Tensor, g: &mut Tensor, u: &mut Tensor) -> Result<()> {
+/// into the caller-owned panel `h` (shape (T, f)) by the fused SwiGLU
+/// kernel — one pass over `x`, no U intermediate.
+pub fn expert_swiglu_into(ex: &Expert, x: &Tensor, h: &mut Tensor) -> Result<()> {
     let (t, _) = dims2(x, "expert input")?;
     let f = ex.wg.shape()[0];
-    g.reuse2(t, f);
-    u.reuse2(t, f);
-    ops::matmul_bt_into(x, &ex.wg, g)?;
-    ops::matmul_bt_into(x, &ex.wu, u)?;
-    for (hv, uv) in g.data_mut().iter_mut().zip(u.data()) {
-        *hv = ops::silu(*hv) * uv;
-    }
-    Ok(())
-}
-
-/// Apply one expert to the gathered batch in `sc.xs`, leaving the output in
-/// `sc.ys` (and the SwiGLU panels in `sc.g`/`sc.u`).
-fn expert_forward_scratch(ex: &Expert, sc: &mut ExpertScratch) -> Result<()> {
-    expert_inner_into(ex, &sc.xs, &mut sc.g, &mut sc.u)?;
-    let t = sc.xs.shape()[0];
-    sc.ys.reuse2(t, ex.wd.shape()[0]);
-    ops::matmul_bt_into(&sc.g, &ex.wd, &mut sc.ys)
+    h.reuse2(t, f);
+    ops::swiglu_bt_into(x, &ex.wg, &ex.wu, h)
 }
 
 /// Apply one expert to a batch of rows: `W_D (silu(W_G x) ⊙ (W_U x))`.
-/// Allocating wrapper around [`expert_inner_into`].
+/// Allocating wrapper around [`expert_swiglu_into`].
 pub fn expert_forward(ex: &Expert, x: &Tensor) -> Result<Tensor> {
     let mut g = Tensor::default();
-    let mut u = Tensor::default();
-    expert_inner_into(ex, x, &mut g, &mut u)?;
+    expert_swiglu_into(ex, x, &mut g)?;
     let mut out = Tensor::default();
     out.reuse2(x.shape()[0], ex.wd.shape()[0]);
     ops::matmul_bt_into(&g, &ex.wd, &mut out)?;
@@ -91,8 +84,7 @@ pub fn expert_forward(ex: &Expert, x: &Tensor) -> Result<Tensor> {
 /// rows of the least-squares system (transposed: returned as (T, f)).
 pub fn expert_inner(ex: &Expert, x: &Tensor) -> Result<Tensor> {
     let mut g = Tensor::default();
-    let mut u = Tensor::default();
-    expert_inner_into(ex, x, &mut g, &mut u)?;
+    expert_swiglu_into(ex, x, &mut g)?;
     Ok(g)
 }
 
@@ -134,18 +126,17 @@ pub fn moe_forward_ws(moe: &MoeLayer, x: &Tensor, ws: &mut Workspace) -> Result<
     } else {
         &ws.r
     };
-    // gather tokens per expert so each expert runs one batched matmul;
-    // expert slots are independent lanes and run in parallel. Tokens may be
-    // routed to several experts (top-K), so the weighted scatter back into
-    // `moe_out` stays serial, in expert order — deterministic at any thread
-    // count.
+    // Phase 1 (parallel over expert slots): gather each expert's tokens and
+    // routing weights, then run the fused SwiGLU panel — tokens may be
+    // routed to several experts (top-K), so phase 2's accumulation into
+    // `moe_out` stays serial in expert order.
     if ws.experts.len() < e {
         ws.experts.resize_with(e, ExpertScratch::new);
     }
-    // rough per-layer MoE work: top_k experts each run 3 (f,d) matmuls per
-    // routed token — skip the fan-out when the whole batch is tiny
+    // rough phase-1 work: top_k experts each run the 2-GEMM SwiGLU panel
+    // per routed token — skip the fan-out when the whole batch is tiny
     let f_dim = moe.experts.first().map(|ex| ex.wg.shape()[0]).unwrap_or(0);
-    let parallel = 6 * t * moe.top_k * f_dim * d >= par::PAR_MIN_FLOPS;
+    let parallel = 4 * t * moe.top_k * f_dim * d >= par::PAR_MIN_FLOPS;
     {
         let experts = &moe.experts;
         let slots = &mut ws.experts[..e];
@@ -153,25 +144,32 @@ pub fn moe_forward_ws(moe: &MoeLayer, x: &Tensor, ws: &mut Workspace) -> Result<
             let sc = &mut slot[0];
             sc.err = None;
             sc.tok_idx.clear();
+            sc.scales.clear();
             for ti in 0..t {
-                if r.at2(ti, ei) != 0.0 {
+                let w = r.at2(ti, ei);
+                if w != 0.0 {
                     sc.tok_idx.push(ti);
+                    sc.scales.push(w);
                 }
             }
             let tn = sc.tok_idx.len();
             sc.xs.reuse2(tn, d);
             if tn == 0 {
-                sc.ys.reuse2(0, d);
                 return;
             }
             for (row, &ti) in sc.tok_idx.iter().enumerate() {
                 sc.xs.row_mut(row).copy_from_slice(x.row(ti));
             }
-            if let Err(err) = expert_forward_scratch(&experts[ei], sc) {
+            if let Err(err) = expert_swiglu_into(&experts[ei], &sc.xs, &mut sc.g) {
                 sc.err = Some(err);
             }
         });
     }
+    // Phase 2 (serial in expert order, row-parallel inside the kernel): the
+    // down-projection runs as a fused scale-and-scatter GEMM straight into
+    // `moe_out` — gathered token rows are distinct within one expert, so
+    // lanes never collide, and the serial expert loop keeps the per-token
+    // accumulation order fixed at every thread count.
     ws.counts.clear();
     ws.counts.resize(e, 0.0);
     ws.mass.clear();
@@ -187,21 +185,21 @@ pub fn moe_forward_ws(moe: &MoeLayer, x: &Tensor, ws: &mut Workspace) -> Result<
             continue;
         }
         ws.counts[ei] = sc.tok_idx.len() as f64;
-        for (row, &ti) in sc.tok_idx.iter().enumerate() {
-            let w = r.at2(ti, ei);
+        for &w in sc.scales.iter() {
             ws.mass[ei] += w as f64;
-            let orow = ws.moe_out.row_mut(ti);
-            for (o, &y) in orow.iter_mut().zip(sc.ys.row(row)) {
-                *o += w * y;
-            }
         }
+        ops::matmul_bt_scatter_add_into(
+            &sc.g,
+            &moe.experts[ei].wd,
+            &sc.scales,
+            &sc.tok_idx,
+            &mut ws.moe_out,
+        )?;
     }
     if let Some(sh) = &moe.shared {
         let sc = &mut ws.shared;
-        expert_inner_into(sh, x, &mut sc.g, &mut sc.u)?;
-        sc.ys.reuse2(t, d);
-        ops::matmul_bt_into(&sc.g, &sh.wd, &mut sc.ys)?;
-        ws.moe_out.axpy(1.0, &sc.ys)?;
+        expert_swiglu_into(sh, x, &mut sc.g)?;
+        ops::matmul_bt_scaled_add_into(&sc.g, &sh.wd, 1.0, &mut ws.moe_out)?;
     }
     Ok(())
 }

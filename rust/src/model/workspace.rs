@@ -34,21 +34,24 @@
 
 use crate::tensor::Tensor;
 
-/// Per-expert (or shared-expert) scratch: the token gather, the SwiGLU
-/// gate/up activation panels, and the expert output batch. One slot per
-/// expert lane so the per-expert fan-out runs without allocation.
+/// Per-expert (or shared-expert) scratch: the token gather, its routing
+/// weights, and the fused SwiGLU activation panel. One slot per expert lane
+/// so the per-expert fan-out runs without allocation. The kernel layer's
+/// fused epilogues removed two buffers this struct used to carry: the
+/// up-projection panel (folded into the SwiGLU kernel) and the expert
+/// output batch (the down-projection scatters straight into the layer
+/// output).
 #[derive(Default)]
 pub struct ExpertScratch {
-    /// Tokens routed to this expert (indices into the layer input).
+    /// Tokens routed to this expert (indices into the layer input,
+    /// strictly increasing — the scatter-GEMM contract).
     pub tok_idx: Vec<usize>,
+    /// Routing weight of each gathered token (parallel to `tok_idx`).
+    pub scales: Vec<f32>,
     /// Gathered input rows: (T_e, d).
     pub xs: Tensor,
-    /// Gate activations, reused as the SwiGLU product: (T_e, f).
+    /// Fused SwiGLU activations `silu(xs W_Gᵀ) ⊙ (xs W_Uᵀ)`: (T_e, f).
     pub g: Tensor,
-    /// Up-projection activations: (T_e, f).
-    pub u: Tensor,
-    /// Expert output batch: (T_e, d).
-    pub ys: Tensor,
     /// Error raised inside a parallel lane (checked after the region).
     pub err: Option<anyhow::Error>,
 }
@@ -66,12 +69,10 @@ impl ExpertScratch {
 pub struct PanelScratch {
     /// Calibration input rows of this chunk: (chunk, d).
     pub xs: Tensor,
-    /// Expert-eval scratch (gate/up panels): (chunk, f).
+    /// Fused SwiGLU activations of one expert on the chunk: (chunk, f).
     pub g: Tensor,
-    pub u: Tensor,
-    /// One member expert's output: (chunk, d).
-    pub ey: Tensor,
-    /// Frequency-weighted member outputs: (chunk, d).
+    /// Frequency-weighted member outputs, accumulated by the
+    /// scale-and-add GEMM epilogue: (chunk, d).
     pub yhat: Tensor,
     /// P panel (transposed inner activations of the averaged expert): (f, chunk).
     pub p: Tensor,

@@ -1,34 +1,48 @@
-//! Tensor operations: parallel register-tiled matmul kernels plus the
+//! Tensor operations: the runtime-dispatched GEMM family plus the
 //! neural-net primitives the native engine needs (softmax, layernorm, silu,
 //! top-k).
 //!
-//! The matmul family is the native engine's hot path. All three variants are
-//! parallelized over output rows through [`par::par_chunks_mut`] and use
-//! register-tiled micro-kernels (4-wide unrolling with independent
-//! accumulators, which LLVM turns into vector FMAs):
+//! The matmul family is the native engine's hot path. Since the kernel
+//! layer landed, every variant validates shapes here and dispatches to
+//! [`crate::kernel`] — runtime-selected SIMD microkernels (AVX2+FMA on
+//! x86_64, NEON on aarch64, seed-exact scalar fallback; `MERGEMOE_KERNEL`
+//! overrides), parallelized over output rows:
 //!
-//! * [`matmul`]    — dense i-k-j kernel, 4 `a`-values per pass over the
-//!   output row. No sparsity branch: the dense path is branch-free so it
-//!   vectorizes.
-//! * [`matmul_bt`] — `a @ bᵀ`, 4 output columns per pass sharing one read of
-//!   the `a` row (every linear layer uses the `y = x Wᵀ` convention).
+//! * [`matmul`]    — dense `a @ b`; cache-blocked and panel-packed on the
+//!   AVX2 path at large shapes.
+//! * [`matmul_bt`] — `a @ bᵀ` (every linear layer uses the `y = x Wᵀ`
+//!   convention; both operands stream contiguously, so this form never
+//!   needs packing).
 //! * [`matmul_at`] — `aᵀ @ b`; keeps the zero-skip because its `a` operands
-//!   (Theorem-1 usage/assignment masses, column-chunked accumulation
-//!   panels) are the ones that arrive sparse. The dense routing redirect
-//!   `r @ mapᵀ` goes through `matmul_bt`, whose branch-free kernel already
-//!   handles top-K-sparse `r` rows at full vector speed.
+//!   (Theorem-1 usage/assignment masses) are the ones that arrive sparse.
+//!
+//! Fused-epilogue variants eliminate a full write+re-read of an
+//! intermediate matrix each:
+//!
+//! * [`swiglu_bt_into`]            — `silu(x W_Gᵀ) ⊙ (x W_Uᵀ)` in one pass
+//!   (the expert FFN; the U panel is never materialized);
+//! * [`matmul_bt_scaled_add_into`] — `out += α · a @ bᵀ` (shared-expert
+//!   residual, frequency-weighted Ŷ panels);
+//! * [`matmul_bt_scatter_add_into`] — `out[dst_r] += w_r · a_r @ bᵀ`
+//!   (merged-expert output recombination);
+//! * [`syrk_bt`]                   — the symmetric rank-k Gram update
+//!   `P Pᵀ`, computing the lower triangle and mirroring it.
 //!
 //! Every variant has a `*_into` twin that writes a caller-owned output
 //! tensor, so steady-state serving loops can run without per-call
-//! allocation. Outputs are fully overwritten — buffers need not be zeroed.
+//! allocation. Overwriting variants fully overwrite — buffers need not be
+//! zeroed; `*_add_into` variants accumulate.
 //!
-//! Determinism: each output element is reduced in a fixed order that does
-//! not depend on the thread count, so results are bit-identical for any
-//! `MERGEMOE_THREADS` setting.
+//! Determinism: the kernel choice is fixed per process and each output
+//! element is reduced in an order that depends only on shapes, so results
+//! are bit-identical for any `MERGEMOE_THREADS` setting
+//! (`tests/par_consistency.rs`); scalar-vs-SIMD agreement is pinned to
+//! tolerance in `tests/kernel_consistency.rs`.
 
 use anyhow::{bail, Result};
 
 use super::Tensor;
+use crate::kernel;
 use crate::util::par;
 
 /// `a (m,k) @ b (k,n) -> (m,n)`.
@@ -51,44 +65,8 @@ pub fn matmul_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     if m == 0 || n == 0 {
         return Ok(());
     }
-    let ad = a.data();
-    let bd = b.data();
-    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
-    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
-        matmul_row(&ad[i * k..(i + 1) * k], bd, n, orow);
-    });
+    kernel::gemm_nn(a.data(), b.data(), m, k, n, out.data_mut());
     Ok(())
-}
-
-/// One dense output row: `orow = arow @ b`, 4 `a` entries per sweep so the
-/// inner loop is a branch-free chain of independent multiply-adds.
-#[inline]
-fn matmul_row(arow: &[f32], bd: &[f32], n: usize, orow: &mut [f32]) {
-    orow.fill(0.0);
-    let k = arow.len();
-    let mut kk = 0;
-    while kk + 4 <= k {
-        let a0 = arow[kk];
-        let a1 = arow[kk + 1];
-        let a2 = arow[kk + 2];
-        let a3 = arow[kk + 3];
-        let b0 = &bd[kk * n..kk * n + n];
-        let b1 = &bd[(kk + 1) * n..(kk + 1) * n + n];
-        let b2 = &bd[(kk + 2) * n..(kk + 2) * n + n];
-        let b3 = &bd[(kk + 3) * n..(kk + 3) * n + n];
-        for (j, o) in orow.iter_mut().enumerate() {
-            *o += a0 * b0[j] + a1 * b1[j] + a2 * b2[j] + a3 * b3[j];
-        }
-        kk += 4;
-    }
-    while kk < k {
-        let av = arow[kk];
-        let brow = &bd[kk * n..kk * n + n];
-        for (o, &bv) in orow.iter_mut().zip(brow) {
-            *o += av * bv;
-        }
-        kk += 1;
-    }
 }
 
 /// `a (m,k) @ bᵀ where b is (n,k) -> (m,n)`; both operands read row-major.
@@ -111,45 +89,124 @@ pub fn matmul_bt_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     if m == 0 || n == 0 {
         return Ok(());
     }
-    let ad = a.data();
-    let bd = b.data();
-    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
-    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
-        let arow = &ad[i * k..(i + 1) * k];
-        // 4 output columns per pass: one read of `arow` feeds 4 independent
-        // dot-product accumulators.
-        let mut j = 0;
-        while j + 4 <= n {
-            let b0 = &bd[j * k..j * k + k];
-            let b1 = &bd[(j + 1) * k..(j + 1) * k + k];
-            let b2 = &bd[(j + 2) * k..(j + 2) * k + k];
-            let b3 = &bd[(j + 3) * k..(j + 3) * k + k];
-            let mut s0 = 0.0f32;
-            let mut s1 = 0.0f32;
-            let mut s2 = 0.0f32;
-            let mut s3 = 0.0f32;
-            for (kk, &av) in arow.iter().enumerate() {
-                s0 += av * b0[kk];
-                s1 += av * b1[kk];
-                s2 += av * b2[kk];
-                s3 += av * b3[kk];
-            }
-            orow[j] = s0;
-            orow[j + 1] = s1;
-            orow[j + 2] = s2;
-            orow[j + 3] = s3;
-            j += 4;
+    kernel::gemm_nt(a.data(), b.data(), m, k, n, out.data_mut());
+    Ok(())
+}
+
+/// `out (m,n) += alpha · (a (m,k) @ bᵀ)` with `b` row-major (n,k) — the
+/// scale-and-accumulate epilogue. What used to be `matmul_bt_into` plus an
+/// `axpy` (a full output write and re-read) is one fused pass; the element
+/// update `o += alpha · dot` is arithmetic-identical to the old pair under
+/// the scalar kernel.
+pub fn matmul_bt_scaled_add_into(
+    a: &Tensor,
+    b: &Tensor,
+    alpha: f32,
+    out: &mut Tensor,
+) -> Result<()> {
+    let (m, k) = mat_dims(a)?;
+    let (n, k2) = mat_dims(b)?;
+    if k != k2 {
+        bail!("matmul_bt_scaled_add inner dim mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
+    }
+    check_out_shape("matmul_bt_scaled_add", out, m, n)?;
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+    kernel::gemm_nt_scaled_add(a.data(), b.data(), m, k, n, alpha, out.data_mut());
+    Ok(())
+}
+
+/// Scatter variant of [`matmul_bt_scaled_add_into`]:
+/// `out[dst[r]] += scales[r] · (a_r @ bᵀ)` for each row `r` of `a`. The
+/// merged-expert recombination of `moe_forward_ws` runs on this — the
+/// per-expert output batch is never materialized. `dst` must be strictly
+/// increasing (gathered token indices are) so destination rows are provably
+/// distinct and the row fan-out is race-free; rows of `out` not named in
+/// `dst` are left untouched.
+pub fn matmul_bt_scatter_add_into(
+    a: &Tensor,
+    b: &Tensor,
+    scales: &[f32],
+    dst: &[usize],
+    out: &mut Tensor,
+) -> Result<()> {
+    let (m, k) = mat_dims(a)?;
+    let (n, k2) = mat_dims(b)?;
+    if k != k2 {
+        bail!("matmul_bt_scatter_add inner dim mismatch: {:?} @ {:?}ᵀ", a.shape(), b.shape());
+    }
+    let (t, oc) = mat_dims(out)?;
+    if oc != n {
+        bail!("matmul_bt_scatter_add: output has {oc} cols, expected {n}");
+    }
+    if scales.len() != m || dst.len() != m {
+        bail!(
+            "matmul_bt_scatter_add: {m} rows need {m} scales/dst, got {}/{}",
+            scales.len(),
+            dst.len()
+        );
+    }
+    if !dst.windows(2).all(|w| w[0] < w[1]) {
+        bail!("matmul_bt_scatter_add: dst must be strictly increasing");
+    }
+    if let Some(&last) = dst.last() {
+        if last >= t {
+            bail!("matmul_bt_scatter_add: dst row {last} out of bounds for {t} rows");
         }
-        while j < n {
-            let brow = &bd[j * k..j * k + k];
-            let mut acc = 0.0f32;
-            for (x, y) in arow.iter().zip(brow) {
-                acc += x * y;
-            }
-            orow[j] = acc;
-            j += 1;
-        }
-    });
+    }
+    if m == 0 || n == 0 {
+        return Ok(());
+    }
+    // SAFETY: the checks above establish the kernel's contract — `dst` is
+    // strictly increasing and its last (largest) entry indexes a full row
+    // inside `out`.
+    unsafe {
+        kernel::gemm_nt_scatter_add(a.data(), b.data(), m, k, n, scales, dst, out.data_mut());
+    }
+    Ok(())
+}
+
+/// Fused SwiGLU panel: `out (m,f) = silu(x @ wgᵀ) ⊙ (x @ wuᵀ)` with
+/// `wg`/`wu` row-major (f,d). One pass over each `x` row feeds both dot
+/// products; under the scalar kernel the result is bit-identical to the
+/// historical two-GEMM + elementwise path.
+pub fn swiglu_bt_into(x: &Tensor, wg: &Tensor, wu: &Tensor, out: &mut Tensor) -> Result<()> {
+    let (m, k) = mat_dims(x)?;
+    let (f, k2) = mat_dims(wg)?;
+    if k != k2 {
+        bail!("swiglu_bt inner dim mismatch: {:?} @ {:?}ᵀ", x.shape(), wg.shape());
+    }
+    if wu.shape() != wg.shape() {
+        bail!("swiglu_bt gate/up shape mismatch: {:?} vs {:?}", wg.shape(), wu.shape());
+    }
+    check_out_shape("swiglu_bt", out, m, f)?;
+    if m == 0 || f == 0 {
+        return Ok(());
+    }
+    kernel::gemm_nt_swiglu(x.data(), wg.data(), wu.data(), m, k, f, out.data_mut());
+    Ok(())
+}
+
+/// Symmetric rank-k update `p (f,s) @ pᵀ -> (f,f)` — the MergeMoE Gram
+/// block `P Pᵀ`. Computes the lower triangle and mirrors it; because column
+/// dots are grouping-invariant in every kernel family, the result equals
+/// `matmul_bt(p, p)` exactly at half the flops.
+pub fn syrk_bt(p: &Tensor) -> Result<Tensor> {
+    let (f, _) = mat_dims(p)?;
+    let mut out = Tensor::zeros(&[f, f]);
+    syrk_bt_into(p, &mut out)?;
+    Ok(out)
+}
+
+/// [`syrk_bt`] into a preallocated `(f,f)` output (fully overwritten).
+pub fn syrk_bt_into(p: &Tensor, out: &mut Tensor) -> Result<()> {
+    let (f, s) = mat_dims(p)?;
+    check_out_shape("syrk_bt", out, f, f)?;
+    if f == 0 {
+        return Ok(());
+    }
+    kernel::syrk_nt(p.data(), f, s, out.data_mut());
     Ok(())
 }
 
@@ -175,22 +232,7 @@ pub fn matmul_at_into(a: &Tensor, b: &Tensor, out: &mut Tensor) -> Result<()> {
     if m == 0 || n == 0 {
         return Ok(());
     }
-    let ad = a.data();
-    let bd = b.data();
-    let parallel = 2 * m * k * n >= par::PAR_MIN_FLOPS;
-    par::par_chunks_mut_if(parallel, out.data_mut(), n, |i, orow| {
-        orow.fill(0.0);
-        for kk in 0..k {
-            let av = ad[kk * m + i];
-            if av == 0.0 {
-                continue; // routing masses are top-K sparse
-            }
-            let brow = &bd[kk * n..kk * n + n];
-            for (o, &bv) in orow.iter_mut().zip(brow) {
-                *o += av * bv;
-            }
-        }
-    });
+    kernel::gemm_tn(a.data(), b.data(), k, m, n, out.data_mut());
     Ok(())
 }
 
@@ -313,16 +355,22 @@ fn layernorm_rows(t: &mut Tensor, gamma: &[f32], beta: &[f32]) -> Result<()> {
     Ok(())
 }
 
-/// SiLU (swish) activation, matching `jax.nn.silu`.
+/// SiLU (swish) activation, matching `jax.nn.silu`. One definition shared
+/// with the fused kernel epilogues (`kernel::silu`), so fused and unfused
+/// paths agree bit for bit.
 #[inline]
 pub fn silu(x: f32) -> f32 {
-    x / (1.0 + (-x).exp())
+    kernel::silu(x)
 }
 
 /// Indices and values of the top-k entries of a row (descending, stable on
 /// ties by lower index — matches `jax.lax.top_k`). Ordering is total
 /// (`f32::total_cmp`), so NaN logits sort deterministically (NaN compares
 /// greater than +inf) instead of panicking.
+#[deprecated(
+    note = "test-only convenience: it allocates two Vecs per call; \
+            production paths use `top_k_order` with a reused buffer"
+)]
 pub fn top_k(row: &[f32], k: usize) -> (Vec<usize>, Vec<f32>) {
     let mut idx = Vec::new();
     top_k_order(row, k, &mut idx);
@@ -448,6 +496,86 @@ mod tests {
     }
 
     #[test]
+    fn swiglu_fused_matches_unfused() {
+        let mut rng = Rng::new(24);
+        for (t, d, f) in [(7usize, 19usize, 11usize), (1, 8, 1), (5, 1, 4)] {
+            let x = Tensor::randn(&[t, d], 1.0, &mut rng);
+            let wg = Tensor::randn(&[f, d], 1.0, &mut rng);
+            let wu = Tensor::randn(&[f, d], 1.0, &mut rng);
+            let g = matmul_bt(&x, &wg).unwrap();
+            let u = matmul_bt(&x, &wu).unwrap();
+            let mut fused = Tensor::full(&[t, f], f32::NAN);
+            swiglu_bt_into(&x, &wg, &wu, &mut fused).unwrap();
+            for i in 0..t {
+                for j in 0..f {
+                    assert_eq!(
+                        fused.at2(i, j),
+                        silu(g.at2(i, j)) * u.at2(i, j),
+                        "t={t} d={d} f={f} ({i},{j})"
+                    );
+                }
+            }
+        }
+        // gate/up shape mismatch is an error
+        let x = Tensor::zeros(&[2, 4]);
+        let wg = Tensor::zeros(&[3, 4]);
+        let wu = Tensor::zeros(&[2, 4]);
+        let mut out = Tensor::zeros(&[2, 3]);
+        assert!(swiglu_bt_into(&x, &wg, &wu, &mut out).is_err());
+    }
+
+    #[test]
+    fn scaled_add_matches_matmul_plus_axpy() {
+        let mut rng = Rng::new(25);
+        let a = Tensor::randn(&[9, 13], 1.0, &mut rng);
+        let b = Tensor::randn(&[6, 13], 1.0, &mut rng);
+        let mut want = Tensor::randn(&[9, 6], 1.0, &mut rng);
+        let mut got = want.clone();
+        let y = matmul_bt(&a, &b).unwrap();
+        want.axpy(0.37, &y).unwrap();
+        matmul_bt_scaled_add_into(&a, &b, 0.37, &mut got).unwrap();
+        assert_eq!(got.data(), want.data());
+    }
+
+    #[test]
+    fn scatter_add_matches_serial_scatter() {
+        let mut rng = Rng::new(26);
+        let a = Tensor::randn(&[4, 10], 1.0, &mut rng);
+        let b = Tensor::randn(&[5, 10], 1.0, &mut rng);
+        let scales = [0.5f32, -1.25, 2.0, 0.125];
+        let dst = [1usize, 2, 5, 6];
+        let mut want = Tensor::randn(&[8, 5], 1.0, &mut rng);
+        let mut got = want.clone();
+        let y = matmul_bt(&a, &b).unwrap();
+        for (r, (&w, &ti)) in scales.iter().zip(&dst).enumerate() {
+            for (o, &v) in want.row_mut(ti).iter_mut().zip(y.row(r)) {
+                *o += w * v;
+            }
+        }
+        matmul_bt_scatter_add_into(&a, &b, &scales, &dst, &mut got).unwrap();
+        assert_eq!(got.data(), want.data());
+
+        // non-increasing dst and out-of-bounds dst are errors, not UB
+        let mut out = Tensor::zeros(&[8, 5]);
+        assert!(matmul_bt_scatter_add_into(&a, &b, &scales, &[2, 1, 5, 6], &mut out).is_err());
+        assert!(matmul_bt_scatter_add_into(&a, &b, &scales, &[1, 2, 5, 8], &mut out).is_err());
+        assert!(matmul_bt_scatter_add_into(&a, &b, &scales[..3], &dst, &mut out).is_err());
+    }
+
+    #[test]
+    fn syrk_equals_full_bt_product() {
+        let mut rng = Rng::new(27);
+        for (f, s) in [(6usize, 40usize), (1, 3), (9, 1), (5, 5)] {
+            let p = Tensor::randn(&[f, s], 1.0, &mut rng);
+            let want = matmul_bt(&p, &p).unwrap();
+            let got = syrk_bt(&p).unwrap();
+            assert_eq!(got.data(), want.data(), "f={f} s={s}");
+        }
+        // degenerate: f = 0
+        assert_eq!(syrk_bt(&Tensor::zeros(&[0, 4])).unwrap().shape(), &[0, 0]);
+    }
+
+    #[test]
     fn softmax_rows_normalized() {
         let t = Tensor::from_vec(&[2, 3], vec![1., 2., 3., 1000., 1000., 1000.]).unwrap();
         let s = softmax_rows(&t);
@@ -486,6 +614,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn top_k_matches_sort() {
         let row = [0.1, 0.7, 0.3, 0.7, 0.05];
         let (idx, vals) = top_k(&row, 3);
@@ -494,6 +623,7 @@ mod tests {
     }
 
     #[test]
+    #[allow(deprecated)]
     fn top_k_tolerates_nan() {
         // Regression: partial_cmp().unwrap() used to panic here. total_cmp
         // orders NaN above +inf, so NaN logits win deterministically and the

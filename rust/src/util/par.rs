@@ -477,6 +477,36 @@ pub fn par_chunks2_mut_if<T, U, F>(
     });
 }
 
+/// Run `f(i)` for every `i in 0..n` in parallel, returning nothing — the
+/// side-effect fan-out primitive. Unlike [`par_map_range_if`] it allocates
+/// **nothing** (no per-block result vectors), so it is safe inside the
+/// zero-alloc hot paths: the scatter-accumulate GEMM epilogue fans input
+/// rows over disjoint output rows through it, and the SYRK mirror fans
+/// strictly-upper row copies. Same determinism contract as every other
+/// primitive: block boundaries depend only on `n` and the thread knob.
+pub fn par_for_range_if<F>(parallel: bool, n: usize, f: F)
+where
+    F: Fn(usize) + Sync,
+{
+    let threads = max_threads().min(n);
+    if !parallel || threads <= 1 || in_parallel_region() {
+        for i in 0..n {
+            f(i);
+        }
+        return;
+    }
+    let mut bbuf = [(0usize, 0usize); MAX_BLOCKS];
+    let nb = blocks_into(n, threads, &mut bbuf);
+    let idx_blocks = &bbuf[..nb];
+    let f_ref = &f;
+    run_region(nb, threads, &|bi| {
+        let (lo, hi) = idx_blocks[bi];
+        for i in lo..hi {
+            f_ref(i);
+        }
+    });
+}
+
 /// Map `f` over `0..n` in parallel, returning results in index order. The
 /// read-only fan-out primitive: per-expert batches, per-cluster merges,
 /// calibration chunk computation. Items are assumed coarse (whole expert
@@ -673,6 +703,22 @@ mod tests {
             par_items_with_slots(force, &mut none, &mut slots, |_, _, _| {
                 panic!("must not be called")
             });
+        }
+    }
+
+    #[test]
+    fn par_for_range_visits_every_index_once() {
+        use std::sync::atomic::AtomicU32;
+        for force in [true, false] {
+            let marks: Vec<AtomicU32> = (0..137).map(|_| AtomicU32::new(0)).collect();
+            par_for_range_if(force, marks.len(), |i| {
+                marks[i].fetch_add(1 + i as u32, Ordering::Relaxed);
+            });
+            for (i, m) in marks.iter().enumerate() {
+                assert_eq!(m.load(Ordering::Relaxed), 1 + i as u32, "force={force} index {i}");
+            }
+            // n = 0 is a no-op
+            par_for_range_if(force, 0, |_| panic!("must not be called"));
         }
     }
 

@@ -1,0 +1,286 @@
+//! SIMD-vs-scalar kernel agreement (the tolerance half of the kernel
+//! layer's determinism contract; the bit-identity half across thread
+//! counts lives in `tests/par_consistency.rs`):
+//!
+//! * every GEMM form — nn (direct and packed), nt, tn, fused SwiGLU,
+//!   scale-and-accumulate, scatter, SYRK — agrees between the scalar and
+//!   detected SIMD family to tight relative tolerance across ragged and
+//!   degenerate shapes (k=0, 1×N, N×1);
+//! * the dispatch knob resolves, can be forced for tests/benches, and an
+//!   unsupported forced kind degrades to scalar;
+//! * a forced kernel is *self-consistent*: repeated runs (warm per-thread
+//!   pack buffers included) are bit-identical;
+//! * the scorer pipeline agrees across kernels (accuracy-critical scores
+//!   move by no more than numeric noise), keeping the eval-sweep
+//!   method-ordering gate meaningful on every host.
+//!
+//! Every test takes the same knob mutex: the kernel choice is process-wide
+//! state, exactly like the thread knob in the sibling suites.
+
+use std::sync::Mutex;
+
+use mergemoe::kernel::{self, Kind};
+use mergemoe::model::native::expert_forward;
+use mergemoe::model::testprops::tiny_moe;
+use mergemoe::tensor::{ops, Tensor};
+use mergemoe::util::rng::Rng;
+
+/// Serializes tests that toggle the process-wide kernel knob.
+static KERNEL_KNOB: Mutex<()> = Mutex::new(());
+
+/// Run `f` under a forced kernel, restoring the entry kernel afterwards.
+fn with_kernel<R>(k: Kind, f: impl FnOnce() -> R) -> R {
+    let prev = kernel::active();
+    kernel::set_kernel(k);
+    let out = f();
+    kernel::set_kernel(prev);
+    out
+}
+
+/// The SIMD family this host detects, if any (`set_kernel` would degrade
+/// an unavailable kind to scalar, so probe by forcing-and-reading).
+fn detected_simd() -> Option<Kind> {
+    let prev = kernel::active();
+    let mut found = None;
+    for k in [Kind::Avx2, Kind::Neon] {
+        kernel::set_kernel(k);
+        if kernel::active() == k {
+            found = Some(k);
+            break;
+        }
+    }
+    kernel::set_kernel(prev);
+    found
+}
+
+fn rel_err(a: &Tensor, b: &Tensor) -> f64 {
+    a.rel_err(b)
+}
+
+#[test]
+fn dispatch_knob_forces_and_degrades() {
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let entry = kernel::active();
+    kernel::set_kernel(Kind::Scalar);
+    assert_eq!(kernel::active(), Kind::Scalar);
+    assert_eq!(kernel::name(), "scalar");
+    // forcing the kind the other architecture owns degrades to scalar
+    #[cfg(target_arch = "x86_64")]
+    {
+        kernel::set_kernel(Kind::Neon);
+        assert_eq!(kernel::active(), Kind::Scalar, "neon must degrade on x86_64");
+    }
+    #[cfg(target_arch = "aarch64")]
+    {
+        kernel::set_kernel(Kind::Avx2);
+        assert_eq!(kernel::active(), Kind::Scalar, "avx2 must degrade on aarch64");
+    }
+    kernel::set_kernel(entry);
+    assert_eq!(kernel::active(), entry);
+}
+
+#[test]
+fn gemm_family_simd_matches_scalar_on_ragged_shapes() {
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return; // scalar-only host: nothing to compare
+    };
+    let mut rng = Rng::new(0x51D0);
+    // ragged sweep plus degenerate edges: k=0, 1×N, N×1, single element
+    let mut cases: Vec<(usize, usize, usize)> = vec![
+        (1, 0, 5),
+        (1, 7, 1),
+        (5, 0, 1),
+        (1, 1, 1),
+        (1, 300, 1),
+        (64, 1, 64),
+    ];
+    for _ in 0..14 {
+        cases.push((
+            rng.range(1, 70) as usize,
+            rng.range(1, 90) as usize,
+            rng.range(1, 70) as usize,
+        ));
+    }
+    // and one past the AVX2 pack threshold (k·n ≥ 64K, m ≥ 16)
+    cases.push((24, 310, 220));
+    for &(m, k, n) in &cases {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let bt = Tensor::randn(&[n, k], 1.0, &mut rng);
+        let at = Tensor::randn(&[k, m], 1.0, &mut rng);
+        let sc = with_kernel(Kind::Scalar, || {
+            (
+                ops::matmul(&a, &b).unwrap(),
+                ops::matmul_bt(&a, &bt).unwrap(),
+                ops::matmul_at(&at, &b).unwrap(),
+            )
+        });
+        let si = with_kernel(simd, || {
+            (
+                ops::matmul(&a, &b).unwrap(),
+                ops::matmul_bt(&a, &bt).unwrap(),
+                ops::matmul_at(&at, &b).unwrap(),
+            )
+        });
+        for (which, (s, v)) in
+            [("nn", (&sc.0, &si.0)), ("nt", (&sc.1, &si.1)), ("tn", (&sc.2, &si.2))]
+        {
+            let err = rel_err(v, s);
+            assert!(err < 1e-4, "{which} m={m} k={k} n={n}: rel err {err}");
+        }
+        // k = 0 must be exactly zero under every kernel
+        if k == 0 {
+            assert!(si.0.data().iter().all(|&v| v == 0.0), "m={m} n={n}");
+            assert!(si.1.data().iter().all(|&v| v == 0.0), "m={m} n={n}");
+        }
+    }
+}
+
+#[test]
+fn fused_epilogues_simd_match_scalar() {
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return;
+    };
+    let mut rng = Rng::new(0x51D1);
+    for &(t, d, f) in &[(9usize, 21usize, 13usize), (1, 40, 1), (17, 1, 6), (3, 0, 4)] {
+        let x = Tensor::randn(&[t, d], 1.0, &mut rng);
+        let wg = Tensor::randn(&[f, d], 1.0, &mut rng);
+        let wu = Tensor::randn(&[f, d], 1.0, &mut rng);
+        let wd = Tensor::randn(&[d, f], 1.0, &mut rng);
+        let run = || {
+            let mut h = Tensor::full(&[t, f], f32::NAN);
+            ops::swiglu_bt_into(&x, &wg, &wu, &mut h).unwrap();
+            let mut acc = Tensor::zeros(&[t, d]);
+            ops::matmul_bt_scaled_add_into(&h, &wd, 0.75, &mut acc).unwrap();
+            let p = Tensor::randn(&[f.max(1), 33], 1.0, &mut Rng::new(7));
+            let gram = ops::syrk_bt(&p).unwrap();
+            (h, acc, gram)
+        };
+        let sc = with_kernel(Kind::Scalar, run);
+        let si = with_kernel(simd, run);
+        assert!(rel_err(&si.0, &sc.0) < 1e-4, "swiglu t={t} d={d} f={f}");
+        assert!(rel_err(&si.1, &sc.1) < 1e-4, "scaled_add t={t} d={d} f={f}");
+        assert!(rel_err(&si.2, &sc.2) < 1e-4, "syrk t={t} d={d} f={f}");
+        // SYRK symmetry is exact under every kernel
+        for i in 0..si.2.shape()[0] {
+            for j in 0..i {
+                assert_eq!(si.2.at2(i, j), si.2.at2(j, i));
+            }
+        }
+    }
+}
+
+#[test]
+fn scatter_recombination_simd_matches_scalar() {
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return;
+    };
+    let mut rng = Rng::new(0x51D2);
+    let a = Tensor::randn(&[6, 18], 1.0, &mut rng);
+    let b = Tensor::randn(&[10, 18], 1.0, &mut rng);
+    let scales: Vec<f32> = (0..6).map(|i| 0.25 * (i as f32 + 1.0)).collect();
+    let dst: Vec<usize> = vec![0, 2, 3, 7, 8, 11];
+    let run = || {
+        let mut out = Tensor::zeros(&[12, 10]);
+        ops::matmul_bt_scatter_add_into(&a, &b, &scales, &dst, &mut out).unwrap();
+        out
+    };
+    let sc = with_kernel(Kind::Scalar, run);
+    let si = with_kernel(simd, run);
+    assert!(rel_err(&si, &sc) < 1e-4);
+    // untouched rows stay exactly zero under both kernels
+    for miss in [1usize, 4, 9] {
+        assert!(sc.row(miss).iter().all(|&v| v == 0.0));
+        assert!(si.row(miss).iter().all(|&v| v == 0.0));
+    }
+}
+
+#[test]
+fn forced_kernel_is_bit_stable_across_reruns() {
+    // Self-consistency: a fixed kernel must reproduce itself bit for bit,
+    // including the packed path through a warm per-thread pack buffer.
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let entry = kernel::active();
+    let mut rng = Rng::new(0x51D3);
+    let a = Tensor::randn(&[24, 310], 1.0, &mut rng);
+    let b = Tensor::randn(&[310, 220], 1.0, &mut rng);
+    let mut kinds = vec![Kind::Scalar];
+    kinds.extend(detected_simd());
+    for kind in kinds {
+        kernel::set_kernel(kind);
+        let first = ops::matmul(&a, &b).unwrap();
+        for round in 0..3 {
+            let again = ops::matmul(&a, &b).unwrap();
+            assert_eq!(
+                again.data(),
+                first.data(),
+                "{} round {round} diverged",
+                kernel::name()
+            );
+        }
+    }
+    kernel::set_kernel(entry);
+}
+
+#[test]
+fn expert_forward_agrees_across_kernels() {
+    // The full fused expert pipeline (SwiGLU + down-projection) through the
+    // model layer, scalar vs SIMD.
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return;
+    };
+    let moe = tiny_moe(4, 2, 0x51D4);
+    let x = Tensor::randn(&[33, 16], 1.0, &mut Rng::new(0x51D5));
+    for ex in &moe.experts {
+        let sc = with_kernel(Kind::Scalar, || expert_forward(ex, &x).unwrap());
+        let si = with_kernel(simd, || expert_forward(ex, &x).unwrap());
+        assert!(rel_err(&si, &sc) < 1e-4);
+    }
+}
+
+#[test]
+fn scorer_scores_agree_across_kernels() {
+    // Kernel choice must not move the evaluation science: per-option scores
+    // shift by at most numeric noise, so the oracle ≥ mergemoe ≥ average
+    // ordering gate in tests/eval_consistency.rs is meaningful on every
+    // host regardless of which kernel it detects.
+    use mergemoe::eval::scorer::score_items_scored;
+    use mergemoe::eval::tasks::{gen_items, Task};
+    use mergemoe::model::testprops::synth_model;
+    use mergemoe::runtime::NativeEngine;
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return;
+    };
+    let cfg = mergemoe::config::ModelConfig {
+        name: "kernelc".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    let model = synth_model(&cfg, 0x51D6);
+    let items = gen_items(Task::Copy, 16, 5);
+    let (_, sc) = with_kernel(Kind::Scalar, || {
+        score_items_scored(&mut NativeEngine, &model, &items, 64, 8).unwrap()
+    });
+    let (_, si) = with_kernel(simd, || {
+        score_items_scored(&mut NativeEngine, &model, &items, 64, 8).unwrap()
+    });
+    assert_eq!(sc.len(), si.len());
+    for (i, (a, b)) in sc.iter().zip(&si).enumerate() {
+        assert!(
+            (a - b).abs() < 1e-3 * (1.0 + a.abs()),
+            "score {i}: scalar {a} vs simd {b}"
+        );
+    }
+}

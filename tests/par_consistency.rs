@@ -83,6 +83,48 @@ fn degenerate_shapes_at_every_thread_count() {
 }
 
 #[test]
+fn fused_kernels_bit_identical_across_thread_counts() {
+    // The kernel layer's fused epilogues (SwiGLU, scale-and-accumulate,
+    // scatter, SYRK) and the packed A@B path must honor the same contract
+    // as the plain kernels: bit-identical results at 1/2/8 threads.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let mut rng = Rng::new(0x9A11E2);
+    // past the AVX2 pack threshold (k·n ≥ 64K, m ≥ 16) so the blocked
+    // packed path is exercised wherever that kernel is active
+    let big_a = Tensor::randn(&[24, 310], 1.0, &mut rng);
+    let big_b = Tensor::randn(&[310, 220], 1.0, &mut rng);
+    let x = Tensor::randn(&[37, 24], 1.0, &mut rng);
+    let wg = Tensor::randn(&[18, 24], 1.0, &mut rng);
+    let wu = Tensor::randn(&[18, 24], 1.0, &mut rng);
+    let wd = Tensor::randn(&[24, 18], 1.0, &mut rng);
+    let p = Tensor::randn(&[40, 150], 1.0, &mut rng);
+    let scales: Vec<f32> = (0..37).map(|i| 0.01 * i as f32 - 0.1).collect();
+    let dst: Vec<usize> = (0..37).map(|i| i * 2).collect();
+    let run = || {
+        let packed = ops::matmul(&big_a, &big_b).unwrap();
+        let mut h = Tensor::full(&[37, 18], f32::NAN);
+        ops::swiglu_bt_into(&x, &wg, &wu, &mut h).unwrap();
+        let mut acc = Tensor::zeros(&[37, 24]);
+        ops::matmul_bt_scaled_add_into(&h, &wd, 0.4, &mut acc).unwrap();
+        let mut scat = Tensor::zeros(&[74, 24]);
+        ops::matmul_bt_scatter_add_into(&h, &wd, &scales, &dst, &mut scat).unwrap();
+        let gram = ops::syrk_bt(&p).unwrap();
+        (packed, h, acc, scat, gram)
+    };
+    let reference = with_threads(1, run);
+    for t in SWEEP {
+        let got = with_threads(t, run);
+        assert_eq!(got.0.data(), reference.0.data(), "packed nn threads {t}");
+        assert_eq!(got.1.data(), reference.1.data(), "swiglu threads {t}");
+        assert_eq!(got.2.data(), reference.2.data(), "scaled_add threads {t}");
+        assert_eq!(got.3.data(), reference.3.data(), "scatter threads {t}");
+        assert_eq!(got.4.data(), reference.4.data(), "syrk threads {t}");
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
 fn moe_forward_identical_across_thread_counts() {
     let _guard = THREAD_KNOB.lock().unwrap();
     let prev = par::max_threads();

@@ -57,6 +57,84 @@ fn random_plan_with_weights(n: usize, m: usize, weights: &[f64], rng: &mut Rng) 
     MergePlan { n, m, clusters, assign, weights: w }
 }
 
+/// `a (m,k) @ b (k,n)` by the textbook triple loop in f64 — the reference
+/// every GEMM variant is fuzzed against, independent of kernel family,
+/// blocking, packing and epilogue fusion.
+fn naive_matmul(a: &Tensor, b: &Tensor) -> Tensor {
+    let (m, k) = (a.shape()[0], a.shape()[1]);
+    let n = b.shape()[1];
+    let mut out = Tensor::zeros(&[m, n]);
+    for i in 0..m {
+        for j in 0..n {
+            let mut s = 0.0f64;
+            for kk in 0..k {
+                s += a.at2(i, kk) as f64 * b.at2(kk, j) as f64;
+            }
+            *out.at2_mut(i, j) = s as f32;
+        }
+    }
+    out
+}
+
+#[test]
+fn gemm_variants_match_naive_triple_loop() {
+    // All three GEMM forms against the naive reference over random ragged
+    // shapes, including the degenerate edges (k=0, 1×N, N×1) and a shape
+    // past the AVX2 pack threshold — run under whatever kernel this host
+    // dispatches to, so the property covers scalar, AVX2 (direct + packed)
+    // and NEON wherever the suite runs.
+    let mut rng = Rng::new(0x6E6E);
+    let mut cases: Vec<(usize, usize, usize)> =
+        vec![(1, 0, 6), (4, 0, 1), (1, 57, 1), (1, 3, 80), (80, 3, 1), (1, 1, 1), (24, 310, 220)];
+    for _ in 0..18 {
+        cases.push((
+            rng.range(1, 60) as usize,
+            rng.range(1, 100) as usize,
+            rng.range(1, 60) as usize,
+        ));
+    }
+    for (ci, &(m, k, n)) in cases.iter().enumerate() {
+        let a = Tensor::randn(&[m, k], 1.0, &mut rng);
+        let b = Tensor::randn(&[k, n], 1.0, &mut rng);
+        let want = naive_matmul(&a, &b);
+
+        let nn = ops::matmul(&a, &b).unwrap();
+        assert!(
+            nn.rel_err(&want) < 1e-4,
+            "case {ci} nn m={m} k={k} n={n}: rel err {}",
+            nn.rel_err(&want)
+        );
+
+        // a @ btᵀ with bt = bᵀ must equal a @ b
+        let bt = ops::transpose(&b).unwrap();
+        let nt = ops::matmul_bt(&a, &bt).unwrap();
+        assert!(
+            nt.rel_err(&want) < 1e-4,
+            "case {ci} nt m={m} k={k} n={n}: rel err {}",
+            nt.rel_err(&want)
+        );
+
+        // atᵀ @ b with at = aᵀ must equal a @ b (zero-skip path)
+        let at = ops::transpose(&a).unwrap();
+        let tn = ops::matmul_at(&at, &b).unwrap();
+        assert!(
+            tn.rel_err(&want) < 1e-4,
+            "case {ci} tn m={m} k={k} n={n}: rel err {}",
+            tn.rel_err(&want)
+        );
+
+        if k == 0 {
+            // empty inner dimension: exactly zero everywhere, every variant
+            for (which, t) in [("nn", &nn), ("nt", &nt), ("tn", &tn)] {
+                assert!(
+                    t.data().iter().all(|&v| v == 0.0),
+                    "case {ci} {which}: k=0 must produce exact zeros"
+                );
+            }
+        }
+    }
+}
+
 #[test]
 fn theorem1_frequency_weights_minimize_objective() {
     // For 40 random instances: frequency weights never lose to 20 random

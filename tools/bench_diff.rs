@@ -5,12 +5,21 @@
 //! Usage:
 //!
 //! ```text
-//! bench_diff <baseline_dir> <current_dir>
+//! bench_diff [--max-regress <pct>] <baseline_dir> <current_dir>
 //! ```
 //!
-//! Reports present on only one side are listed but not compared. The exit
-//! code is always 0: perf deltas on shared CI machines are informative, not
-//! a gate (the human reading the PR decides).
+//! Reports present on only one side are listed but not compared. Without
+//! `--max-regress` the exit code is always 0: perf deltas on shared CI
+//! machines are informative and the human reading the PR decides. With
+//! `--max-regress <pct>` the diff becomes a gate — it fails the run
+//! (ci.sh passes 15) when any benchmark regressed by more than `pct`
+//! percent, or when nothing could be compared at all (a vacuous gate
+//! gates nothing). To keep the gate usable on shared quick-mode CI
+//! machines, it judges the **p50** (mean is still what the human-readable
+//! lines show — it is the long-term trajectory number, but a single noisy
+//! outlier iteration can drag it arbitrarily) and skips entries whose
+//! baseline p50 is under [`GATE_MIN_SECONDS`], where timer and scheduler
+//! noise dominate real signal.
 
 use std::collections::BTreeMap;
 use std::path::{Path, PathBuf};
@@ -18,14 +27,20 @@ use std::path::{Path, PathBuf};
 use anyhow::{bail, Context, Result};
 use mergemoe::util::json::Json;
 
-/// `name -> mean seconds` for every result entry of one report file.
-fn load_report(path: &Path) -> Result<BTreeMap<String, f64>> {
+/// Entries whose baseline p50 sits under this are excluded from the
+/// `--max-regress` gate: at micro durations a quick-mode run's jitter
+/// routinely exceeds any sane threshold.
+const GATE_MIN_SECONDS: f64 = 100e-6;
+
+/// `name -> (mean, p50) seconds` for every result entry of one report file.
+fn load_report(path: &Path) -> Result<BTreeMap<String, (f64, f64)>> {
     let json = Json::parse_file(path)?;
     let mut out = BTreeMap::new();
     for entry in json.get("results")?.as_arr()? {
         let name = entry.get("name")?.as_str()?.to_string();
         let mean = entry.get("mean_s")?.as_f64()?;
-        out.insert(name, mean);
+        let p50 = entry.get("p50_s")?.as_f64()?;
+        out.insert(name, (mean, p50));
     }
     Ok(out)
 }
@@ -58,12 +73,28 @@ fn human(mean_s: f64) -> String {
 }
 
 fn main() -> Result<()> {
-    let args: Vec<String> = std::env::args().skip(1).collect();
-    if args.len() != 2 {
-        bail!("usage: bench_diff <baseline_dir> <current_dir>");
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let mut max_regress: Option<f64> = None;
+    let mut dirs: Vec<String> = Vec::new();
+    let mut it = raw.into_iter();
+    while let Some(arg) = it.next() {
+        if arg == "--max-regress" {
+            let val = it
+                .next()
+                .ok_or_else(|| anyhow::anyhow!("--max-regress needs a percent value"))?;
+            max_regress = Some(
+                val.parse::<f64>()
+                    .with_context(|| format!("--max-regress: bad percent {val:?}"))?,
+            );
+        } else {
+            dirs.push(arg);
+        }
     }
-    let base_dir = Path::new(&args[0]);
-    let cur_dir = Path::new(&args[1]);
+    if dirs.len() != 2 {
+        bail!("usage: bench_diff [--max-regress <pct>] <baseline_dir> <current_dir>");
+    }
+    let base_dir = Path::new(&dirs[0]);
+    let cur_dir = Path::new(&dirs[1]);
     let base = reports_in(base_dir)?;
     let cur = reports_in(cur_dir)?;
     if cur.is_empty() {
@@ -73,6 +104,9 @@ fn main() -> Result<()> {
     let mut improved = 0usize;
     let mut regressed = 0usize;
     let mut compared = 0usize;
+    let mut gated = 0usize;
+    // (entry, old p50, new p50, regression pct) past the gate threshold
+    let mut violations: Vec<(String, f64, f64, f64)> = Vec::new();
     for (bench, cur_path) in &cur {
         let Some(base_path) = base.get(bench) else {
             println!("[new]  BENCH_{bench}: no baseline — skipping comparison");
@@ -81,8 +115,8 @@ fn main() -> Result<()> {
         let old = load_report(base_path)?;
         let new = load_report(cur_path)?;
         println!("== {bench} ==");
-        for (name, new_mean) in &new {
-            let Some(old_mean) = old.get(name) else {
+        for (name, (new_mean, new_p50)) in &new {
+            let Some((old_mean, old_p50)) = old.get(name) else {
                 println!("  [new entry]   {name:<44} {}", human(*new_mean));
                 continue;
             };
@@ -103,6 +137,20 @@ fn main() -> Result<()> {
                 human(*old_mean),
                 human(*new_mean)
             );
+            if let Some(pct) = max_regress {
+                if *old_p50 >= GATE_MIN_SECONDS {
+                    gated += 1;
+                    let regress_pct = (new_p50 / old_p50 - 1.0) * 100.0;
+                    if regress_pct > pct {
+                        violations.push((
+                            format!("{bench}/{name}"),
+                            *old_p50,
+                            *new_p50,
+                            regress_pct,
+                        ));
+                    }
+                }
+            }
         }
         for name in old.keys() {
             if !new.contains_key(name) {
@@ -118,5 +166,36 @@ fn main() -> Result<()> {
     println!(
         "\nbench_diff: {compared} compared, {improved} faster (>1.10x), {regressed} slower (<0.90x)"
     );
+    if let Some(pct) = max_regress {
+        if !violations.is_empty() {
+            for (name, old_p50, new_p50, regress_pct) in &violations {
+                eprintln!(
+                    "REGRESSED {name}: p50 {} -> {} (+{regress_pct:.1}%)",
+                    human(*old_p50),
+                    human(*new_p50)
+                );
+            }
+            bail!(
+                "bench_diff: {} benchmark(s) regressed more than {pct}% (p50)",
+                violations.len()
+            );
+        }
+        // A gate that judged nothing gated nothing: disjoint entry sets
+        // (renamed benches, a baseline from a machine with a different
+        // core count / kernel in its entry names) or only sub-threshold
+        // micro entries must fail loudly, not pass vacuously while a real
+        // regression scrolls by as [gone] or below the noise floor.
+        if gated == 0 {
+            bail!(
+                "bench_diff: --max-regress gated 0 entries ({compared} compared, \
+                 none with baseline p50 >= {GATE_MIN_SECONDS}s) — stale or \
+                 mismatched baseline?"
+            );
+        }
+        println!(
+            "bench_diff: gate passed ({compared} compared, {gated} gated at p50, \
+             no regression over {pct}%)"
+        );
+    }
     Ok(())
 }
