@@ -1,9 +1,10 @@
 #!/usr/bin/env bash
 # CI gate for the mergemoe workspace.
 #
-#   ./ci.sh            build + test + fmt + clippy + quick bench + bench-diff
+#   ./ci.sh            build + test + fmt + clippy + doc + quick bench + bench-diff
 #   SKIP_LINT=1 ./ci.sh   skip fmt/clippy (bootstrap environments without
 #                         rustfmt/clippy components installed)
+#   SKIP_DOC=1 ./ci.sh    skip the rustdoc warning gate
 #   SKIP_BENCH=1 ./ci.sh  skip the quick bench + bench-diff step
 #
 # Tier-1 (must always pass): cargo build --release && cargo test -q
@@ -22,6 +23,14 @@ if [[ "${SKIP_LINT:-0}" != "1" ]]; then
 
     echo "==> cargo clippy -D warnings"
     cargo clippy --all-targets -- -D warnings
+fi
+
+if [[ "${SKIP_DOC:-0}" != "1" ]]; then
+    # Docs gate: every rustdoc warning (missing docs under the
+    # #![warn(missing_docs)] modules, broken intra-doc links, bad code
+    # fences) fails CI, so documentation debt cannot re-accumulate.
+    echo "==> cargo doc --no-deps (rustdoc warnings are errors)"
+    RUSTDOCFLAGS="${RUSTDOCFLAGS:-} -D warnings" cargo doc --no-deps --offline
 fi
 
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then

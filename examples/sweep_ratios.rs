@@ -1,13 +1,18 @@
-//! Compression-ratio sweep: how each merge algorithm degrades as the expert
-//! count shrinks — the full Figure-2a story, but for *all four* algorithms
-//! side by side (the paper shows only MergeMoE). Driven by the
-//! `eval::sweep` subsystem: one tokenization pass, one calibration capture,
-//! one compression per (method, ratio), parallel (model, task) scoring.
+//! Compression-ratio sweep with a calibration-source ablation: how each
+//! merge algorithm degrades as the expert count shrinks — the full
+//! Figure-2a story for *all four* algorithms side by side — and, on the
+//! fourth sweep axis, whether calibrating on the evaluated task beats the
+//! uniform mixture (the Table-4 question). Driven by the `eval::sweep`
+//! subsystem: one tokenization pass, one calibration capture per source,
+//! one compression per (source, method, ratio), with compression of the
+//! next variant overlapping the scoring of the current one on the worker
+//! pool.
 //!
 //! Run with:  cargo run --release --offline --example sweep_ratios
 //!            [-- --items 100 --engine native]
 
 use anyhow::Result;
+use mergemoe::calib::CalibSource;
 use mergemoe::eval::tasks::Task;
 use mergemoe::eval::{run_sweep, SweepSpec};
 use mergemoe::exp::{self, Ctx, EngineSel};
@@ -27,10 +32,14 @@ fn main() -> Result<()> {
         vec![Task::Parity],
         vec![2, 3],
     );
+    // Calibration-source axis: the uniform mixture vs calibration drawn
+    // from the evaluated task itself (Table 4's "self-sourced" row).
+    spec.calib_sources = vec![CalibSource::mixture(), CalibSource::single(Task::Parity)];
     spec.items = args.usize("items", 100)?;
     spec.seq_len = ctx.manifest.seq_len;
     let rep = run_sweep(&model, &spec, &mut NativeGram, engine.as_mut())?;
-    exp::tables::sweep_table(&rep).print();
-    println!("\n(task: parity — the WinoGrande analogue; layers 2-3 merged)");
+    print!("{}", exp::tables::sweep_markdown(&rep));
+    println!("\n(task: parity — the WinoGrande analogue; layers 2-3 merged; \
+              self-sourced calibration vs mixture)");
     Ok(())
 }

@@ -8,7 +8,7 @@
 //! over the calibration batch and records, per MoE layer, the post-LN inputs
 //! X̂ and the usage statistics that Theorem 1's weights need.
 
-use anyhow::Result;
+use anyhow::{bail, Context, Result};
 
 use crate::eval::tasks::{self, Task};
 use crate::model::native;
@@ -36,6 +36,66 @@ pub struct CalibData {
 impl CalibData {
     pub fn n_tokens(&self) -> usize {
         self.n_sequences * self.seq_len
+    }
+}
+
+/// A named calibration source — *where* the calibration batch is sampled
+/// from. This is the paper's Table-4 experimental axis (cross-dataset
+/// generalization of the calibration data): the evaluation sweep treats it
+/// as a fourth grid dimension (`SweepSpec::calib_sources`), capturing
+/// activations once per source and compressing every (method, ratio)
+/// variant against each.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct CalibSource {
+    /// Row label in reports (`"mixture"`, `"copy"`, `"copy+parity"`, …).
+    pub label: String,
+    /// Tasks [`sample_sequences`] may draw corpus lines from; `None` is
+    /// the uniform mixture over all seven tasks.
+    pub tasks: Option<Vec<Task>>,
+}
+
+impl CalibSource {
+    /// The uniform mixture over all tasks — the default calibration data.
+    pub fn mixture() -> CalibSource {
+        CalibSource { label: "mixture".into(), tasks: None }
+    }
+
+    /// Calibration restricted to one task (Table 4's single-source rows).
+    pub fn single(task: Task) -> CalibSource {
+        CalibSource { label: task.name().into(), tasks: Some(vec![task]) }
+    }
+
+    /// A source drawing from an explicit task set; the empty set is the
+    /// mixture. The label joins task names with `+` (`"copy+parity"`).
+    pub fn from_tasks(tasks: &[Task]) -> CalibSource {
+        if tasks.is_empty() {
+            return CalibSource::mixture();
+        }
+        let label = tasks.iter().map(|t| t.name()).collect::<Vec<_>>().join("+");
+        CalibSource { label, tasks: Some(tasks.to_vec()) }
+    }
+
+    /// Parse one `--calib-sources` entry: `"mixture"` (or `"all"`), a task
+    /// name, or a `+`-joined task list (`"copy+parity"`).
+    pub fn parse(s: &str) -> Result<CalibSource> {
+        let s = s.trim();
+        if s.is_empty() {
+            bail!("empty calibration source");
+        }
+        if s.eq_ignore_ascii_case("mixture") || s.eq_ignore_ascii_case("all") {
+            return Ok(CalibSource::mixture());
+        }
+        let mut parsed = Vec::new();
+        for name in s.split('+') {
+            let name = name.trim();
+            parsed.push(Task::from_name(name).with_context(|| {
+                format!(
+                    "unknown calibration source task {name:?} \
+                     (task names, a+b combinations, or \"mixture\")"
+                )
+            })?);
+        }
+        Ok(CalibSource::from_tasks(&parsed))
     }
 }
 
@@ -143,6 +203,35 @@ mod tests {
         // letters other than e/o/p appear
         let allowed: Vec<i32> = tasks::encode("p:01#eo.\n");
         assert!(toks.iter().all(|t| allowed.contains(t)), "{toks:?}");
+    }
+
+    #[test]
+    fn calib_source_parsing_round_trips() {
+        assert_eq!(CalibSource::parse("mixture").unwrap(), CalibSource::mixture());
+        assert_eq!(CalibSource::parse(" ALL ").unwrap(), CalibSource::mixture());
+        assert_eq!(CalibSource::parse("copy").unwrap(), CalibSource::single(Task::Copy));
+        let combo = CalibSource::parse("copy+parity").unwrap();
+        assert_eq!(combo.label, "copy+parity");
+        assert_eq!(combo.tasks, Some(vec![Task::Copy, Task::Parity]));
+        assert_eq!(combo, CalibSource::from_tasks(&[Task::Copy, Task::Parity]));
+        assert!(CalibSource::parse("").is_err());
+        assert!(CalibSource::parse("winogrande").is_err());
+        // empty task set degenerates to the mixture
+        assert_eq!(CalibSource::from_tasks(&[]), CalibSource::mixture());
+    }
+
+    #[test]
+    fn calib_source_selects_sampling_tasks() {
+        let mix = CalibSource::mixture();
+        let one = CalibSource::single(Task::Parity);
+        assert_eq!(
+            sample_sequences(mix.tasks.as_deref(), 2, 64, 5),
+            sample_sequences(None, 2, 64, 5)
+        );
+        assert_eq!(
+            sample_sequences(one.tasks.as_deref(), 2, 64, 5),
+            sample_sequences(Some(&[Task::Parity]), 2, 64, 5)
+        );
     }
 
     #[test]

@@ -6,7 +6,9 @@ pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
+pub use crate::calib::CalibSource;
 pub use pipeline::{
-    capture_calibration, compress, compress_with_calib, CompressReport, CompressSpec,
+    capture_calibration, capture_calibration_source, compress, compress_with_calib,
+    CompressReport, CompressSpec,
 };
 pub use server::{ScoringServer, ServerConfig};

@@ -14,7 +14,7 @@ use std::time::Instant;
 
 use anyhow::{bail, Result};
 
-use crate::calib::{self, CalibData};
+use crate::calib::{self, CalibData, CalibSource};
 use crate::eval::tasks::Task;
 use crate::merge::{self, Algorithm, GramBackend, MergePlan};
 use crate::model::workspace::Workspace;
@@ -100,6 +100,20 @@ pub fn capture_calibration(
     let seq_len = 64; // = configs.SEQ_LEN; manifest-checked on the PJRT path
     let tokens = calib::sample_sequences(calib_tasks, n_calib_seqs, seq_len, seed);
     calib::capture(model, &tokens, n_calib_seqs, seq_len)
+}
+
+/// [`capture_calibration`] keyed by a named [`CalibSource`] — the
+/// evaluation sweep's per-source capture entry point. The sweep's fourth
+/// axis runs on this: one capture per source, reused across every
+/// (method, ratio) variant built from that source, exactly as the single
+/// capture served the whole grid before the axis existed.
+pub fn capture_calibration_source(
+    model: &ModelWeights,
+    n_calib_seqs: usize,
+    source: &CalibSource,
+    seed: u64,
+) -> Result<CalibData> {
+    capture_calibration(model, n_calib_seqs, source.tasks.as_deref(), seed)
 }
 
 /// Spec checks shared by [`compress`] (before the expensive capture) and
@@ -264,6 +278,23 @@ mod tests {
                 }
             }
         }
+    }
+
+    #[test]
+    fn source_keyed_capture_matches_task_filter_capture() {
+        let model = tiny_model(4, 2, false, 95);
+        let src = CalibSource::single(crate::eval::tasks::Task::Parity);
+        let a = capture_calibration_source(&model, 4, &src, 7).unwrap();
+        let b = capture_calibration(&model, 4, Some(&[crate::eval::tasks::Task::Parity]), 7)
+            .unwrap();
+        assert_eq!(a.layers.len(), b.layers.len());
+        for (la, lb) in a.layers.iter().zip(&b.layers) {
+            assert_eq!(la.x.data(), lb.x.data());
+        }
+        // and the mixture source matches the None filter
+        let m = capture_calibration_source(&model, 4, &CalibSource::mixture(), 7).unwrap();
+        let n = capture_calibration(&model, 4, None, 7).unwrap();
+        assert_eq!(m.layers[0].x.data(), n.layers[0].x.data());
     }
 
     #[test]

@@ -2,8 +2,8 @@
 //! (substitutes for WinoGrande / ARC / Hellaswag / PIQA / SQuAD / MRPC, see
 //! DESIGN.md §2), the workspace-backed likelihood scorer that grades them,
 //! and the [`sweep`] subsystem that evaluates a whole
-//! {method × ratio × task} comparison grid in one invocation
-//! (`mergemoe sweep`).
+//! {calibration source × method × ratio × task} comparison grid in one
+//! pipelined invocation (`mergemoe sweep`).
 
 pub mod scorer;
 pub mod sweep;

@@ -1,40 +1,54 @@
-//! Evaluation sweeps: the paper's accuracy-vs-ratio comparison grid —
-//! {compression method} × {ratio} × {task} — in one invocation
-//! (`mergemoe sweep`). This is the machinery behind the headline claim:
-//! MergeMoE must beat averaging/ZipIt/M-SMoE at the *same* compression
-//! ratio (PAPER.md §5), and the method-ordering regression test in
-//! `tests/eval_consistency.rs` keeps that ordering under test.
+//! Evaluation sweeps: the paper's headline evidence — the accuracy-vs-ratio
+//! comparison grid (Tables 1–3) *and* the calibration-source ablation
+//! (Table 4) — in one invocation (`mergemoe sweep`). A sweep evaluates
+//! every {calibration source} × {compression method} × {ratio} × {task}
+//! cell of a [`SweepSpec`]; the method-ordering regression test in
+//! `tests/eval_consistency.rs` keeps the headline ordering (MergeMoE ≥
+//! the baselines at equal ratio) under test.
 //!
-//! Execution model:
+//! Execution model — a two-stage pipeline over the variant stream:
 //!
 //! 1. **Prepare once.** Every task's items are tokenized and padded into a
 //!    [`PreparedItems`] buffer up front; the buffers are shared read-only
-//!    by every (model, task) cell.
-//! 2. **Capture once, compress per variant.** One calibration capture of
-//!    the uncompressed model (`capture_calibration`) serves every
-//!    (method, ratio) variant through `compress_with_calib`; each merge is
-//!    internally parallel (per cluster / per calibration chunk), so the
-//!    variant loop stays serial.
-//! 3. **Score the grid in parallel.** Independent (variant, task) cells fan
-//!    out across the `util::par` worker pool via `par_items_with_slots`,
-//!    one forked engine + one [`EvalScratch`] per lane — workspaces are
-//!    never shared across threads (the `model::workspace` ownership rule).
-//!    Per-cell scoring is strictly serial inside its lane and nested
-//!    regions degrade, so sweep results are **bit-identical at every
-//!    thread count** (`tests/eval_consistency.rs`). Engines that cannot
-//!    fork (PJRT) run the cells serially on the calling thread.
+//!    by every (variant, task) cell.
+//! 2. **Produce: capture per source, compress per variant.** One
+//!    calibration capture of the uncompressed model per calibration source
+//!    ([`crate::coordinator::capture_calibration_source`]) serves every
+//!    (method, ratio) variant of that source through
+//!    [`crate::coordinator::compress_with_calib`], reusing one merge
+//!    workspace throughout. The produce stage is pinned to a single lane
+//!    (its nested `par_*` regions degrade to serial inside
+//!    [`par::pipeline`]).
+//! 3. **Consume: score each variant as it lands.** Variants travel through
+//!    a bounded [`par::Handoff`] (capacity 1), so compression of variant
+//!    `k+1` overlaps with scoring of variant `k` while peak memory stays
+//!    bounded to a couple of in-flight models. The consume stage fans a
+//!    variant's task cells across the remaining pool lanes via
+//!    [`par::par_items_with_slots`] — one forked engine + one
+//!    [`EvalScratch`] per lane, never shared across threads (the
+//!    `model::workspace` ownership rule).
 //!
-//! The outcome is a [`SweepReport`]: `exp::tables::sweep_table` renders the
-//! accuracy-vs-ratio markdown table and `exp::report::save_sweep` persists
+//! `threads = 1` (or a non-forking engine, e.g. PJRT) runs the exact
+//! serial execution: all variants compressed first, then scored cell by
+//! cell through one scratch on the calling thread. Because compression and
+//! scoring are each bit-identical at every thread count, the pipelined and
+//! serial paths produce **bit-identical reports** — pinned across
+//! `--threads` 1/2/8 by `tests/eval_consistency.rs`.
+//!
+//! The outcome is a [`SweepReport`]: `exp::tables::sweep_markdown` renders
+//! per-source accuracy tables and `exp::report::save_sweep` persists
 //! `SWEEP_<model>.json` + `SWEEP_<model>.md` for bench_diff-style
 //! comparison across commits.
+
+#![warn(missing_docs)]
 
 use anyhow::{bail, Context, Result};
 
 use super::scorer::{self, PreparedItems};
 use super::tasks::{gen_items, Task};
 use super::Accuracy;
-use crate::coordinator::{capture_calibration, compress_with_calib, CompressSpec};
+use crate::calib::CalibSource;
+use crate::coordinator::{capture_calibration_source, compress_with_calib, CompressSpec};
 use crate::merge::{Algorithm, GramBackend};
 use crate::model::workspace::{EvalScratch, Workspace};
 use crate::model::ModelWeights;
@@ -42,7 +56,13 @@ use crate::runtime::Engine;
 use crate::util::json::Json;
 use crate::util::par;
 
-/// The evaluation grid: every method × target expert count × task.
+/// Source label of the uncompressed "Full" row, which does not depend on
+/// any calibration data. Per-source report sections repeat the Full row
+/// under this label so every section reads like a paper table.
+pub const FULL_SOURCE: &str = "-";
+
+/// The evaluation grid: every calibration source × method × target expert
+/// count × task.
 #[derive(Debug, Clone)]
 pub struct SweepSpec {
     /// Compression methods to compare (each evaluated at every target).
@@ -55,19 +75,31 @@ pub struct SweepSpec {
     pub layers: Vec<usize>,
     /// Items per task.
     pub items: usize,
+    /// Token length every scored sequence is padded to.
     pub seq_len: usize,
     /// Sequences per forward chunk (rounded up to even by the scorer).
     pub batch: usize,
     /// Calibration sequences per capture.
     pub n_calib_seqs: usize,
     /// Restrict calibration data to these tasks (None = uniform mixture).
+    /// Only consulted when [`SweepSpec::calib_sources`] is empty — it is
+    /// the pre-source-axis spelling of a single-source sweep.
     pub calib_tasks: Option<Vec<Task>>,
+    /// Calibration sources — the fourth sweep axis (Table 4's rows). One
+    /// activation capture per source; every (method, ratio) variant is
+    /// compressed once per source. Empty (the default) means one source
+    /// derived from `calib_tasks`, reproducing the three-axis behaviour.
+    pub calib_sources: Vec<CalibSource>,
+    /// Seed for item generation and calibration sampling.
     pub seed: u64,
     /// Evaluate the uncompressed model as the first row.
     pub include_full: bool,
 }
 
 impl SweepSpec {
+    /// A spec over the four explicit grid axes with the default sizing
+    /// knobs (100 items, seq 64, batch 32, 64 calibration sequences,
+    /// mixture calibration, Full row included).
     pub fn new(
         methods: Vec<Algorithm>,
         targets: Vec<usize>,
@@ -84,16 +116,31 @@ impl SweepSpec {
             batch: 32,
             n_calib_seqs: 64,
             calib_tasks: None,
+            calib_sources: Vec::new(),
             seed: 2026,
             include_full: true,
         }
+    }
+
+    /// The calibration sources this sweep will run: `calib_sources` when
+    /// set, otherwise exactly one source derived from `calib_tasks`.
+    pub fn sources(&self) -> Vec<CalibSource> {
+        if !self.calib_sources.is_empty() {
+            return self.calib_sources.clone();
+        }
+        vec![match &self.calib_tasks {
+            Some(ts) => CalibSource::from_tasks(ts),
+            None => CalibSource::mixture(),
+        }]
     }
 }
 
 /// One (variant, task) cell of the grid.
 #[derive(Debug, Clone)]
 pub struct TaskCell {
+    /// The evaluated task.
     pub task: Task,
+    /// Multiple-choice accuracy on the task's items.
     pub acc: Accuracy,
     /// Mean log-probability of the correct option — the fidelity metric on
     /// the calibration distribution that the method-ordering regression
@@ -104,13 +151,18 @@ pub struct TaskCell {
 /// One compressed (or full) model variant with its per-task results.
 #[derive(Debug, Clone)]
 pub struct VariantResult {
+    /// Calibration source label this variant was compressed against
+    /// ([`FULL_SOURCE`] for the uncompressed row).
+    pub source: String,
     /// Row label: `"Full"` or the algorithm name.
     pub label: String,
     /// Target expert count (the original count for the full row).
     pub m: usize,
+    /// Parameter count after compression.
     pub params: usize,
     /// `params / params(full)`.
     pub ratio: f64,
+    /// Wall-clock seconds the merge took (0 for Full).
     pub merge_seconds: f64,
     /// Mean per-layer output relative error of the merge (0 for Full).
     pub mean_layer_err: f64,
@@ -144,9 +196,13 @@ impl VariantResult {
 /// Full sweep outcome (serialized as `SWEEP_<model>.json`).
 #[derive(Debug, Clone)]
 pub struct SweepReport {
+    /// Model name the sweep ran on.
     pub model: String,
+    /// Items per task.
     pub items: usize,
+    /// Sequence length every scored item was padded to.
     pub seq_len: usize,
+    /// Seed for item generation and calibration sampling.
     pub seed: u64,
     /// Thread budget the sweep ran under (results do not depend on it).
     pub threads: usize,
@@ -155,17 +211,31 @@ pub struct SweepReport {
     /// cross-machine report diffs can tell kernel drift from science
     /// drift).
     pub kernel: String,
+    /// Calibration source labels, in sweep order (the fourth axis).
+    pub calib_sources: Vec<String>,
+    /// Total calibration tokens captured, summed over sources.
     pub n_calib_tokens: usize,
+    /// Wall-clock seconds for the whole sweep.
     pub wall_seconds: f64,
-    /// Full first (if requested), then method-major per target in spec
-    /// order.
+    /// Full first (if requested), then source-major, target-major,
+    /// method-minor in spec order.
     pub variants: Vec<VariantResult>,
 }
 
 impl SweepReport {
-    /// The variant row for `(label, m)` — e.g. `("MergeMoE", 6)`.
+    /// The first variant row for `(label, m)` — e.g. `("MergeMoE", 6)`.
+    /// Unambiguous on single-source sweeps; multi-source callers use
+    /// [`SweepReport::variant_for`].
     pub fn variant(&self, label: &str, m: usize) -> Option<&VariantResult> {
         self.variants.iter().find(|v| v.label == label && v.m == m)
+    }
+
+    /// The variant row for `(source, label, m)` — e.g.
+    /// `("copy", "MergeMoE", 6)` for Table-4-style lookups.
+    pub fn variant_for(&self, source: &str, label: &str, m: usize) -> Option<&VariantResult> {
+        self.variants
+            .iter()
+            .find(|v| v.source == source && v.label == label && v.m == m)
     }
 
     /// Machine-readable record (`SWEEP_<model>.json`), shaped for
@@ -178,6 +248,10 @@ impl SweepReport {
             ("seed", Json::num(self.seed as f64)),
             ("threads", Json::num(self.threads as f64)),
             ("kernel", Json::str(&self.kernel)),
+            (
+                "calib_sources",
+                Json::arr(self.calib_sources.iter().map(|s| Json::str(s))),
+            ),
             ("n_calib_tokens", Json::num(self.n_calib_tokens as f64)),
             ("wall_seconds", Json::num(self.wall_seconds)),
             (
@@ -185,6 +259,7 @@ impl SweepReport {
                 Json::arr(self.variants.iter().map(|v| {
                     Json::obj(vec![
                         ("label", Json::str(&v.label)),
+                        ("calib_source", Json::str(&v.source)),
                         ("m", Json::num(v.m as f64)),
                         ("params", Json::num(v.params as f64)),
                         ("ratio", Json::num(v.ratio)),
@@ -223,6 +298,7 @@ impl SweepReport {
 /// A variant awaiting scoring. `model: None` is the uncompressed input
 /// model (borrowed from the caller — no clone for the Full row).
 struct Variant {
+    source: String,
     label: String,
     m: usize,
     params: usize,
@@ -238,8 +314,148 @@ struct Lane {
     scratch: EvalScratch,
 }
 
+/// The produce stage: capture calibration once per source, compress once
+/// per (source, target, method), and hand each variant to `emit` in grid
+/// order (Full first when requested). `emit` returning `false` means the
+/// consumer is gone — stop compressing. Returns the total calibration
+/// tokens captured.
+fn produce_variants(
+    model: &ModelWeights,
+    spec: &SweepSpec,
+    sources: &[CalibSource],
+    gram: &mut dyn GramBackend,
+    emit: &mut dyn FnMut(Variant) -> bool,
+) -> Result<usize> {
+    let mut total_tokens = 0usize;
+    if spec.include_full {
+        let full = Variant {
+            source: FULL_SOURCE.to_string(),
+            label: "Full".into(),
+            m: model.cfg.n_experts,
+            params: model.n_params(),
+            merge_seconds: 0.0,
+            mean_layer_err: 0.0,
+            model: None,
+        };
+        if !emit(full) {
+            return Ok(total_tokens);
+        }
+    }
+    // one merge workspace serves every solve across all sources
+    let mut ws = Workspace::new();
+    for src in sources {
+        let calib = capture_calibration_source(model, spec.n_calib_seqs, src, spec.seed)
+            .with_context(|| format!("capturing calibration source {}", src.label))?;
+        total_tokens += calib.n_tokens();
+        for &m in &spec.targets {
+            for &alg in &spec.methods {
+                let mut cs = CompressSpec::new(spec.layers.clone(), m, alg);
+                cs.n_calib_seqs = spec.n_calib_seqs;
+                cs.calib_tasks = src.tasks.clone();
+                cs.seed = spec.seed;
+                let (merged, rep) = compress_with_calib(model, &cs, gram, &calib, &mut ws)
+                    .with_context(|| {
+                        format!(
+                            "compressing to {m} experts via {} (calib {})",
+                            alg.name(),
+                            src.label
+                        )
+                    })?;
+                let mean_err = rep.layers.iter().map(|l| l.output_rel_err).sum::<f64>()
+                    / rep.layers.len().max(1) as f64;
+                let variant = Variant {
+                    source: src.label.clone(),
+                    label: alg.name().to_string(),
+                    m,
+                    params: rep.params_after,
+                    merge_seconds: rep.merge_seconds,
+                    mean_layer_err: mean_err,
+                    model: Some(merged),
+                };
+                if !emit(variant) {
+                    return Ok(total_tokens);
+                }
+            }
+        }
+    }
+    Ok(total_tokens)
+}
+
+/// Score one (variant, task) cell: accuracy plus mean correct-option
+/// log-probability. The per-cell instruction sequence is identical on the
+/// serial and pipelined paths — that is what makes the two bit-identical.
+fn score_cell(
+    eng: &mut dyn Engine,
+    mdl: &ModelWeights,
+    prep: &PreparedItems,
+    batch: usize,
+    es: &mut EvalScratch,
+) -> Result<(Accuracy, f64)> {
+    let acc = scorer::score_prepared_ws(eng, mdl, prep, batch, es)?;
+    let lp = scorer::mean_correct_lp(prep, &es.scores);
+    Ok((acc, lp))
+}
+
+/// Unwrap per-cell outcomes into [`TaskCell`]s, attaching grid coordinates
+/// to any scoring error.
+fn collect_cells(
+    v: &Variant,
+    tasks: &[Task],
+    cells: Vec<Option<Result<(Accuracy, f64)>>>,
+) -> Result<Vec<TaskCell>> {
+    let mut out = Vec::with_capacity(tasks.len());
+    for (ti, cell) in cells.into_iter().enumerate() {
+        let (acc, lp) = cell.expect("cell not scored").with_context(|| {
+            format!(
+                "scoring {} (m={}, calib {}) on {}",
+                v.label,
+                v.m,
+                v.source,
+                tasks[ti].name()
+            )
+        })?;
+        out.push(TaskCell { task: tasks[ti], acc, mean_correct_lp: lp });
+    }
+    Ok(out)
+}
+
+/// Score every task cell of `v` across the scoring lanes (serial within a
+/// lane; [`par::par_items_with_slots`] keeps lane/scratch pairing fixed so
+/// results are deterministic).
+fn score_variant(
+    full: &ModelWeights,
+    v: &Variant,
+    preps: &[PreparedItems],
+    tasks: &[Task],
+    batch: usize,
+    lanes: &mut [Lane],
+) -> Result<Vec<TaskCell>> {
+    let mdl = v.model.as_ref().unwrap_or(full);
+    let mut cells: Vec<Option<Result<(Accuracy, f64)>>> = Vec::new();
+    cells.resize_with(tasks.len(), || None);
+    // Fan the cells out only when they can occupy the scoring lanes: inside
+    // a lane, nested kernel regions degrade to serial, so fewer tasks than
+    // lanes score faster cell-by-cell with parallel kernels (results are
+    // bit-identical either way — the serial path of the primitive runs
+    // unpinned, so the kernels below it still use the pool).
+    let fan = lanes.len() > 1 && tasks.len() >= lanes.len();
+    par::par_items_with_slots(fan, &mut cells, lanes, |ti, cell, lane| {
+        *cell = Some(score_cell(
+            lane.engine.as_mut(),
+            mdl,
+            &preps[ti],
+            batch,
+            &mut lane.scratch,
+        ));
+    });
+    collect_cells(v, tasks, cells)
+}
+
 /// Run the whole grid. `gram` backs the MergeMoE solves; `engine` scores —
-/// if it forks ([`Engine::fork`]), cells run across the worker pool.
+/// when it forks ([`Engine::fork`]) and more than one thread is budgeted,
+/// the sweep runs as a two-stage pipeline (compression of variant `k+1`
+/// overlapping scoring of variant `k`); otherwise it runs the exact serial
+/// execution. Both paths produce bit-identical reports.
 pub fn run_sweep(
     model: &ModelWeights,
     spec: &SweepSpec,
@@ -250,6 +466,7 @@ pub fn run_sweep(
         bail!("sweep needs at least one method, one target and one task");
     }
     let t0 = std::time::Instant::now();
+    let sources = spec.sources();
 
     // (1) tokenize/pad every task once; shared read-only by all cells
     let mut preps: Vec<PreparedItems> = Vec::with_capacity(spec.tasks.len());
@@ -260,74 +477,17 @@ pub fn run_sweep(
             .with_context(|| format!("preparing task {}", task.name()))?;
         preps.push(p);
     }
-
-    // (2) one capture serves every variant; one workspace serves every solve
-    let calib = capture_calibration(
-        model,
-        spec.n_calib_seqs,
-        spec.calib_tasks.as_deref(),
-        spec.seed,
-    )?;
     let full_params = model.n_params();
-    let mut variants: Vec<Variant> = Vec::new();
-    if spec.include_full {
-        variants.push(Variant {
-            label: "Full".into(),
-            m: model.cfg.n_experts,
-            params: full_params,
-            merge_seconds: 0.0,
-            mean_layer_err: 0.0,
-            model: None,
-        });
-    }
-    let mut ws = Workspace::new();
-    for &m in &spec.targets {
-        for &alg in &spec.methods {
-            let mut cs = CompressSpec::new(spec.layers.clone(), m, alg);
-            cs.n_calib_seqs = spec.n_calib_seqs;
-            cs.calib_tasks = spec.calib_tasks.clone();
-            cs.seed = spec.seed;
-            let (merged, rep) = compress_with_calib(model, &cs, gram, &calib, &mut ws)
-                .with_context(|| format!("compressing to {m} experts via {}", alg.name()))?;
-            let mean_err = rep.layers.iter().map(|l| l.output_rel_err).sum::<f64>()
-                / rep.layers.len().max(1) as f64;
-            variants.push(Variant {
-                label: alg.name().to_string(),
-                m,
-                params: rep.params_after,
-                merge_seconds: rep.merge_seconds,
-                mean_layer_err: mean_err,
-                model: Some(merged),
-            });
-        }
-    }
 
-    // (3) score the (variant, task) grid; cell i = (variant i/n_tasks,
-    // task i%n_tasks)
-    type CellOut = Option<Result<(Accuracy, f64)>>;
-    let n_tasks = spec.tasks.len();
-    let mut cells: Vec<CellOut> = Vec::new();
-    cells.resize_with(variants.len() * n_tasks, || None);
-    let score_cell = |vi: usize,
-                      ti: usize,
-                      eng: &mut dyn Engine,
-                      es: &mut EvalScratch|
-     -> Result<(Accuracy, f64)> {
-        let mdl = variants[vi].model.as_ref().unwrap_or(model);
-        let acc = scorer::score_prepared_ws(eng, mdl, &preps[ti], spec.batch, es)?;
-        let lp = scorer::mean_correct_lp(&preps[ti], &es.scores);
-        Ok((acc, lp))
-    };
-    // Fan cells out only when the grid can occupy the whole thread budget:
-    // inside a lane, nested kernel regions degrade to serial, so a grid
-    // *smaller* than the budget scores faster cell-by-cell with parallel
-    // kernels (results are bit-identical either way).
-    let mut lanes: Vec<Lane> = Vec::new();
+    // Scoring lanes: the produce stage occupies one lane, so fork at most
+    // `threads - 1` scoring engines. No forks (PJRT) or threads = 1 means
+    // the serial path below.
     let want = par::max_threads();
-    if want > 1 && cells.len() >= want {
+    let mut lanes: Vec<Lane> = Vec::new();
+    if want > 1 {
         if let Some(first) = engine.fork() {
             lanes.push(Lane { engine: first, scratch: EvalScratch::new() });
-            while lanes.len() < want {
+            while lanes.len() + 1 < want {
                 match engine.fork() {
                     Some(e) => lanes.push(Lane { engine: e, scratch: EvalScratch::new() }),
                     None => break,
@@ -335,38 +495,62 @@ pub fn run_sweep(
             }
         }
     }
-    if lanes.len() > 1 {
-        par::par_items_with_slots(true, &mut cells, &mut lanes, |i, cell, lane| {
-            let (vi, ti) = (i / n_tasks, i % n_tasks);
-            *cell = Some(score_cell(vi, ti, lane.engine.as_mut(), &mut lane.scratch));
-        });
-    } else {
-        // non-forking engine (PJRT) or single-thread budget: every cell on
-        // the calling thread through one scratch
-        let mut es = EvalScratch::new();
-        for (i, cell) in cells.iter_mut().enumerate() {
-            let (vi, ti) = (i / n_tasks, i % n_tasks);
-            *cell = Some(score_cell(vi, ti, &mut *engine, &mut es));
-        }
-    }
 
-    // (4) assemble, in (variant, task) order
-    let mut results: Vec<Vec<TaskCell>> = Vec::with_capacity(variants.len());
-    results.resize_with(variants.len(), Vec::new);
-    for (idx, out) in cells.into_iter().enumerate() {
-        let (vi, ti) = (idx / n_tasks, idx % n_tasks);
-        let (acc, lp) = out
-            .expect("cell not scored")
-            .with_context(|| {
-                format!("scoring {} (m={}) on {}", variants[vi].label, variants[vi].m,
-                        spec.tasks[ti].name())
-            })?;
-        results[vi].push(TaskCell { task: spec.tasks[ti], acc, mean_correct_lp: lp });
-    }
-    let variants_out = variants
+    // (2)+(3) produce (capture + compress) and consume (score), pipelined
+    // when lanes exist, serial otherwise; identical results either way.
+    let (rows, total_tokens) = if lanes.is_empty() {
+        // the exact serial execution: every variant compressed first, then
+        // every cell scored through one scratch on this thread
+        let mut variants: Vec<Variant> = Vec::new();
+        let total = produce_variants(model, spec, &sources, gram, &mut |v| {
+            variants.push(v);
+            true
+        })?;
+        let mut es = EvalScratch::new();
+        let mut rows: Vec<(Variant, Vec<TaskCell>)> = Vec::with_capacity(variants.len());
+        for mut v in variants {
+            let cells = {
+                let mdl = v.model.as_ref().unwrap_or(model);
+                let mut raw: Vec<Option<Result<(Accuracy, f64)>>> =
+                    Vec::with_capacity(spec.tasks.len());
+                for prep in &preps {
+                    raw.push(Some(score_cell(&mut *engine, mdl, prep, spec.batch, &mut es)));
+                }
+                collect_cells(&v, &spec.tasks, raw)?
+            };
+            v.model = None;
+            rows.push((v, cells));
+        }
+        (rows, total)
+    } else {
+        let preps_ref = &preps;
+        let tasks_ref = &spec.tasks;
+        let lanes_ref = &mut lanes;
+        let (produced, consumed) = par::pipeline(
+            1,
+            |tx: &par::Handoff<Variant>| {
+                produce_variants(model, spec, &sources, gram, &mut |v| tx.push(v))
+            },
+            move |rx: &par::Handoff<Variant>| -> Result<Vec<(Variant, Vec<TaskCell>)>> {
+                let mut rows = Vec::new();
+                while let Some(mut v) = rx.pop() {
+                    let cells =
+                        score_variant(model, &v, preps_ref, tasks_ref, spec.batch, lanes_ref)?;
+                    v.model = None; // free the merged weights before the next pop
+                    rows.push((v, cells));
+                }
+                Ok(rows)
+            },
+        );
+        let total = produced?;
+        (consumed?, total)
+    };
+
+    // (4) assemble, in production order
+    let variants_out = rows
         .into_iter()
-        .zip(results)
         .map(|(v, cells)| VariantResult {
+            source: v.source,
             label: v.label,
             m: v.m,
             params: v.params,
@@ -383,7 +567,8 @@ pub fn run_sweep(
         seed: spec.seed,
         threads: par::max_threads(),
         kernel: crate::kernel::name().to_string(),
-        n_calib_tokens: calib.n_tokens(),
+        calib_sources: sources.iter().map(|s| s.label.clone()).collect(),
+        n_calib_tokens: total_tokens,
         wall_seconds: t0.elapsed().as_secs_f64(),
         variants: variants_out,
     })
@@ -414,9 +599,11 @@ mod tests {
         let model = tiny_model(4, 2, false, 95);
         let rep =
             run_sweep(&model, &small_spec(), &mut NativeGram, &mut NativeEngine).unwrap();
-        // Full + 2 methods × 1 target
+        // Full + 2 methods × 1 target (single derived source)
+        assert_eq!(rep.calib_sources, vec!["mixture"]);
         assert_eq!(rep.variants.len(), 3);
         assert_eq!(rep.variants[0].label, "Full");
+        assert_eq!(rep.variants[0].source, FULL_SOURCE);
         assert_eq!(rep.variants[0].ratio, 1.0);
         for v in &rep.variants {
             assert_eq!(v.cells.len(), 2);
@@ -427,11 +614,38 @@ mod tests {
                 assert!(c.mean_correct_lp.is_finite() && c.mean_correct_lp < 0.0);
             }
         }
-        // compressed variants really shrank
+        // compressed variants really shrank and carry the derived source
         assert!(rep.variants[1].ratio < 1.0);
+        assert_eq!(rep.variants[1].source, "mixture");
         assert!(rep.variant("Average", 2).is_some());
         assert!(rep.variant("M-SMoE", 2).is_some());
         assert!(rep.variant("MergeMoE", 2).is_none());
+        assert!(rep.variant_for("mixture", "Average", 2).is_some());
+        assert!(rep.variant_for("copy", "Average", 2).is_none());
+    }
+
+    #[test]
+    fn sweep_source_axis_expands_the_grid() {
+        let model = tiny_model(4, 2, false, 99);
+        let mut spec = small_spec();
+        spec.calib_sources =
+            vec![CalibSource::mixture(), CalibSource::single(Task::Copy)];
+        let rep = run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+        assert_eq!(rep.calib_sources, vec!["mixture", "copy"]);
+        // Full + 2 sources × 2 methods × 1 target
+        assert_eq!(rep.variants.len(), 5);
+        // one capture per source
+        assert_eq!(rep.n_calib_tokens, 2 * spec.n_calib_seqs * 64);
+        for src in ["mixture", "copy"] {
+            for label in ["Average", "M-SMoE"] {
+                let v = rep.variant_for(src, label, 2);
+                assert!(v.is_some(), "{src}/{label} missing");
+                assert_eq!(v.unwrap().cells.len(), 2, "{src}/{label}");
+            }
+        }
+        // variant order: Full, then source-major in spec order
+        assert_eq!(rep.variants[1].source, "mixture");
+        assert_eq!(rep.variants[3].source, "copy");
     }
 
     #[test]
@@ -442,6 +656,7 @@ mod tests {
         let b = run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
         for (va, vb) in a.variants.iter().zip(&b.variants) {
             assert_eq!(va.label, vb.label);
+            assert_eq!(va.source, vb.source);
             assert_eq!(va.params, vb.params);
             for (ca, cb) in va.cells.iter().zip(&vb.cells) {
                 assert_eq!(ca.acc, cb.acc, "{}/{}", va.label, ca.task.name());
@@ -460,8 +675,15 @@ mod tests {
             run_sweep(&model, &small_spec(), &mut NativeGram, &mut NativeEngine).unwrap();
         let parsed = Json::parse(&rep.to_json().to_string()).unwrap();
         assert_eq!(parsed.get("model").unwrap().as_str().unwrap(), "tiny");
+        let sources = parsed.get("calib_sources").unwrap().as_arr().unwrap();
+        assert_eq!(sources.len(), 1);
+        assert_eq!(sources[0].as_str().unwrap(), "mixture");
         let variants = parsed.get("variants").unwrap().as_arr().unwrap();
         assert_eq!(variants.len(), rep.variants.len());
+        assert_eq!(
+            variants[0].get("calib_source").unwrap().as_str().unwrap(),
+            FULL_SOURCE
+        );
         let copy = variants[0].get("tasks").unwrap().get("copy").unwrap();
         assert!(copy.get("acc").unwrap().as_f64().unwrap() >= 0.0);
         assert!(copy.get("mean_correct_lp").unwrap().as_f64().unwrap() < 0.0);

@@ -73,9 +73,10 @@ pub fn save(ctx: &Ctx, name: &str, payload: Json) -> Result<()> {
 
 /// Persist a sweep report: `SWEEP_<model>.json` (the machine-readable
 /// record a `tools/bench_diff`-style comparison consumes) plus
-/// `SWEEP_<model>.md` (the accuracy-vs-ratio table). Takes a directory
-/// rather than a [`Ctx`] so sweeps run on bare checkouts without a
-/// manifest. Returns the JSON path.
+/// `SWEEP_<model>.md` (the accuracy-vs-ratio tables — one section per
+/// calibration source on multi-source sweeps). Takes a directory rather
+/// than a [`Ctx`] so sweeps run on bare checkouts without a manifest.
+/// Returns the JSON path.
 pub fn save_sweep(
     dir: &std::path::Path,
     rep: &crate::eval::sweep::SweepReport,
@@ -85,7 +86,7 @@ pub fn save_sweep(
     std::fs::write(&json_path, rep.to_json().to_string())
         .with_context(|| format!("writing {}", json_path.display()))?;
     let md_path = dir.join(format!("SWEEP_{}.md", rep.model));
-    std::fs::write(&md_path, super::tables::sweep_table(rep).render())
+    std::fs::write(&md_path, super::tables::sweep_markdown(rep))
         .with_context(|| format!("writing {}", md_path.display()))?;
     Ok(json_path)
 }
@@ -160,45 +161,92 @@ mod tests {
         assert_eq!(fmt_params(32_000), "32K");
     }
 
-    #[test]
-    fn render_and_save_sweep_roundtrip() {
-        use crate::eval::sweep::{SweepReport, TaskCell, VariantResult};
+    fn unit_sweep_report() -> crate::eval::sweep::SweepReport {
+        use crate::eval::sweep::{SweepReport, TaskCell, VariantResult, FULL_SOURCE};
         use crate::eval::tasks::Task;
-        let rep = SweepReport {
+        let cell = |pct_correct: usize| TaskCell {
+            task: Task::Copy,
+            acc: crate::eval::Accuracy { correct: pct_correct, total: 4 },
+            mean_correct_lp: -1.0,
+        };
+        SweepReport {
             model: "unit".into(),
             items: 4,
             seq_len: 64,
             seed: 1,
             threads: 1,
             kernel: "scalar".into(),
+            calib_sources: vec!["mixture".into()],
             n_calib_tokens: 0,
             wall_seconds: 0.0,
-            variants: vec![VariantResult {
-                label: "Full".into(),
-                m: 4,
-                params: 100,
-                ratio: 1.0,
-                merge_seconds: 0.0,
-                mean_layer_err: 0.0,
-                cells: vec![TaskCell {
-                    task: Task::Copy,
-                    acc: crate::eval::Accuracy { correct: 2, total: 4 },
-                    mean_correct_lp: -1.0,
-                }],
-            }],
-        };
-        let md = crate::exp::tables::sweep_table(&rep).render();
+            variants: vec![
+                VariantResult {
+                    source: FULL_SOURCE.into(),
+                    label: "Full".into(),
+                    m: 4,
+                    params: 100,
+                    ratio: 1.0,
+                    merge_seconds: 0.0,
+                    mean_layer_err: 0.0,
+                    cells: vec![cell(2)],
+                },
+                VariantResult {
+                    source: "mixture".into(),
+                    label: "MergeMoE".into(),
+                    m: 2,
+                    params: 60,
+                    ratio: 0.6,
+                    merge_seconds: 0.1,
+                    mean_layer_err: 0.05,
+                    cells: vec![cell(1)],
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn render_and_save_sweep_roundtrip() {
+        let rep = unit_sweep_report();
+        let md = crate::exp::tables::sweep_markdown(&rep);
         assert!(md.contains("Full"), "{md}");
         assert!(md.contains("50.00"), "{md}");
-        assert_eq!(md.lines().count(), 3, "{md}");
+        assert!(md.contains("mixture"), "{md}");
+        // single source: flat table — header + separator + two variant rows
+        assert_eq!(md.lines().count(), 4, "{md}");
         // per-process dir: concurrent test runs must not race on the files
         let dir = std::env::temp_dir()
             .join(format!("mergemoe_sweep_report_test_{}", std::process::id()));
         let path = save_sweep(&dir, &rep).unwrap();
         let back = Json::parse_file(&path).unwrap();
         assert_eq!(back.get("model").unwrap().as_str().unwrap(), "unit");
+        assert_eq!(
+            back.get("calib_sources").unwrap().as_arr().unwrap()[0]
+                .as_str()
+                .unwrap(),
+            "mixture"
+        );
         assert!(dir.join("SWEEP_unit.md").exists());
         std::fs::remove_file(&path).ok();
         std::fs::remove_file(dir.join("SWEEP_unit.md")).ok();
+    }
+
+    #[test]
+    fn multi_source_markdown_sections_repeat_the_full_row() {
+        use crate::eval::sweep::VariantResult;
+        let mut rep = unit_sweep_report();
+        rep.calib_sources = vec!["mixture".into(), "copy".into()];
+        let compressed = rep.variants[1].clone();
+        rep.variants.push(VariantResult { source: "copy".into(), ..compressed });
+        let md = crate::exp::tables::sweep_markdown(&rep);
+        // one section header per source
+        assert_eq!(md.matches("### calibration source:").count(), 2, "{md}");
+        assert!(md.contains("### calibration source: mixture"), "{md}");
+        assert!(md.contains("### calibration source: copy"), "{md}");
+        // the Full row appears in both sections; each section has exactly
+        // one compressed row
+        assert_eq!(md.matches("| Full").count(), 2, "{md}");
+        assert_eq!(md.matches("| MergeMoE").count(), 2, "{md}");
+        // sectioned tables omit the Calib column (the header names it)
+        assert!(!md.contains("Calib"), "{md}");
     }
 }

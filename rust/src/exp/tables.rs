@@ -118,18 +118,14 @@ fn comparison_table(ctx: &Ctx, spec: &TableSpec) -> Result<()> {
     save(ctx, spec.name, Json::Obj(records.into_iter().map(|(k, v)| (k, v)).collect()))
 }
 
-/// The accuracy-vs-ratio table of an evaluation sweep: one row per variant
-/// (Full first, then each method at each compression ratio), one column per
-/// task plus the mean — the same layout Tables 1–3 print, generalized over
-/// ratios. `exp::report::save_sweep` persists its [`TablePrinter::render`]
-/// as `SWEEP_<model>.md`.
-pub fn sweep_table(rep: &crate::eval::sweep::SweepReport) -> TablePrinter {
-    let mut headers = vec![
-        "Method".to_string(),
-        "m".to_string(),
-        "Params".to_string(),
-        "Ratio".to_string(),
-    ];
+/// Column headers of a sweep table; `with_calib` inserts the calibration
+/// source column the flat (single-table) layout needs.
+fn sweep_headers(rep: &crate::eval::sweep::SweepReport, with_calib: bool) -> Vec<String> {
+    let mut headers = vec!["Method".to_string()];
+    if with_calib {
+        headers.push("Calib".to_string());
+    }
+    headers.extend(["m".to_string(), "Params".to_string(), "Ratio".to_string()]);
     if let Some(first) = rep.variants.first() {
         headers.extend(
             first
@@ -139,19 +135,66 @@ pub fn sweep_table(rep: &crate::eval::sweep::SweepReport) -> TablePrinter {
         );
     }
     headers.push("Mean".to_string());
+    headers
+}
+
+fn sweep_row(v: &crate::eval::sweep::VariantResult, with_calib: bool) -> Vec<String> {
+    let mut row = vec![v.label.clone()];
+    if with_calib {
+        row.push(v.source.clone());
+    }
+    row.extend([
+        format!("{}", v.m),
+        fmt_params(v.params),
+        format!("{:.1}%", 100.0 * v.ratio),
+    ]);
+    row.extend(v.cells.iter().map(|c| format!("{:.2}", c.acc.percent())));
+    row.push(format!("{:.2}", v.mean_percent()));
+    row
+}
+
+/// The accuracy-vs-ratio table of an evaluation sweep, flat: one row per
+/// variant (Full first, then each method at each compression ratio under
+/// each calibration source), one column per task plus the mean — the same
+/// layout Tables 1–3 print, generalized over ratios and calibration
+/// sources (the `Calib` column). Multi-source reports usually read better
+/// through [`sweep_markdown`]'s per-source sections.
+pub fn sweep_table(rep: &crate::eval::sweep::SweepReport) -> TablePrinter {
+    let headers = sweep_headers(rep, true);
     let mut t = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
     for v in &rep.variants {
-        let mut row = vec![
-            v.label.clone(),
-            format!("{}", v.m),
-            fmt_params(v.params),
-            format!("{:.1}%", 100.0 * v.ratio),
-        ];
-        row.extend(v.cells.iter().map(|c| format!("{:.2}", c.acc.percent())));
-        row.push(format!("{:.2}", v.mean_percent()));
-        t.row(row);
+        t.row(sweep_row(v, true));
     }
     t
+}
+
+/// Markdown for a whole sweep report — what `exp::report::save_sweep`
+/// persists as `SWEEP_<model>.md` and `mergemoe sweep` prints. Single
+/// source: the flat [`sweep_table`]. Multiple sources (the Table-4 axis):
+/// one `###`-headed section per calibration source, each a paper-style
+/// table with the source-independent Full row repeated for side-by-side
+/// reading.
+pub fn sweep_markdown(rep: &crate::eval::sweep::SweepReport) -> String {
+    use crate::eval::sweep::FULL_SOURCE;
+    if rep.calib_sources.len() <= 1 {
+        return sweep_table(rep).render();
+    }
+    let headers = sweep_headers(rep, false);
+    let mut out = String::new();
+    for (si, src) in rep.calib_sources.iter().enumerate() {
+        if si > 0 {
+            out.push('\n');
+        }
+        out.push_str(&format!("### calibration source: {src}\n\n"));
+        let mut t = TablePrinter::new(&headers.iter().map(|s| s.as_str()).collect::<Vec<_>>());
+        for v in &rep.variants {
+            if v.source == *src || v.source == FULL_SOURCE {
+                t.row(sweep_row(v, false));
+            }
+        }
+        out.push_str(&t.render());
+    }
+    out
 }
 
 /// Table 4 — cross-dataset generalization of the calibration source

@@ -64,6 +64,8 @@
 //!   lower triangle only and mirrors it (exactly equal to the full product,
 //!   column dots are grouping-invariant by construction).
 
+#![warn(missing_docs)]
+
 pub mod scalar;
 
 #[cfg(target_arch = "x86_64")]
@@ -88,6 +90,8 @@ pub enum Kind {
 }
 
 impl Kind {
+    /// Lower-case family name (`"scalar"`, `"avx2"`, `"neon"`) — the
+    /// spelling `MERGEMOE_KERNEL` accepts and reports stamp.
     pub fn name(self) -> &'static str {
         match self {
             Kind::Scalar => "scalar",

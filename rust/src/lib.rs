@@ -93,25 +93,30 @@
 //!
 //! ## Evaluation sweeps
 //!
-//! The paper's headline claim is quality-at-ratio, so the repo reproduces
-//! its comparison tables in one command: `mergemoe sweep` (backed by
-//! [`eval::sweep::run_sweep`]) evaluates the whole
-//! {method × ratio × task} grid — e.g.
+//! The paper's headline claims are quality-at-ratio (Tables 1–3) and
+//! calibration-source robustness (Table 4), so the repo reproduces both in
+//! one command: `mergemoe sweep` (backed by [`eval::sweep::run_sweep`])
+//! evaluates the whole {calibration source × method × ratio × task} grid —
+//! e.g.
 //!
 //! ```text
 //! mergemoe sweep --model beta --methods average,msmoe,mergemoe --ms 6,8 \
-//!                --tasks copy,parity,markov --items 100
+//!                --calib-sources mixture,copy,parity --items 100
 //! ```
 //!
-//! tokenizes each task once, captures calibration activations once,
-//! compresses once per (method, ratio) via the pipeline, then fans the
-//! independent (model, task) cells across the worker pool — one forked
-//! engine + one `EvalScratch` per lane (workspaces are never shared across
-//! threads), with the scorer on the zero-alloc `Engine::logits_ws` path.
-//! Results are bit-identical at every thread count
-//! (`tests/eval_consistency.rs`) and land as an accuracy-vs-ratio markdown
-//! table plus machine-readable `SWEEP_<model>.json` under
-//! `artifacts/reports/`.
+//! tokenizes each task once, captures calibration activations once per
+//! source, and runs a **two-stage pipeline** over the variant stream
+//! ([`util::par::pipeline`], a bounded-handoff primitive): one pinned lane
+//! compresses variant `k+1` while the remaining lanes score variant `k` —
+//! one forked engine + one `EvalScratch` per lane (workspaces are never
+//! shared across threads), with the scorer on the zero-alloc
+//! `Engine::logits_ws` path. `--threads 1` (and any non-forking engine) is
+//! the exact serial execution; results are bit-identical at every thread
+//! count (`tests/eval_consistency.rs`) and land as per-source
+//! accuracy-vs-ratio markdown tables plus machine-readable
+//! `SWEEP_<model>.json` under `artifacts/reports/`. See `ARCHITECTURE.md`
+//! at the repo root for the full determinism contract — what is
+//! bit-identical vs tolerance-bound, and which test pins each guarantee.
 //! * [`io`]      — NPY/NPZ interchange with the build-time trainer.
 //! * [`config`]  — artifact manifest + model configurations.
 //! * [`model`]   — weights and the native reference forward engine.

@@ -19,7 +19,7 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use mergemoe::calib;
-use mergemoe::coordinator::{compress, CompressSpec, ScoringServer, ServerConfig};
+use mergemoe::coordinator::{compress, CalibSource, CompressSpec, ScoringServer, ServerConfig};
 use mergemoe::eval::tasks::{Task, ALL_TASKS};
 use mergemoe::eval::{run_sweep, SweepSpec};
 use mergemoe::exp::{self, Ctx, EngineSel};
@@ -52,10 +52,13 @@ fn usage() -> &'static str {
      eval:      --model NAME [--compressed FILE.npz] [--tasks t1,t2]\n\
      sweep:     [--model NAME] [--methods m1,m2,..] [--ms M1,M2,..] [--tasks t1,t2]\n\
                 [--layers l1,l2] [--items N] [--batch N] [--calib-seqs N]\n\
-                [--calib-tasks t1,t2] [--no-full]\n\
-                evaluates every {method x ratio x task} cell in one run and\n\
-                writes SWEEP_<model>.json + .md under <artifacts>/reports\n\
-                (falls back to a synthetic model when no artifacts exist)\n\
+                [--calib-sources s1,s2] [--calib-tasks t1,t2] [--no-full]\n\
+                evaluates every {calib source x method x ratio x task} cell\n\
+                in one run and writes SWEEP_<model>.json + .md under\n\
+                <artifacts>/reports (synthetic-model fallback on bare\n\
+                checkouts). each calibration source is a task name, an\n\
+                a+b task combination, or \"mixture\" (Table 4's rows);\n\
+                omitted = one source from --calib-tasks (default mixture)\n\
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
      stats:     --model NAME [--calib-seqs N]\n\
      selfcheck: --model NAME"
@@ -223,10 +226,22 @@ fn cmd_sweep(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     spec.seq_len = seq_len;
     spec.n_calib_seqs = args.usize("calib-seqs", 48)?;
     spec.calib_tasks = parse_tasks(args, "calib-tasks")?;
+    if let Some(v) = args.get("calib-sources") {
+        let mut sources = Vec::new();
+        for entry in v.split(',') {
+            sources.push(
+                CalibSource::parse(entry)
+                    .with_context(|| format!("bad --calib-sources entry {entry:?}"))?,
+            );
+        }
+        spec.calib_sources = sources;
+    }
     spec.seed = args.usize("seed", 2026)? as u64;
     spec.include_full = !args.has("no-full");
     info!(
-        "sweep: {} methods x {} ratios x {} tasks on {model_name} ({} items/task)",
+        "sweep: {} calib sources x {} methods x {} ratios x {} tasks on {model_name} \
+         ({} items/task)",
+        spec.sources().len(),
         spec.methods.len(),
         spec.targets.len(),
         spec.tasks.len(),
@@ -240,11 +255,12 @@ fn cmd_sweep(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     };
     let rep = run_sweep(&model, &spec, &mut gram.as_backend(), engine.as_mut())?;
     println!(
-        "\nsweep: model={model_name} layers={:?} targets={:?} ({} items/task, engine={}, \
-         {} threads, {:.1}s)",
-        spec.layers, spec.targets, spec.items, engine.name(), rep.threads, rep.wall_seconds
+        "\nsweep: model={model_name} layers={:?} targets={:?} sources={:?} ({} items/task, \
+         engine={}, {} threads, {:.1}s)",
+        spec.layers, spec.targets, rep.calib_sources, spec.items, engine.name(), rep.threads,
+        rep.wall_seconds
     );
-    exp::tables::sweep_table(&rep).print();
+    print!("{}", exp::tables::sweep_markdown(&rep));
     let path = exp::report::save_sweep(&artifacts.join("reports"), &rep)?;
     println!("[sweep report saved to {} (+ .md)]", path.display());
     Ok(())

@@ -48,7 +48,10 @@
 //!   the job lives on the caller's stack and block tables live in a
 //!   fixed-size array.
 
+#![warn(missing_docs)]
+
 use std::cell::Cell;
+use std::collections::VecDeque;
 use std::panic::{catch_unwind, AssertUnwindSafe};
 use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::{Condvar, Mutex};
@@ -596,6 +599,216 @@ where
     par_map_range(items.len(), |i| f(i, &items[i]))
 }
 
+// ---------------------------------------------------------------------------
+// Bounded handoff: the two-stage pipeline primitive.
+// ---------------------------------------------------------------------------
+
+/// A bounded producer→consumer handoff queue — the channel inside
+/// [`pipeline`].
+///
+/// Single producer, single consumer, strict FIFO: items arrive at the
+/// consumer in exactly the order they were pushed, so a pipeline's output
+/// order (and therefore its results) never depends on scheduling. The
+/// capacity bound is what makes the pipeline a *pipeline* rather than a
+/// buffer: a producer that runs ahead of the consumer by more than
+/// `capacity` items blocks, bounding peak memory to a handful of in-flight
+/// items (the evaluation sweep hands whole compressed models through this,
+/// so the bound is load-bearing).
+///
+/// Shutdown is two-sided: the producer side is *closed* when the produce
+/// stage finishes (pops drain the queue, then return `None`), and the
+/// consumer side is *abandoned* when the consume stage finishes (pushes
+/// stop blocking and return `false`). [`pipeline`] wires both transitions
+/// up automatically, including on panic, so neither side can strand the
+/// other.
+pub struct Handoff<T> {
+    inner: Mutex<HandoffInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct HandoffInner<T> {
+    queue: VecDeque<T>,
+    /// 0 = unbounded (the serial execution mode buffers everything).
+    capacity: usize,
+    closed: bool,
+    abandoned: bool,
+}
+
+impl<T: Send> Handoff<T> {
+    /// A handoff holding at most `capacity` queued items; `0` means
+    /// unbounded ([`pipeline`]'s serial mode, where the producer runs to
+    /// completion before the consumer starts).
+    pub fn new(capacity: usize) -> Handoff<T> {
+        Handoff {
+            inner: Mutex::new(HandoffInner {
+                queue: VecDeque::new(),
+                capacity,
+                closed: false,
+                abandoned: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Queue `item`, blocking while the handoff is full. Returns `false`
+    /// (dropping `item`) once the consumer is gone — the producer should
+    /// stop producing and return.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.abandoned {
+                return false;
+            }
+            if st.capacity == 0 || st.queue.len() < st.capacity {
+                st.queue.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue the next item in production order, blocking while the
+    /// handoff is empty and the producer is still running. Returns `None`
+    /// once the producer has finished and the queue is drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed || st.abandoned {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// Producer side finished (or died): wake the consumer to drain the
+    /// queue and observe end-of-stream.
+    fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Consumer side finished (or died): blocked and future pushes return
+    /// `false` instead of waiting forever.
+    fn abandon(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.abandoned = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+}
+
+/// Closes the handoff when dropped — attached to the produce stage so that
+/// a panicking (or early-returning) producer can never leave the consumer
+/// blocked in [`Handoff::pop`].
+struct CloseOnDrop<'a, T: Send>(&'a Handoff<T>);
+
+impl<T: Send> Drop for CloseOnDrop<'_, T> {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// The serial execution of [`pipeline`]: an unbounded buffer, the producer
+/// run to completion, then the consumer — exactly the pre-pipeline order,
+/// which is what the `threads = 1` bit-identity contract pins.
+fn pipeline_serial<T, PR, CR>(
+    produce: impl FnOnce(&Handoff<T>) -> PR,
+    consume: impl FnOnce(&Handoff<T>) -> CR,
+) -> (PR, CR)
+where
+    T: Send,
+{
+    let h = Handoff::new(0);
+    let pr = {
+        let _close = CloseOnDrop(&h);
+        with_pool_flag(|| produce(&h))
+    };
+    let cr = consume(&h);
+    (pr, cr)
+}
+
+/// Two-stage bounded-handoff pipeline: `produce` runs on the calling
+/// thread, `consume` on one dedicated overlap thread, connected by a
+/// [`Handoff`] holding at most `capacity` in-flight items (clamped to
+/// ≥ 1). The evaluation sweep is the motivating consumer: one lane
+/// compresses variant `k+1` while the remaining lanes score variant `k`.
+///
+/// Contract:
+///
+/// * **Stage roles.** The produce stage is pinned to a single lane — it
+///   runs with the in-pool flag set, so any `par_*` call it makes degrades
+///   to serial. The consume stage runs unpinned and may fan work across
+///   the pool (e.g. via [`par_items_with_slots`]). Total concurrency is
+///   therefore bounded by `1 + ` whatever the consumer uses: at most one
+///   lane beyond the thread budget during overlap windows, and only while
+///   the producer is actually computing rather than blocked in `push`.
+/// * **Determinism.** Items arrive in production order regardless of
+///   timing, and with `threads = 1` (or from inside a nested region) the
+///   stages run back to back on the calling thread with an unbounded
+///   buffer — the exact serial execution. Stages whose per-item work is
+///   deterministic therefore produce bit-identical results at every
+///   thread count (`tests/eval_consistency.rs` pins this for the sweep).
+/// * **Errors.** Each stage returns its own value; recoverable errors
+///   travel through `PR`/`CR` (the sweep threads `anyhow::Result`s
+///   through both). A consume stage that returns early (error or
+///   otherwise) makes subsequent pushes return `false`, telling the
+///   producer to stop; a produce stage that returns early closes the
+///   handoff, letting the consumer drain what exists and finish.
+/// * **Panics.** A panic in either stage propagates to the caller —
+///   producer panics unwind directly (the handoff closes on the way out,
+///   so the consumer finishes rather than hanging), consumer panics are
+///   re-raised after the producer returns. Neither can deadlock the
+///   other.
+pub fn pipeline<T, PR, CR, P, C>(capacity: usize, produce: P, consume: C) -> (PR, CR)
+where
+    T: Send,
+    CR: Send,
+    P: FnOnce(&Handoff<T>) -> PR,
+    C: FnOnce(&Handoff<T>) -> CR + Send,
+{
+    if max_threads() <= 1 || in_parallel_region() {
+        return pipeline_serial(produce, consume);
+    }
+    let h = Handoff::new(capacity.max(1));
+    std::thread::scope(|s| {
+        let handoff = &h;
+        let consumer = std::thread::Builder::new()
+            .name("mergemoe-pipe".into())
+            .spawn_scoped(s, move || {
+                let out = catch_unwind(AssertUnwindSafe(|| consume(handoff)));
+                // Normal return or panic: a producer blocked in `push`
+                // must observe that the consumer is gone.
+                handoff.abandon();
+                out
+            })
+            .expect("spawning the pipeline consumer thread");
+        let pr = {
+            let _close = CloseOnDrop(handoff);
+            with_pool_flag(|| produce(handoff))
+        };
+        // The consumer catches its own unwind, so join() itself never
+        // fails; a consumer panic is re-raised here with its original
+        // payload (same policy as `run_region`).
+        match consumer.join().expect("pipeline consumer thread vanished") {
+            Ok(cr) => (pr, cr),
+            Err(payload) => std::panic::resume_unwind(payload),
+        }
+    })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -827,5 +1040,103 @@ mod tests {
             }
         });
         assert!(data.iter().all(|&v| v == 1));
+    }
+
+    // The pipeline tests below are knob-agnostic: they pass whether the
+    // runner executes the serial or the overlapped mode (thread-knob-forced
+    // coverage — overlap evidence, consumer-exit unblocking, serial-vs-
+    // pipelined bit-identity — lives in tests/eval_consistency.rs, which
+    // serializes access to the global knob).
+
+    #[test]
+    fn pipeline_preserves_production_order() {
+        let (pushed, got) = pipeline(
+            2,
+            |tx| {
+                let mut n = 0u32;
+                for i in 0..57u32 {
+                    if tx.push(i) {
+                        n += 1;
+                    }
+                }
+                n
+            },
+            |rx| {
+                let mut got = Vec::new();
+                while let Some(v) = rx.pop() {
+                    got.push(v);
+                }
+                got
+            },
+        );
+        assert_eq!(pushed, 57);
+        assert_eq!(got, (0..57).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn pipeline_handles_empty_and_single_item_streams() {
+        for n in [0usize, 1] {
+            let (_, consumed) = pipeline(
+                1,
+                move |tx| {
+                    for i in 0..n {
+                        tx.push(i);
+                    }
+                },
+                |rx| {
+                    let mut c = 0usize;
+                    while rx.pop().is_some() {
+                        c += 1;
+                    }
+                    c
+                },
+            );
+            assert_eq!(consumed, n);
+        }
+    }
+
+    #[test]
+    fn pipeline_producer_panic_propagates_without_hanging_consumer() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pipeline(
+                1,
+                |tx| {
+                    tx.push(1u32);
+                    panic!("producer boom");
+                },
+                |rx| {
+                    let mut sum = 0u32;
+                    while let Some(v) = rx.pop() {
+                        sum += v;
+                    }
+                    sum
+                },
+            );
+        }));
+        let payload = result.expect_err("producer panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("producer boom"), "payload survived: {msg:?}");
+    }
+
+    #[test]
+    fn pipeline_consumer_panic_propagates_without_hanging_producer() {
+        let result = catch_unwind(AssertUnwindSafe(|| {
+            pipeline(
+                1,
+                |tx| {
+                    // If the dead consumer did not unblock pushes, this
+                    // loop would hang instead of seeing `false`.
+                    for i in 0..10_000u32 {
+                        if !tx.push(i) {
+                            break;
+                        }
+                    }
+                },
+                |_rx| -> u32 { panic!("consumer boom") },
+            );
+        }));
+        let payload = result.expect_err("consumer panic must propagate");
+        let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
+        assert!(msg.contains("consumer boom"), "payload survived: {msg:?}");
     }
 }

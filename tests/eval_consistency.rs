@@ -13,6 +13,7 @@
 
 use std::sync::Mutex;
 
+use mergemoe::calib::CalibSource;
 use mergemoe::config::ModelConfig;
 use mergemoe::eval::scorer::{score_items_scored, score_prepared_ws, PreparedItems};
 use mergemoe::eval::sweep::{run_sweep, SweepReport, SweepSpec};
@@ -150,9 +151,12 @@ fn warm_scratch_rescoring_bit_identical_across_thread_counts() {
 }
 
 fn assert_reports_identical(a: &SweepReport, b: &SweepReport, what: &str) {
+    assert_eq!(a.calib_sources, b.calib_sources, "{what}");
+    assert_eq!(a.n_calib_tokens, b.n_calib_tokens, "{what}");
     assert_eq!(a.variants.len(), b.variants.len(), "{what}");
     for (va, vb) in a.variants.iter().zip(&b.variants) {
         assert_eq!(va.label, vb.label, "{what}");
+        assert_eq!(va.source, vb.source, "{what}: {}", va.label);
         assert_eq!(va.m, vb.m, "{what}");
         assert_eq!(va.params, vb.params, "{what}: {}", va.label);
         for (ca, cb) in va.cells.iter().zip(&vb.cells) {
@@ -190,6 +194,219 @@ fn sweep_bit_identical_across_thread_counts_and_reruns() {
             assert_reports_identical(&reference, &rep, &format!("threads {t} round {round}"));
         }
     }
+}
+
+#[test]
+fn multi_source_sweep_bit_identical_across_thread_counts() {
+    // The four-axis grid (calibration source × method × ratio × task) must
+    // be scheduling-invariant exactly like the three-axis one: the
+    // pipelined execution (threads > 1: compression of variant k+1
+    // overlapping scoring of variant k) reproduces the serial reference
+    // bit for bit.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let model = test_model(4, false, 0x5EED2);
+    let mut spec = SweepSpec::new(
+        vec![Algorithm::Average, Algorithm::MSmoe],
+        vec![2],
+        vec![Task::Copy, Task::Parity],
+        vec![0, 1],
+    );
+    spec.items = 10;
+    spec.n_calib_seqs = 4;
+    spec.batch = 8;
+    spec.calib_sources = vec![
+        CalibSource::mixture(),
+        CalibSource::single(Task::Copy),
+        CalibSource::parse("copy+parity").unwrap(),
+    ];
+    let run = || run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+    let reference = with_threads(1, run);
+    assert_eq!(reference.calib_sources, vec!["mixture", "copy", "copy+parity"]);
+    // Full + 3 sources × 2 methods × 1 target, one capture per source
+    assert_eq!(reference.variants.len(), 7);
+    assert_eq!(reference.n_calib_tokens, 3 * spec.n_calib_seqs * 64);
+    for src in &reference.calib_sources {
+        for label in ["Average", "M-SMoE"] {
+            assert_eq!(
+                reference
+                    .variants
+                    .iter()
+                    .filter(|v| v.source == *src && v.label == label)
+                    .count(),
+                1,
+                "{src}/{label}"
+            );
+        }
+    }
+    for t in SWEEP_THREADS {
+        for round in 0..2 {
+            let rep = with_threads(t, run);
+            assert_reports_identical(&reference, &rep, &format!("threads {t} round {round}"));
+        }
+    }
+}
+
+#[test]
+fn degenerate_sweep_grids_run_at_every_thread_count() {
+    // 1-variant, 1-task grid without the Full row: the pipeline's smallest
+    // possible stream still completes and matches the serial reference.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let model = test_model(4, false, 0x1D3);
+    let mut spec = SweepSpec::new(
+        vec![Algorithm::Average],
+        vec![2],
+        vec![Task::Copy],
+        vec![0],
+    );
+    spec.items = 6;
+    spec.n_calib_seqs = 2;
+    spec.batch = 4;
+    spec.include_full = false;
+    let run = || run_sweep(&model, &spec, &mut NativeGram, &mut NativeEngine).unwrap();
+    let reference = with_threads(1, run);
+    assert_eq!(reference.variants.len(), 1);
+    assert_eq!(reference.variants[0].cells.len(), 1);
+    for t in SWEEP_THREADS {
+        let rep = with_threads(t, run);
+        assert_reports_identical(&reference, &rep, &format!("threads {t}"));
+    }
+    // the empty grid is still rejected, at any thread count
+    let mut bad = spec.clone();
+    bad.tasks.clear();
+    for t in SWEEP_THREADS {
+        with_threads(t, || {
+            assert!(run_sweep(&model, &bad, &mut NativeGram, &mut NativeEngine).is_err());
+        });
+    }
+}
+
+#[test]
+fn pipeline_matches_serial_across_thread_counts() {
+    // The handoff primitive itself: identical stage closures must yield
+    // identical results whether the stages run back to back (threads = 1)
+    // or overlapped (threads > 1) — the mechanism behind the sweep's
+    // thread-count invariance.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let work = |threads: usize| -> Vec<u64> {
+        with_threads(threads, || {
+            par::pipeline(
+                1,
+                |tx| {
+                    for i in 0..17u64 {
+                        if !tx.push(i * i + 1) {
+                            break;
+                        }
+                    }
+                },
+                |rx| {
+                    let mut out = Vec::new();
+                    while let Some(v) = rx.pop() {
+                        out.push(v * 3);
+                    }
+                    out
+                },
+            )
+            .1
+        })
+    };
+    let reference = work(1);
+    assert_eq!(reference.len(), 17);
+    for t in SWEEP_THREADS {
+        assert_eq!(work(t), reference, "threads {t}");
+    }
+}
+
+#[test]
+fn pipeline_overlaps_production_with_consumption() {
+    // Pin the tentpole property: with threads > 1 and capacity 1, the
+    // producer works on item k+1 while the consumer still holds item k.
+    // While consuming item 0 we wait (generous timeout, no flakiness —
+    // after our pop the producer is unblocked by construction) for the
+    // producer to signal that production of item 2 has started; a serial
+    // execution can never deliver that signal.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    with_threads(4, || {
+        let started = Mutex::new(0usize); // 1 + highest item index started
+        let cv = std::sync::Condvar::new();
+        let (_, consumed) = par::pipeline(
+            1,
+            |tx| {
+                for i in 0..3usize {
+                    {
+                        let mut s = started.lock().unwrap();
+                        *s = i + 1;
+                        cv.notify_all();
+                    }
+                    if !tx.push(i) {
+                        break;
+                    }
+                }
+            },
+            |rx| {
+                let mut got = Vec::new();
+                while let Some(i) = rx.pop() {
+                    if i == 0 {
+                        let deadline = std::time::Duration::from_secs(30);
+                        let t0 = std::time::Instant::now();
+                        let mut s = started.lock().unwrap();
+                        while *s < 3 && t0.elapsed() < deadline {
+                            let (back, _) = cv
+                                .wait_timeout(s, std::time::Duration::from_millis(100))
+                                .unwrap();
+                            s = back;
+                        }
+                        assert!(
+                            *s >= 3,
+                            "production of item 2 never started while item 0 was \
+                             being consumed — no overlap"
+                        );
+                    }
+                    got.push(i);
+                }
+                got
+            },
+        );
+        assert_eq!(consumed, vec![0, 1, 2]);
+    });
+}
+
+#[test]
+fn pipeline_consumer_exit_unblocks_producer() {
+    // A consume stage that stops early (e.g. a scoring error) must turn
+    // subsequent pushes into `false` instead of deadlocking the producer.
+    let _guard = THREAD_KNOB.lock().unwrap();
+    with_threads(4, || {
+        let (pushed, consumed) = par::pipeline(
+            1,
+            |tx| {
+                let mut n = 0u32;
+                for i in 0..1000u32 {
+                    if !tx.push(i) {
+                        break;
+                    }
+                    n += 1;
+                }
+                n
+            },
+            |rx| {
+                let mut got = Vec::new();
+                for _ in 0..3 {
+                    match rx.pop() {
+                        Some(v) => got.push(v),
+                        None => break,
+                    }
+                }
+                got
+            },
+        );
+        assert_eq!(consumed, vec![0, 1, 2]);
+        // capacity 1 bounds the producer to the 3 consumed items plus at
+        // most one queued item before it observes the abandonment
+        assert!(
+            (3..=4).contains(&pushed),
+            "producer must stop right after the consumer leaves, pushed {pushed}"
+        );
+    });
 }
 
 #[test]
