@@ -26,8 +26,9 @@ fn main() -> anyhow::Result<()> {
             max_batch,
             max_wait: Duration::from_millis(wait_ms),
             seq_len: bm.seq_len,
+            ..ServerConfig::default()
         };
-        let server = ScoringServer::start(model.clone(), cfg, || Ok(NativeEngine));
+        let server = ScoringServer::start(model.clone(), cfg, || Ok(NativeEngine))?;
         let handle = server.handle();
         let n_clients = 8;
         let per = 25;

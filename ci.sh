@@ -17,6 +17,16 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
+# Fault-injection sweep: rerun ONLY the fault-injection suite under a few
+# seeded chaos plans. Scoped to that one test binary on purpose — the rest
+# of the suite reads MERGEMOE_FAULT through the default FromEnv setting
+# and is meant to run fault-free.
+for seed in 11 223 4099; do
+    echo "==> fault-injection suite under MERGEMOE_FAULT seed:$seed"
+    MERGEMOE_FAULT="seed:$seed,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
+        cargo test -q --test fault_injection
+done
+
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     echo "==> cargo fmt --check"
     cargo fmt --check

@@ -58,11 +58,12 @@ fn main() -> Result<()> {
         max_batch: 32,
         max_wait: Duration::from_millis(3),
         seq_len: s,
+        ..ServerConfig::default()
     };
     let art2 = artifacts.clone();
     let server = ScoringServer::start(merged, cfg, move || {
         PjrtEngine::new(Manifest::load(&art2)?)
-    });
+    })?;
     let handle = server.handle();
     let n_clients = 4;
     let per_client = 60;

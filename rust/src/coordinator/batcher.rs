@@ -2,55 +2,146 @@
 //! batches under a latency deadline — the vLLM-router-style admission layer
 //! in front of the single compiled backend.
 //!
-//! Policy: a batch is flushed when (a) it reaches `max_batch` sequences, or
-//! (b) `max_wait` has elapsed since the *oldest* queued request. Bucketed
-//! executables mean a flush at any size ≤ `max_batch` costs the same as the
-//! next bucket up, so the deadline only trades latency against padding
-//! waste, never against correctness (padding-invariance is a scorer test).
+//! Policy: a batch is flushed when (a) it reaches `max_batch` sequences,
+//! (b) `max_wait` has elapsed since the *oldest* queued request, or (c) the
+//! earliest per-request **deadline** among the collected items is about to
+//! pass — waiting longer could only expire work that is still servable.
+//! Bucketed executables mean a flush at any size ≤ `max_batch` costs the
+//! same as the next bucket up, so the deadline only trades latency against
+//! padding waste, never against correctness (padding-invariance is a scorer
+//! test).
+//!
+//! Items whose deadline has already passed at flush time are partitioned
+//! into [`Batch::expired`] so the server can fail them *without* spending a
+//! forward pass on them.
+//!
+//! The channel carries [`Ctl`] frames rather than bare payloads: a
+//! [`Ctl::Close`] sentinel enqueued behind the last admitted request is the
+//! explicit drain protocol — the batcher flushes everything ahead of it,
+//! then reports `close`, so shutdown never depends on every last sender
+//! clone being dropped.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, TryRecvError};
 use std::time::{Duration, Instant};
+
+/// Safety margin for the deadline-aware flush: a batch capped by a
+/// per-item deadline flushes this much *before* that deadline, so the
+/// capping item is dispatched while it is still servable instead of
+/// expiring exactly at the flush boundary.
+pub const DEADLINE_FLUSH_MARGIN: Duration = Duration::from_millis(10);
+
+/// The instant a batch containing an item with deadline `d` must flush by.
+fn flush_cap(d: Instant) -> Instant {
+    d.checked_sub(DEADLINE_FLUSH_MARGIN).unwrap_or(d)
+}
 
 /// One queued sequence to score.
 pub struct WorkItem<T> {
+    /// The request payload.
     pub payload: T,
+    /// When the batcher received it (queue-wait metrics).
     pub enqueued: Instant,
+}
+
+/// A control frame on the admission channel.
+pub enum Ctl<T> {
+    /// An admitted request.
+    Item(T),
+    /// Drain sentinel: flush everything queued ahead of this frame, then
+    /// shut down.
+    Close,
+}
+
+/// One flushed batch.
+pub struct Batch<T> {
+    /// Items to run now.
+    pub ready: Vec<WorkItem<T>>,
+    /// Items whose deadline passed while queued — fail these without
+    /// running their forward pass.
+    pub expired: Vec<WorkItem<T>>,
+    /// A [`Ctl::Close`] sentinel was consumed: process this batch, then
+    /// shut down.
+    pub close: bool,
 }
 
 /// Outcome of one poll of the queue.
 pub enum BatchDecision<T> {
     /// Run these items now.
-    Flush(Vec<WorkItem<T>>),
-    /// Channel closed and queue drained — shut down.
+    Flush(Batch<T>),
+    /// Channel closed (or [`Ctl::Close`] arrived on an empty queue) — shut
+    /// down.
     Shutdown,
 }
 
-/// Collect the next batch from `rx` under the (max_batch, max_wait) policy.
-/// Blocks until there is at least one item or the channel closes.
+/// Collect the next batch from `rx` under the (max_batch, max_wait) policy,
+/// with per-item deadlines supplied by `deadline_of`. Blocks until there is
+/// at least one item, a close sentinel, or the channel closes.
 pub fn next_batch<T>(
-    rx: &Receiver<T>,
+    rx: &Receiver<Ctl<T>>,
     max_batch: usize,
     max_wait: Duration,
+    deadline_of: impl Fn(&T) -> Option<Instant>,
 ) -> BatchDecision<T> {
     // block for the first item
-    let first = match rx.recv() {
-        Ok(p) => WorkItem { payload: p, enqueued: Instant::now() },
-        Err(_) => return BatchDecision::Shutdown,
+    let first = loop {
+        match rx.recv() {
+            Ok(Ctl::Item(p)) => break WorkItem { payload: p, enqueued: Instant::now() },
+            Ok(Ctl::Close) | Err(_) => return BatchDecision::Shutdown,
+        }
     };
-    let deadline = first.enqueued + max_wait;
+    let mut close = false;
+    let mut flush_by = first.enqueued + max_wait;
+    if let Some(d) = deadline_of(&first.payload) {
+        flush_by = flush_by.min(flush_cap(d));
+    }
     let mut items = vec![first];
-    while items.len() < max_batch {
+    // greedy non-blocking drain: anything already queued joins the batch
+    // without waiting out the flush deadline (a zero `max_wait` policy
+    // still batches whatever has accumulated)
+    while items.len() < max_batch && !close {
+        match rx.try_recv() {
+            Ok(Ctl::Item(p)) => {
+                if let Some(d) = deadline_of(&p) {
+                    flush_by = flush_by.min(flush_cap(d));
+                }
+                items.push(WorkItem { payload: p, enqueued: Instant::now() });
+            }
+            Ok(Ctl::Close) => close = true,
+            Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
+        }
+    }
+    // timed fill: wait out the remaining window, capped by the earliest
+    // per-item deadline (deadline-aware flush)
+    while items.len() < max_batch && !close {
         let now = Instant::now();
-        if now >= deadline {
+        if now >= flush_by {
             break;
         }
-        match rx.recv_timeout(deadline - now) {
-            Ok(p) => items.push(WorkItem { payload: p, enqueued: Instant::now() }),
+        match rx.recv_timeout(flush_by - now) {
+            Ok(Ctl::Item(p)) => {
+                if let Some(d) = deadline_of(&p) {
+                    flush_by = flush_by.min(flush_cap(d));
+                }
+                items.push(WorkItem { payload: p, enqueued: Instant::now() });
+            }
+            Ok(Ctl::Close) => close = true,
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    BatchDecision::Flush(items)
+    // partition out already-expired items; the common no-deadline path
+    // allocates nothing extra (an empty Vec has no buffer)
+    let now = Instant::now();
+    let any_expired =
+        items.iter().any(|it| deadline_of(&it.payload).is_some_and(|d| d <= now));
+    let (expired, ready): (Vec<_>, Vec<_>) = if any_expired {
+        items
+            .into_iter()
+            .partition(|it| deadline_of(&it.payload).is_some_and(|d| d <= now))
+    } else {
+        (Vec::new(), items)
+    };
+    BatchDecision::Flush(Batch { ready, expired, close })
 }
 
 #[cfg(test)]
@@ -58,42 +149,47 @@ mod tests {
     use super::*;
     use std::sync::mpsc::channel;
 
+    fn no_deadline(_: &i32) -> Option<Instant> {
+        None
+    }
+
+    fn flush_of(d: BatchDecision<i32>) -> Batch<i32> {
+        match d {
+            BatchDecision::Flush(b) => b,
+            BatchDecision::Shutdown => panic!("expected flush"),
+        }
+    }
+
     #[test]
     fn flushes_full_batch_immediately() {
         let (tx, rx) = channel();
         for i in 0..10 {
-            tx.send(i).unwrap();
+            tx.send(Ctl::Item(i)).unwrap();
         }
         let t0 = Instant::now();
-        match next_batch(&rx, 4, Duration::from_secs(5)) {
-            BatchDecision::Flush(items) => {
-                assert_eq!(items.len(), 4);
-                assert!(t0.elapsed() < Duration::from_millis(500));
-            }
-            _ => panic!("expected flush"),
-        }
+        let b = flush_of(next_batch(&rx, 4, Duration::from_secs(5), no_deadline));
+        assert_eq!(b.ready.len(), 4);
+        assert!(b.expired.is_empty());
+        assert!(!b.close);
+        assert!(t0.elapsed() < Duration::from_millis(500));
     }
 
     #[test]
     fn flushes_partial_batch_at_deadline() {
         let (tx, rx) = channel();
-        tx.send(1).unwrap();
+        tx.send(Ctl::Item(1)).unwrap();
         let t0 = Instant::now();
-        match next_batch(&rx, 64, Duration::from_millis(30)) {
-            BatchDecision::Flush(items) => {
-                assert_eq!(items.len(), 1);
-                assert!(t0.elapsed() >= Duration::from_millis(25));
-            }
-            _ => panic!("expected flush"),
-        }
+        let b = flush_of(next_batch(&rx, 64, Duration::from_millis(30), no_deadline));
+        assert_eq!(b.ready.len(), 1);
+        assert!(t0.elapsed() >= Duration::from_millis(25));
     }
 
     #[test]
     fn shutdown_on_closed_channel() {
-        let (tx, rx) = channel::<u32>();
+        let (tx, rx) = channel::<Ctl<u32>>();
         drop(tx);
         assert!(matches!(
-            next_batch(&rx, 4, Duration::from_millis(1)),
+            next_batch(&rx, 4, Duration::from_millis(1), |_| None),
             BatchDecision::Shutdown
         ));
     }
@@ -101,16 +197,107 @@ mod tests {
     #[test]
     fn drains_queue_then_stops_waiting_when_closed() {
         let (tx, rx) = channel();
-        tx.send(1).unwrap();
-        tx.send(2).unwrap();
+        tx.send(Ctl::Item(1)).unwrap();
+        tx.send(Ctl::Item(2)).unwrap();
         drop(tx);
-        match next_batch(&rx, 10, Duration::from_secs(1)) {
-            BatchDecision::Flush(items) => assert_eq!(items.len(), 2),
-            _ => panic!("expected flush"),
-        }
+        let b = flush_of(next_batch(&rx, 10, Duration::from_secs(1), no_deadline));
+        assert_eq!(b.ready.len(), 2);
         assert!(matches!(
-            next_batch(&rx, 10, Duration::from_millis(1)),
+            next_batch(&rx, 10, Duration::from_millis(1), no_deadline),
             BatchDecision::Shutdown
         ));
+    }
+
+    #[test]
+    fn zero_max_wait_still_batches_queued_items() {
+        let (tx, rx) = channel();
+        for i in 0..3 {
+            tx.send(Ctl::Item(i)).unwrap();
+        }
+        let t0 = Instant::now();
+        let b = flush_of(next_batch(&rx, 8, Duration::ZERO, no_deadline));
+        // the greedy drain picks up everything already queued; the timed
+        // fill adds no wait
+        assert_eq!(b.ready.len(), 3);
+        assert!(t0.elapsed() < Duration::from_millis(100));
+    }
+
+    #[test]
+    fn already_expired_items_are_partitioned_out() {
+        let (tx, rx) = channel();
+        tx.send(Ctl::Item(1)).unwrap(); // expired (deadline in the past)
+        tx.send(Ctl::Item(2)).unwrap(); // live
+        let past = Instant::now() - Duration::from_millis(50);
+        let b = flush_of(next_batch(&rx, 8, Duration::ZERO, |&x| {
+            (x == 1).then_some(past)
+        }));
+        assert_eq!(b.expired.len(), 1);
+        assert_eq!(b.expired[0].payload, 1);
+        assert_eq!(b.ready.len(), 1);
+        assert_eq!(b.ready[0].payload, 2);
+    }
+
+    #[test]
+    fn batch_of_only_expired_items_flushes_empty_ready() {
+        let (tx, rx) = channel();
+        tx.send(Ctl::Item(7)).unwrap();
+        let past = Instant::now() - Duration::from_millis(5);
+        let b = flush_of(next_batch(&rx, 8, Duration::ZERO, |_| Some(past)));
+        assert!(b.ready.is_empty());
+        assert_eq!(b.expired.len(), 1);
+    }
+
+    #[test]
+    fn deadline_aware_flush_cuts_the_wait_short() {
+        let (tx, rx) = channel();
+        tx.send(Ctl::Item(1)).unwrap();
+        let t0 = Instant::now();
+        let soon = t0 + Duration::from_millis(150);
+        // max_wait is long, but the item's own deadline caps the wait: the
+        // flush happens DEADLINE_FLUSH_MARGIN before `soon`, leaving the
+        // item servable instead of expired at the boundary
+        let b = flush_of(next_batch(&rx, 8, Duration::from_secs(5), |_| Some(soon)));
+        let waited = t0.elapsed();
+        assert!(waited < Duration::from_millis(600), "flush waited {waited:?}");
+        assert_eq!(b.ready.len(), 1, "deadline-capped flush must leave slack");
+        assert!(b.expired.is_empty());
+    }
+
+    #[test]
+    fn close_sentinel_flushes_pending_then_reports_close() {
+        let (tx, rx) = channel();
+        tx.send(Ctl::Item(1)).unwrap();
+        tx.send(Ctl::Item(2)).unwrap();
+        tx.send(Ctl::Close).unwrap();
+        let b = flush_of(next_batch(&rx, 8, Duration::from_secs(5), no_deadline));
+        assert_eq!(b.ready.len(), 2);
+        assert!(b.close, "close sentinel must be reported with the final flush");
+    }
+
+    #[test]
+    fn close_on_empty_queue_is_shutdown() {
+        let (tx, rx) = channel::<Ctl<i32>>();
+        tx.send(Ctl::Close).unwrap();
+        assert!(matches!(
+            next_batch(&rx, 8, Duration::from_secs(5), |_| None),
+            BatchDecision::Shutdown
+        ));
+    }
+
+    #[test]
+    fn close_interrupts_the_timed_fill() {
+        let (tx, rx) = channel();
+        tx.send(Ctl::Item(1)).unwrap();
+        let t0 = Instant::now();
+        let tx2 = tx;
+        let j = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(10));
+            tx2.send(Ctl::Close).unwrap();
+        });
+        let b = flush_of(next_batch(&rx, 8, Duration::from_secs(5), no_deadline));
+        j.join().unwrap();
+        assert!(b.close);
+        assert_eq!(b.ready.len(), 1);
+        assert!(t0.elapsed() < Duration::from_secs(1), "close must cut the wait");
     }
 }

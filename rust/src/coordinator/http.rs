@@ -1,0 +1,374 @@
+//! Dependency-free HTTP/1.1 front end for the scoring server (`mergemoe
+//! serve`): the smallest wire surface that makes the hardened coordinator
+//! drivable by external load generators and health checkers.
+//!
+//! Routes:
+//!
+//! * `POST /score` — body `{"prompt": "...", "completion": "..."}`, answers
+//!   `{"score": <mean completion log-prob>}`. Typed refusals map to
+//!   meaningful statuses: 429 overloaded, 504 deadline exceeded, 503
+//!   degraded/draining, 400 rejected, 500 engine/panic.
+//! * `GET /healthz` — `200 ok` while serving; `503 degraded` once the
+//!   worker's restart budget is exhausted; `503 draining` during shutdown.
+//! * `GET /metrics` — Prometheus-style text: request/batch counters, the
+//!   shed/expired/retried/splits/restarted hardening counters, queue depth,
+//!   and p50/p99 latencies.
+//!
+//! Deliberately minimal: thread-per-connection, one request per connection
+//! (`Connection: close`), a read timeout and a body-size cap so a slow or
+//! hostile client cannot wedge an accept slot forever. The protocol corners
+//! this skips (keep-alive, chunked encoding, TLS) don't exercise the
+//! serving stack; the overload behaviors — which do — all live behind
+//! [`ServerHandle`] and are tested there.
+#![warn(missing_docs)]
+
+use std::io::{BufRead, BufReader, Read, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{Context, Result};
+
+use super::server::{ServeError, ServerHandle, ServerStatus};
+use crate::util::json::Json;
+
+/// Largest accepted `POST /score` body.
+const MAX_BODY: usize = 64 * 1024;
+/// Per-connection read timeout: a stalled client is dropped, not waited on.
+const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// The listening front end. Dropping it (or calling [`HttpServer::stop`])
+/// closes the accept loop; the scoring server itself is shut down
+/// separately by its owner.
+pub struct HttpServer {
+    addr: SocketAddr,
+    stop: Arc<AtomicBool>,
+    join: Option<std::thread::JoinHandle<()>>,
+}
+
+impl HttpServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
+    /// serve requests against `handle`, reporting health/metrics from
+    /// `status`.
+    pub fn bind(addr: &str, handle: ServerHandle, status: ServerStatus) -> Result<HttpServer> {
+        let listener =
+            TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
+        let addr = listener.local_addr().context("resolving bound address")?;
+        let stop = Arc::new(AtomicBool::new(false));
+        let stop2 = stop.clone();
+        let join = std::thread::spawn(move || {
+            accept_loop(listener, handle, status, stop2);
+        });
+        crate::info!("http front end listening on {addr}");
+        Ok(HttpServer { addr, stop, join: Some(join) })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    /// Stop accepting and join the accept loop. Idempotent.
+    pub fn stop(&mut self) {
+        let Some(join) = self.join.take() else { return };
+        self.stop.store(true, Ordering::Release);
+        // unblock accept() with a throwaway self-connection
+        let _ = TcpStream::connect(self.addr);
+        let _ = join.join();
+    }
+}
+
+impl Drop for HttpServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+fn accept_loop(
+    listener: TcpListener,
+    handle: ServerHandle,
+    status: ServerStatus,
+    stop: Arc<AtomicBool>,
+) {
+    for conn in listener.incoming() {
+        if stop.load(Ordering::Acquire) {
+            break;
+        }
+        match conn {
+            Ok(stream) => {
+                let handle = handle.clone();
+                let status = status.clone();
+                std::thread::spawn(move || {
+                    if let Err(e) = serve_conn(stream, &handle, &status) {
+                        crate::debuglog!("http connection error: {e:#}");
+                    }
+                });
+            }
+            Err(e) => crate::debuglog!("accept failed: {e}"),
+        }
+    }
+}
+
+/// Handle exactly one request on `stream`, then close.
+fn serve_conn(stream: TcpStream, handle: &ServerHandle, status: &ServerStatus) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT)).context("set read timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    let mut line = String::new();
+    reader.read_line(&mut line).context("read request line")?;
+    let mut parts = line.split_whitespace();
+    let (method, path) = match (parts.next(), parts.next()) {
+        (Some(m), Some(p)) => (m.to_string(), p.to_string()),
+        _ => return respond(stream, 400, "text/plain", "malformed request line\n"),
+    };
+    // headers: we only need Content-Length
+    let mut content_length = 0usize;
+    loop {
+        let mut h = String::new();
+        reader.read_line(&mut h).context("read header")?;
+        let h = h.trim();
+        if h.is_empty() {
+            break;
+        }
+        if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            content_length = v.trim().parse().unwrap_or(0);
+        }
+    }
+    match (method.as_str(), path.as_str()) {
+        ("POST", "/score") => {
+            if content_length > MAX_BODY {
+                return respond(stream, 413, "text/plain", "body too large\n");
+            }
+            let mut body = vec![0u8; content_length];
+            reader.read_exact(&mut body).context("read body")?;
+            handle_score(stream, handle, &body)
+        }
+        ("GET", "/healthz") => {
+            let (code, msg) = if status.degraded() {
+                (503, "degraded\n")
+            } else if status.draining() {
+                (503, "draining\n")
+            } else {
+                (200, "ok\n")
+            };
+            respond(stream, code, "text/plain", msg)
+        }
+        ("GET", "/metrics") => respond(stream, 200, "text/plain", &render_metrics(status)),
+        _ => respond(stream, 404, "text/plain", "not found\n"),
+    }
+}
+
+fn handle_score(stream: TcpStream, handle: &ServerHandle, body: &[u8]) -> Result<()> {
+    let parsed = std::str::from_utf8(body)
+        .map_err(anyhow::Error::from)
+        .and_then(Json::parse)
+        .and_then(|j| {
+            let prompt = j.get("prompt")?.as_str()?.to_string();
+            let completion = j.get("completion")?.as_str()?.to_string();
+            Ok((prompt, completion))
+        });
+    let (prompt, completion) = match parsed {
+        Ok(pc) => pc,
+        Err(e) => {
+            let msg = Json::obj(vec![("error", Json::Str(format!("bad request: {e:#}")))]);
+            return respond(stream, 400, "application/json", &msg.to_string());
+        }
+    };
+    match handle.score(&prompt, &completion) {
+        Ok(score) => {
+            let msg = Json::obj(vec![("score", Json::Num(score))]);
+            respond(stream, 200, "application/json", &msg.to_string())
+        }
+        Err(e) => {
+            let code = status_of(&e);
+            let msg = Json::obj(vec![("error", Json::Str(e.to_string()))]);
+            respond(stream, code, "application/json", &msg.to_string())
+        }
+    }
+}
+
+/// HTTP status for each typed refusal.
+fn status_of(e: &ServeError) -> u16 {
+    match e {
+        ServeError::Overloaded => 429,
+        ServeError::DeadlineExceeded => 504,
+        ServeError::Degraded | ServeError::ShuttingDown => 503,
+        ServeError::Rejected(_) => 400,
+        ServeError::WorkerPanicked | ServeError::Engine(_) => 500,
+    }
+}
+
+/// Prometheus-style exposition of the serving metrics.
+fn render_metrics(status: &ServerStatus) -> String {
+    let m = status.metrics();
+    let mut out = String::new();
+    let mut gauge = |name: &str, v: f64| {
+        out.push_str(&format!("mergemoe_{name} {v}\n"));
+    };
+    gauge("requests_total", m.requests as f64);
+    gauge("errors_total", m.errors as f64);
+    gauge("shed_total", m.shed as f64);
+    gauge("expired_total", m.expired as f64);
+    gauge("retried_total", m.retried as f64);
+    gauge("batch_splits_total", m.splits as f64);
+    gauge("worker_restarts_total", m.restarted as f64);
+    gauge("batches_total", m.batches as f64);
+    gauge("batched_sequences_total", m.batched_sequences as f64);
+    gauge("mean_batch_size", m.mean_batch_size());
+    gauge("throughput_rps", m.throughput_rps());
+    gauge("queue_depth", status.queue_depth() as f64);
+    gauge("degraded", if status.degraded() { 1.0 } else { 0.0 });
+    gauge("draining", if status.draining() { 1.0 } else { 0.0 });
+    gauge("latency_p50_seconds", m.total_latency.quantile(0.5).as_secs_f64());
+    gauge("latency_p99_seconds", m.total_latency.quantile(0.99).as_secs_f64());
+    gauge("queue_wait_p50_seconds", m.queue_wait_p50().as_secs_f64());
+    gauge("queue_wait_p99_seconds", m.queue_wait_p99().as_secs_f64());
+    gauge("batch_latency_p50_seconds", m.batch_latency_p50().as_secs_f64());
+    gauge("batch_latency_p99_seconds", m.batch_latency_p99().as_secs_f64());
+    out
+}
+
+fn reason(code: u16) -> &'static str {
+    match code {
+        200 => "OK",
+        400 => "Bad Request",
+        404 => "Not Found",
+        413 => "Payload Too Large",
+        429 => "Too Many Requests",
+        500 => "Internal Server Error",
+        503 => "Service Unavailable",
+        504 => "Gateway Timeout",
+        _ => "",
+    }
+}
+
+fn respond(mut stream: TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
+    let head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+        reason(code),
+        body.len(),
+    );
+    stream.write_all(head.as_bytes()).context("write response head")?;
+    stream.write_all(body.as_bytes()).context("write response body")?;
+    stream.flush().context("flush response")?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::server::{FaultSetting, ScoringServer, ServerConfig};
+    use crate::model::testutil::tiny_model;
+    use crate::runtime::NativeEngine;
+
+    fn request(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.write_all(raw.as_bytes()).unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        let code = buf
+            .split_whitespace()
+            .nth(1)
+            .and_then(|c| c.parse().ok())
+            .unwrap_or(0);
+        let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+        (code, body)
+    }
+
+    fn get(addr: SocketAddr, path: &str) -> (u16, String) {
+        request(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+    }
+
+    fn post_score(addr: SocketAddr, body: &str) -> (u16, String) {
+        request(
+            addr,
+            &format!(
+                "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        )
+    }
+
+    fn test_server() -> ScoringServer {
+        let model = tiny_model(4, 2, false, 300);
+        let cfg = ServerConfig { fault: FaultSetting::Off, ..ServerConfig::default() };
+        ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap()
+    }
+
+    #[test]
+    fn scores_health_and_metrics_over_http() {
+        let server = test_server();
+        let mut http =
+            HttpServer::bind("127.0.0.1:0", server.handle(), server.status()).unwrap();
+        let addr = http.addr();
+
+        let (code, body) = get(addr, "/healthz");
+        assert_eq!(code, 200);
+        assert_eq!(body, "ok\n");
+
+        let (code, body) =
+            post_score(addr, r#"{"prompt": "c:abcd|", "completion": "abcd."}"#);
+        assert_eq!(code, 200, "body: {body}");
+        let score = Json::parse(&body).unwrap().get("score").unwrap().as_f64().unwrap();
+        assert!(score.is_finite() && score < 0.0);
+
+        let (code, body) = get(addr, "/metrics");
+        assert_eq!(code, 200);
+        assert!(body.contains("mergemoe_requests_total 1"));
+        assert!(body.contains("mergemoe_shed_total 0"));
+        assert!(body.contains("mergemoe_queue_depth 0"));
+
+        http.stop();
+        server.shutdown();
+    }
+
+    #[test]
+    fn bad_requests_get_typed_statuses() {
+        let server = test_server();
+        let mut http =
+            HttpServer::bind("127.0.0.1:0", server.handle(), server.status()).unwrap();
+        let addr = http.addr();
+
+        let (code, _) = post_score(addr, "not json");
+        assert_eq!(code, 400);
+        let (code, _) = post_score(addr, r#"{"prompt": "x"}"#); // missing completion
+        assert_eq!(code, 400);
+        let long = "a".repeat(200);
+        let (code, body) =
+            post_score(addr, &format!(r#"{{"prompt": "{long}", "completion": "b"}}"#));
+        assert_eq!(code, 400, "oversized request must map to 400: {body}");
+        let (code, _) = get(addr, "/nope");
+        assert_eq!(code, 404);
+
+        http.stop();
+        server.shutdown();
+    }
+
+    #[test]
+    fn healthz_reflects_draining_server() {
+        let server = test_server();
+        let handle = server.handle();
+        let mut http = HttpServer::bind("127.0.0.1:0", handle, server.status()).unwrap();
+        let addr = http.addr();
+        let status = server.status();
+        server.shutdown();
+        assert!(status.draining());
+        let (code, body) = get(addr, "/healthz");
+        assert_eq!(code, 503);
+        assert_eq!(body, "draining\n");
+        // scoring through the front end now gets the typed 503
+        let (code, _) = post_score(addr, r#"{"prompt": "c:ab|", "completion": "ab."}"#);
+        assert_eq!(code, 503);
+        http.stop();
+    }
+
+    #[test]
+    fn stop_is_idempotent_and_unblocks_accept() {
+        let server = test_server();
+        let mut http =
+            HttpServer::bind("127.0.0.1:0", server.handle(), server.status()).unwrap();
+        http.stop();
+        http.stop(); // second call is a no-op, not a hang
+        server.shutdown();
+    }
+}

@@ -81,10 +81,25 @@ pub struct ServerMetrics {
     /// workspace reuse shave — visible from the serving side, not just
     /// microbenches).
     pub batch_latency: LatencyHistogram,
+    /// Every replied-to request, success or failure.
     pub requests: u64,
     pub batches: u64,
     pub batched_sequences: u64,
     pub wall_seconds: f64,
+    /// Requests replied to with an error (subset of `requests`).
+    pub errors: u64,
+    /// Requests shed at admission because the bounded queue was full
+    /// (these never become `requests`).
+    pub shed: u64,
+    /// Requests failed because their deadline passed before the forward
+    /// pass (subset of `errors`).
+    pub expired: u64,
+    /// Transient batch-failure retries performed.
+    pub retried: u64,
+    /// Batches split in half after exhausting retries (poison isolation).
+    pub splits: u64,
+    /// Worker respawns after a caught panic.
+    pub restarted: u64,
 }
 
 impl ServerMetrics {
@@ -140,7 +155,14 @@ impl ServerMetrics {
             self.queue_wait_p99(),
             self.batch_latency_p50(),
             self.batch_latency_p99(),
-        )
+        ) + &if self.errors + self.shed + self.retried + self.restarted > 0 {
+            format!(
+                " faults: errors={} shed={} expired={} retried={} splits={} restarted={}",
+                self.errors, self.shed, self.expired, self.retried, self.splits, self.restarted,
+            )
+        } else {
+            String::new()
+        }
     }
 }
 
@@ -183,6 +205,17 @@ mod tests {
         assert_eq!(m.throughput_rps(), 50.0);
         assert!(m.report().contains("mean_batch=8.00"));
         assert!(m.report().contains("batch compute"));
+    }
+
+    #[test]
+    fn fault_counters_appear_in_report_only_when_nonzero() {
+        let mut m = ServerMetrics::default();
+        m.requests = 10;
+        assert!(!m.report().contains("faults:"));
+        m.errors = 2;
+        m.shed = 1;
+        m.expired = 1;
+        assert!(m.report().contains("faults: errors=2 shed=1 expired=1"));
     }
 
     #[test]

@@ -2,13 +2,17 @@
 //! batched scoring server (request path), with metrics.
 
 pub mod batcher;
+pub mod http;
 pub mod metrics;
 pub mod pipeline;
 pub mod server;
 
 pub use crate::calib::CalibSource;
+pub use http::HttpServer;
 pub use pipeline::{
     capture_calibration, capture_calibration_source, compress, compress_with_calib,
     CompressReport, CompressSpec,
 };
-pub use server::{ScoringServer, ServerConfig};
+pub use server::{
+    FaultSetting, ScoringServer, ServeError, ServerConfig, ServerHandle, ServerStatus,
+};

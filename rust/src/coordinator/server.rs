@@ -1,25 +1,59 @@
-//! The scoring server: a worker thread owning the engine + model, fed by the
-//! dynamic batcher, answering option-scoring requests (the serving workload
-//! of the e2e example — a compressed model deployed behind a batched
-//! endpoint).
+//! The scoring server: a supervised worker thread owning the engine + model,
+//! fed by the dynamic batcher through a **bounded** admission queue,
+//! answering option-scoring requests (the serving workload of the e2e
+//! example — a compressed model deployed behind a batched endpoint).
+//!
+//! Overload hardening, end to end:
+//!
+//! * **Bounded admission** — the queue holds at most
+//!   [`ServerConfig::queue_cap`] requests (`--queue-cap` /
+//!   `MERGEMOE_QUEUE_CAP`); a full queue sheds the request immediately with
+//!   the typed [`ServeError::Overloaded`] instead of buffering unbounded
+//!   latency. Queue depth is observable ([`ServerStatus::queue_depth`]).
+//! * **Deadlines** — [`ServerConfig::deadline`] stamps every request with an
+//!   expiry; the batcher flushes deadline-aware and partitions out expired
+//!   items, which are failed with [`ServeError::DeadlineExceeded`] *before*
+//!   any forward-pass compute is spent on them.
+//! * **Fault classification + retry** — engine errors are classified
+//!   [`FaultClass::Transient`] or [`FaultClass::Fatal`]
+//!   ([`crate::util::fault::classify`]). Transient batch failures retry
+//!   under capped exponential backoff; a batch that keeps failing is split
+//!   in half recursively, so one poison request fails alone instead of
+//!   failing its batchmates. Fatal errors fail the batch fast.
+//! * **Worker supervision** — a panic mid-batch is caught, the in-flight
+//!   requests are failed with [`ServeError::WorkerPanicked`], and the worker
+//!   respawns with a fresh engine + workspace (panics can leave both
+//!   mid-update) up to [`ServerConfig::restart_budget`]; past the budget the
+//!   server degrades to fast-rejecting ([`ServeError::Degraded`], visible on
+//!   `/healthz`).
+//! * **Graceful drain** — [`ScoringServer::shutdown`] / [`drain`](ScoringServer::drain)
+//!   stop admission (state flip observed by every handle clone), enqueue an
+//!   explicit close sentinel behind the admitted work, finish that work
+//!   under a drain timeout, and join. Shutdown never depends on clients
+//!   dropping their [`ServerHandle`] clones.
+//!
+//! Every path above is driven deterministically by
+//! [`crate::util::fault::FaultPlan`] (`MERGEMOE_FAULT`), so the robustness
+//! behaviors are reproducible tier-1 tests (`tests/fault_injection.rs`),
+//! not claims. With no plan configured the steady-state loop is the exact
+//! unhardened execution: gather tokens, forward, score, reply — reusing one
+//! [`Workspace`], one logits tensor, one token buffer and one score buffer,
+//! so it runs without touching the allocator once the arena is warm.
+//! Workspaces are per-worker by contract: never shared across threads.
 //!
 //! Engine objects wrap PJRT client state and are not `Send`, so the worker
-//! *constructs* its engine inside the thread from a factory closure; clients
-//! hold a cheap cloneable handle.
-//!
-//! The worker owns one [`Workspace`] (plus a logits tensor, a batch token
-//! buffer and a log-prob buffer) and reuses them across every batch, so the
-//! steady-state loop — gather tokens, forward, score, reply — runs without
-//! touching the allocator once the arena is warm. Workspaces are per-worker
-//! by contract: never shared across threads.
+//! *constructs* its engine inside the thread from a factory closure (called
+//! again on every respawn); clients hold a cheap cloneable handle.
 
-use std::sync::mpsc::{channel, Sender};
-use std::sync::{Arc, Mutex};
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU8, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
+use std::sync::{mpsc::sync_channel, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, Result};
 
-use super::batcher::{next_batch, BatchDecision};
+use super::batcher::{next_batch, BatchDecision, Ctl, WorkItem};
 use super::metrics::ServerMetrics;
 use crate::eval::tasks;
 use crate::model::native::target_logprobs_into;
@@ -27,13 +61,99 @@ use crate::model::workspace::Workspace;
 use crate::model::ModelWeights;
 use crate::runtime::Engine;
 use crate::tensor::Tensor;
+use crate::util::fault::{classify, FaultAction, FaultClass, FaultPlan, InjectedFault};
+
+/// Typed request-path errors: every way the hardened server can refuse or
+/// fail a request, distinguishable by clients (and mapped to HTTP statuses
+/// by [`crate::coordinator::http`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum ServeError {
+    /// The bounded admission queue is full — load was shed. Back off and
+    /// retry.
+    Overloaded,
+    /// The request's deadline passed before its forward pass started.
+    DeadlineExceeded,
+    /// The worker panicked while this request was in flight.
+    WorkerPanicked,
+    /// The worker exhausted its restart budget (or never built an engine);
+    /// the server is fast-rejecting until restarted.
+    Degraded,
+    /// The server is draining or stopped; no new work is admitted.
+    ShuttingDown,
+    /// The request itself is invalid (empty or longer than `seq_len`).
+    Rejected(String),
+    /// The engine failed this request fatally or exhausted its retries.
+    Engine(String),
+}
+
+impl std::fmt::Display for ServeError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ServeError::Overloaded => write!(f, "overloaded: admission queue full"),
+            ServeError::DeadlineExceeded => write!(f, "deadline exceeded while queued"),
+            ServeError::WorkerPanicked => write!(f, "worker panicked mid-batch"),
+            ServeError::Degraded => write!(f, "server degraded: restart budget exhausted"),
+            ServeError::ShuttingDown => write!(f, "server shutting down"),
+            ServeError::Rejected(why) => write!(f, "request rejected: {why}"),
+            ServeError::Engine(why) => write!(f, "engine failure: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ServeError {}
+
+/// How the server sources its fault-injection plan.
+#[derive(Debug, Clone, Default)]
+pub enum FaultSetting {
+    /// Consult `MERGEMOE_FAULT` (unset ⇒ no injection). The default.
+    #[default]
+    FromEnv,
+    /// Never inject, regardless of the environment.
+    Off,
+    /// Use this plan (tests script exact failure schedules this way).
+    Plan(Arc<FaultPlan>),
+}
 
 /// Server tuning knobs.
 #[derive(Debug, Clone)]
 pub struct ServerConfig {
+    /// Largest batch handed to the engine.
     pub max_batch: usize,
+    /// Longest a flush waits on the oldest queued request.
     pub max_wait: Duration,
+    /// Padded sequence length every request is resized to.
     pub seq_len: usize,
+    /// Bounded admission-queue capacity; a full queue sheds with
+    /// [`ServeError::Overloaded`]. Default: `MERGEMOE_QUEUE_CAP` or 256.
+    pub queue_cap: usize,
+    /// Per-request deadline (admission → forward-pass start). `None`
+    /// disables expiry.
+    pub deadline: Option<Duration>,
+    /// Transient-failure retries per (sub-)batch before splitting/failing.
+    pub max_retries: u32,
+    /// Base of the capped exponential retry backoff.
+    pub retry_backoff: Duration,
+    /// Worker respawns allowed before the server degrades to
+    /// fast-rejecting.
+    pub restart_budget: u32,
+    /// Drain window for [`ScoringServer::shutdown`]: queued work older than
+    /// this is failed with [`ServeError::ShuttingDown`] instead of computed.
+    pub drain_timeout: Duration,
+    /// Fault-injection source (see [`FaultSetting`]).
+    pub fault: FaultSetting,
+}
+
+fn env_queue_cap() -> usize {
+    match std::env::var("MERGEMOE_QUEUE_CAP") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                crate::warnlog!("ignoring invalid MERGEMOE_QUEUE_CAP={v:?} (want integer >= 1)");
+                256
+            }
+        },
+        Err(_) => 256,
+    }
 }
 
 impl Default for ServerConfig {
@@ -42,6 +162,13 @@ impl Default for ServerConfig {
             max_batch: 32,
             max_wait: Duration::from_millis(2),
             seq_len: 64,
+            queue_cap: env_queue_cap(),
+            deadline: None,
+            max_retries: 2,
+            retry_backoff: Duration::from_micros(500),
+            restart_budget: 3,
+            drain_timeout: Duration::from_secs(5),
+            fault: FaultSetting::FromEnv,
         }
     }
 }
@@ -52,218 +179,578 @@ struct Request {
     prompt_len: usize,
     completion_len: usize,
     submitted: Instant,
-    reply: Sender<Result<f64>>,
+    deadline: Option<Instant>,
+    reply: Sender<Result<f64, ServeError>>,
+}
+
+const STATE_RUNNING: u8 = 0;
+const STATE_DRAINING: u8 = 1;
+
+/// State shared between handles, the worker, and status observers.
+struct Shared {
+    state: AtomicU8,
+    degraded: AtomicBool,
+    /// Queue-depth gauge. Signed: a client increments strictly *after* a
+    /// successful `try_send`, so `depth >= n` proves n items truly sit in
+    /// the channel (tests rely on that to fill the queue race-free); the
+    /// worker's decrement can then transiently win the race and drive the
+    /// value to -1, which the getters clamp to 0.
+    depth: AtomicIsize,
+    drain_deadline: Mutex<Option<Instant>>,
+    metrics: Mutex<ServerMetrics>,
+}
+
+impl Shared {
+    fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed).max(0) as usize
+    }
+}
+
+impl Default for Shared {
+    fn default() -> Self {
+        Shared {
+            state: AtomicU8::new(STATE_RUNNING),
+            degraded: AtomicBool::new(false),
+            depth: AtomicIsize::new(0),
+            drain_deadline: Mutex::new(None),
+            metrics: Mutex::new(ServerMetrics::default()),
+        }
+    }
 }
 
 /// Cloneable client handle.
 #[derive(Clone)]
 pub struct ServerHandle {
-    tx: Sender<Request>,
+    tx: SyncSender<Ctl<Request>>,
+    shared: Arc<Shared>,
     seq_len: usize,
-    /// Padding token, resolved once at server construction instead of
-    /// re-tokenizing "\n" on every request.
+    /// Padding token, resolved once (fallibly) at server construction
+    /// instead of re-tokenizing "\n" on every request.
     pad: i32,
+    deadline: Option<Duration>,
 }
 
 impl ServerHandle {
     /// Score a (prompt, completion) pair; blocks until the batched backend
-    /// answers. Thread-safe; call from many threads to exercise batching.
-    pub fn score(&self, prompt: &str, completion: &str) -> Result<f64> {
+    /// answers or refuses. Thread-safe; call from many threads to exercise
+    /// batching. Uses the server's configured deadline.
+    pub fn score(&self, prompt: &str, completion: &str) -> Result<f64, ServeError> {
+        self.score_with_deadline(prompt, completion, self.deadline)
+    }
+
+    /// [`score`](Self::score) with an explicit per-request deadline
+    /// (`None` = no expiry), overriding the server default.
+    pub fn score_with_deadline(
+        &self,
+        prompt: &str,
+        completion: &str,
+        deadline: Option<Duration>,
+    ) -> Result<f64, ServeError> {
         let ptoks = tasks::encode(prompt);
         let ctoks = tasks::encode(completion);
         let prompt_len = ptoks.len();
         let completion_len = ctoks.len();
         if prompt_len == 0 || completion_len == 0 {
-            return Err(anyhow!("prompt and completion must be non-empty"));
+            return Err(ServeError::Rejected(
+                "prompt and completion must be non-empty".into(),
+            ));
         }
         if prompt_len + completion_len > self.seq_len {
-            return Err(anyhow!("request longer than seq_len"));
+            return Err(ServeError::Rejected("request longer than seq_len".into()));
+        }
+        if self.shared.state.load(Ordering::Acquire) != STATE_RUNNING {
+            return Err(ServeError::ShuttingDown);
+        }
+        if self.shared.degraded.load(Ordering::Acquire) {
+            return Err(ServeError::Degraded);
         }
         let mut toks = ptoks;
         toks.extend(ctoks);
         toks.resize(self.seq_len, self.pad);
+        let submitted = Instant::now();
         let (rtx, rrx) = channel();
-        self.tx
-            .send(Request {
-                tokens: toks,
-                prompt_len,
-                completion_len,
-                submitted: Instant::now(),
-                reply: rtx,
-            })
-            .map_err(|_| anyhow!("server stopped"))?;
-        rrx.recv().context("server dropped request")?
+        let req = Request {
+            tokens: toks,
+            prompt_len,
+            completion_len,
+            submitted,
+            deadline: deadline.map(|d| submitted + d),
+            reply: rtx,
+        };
+        match self.tx.try_send(Ctl::Item(req)) {
+            Ok(()) => {
+                self.shared.depth.fetch_add(1, Ordering::Relaxed);
+            }
+            Err(TrySendError::Full(_)) => {
+                self.shared.metrics.lock().unwrap().shed += 1;
+                return Err(ServeError::Overloaded);
+            }
+            Err(TrySendError::Disconnected(_)) => {
+                return Err(ServeError::ShuttingDown);
+            }
+        }
+        // the supervised worker replies to every admitted request; a
+        // dropped reply channel means it died outside its own supervision
+        rrx.recv().map_err(|_| ServeError::WorkerPanicked)?
+    }
+
+    /// Requests currently queued (admission gauge).
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth()
     }
 }
 
-/// Record the per-batch counters shared by the success and failure paths
-/// (one `batch_latency` sample per batch, always) and hand the still-locked
-/// guard back for any per-request bookkeeping.
-fn record_batch(
-    metrics: &Mutex<ServerMetrics>,
-    batch_size: usize,
-    wall_seconds: f64,
-    compute: Duration,
-) -> std::sync::MutexGuard<'_, ServerMetrics> {
-    let mut m = metrics.lock().unwrap();
-    m.batches += 1;
-    m.batched_sequences += batch_size as u64;
-    m.batch_latency.record(compute);
-    m.wall_seconds = wall_seconds;
-    m
+/// Read-only observer of server health + metrics (what `/healthz` and
+/// `/metrics` render; cloneable into the HTTP front end).
+#[derive(Clone)]
+pub struct ServerStatus {
+    shared: Arc<Shared>,
 }
 
-/// The scoring server. Owns the worker thread; dropping it (or calling
-/// [`ScoringServer::shutdown`]) stops the worker.
+impl ServerStatus {
+    /// Snapshot of the rolled-up serving metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// True once the worker's restart budget is exhausted (the server
+    /// fast-rejects until restarted).
+    pub fn degraded(&self) -> bool {
+        self.shared.degraded.load(Ordering::Acquire)
+    }
+
+    /// True once a drain/shutdown has begun (admission stopped).
+    pub fn draining(&self) -> bool {
+        self.shared.state.load(Ordering::Acquire) != STATE_RUNNING
+    }
+
+    /// Requests currently queued.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth()
+    }
+}
+
+/// Outcome of one batch-execution attempt.
+enum BatchError {
+    /// The attempt panicked; message extracted from the payload.
+    Panicked(String),
+    /// The attempt failed with a classified engine error.
+    Failed(FaultClass, String),
+}
+
+/// The worker-side half: owns the engine, model, and every steady-state
+/// buffer; lives entirely on the worker thread.
+struct Worker<E, F> {
+    model: ModelWeights,
+    cfg: ServerConfig,
+    shared: Arc<Shared>,
+    make_engine: F,
+    engine: Option<E>,
+    restarts_left: u32,
+    fault: Option<Arc<FaultPlan>>,
+    started: Instant,
+    ws: Workspace,
+    logits: Tensor,
+    tokens: Vec<i32>,
+    scores: Vec<f64>,
+}
+
+impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
+    fn run(mut self, rx: Receiver<Ctl<Request>>) {
+        match (self.make_engine)() {
+            Ok(e) => self.engine = Some(e),
+            Err(e) => {
+                crate::warnlog!("engine construction failed: {e:#}");
+                self.degrade("engine construction failed");
+            }
+        }
+        loop {
+            match next_batch(&rx, self.cfg.max_batch, self.cfg.max_wait, |r: &Request| {
+                r.deadline
+            }) {
+                BatchDecision::Shutdown => break,
+                BatchDecision::Flush(batch) => {
+                    let n = (batch.ready.len() + batch.expired.len()) as isize;
+                    self.shared.depth.fetch_sub(n, Ordering::Relaxed);
+                    for it in batch.expired {
+                        self.fail_expired(it);
+                    }
+                    if !batch.ready.is_empty() {
+                        self.dispatch(batch.ready);
+                    }
+                    if batch.close {
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn dispatch(&mut self, items: Vec<WorkItem<Request>>) {
+        if self.engine.is_none() {
+            self.fail_all(items, ServeError::Degraded);
+            return;
+        }
+        self.execute(items);
+    }
+
+    /// Run one (sub-)batch to completion: retry transient failures under
+    /// capped exponential backoff, split persistent failures in half (a
+    /// poison request ends up alone and fails alone), fail fatal errors
+    /// fast, and hand panics to the supervisor.
+    fn execute(&mut self, mut items: Vec<WorkItem<Request>>) {
+        // re-check deadlines: retries/splits ahead of this sub-batch may
+        // have consumed a request's remaining budget while it waited
+        let now = Instant::now();
+        if items.iter().any(|it| it.payload.deadline.is_some_and(|d| d <= now)) {
+            let (expired, live): (Vec<_>, Vec<_>) = items
+                .into_iter()
+                .partition(|it| it.payload.deadline.is_some_and(|d| d <= now));
+            for it in expired {
+                self.fail_expired(it);
+            }
+            items = live;
+        }
+        if items.is_empty() {
+            return;
+        }
+        // past the drain window, queued work is shed instead of computed
+        if self.past_drain_deadline() {
+            self.fail_all(items, ServeError::ShuttingDown);
+            return;
+        }
+        let mut attempt = 0u32;
+        loop {
+            match self.try_batch(&items) {
+                Ok(()) => {
+                    self.reply_ok(items);
+                    return;
+                }
+                Err(BatchError::Panicked(msg)) => {
+                    self.after_panic(items, msg);
+                    return;
+                }
+                Err(BatchError::Failed(FaultClass::Fatal, msg)) => {
+                    crate::warnlog!("fatal engine error, failing batch of {}: {msg}", items.len());
+                    self.fail_all(items, ServeError::Engine(msg));
+                    return;
+                }
+                Err(BatchError::Failed(FaultClass::Transient, msg)) => {
+                    attempt += 1;
+                    if attempt > self.cfg.max_retries {
+                        if items.len() > 1 {
+                            // persistent transient failure: split so one
+                            // poison request cannot fail its batchmates
+                            self.shared.metrics.lock().unwrap().splits += 1;
+                            crate::debuglog!(
+                                "splitting batch of {} after {attempt} failed attempts",
+                                items.len()
+                            );
+                            let right = items.split_off(items.len() / 2);
+                            self.execute(items);
+                            self.execute(right);
+                        } else {
+                            self.fail_all(items, ServeError::Engine(msg));
+                        }
+                        return;
+                    }
+                    self.shared.metrics.lock().unwrap().retried += 1;
+                    let backoff = backoff_delay(self.cfg.retry_backoff, attempt);
+                    if !backoff.is_zero() {
+                        std::thread::sleep(backoff);
+                    }
+                }
+            }
+        }
+    }
+
+    /// One engine attempt over `items`: fault-plan consultation, forward
+    /// pass, scoring into `self.scores`. Panics are contained here.
+    fn try_batch(&mut self, items: &[WorkItem<Request>]) -> Result<(), BatchError> {
+        let b = items.len();
+        let s = self.cfg.seq_len;
+        self.tokens.clear();
+        for it in items {
+            self.tokens.extend_from_slice(&it.payload.tokens);
+        }
+        let t_batch = Instant::now();
+        let Worker { engine, ws, logits, tokens, scores, model, fault, .. } = self;
+        let engine = engine.as_mut().expect("dispatch() guarantees an engine");
+        let result = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
+            if let Some(plan) = fault.as_deref() {
+                match plan.next() {
+                    FaultAction::None => {}
+                    FaultAction::Slow(d) => std::thread::sleep(d),
+                    FaultAction::Transient => {
+                        return Err(InjectedFault { class: FaultClass::Transient }.into())
+                    }
+                    FaultAction::Fatal => {
+                        return Err(InjectedFault { class: FaultClass::Fatal }.into())
+                    }
+                    FaultAction::Panic => panic!("injected worker panic"),
+                }
+                if plan.is_poisoned(tokens) {
+                    return Err(InjectedFault { class: FaultClass::Transient }.into());
+                }
+            }
+            engine.logits_ws(model, tokens, b, s, ws, logits)?;
+            target_logprobs_into(logits, tokens, b, s, &mut ws.lps);
+            scores.clear();
+            for (bi, it) in items.iter().enumerate() {
+                let r = &it.payload;
+                let mut sum = 0.0f64;
+                for si in (r.prompt_len - 1)..(r.prompt_len + r.completion_len - 1) {
+                    sum += ws.lps[bi * s + si] as f64;
+                }
+                scores.push(sum / r.completion_len as f64);
+            }
+            Ok(())
+        }));
+        // one batch-counter + compute-latency sample per executed attempt,
+        // success or failure, so p99 reflects bad batches too
+        {
+            let mut m = self.shared.metrics.lock().unwrap();
+            m.batches += 1;
+            m.batched_sequences += b as u64;
+            m.batch_latency.record(t_batch.elapsed());
+            m.wall_seconds = self.started.elapsed().as_secs_f64();
+        }
+        match result {
+            Ok(Ok(())) => Ok(()),
+            Ok(Err(e)) => Err(BatchError::Failed(classify(&e), format!("{e:#}"))),
+            Err(payload) => {
+                let msg = payload
+                    .downcast_ref::<&str>()
+                    .map(|s| s.to_string())
+                    .or_else(|| payload.downcast_ref::<String>().cloned())
+                    .unwrap_or_else(|| "non-string panic payload".into());
+                Err(BatchError::Panicked(msg))
+            }
+        }
+    }
+
+    /// Supervisor: fail the in-flight requests, then respawn the worker
+    /// state (fresh engine + workspace) or degrade once the budget is gone.
+    fn after_panic(&mut self, items: Vec<WorkItem<Request>>, msg: String) {
+        crate::warnlog!(
+            "worker panicked mid-batch ({msg}); failing {} in-flight request(s)",
+            items.len()
+        );
+        self.fail_all(items, ServeError::WorkerPanicked);
+        // the panic may have interrupted an arena or engine mid-update:
+        // discard both and rebuild from scratch
+        self.engine = None;
+        self.ws = Workspace::new();
+        self.logits = Tensor::default();
+        if self.restarts_left == 0 {
+            self.degrade("worker restart budget exhausted");
+            return;
+        }
+        self.restarts_left -= 1;
+        match (self.make_engine)() {
+            Ok(e) => {
+                self.engine = Some(e);
+                self.shared.metrics.lock().unwrap().restarted += 1;
+                crate::info!(
+                    "worker respawned with a fresh engine ({} restart(s) left)",
+                    self.restarts_left
+                );
+            }
+            Err(e) => {
+                crate::warnlog!("engine respawn failed: {e:#}");
+                self.degrade("engine respawn failed");
+            }
+        }
+    }
+
+    fn degrade(&self, why: &str) {
+        crate::warnlog!("server degraded ({why}): fast-rejecting until restarted");
+        self.shared.degraded.store(true, Ordering::Release);
+    }
+
+    fn past_drain_deadline(&self) -> bool {
+        if self.shared.state.load(Ordering::Acquire) == STATE_RUNNING {
+            return false;
+        }
+        match *self.shared.drain_deadline.lock().unwrap() {
+            Some(d) => Instant::now() > d,
+            None => false,
+        }
+    }
+
+    fn reply_ok(&mut self, items: Vec<WorkItem<Request>>) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        for (bi, it) in items.iter().enumerate() {
+            let r = &it.payload;
+            m.requests += 1;
+            m.queue_latency.record(it.enqueued.duration_since(r.submitted));
+            m.total_latency.record(r.submitted.elapsed());
+            let _ = r.reply.send(Ok(self.scores[bi]));
+        }
+    }
+
+    /// Reply `err` to every item, recording request/error counters and
+    /// latency (failures are visible in p99, not invisible).
+    fn fail_all(&self, items: Vec<WorkItem<Request>>, err: ServeError) {
+        let mut m = self.shared.metrics.lock().unwrap();
+        for it in items {
+            let r = &it.payload;
+            m.requests += 1;
+            m.errors += 1;
+            m.queue_latency.record(it.enqueued.duration_since(r.submitted));
+            m.total_latency.record(r.submitted.elapsed());
+            let _ = r.reply.send(Err(err.clone()));
+        }
+    }
+
+    fn fail_expired(&self, it: WorkItem<Request>) {
+        let r = &it.payload;
+        let mut m = self.shared.metrics.lock().unwrap();
+        m.requests += 1;
+        m.errors += 1;
+        m.expired += 1;
+        m.queue_latency.record(it.enqueued.duration_since(r.submitted));
+        m.total_latency.record(r.submitted.elapsed());
+        let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
+    }
+}
+
+/// Capped exponential backoff: `base * 2^(attempt-1)`, capped at 100ms.
+fn backoff_delay(base: Duration, attempt: u32) -> Duration {
+    const CAP: Duration = Duration::from_millis(100);
+    let shift = attempt.saturating_sub(1).min(16);
+    base.saturating_mul(1u32 << shift).min(CAP)
+}
+
+/// The scoring server. Owns the supervised worker thread; dropping it (or
+/// calling [`ScoringServer::shutdown`]) drains and joins the worker.
 pub struct ScoringServer {
     handle: ServerHandle,
-    metrics: Arc<Mutex<ServerMetrics>>,
+    shared: Arc<Shared>,
+    tx: SyncSender<Ctl<Request>>,
     join: Option<std::thread::JoinHandle<()>>,
-    _keep_tx: Option<Sender<Request>>,
+    drain_timeout: Duration,
 }
 
 impl ScoringServer {
     /// Start the server. `make_engine` runs on the worker thread and builds
-    /// the backend (e.g. `|| PjrtEngine::new(manifest)`).
-    pub fn start<E, F>(model: ModelWeights, cfg: ServerConfig, make_engine: F) -> ScoringServer
+    /// the backend (e.g. `|| PjrtEngine::new(manifest)`); it is called again
+    /// on every supervised respawn. Fails fast on construction errors (e.g.
+    /// an unresolvable padding token) instead of panicking on the first
+    /// request.
+    pub fn start<E, F>(model: ModelWeights, cfg: ServerConfig, make_engine: F) -> Result<ScoringServer>
     where
         E: Engine,
-        F: FnOnce() -> Result<E> + Send + 'static,
+        F: FnMut() -> Result<E> + Send + 'static,
     {
-        let (tx, rx) = channel::<Request>();
-        let metrics = Arc::new(Mutex::new(ServerMetrics::default()));
-        let metrics2 = metrics.clone();
-        let cfg2 = cfg.clone();
-        let pad = tasks::encode("\n")[0];
+        let pad = tasks::encode("\n").first().copied().ok_or_else(|| {
+            anyhow!("cannot resolve pad token: encoding \"\\n\" produced no tokens")
+        })?;
+        let fault = match &cfg.fault {
+            FaultSetting::FromEnv => FaultPlan::from_env()?,
+            FaultSetting::Off => None,
+            FaultSetting::Plan(p) => Some(p.clone()),
+        };
+        let (tx, rx) = sync_channel::<Ctl<Request>>(cfg.queue_cap.max(1));
+        let shared = Arc::new(Shared::default());
+        let handle = ServerHandle {
+            tx: tx.clone(),
+            shared: shared.clone(),
+            seq_len: cfg.seq_len,
+            pad,
+            deadline: cfg.deadline,
+        };
+        let drain_timeout = cfg.drain_timeout;
+        let restart_budget = cfg.restart_budget;
+        let shared2 = shared.clone();
         let join = std::thread::spawn(move || {
-            let mut engine = match make_engine() {
-                Ok(e) => e,
-                Err(e) => {
-                    crate::warnlog!("engine construction failed: {e:#}");
-                    // drain and fail all requests
-                    while let Ok(req) = rx.recv() {
-                        let _ = req.reply.send(Err(anyhow!("engine unavailable")));
-                    }
-                    return;
-                }
-            };
             // Steady-state serving buffers: one workspace per worker, one
-            // logits tensor, one token gather, one log-prob buffer — reused
-            // across every batch.
-            let mut ws = Workspace::new();
-            let mut logits = Tensor::default();
-            let mut tokens: Vec<i32> = Vec::new();
-            let start = Instant::now();
-            loop {
-                match next_batch(&rx, cfg2.max_batch, cfg2.max_wait) {
-                    BatchDecision::Shutdown => break,
-                    BatchDecision::Flush(items) => {
-                        let b = items.len();
-                        let s = cfg2.seq_len;
-                        let t_batch = Instant::now();
-                        tokens.clear();
-                        for it in &items {
-                            tokens.extend_from_slice(&it.payload.tokens);
-                        }
-                        let result =
-                            engine.logits_ws(&model, &tokens, b, s, &mut ws, &mut logits);
-                        match result {
-                            Ok(()) => {
-                                target_logprobs_into(&logits, &tokens, b, s, &mut ws.lps);
-                                let mut m = record_batch(
-                                    &metrics2,
-                                    b,
-                                    start.elapsed().as_secs_f64(),
-                                    t_batch.elapsed(),
-                                );
-                                for (bi, it) in items.iter().enumerate() {
-                                    let r = &it.payload;
-                                    let mut sum = 0.0f64;
-                                    for si in (r.prompt_len - 1)
-                                        ..(r.prompt_len + r.completion_len - 1)
-                                    {
-                                        sum += ws.lps[bi * s + si] as f64;
-                                    }
-                                    m.requests += 1;
-                                    m.queue_latency
-                                        .record(it.enqueued.duration_since(r.submitted));
-                                    m.total_latency.record(r.submitted.elapsed());
-                                    let _ = r
-                                        .reply
-                                        .send(Ok(sum / r.completion_len as f64));
-                                }
-                            }
-                            Err(e) => {
-                                drop(record_batch(
-                                    &metrics2,
-                                    b,
-                                    start.elapsed().as_secs_f64(),
-                                    t_batch.elapsed(),
-                                ));
-                                let msg = format!("{e:#}");
-                                for it in items {
-                                    let _ =
-                                        it.payload.reply.send(Err(anyhow!(msg.clone())));
-                                }
-                            }
-                        }
-                    }
-                }
-            }
+            // logits tensor, one token gather, one score buffer — reused
+            // across every batch (and rebuilt fresh after a panic).
+            let worker = Worker {
+                model,
+                cfg,
+                shared: shared2,
+                make_engine,
+                engine: None,
+                restarts_left: restart_budget,
+                fault,
+                started: Instant::now(),
+                ws: Workspace::new(),
+                logits: Tensor::default(),
+                tokens: Vec::new(),
+                scores: Vec::new(),
+            };
+            worker.run(rx);
         });
-        ScoringServer {
-            handle: ServerHandle { tx: tx.clone(), seq_len: cfg.seq_len, pad },
-            metrics,
-            join: Some(join),
-            _keep_tx: Some(tx),
-        }
+        Ok(ScoringServer { handle, shared, tx, join: Some(join), drain_timeout })
     }
 
+    /// A cloneable client handle.
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
     }
 
-    pub fn metrics(&self) -> ServerMetrics {
-        self.metrics.lock().unwrap().clone()
+    /// A cloneable health/metrics observer (for the HTTP front end).
+    pub fn status(&self) -> ServerStatus {
+        ServerStatus { shared: self.shared.clone() }
     }
 
-    /// Stop accepting requests and join the worker.
-    pub fn shutdown(mut self) -> ServerMetrics {
-        self._keep_tx = None; // close our copy
-        let ServerHandle { tx, .. } = self.handle.clone();
-        drop(tx);
-        // handle clones held by clients keep the channel open; callers drop
-        // them before shutdown in practice. Replace our handle sender too:
-        self.handle = ServerHandle {
-            tx: {
-                let (dead_tx, _) = channel();
-                dead_tx
-            },
-            seq_len: self.handle.seq_len,
-            pad: self.handle.pad,
-        };
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
+    /// Snapshot of the rolled-up serving metrics.
+    pub fn metrics(&self) -> ServerMetrics {
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    /// Requests currently queued.
+    pub fn queue_depth(&self) -> usize {
+        self.shared.depth()
+    }
+
+    /// Graceful drain with the configured [`ServerConfig::drain_timeout`]:
+    /// stop admission, finish queued work, join the worker.
+    pub fn shutdown(self) -> ServerMetrics {
+        let t = self.drain_timeout;
+        self.drain(t)
+    }
+
+    /// Graceful drain with an explicit timeout: admission stops immediately
+    /// (live [`ServerHandle`] clones get [`ServeError::ShuttingDown`]),
+    /// already-admitted requests are completed — until `timeout` elapses,
+    /// after which the remainder is failed fast — and the worker is joined.
+    /// Never hangs, regardless of how many handle clones clients still hold.
+    pub fn drain(mut self, timeout: Duration) -> ServerMetrics {
+        self.close(timeout);
+        self.shared.metrics.lock().unwrap().clone()
+    }
+
+    fn close(&mut self, timeout: Duration) {
+        let Some(join) = self.join.take() else { return };
+        self.shared.state.store(STATE_DRAINING, Ordering::Release);
+        *self.shared.drain_deadline.lock().unwrap() = Some(Instant::now() + timeout);
+        // Explicit close protocol: the sentinel queues FIFO behind every
+        // admitted request, so the worker finishes the backlog then exits.
+        // A full queue just means waiting for the live worker to free a
+        // slot; a vanished worker is observed via is_finished. Either way
+        // this terminates — shutdown does not depend on clients dropping
+        // their handle clones.
+        loop {
+            if join.is_finished() {
+                break;
+            }
+            match self.tx.try_send(Ctl::Close) {
+                Ok(()) => break,
+                Err(TrySendError::Full(_)) => std::thread::sleep(Duration::from_millis(1)),
+                Err(TrySendError::Disconnected(_)) => break,
+            }
         }
-        self.metrics.lock().unwrap().clone()
+        let _ = join.join();
     }
 }
 
 impl Drop for ScoringServer {
     fn drop(&mut self) {
-        self._keep_tx = None;
-        // Replace our handle's sender with a dead channel so the worker
-        // observes disconnect (client-held handle clones must already be
-        // dropped by now, as documented on `handle()`).
-        let (dead_tx, _) = channel();
-        self.handle = ServerHandle {
-            tx: dead_tx,
-            seq_len: self.handle.seq_len,
-            pad: self.handle.pad,
-        };
-        if let Some(j) = self.join.take() {
-            let _ = j.join();
-        }
+        let t = self.drain_timeout;
+        self.close(t);
     }
 }
 
@@ -273,6 +760,10 @@ mod tests {
     use crate::model::testutil::tiny_model;
     use crate::runtime::NativeEngine;
 
+    fn quiet_cfg() -> ServerConfig {
+        ServerConfig { fault: FaultSetting::Off, ..ServerConfig::default() }
+    }
+
     #[test]
     fn serves_scores_and_batches() {
         let model = tiny_model(4, 2, false, 100);
@@ -280,8 +771,9 @@ mod tests {
             max_batch: 8,
             max_wait: Duration::from_millis(5),
             seq_len: 64,
+            ..quiet_cfg()
         };
-        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine));
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap();
         let h = server.handle();
         // concurrent clients to force batching
         let mut joins = Vec::new();
@@ -297,22 +789,22 @@ mod tests {
         drop(h);
         let m = server.shutdown();
         assert_eq!(m.requests, 12);
+        assert_eq!(m.errors, 0);
         assert!(m.batches <= 12);
         assert!(m.mean_batch_size() >= 1.0);
-        // the worker records one batch-compute sample per batch
+        // the worker records one batch-compute sample per batch attempt
         assert_eq!(m.batch_latency.count(), m.batches);
         assert!(m.batch_latency_p50() <= m.batch_latency_p99());
     }
 
     #[test]
-    fn rejects_oversized_requests() {
+    fn rejects_oversized_requests_with_typed_error() {
         let model = tiny_model(4, 2, false, 101);
-        let server =
-            ScoringServer::start(model, ServerConfig::default(), || Ok(NativeEngine));
+        let server = ScoringServer::start(model, quiet_cfg(), || Ok(NativeEngine)).unwrap();
         let h = server.handle();
         let long = "a".repeat(100);
-        assert!(h.score(&long, "b").is_err());
-        assert!(h.score("", "b").is_err());
+        assert!(matches!(h.score(&long, "b"), Err(ServeError::Rejected(_))));
+        assert!(matches!(h.score("", "b"), Err(ServeError::Rejected(_))));
         drop(h);
     }
 
@@ -323,12 +815,48 @@ mod tests {
             max_batch: 4,
             max_wait: Duration::from_millis(1),
             seq_len: 64,
+            ..quiet_cfg()
         };
-        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine));
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap();
         let h = server.handle();
         let a = h.score("r:abc|", "cba.").unwrap();
         let b = h.score("r:abc|", "cba.").unwrap();
         assert!((a - b).abs() < 1e-6);
         drop(h);
+    }
+
+    #[test]
+    fn engine_construction_failure_degrades_not_hangs() {
+        let model = tiny_model(4, 2, false, 103);
+        let server = ScoringServer::start(model, quiet_cfg(), || -> Result<NativeEngine> {
+            Err(anyhow!("no backend here"))
+        })
+        .unwrap();
+        let h = server.handle();
+        // the admission path fast-rejects once construction failed; a
+        // request racing the construction gets failed by the worker instead
+        let r = h.score("c:ab|", "ab.");
+        assert!(
+            matches!(r, Err(ServeError::Degraded)),
+            "want Degraded, got {r:?}"
+        );
+        assert!(server.status().degraded());
+        let m = server.shutdown();
+        assert_eq!(m.requests + m.shed, m.errors + m.shed); // nothing succeeded
+    }
+
+    #[test]
+    fn backoff_caps() {
+        let base = Duration::from_millis(1);
+        assert_eq!(backoff_delay(base, 1), Duration::from_millis(1));
+        assert_eq!(backoff_delay(base, 3), Duration::from_millis(4));
+        assert_eq!(backoff_delay(base, 30), Duration::from_millis(100));
+    }
+
+    #[test]
+    fn queue_cap_env_fallback_is_sane() {
+        // (does not set the env var — just pins the default)
+        let cfg = ServerConfig::default();
+        assert!(cfg.queue_cap >= 1);
     }
 }

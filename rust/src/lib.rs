@@ -15,7 +15,8 @@
 //!
 //! Module map (see DESIGN.md §4 for the full system inventory):
 //!
-//! * [`util`]    — substrates: RNG, JSON, CLI, logging, and [`util::par`] —
+//! * [`util`]    — substrates: RNG, JSON, CLI, logging, deterministic
+//!   fault injection ([`util::fault`]), and [`util::par`] —
 //!   the persistent-pool data-parallelism layer every hot path runs on
 //!   (offline environment, so `rand`/`serde`/`clap`/`rayon` are
 //!   reimplemented here).
@@ -127,7 +128,9 @@
 //! * [`eval`]    — the seven synthetic multiple-choice tasks, the
 //!   workspace-backed scorer, and the `eval::sweep` comparison grid.
 //! * [`runtime`] — PJRT client wrapper, executable cache, shape buckets.
-//! * [`coordinator`] — batcher, scoring server, compression pipeline, metrics.
+//! * [`coordinator`] — batcher, overload-hardened scoring server (bounded
+//!   admission, deadlines, retry/split/respawn, graceful drain), the
+//!   dependency-free HTTP front end, compression pipeline, metrics.
 //! * [`bench`]   — criterion-style benchmark harness (criterion unavailable).
 //! * [`exp`]     — drivers that regenerate every table and figure.
 

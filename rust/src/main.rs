@@ -19,7 +19,9 @@ use std::time::Duration;
 use anyhow::{bail, Context, Result};
 
 use mergemoe::calib;
-use mergemoe::coordinator::{compress, CalibSource, CompressSpec, ScoringServer, ServerConfig};
+use mergemoe::coordinator::{
+    compress, CalibSource, CompressSpec, HttpServer, ScoringServer, ServerConfig,
+};
 use mergemoe::eval::tasks::{Task, ALL_TASKS};
 use mergemoe::eval::{run_sweep, SweepSpec};
 use mergemoe::exp::{self, Ctx, EngineSel};
@@ -60,6 +62,13 @@ fn usage() -> &'static str {
                 a+b task combination, or \"mixture\" (Table 4's rows);\n\
                 omitted = one source from --calib-tasks (default mixture)\n\
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
+                [--queue-cap N] [--deadline-ms N] [--retries N] [--restart-budget N]\n\
+                [--drain-ms N] [--listen ADDR[:PORT]] [--duration-s N]\n\
+                default: in-process demo load-gen; with --listen, serves the\n\
+                HTTP/1.1 API (POST /score, GET /healthz, GET /metrics) for\n\
+                --duration-s seconds (0 = forever). overload knobs also via\n\
+                MERGEMOE_QUEUE_CAP; fault injection via MERGEMOE_FAULT\n\
+                (seed:N[,transient:P][,fatal:P][,panic:P][,slow:P][,slow-ms:N])\n\
      stats:     --model NAME [--calib-seqs N]\n\
      selfcheck: --model NAME"
 }
@@ -271,10 +280,17 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
     let model = ctx.load_model(&model_name)?;
     let n_requests = args.usize("requests", 200)?;
     let n_clients = args.usize("clients", 4)?;
+    let default_cfg = ServerConfig::default();
     let cfg = ServerConfig {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
         seq_len: ctx.manifest.seq_len,
+        queue_cap: args.usize("queue-cap", default_cfg.queue_cap)?,
+        deadline: args.opt_ms("deadline-ms")?,
+        max_retries: args.usize("retries", default_cfg.max_retries as usize)? as u32,
+        restart_budget: args.usize("restart-budget", default_cfg.restart_budget as usize)? as u32,
+        drain_timeout: args.ms("drain-ms", default_cfg.drain_timeout)?,
+        ..default_cfg
     };
     let sel = ctx.engine;
     let artifacts = ctx.artifacts.clone();
@@ -286,7 +302,27 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
                 Ok(Box::new(PjrtEngine::new(manifest)?))
             }
         }
-    });
+    })?;
+    // `--listen ADDR` runs the HTTP front end instead of the demo load-gen
+    if let Some(addr) = args.get("listen") {
+        let mut http = HttpServer::bind(addr, server.handle(), server.status())?;
+        let duration = args.usize("duration-s", 0)?;
+        println!(
+            "listening on http://{} (POST /score, GET /healthz, GET /metrics)",
+            http.addr()
+        );
+        if duration > 0 {
+            std::thread::sleep(Duration::from_secs(duration as u64));
+        } else {
+            loop {
+                std::thread::sleep(Duration::from_secs(3600));
+            }
+        }
+        http.stop();
+        let m = server.shutdown();
+        println!("served: {}", m.report());
+        return Ok(());
+    }
     info!("serving {n_requests} requests from {n_clients} clients");
     let handle = server.handle();
     let mut joins = Vec::new();

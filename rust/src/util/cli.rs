@@ -4,6 +4,7 @@
 //! Flags may be given as `--key value` or `--key=value`.
 
 use std::collections::BTreeMap;
+use std::time::Duration;
 
 use anyhow::{bail, Context, Result};
 
@@ -98,6 +99,33 @@ impl Args {
         Ok(crate::util::par::max_threads())
     }
 
+    /// Millisecond-valued duration flag, e.g. `--deadline-ms 250`.
+    pub fn ms(&self, key: &str, default: Duration) -> Result<Duration> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => {
+                let n: u64 = v
+                    .parse()
+                    .with_context(|| format!("--{key} expects milliseconds, got {v:?}"))?;
+                Ok(Duration::from_millis(n))
+            }
+        }
+    }
+
+    /// Optional millisecond flag: absent (or explicit `0`) means "none" —
+    /// the convention for disabling deadlines.
+    pub fn opt_ms(&self, key: &str) -> Result<Option<Duration>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => {
+                let n: u64 = v
+                    .parse()
+                    .with_context(|| format!("--{key} expects milliseconds, got {v:?}"))?;
+                Ok((n > 0).then(|| Duration::from_millis(n)))
+            }
+        }
+    }
+
     /// Comma-separated integer list flag, e.g. `--ms 6,8` (the sweep's
     /// target expert counts).
     pub fn usize_list(&self, key: &str, default: &[usize]) -> Result<Vec<usize>> {
@@ -169,6 +197,18 @@ mod tests {
         assert!(bad.apply_threads().is_err());
         let nan = Args::parse(&sv(&["run", "--threads", "lots"]), &[]).unwrap();
         assert!(nan.apply_threads().is_err());
+    }
+
+    #[test]
+    fn duration_flags() {
+        let a = Args::parse(&sv(&["serve", "--deadline-ms", "250", "--drain-ms=0"]), &[]).unwrap();
+        assert_eq!(a.ms("deadline-ms", Duration::ZERO).unwrap(), Duration::from_millis(250));
+        assert_eq!(a.ms("absent", Duration::from_millis(7)).unwrap(), Duration::from_millis(7));
+        assert_eq!(a.opt_ms("deadline-ms").unwrap(), Some(Duration::from_millis(250)));
+        assert_eq!(a.opt_ms("drain-ms").unwrap(), None, "explicit 0 disables");
+        assert_eq!(a.opt_ms("absent").unwrap(), None);
+        let bad = Args::parse(&sv(&["serve", "--deadline-ms", "soon"]), &[]).unwrap();
+        assert!(bad.ms("deadline-ms", Duration::ZERO).is_err());
     }
 
     #[test]

@@ -1,0 +1,357 @@
+#![warn(missing_docs)]
+//! Deterministic fault injection for the serving stack.
+//!
+//! A [`FaultPlan`] decides, for each batch-execution *attempt* the scoring
+//! server makes, whether to run it cleanly or inject a failure: a transient
+//! engine error, a fatal engine error, a slow batch (stall), or a worker
+//! panic. Two modes exist:
+//!
+//! * **Seeded** (`MERGEMOE_FAULT=seed:42,transient:0.2,panic:0.05,…`): the
+//!   action at attempt `i` is a pure function of `(seed, i)`, so the same
+//!   seed always produces the same failure schedule — chaos testing that is
+//!   a reproducible regression test, not a flake generator
+//!   (`same_seed_same_schedule` pins this; see the ARCHITECTURE.md ledger).
+//! * **Scripted** ([`FaultPlan::scripted`]): tests hand the exact action
+//!   sequence, attempt by attempt, for surgical scenarios (stall the worker,
+//!   then panic, then run clean).
+//!
+//! Either mode may additionally carry a **poison token**: any attempt whose
+//! batch contains that token fails transiently, which is how the batch-split
+//! isolation path ("one poison request cannot fail its batchmates") is
+//! exercised deterministically.
+//!
+//! When `MERGEMOE_FAULT` is unset, [`FaultPlan::from_env`] returns `None`
+//! and the server runs the exact pre-existing execution — no plan object,
+//! no per-batch draws, no extra allocations.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use anyhow::{bail, Context, Result};
+
+use crate::util::rng::Rng;
+
+/// What to do with one batch-execution attempt.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultAction {
+    /// Run the attempt normally.
+    None,
+    /// Fail the attempt with a retryable engine error.
+    Transient,
+    /// Fail the attempt with a non-retryable engine error.
+    Fatal,
+    /// Stall the worker for the given duration, then run normally.
+    Slow(Duration),
+    /// Panic the worker thread mid-attempt.
+    Panic,
+}
+
+/// Retry class of a batch failure (see [`classify`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FaultClass {
+    /// Worth retrying (and, on repeat failure, splitting the batch).
+    Transient,
+    /// Fail fast; retrying would waste compute.
+    Fatal,
+}
+
+/// The typed error produced by injected engine faults; [`classify`]
+/// recognizes it by downcast so injected and organic failures flow through
+/// the same retry machinery.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedFault {
+    /// Retry class of this injected failure.
+    pub class: FaultClass,
+}
+
+impl std::fmt::Display for InjectedFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.class {
+            FaultClass::Transient => write!(f, "injected transient engine fault"),
+            FaultClass::Fatal => write!(f, "injected fatal engine fault"),
+        }
+    }
+}
+
+impl std::error::Error for InjectedFault {}
+
+/// Classify an engine error for the retry layer: injected faults carry
+/// their class; everything else defaults to [`FaultClass::Transient`] —
+/// retries are capped and batch splitting bounds the damage, while a
+/// misclassified genuinely-transient device error would otherwise fail
+/// requests needlessly.
+pub fn classify(e: &anyhow::Error) -> FaultClass {
+    match e.downcast_ref::<InjectedFault>() {
+        Some(f) => f.class,
+        None => FaultClass::Transient,
+    }
+}
+
+/// Probabilities (per attempt) for the seeded mode.
+#[derive(Debug, Clone, Copy)]
+struct Rates {
+    transient: f64,
+    fatal: f64,
+    panic: f64,
+    slow: f64,
+    slow_ms: u64,
+}
+
+impl Default for Rates {
+    fn default() -> Self {
+        Rates { transient: 0.05, fatal: 0.0, panic: 0.0, slow: 0.0, slow_ms: 10 }
+    }
+}
+
+#[derive(Debug)]
+enum Mode {
+    Seeded { seed: u64, rates: Rates },
+    Scripted { actions: Vec<FaultAction> },
+}
+
+/// A deterministic fault schedule. Thread-safe: the server consults it via
+/// [`FaultPlan::next`], which advances an atomic attempt cursor.
+#[derive(Debug)]
+pub struct FaultPlan {
+    mode: Mode,
+    cursor: AtomicU64,
+    poison: Option<i32>,
+}
+
+impl FaultPlan {
+    /// Seed-driven plan with the given per-attempt fault rates (see the
+    /// `MERGEMOE_FAULT` grammar on [`FaultPlan::parse`]).
+    pub fn seeded(seed: u64) -> FaultPlan {
+        FaultPlan {
+            mode: Mode::Seeded { seed, rates: Rates::default() },
+            cursor: AtomicU64::new(0),
+            poison: None,
+        }
+    }
+
+    /// Exact per-attempt script; attempts past the end run clean.
+    pub fn scripted(actions: Vec<FaultAction>) -> FaultPlan {
+        FaultPlan { mode: Mode::Scripted { actions }, cursor: AtomicU64::new(0), poison: None }
+    }
+
+    /// Mark `token` as poisoned: any attempt whose batch contains it fails
+    /// transiently (scheduled actions take precedence).
+    pub fn with_poison(mut self, token: i32) -> FaultPlan {
+        self.poison = Some(token);
+        self
+    }
+
+    /// Parse the `MERGEMOE_FAULT` grammar: comma-separated `key:value`
+    /// pairs. `seed:N` selects seeded mode (required); optional rates
+    /// `transient:P`, `fatal:P`, `panic:P`, `slow:P` (probabilities in
+    /// `[0,1]`, defaults `0.05/0/0/0`), `slow-ms:N` (stall length, default
+    /// 10), and `poison:TOK` (poison token id).
+    pub fn parse(spec: &str) -> Result<FaultPlan> {
+        let mut seed: Option<u64> = None;
+        let mut rates = Rates::default();
+        let mut poison = None;
+        for part in spec.split(',') {
+            let part = part.trim();
+            if part.is_empty() {
+                continue;
+            }
+            let (k, v) = part
+                .split_once(':')
+                .with_context(|| format!("fault spec entry {part:?} is not key:value"))?;
+            let fv = || -> Result<f64> {
+                let p: f64 = v.parse().with_context(|| format!("bad rate {v:?} for {k}"))?;
+                if !(0.0..=1.0).contains(&p) {
+                    bail!("rate {k}:{v} outside [0,1]");
+                }
+                Ok(p)
+            };
+            match k {
+                "seed" => seed = Some(v.parse().with_context(|| format!("bad seed {v:?}"))?),
+                "transient" => rates.transient = fv()?,
+                "fatal" => rates.fatal = fv()?,
+                "panic" => rates.panic = fv()?,
+                "slow" => rates.slow = fv()?,
+                "slow-ms" => {
+                    rates.slow_ms = v.parse().with_context(|| format!("bad slow-ms {v:?}"))?
+                }
+                "poison" => {
+                    poison = Some(v.parse().with_context(|| format!("bad poison token {v:?}"))?)
+                }
+                other => bail!("unknown fault spec key {other:?}"),
+            }
+        }
+        let seed = seed.context("fault spec needs seed:N")?;
+        let total = rates.transient + rates.fatal + rates.panic + rates.slow;
+        if total > 1.0 {
+            bail!("fault rates sum to {total} > 1");
+        }
+        Ok(FaultPlan {
+            mode: Mode::Seeded { seed, rates },
+            cursor: AtomicU64::new(0),
+            poison,
+        })
+    }
+
+    /// Build a plan from `MERGEMOE_FAULT`, or `None` when unset/empty. A
+    /// malformed value is a hard error — silently running *without* the
+    /// faults a chaos run asked for would make failures look like passes.
+    pub fn from_env() -> Result<Option<Arc<FaultPlan>>> {
+        match std::env::var("MERGEMOE_FAULT") {
+            Ok(spec) if !spec.trim().is_empty() => {
+                let plan =
+                    FaultPlan::parse(&spec).context("parsing MERGEMOE_FAULT")?;
+                Ok(Some(Arc::new(plan)))
+            }
+            _ => Ok(None),
+        }
+    }
+
+    /// The action for attempt `i` — pure, does not advance the cursor.
+    pub fn action_at(&self, i: u64) -> FaultAction {
+        match &self.mode {
+            Mode::Scripted { actions } => {
+                actions.get(i as usize).copied().unwrap_or(FaultAction::None)
+            }
+            Mode::Seeded { seed, rates } => {
+                // One independent draw per attempt index: the schedule is a
+                // pure function of (seed, i), insensitive to how many
+                // attempts actually ran before this one was inspected.
+                let mut rng = Rng::new(seed ^ i.wrapping_mul(0xA24B_AED4_963E_E407));
+                let u = rng.f64();
+                let mut edge = rates.transient;
+                if u < edge {
+                    return FaultAction::Transient;
+                }
+                edge += rates.fatal;
+                if u < edge {
+                    return FaultAction::Fatal;
+                }
+                edge += rates.panic;
+                if u < edge {
+                    return FaultAction::Panic;
+                }
+                edge += rates.slow;
+                if u < edge {
+                    return FaultAction::Slow(Duration::from_millis(rates.slow_ms));
+                }
+                FaultAction::None
+            }
+        }
+    }
+
+    /// Consume and return the next attempt's action.
+    pub fn next(&self) -> FaultAction {
+        let i = self.cursor.fetch_add(1, Ordering::Relaxed);
+        self.action_at(i)
+    }
+
+    /// Attempts consumed so far.
+    pub fn attempts(&self) -> u64 {
+        self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Whether this batch trips the poison-token condition.
+    pub fn is_poisoned(&self, tokens: &[i32]) -> bool {
+        match self.poison {
+            Some(p) => tokens.contains(&p),
+            None => false,
+        }
+    }
+
+    /// The first `n` actions of the schedule (pure; for pinning tests and
+    /// debugging a chaos run).
+    pub fn schedule(&self, n: u64) -> Vec<FaultAction> {
+        (0..n).map(|i| self.action_at(i)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let a = FaultPlan::parse("seed:42,transient:0.3,panic:0.1,slow:0.05").unwrap();
+        let b = FaultPlan::parse("seed:42,transient:0.3,panic:0.1,slow:0.05").unwrap();
+        assert_eq!(a.schedule(512), b.schedule(512));
+        let c = FaultPlan::parse("seed:43,transient:0.3,panic:0.1,slow:0.05").unwrap();
+        assert_ne!(a.schedule(512), c.schedule(512), "different seeds must differ");
+    }
+
+    #[test]
+    fn next_walks_the_schedule_in_order() {
+        let p = FaultPlan::seeded(7);
+        let want = p.schedule(64);
+        let got: Vec<FaultAction> = (0..64).map(|_| p.next()).collect();
+        assert_eq!(got, want);
+        assert_eq!(p.attempts(), 64);
+    }
+
+    #[test]
+    fn rates_shape_the_mix() {
+        let p = FaultPlan::parse("seed:5,transient:1.0").unwrap();
+        assert!(p.schedule(32).iter().all(|a| *a == FaultAction::Transient));
+        let q = FaultPlan::parse("seed:5,transient:0.0").unwrap();
+        assert!(q.schedule(32).iter().all(|a| *a == FaultAction::None));
+        let r = FaultPlan::parse("seed:5,transient:0.5").unwrap();
+        let n_faulty =
+            r.schedule(1000).iter().filter(|a| **a == FaultAction::Transient).count();
+        assert!((300..700).contains(&n_faulty), "p=0.5 gave {n_faulty}/1000");
+    }
+
+    #[test]
+    fn scripted_plans_run_exactly_then_go_clean() {
+        let p = FaultPlan::scripted(vec![
+            FaultAction::Transient,
+            FaultAction::Slow(Duration::from_millis(3)),
+        ]);
+        assert_eq!(p.next(), FaultAction::Transient);
+        assert_eq!(p.next(), FaultAction::Slow(Duration::from_millis(3)));
+        assert_eq!(p.next(), FaultAction::None);
+        assert_eq!(p.next(), FaultAction::None);
+    }
+
+    #[test]
+    fn poison_token_detection() {
+        let p = FaultPlan::scripted(vec![]).with_poison(9);
+        assert!(p.is_poisoned(&[1, 9, 3]));
+        assert!(!p.is_poisoned(&[1, 2, 3]));
+        let q = FaultPlan::scripted(vec![]);
+        assert!(!q.is_poisoned(&[9]));
+    }
+
+    #[test]
+    fn parse_rejects_garbage() {
+        assert!(FaultPlan::parse("transient:0.5").is_err(), "seed required");
+        assert!(FaultPlan::parse("seed:x").is_err());
+        assert!(FaultPlan::parse("seed:1,transient:1.5").is_err());
+        assert!(FaultPlan::parse("seed:1,transient:0.8,fatal:0.8").is_err());
+        assert!(FaultPlan::parse("seed:1,wat:2").is_err());
+        assert!(FaultPlan::parse("seed:1,noval").is_err());
+    }
+
+    #[test]
+    fn parse_full_grammar() {
+        let p = FaultPlan::parse("seed:9,transient:0.2,fatal:0.1,panic:0.05,slow:0.1,slow-ms:25,poison:4")
+            .unwrap();
+        assert!(p.is_poisoned(&[4]));
+        // every action kind is reachable under these rates
+        let sched = p.schedule(4096);
+        assert!(sched.contains(&FaultAction::Transient));
+        assert!(sched.contains(&FaultAction::Fatal));
+        assert!(sched.contains(&FaultAction::Panic));
+        assert!(sched.contains(&FaultAction::Slow(Duration::from_millis(25))));
+        assert!(sched.contains(&FaultAction::None));
+    }
+
+    #[test]
+    fn classify_routes_injected_and_unknown_errors() {
+        let t: anyhow::Error = InjectedFault { class: FaultClass::Transient }.into();
+        let f: anyhow::Error = InjectedFault { class: FaultClass::Fatal }.into();
+        let o = anyhow::anyhow!("device hiccup");
+        assert_eq!(classify(&t), FaultClass::Transient);
+        assert_eq!(classify(&f), FaultClass::Fatal);
+        assert_eq!(classify(&o), FaultClass::Transient);
+    }
+}

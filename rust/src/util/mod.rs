@@ -2,6 +2,7 @@
 //! deterministic RNG, JSON, CLI parsing, logging and small helpers.
 
 pub mod cli;
+pub mod fault;
 pub mod json;
 pub mod logging;
 pub mod par;

@@ -1,0 +1,485 @@
+//! Deterministic fault-injection tests for the overload-hardened scoring
+//! server: every robustness behavior (shedding, deadlines, retry + batch
+//! split, panic respawn, graceful drain) is exercised as a reproducible
+//! scenario driven by `util::fault::FaultPlan` — scripted plans for
+//! surgical single-path tests, seeded plans for whole-workload chaos runs
+//! whose outcome sequence is pinned bit-for-bit per seed.
+//!
+//! These tests use the native engine on a small synthetic model, so they
+//! run on a bare checkout (no `make artifacts` needed).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::mpsc::channel;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mergemoe::config::ModelConfig;
+use mergemoe::coordinator::{
+    FaultSetting, ScoringServer, ServeError, ServerConfig, ServerHandle,
+};
+use mergemoe::eval::tasks;
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::workspace::Workspace;
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine};
+use mergemoe::tensor::Tensor;
+use mergemoe::util::fault::{FaultAction, FaultPlan};
+
+/// One fixed model for every scenario, so fault-run scores can be compared
+/// against clean-run references.
+fn test_model() -> ModelWeights {
+    let cfg = ModelConfig {
+        name: "faultinj".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: false,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    synth_model(&cfg, 77)
+}
+
+/// Base config for these tests: no env-sourced faults (each test scripts
+/// its own), short drain, tiny backoff so retries don't dominate runtime.
+fn base_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        seq_len: 64,
+        fault: FaultSetting::Off,
+        retry_backoff: Duration::from_micros(200),
+        drain_timeout: Duration::from_secs(5),
+        ..ServerConfig::default()
+    }
+}
+
+fn start_clean() -> ScoringServer {
+    ScoringServer::start(test_model(), base_cfg(), || Ok(NativeEngine)).unwrap()
+}
+
+fn start_with_plan(cfg: ServerConfig, plan: &Arc<FaultPlan>) -> ScoringServer {
+    let cfg = ServerConfig { fault: FaultSetting::Plan(plan.clone()), ..cfg };
+    ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap()
+}
+
+/// Wait (bounded) until `pred` holds; panics on timeout so a broken
+/// condition fails the test instead of hanging it.
+fn wait_for(what: &str, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+/// Stall the worker: scores on a background thread while the plan holds
+/// attempt 0 in a `Slow` action, and waits until the worker has actually
+/// begun that attempt (the plan's attempt cursor advancing is the
+/// race-free signal). Requests sent afterwards queue up behind the stall.
+fn stall_worker(
+    h: &ServerHandle,
+    plan: &Arc<FaultPlan>,
+) -> std::thread::JoinHandle<Result<f64, ServeError>> {
+    let hc = h.clone();
+    let j = std::thread::spawn(move || hc.score("c:abcd|", "abcd."));
+    let p = plan.clone();
+    wait_for("worker to begin the stalled attempt", move || p.attempts() >= 1);
+    j
+}
+
+// ---------------------------------------------------------------------------
+// determinism of the schedule itself (the ARCHITECTURE.md ledger row)
+// ---------------------------------------------------------------------------
+
+#[test]
+fn same_seed_same_fault_schedule() {
+    let spec = "seed:2026,transient:0.2,fatal:0.02,panic:0.05,slow:0.1,slow-ms:3";
+    let a = FaultPlan::parse(spec).unwrap();
+    let b = FaultPlan::parse(spec).unwrap();
+    assert_eq!(a.schedule(2048), b.schedule(2048), "same seed must give same schedule");
+    // and the schedule is a pure function of the attempt index — consuming
+    // it does not perturb later entries
+    let c = FaultPlan::parse(spec).unwrap();
+    for _ in 0..100 {
+        c.next();
+    }
+    assert_eq!(c.action_at(1000), a.action_at(1000));
+}
+
+// ---------------------------------------------------------------------------
+// bounded admission: queue-full shedding under a stalled worker
+// ---------------------------------------------------------------------------
+
+#[test]
+fn full_queue_sheds_with_typed_overloaded() {
+    let cfg = ServerConfig { queue_cap: 2, ..base_cfg() };
+    let plan =
+        Arc::new(FaultPlan::scripted(vec![FaultAction::Slow(Duration::from_millis(600))]));
+    let server = start_with_plan(cfg, &plan);
+    let h = server.handle();
+
+    let stalled = stall_worker(&h, &plan);
+    // fill the bounded queue behind the stalled worker
+    let mut queued = Vec::new();
+    for _ in 0..2 {
+        let hc = h.clone();
+        queued.push(std::thread::spawn(move || hc.score("c:abcd|", "abcd.")));
+    }
+    wait_for("queue to fill", || h.queue_depth() == 2);
+    // the queue is full: admission sheds immediately with the typed error
+    let r = h.score("c:abcd|", "abcd.");
+    assert_eq!(r, Err(ServeError::Overloaded));
+    assert!(server.queue_depth() <= 2, "shed request must not occupy a slot");
+
+    // once the stall clears, everything admitted completes fine
+    assert!(stalled.join().unwrap().is_ok());
+    for j in queued {
+        assert!(j.join().unwrap().is_ok());
+    }
+    let m = server.shutdown();
+    assert_eq!(m.shed, 1);
+    assert_eq!(m.requests, 3, "shed requests are not admitted requests");
+    assert_eq!(m.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// deadlines: expiry fails the request before its forward pass
+// ---------------------------------------------------------------------------
+
+/// Engine wrapper that counts forward passes, so the test can prove an
+/// expired request never reached compute.
+struct CountingEngine {
+    n: Arc<AtomicUsize>,
+}
+
+impl Engine for CountingEngine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        self.n.fetch_add(1, Ordering::SeqCst);
+        NativeEngine.logits(model, tokens, b, s)
+    }
+
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.n.fetch_add(1, Ordering::SeqCst);
+        NativeEngine.logits_ws(model, tokens, b, s, ws, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "counting"
+    }
+}
+
+#[test]
+fn expired_deadline_fails_without_forward_pass() {
+    let forwards = Arc::new(AtomicUsize::new(0));
+    let f2 = forwards.clone();
+    let plan =
+        Arc::new(FaultPlan::scripted(vec![FaultAction::Slow(Duration::from_millis(500))]));
+    let cfg = ServerConfig { fault: FaultSetting::Plan(plan.clone()), ..base_cfg() };
+    let server = ScoringServer::start(test_model(), cfg, move || {
+        Ok(CountingEngine { n: f2.clone() })
+    })
+    .unwrap();
+    let h = server.handle();
+
+    // request A (no deadline) stalls the worker for 500ms
+    let stalled = stall_worker(&h, &plan);
+    // request B carries a 50ms deadline that expires mid-stall
+    let hb = h.clone();
+    let b = std::thread::spawn(move || {
+        hb.score_with_deadline("c:abcd|", "abcd.", Some(Duration::from_millis(50)))
+    });
+    assert_eq!(b.join().unwrap(), Err(ServeError::DeadlineExceeded));
+    assert!(stalled.join().unwrap().is_ok());
+
+    let m = server.shutdown();
+    assert_eq!(
+        forwards.load(Ordering::SeqCst),
+        1,
+        "only the stall request may reach the engine — the expired one must not"
+    );
+    assert_eq!(m.expired, 1);
+    assert_eq!(m.errors, 1, "expired requests are counted errors");
+    assert_eq!(m.requests, 2, "failed requests still count as requests");
+    assert!(m.total_latency.count() >= 2, "failures must record latency too");
+}
+
+// ---------------------------------------------------------------------------
+// retry layer: transient errors retry; fatal errors fail fast
+// ---------------------------------------------------------------------------
+
+#[test]
+fn transient_failure_retries_to_bit_identical_success() {
+    // clean reference score on the same model
+    let clean = start_clean();
+    let want = clean.handle().score("c:abcd|", "abcd.").unwrap();
+    clean.shutdown();
+
+    // first attempt fails transiently, retry runs clean
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Transient]));
+    let server = start_with_plan(base_cfg(), &plan);
+    let got = server.handle().score("c:abcd|", "abcd.").unwrap();
+    assert_eq!(got.to_bits(), want.to_bits(), "retried result must be bit-identical");
+    let m = server.shutdown();
+    assert_eq!(m.retried, 1);
+    assert_eq!(m.errors, 0);
+    assert_eq!(m.batches, 2, "failed attempt + successful retry");
+}
+
+#[test]
+fn fatal_failure_fails_fast_without_retry() {
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Fatal]));
+    let server = start_with_plan(base_cfg(), &plan);
+    let r = server.handle().score("c:abcd|", "abcd.");
+    assert!(matches!(r, Err(ServeError::Engine(_))), "want Engine error, got {r:?}");
+    let m = server.shutdown();
+    assert_eq!(m.retried, 0, "fatal errors must not burn retries");
+    assert_eq!(m.batches, 1, "exactly one attempt");
+    assert_eq!(m.errors, 1);
+}
+
+// ---------------------------------------------------------------------------
+// batch split: one poison request cannot fail its batchmates
+// ---------------------------------------------------------------------------
+
+#[test]
+fn poison_request_fails_alone_after_batch_split() {
+    let poison_tok = tasks::encode("#")[0];
+    let clean_reqs = [("c:abcd|", "abcd."), ("r:abc|", "cba."), ("c:xyxy|", "xyxy.")];
+    let poison_req = ("c:a#a#|", "a#a#.");
+
+    // clean reference scores on the same model (each as its own batch)
+    let clean = start_clean();
+    let want: Vec<f64> = clean_reqs
+        .iter()
+        .map(|(p, c)| clean.handle().score(p, c).unwrap())
+        .collect();
+    clean.shutdown();
+
+    // stall the worker so all four requests coalesce into one batch, with
+    // the poison token tripping a transient failure on every attempt that
+    // contains it
+    let plan = Arc::new(
+        FaultPlan::scripted(vec![FaultAction::Slow(Duration::from_millis(400))])
+            .with_poison(poison_tok),
+    );
+    let server = start_with_plan(ServerConfig { max_retries: 2, ..base_cfg() }, &plan);
+    let h = server.handle();
+    let stalled = stall_worker(&h, &plan);
+
+    let clean_joins: Vec<_> = clean_reqs
+        .iter()
+        .map(|&(p, c)| {
+            let hc = h.clone();
+            std::thread::spawn(move || hc.score(p, c))
+        })
+        .collect();
+    let hp = h.clone();
+    let poison_join = std::thread::spawn(move || hp.score(poison_req.0, poison_req.1));
+    wait_for("all four to queue into one batch", || h.queue_depth() == 4);
+    assert!(stalled.join().unwrap().is_ok());
+
+    // the three clean batchmates succeed — and, because sequences are
+    // independent rows of the forward pass, match the single-request
+    // reference scores
+    for (j, want) in clean_joins.into_iter().zip(&want) {
+        let got = j.join().unwrap().expect("clean batchmate must survive the split");
+        assert!(
+            (got - want).abs() < 1e-9,
+            "batchmate score diverged after split: {got} vs {want}"
+        );
+    }
+    // ...and only the poison request fails
+    let r = poison_join.join().unwrap();
+    assert!(matches!(r, Err(ServeError::Engine(_))), "poison must fail alone, got {r:?}");
+
+    let m = server.shutdown();
+    assert!(m.splits >= 2, "batch of 4 must split at least twice, got {}", m.splits);
+    assert_eq!(m.errors, 1, "exactly the poison request fails");
+    assert_eq!(m.requests, 5, "stall + 3 clean + 1 poison");
+}
+
+// ---------------------------------------------------------------------------
+// supervision: panic respawn, then degraded past the restart budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn worker_panic_respawns_and_next_request_succeeds() {
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Panic]));
+    let server = start_with_plan(base_cfg(), &plan);
+    let h = server.handle();
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    // the respawned worker (fresh engine + workspace) serves the next one
+    assert!(h.score("c:abcd|", "abcd.").is_ok());
+    assert!(!server.status().degraded());
+    let m = server.shutdown();
+    assert_eq!(m.restarted, 1);
+    assert_eq!(m.errors, 1);
+}
+
+#[test]
+fn restart_budget_exhaustion_degrades_to_fast_reject() {
+    let cfg = ServerConfig { restart_budget: 1, ..base_cfg() };
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Panic, FaultAction::Panic]));
+    let server = start_with_plan(cfg, &plan);
+    let h = server.handle();
+    let status = server.status();
+    // panic #1 consumes the budget; panic #2 exhausts it
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    wait_for("degraded flag", || status.degraded());
+    // now the server fast-rejects without touching the worker
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::Degraded));
+    let m = server.shutdown();
+    assert_eq!(m.restarted, 1, "only the budgeted respawn happened");
+}
+
+// ---------------------------------------------------------------------------
+// graceful drain + shutdown-never-hangs
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_completes_admitted_work_and_rejects_new() {
+    let plan =
+        Arc::new(FaultPlan::scripted(vec![FaultAction::Slow(Duration::from_millis(300))]));
+    let server = start_with_plan(base_cfg(), &plan);
+    let h = server.handle();
+
+    // stall the worker, then queue two more requests behind the stall
+    let stalled = stall_worker(&h, &plan);
+    let queued: Vec<_> = (0..2)
+        .map(|_| {
+            let hc = h.clone();
+            std::thread::spawn(move || hc.score("r:abc|", "cba."))
+        })
+        .collect();
+    wait_for("both to queue", || h.queue_depth() == 2);
+
+    // shut down while all three are in flight
+    let shutdown = std::thread::spawn(move || server.shutdown());
+
+    // every admitted request completes successfully...
+    assert!(stalled.join().unwrap().is_ok());
+    for j in queued {
+        assert!(j.join().unwrap().is_ok(), "drain must finish admitted work");
+    }
+    let m = shutdown.join().unwrap();
+    assert_eq!(m.requests, 3);
+    assert_eq!(m.errors, 0);
+    // ...and new work is refused through the still-live handle clone
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::ShuttingDown));
+}
+
+#[test]
+fn shutdown_does_not_hang_while_handle_clones_live() {
+    let server = start_clean();
+    let h = server.handle();
+    let h2 = h.clone(); // clones stay alive across the whole shutdown
+    let (done_tx, done_rx) = channel();
+    std::thread::spawn(move || {
+        server.shutdown();
+        done_tx.send(()).unwrap();
+    });
+    done_rx
+        .recv_timeout(Duration::from_secs(10))
+        .expect("shutdown hung with live ServerHandle clones");
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::ShuttingDown));
+    drop(h2);
+}
+
+// ---------------------------------------------------------------------------
+// seeded chaos: whole-workload reproducibility + the ci.sh seed sweep
+// ---------------------------------------------------------------------------
+
+/// One serial chaos workload: `n` requests against a seeded fault plan.
+/// Returns the exact outcome sequence (score bits or error rendering).
+fn chaos_outcomes(fault_seed: u64, n: usize) -> Vec<Result<u64, String>> {
+    let plan =
+        Arc::new(FaultPlan::parse(&format!("seed:{fault_seed},transient:0.35")).unwrap());
+    let cfg = ServerConfig { max_retries: 1, ..base_cfg() };
+    let server = start_with_plan(cfg, &plan);
+    let h = server.handle();
+    let reqs = [("c:abcd|", "abcd."), ("r:abc|", "cba."), ("c:xyxy|", "xyxy.")];
+    let out = (0..n)
+        .map(|i| {
+            let (p, c) = reqs[i % reqs.len()];
+            h.score(p, c).map(f64::to_bits).map_err(|e| format!("{e:?}"))
+        })
+        .collect();
+    server.shutdown();
+    out
+}
+
+#[test]
+fn seeded_chaos_run_is_bit_reproducible() {
+    // a serial client makes the attempt order deterministic, so the seeded
+    // schedule fully determines every outcome — scores AND failures
+    let a = chaos_outcomes(1234, 12);
+    let b = chaos_outcomes(1234, 12);
+    assert_eq!(a, b, "same fault seed must reproduce the exact outcome sequence");
+    assert_eq!(a.len(), 12);
+    // transient:0.35 with a retry must still let most requests through
+    let ok = a.iter().filter(|r| r.is_ok()).count();
+    assert!(ok >= 6, "chaos run lost too many requests: {ok}/12");
+}
+
+/// The ci.sh seed-sweep entry point: honors `MERGEMOE_FAULT` when set
+/// (ci.sh exports a different seed per run), falls back to a fixed chaotic
+/// plan otherwise. Asserts liveness — every request gets a reply and the
+/// server drains cleanly no matter what the schedule injects.
+#[test]
+fn env_fault_workload_survives() {
+    let spec = std::env::var("MERGEMOE_FAULT")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| "seed:7,transient:0.2,panic:0.05,slow:0.05,slow-ms:2".into());
+    let plan = Arc::new(FaultPlan::parse(&spec).unwrap());
+    let cfg = ServerConfig { restart_budget: 64, ..base_cfg() };
+    let server = start_with_plan(cfg, &plan);
+    let h = server.handle();
+    let n_clients = 3;
+    let per = 8;
+    let joins: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let hc = h.clone();
+            std::thread::spawn(move || {
+                let mut replied = 0;
+                for i in 0..per {
+                    let (p, comp) =
+                        if (c + i) % 2 == 0 { ("c:abcd|", "abcd.") } else { ("r:abc|", "cba.") };
+                    // any *typed* outcome counts as liveness; what must
+                    // never happen is a hang or a dropped reply
+                    match hc.score(p, comp) {
+                        Ok(s) => assert!(s.is_finite()),
+                        Err(e) => {
+                            let _ = e.to_string();
+                        }
+                    }
+                    replied += 1;
+                }
+                replied
+            })
+        })
+        .collect();
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, n_clients * per, "every request must get a reply");
+    let m = server.shutdown();
+    assert_eq!(
+        m.requests + m.shed,
+        (n_clients * per) as u64,
+        "admitted + shed must account for every submission"
+    );
+}

@@ -158,11 +158,13 @@ fn server_on_pjrt_answers_concurrent_clients() {
         max_batch: 8,
         max_wait: std::time::Duration::from_millis(5),
         seq_len: 64,
+        ..ServerConfig::default()
     };
     let dir2 = dir.clone();
     let server = ScoringServer::start(model, cfg, move || {
         PjrtEngine::new(Manifest::load(&dir2)?)
-    });
+    })
+    .expect("server start");
     let h = server.handle();
     let mut joins = Vec::new();
     for i in 0..6 {
