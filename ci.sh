@@ -17,15 +17,28 @@ cargo build --release
 echo "==> cargo test -q"
 cargo test -q
 
-# Fault-injection sweep: rerun ONLY the fault-injection suite under a few
-# seeded chaos plans. Scoped to that one test binary on purpose — the rest
-# of the suite reads MERGEMOE_FAULT through the default FromEnv setting
-# and is meant to run fault-free.
+# Fault-injection sweep: rerun ONLY the chaos suites under a few seeded
+# plans. Scoped to those test binaries on purpose — the rest of the suite
+# reads MERGEMOE_FAULT through the default FromEnv setting and is meant to
+# run fault-free. The registry suite additionally gets an io-fail crossing
+# (varied per seed) so the crash-safety gates fire at different points.
 for seed in 11 223 4099; do
     echo "==> fault-injection suite under MERGEMOE_FAULT seed:$seed"
     MERGEMOE_FAULT="seed:$seed,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
         cargo test -q --test fault_injection
+    echo "==> registry chaos suite under MERGEMOE_FAULT seed:$seed"
+    MERGEMOE_FAULT="seed:$seed,transient:0.2,slow:0.05,slow-ms:2,io-fail:$((seed % 7))" \
+        cargo test -q --test registry
 done
+
+# Registry CLI smoke: add a synthetic variant to a scratch registry, list
+# it, and verify its hashes end-to-end through the real binary.
+echo "==> mergemoe registry smoke (add/ls/verify)"
+REG_DIR=target/ci-registry
+rm -rf "$REG_DIR"
+./target/release/mergemoe registry add --registry "$REG_DIR" --model beta --name ci-smoke
+./target/release/mergemoe registry ls --registry "$REG_DIR" | grep -q "ci-smoke@v1"
+./target/release/mergemoe registry verify --registry "$REG_DIR"
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     echo "==> cargo fmt --check"

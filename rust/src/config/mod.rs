@@ -77,6 +77,34 @@ impl ModelConfig {
         3 * self.d_ff * self.d_model
     }
 
+    /// Serialize to the JSON shape [`ModelConfig::from_json`] (and the
+    /// artifact manifest parser) accepts. Registry manifests embed this as
+    /// their `arch` field so a variant is loadable from a bare registry,
+    /// without the artifacts manifest.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("name", Json::str(&self.name)),
+            ("n_layers", Json::num(self.n_layers as f64)),
+            ("d_model", Json::num(self.d_model as f64)),
+            ("n_heads", Json::num(self.n_heads as f64)),
+            ("d_ff", Json::num(self.d_ff as f64)),
+            ("n_experts", Json::num(self.n_experts as f64)),
+            ("top_k", Json::num(self.top_k as f64)),
+            ("shared_expert", Json::Bool(self.shared_expert)),
+            ("n_params", Json::num(self.n_params as f64)),
+            (
+                "merge_targets",
+                Json::arr(self.merge_targets.iter().map(|&m| Json::num(m as f64))),
+            ),
+        ])
+    }
+
+    /// Parse a config serialized by [`ModelConfig::to_json`] (same field
+    /// set the artifact manifest uses for its `models` entries).
+    pub fn from_json(name: &str, j: &Json) -> Result<ModelConfig> {
+        parse_model(name, j)
+    }
+
     /// Total parameter count if `merged_layers` layers are reduced to `m`
     /// experts each — the "Model Size" column of Tables 1–3.
     pub fn params_after_merge(&self, merged_layers: usize, m: usize) -> usize {
@@ -242,6 +270,82 @@ fn parse_artifact(dir: &Path, name: &str, j: &Json) -> Result<ArtifactSpec> {
     })
 }
 
+/// Hot-reloadable scoring-server knobs, as read from a `--config-file`
+/// JSON document. Every field is optional — absent fields keep the
+/// incumbent value when applied — but present fields are validated here
+/// (types, ranges) and unknown keys are a hard parse error: a typo'd knob
+/// in a reload must be rejected, not silently ignored while the operator
+/// believes it took effect. The server-side two-phase apply
+/// (`coordinator::server::AdminHandle::apply_tuning`) adds the checks that
+/// need runtime context (e.g. the structural queue capacity).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ServerTuning {
+    /// Soft admission cap (must stay within the structural channel
+    /// capacity the server booted with).
+    pub queue_cap: Option<usize>,
+    /// Per-request deadline in milliseconds; `0` disables deadlines.
+    pub deadline_ms: Option<u64>,
+    /// Transient-failure retries per (sub-)batch.
+    pub max_retries: Option<u32>,
+    /// Base of the capped exponential retry backoff, in microseconds.
+    pub retry_backoff_us: Option<u64>,
+    /// Fault-injection plan (`MERGEMOE_FAULT` grammar); `""` turns
+    /// injection off.
+    pub fault: Option<String>,
+}
+
+impl ServerTuning {
+    /// Parse and validate a tuning document.
+    pub fn parse(j: &Json) -> Result<ServerTuning> {
+        let obj = j.as_obj().context("server tuning must be a JSON object")?;
+        const KNOWN: [&str; 5] =
+            ["queue_cap", "deadline_ms", "max_retries", "retry_backoff_us", "fault"];
+        for k in obj.keys() {
+            if !KNOWN.contains(&k.as_str()) {
+                bail!("unknown server-tuning key {k:?} (known: {KNOWN:?})");
+            }
+        }
+        let mut t = ServerTuning::default();
+        if let Some(v) = j.opt("queue_cap") {
+            let n = v.as_usize().context("queue_cap")?;
+            if n == 0 {
+                bail!("queue_cap must be >= 1");
+            }
+            t.queue_cap = Some(n);
+        }
+        if let Some(v) = j.opt("deadline_ms") {
+            t.deadline_ms = Some(v.as_usize().context("deadline_ms")? as u64);
+        }
+        if let Some(v) = j.opt("max_retries") {
+            let n = v.as_usize().context("max_retries")?;
+            if n > 16 {
+                bail!("max_retries {n} > 16 (runaway retry budget)");
+            }
+            t.max_retries = Some(n as u32);
+        }
+        if let Some(v) = j.opt("retry_backoff_us") {
+            t.retry_backoff_us = Some(v.as_usize().context("retry_backoff_us")? as u64);
+        }
+        if let Some(v) = j.opt("fault") {
+            let spec = v.as_str().context("fault")?;
+            if !spec.trim().is_empty() {
+                // validate the grammar at parse time — a reload must not
+                // commit a plan the server cannot construct
+                crate::util::fault::FaultPlan::parse(spec)
+                    .with_context(|| format!("fault plan {spec:?}"))?;
+            }
+            t.fault = Some(spec.to_string());
+        }
+        Ok(t)
+    }
+
+    /// Read and validate `path` ([`ServerTuning::parse`] of its contents).
+    pub fn load(path: &Path) -> Result<ServerTuning> {
+        Self::parse(&Json::parse_file(path)?)
+            .with_context(|| format!("validating server tuning {}", path.display()))
+    }
+}
+
 /// Default artifacts directory: `$MERGEMOE_ARTIFACTS` or `./artifacts`.
 pub fn artifacts_dir() -> PathBuf {
     std::env::var("MERGEMOE_ARTIFACTS")
@@ -305,6 +409,46 @@ mod tests {
         );
         std::fs::write(dir.join("manifest.json"), bad).unwrap();
         assert!(Manifest::load(&dir).is_err());
+    }
+
+    #[test]
+    fn model_config_json_roundtrip() {
+        let cfg = ModelConfig {
+            name: "beta".into(), n_layers: 4, d_model: 64, n_heads: 4, d_ff: 64,
+            n_experts: 12, top_k: 2, shared_expert: true,
+            n_params: 123_456, merge_targets: vec![2, 3, 4, 6, 8, 10],
+        };
+        let j = cfg.to_json();
+        let back = ModelConfig::from_json("beta", &Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.n_experts, 12);
+        assert_eq!(back.merge_targets, cfg.merge_targets);
+        assert!(back.shared_expert);
+        assert_eq!(back.n_params, 123_456);
+    }
+
+    #[test]
+    fn server_tuning_validates() {
+        let t = ServerTuning::parse(
+            &Json::parse(r#"{"queue_cap": 8, "deadline_ms": 250, "fault": "seed:1"}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(t.queue_cap, Some(8));
+        assert_eq!(t.deadline_ms, Some(250));
+        assert_eq!(t.fault.as_deref(), Some("seed:1"));
+        assert_eq!(t.max_retries, None);
+        // empty document = keep everything
+        assert_eq!(ServerTuning::parse(&Json::parse("{}").unwrap()).unwrap(),
+                   ServerTuning::default());
+        // rejections: unknown key, zero queue, bad fault grammar, bad types
+        assert!(ServerTuning::parse(&Json::parse(r#"{"queue_capp": 8}"#).unwrap()).is_err());
+        assert!(ServerTuning::parse(&Json::parse(r#"{"queue_cap": 0}"#).unwrap()).is_err());
+        assert!(ServerTuning::parse(&Json::parse(r#"{"fault": "wat:1"}"#).unwrap()).is_err());
+        assert!(ServerTuning::parse(&Json::parse(r#"{"max_retries": 99}"#).unwrap()).is_err());
+        assert!(ServerTuning::parse(&Json::parse(r#"{"deadline_ms": -5}"#).unwrap()).is_err());
+        assert!(ServerTuning::parse(&Json::parse("[1]").unwrap()).is_err());
+        // "" fault = explicit off, valid
+        let off = ServerTuning::parse(&Json::parse(r#"{"fault": ""}"#).unwrap()).unwrap();
+        assert_eq!(off.fault.as_deref(), Some(""));
     }
 
     #[test]

@@ -1,6 +1,6 @@
 //! Dependency-free HTTP/1.1 front end for the scoring server (`mergemoe
 //! serve`): the smallest wire surface that makes the hardened coordinator
-//! drivable by external load generators and health checkers.
+//! drivable by external load generators, health checkers, and operators.
 //!
 //! Routes:
 //!
@@ -8,11 +8,28 @@
 //!   `{"score": <mean completion log-prob>}`. Typed refusals map to
 //!   meaningful statuses: 429 overloaded, 504 deadline exceeded, 503
 //!   degraded/draining, 400 rejected, 500 engine/panic.
-//! * `GET /healthz` — `200 ok` while serving; `503 degraded` once the
-//!   worker's restart budget is exhausted; `503 draining` during shutdown.
+//! * `GET /healthz` — structured JSON: `status` (`ok`/`degraded`/
+//!   `draining`, HTTP 200/503), current `variant` (`name@vN`), queue
+//!   depth, worker restarts used vs budget, the outcome of the last config
+//!   reload, and the degradation reason when degraded.
 //! * `GET /metrics` — Prometheus-style text: request/batch counters, the
-//!   shed/expired/retried/splits/restarted hardening counters, queue depth,
-//!   and p50/p99 latencies.
+//!   shed/expired/retried/splits/restarted hardening counters, the
+//!   reload/swap admin counters, queue depth, and p50/p99 latencies.
+//! * `POST /admin/swap` — body `{"name": "...", "version": N?}` (version
+//!   omitted = latest good): load + verify the variant from the registry
+//!   and atomically hot-swap it in. 404 unknown variant, 422 corrupt
+//!   (quarantined), 409 staging/probe rollback — the incumbent keeps
+//!   serving in every failure case. Requires [`HttpServer::bind_with_admin`]
+//!   with a registry.
+//! * `POST /admin/reload` — re-read the `--config-file` tuning document via
+//!   validate-then-commit; 422 on rejection (incumbent tuning kept, outcome
+//!   visible on `/healthz`).
+//!
+//! Every request head is parsed by [`parse_request`] under hard limits:
+//! bounded header count/line length, `411 Length Required` for a `POST`
+//! without `Content-Length`, `413` for a declared body over [`MAX_BODY`]
+//! (rejected *before* any allocation or read), and allocation only from
+//! validated sizes. Truncated requests are I/O errors, never panics.
 //!
 //! Deliberately minimal: thread-per-connection, one request per connection
 //! (`Connection: close`), a read timeout and a body-size cap so a slow or
@@ -24,19 +41,38 @@
 
 use std::io::{BufRead, BufReader, Read, Write};
 use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::path::PathBuf;
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
-use anyhow::{Context, Result};
+use anyhow::{bail, Context, Result};
 
-use super::server::{ServeError, ServerHandle, ServerStatus};
+use super::registry::{Registry, RegistryError};
+use super::server::{AdminHandle, ServeError, ServerHandle, ServerStatus};
 use crate::util::json::Json;
 
-/// Largest accepted `POST /score` body.
+/// Largest accepted request body.
 const MAX_BODY: usize = 64 * 1024;
+/// Longest accepted header line (request line included).
+const MAX_HEADER_LINE: usize = 8 * 1024;
+/// Most header lines read before the head is rejected.
+const MAX_HEADERS: usize = 128;
 /// Per-connection read timeout: a stalled client is dropped, not waited on.
 const READ_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// Admin wiring for the front end: the server's [`AdminHandle`] plus the
+/// optional variant registry (`POST /admin/swap`) and tuning config file
+/// (`POST /admin/reload`).
+pub struct AdminState {
+    /// Hot-swap / hot-reload handle of the scoring server being fronted.
+    pub admin: AdminHandle,
+    /// Variant source for `POST /admin/swap`; `None` disables the route.
+    pub registry: Option<Arc<Registry>>,
+    /// Tuning document re-read by `POST /admin/reload`; `None` disables
+    /// the route.
+    pub config_file: Option<PathBuf>,
+}
 
 /// The listening front end. Dropping it (or calling [`HttpServer::stop`])
 /// closes the accept loop; the scoring server itself is shut down
@@ -50,15 +86,36 @@ pub struct HttpServer {
 impl HttpServer {
     /// Bind `addr` (e.g. `"127.0.0.1:8080"`, port 0 for ephemeral) and
     /// serve requests against `handle`, reporting health/metrics from
-    /// `status`.
+    /// `status`. Admin routes answer 409 (not wired) — use
+    /// [`HttpServer::bind_with_admin`] to enable them.
     pub fn bind(addr: &str, handle: ServerHandle, status: ServerStatus) -> Result<HttpServer> {
+        Self::bind_inner(addr, handle, status, None)
+    }
+
+    /// [`HttpServer::bind`] with the admin surface (`/admin/swap`,
+    /// `/admin/reload`) wired up.
+    pub fn bind_with_admin(
+        addr: &str,
+        handle: ServerHandle,
+        status: ServerStatus,
+        admin: AdminState,
+    ) -> Result<HttpServer> {
+        Self::bind_inner(addr, handle, status, Some(Arc::new(admin)))
+    }
+
+    fn bind_inner(
+        addr: &str,
+        handle: ServerHandle,
+        status: ServerStatus,
+        admin: Option<Arc<AdminState>>,
+    ) -> Result<HttpServer> {
         let listener =
             TcpListener::bind(addr).with_context(|| format!("binding HTTP listener on {addr}"))?;
         let addr = listener.local_addr().context("resolving bound address")?;
         let stop = Arc::new(AtomicBool::new(false));
         let stop2 = stop.clone();
         let join = std::thread::spawn(move || {
-            accept_loop(listener, handle, status, stop2);
+            accept_loop(listener, handle, status, admin, stop2);
         });
         crate::info!("http front end listening on {addr}");
         Ok(HttpServer { addr, stop, join: Some(join) })
@@ -89,6 +146,7 @@ fn accept_loop(
     listener: TcpListener,
     handle: ServerHandle,
     status: ServerStatus,
+    admin: Option<Arc<AdminState>>,
     stop: Arc<AtomicBool>,
 ) {
     for conn in listener.incoming() {
@@ -99,8 +157,9 @@ fn accept_loop(
             Ok(stream) => {
                 let handle = handle.clone();
                 let status = status.clone();
+                let admin = admin.clone();
                 std::thread::spawn(move || {
-                    if let Err(e) = serve_conn(stream, &handle, &status) {
+                    if let Err(e) = serve_conn(stream, &handle, &status, admin.as_deref()) {
                         crate::debuglog!("http connection error: {e:#}");
                     }
                 });
@@ -110,51 +169,104 @@ fn accept_loop(
     }
 }
 
-/// Handle exactly one request on `stream`, then close.
-fn serve_conn(stream: TcpStream, handle: &ServerHandle, status: &ServerStatus) -> Result<()> {
-    stream.set_read_timeout(Some(READ_TIMEOUT)).context("set read timeout")?;
-    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+/// One parsed request, or a typed early rejection the caller answers with.
+enum Parsed {
+    /// A complete, within-limits request (body empty for bodiless methods).
+    Request {
+        method: String,
+        path: String,
+        body: Vec<u8>,
+    },
+    /// Malformed or over-limit head: answer `code`/`why` and close.
+    Reject { code: u16, why: &'static str },
+}
+
+/// Read one request head (+ body) from `reader` under hard limits.
+///
+/// Protocol errors a client can fix get a typed [`Parsed::Reject`] (400
+/// malformed line or `Content-Length`, 411 `POST` without a length, 413
+/// declared body over [`MAX_BODY`] — checked *before* any body allocation).
+/// Truncation — EOF mid-head or mid-body — is an `Err`: there is nobody to
+/// answer. Body buffers are allocated only from a validated size, and
+/// nothing past the declared body is consumed, so pipelined requests stay
+/// intact for a subsequent call.
+fn parse_request<R: BufRead>(reader: &mut R) -> Result<Parsed> {
     let mut line = String::new();
-    reader.read_line(&mut line).context("read request line")?;
+    let n = reader.read_line(&mut line).context("read request line")?;
+    if n == 0 {
+        bail!("connection closed before a request line");
+    }
+    if line.len() > MAX_HEADER_LINE {
+        return Ok(Parsed::Reject { code: 400, why: "request line too long\n" });
+    }
     let mut parts = line.split_whitespace();
     let (method, path) = match (parts.next(), parts.next()) {
         (Some(m), Some(p)) => (m.to_string(), p.to_string()),
-        _ => return respond(stream, 400, "text/plain", "malformed request line\n"),
+        _ => return Ok(Parsed::Reject { code: 400, why: "malformed request line\n" }),
     };
-    // headers: we only need Content-Length
-    let mut content_length = 0usize;
-    loop {
+    let mut content_length: Option<usize> = None;
+    for _ in 0..MAX_HEADERS {
         let mut h = String::new();
-        reader.read_line(&mut h).context("read header")?;
+        let n = reader.read_line(&mut h).context("read header")?;
+        if n == 0 {
+            bail!("connection closed mid-headers");
+        }
+        if h.len() > MAX_HEADER_LINE {
+            return Ok(Parsed::Reject { code: 400, why: "header line too long\n" });
+        }
         let h = h.trim();
         if h.is_empty() {
-            break;
+            let body = match (method.as_str(), content_length) {
+                ("POST", None) => {
+                    return Ok(Parsed::Reject { code: 411, why: "Content-Length required\n" })
+                }
+                ("POST", Some(n)) if n > MAX_BODY => {
+                    return Ok(Parsed::Reject { code: 413, why: "body too large\n" })
+                }
+                ("POST", Some(n)) => {
+                    // n <= MAX_BODY just validated: bounded allocation
+                    let mut body = vec![0u8; n];
+                    reader.read_exact(&mut body).context("read body")?;
+                    body
+                }
+                _ => Vec::new(),
+            };
+            return Ok(Parsed::Request { method, path, body });
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
-            content_length = v.trim().parse().unwrap_or(0);
+            match v.trim().parse::<usize>() {
+                Ok(n) => content_length = Some(n),
+                Err(_) => {
+                    return Ok(Parsed::Reject { code: 400, why: "bad Content-Length\n" })
+                }
+            }
         }
     }
-    match (method.as_str(), path.as_str()) {
-        ("POST", "/score") => {
-            if content_length > MAX_BODY {
-                return respond(stream, 413, "text/plain", "body too large\n");
+    Ok(Parsed::Reject { code: 400, why: "too many headers\n" })
+}
+
+/// Handle exactly one request on `stream`, then close.
+fn serve_conn(
+    stream: TcpStream,
+    handle: &ServerHandle,
+    status: &ServerStatus,
+    admin: Option<&AdminState>,
+) -> Result<()> {
+    stream.set_read_timeout(Some(READ_TIMEOUT)).context("set read timeout")?;
+    let mut reader = BufReader::new(stream.try_clone().context("clone stream")?);
+    match parse_request(&mut reader)? {
+        Parsed::Reject { code, why } => respond(stream, code, "text/plain", why),
+        Parsed::Request { method, path, body } => match (method.as_str(), path.as_str()) {
+            ("POST", "/score") => handle_score(stream, handle, &body),
+            ("POST", "/admin/swap") => handle_swap(stream, admin, &body),
+            ("POST", "/admin/reload") => handle_reload(stream, admin),
+            ("GET", "/healthz") => {
+                let (code, body) = render_health(status);
+                respond(stream, code, "application/json", &body)
             }
-            let mut body = vec![0u8; content_length];
-            reader.read_exact(&mut body).context("read body")?;
-            handle_score(stream, handle, &body)
-        }
-        ("GET", "/healthz") => {
-            let (code, msg) = if status.degraded() {
-                (503, "degraded\n")
-            } else if status.draining() {
-                (503, "draining\n")
-            } else {
-                (200, "ok\n")
-            };
-            respond(stream, code, "text/plain", msg)
-        }
-        ("GET", "/metrics") => respond(stream, 200, "text/plain", &render_metrics(status)),
-        _ => respond(stream, 404, "text/plain", "not found\n"),
+            ("GET", "/metrics") => respond(stream, 200, "text/plain", &render_metrics(status)),
+            _ => respond(stream, 404, "text/plain", "not found\n"),
+        },
     }
 }
 
@@ -169,10 +281,7 @@ fn handle_score(stream: TcpStream, handle: &ServerHandle, body: &[u8]) -> Result
         });
     let (prompt, completion) = match parsed {
         Ok(pc) => pc,
-        Err(e) => {
-            let msg = Json::obj(vec![("error", Json::Str(format!("bad request: {e:#}")))]);
-            return respond(stream, 400, "application/json", &msg.to_string());
-        }
+        Err(e) => return respond_json_error(stream, 400, &format!("bad request: {e:#}")),
     };
     match handle.score(&prompt, &completion) {
         Ok(score) => {
@@ -181,9 +290,75 @@ fn handle_score(stream: TcpStream, handle: &ServerHandle, body: &[u8]) -> Result
         }
         Err(e) => {
             let code = status_of(&e);
-            let msg = Json::obj(vec![("error", Json::Str(e.to_string()))]);
-            respond(stream, code, "application/json", &msg.to_string())
+            respond_json_error(stream, code, &e.to_string())
         }
+    }
+}
+
+/// `POST /admin/swap`: load `{"name", "version"?}` from the registry
+/// (latest good when no version given) and hot-swap it in.
+fn handle_swap(stream: TcpStream, admin: Option<&AdminState>, body: &[u8]) -> Result<()> {
+    let Some(a) = admin else {
+        return respond(stream, 409, "text/plain", "admin interface not configured\n");
+    };
+    let Some(reg) = &a.registry else {
+        return respond(stream, 409, "text/plain", "no registry configured (--registry)\n");
+    };
+    let parsed = std::str::from_utf8(body)
+        .map_err(anyhow::Error::from)
+        .and_then(Json::parse)
+        .and_then(|j| {
+            let name = j.get("name")?.as_str()?.to_string();
+            let version = match j.opt("version") {
+                Some(v) => Some(v.as_usize()? as u64),
+                None => None,
+            };
+            Ok((name, version))
+        });
+    let (name, version) = match parsed {
+        Ok(x) => x,
+        Err(e) => return respond_json_error(stream, 400, &format!("bad request: {e:#}")),
+    };
+    let loaded = match version {
+        Some(v) => reg.load(&name, v),
+        None => reg.load_latest_good(&name),
+    };
+    match loaded {
+        Ok((model, meta)) => match a.admin.swap_in(model, &meta.label()) {
+            Ok(()) => {
+                let msg = Json::obj(vec![("variant", Json::str(&meta.label()))]);
+                respond(stream, 200, "application/json", &msg.to_string())
+            }
+            // staging/probe failure: rolled back, incumbent still serving
+            Err(e) => respond_json_error(stream, 409, &format!("{e:#}")),
+        },
+        Err(e) => {
+            let code = match e.downcast_ref::<RegistryError>() {
+                Some(RegistryError::NotFound { .. }) => 404,
+                Some(RegistryError::Corrupt { .. }) => 422,
+                Some(RegistryError::BadName { .. }) => 400,
+                None => 500,
+            };
+            respond_json_error(stream, code, &format!("{e:#}"))
+        }
+    }
+}
+
+/// `POST /admin/reload`: re-read the `--config-file` tuning document.
+fn handle_reload(stream: TcpStream, admin: Option<&AdminState>) -> Result<()> {
+    let Some(a) = admin else {
+        return respond(stream, 409, "text/plain", "admin interface not configured\n");
+    };
+    let Some(path) = &a.config_file else {
+        return respond(stream, 409, "text/plain", "no config file to reload (--config-file)\n");
+    };
+    match a.admin.reload_from(path) {
+        Ok(()) => {
+            let msg = Json::obj(vec![("reload", Json::str("ok"))]);
+            respond(stream, 200, "application/json", &msg.to_string())
+        }
+        // validation rejected the document; incumbent tuning kept
+        Err(e) => respond_json_error(stream, 422, &format!("{e:#}")),
     }
 }
 
@@ -196,6 +371,31 @@ fn status_of(e: &ServeError) -> u16 {
         ServeError::Rejected(_) => 400,
         ServeError::WorkerPanicked | ServeError::Engine(_) => 500,
     }
+}
+
+/// The `/healthz` document: overall status plus the operational facts an
+/// operator triages with — current variant, restart budget consumption,
+/// and the outcome of the last config reload.
+fn render_health(status: &ServerStatus) -> (u16, String) {
+    let (code, state) = if status.degraded() {
+        (503, "degraded")
+    } else if status.draining() {
+        (503, "draining")
+    } else {
+        (200, "ok")
+    };
+    let mut fields = vec![
+        ("status", Json::str(state)),
+        ("variant", Json::str(&status.variant())),
+        ("queue_depth", Json::num(status.queue_depth() as f64)),
+        ("restarts_used", Json::num(status.restarts_used() as f64)),
+        ("restart_budget", Json::num(status.restart_budget() as f64)),
+        ("last_reload", Json::str(&status.last_reload())),
+    ];
+    if let Some(why) = status.degraded_reason() {
+        fields.push(("degraded_reason", Json::str(&why)));
+    }
+    (code, Json::obj(fields).to_string())
 }
 
 /// Prometheus-style exposition of the serving metrics.
@@ -212,6 +412,10 @@ fn render_metrics(status: &ServerStatus) -> String {
     gauge("retried_total", m.retried as f64);
     gauge("batch_splits_total", m.splits as f64);
     gauge("worker_restarts_total", m.restarted as f64);
+    gauge("config_reloads_total", m.reloads as f64);
+    gauge("config_reload_failures_total", m.reload_failures as f64);
+    gauge("variant_swaps_total", m.swaps as f64);
+    gauge("variant_swap_rollbacks_total", m.swap_rollbacks as f64);
     gauge("batches_total", m.batches as f64);
     gauge("batched_sequences_total", m.batched_sequences as f64);
     gauge("mean_batch_size", m.mean_batch_size());
@@ -233,13 +437,21 @@ fn reason(code: u16) -> &'static str {
         200 => "OK",
         400 => "Bad Request",
         404 => "Not Found",
+        409 => "Conflict",
+        411 => "Length Required",
         413 => "Payload Too Large",
+        422 => "Unprocessable Entity",
         429 => "Too Many Requests",
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
         _ => "",
     }
+}
+
+fn respond_json_error(stream: TcpStream, code: u16, msg: &str) -> Result<()> {
+    let body = Json::obj(vec![("error", Json::str(msg))]).to_string();
+    respond(stream, code, "application/json", &body)
 }
 
 fn respond(mut stream: TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
@@ -257,6 +469,7 @@ fn respond(mut stream: TcpStream, code: u16, ctype: &str, body: &str) -> Result<
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::coordinator::registry::VariantSpec;
     use crate::coordinator::server::{FaultSetting, ScoringServer, ServerConfig};
     use crate::model::testutil::tiny_model;
     use crate::runtime::NativeEngine;
@@ -279,20 +492,87 @@ mod tests {
         request(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
     }
 
-    fn post_score(addr: SocketAddr, body: &str) -> (u16, String) {
+    fn post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
         request(
             addr,
             &format!(
-                "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
                 body.len()
             ),
         )
+    }
+
+    fn post_score(addr: SocketAddr, body: &str) -> (u16, String) {
+        post(addr, "/score", body)
     }
 
     fn test_server() -> ScoringServer {
         let model = tiny_model(4, 2, false, 300);
         let cfg = ServerConfig { fault: FaultSetting::Off, ..ServerConfig::default() };
         ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap()
+    }
+
+    fn reject_code(p: Parsed) -> u16 {
+        match p {
+            Parsed::Reject { code, .. } => code,
+            Parsed::Request { method, path, .. } => {
+                panic!("expected a rejection, parsed {method} {path}")
+            }
+        }
+    }
+
+    #[test]
+    fn parser_rejects_truncated_and_unsized_requests() {
+        // truncated mid-headers / empty stream: I/O error, never a panic
+        let mut r = BufReader::new(&b"POST /score HTTP/1.1\r\nContent-Le"[..]);
+        assert!(parse_request(&mut r).is_err());
+        let mut r = BufReader::new(&b""[..]);
+        assert!(parse_request(&mut r).is_err());
+        // truncated body: Content-Length promises more than arrives
+        let mut r =
+            BufReader::new(&b"POST /score HTTP/1.1\r\nContent-Length: 10\r\n\r\nabc"[..]);
+        assert!(parse_request(&mut r).is_err());
+        // POST without Content-Length
+        let mut r = BufReader::new(&b"POST /score HTTP/1.1\r\nHost: x\r\n\r\n"[..]);
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 411);
+        // declared body over the cap: rejected before any allocation
+        let huge = format!(
+            "POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n",
+            MAX_BODY + 1
+        );
+        let mut r = BufReader::new(huge.as_bytes());
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 413);
+        // unparsable Content-Length
+        let mut r =
+            BufReader::new(&b"POST /s HTTP/1.1\r\nContent-Length: banana\r\n\r\n"[..]);
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 400);
+        // garbage request line
+        let mut r = BufReader::new(&b"\r\n\r\n"[..]);
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 400);
+    }
+
+    #[test]
+    fn parser_handles_pipelined_requests_without_overreading() {
+        let data =
+            b"POST /score HTTP/1.1\r\nContent-Length: 2\r\n\r\nhiGET /healthz HTTP/1.1\r\n\r\n";
+        let mut r = BufReader::new(&data[..]);
+        match parse_request(&mut r).unwrap() {
+            Parsed::Request { method, path, body } => {
+                assert_eq!((method.as_str(), path.as_str()), ("POST", "/score"));
+                assert_eq!(body, b"hi");
+            }
+            Parsed::Reject { code, why } => panic!("rejected {code}: {why}"),
+        }
+        // the second pipelined request is fully intact
+        match parse_request(&mut r).unwrap() {
+            Parsed::Request { method, path, body } => {
+                assert_eq!((method.as_str(), path.as_str()), ("GET", "/healthz"));
+                assert!(body.is_empty());
+            }
+            Parsed::Reject { code, why } => panic!("rejected {code}: {why}"),
+        }
+        // then a clean end-of-stream
+        assert!(parse_request(&mut r).is_err());
     }
 
     #[test]
@@ -304,7 +584,13 @@ mod tests {
 
         let (code, body) = get(addr, "/healthz");
         assert_eq!(code, 200);
-        assert_eq!(body, "ok\n");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+        assert_eq!(j.get("variant").unwrap().as_str().unwrap(), "tiny@local");
+        assert_eq!(j.get("last_reload").unwrap().as_str().unwrap(), "never");
+        assert_eq!(j.get("restarts_used").unwrap().as_usize().unwrap(), 0);
+        assert!(j.get("restart_budget").unwrap().as_usize().unwrap() >= 1);
+        assert!(j.opt("degraded_reason").is_none(), "healthy server has no reason");
 
         let (code, body) =
             post_score(addr, r#"{"prompt": "c:abcd|", "completion": "abcd."}"#);
@@ -317,6 +603,8 @@ mod tests {
         assert!(body.contains("mergemoe_requests_total 1"));
         assert!(body.contains("mergemoe_shed_total 0"));
         assert!(body.contains("mergemoe_queue_depth 0"));
+        assert!(body.contains("mergemoe_variant_swaps_total 0"));
+        assert!(body.contains("mergemoe_config_reloads_total 0"));
 
         http.stop();
         server.shutdown();
@@ -339,6 +627,19 @@ mod tests {
         assert_eq!(code, 400, "oversized request must map to 400: {body}");
         let (code, _) = get(addr, "/nope");
         assert_eq!(code, 404);
+        // wire-level head protections
+        let (code, _) = request(addr, "POST /score HTTP/1.1\r\nHost: x\r\n\r\n");
+        assert_eq!(code, 411, "POST without Content-Length");
+        let (code, _) = request(
+            addr,
+            &format!("POST /score HTTP/1.1\r\nContent-Length: {}\r\n\r\n", MAX_BODY + 1),
+        );
+        assert_eq!(code, 413, "oversized declared body");
+        // admin routes answer 409 when not wired up
+        let (code, _) = post(addr, "/admin/swap", r#"{"name": "x"}"#);
+        assert_eq!(code, 409);
+        let (code, _) = post(addr, "/admin/reload", "");
+        assert_eq!(code, 409);
 
         http.stop();
         server.shutdown();
@@ -355,11 +656,76 @@ mod tests {
         assert!(status.draining());
         let (code, body) = get(addr, "/healthz");
         assert_eq!(code, 503);
-        assert_eq!(body, "draining\n");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "draining");
         // scoring through the front end now gets the typed 503
         let (code, _) = post_score(addr, r#"{"prompt": "c:ab|", "completion": "ab."}"#);
         assert_eq!(code, 503);
         http.stop();
+    }
+
+    #[test]
+    fn admin_endpoints_swap_and_reload_over_http() {
+        let dir = std::env::temp_dir()
+            .join(format!("mergemoe_http_admin_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let reg = Registry::open(&dir.join("registry")).unwrap();
+        let spec = VariantSpec {
+            method: "mergemoe".into(),
+            ratio: 1.0,
+            calib_source: "mixture".into(),
+        };
+        reg.add("tiny-swap", &tiny_model(4, 2, false, 301), &spec).unwrap();
+        let cfg_path = dir.join("tuning.json");
+        std::fs::write(&cfg_path, r#"{"queue_cap": 4}"#).unwrap();
+
+        let server = test_server();
+        let admin = AdminState {
+            admin: server.admin(),
+            registry: Some(Arc::new(reg)),
+            config_file: Some(cfg_path.clone()),
+        };
+        let mut http = HttpServer::bind_with_admin(
+            "127.0.0.1:0",
+            server.handle(),
+            server.status(),
+            admin,
+        )
+        .unwrap();
+        let addr = http.addr();
+
+        // swap to the registered variant; /healthz reports the new label
+        let (code, body) = post(addr, "/admin/swap", r#"{"name": "tiny-swap"}"#);
+        assert_eq!(code, 200, "{body}");
+        let (_, body) = get(addr, "/healthz");
+        let j = Json::parse(&body).unwrap();
+        assert_eq!(j.get("variant").unwrap().as_str().unwrap(), "tiny-swap@v1");
+        // unknown variant → 404, serving untouched
+        let (code, _) = post(addr, "/admin/swap", r#"{"name": "ghost"}"#);
+        assert_eq!(code, 404);
+        // valid reload commits; invalid reload is rejected and reported
+        let (code, body) = post(addr, "/admin/reload", "");
+        assert_eq!(code, 200, "{body}");
+        std::fs::write(&cfg_path, r#"{"queue_cap": 0}"#).unwrap();
+        let (code, _) = post(addr, "/admin/reload", "");
+        assert_eq!(code, 422);
+        let (_, body) = get(addr, "/healthz");
+        let j = Json::parse(&body).unwrap();
+        assert!(
+            j.get("last_reload").unwrap().as_str().unwrap().starts_with("rejected:"),
+            "{body}"
+        );
+        // scoring kept working across all of it
+        let (code, _) = post_score(addr, r#"{"prompt": "c:ab|", "completion": "ab."}"#);
+        assert_eq!(code, 200);
+
+        http.stop();
+        let m = server.shutdown();
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.reloads, 1);
+        assert_eq!(m.reload_failures, 1);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

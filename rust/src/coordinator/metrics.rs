@@ -100,6 +100,15 @@ pub struct ServerMetrics {
     pub splits: u64,
     /// Worker respawns after a caught panic.
     pub restarted: u64,
+    /// Config hot-reloads committed (validate-then-commit succeeded).
+    pub reloads: u64,
+    /// Config hot-reloads rejected at validation (incumbent kept).
+    pub reload_failures: u64,
+    /// Variant hot-swaps committed.
+    pub swaps: u64,
+    /// Variant hot-swaps rolled back (staging/probe failed; incumbent
+    /// untouched).
+    pub swap_rollbacks: u64,
 }
 
 impl ServerMetrics {
@@ -162,6 +171,13 @@ impl ServerMetrics {
             )
         } else {
             String::new()
+        } + &if self.reloads + self.reload_failures + self.swaps + self.swap_rollbacks > 0 {
+            format!(
+                " admin: reloads={} reload_failures={} swaps={} swap_rollbacks={}",
+                self.reloads, self.reload_failures, self.swaps, self.swap_rollbacks,
+            )
+        } else {
+            String::new()
         }
     }
 }
@@ -216,6 +232,18 @@ mod tests {
         m.shed = 1;
         m.expired = 1;
         assert!(m.report().contains("faults: errors=2 shed=1 expired=1"));
+    }
+
+    #[test]
+    fn admin_counters_appear_in_report_only_when_nonzero() {
+        let mut m = ServerMetrics::default();
+        m.requests = 10;
+        assert!(!m.report().contains("admin:"));
+        m.reloads = 2;
+        m.swap_rollbacks = 1;
+        assert!(m
+            .report()
+            .contains("admin: reloads=2 reload_failures=0 swaps=0 swap_rollbacks=1"));
     }
 
     #[test]

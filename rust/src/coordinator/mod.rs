@@ -1,18 +1,22 @@
-//! Layer-3 coordination: the compression pipeline (offline path) and the
-//! batched scoring server (request path), with metrics.
+//! Layer-3 coordination: the compression pipeline (offline path), the
+//! batched scoring server (request path) with metrics, and the crash-safe
+//! variant registry feeding hot-swaps.
 
 pub mod batcher;
 pub mod http;
 pub mod metrics;
 pub mod pipeline;
+pub mod registry;
 pub mod server;
 
 pub use crate::calib::CalibSource;
-pub use http::HttpServer;
+pub use http::{AdminState, HttpServer};
 pub use pipeline::{
     capture_calibration, capture_calibration_source, compress, compress_with_calib,
     CompressReport, CompressSpec,
 };
+pub use registry::{Registry, RegistryError, VariantMeta, VariantSpec};
 pub use server::{
-    FaultSetting, ScoringServer, ServeError, ServerConfig, ServerHandle, ServerStatus,
+    AdminHandle, FaultSetting, ScoringServer, ServeError, ServerConfig, ServerHandle,
+    ServerStatus,
 };

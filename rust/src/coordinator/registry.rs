@@ -1,0 +1,598 @@
+//! Crash-safe, integrity-verified on-disk registry of compressed variants.
+//!
+//! Every (method, ratio, calib_source) cell the sweep or the compression
+//! pipeline produces is a servable model; the registry is what makes those
+//! variants **durable** (they survive the process), **tamper-evident**
+//! (every blob is SHA-256-pinned by a manifest), and **shareable** (a fleet
+//! loads compressed checkpoints instead of recompressing).
+//!
+//! ## Layout
+//!
+//! ```text
+//! <root>/
+//!   .tmp/                 in-flight stagings (quarantined on open)
+//!   .quarantine/          partial or corrupt entries, kept for forensics
+//!   <name>/
+//!     v1/
+//!       weights.npz       stored-zip of NPY tensors (deterministic bytes)
+//!       manifest.json     name/version/method/ratio/calib_source/arch +
+//!                         sha256 per tensor blob
+//!     v2/ …
+//! ```
+//!
+//! ## Crash safety
+//!
+//! [`Registry::add`] stages the complete entry under `.tmp/` — weights
+//! first, manifest **last**, both fsynced — then publishes with one atomic
+//! directory rename. A crash at any point leaves either nothing or a
+//! partial staging in `.tmp/`, never a partially-visible published entry;
+//! [`Registry::open`] sweeps `.tmp/` leftovers (and published dirs missing
+//! their manifest) into `.quarantine/` — detected and preserved, never
+//! silently deleted. Each step crosses a named
+//! [`crate::util::fault::io_gate`], so the chaos suite (`tests/registry.rs`)
+//! can kill the writer at *every* fsync/rename point and assert the
+//! registry always reopens clean with the prior version intact.
+//!
+//! ## Integrity
+//!
+//! [`Registry::load`] re-hashes every blob against the manifest (on top of
+//! the zip layer's CRC-32). Any mismatch — or any parse failure — is a
+//! typed [`RegistryError::Corrupt`]: the entry is quarantined and the
+//! caller can fall back to [`Registry::load_latest_good`], which walks
+//! versions newest-first. Serving keeps running on the incumbent variant
+//! throughout (the hot-swap path in `coordinator::server` only commits a
+//! fully verified, probe-scored model).
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{bail, Context, Result};
+
+use crate::config::ModelConfig;
+use crate::io::npz;
+use crate::model::ModelWeights;
+use crate::util::fault::io_gate;
+use crate::util::json::Json;
+
+/// Typed registry failures (wrapped in `anyhow` and recognized by
+/// downcast, like `InjectedFault`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum RegistryError {
+    /// An entry failed integrity verification (hash mismatch, unreadable
+    /// archive, manifest/weights disagreement). The entry has been moved
+    /// to `.quarantine/`.
+    Corrupt {
+        /// Variant name.
+        name: String,
+        /// Version that failed.
+        version: u64,
+        /// What the verifier found.
+        reason: String,
+    },
+    /// No (good) version of the variant exists.
+    NotFound {
+        /// Variant name.
+        name: String,
+    },
+    /// A name that cannot be a registry entry (path separators, leading
+    /// dots, empty).
+    BadName {
+        /// The offending name.
+        name: String,
+    },
+}
+
+impl std::fmt::Display for RegistryError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::Corrupt { name, version, reason } => {
+                write!(f, "registry entry {name}@v{version} is corrupt (quarantined): {reason}")
+            }
+            RegistryError::NotFound { name } => {
+                write!(f, "no good version of {name:?} in the registry")
+            }
+            RegistryError::BadName { name } => {
+                write!(
+                    f,
+                    "invalid registry name {name:?} (want [A-Za-z0-9._-]+, no leading dot)"
+                )
+            }
+        }
+    }
+}
+
+impl std::error::Error for RegistryError {}
+
+/// The manifest-side description of one stored variant (the nanoserde-
+/// style `name/version/arch/sha256` idiom).
+#[derive(Debug, Clone)]
+pub struct VariantMeta {
+    /// Variant name (directory component).
+    pub name: String,
+    /// Monotonic version within the name.
+    pub version: u64,
+    /// Compression method that produced it (e.g. `mergemoe`, `average`).
+    pub method: String,
+    /// Compression ratio (params_after / params_before).
+    pub ratio: f64,
+    /// Calibration source label (Table-4 axis).
+    pub calib_source: String,
+    /// Architecture of the stored model — enough to reload it without the
+    /// artifacts manifest.
+    pub arch: ModelConfig,
+    /// SHA-256 (hex) of every tensor blob, keyed by tensor name.
+    pub blobs: BTreeMap<String, String>,
+}
+
+impl VariantMeta {
+    /// `name@vN`, the label serving surfaces on `/healthz`.
+    pub fn label(&self) -> String {
+        format!("{}@v{}", self.name, self.version)
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("format", Json::str("mergemoe-registry/1")),
+            ("name", Json::str(&self.name)),
+            ("version", Json::num(self.version as f64)),
+            ("method", Json::str(&self.method)),
+            ("ratio", Json::num(self.ratio)),
+            ("calib_source", Json::str(&self.calib_source)),
+            ("arch", self.arch.to_json()),
+            (
+                "blobs",
+                Json::Obj(
+                    self.blobs.iter().map(|(k, v)| (k.clone(), Json::str(v))).collect(),
+                ),
+            ),
+        ])
+    }
+
+    fn from_json(j: &Json) -> Result<VariantMeta> {
+        let format = j.get("format")?.as_str()?;
+        if format != "mergemoe-registry/1" {
+            bail!("unknown manifest format {format:?}");
+        }
+        let name = j.get("name")?.as_str()?.to_string();
+        let arch = ModelConfig::from_json(j.get("arch")?.get("name")?.as_str()?, j.get("arch")?)?;
+        let mut blobs = BTreeMap::new();
+        for (k, v) in j.get("blobs")?.as_obj()? {
+            blobs.insert(k.clone(), v.as_str()?.to_string());
+        }
+        Ok(VariantMeta {
+            name,
+            version: j.get("version")?.as_usize()? as u64,
+            method: j.get("method")?.as_str()?.to_string(),
+            ratio: j.get("ratio")?.as_f64()?,
+            calib_source: j.get("calib_source")?.as_str()?.to_string(),
+            arch,
+            blobs,
+        })
+    }
+}
+
+/// Descriptive fields for [`Registry::add`] (everything the manifest
+/// records beyond what the model itself carries).
+#[derive(Debug, Clone)]
+pub struct VariantSpec {
+    /// Compression method label.
+    pub method: String,
+    /// Compression ratio.
+    pub ratio: f64,
+    /// Calibration source label.
+    pub calib_source: String,
+}
+
+/// One entry of [`Registry::verify`]'s report.
+#[derive(Debug, Clone)]
+pub struct VerifyEntry {
+    /// `name@vN`.
+    pub label: String,
+    /// `None` = verified clean; `Some(reason)` = failed.
+    pub problem: Option<String>,
+}
+
+/// Unique-suffix source for staging directories (several writers — or one
+/// writer retrying after injected crashes — must never collide in `.tmp/`).
+static STAGE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// A versioned on-disk variant registry rooted at one directory.
+#[derive(Debug)]
+pub struct Registry {
+    root: PathBuf,
+}
+
+impl Registry {
+    /// Open (creating if needed) a registry at `root`. Sweeps crash
+    /// leftovers — `.tmp/` stagings and published version dirs with no
+    /// manifest — into `.quarantine/`.
+    pub fn open(root: &Path) -> Result<Registry> {
+        std::fs::create_dir_all(root.join(".tmp"))
+            .with_context(|| format!("creating {}", root.join(".tmp").display()))?;
+        std::fs::create_dir_all(root.join(".quarantine"))
+            .with_context(|| format!("creating {}", root.join(".quarantine").display()))?;
+        let reg = Registry { root: root.to_path_buf() };
+        // a crash mid-add leaves its staging in .tmp — quarantine, never
+        // delete (the operator may want the partial bytes)
+        for entry in std::fs::read_dir(root.join(".tmp"))? {
+            let path = entry?.path();
+            reg.quarantine(&path, "unfinished staging")?;
+        }
+        // a published dir without a manifest cannot happen via the atomic
+        // publish path; treat any found (tampering, partial restore) the
+        // same way
+        for (name, version, dir) in reg.scan()? {
+            if !dir.join("manifest.json").is_file() {
+                reg.quarantine(&dir, &format!("{name}@v{version} has no manifest"))?;
+            }
+        }
+        Ok(reg)
+    }
+
+    /// The registry root directory.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// Persist `model` as the next version of `name`. Crash-safe: stages
+    /// under `.tmp/` (weights, then manifest, both fsynced), then
+    /// publishes with one atomic rename. Returns the recorded manifest.
+    pub fn add(&self, name: &str, model: &ModelWeights, spec: &VariantSpec) -> Result<VariantMeta> {
+        check_name(name)?;
+        let stage = self.root.join(".tmp").join(format!(
+            "{name}-{}-{}",
+            std::process::id(),
+            STAGE_SEQ.fetch_add(1, Ordering::Relaxed)
+        ));
+        std::fs::create_dir_all(&stage)
+            .with_context(|| format!("creating staging dir {}", stage.display()))?;
+
+        // -- stage: weights first (write_npz_with_digests fsyncs) --
+        io_gate("registry.weights.write")?;
+        let arrays = model.to_arrays()?;
+        let blobs = npz::write_npz_with_digests(&stage.join("weights.npz"), &arrays)?;
+        io_gate("registry.weights.synced")?;
+
+        // -- stage: manifest last, so its presence certifies completeness --
+        let version = self.next_version(name)?;
+        let meta = VariantMeta {
+            name: name.to_string(),
+            version,
+            method: spec.method.clone(),
+            ratio: spec.ratio,
+            calib_source: spec.calib_source.clone(),
+            arch: model.cfg.clone(),
+            blobs,
+        };
+        io_gate("registry.manifest.write")?;
+        write_file_synced(&stage.join("manifest.json"), meta.to_json().to_string().as_bytes())?;
+        io_gate("registry.manifest.synced")?;
+
+        // -- publish: one atomic rename --
+        let name_dir = self.root.join(name);
+        std::fs::create_dir_all(&name_dir)
+            .with_context(|| format!("creating {}", name_dir.display()))?;
+        io_gate("registry.publish.rename")?;
+        let dst = name_dir.join(format!("v{version}"));
+        std::fs::rename(&stage, &dst)
+            .with_context(|| format!("publishing {} -> {}", stage.display(), dst.display()))?;
+        // make the publish itself durable (the rename is atomic either
+        // way; the dir fsync pins it across power loss)
+        io_gate("registry.publish.dirsync")?;
+        sync_dir(&name_dir);
+        crate::info!(
+            "registry: published {} (method={}, ratio={:.3}, calib={})",
+            meta.label(),
+            meta.method,
+            meta.ratio,
+            meta.calib_source
+        );
+        Ok(meta)
+    }
+
+    /// Every published version's manifest, newest first within each name
+    /// (best-effort: entries whose manifest will not parse are reported as
+    /// corrupt by [`Registry::verify`], and skipped here).
+    pub fn list(&self) -> Result<Vec<VariantMeta>> {
+        let mut out = Vec::new();
+        for (_, _, dir) in self.scan()? {
+            if let Ok(j) = Json::parse_file(&dir.join("manifest.json")) {
+                if let Ok(meta) = VariantMeta::from_json(&j) {
+                    out.push(meta);
+                }
+            }
+        }
+        out.sort_by(|a, b| a.name.cmp(&b.name).then(b.version.cmp(&a.version)));
+        Ok(out)
+    }
+
+    /// Latest published version number of `name`, if any.
+    pub fn latest(&self, name: &str) -> Result<Option<u64>> {
+        check_name(name)?;
+        Ok(self
+            .scan()?
+            .into_iter()
+            .filter(|(n, _, _)| n == name)
+            .map(|(_, v, _)| v)
+            .max())
+    }
+
+    /// Load and verify one specific version. On any integrity failure the
+    /// entry is quarantined and a typed [`RegistryError::Corrupt`] is
+    /// returned (callers fall back via [`Registry::load_latest_good`]).
+    pub fn load(&self, name: &str, version: u64) -> Result<(ModelWeights, VariantMeta)> {
+        check_name(name)?;
+        let dir = self.root.join(name).join(format!("v{version}"));
+        if !dir.is_dir() {
+            bail!(RegistryError::NotFound { name: name.to_string() });
+        }
+        match self.load_dir(&dir) {
+            Ok(ok) => Ok(ok),
+            Err(reason) => {
+                let reason = format!("{reason:#}");
+                crate::warnlog!("registry: {name}@v{version} corrupt ({reason}); quarantining");
+                self.quarantine(&dir, &reason)?;
+                bail!(RegistryError::Corrupt { name: name.to_string(), version, reason })
+            }
+        }
+    }
+
+    /// Load the newest version of `name` that passes verification,
+    /// quarantining every corrupt newer one along the way. Typed
+    /// [`RegistryError::NotFound`] when nothing loadable remains.
+    pub fn load_latest_good(&self, name: &str) -> Result<(ModelWeights, VariantMeta)> {
+        check_name(name)?;
+        loop {
+            let Some(version) = self.latest(name)? else {
+                bail!(RegistryError::NotFound { name: name.to_string() });
+            };
+            match self.load(name, version) {
+                Ok(ok) => return Ok(ok),
+                Err(e) if e.downcast_ref::<RegistryError>().is_some_and(
+                    |r| matches!(r, RegistryError::Corrupt { .. }),
+                ) =>
+                {
+                    // that version is now quarantined; scan again for the
+                    // next-newest
+                    continue;
+                }
+                Err(e) => return Err(e),
+            }
+        }
+    }
+
+    /// Re-hash every published entry against its manifest. Report-only:
+    /// nothing is quarantined (that is [`Registry::load`]'s job), so an
+    /// operator can inspect a suspect registry without mutating it.
+    pub fn verify(&self) -> Result<Vec<VerifyEntry>> {
+        let mut out = Vec::new();
+        for (name, version, dir) in self.scan()? {
+            let label = format!("{name}@v{version}");
+            let problem = match self.load_dir(&dir) {
+                Ok(_) => None,
+                Err(e) => Some(format!("{e:#}")),
+            };
+            out.push(VerifyEntry { label, problem });
+        }
+        Ok(out)
+    }
+
+    // ------------------------------------------------------------------
+    // internals
+    // ------------------------------------------------------------------
+
+    /// Parse + verify one version dir (no quarantining here).
+    fn load_dir(&self, dir: &Path) -> Result<(ModelWeights, VariantMeta)> {
+        let meta = VariantMeta::from_json(&Json::parse_file(&dir.join("manifest.json"))?)?;
+        let (arrays, digests) = npz::read_npz_with_digests(&dir.join("weights.npz"))?;
+        // exact two-way match: a missing blob and an extra blob are both
+        // manifest/weights disagreements
+        if digests != meta.blobs {
+            let detail = diff_digests(&meta.blobs, &digests);
+            bail!("blob digests disagree with manifest: {detail}");
+        }
+        let mut tensors = BTreeMap::new();
+        for (k, v) in arrays {
+            tensors.insert(k.clone(), v.to_tensor().with_context(|| k)?);
+        }
+        let model = ModelWeights::from_arrays(tensors, &meta.arch)?;
+        Ok((model, meta))
+    }
+
+    /// All published `(name, version, dir)` triples.
+    fn scan(&self) -> Result<Vec<(String, u64, PathBuf)>> {
+        let mut out = Vec::new();
+        for entry in std::fs::read_dir(&self.root)
+            .with_context(|| format!("reading registry root {}", self.root.display()))?
+        {
+            let entry = entry?;
+            let name = entry.file_name().to_string_lossy().into_owned();
+            if name.starts_with('.') || !entry.path().is_dir() {
+                continue;
+            }
+            for ventry in std::fs::read_dir(entry.path())? {
+                let vdir = ventry?.path();
+                let vname = vdir.file_name().unwrap_or_default().to_string_lossy().into_owned();
+                if let Some(v) = vname.strip_prefix('v').and_then(|s| s.parse::<u64>().ok()) {
+                    if vdir.is_dir() {
+                        out.push((name.clone(), v, vdir));
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn next_version(&self, name: &str) -> Result<u64> {
+        Ok(self.latest(name)?.map_or(1, |v| v + 1))
+    }
+
+    /// Move `path` into `.quarantine/` under a unique name. Never deletes.
+    fn quarantine(&self, path: &Path, why: &str) -> Result<()> {
+        let base = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| "entry".into());
+        // parent dir name disambiguates name/vN collisions across variants
+        let parent = path
+            .parent()
+            .and_then(|p| p.file_name())
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_default();
+        let mut n = 0u64;
+        loop {
+            let dst = self.root.join(".quarantine").join(if n == 0 {
+                format!("{parent}-{base}")
+            } else {
+                format!("{parent}-{base}.{n}")
+            });
+            if dst.exists() {
+                n += 1;
+                continue;
+            }
+            std::fs::rename(path, &dst).with_context(|| {
+                format!("quarantining {} -> {}", path.display(), dst.display())
+            })?;
+            crate::warnlog!("registry: quarantined {} ({why})", dst.display());
+            return Ok(());
+        }
+    }
+}
+
+/// Registry names become path components; reject anything else.
+fn check_name(name: &str) -> Result<()> {
+    let ok = !name.is_empty()
+        && !name.starts_with('.')
+        && name.bytes().all(|b| b.is_ascii_alphanumeric() || b == b'.' || b == b'_' || b == b'-');
+    if !ok {
+        bail!(RegistryError::BadName { name: name.to_string() });
+    }
+    Ok(())
+}
+
+/// Human-readable first difference between manifest and on-disk digests.
+fn diff_digests(want: &BTreeMap<String, String>, got: &BTreeMap<String, String>) -> String {
+    for (k, w) in want {
+        match got.get(k) {
+            None => return format!("blob {k:?} missing from weights"),
+            Some(g) if g != w => return format!("blob {k:?} hash mismatch"),
+            _ => {}
+        }
+    }
+    for k in got.keys() {
+        if !want.contains_key(k) {
+            return format!("unexpected blob {k:?} in weights");
+        }
+    }
+    "identical (internal error)".into()
+}
+
+/// Write + fsync a small file (the manifest). The containing directory is
+/// still unpublished staging, so per-file atomicity is not needed — only
+/// durability before the publish rename.
+fn write_file_synced(path: &Path, bytes: &[u8]) -> Result<()> {
+    use std::io::Write;
+    let mut f = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    f.write_all(bytes)?;
+    f.sync_all().with_context(|| format!("fsyncing {}", path.display()))?;
+    Ok(())
+}
+
+/// Best-effort directory fsync (pins a rename across power loss; opening
+/// a directory read-only works on the platforms we serve from, and a
+/// failure here must not fail an already-atomic publish).
+fn sync_dir(dir: &Path) {
+    if let Ok(d) = std::fs::File::open(dir) {
+        let _ = d.sync_all();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    fn tmp_root(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir()
+            .join("mergemoe_registry_unit")
+            .join(format!("{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    fn spec() -> VariantSpec {
+        VariantSpec { method: "mergemoe".into(), ratio: 0.7, calib_source: "mixture".into() }
+    }
+
+    #[test]
+    fn add_load_roundtrip_and_versioning() {
+        let root = tmp_root("rt");
+        let reg = Registry::open(&root).unwrap();
+        let m = tiny_model(4, 2, false, 11);
+        let meta1 = reg.add("tiny", &m, &spec()).unwrap();
+        assert_eq!(meta1.version, 1);
+        let meta2 = reg.add("tiny", &m, &spec()).unwrap();
+        assert_eq!(meta2.version, 2);
+        assert_eq!(reg.latest("tiny").unwrap(), Some(2));
+        let (back, meta) = reg.load("tiny", 1).unwrap();
+        assert_eq!(meta.label(), "tiny@v1");
+        assert_eq!(meta.arch.n_experts, 4);
+        assert_eq!(back.layers[0].moe.experts[0].wg.data(), m.layers[0].moe.experts[0].wg.data());
+        let listed = reg.list().unwrap();
+        assert_eq!(listed.len(), 2);
+        assert_eq!(listed[0].version, 2, "newest first");
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn bad_names_are_typed_errors() {
+        let root = tmp_root("names");
+        let reg = Registry::open(&root).unwrap();
+        let m = tiny_model(4, 2, false, 12);
+        for bad in ["", "..", "a/b", ".hidden", "x y"] {
+            let err = reg.add(bad, &m, &spec()).unwrap_err();
+            assert!(
+                matches!(err.downcast_ref::<RegistryError>(), Some(RegistryError::BadName { .. })),
+                "{bad:?}: {err:#}"
+            );
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn missing_variant_is_notfound() {
+        let root = tmp_root("nf");
+        let reg = Registry::open(&root).unwrap();
+        let err = reg.load_latest_good("ghost").unwrap_err();
+        assert!(matches!(
+            err.downcast_ref::<RegistryError>(),
+            Some(RegistryError::NotFound { .. })
+        ));
+        std::fs::remove_dir_all(&root).ok();
+    }
+
+    #[test]
+    fn merged_variant_roundtrips_through_registry() {
+        use crate::coordinator::pipeline::{compress, CompressSpec};
+        use crate::merge::{Algorithm, NativeGram};
+        let root = tmp_root("merged");
+        let reg = Registry::open(&root).unwrap();
+        let m = tiny_model(8, 2, false, 13);
+        let mut cspec = CompressSpec::new(vec![0, 1], 4, Algorithm::MergeMoe);
+        cspec.n_calib_seqs = 4;
+        let (compressed, report) = compress(&m, &cspec, &mut NativeGram).unwrap();
+        let vspec = VariantSpec {
+            method: "mergemoe".into(),
+            ratio: report.compression_ratio(),
+            calib_source: "mixture".into(),
+        };
+        reg.add("tiny-m4", &compressed, &vspec).unwrap();
+        let (back, meta) = reg.load_latest_good("tiny-m4").unwrap();
+        assert!(meta.ratio < 1.0);
+        assert_eq!(back.layers[0].moe.n_experts(), 4);
+        assert!(back.layers[0].moe.map.is_some(), "routing map survives the registry");
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -32,34 +32,55 @@
 //!   under a drain timeout, and join. Shutdown never depends on clients
 //!   dropping their [`ServerHandle`] clones.
 //!
+//! * **Atomic hot-swap** ([`AdminHandle::swap_in`]) — the serving weights
+//!   live in a mutex-guarded [`VariantSlot`] (an `Arc<ModelWeights>` plus a
+//!   `name@vN` label) mirrored by a generation counter. A swap stages the
+//!   candidate completely *outside* the slot — shape compatibility against
+//!   the incumbent, then a pinned probe request scored under
+//!   `catch_unwind` — and only a fully verified candidate is committed
+//!   (slot write + generation bump under the lock). The worker notices the
+//!   new generation between batches; the batch in flight finishes on the
+//!   old `Arc`, so **zero in-flight requests are dropped or failed by a
+//!   swap**, and a failed stage rolls back with the incumbent untouched
+//!   (`swaps` / `swap_rollbacks` metrics, label visible on `/healthz`).
+//! * **Validated config hot-reload** ([`AdminHandle::apply_tuning`]) —
+//!   queue cap (soft, within the structural channel capacity), deadline,
+//!   retry budget/backoff, and the fault plan re-read from a
+//!   [`crate::config::ServerTuning`] document via validate-then-commit:
+//!   a rejected document changes nothing and is reported on `/healthz`
+//!   (`reloads` / `reload_failures` metrics).
+//!
 //! Every path above is driven deterministically by
 //! [`crate::util::fault::FaultPlan`] (`MERGEMOE_FAULT`), so the robustness
-//! behaviors are reproducible tier-1 tests (`tests/fault_injection.rs`),
-//! not claims. With no plan configured the steady-state loop is the exact
-//! unhardened execution: gather tokens, forward, score, reply — reusing one
-//! [`Workspace`], one logits tensor, one token buffer and one score buffer,
-//! so it runs without touching the allocator once the arena is warm.
-//! Workspaces are per-worker by contract: never shared across threads.
+//! behaviors are reproducible tier-1 tests (`tests/fault_injection.rs`,
+//! `tests/registry.rs`), not claims. With no plan configured the
+//! steady-state loop is the exact unhardened execution: gather tokens,
+//! forward, score, reply — reusing one [`Workspace`], one logits tensor,
+//! one token buffer and one score buffer, so it runs without touching the
+//! allocator once the arena is warm (an `Arc` clone on swap is pointer
+//! bookkeeping, not a weight copy). Workspaces are per-worker by contract:
+//! never shared across threads.
 //!
 //! Engine objects wrap PJRT client state and are not `Send`, so the worker
 //! *constructs* its engine inside the thread from a factory closure (called
 //! again on every respawn); clients hold a cheap cloneable handle.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU8, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, AtomicU8, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc, Mutex};
 use std::time::{Duration, Instant};
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
 use super::batcher::{next_batch, BatchDecision, Ctl, WorkItem};
 use super::metrics::ServerMetrics;
+use crate::config::ServerTuning;
 use crate::eval::tasks;
 use crate::model::native::target_logprobs_into;
 use crate::model::workspace::Workspace;
 use crate::model::ModelWeights;
-use crate::runtime::Engine;
+use crate::runtime::{Engine, NativeEngine};
 use crate::tensor::Tensor;
 use crate::util::fault::{classify, FaultAction, FaultClass, FaultPlan, InjectedFault};
 
@@ -186,6 +207,23 @@ struct Request {
 const STATE_RUNNING: u8 = 0;
 const STATE_DRAINING: u8 = 1;
 
+/// The hot-swappable serving weights: what the worker forwards with, plus
+/// the `name@vN` label `/healthz` reports. Guarded by `Shared::slot`; the
+/// [`Shared::model_gen`] mirror lets the worker detect a swap with one
+/// atomic load per batch instead of taking the lock.
+struct VariantSlot {
+    model: Arc<ModelWeights>,
+    label: String,
+}
+
+/// Worker-side hot-reloadable knobs (the admission-side ones — soft queue
+/// cap, deadline — live directly in atomics on [`Shared`]).
+struct WorkerTuning {
+    max_retries: u32,
+    retry_backoff: Duration,
+    fault: Option<Arc<FaultPlan>>,
+}
+
 /// State shared between handles, the worker, and status observers.
 struct Shared {
     state: AtomicU8,
@@ -198,22 +236,67 @@ struct Shared {
     depth: AtomicIsize,
     drain_deadline: Mutex<Option<Instant>>,
     metrics: Mutex<ServerMetrics>,
+    /// Current serving variant; replaced whole on hot-swap.
+    slot: Mutex<VariantSlot>,
+    /// Bumped (under the `slot` lock) on every committed swap.
+    model_gen: AtomicU64,
+    /// Soft admission cap — hot-reloadable, never above the structural
+    /// channel capacity (validated in [`AdminHandle::apply_tuning`]).
+    soft_cap: AtomicUsize,
+    /// Per-request deadline in µs; 0 = disabled. Hot-reloadable.
+    deadline_us: AtomicU64,
+    /// Hot-reloadable worker knobs; mirrored by `tuning_gen`.
+    wtuning: Mutex<WorkerTuning>,
+    /// Bumped on every committed tuning reload.
+    tuning_gen: AtomicU64,
+    /// Outcome of the most recent reload attempt (`/healthz`).
+    last_reload: Mutex<String>,
+    /// Why the server degraded (empty while healthy).
+    degraded_reason: Mutex<String>,
+    /// Restart budget the worker booted with (for `/healthz` accounting).
+    restart_budget: u32,
 }
 
 impl Shared {
-    fn depth(&self) -> usize {
-        self.depth.load(Ordering::Relaxed).max(0) as usize
-    }
-}
-
-impl Default for Shared {
-    fn default() -> Self {
+    fn new(
+        cfg: &ServerConfig,
+        model: Arc<ModelWeights>,
+        label: String,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> Shared {
         Shared {
             state: AtomicU8::new(STATE_RUNNING),
             degraded: AtomicBool::new(false),
             depth: AtomicIsize::new(0),
             drain_deadline: Mutex::new(None),
             metrics: Mutex::new(ServerMetrics::default()),
+            slot: Mutex::new(VariantSlot { model, label }),
+            model_gen: AtomicU64::new(0),
+            soft_cap: AtomicUsize::new(cfg.queue_cap.max(1)),
+            deadline_us: AtomicU64::new(
+                cfg.deadline.map_or(0, |d| d.as_micros().max(1) as u64),
+            ),
+            wtuning: Mutex::new(WorkerTuning {
+                max_retries: cfg.max_retries,
+                retry_backoff: cfg.retry_backoff,
+                fault,
+            }),
+            tuning_gen: AtomicU64::new(0),
+            last_reload: Mutex::new("never".into()),
+            degraded_reason: Mutex::new(String::new()),
+            restart_budget: cfg.restart_budget,
+        }
+    }
+
+    fn depth(&self) -> usize {
+        self.depth.load(Ordering::Relaxed).max(0) as usize
+    }
+
+    /// The hot-reloadable server-default deadline (0 ⇔ disabled).
+    fn hot_deadline(&self) -> Option<Duration> {
+        match self.deadline_us.load(Ordering::Relaxed) {
+            0 => None,
+            us => Some(Duration::from_micros(us)),
         }
     }
 }
@@ -227,15 +310,14 @@ pub struct ServerHandle {
     /// Padding token, resolved once (fallibly) at server construction
     /// instead of re-tokenizing "\n" on every request.
     pad: i32,
-    deadline: Option<Duration>,
 }
 
 impl ServerHandle {
     /// Score a (prompt, completion) pair; blocks until the batched backend
     /// answers or refuses. Thread-safe; call from many threads to exercise
-    /// batching. Uses the server's configured deadline.
+    /// batching. Uses the server's configured (hot-reloadable) deadline.
     pub fn score(&self, prompt: &str, completion: &str) -> Result<f64, ServeError> {
-        self.score_with_deadline(prompt, completion, self.deadline)
+        self.score_with_deadline(prompt, completion, self.shared.hot_deadline())
     }
 
     /// [`score`](Self::score) with an explicit per-request deadline
@@ -263,6 +345,13 @@ impl ServerHandle {
         }
         if self.shared.degraded.load(Ordering::Acquire) {
             return Err(ServeError::Degraded);
+        }
+        // soft admission cap (hot-reloadable, ≤ structural capacity): shed
+        // here when a reload tightened the cap below the channel's size —
+        // the structural `try_send` bound below remains the backstop
+        if self.shared.depth() >= self.shared.soft_cap.load(Ordering::Relaxed) {
+            self.shared.metrics.lock().unwrap().shed += 1;
+            return Err(ServeError::Overloaded);
         }
         let mut toks = ptoks;
         toks.extend(ctoks);
@@ -328,6 +417,222 @@ impl ServerStatus {
     pub fn queue_depth(&self) -> usize {
         self.shared.depth()
     }
+
+    /// `name@vN` label of the variant currently serving.
+    pub fn variant(&self) -> String {
+        self.shared.slot.lock().unwrap().label.clone()
+    }
+
+    /// Outcome of the most recent config reload attempt (`"never"`, `"ok"`,
+    /// or `"rejected: <why>"`).
+    pub fn last_reload(&self) -> String {
+        self.shared.last_reload.lock().unwrap().clone()
+    }
+
+    /// Why the server degraded; `None` while healthy.
+    pub fn degraded_reason(&self) -> Option<String> {
+        if !self.degraded() {
+            return None;
+        }
+        Some(self.shared.degraded_reason.lock().unwrap().clone())
+    }
+
+    /// Worker restarts consumed so far.
+    pub fn restarts_used(&self) -> u64 {
+        self.shared.metrics.lock().unwrap().restarted
+    }
+
+    /// Worker restart budget the server booted with.
+    pub fn restart_budget(&self) -> u32 {
+        self.shared.restart_budget
+    }
+}
+
+/// Administrative handle: variant hot-swap and config hot-reload. Cloneable
+/// into the HTTP front end (`POST /admin/swap`, `POST /admin/reload`).
+/// Both operations are **validate-then-commit**: every fallible step runs
+/// against staged state, and the serving path only ever observes either the
+/// unchanged incumbent or a fully verified replacement.
+#[derive(Clone)]
+pub struct AdminHandle {
+    shared: Arc<Shared>,
+    /// The sync-channel capacity the server booted with; the reloadable
+    /// soft cap must stay within it (the channel cannot grow live).
+    structural_cap: usize,
+    seq_len: usize,
+    pad: i32,
+}
+
+impl AdminHandle {
+    /// Atomically swap the serving weights to `model` under live traffic.
+    ///
+    /// Stage: shape compatibility against the incumbent (vocabulary, max
+    /// sequence length), then a pinned probe request scored with the native
+    /// reference engine under `catch_unwind` — a candidate whose weights
+    /// panic the forward pass or score non-finite never reaches the slot.
+    /// Commit: slot write + generation bump; the worker picks the new
+    /// `Arc` up between batches, so in-flight requests finish on the old
+    /// weights and none are dropped. Any stage failure rolls back with the
+    /// incumbent untouched (`swap_rollbacks`).
+    pub fn swap_in(&self, model: ModelWeights, label: &str) -> Result<()> {
+        let staged = self.stage(model);
+        match staged {
+            Ok(m) => {
+                {
+                    let mut slot = self.shared.slot.lock().unwrap();
+                    slot.model = m;
+                    slot.label = label.to_string();
+                    // bump under the lock: a worker that sees the new
+                    // generation always finds the new model in the slot
+                    self.shared.model_gen.fetch_add(1, Ordering::Release);
+                }
+                self.shared.metrics.lock().unwrap().swaps += 1;
+                crate::info!("hot-swapped serving variant to {label}");
+                Ok(())
+            }
+            Err(e) => {
+                self.shared.metrics.lock().unwrap().swap_rollbacks += 1;
+                crate::warnlog!("hot-swap to {label} rolled back: {e:#}");
+                Err(e.context("hot-swap rolled back; incumbent variant unchanged"))
+            }
+        }
+    }
+
+    /// The fallible half of [`AdminHandle::swap_in`]: everything that can
+    /// reject the candidate, run before anything is committed.
+    fn stage(&self, model: ModelWeights) -> Result<Arc<ModelWeights>> {
+        let vocab_new = model.tok_emb.shape()[0];
+        let max_seq = model.pos_emb.shape()[0];
+        {
+            let slot = self.shared.slot.lock().unwrap();
+            let vocab_old = slot.model.tok_emb.shape()[0];
+            if vocab_new != vocab_old {
+                bail!(
+                    "candidate vocabulary {vocab_new} != serving vocabulary {vocab_old}"
+                );
+            }
+        }
+        if max_seq < self.seq_len {
+            bail!(
+                "candidate max sequence length {max_seq} < serving seq_len {}",
+                self.seq_len
+            );
+        }
+        probe_model(&model, self.seq_len, self.pad)?;
+        Ok(Arc::new(model))
+    }
+
+    /// Apply a validated [`ServerTuning`] document (validate-then-commit).
+    /// Absent fields keep the incumbent value. A rejected document changes
+    /// nothing, counts `reload_failures`, and is reported on `/healthz`.
+    pub fn apply_tuning(&self, t: &ServerTuning) -> Result<()> {
+        let staged = (|| -> Result<Option<Option<Arc<FaultPlan>>>> {
+            if let Some(cap) = t.queue_cap {
+                if cap > self.structural_cap {
+                    bail!(
+                        "queue_cap {cap} exceeds the structural channel capacity {} \
+                         the server booted with",
+                        self.structural_cap
+                    );
+                }
+            }
+            // outer None = leave injection alone; inner None = turn it off
+            Ok(match &t.fault {
+                None => None,
+                Some(spec) if spec.trim().is_empty() => Some(None),
+                Some(spec) => Some(Some(Arc::new(
+                    FaultPlan::parse(spec).context("constructing fault plan")?,
+                ))),
+            })
+        })();
+        match staged {
+            Ok(fault) => {
+                if let Some(cap) = t.queue_cap {
+                    self.shared.soft_cap.store(cap, Ordering::Relaxed);
+                }
+                if let Some(ms) = t.deadline_ms {
+                    self.shared.deadline_us.store(ms.saturating_mul(1000), Ordering::Relaxed);
+                }
+                {
+                    let mut w = self.shared.wtuning.lock().unwrap();
+                    if let Some(r) = t.max_retries {
+                        w.max_retries = r;
+                    }
+                    if let Some(us) = t.retry_backoff_us {
+                        w.retry_backoff = Duration::from_micros(us);
+                    }
+                    if let Some(f) = fault {
+                        w.fault = f;
+                    }
+                    self.shared.tuning_gen.fetch_add(1, Ordering::Release);
+                }
+                *self.shared.last_reload.lock().unwrap() = "ok".into();
+                self.shared.metrics.lock().unwrap().reloads += 1;
+                crate::info!("config reload committed");
+                Ok(())
+            }
+            Err(e) => {
+                self.record_reload_failure(&e);
+                Err(e)
+            }
+        }
+    }
+
+    /// Re-read and apply a `--config-file` tuning document
+    /// ([`ServerTuning::load`] + [`AdminHandle::apply_tuning`]); parse and
+    /// validation failures are recorded exactly like apply failures.
+    pub fn reload_from(&self, path: &std::path::Path) -> Result<()> {
+        match ServerTuning::load(path) {
+            Ok(t) => self.apply_tuning(&t),
+            Err(e) => {
+                self.record_reload_failure(&e);
+                Err(e)
+            }
+        }
+    }
+
+    fn record_reload_failure(&self, e: &anyhow::Error) {
+        *self.shared.last_reload.lock().unwrap() = format!("rejected: {e:#}");
+        self.shared.metrics.lock().unwrap().reload_failures += 1;
+        crate::warnlog!("config reload rejected (incumbent tuning kept): {e:#}");
+    }
+}
+
+/// Smoke-score a pinned probe request against `model` with the native
+/// reference engine, on the caller's thread, panics contained. The serving
+/// engine is not consulted — the probe certifies the *weights* are
+/// servable (finite scores, no panic); engine-specific state is rebuilt
+/// per-worker anyway.
+fn probe_model(model: &ModelWeights, seq_len: usize, pad: i32) -> Result<()> {
+    const PROBE_PROMPT: &str = "c:abcd|";
+    const PROBE_COMPLETION: &str = "abcd.";
+    let ptoks = tasks::encode(PROBE_PROMPT);
+    let ctoks = tasks::encode(PROBE_COMPLETION);
+    let (pl, cl) = (ptoks.len(), ctoks.len());
+    if pl + cl > seq_len {
+        bail!("probe longer than seq_len {seq_len}");
+    }
+    let mut tokens = ptoks;
+    tokens.extend(ctoks);
+    tokens.resize(seq_len, pad);
+    let result = catch_unwind(AssertUnwindSafe(|| -> Result<f64> {
+        let mut ws = Workspace::new();
+        let mut logits = Tensor::default();
+        let mut engine = NativeEngine;
+        engine.logits_ws(model, &tokens, 1, seq_len, &mut ws, &mut logits)?;
+        target_logprobs_into(&logits, &tokens, 1, seq_len, &mut ws.lps);
+        let mut sum = 0.0f64;
+        for si in (pl - 1)..(pl + cl - 1) {
+            sum += ws.lps[si] as f64;
+        }
+        Ok(sum / cl as f64)
+    }));
+    match result {
+        Ok(Ok(score)) if score.is_finite() => Ok(()),
+        Ok(Ok(score)) => bail!("probe produced a non-finite score ({score})"),
+        Ok(Err(e)) => Err(e.context("probe forward pass failed")),
+        Err(_) => bail!("probe forward pass panicked"),
+    }
 }
 
 /// Outcome of one batch-execution attempt.
@@ -338,16 +643,22 @@ enum BatchError {
     Failed(FaultClass, String),
 }
 
-/// The worker-side half: owns the engine, model, and every steady-state
-/// buffer; lives entirely on the worker thread.
+/// The worker-side half: owns the engine and every steady-state buffer;
+/// holds the serving weights as an `Arc` refreshed from the shared
+/// [`VariantSlot`] between batches (never mid-batch — an in-flight batch
+/// always finishes on the weights it started with). Lives entirely on the
+/// worker thread.
 struct Worker<E, F> {
-    model: ModelWeights,
+    model: Arc<ModelWeights>,
     cfg: ServerConfig,
     shared: Arc<Shared>,
     make_engine: F,
     engine: Option<E>,
     restarts_left: u32,
     fault: Option<Arc<FaultPlan>>,
+    /// Last observed [`Shared::model_gen`] / [`Shared::tuning_gen`].
+    model_gen_seen: u64,
+    tuning_gen_seen: u64,
     started: Instant,
     ws: Workspace,
     logits: Tensor,
@@ -365,6 +676,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
             }
         }
         loop {
+            self.refresh();
             match next_batch(&rx, self.cfg.max_batch, self.cfg.max_wait, |r: &Request| {
                 r.deadline
             }) {
@@ -383,6 +695,28 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
                     }
                 }
             }
+        }
+    }
+
+    /// Pick up committed hot-swaps / reloads: one atomic load each on the
+    /// steady path; the locks are only taken when a generation moved.
+    /// Engine-side caches key on `ModelWeights::uid`, so a swapped model
+    /// invalidates them naturally on its first batch.
+    fn refresh(&mut self) {
+        let mg = self.shared.model_gen.load(Ordering::Acquire);
+        if mg != self.model_gen_seen {
+            let slot = self.shared.slot.lock().unwrap();
+            self.model = slot.model.clone();
+            self.model_gen_seen = mg;
+            crate::debuglog!("worker picked up variant {}", slot.label);
+        }
+        let tg = self.shared.tuning_gen.load(Ordering::Acquire);
+        if tg != self.tuning_gen_seen {
+            let w = self.shared.wtuning.lock().unwrap();
+            self.cfg.max_retries = w.max_retries;
+            self.cfg.retry_backoff = w.retry_backoff;
+            self.fault = w.fault.clone();
+            self.tuning_gen_seen = tg;
         }
     }
 
@@ -493,7 +827,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
                     return Err(InjectedFault { class: FaultClass::Transient }.into());
                 }
             }
-            engine.logits_ws(model, tokens, b, s, ws, logits)?;
+            engine.logits_ws(model.as_ref(), tokens, b, s, ws, logits)?;
             target_logprobs_into(logits, tokens, b, s, &mut ws.lps);
             scores.clear();
             for (bi, it) in items.iter().enumerate() {
@@ -565,6 +899,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
 
     fn degrade(&self, why: &str) {
         crate::warnlog!("server degraded ({why}): fast-rejecting until restarted");
+        *self.shared.degraded_reason.lock().unwrap() = why.to_string();
         self.shared.degraded.store(true, Ordering::Release);
     }
 
@@ -626,6 +961,7 @@ fn backoff_delay(base: Duration, attempt: u32) -> Duration {
 /// calling [`ScoringServer::shutdown`]) drains and joins the worker.
 pub struct ScoringServer {
     handle: ServerHandle,
+    admin: AdminHandle,
     shared: Arc<Shared>,
     tx: SyncSender<Ctl<Request>>,
     join: Option<std::thread::JoinHandle<()>>,
@@ -652,13 +988,22 @@ impl ScoringServer {
             FaultSetting::Plan(p) => Some(p.clone()),
         };
         let (tx, rx) = sync_channel::<Ctl<Request>>(cfg.queue_cap.max(1));
-        let shared = Arc::new(Shared::default());
+        let model = Arc::new(model);
+        // until a registry swap replaces it, the booted weights serve under
+        // their model name (no registry version to cite)
+        let label = format!("{}@local", model.cfg.name);
+        let shared = Arc::new(Shared::new(&cfg, model.clone(), label, fault.clone()));
         let handle = ServerHandle {
             tx: tx.clone(),
             shared: shared.clone(),
             seq_len: cfg.seq_len,
             pad,
-            deadline: cfg.deadline,
+        };
+        let admin = AdminHandle {
+            shared: shared.clone(),
+            structural_cap: cfg.queue_cap.max(1),
+            seq_len: cfg.seq_len,
+            pad,
         };
         let drain_timeout = cfg.drain_timeout;
         let restart_budget = cfg.restart_budget;
@@ -675,6 +1020,8 @@ impl ScoringServer {
                 engine: None,
                 restarts_left: restart_budget,
                 fault,
+                model_gen_seen: 0,
+                tuning_gen_seen: 0,
                 started: Instant::now(),
                 ws: Workspace::new(),
                 logits: Tensor::default(),
@@ -683,12 +1030,17 @@ impl ScoringServer {
             };
             worker.run(rx);
         });
-        Ok(ScoringServer { handle, shared, tx, join: Some(join), drain_timeout })
+        Ok(ScoringServer { handle, admin, shared, tx, join: Some(join), drain_timeout })
     }
 
     /// A cloneable client handle.
     pub fn handle(&self) -> ServerHandle {
         self.handle.clone()
+    }
+
+    /// A cloneable admin handle (hot-swap + config hot-reload).
+    pub fn admin(&self) -> AdminHandle {
+        self.admin.clone()
     }
 
     /// A cloneable health/metrics observer (for the HTTP front end).
@@ -858,5 +1210,90 @@ mod tests {
         // (does not set the env var — just pins the default)
         let cfg = ServerConfig::default();
         assert!(cfg.queue_cap >= 1);
+    }
+
+    #[test]
+    fn hot_swap_commits_and_serves_the_new_weights() {
+        let model = tiny_model(4, 2, false, 104);
+        let server = ScoringServer::start(model, quiet_cfg(), || Ok(NativeEngine)).unwrap();
+        let h = server.handle();
+        let before = h.score("c:abcd|", "abcd.").unwrap();
+        assert_eq!(server.status().variant(), "tiny@local");
+        // different seed → different weights → (almost surely) different score
+        server.admin().swap_in(tiny_model(4, 2, false, 105), "tiny@v2").unwrap();
+        assert_eq!(server.status().variant(), "tiny@v2");
+        let after = h.score("c:abcd|", "abcd.").unwrap();
+        assert!(
+            (before - after).abs() > 1e-9,
+            "swap did not change the serving weights ({before} vs {after})"
+        );
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.swaps, 1);
+        assert_eq!(m.swap_rollbacks, 0);
+        assert_eq!(m.errors, 0, "no request failed across the swap");
+    }
+
+    #[test]
+    fn incompatible_swap_rolls_back_and_incumbent_keeps_serving() {
+        let model = tiny_model(4, 2, false, 106);
+        let server = ScoringServer::start(model, quiet_cfg(), || Ok(NativeEngine)).unwrap();
+        // a candidate with a truncated position table cannot serve seq_len
+        let mut bad = tiny_model(4, 2, false, 107);
+        let d = bad.cfg.d_model;
+        bad.pos_emb = Tensor::from_vec(&[8, d], vec![0.0; 8 * d]).unwrap();
+        bad.touch();
+        let err = server.admin().swap_in(bad, "tiny@bad").unwrap_err();
+        assert!(format!("{err:#}").contains("rolled back"), "{err:#}");
+        assert_eq!(server.status().variant(), "tiny@local", "incumbent label intact");
+        let h = server.handle();
+        assert!(h.score("c:abcd|", "abcd.").unwrap().is_finite());
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.swaps, 0);
+        assert_eq!(m.swap_rollbacks, 1);
+    }
+
+    #[test]
+    fn tuning_reload_is_validate_then_commit() {
+        let model = tiny_model(4, 2, false, 108);
+        let cfg = ServerConfig { queue_cap: 8, ..quiet_cfg() };
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap();
+        let admin = server.admin();
+        let status = server.status();
+        assert_eq!(status.last_reload(), "never");
+        // commit: tighten the soft cap and set a deadline
+        let t = ServerTuning {
+            queue_cap: Some(4),
+            deadline_ms: Some(250),
+            ..ServerTuning::default()
+        };
+        admin.apply_tuning(&t).unwrap();
+        assert_eq!(status.last_reload(), "ok");
+        // reject: soft cap above the structural channel capacity
+        let bad = ServerTuning { queue_cap: Some(1000), ..ServerTuning::default() };
+        assert!(admin.apply_tuning(&bad).is_err());
+        assert!(status.last_reload().starts_with("rejected:"), "{}", status.last_reload());
+        // the rejected document changed nothing; serving still works
+        let h = server.handle();
+        assert!(h.score("c:abcd|", "abcd.").unwrap().is_finite());
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.reloads, 1);
+        assert_eq!(m.reload_failures, 1);
+    }
+
+    #[test]
+    fn probe_rejects_weights_that_panic_or_score_nonfinite() {
+        let good = tiny_model(4, 2, false, 109);
+        let pad = tasks::encode("\n")[0];
+        assert!(probe_model(&good, 64, pad).is_ok());
+        // NaN embeddings poison every logit → non-finite probe score
+        let mut nan = tiny_model(4, 2, false, 110);
+        let d = nan.cfg.d_model;
+        let v = nan.tok_emb.shape()[0];
+        nan.tok_emb = Tensor::from_vec(&[v, d], vec![f32::NAN; v * d]).unwrap();
+        nan.touch();
+        assert!(probe_model(&nan, 64, pad).is_err());
     }
 }

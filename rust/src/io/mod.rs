@@ -5,4 +5,6 @@ pub mod npy;
 pub mod npz;
 
 pub use npy::{NpyArray, NpyDtype};
-pub use npz::{read_npz, write_npz};
+pub use npz::{
+    read_npz, read_npz_tensors, read_npz_with_digests, write_npz, write_npz_with_digests, NpzError,
+};

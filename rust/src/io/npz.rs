@@ -1,38 +1,226 @@
-//! NPZ (zip of NPY members) reading/writing via the `zip` crate.
+//! NPZ (zip of NPY members) reading/writing, dependency-free.
 //!
-//! `np.savez` produces stored or deflated members named `<key>.npy`; we
-//! accept both and write stored members (fast, and numpy reads them fine).
+//! `np.savez` produces a plain ZIP archive of stored (uncompressed)
+//! members named `<key>.npy`. This module hand-rolls exactly that subset:
+//! stored members, ZIP version ≤ 2.0, no zip64. Deflated members
+//! (`np.savez_compressed`) are rejected with a typed error rather than
+//! silently misread — the build-time trainer uses `np.savez`.
+//!
+//! The writer emits fully deterministic bytes (zeroed timestamps, sorted
+//! members): the same tensor map always serializes to the same archive,
+//! which is what makes registry manifest digests stable across rebuilds
+//! (see `coordinator::registry`).
+//!
+//! Robustness contract (pinned by the negative tests below): malformed
+//! input — truncated archives, bad magic, lying size fields, short tensor
+//! payloads — returns a typed [`NpzError`] and never panics. Allocations
+//! are bounded by *validated* sizes only: every declared length is checked
+//! against the actual file length before any buffer is sized from it.
 
 use std::collections::BTreeMap;
-use std::io::{Read, Write};
+use std::io::Write;
 use std::path::Path;
 
 use anyhow::{Context, Result};
 
 use super::npy::NpyArray;
 use crate::tensor::Tensor;
+use crate::util::sha256;
+
+/// Typed NPZ container errors (NPY-level errors surface via `anyhow`
+/// context from [`NpyArray::parse`]).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum NpzError {
+    /// No end-of-central-directory signature — not a ZIP file at all.
+    BadMagic,
+    /// Structurally valid prefix but byte ranges run past the file end.
+    Truncated { what: &'static str },
+    /// Member uses a compression method the stored-only reader rejects.
+    UnsupportedCompression { name: String, method: u16 },
+    /// Stored payload does not match the member's declared CRC-32.
+    CrcMismatch { name: String },
+    /// Header fields contradict each other (e.g. stored member with
+    /// compressed size ≠ uncompressed size).
+    Inconsistent { what: String },
+}
+
+impl std::fmt::Display for NpzError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            NpzError::BadMagic => write!(f, "not a zip archive (no end-of-central-directory)"),
+            NpzError::Truncated { what } => write!(f, "zip archive truncated: {what}"),
+            NpzError::UnsupportedCompression { name, method } => {
+                write!(f, "member {name:?} uses compression method {method} (stored-only reader)")
+            }
+            NpzError::CrcMismatch { name } => {
+                write!(f, "member {name:?} payload does not match its CRC-32")
+            }
+            NpzError::Inconsistent { what } => write!(f, "zip header inconsistency: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for NpzError {}
+
+// ---------------------------------------------------------------------------
+// CRC-32 (IEEE, poly 0xEDB88320) — the ZIP member checksum.
+// ---------------------------------------------------------------------------
+
+const fn crc32_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB88320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static CRC32_TABLE: [u32; 256] = crc32_table();
+
+/// CRC-32 of a byte slice (ZIP member checksum).
+pub fn crc32(data: &[u8]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for &b in data {
+        c = CRC32_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// Reading
+// ---------------------------------------------------------------------------
+
+const EOCD_SIG: u32 = 0x0605_4b50;
+const CDIR_SIG: u32 = 0x0201_4b50;
+const LOCAL_SIG: u32 = 0x0403_4b50;
+const EOCD_MIN: usize = 22;
+
+fn le16(b: &[u8], off: usize) -> u16 {
+    u16::from_le_bytes([b[off], b[off + 1]])
+}
+
+fn le32(b: &[u8], off: usize) -> u32 {
+    u32::from_le_bytes([b[off], b[off + 1], b[off + 2], b[off + 3]])
+}
+
+/// A member's raw stored payload located inside the archive buffer.
+struct RawMember<'a> {
+    name: String,
+    payload: &'a [u8],
+}
+
+/// Locate and validate every stored member via the central directory.
+fn parse_members(buf: &[u8]) -> Result<Vec<RawMember<'_>>, NpzError> {
+    if buf.len() < EOCD_MIN {
+        return Err(NpzError::BadMagic);
+    }
+    // EOCD is within the last 64 KiB + 22 bytes (comment is u16-sized).
+    let scan_start = buf.len().saturating_sub(EOCD_MIN + u16::MAX as usize);
+    let mut eocd = None;
+    let mut pos = buf.len() - EOCD_MIN;
+    loop {
+        if le32(buf, pos) == EOCD_SIG {
+            eocd = Some(pos);
+            break;
+        }
+        if pos == scan_start {
+            break;
+        }
+        pos -= 1;
+    }
+    let eocd = eocd.ok_or(NpzError::BadMagic)?;
+    let n_entries = le16(buf, eocd + 10) as usize;
+    let cd_size = le32(buf, eocd + 12) as usize;
+    let cd_off = le32(buf, eocd + 16) as usize;
+    if cd_off.checked_add(cd_size).map_or(true, |end| end > buf.len()) {
+        return Err(NpzError::Truncated { what: "central directory extends past end of file" });
+    }
+
+    let mut members = Vec::with_capacity(n_entries.min(4096));
+    let mut p = cd_off;
+    for _ in 0..n_entries {
+        if p + 46 > cd_off + cd_size {
+            return Err(NpzError::Truncated { what: "central directory entry header" });
+        }
+        if le32(buf, p) != CDIR_SIG {
+            return Err(NpzError::Inconsistent { what: "central directory signature".into() });
+        }
+        let method = le16(buf, p + 10);
+        let crc = le32(buf, p + 16);
+        let csize = le32(buf, p + 20) as usize;
+        let usize_ = le32(buf, p + 24) as usize;
+        let name_len = le16(buf, p + 28) as usize;
+        let extra_len = le16(buf, p + 30) as usize;
+        let comment_len = le16(buf, p + 32) as usize;
+        let local_off = le32(buf, p + 42) as usize;
+        if p + 46 + name_len > cd_off + cd_size {
+            return Err(NpzError::Truncated { what: "central directory entry name" });
+        }
+        let name = String::from_utf8_lossy(&buf[p + 46..p + 46 + name_len]).into_owned();
+        if method != 0 {
+            return Err(NpzError::UnsupportedCompression { name, method });
+        }
+        if csize != usize_ {
+            return Err(NpzError::Inconsistent {
+                what: format!("stored member {name:?} has csize {csize} != usize {usize_}"),
+            });
+        }
+
+        // Walk the local header to find the payload start; trust only
+        // ranges that fit inside the buffer.
+        if local_off + 30 > buf.len() {
+            return Err(NpzError::Truncated { what: "local file header" });
+        }
+        if le32(buf, local_off) != LOCAL_SIG {
+            return Err(NpzError::Inconsistent { what: format!("local header for {name:?}") });
+        }
+        let l_name = le16(buf, local_off + 26) as usize;
+        let l_extra = le16(buf, local_off + 28) as usize;
+        let data_start = local_off + 30 + l_name + l_extra;
+        let data_end = data_start.checked_add(csize).unwrap_or(usize::MAX);
+        if data_end > buf.len() {
+            return Err(NpzError::Truncated { what: "member payload" });
+        }
+        let payload = &buf[data_start..data_end];
+        if crc32(payload) != crc {
+            return Err(NpzError::CrcMismatch { name });
+        }
+        members.push(RawMember { name, payload });
+        p += 46 + name_len + extra_len + comment_len;
+    }
+    Ok(members)
+}
 
 /// Read every array in an `.npz` file into a name → array map.
 pub fn read_npz(path: &Path) -> Result<BTreeMap<String, NpyArray>> {
-    let file = std::fs::File::open(path)
-        .with_context(|| format!("opening {}", path.display()))?;
-    let mut zip = zip::ZipArchive::new(file)
-        .with_context(|| format!("reading zip {}", path.display()))?;
+    Ok(read_npz_with_digests(path)?.0)
+}
+
+/// Read an `.npz` file, also returning each member's SHA-256 (hex) —
+/// digest of the raw `.npy` member bytes, the quantity registry
+/// manifests record per tensor blob.
+pub fn read_npz_with_digests(
+    path: &Path,
+) -> Result<(BTreeMap<String, NpyArray>, BTreeMap<String, String>)> {
+    let buf = std::fs::read(path).with_context(|| format!("opening {}", path.display()))?;
+    let members = parse_members(&buf).with_context(|| format!("reading zip {}", path.display()))?;
     let mut out = BTreeMap::new();
-    for i in 0..zip.len() {
-        let mut entry = zip.by_index(i)?;
-        let name = entry
-            .name()
-            .strip_suffix(".npy")
-            .unwrap_or(entry.name())
-            .to_string();
-        let mut bytes = Vec::with_capacity(entry.size() as usize);
-        entry.read_to_end(&mut bytes)?;
-        let arr = NpyArray::parse(&bytes)
-            .with_context(|| format!("parsing member {name} of {}", path.display()))?;
-        out.insert(name, arr);
+    let mut digests = BTreeMap::new();
+    for m in members {
+        let key = m.name.strip_suffix(".npy").unwrap_or(&m.name).to_string();
+        let arr = NpyArray::parse(m.payload)
+            .with_context(|| format!("parsing member {key} of {}", path.display()))?;
+        digests.insert(key.clone(), sha256::hex_digest(m.payload));
+        out.insert(key, arr);
     }
-    Ok(out)
+    Ok((out, digests))
 }
 
 /// Read an `.npz` file, converting every member to an f32 [`Tensor`].
@@ -43,20 +231,89 @@ pub fn read_npz_tensors(path: &Path) -> Result<BTreeMap<String, Tensor>> {
         .collect()
 }
 
+// ---------------------------------------------------------------------------
+// Writing
+// ---------------------------------------------------------------------------
+
 /// Write f32 tensors as an `.npz` file (stored, no compression — these are
 /// local interchange files, and stored members round-trip fastest).
 pub fn write_npz(path: &Path, arrays: &BTreeMap<String, Tensor>) -> Result<()> {
-    let file = std::fs::File::create(path)
-        .with_context(|| format!("creating {}", path.display()))?;
-    let mut zip = zip::ZipWriter::new(file);
-    let opts = zip::write::FileOptions::default()
-        .compression_method(zip::CompressionMethod::Stored);
+    write_npz_with_digests(path, arrays).map(|_| ())
+}
+
+/// Write an `.npz` file and return each member's SHA-256 (hex) for
+/// manifest recording. The file is fsynced before returning so a
+/// subsequent atomic rename publishes durable bytes.
+pub fn write_npz_with_digests(
+    path: &Path,
+    arrays: &BTreeMap<String, Tensor>,
+) -> Result<BTreeMap<String, String>> {
+    let mut body: Vec<u8> = Vec::new();
+    let mut central: Vec<u8> = Vec::new();
+    let mut digests = BTreeMap::new();
+    let mut n_entries = 0u16;
     for (name, t) in arrays {
-        zip.start_file(format!("{name}.npy"), opts)?;
-        zip.write_all(&NpyArray::encode_f32(t))?;
+        let member_name = format!("{name}.npy");
+        let payload = NpyArray::encode_f32(t);
+        let crc = crc32(&payload);
+        digests.insert(name.clone(), sha256::hex_digest(&payload));
+        let local_off = body.len() as u32;
+
+        // Local file header (timestamps zeroed: deterministic output).
+        body.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        body.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        body.extend_from_slice(&0u16.to_le_bytes()); // flags
+        body.extend_from_slice(&0u16.to_le_bytes()); // method: stored
+        body.extend_from_slice(&0u16.to_le_bytes()); // mod time
+        body.extend_from_slice(&0u16.to_le_bytes()); // mod date
+        body.extend_from_slice(&crc.to_le_bytes());
+        body.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        body.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        body.extend_from_slice(&(member_name.len() as u16).to_le_bytes());
+        body.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        body.extend_from_slice(member_name.as_bytes());
+        body.extend_from_slice(&payload);
+
+        // Central directory entry.
+        central.extend_from_slice(&CDIR_SIG.to_le_bytes());
+        central.extend_from_slice(&20u16.to_le_bytes()); // version made by
+        central.extend_from_slice(&20u16.to_le_bytes()); // version needed
+        central.extend_from_slice(&0u16.to_le_bytes()); // flags
+        central.extend_from_slice(&0u16.to_le_bytes()); // method
+        central.extend_from_slice(&0u16.to_le_bytes()); // time
+        central.extend_from_slice(&0u16.to_le_bytes()); // date
+        central.extend_from_slice(&crc.to_le_bytes());
+        central.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+        central.extend_from_slice(&(member_name.len() as u16).to_le_bytes());
+        central.extend_from_slice(&0u16.to_le_bytes()); // extra len
+        central.extend_from_slice(&0u16.to_le_bytes()); // comment len
+        central.extend_from_slice(&0u16.to_le_bytes()); // disk start
+        central.extend_from_slice(&0u16.to_le_bytes()); // internal attrs
+        central.extend_from_slice(&0u32.to_le_bytes()); // external attrs
+        central.extend_from_slice(&local_off.to_le_bytes());
+        central.extend_from_slice(member_name.as_bytes());
+        n_entries += 1;
     }
-    zip.finish()?;
-    Ok(())
+
+    let cd_off = body.len() as u32;
+    let cd_size = central.len() as u32;
+    body.extend_from_slice(&central);
+    body.extend_from_slice(&EOCD_SIG.to_le_bytes());
+    body.extend_from_slice(&0u16.to_le_bytes()); // disk
+    body.extend_from_slice(&0u16.to_le_bytes()); // cd disk
+    body.extend_from_slice(&n_entries.to_le_bytes());
+    body.extend_from_slice(&n_entries.to_le_bytes());
+    body.extend_from_slice(&cd_size.to_le_bytes());
+    body.extend_from_slice(&cd_off.to_le_bytes());
+    body.extend_from_slice(&0u16.to_le_bytes()); // comment len
+
+    let mut file = std::fs::File::create(path)
+        .with_context(|| format!("creating {}", path.display()))?;
+    file.write_all(&body)?;
+    file.sync_all()
+        .with_context(|| format!("fsyncing {}", path.display()))?;
+    Ok(digests)
 }
 
 #[cfg(test)]
@@ -64,15 +321,24 @@ mod tests {
     use super::*;
     use crate::util::rng::Rng;
 
-    #[test]
-    fn roundtrip() {
+    fn tmp(name: &str) -> std::path::PathBuf {
         let dir = std::env::temp_dir().join("mergemoe_npz_test");
         std::fs::create_dir_all(&dir).unwrap();
-        let path = dir.join("rt.npz");
-        let mut rng = Rng::new(51);
+        dir.join(name)
+    }
+
+    fn sample_map(seed: u64) -> BTreeMap<String, Tensor> {
+        let mut rng = Rng::new(seed);
         let mut map = BTreeMap::new();
         map.insert("alpha".to_string(), Tensor::randn(&[4, 6], 1.0, &mut rng));
         map.insert("L0.wg".to_string(), Tensor::randn(&[2, 3, 5], 1.0, &mut rng));
+        map
+    }
+
+    #[test]
+    fn roundtrip() {
+        let path = tmp("rt.npz");
+        let map = sample_map(51);
         write_npz(&path, &map).unwrap();
         let back = read_npz_tensors(&path).unwrap();
         assert_eq!(back.len(), 2);
@@ -84,7 +350,162 @@ mod tests {
     }
 
     #[test]
+    fn digests_stable_and_verified_on_read() {
+        let p1 = tmp("dig1.npz");
+        let p2 = tmp("dig2.npz");
+        let map = sample_map(52);
+        let d1 = write_npz_with_digests(&p1, &map).unwrap();
+        let d2 = write_npz_with_digests(&p2, &map).unwrap();
+        // Deterministic serialization: same tensors, same digests.
+        assert_eq!(d1, d2);
+        assert_eq!(std::fs::read(&p1).unwrap(), std::fs::read(&p2).unwrap());
+        let (_, rd) = read_npz_with_digests(&p1).unwrap();
+        assert_eq!(rd, d1);
+        for p in [p1, p2] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
     fn missing_file_errors() {
         assert!(read_npz(Path::new("/nonexistent/x.npz")).is_err());
+    }
+
+    #[test]
+    fn bad_magic_is_typed() {
+        let path = tmp("magic.npz");
+        std::fs::write(&path, b"this is not a zip archive, just junk bytes").unwrap();
+        let err = read_npz(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NpzError>(), Some(NpzError::BadMagic)),
+            "{err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn truncation_at_every_prefix_is_an_error_never_a_panic() {
+        let path = tmp("trunc.npz");
+        write_npz(&path, &sample_map(53)).unwrap();
+        let full = std::fs::read(&path).unwrap();
+        let tpath = tmp("trunc_cut.npz");
+        // Every strict prefix must fail with a typed error (BadMagic once
+        // the EOCD is gone, Truncated when ranges dangle) — and never
+        // panic or allocate from unvalidated sizes.
+        for cut in (0..full.len()).step_by(7).chain([full.len() - 1]) {
+            std::fs::write(&tpath, &full[..cut]).unwrap();
+            let err = read_npz(&tpath).unwrap_err();
+            assert!(err.downcast_ref::<NpzError>().is_some(), "cut={cut}: {err:#}");
+        }
+        for p in [path, tpath] {
+            std::fs::remove_file(&p).ok();
+        }
+    }
+
+    #[test]
+    fn corrupt_payload_fails_crc() {
+        let path = tmp("crc.npz");
+        write_npz(&path, &sample_map(54)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Flip one bit in the middle of the first member's payload (well
+        // past the 30-byte local header + name).
+        let at = 80;
+        bytes[at] ^= 0x10;
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_npz(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NpzError>(), Some(NpzError::CrcMismatch { .. })),
+            "{err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn short_tensor_payload_is_typed_npy_error() {
+        // A structurally valid zip whose member lies about being a full
+        // NPY array: NpyArray::parse must reject it (payload truncated),
+        // not over-read.
+        let t = Tensor::zeros(&[8, 8]);
+        let mut npy = NpyArray::encode_f32(&t);
+        npy.truncate(npy.len() - 64); // keep header, cut data short
+        let crc = crc32(&npy);
+        let name = b"short.npy";
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&LOCAL_SIG.to_le_bytes());
+        buf.extend_from_slice(&20u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(name);
+        buf.extend_from_slice(&npy);
+        let cd_off = buf.len() as u32;
+        buf.extend_from_slice(&CDIR_SIG.to_le_bytes());
+        buf.extend_from_slice(&20u16.to_le_bytes());
+        buf.extend_from_slice(&20u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&crc.to_le_bytes());
+        buf.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(npy.len() as u32).to_le_bytes());
+        buf.extend_from_slice(&(name.len() as u16).to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(&0u32.to_le_bytes());
+        buf.extend_from_slice(name);
+        let cd_size = buf.len() as u32 - cd_off;
+        buf.extend_from_slice(&EOCD_SIG.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.extend_from_slice(&1u16.to_le_bytes());
+        buf.extend_from_slice(&cd_size.to_le_bytes());
+        buf.extend_from_slice(&cd_off.to_le_bytes());
+        buf.extend_from_slice(&0u16.to_le_bytes());
+
+        let path = tmp("short_member.npz");
+        std::fs::write(&path, &buf).unwrap();
+        let err = read_npz(&path).unwrap_err();
+        assert!(format!("{err:#}").contains("truncated"), "{err:#}");
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn lying_size_fields_rejected() {
+        let path = tmp("lying.npz");
+        write_npz(&path, &sample_map(55)).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        // Inflate the first central-directory entry's declared sizes far
+        // past the file end: reader must reject, not allocate 4 GB.
+        let cd = bytes
+            .windows(4)
+            .position(|w| w == CDIR_SIG.to_le_bytes())
+            .unwrap();
+        bytes[cd + 20..cd + 24].copy_from_slice(&0xFFFF_FF00u32.to_le_bytes());
+        bytes[cd + 24..cd + 28].copy_from_slice(&0xFFFF_FF00u32.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = read_npz(&path).unwrap_err();
+        assert!(
+            matches!(err.downcast_ref::<NpzError>(), Some(NpzError::Truncated { .. })),
+            "{err:#}"
+        );
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn crc32_vector() {
+        // Standard IEEE check value.
+        assert_eq!(crc32(b"123456789"), 0xCBF43926);
+        assert_eq!(crc32(b""), 0);
     }
 }

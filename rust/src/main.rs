@@ -7,6 +7,7 @@
 //!   sweep     evaluate the whole method × ratio ×  (mergemoe sweep --model beta
 //!             task comparison grid in one run          --methods average,msmoe,mergemoe --ms 6,8)
 //!   serve     run the batched scoring server demo  (mergemoe serve --model beta)
+//!   registry  manage the crash-safe variant store  (mergemoe registry ls --registry DIR)
 //!   stats     dump expert usage frequencies        (mergemoe stats --model beta)
 //!   selfcheck cross-check native vs pjrt engines   (mergemoe selfcheck --model beta)
 //!
@@ -20,7 +21,8 @@ use anyhow::{bail, Context, Result};
 
 use mergemoe::calib;
 use mergemoe::coordinator::{
-    compress, CalibSource, CompressSpec, HttpServer, ScoringServer, ServerConfig,
+    compress, AdminState, CalibSource, CompressSpec, HttpServer, Registry, ScoringServer,
+    ServerConfig, VariantSpec,
 };
 use mergemoe::eval::tasks::{Task, ALL_TASKS};
 use mergemoe::eval::{run_sweep, SweepSpec};
@@ -29,6 +31,7 @@ use mergemoe::merge::{Algorithm, NativeGram};
 use mergemoe::model::ModelWeights;
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
 use mergemoe::util::cli::Args;
+use mergemoe::util::fault::FaultPlan;
 use mergemoe::util::rng::Rng;
 use mergemoe::{config, info};
 
@@ -41,7 +44,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: mergemoe <repro|compress|eval|sweep|serve|stats|selfcheck> [flags]\n\
+    "usage: mergemoe <repro|compress|eval|sweep|serve|registry|stats|selfcheck> [flags]\n\
      common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
                    --threads N (worker threads; default: MERGEMOE_THREADS env\n\
                    or all cores; 1 = fully serial)\n\
@@ -64,11 +67,24 @@ fn usage() -> &'static str {
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
                 [--queue-cap N] [--deadline-ms N] [--retries N] [--restart-budget N]\n\
                 [--drain-ms N] [--listen ADDR[:PORT]] [--duration-s N]\n\
+                [--registry DIR [--variant NAME[@vN]]] [--config-file FILE.json]\n\
                 default: in-process demo load-gen; with --listen, serves the\n\
-                HTTP/1.1 API (POST /score, GET /healthz, GET /metrics) for\n\
-                --duration-s seconds (0 = forever). overload knobs also via\n\
+                HTTP/1.1 API (POST /score, GET /healthz, GET /metrics, plus\n\
+                POST /admin/swap and /admin/reload when --registry or\n\
+                --config-file is given) for --duration-s seconds (0 = forever).\n\
+                --variant boots from the registry (latest good version unless\n\
+                @vN pins one); --config-file applies validated tuning at boot\n\
+                and on each /admin/reload. overload knobs also via\n\
                 MERGEMOE_QUEUE_CAP; fault injection via MERGEMOE_FAULT\n\
-                (seed:N[,transient:P][,fatal:P][,panic:P][,slow:P][,slow-ms:N])\n\
+                (seed:N[,transient:P][,fatal:P][,panic:P][,slow:P][,slow-ms:N]\n\
+                [,io-fail:N])\n\
+     registry:  <add|ls|verify> --registry DIR\n\
+                add: --model NAME [--name VARIANT] [--m M --alg ALG\n\
+                [--layers l1,l2] [--calib-seqs N] [--calib-tasks t1,t2]]\n\
+                stores the (optionally compressed) model as a new immutable\n\
+                version via write-to-temp + fsync + atomic rename\n\
+                ls: list variants; verify: re-hash every stored tensor\n\
+                against its manifest (exit 1 on any corruption)\n\
      stats:     --model NAME [--calib-seqs N]\n\
      selfcheck: --model NAME"
 }
@@ -93,6 +109,11 @@ fn run() -> Result<()> {
         // sweeps run even on a bare checkout (synthetic-model fallback), so
         // they must not require the manifest that Ctx::new loads
         return cmd_sweep(&artifacts, engine, &args);
+    }
+    if args.subcommand.as_deref() == Some("registry") {
+        // registry ls/verify need no model at all, and add falls back to a
+        // synthetic model — none of them require the artifacts manifest
+        return cmd_registry(&artifacts, engine, &args);
     }
     let mut ctx = Ctx::new(artifacts.clone(), engine)?;
     ctx.items = args.usize("items", ctx.items)?;
@@ -275,9 +296,142 @@ fn cmd_sweep(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     Ok(())
 }
 
+/// `mergemoe registry <add|ls|verify> --registry DIR`: manage the crash-safe
+/// on-disk variant store that `serve` hot-swaps from.
+fn cmd_registry(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) -> Result<()> {
+    let action = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .context("registry expects an action: add | ls | verify")?;
+    let root = PathBuf::from(args.require("registry")?);
+    // honor MERGEMOE_FAULT io-fail:N so crash-safety drills can kill the
+    // writer at a chosen fsync/rename crossing
+    if let Some(plan) = FaultPlan::from_env()? {
+        plan.arm_io();
+    }
+    let reg = Registry::open(&root)?;
+    match action {
+        "add" => {
+            let model_name = args.get_or("model", "beta").to_string();
+            let name = args.get_or("name", &model_name).to_string();
+            // same ctx-optional pattern as `sweep`: bare checkouts get a
+            // synthetic model of the published shape
+            let ctx = Ctx::new(artifacts.to_path_buf(), engine_sel).ok();
+            let model = match &ctx {
+                Some(c) => c.load_model(&model_name)?,
+                None => mergemoe::bench::load_or_synth(&model_name).model,
+            };
+            let (model, spec) = if let Some(mflag) = args.get("m") {
+                let m: usize = mflag.parse().context("--m expects an integer")?;
+                let last = model.cfg.n_layers - 1;
+                let layers = parse_layers(args, &[last.saturating_sub(1), last])?;
+                let alg = Algorithm::from_name(args.get_or("alg", "mergemoe"))
+                    .context("bad --alg")?;
+                let mut cspec = CompressSpec::new(layers, m, alg);
+                cspec.n_calib_seqs = args.usize("calib-seqs", 48)?;
+                cspec.calib_tasks = parse_tasks(args, "calib-tasks")?;
+                cspec.seed = args.usize("seed", 2026)? as u64;
+                let mut gram = match &ctx {
+                    Some(c) => c.make_gram(&model_name)?,
+                    None => exp::GramBox::Native(NativeGram),
+                };
+                info!("compressing {model_name} -> {m} experts via {}", alg.name());
+                let (merged, rep) = compress(&model, &cspec, &mut gram.as_backend())?;
+                let spec = VariantSpec {
+                    method: alg.name().to_string(),
+                    ratio: rep.compression_ratio(),
+                    calib_source: args.get_or("calib-tasks", "mixture").to_string(),
+                };
+                (merged, spec)
+            } else {
+                let spec = VariantSpec {
+                    method: "full".to_string(),
+                    ratio: 1.0,
+                    calib_source: "none".to_string(),
+                };
+                (model, spec)
+            };
+            let meta = reg.add(&name, &model, &spec)?;
+            println!(
+                "registered {} ({}, {:.1}% of full params) in {}",
+                meta.label(),
+                meta.method,
+                100.0 * meta.ratio,
+                root.display()
+            );
+            Ok(())
+        }
+        "ls" => {
+            let variants = reg.list()?;
+            if variants.is_empty() {
+                println!("(empty registry at {})", root.display());
+                return Ok(());
+            }
+            println!("{:<24} {:<10} {:>8}  {}", "variant", "method", "ratio", "calib");
+            for m in variants {
+                println!(
+                    "{:<24} {:<10} {:>7.1}%  {}",
+                    m.label(),
+                    m.method,
+                    100.0 * m.ratio,
+                    m.calib_source
+                );
+            }
+            Ok(())
+        }
+        "verify" => {
+            let entries = reg.verify()?;
+            let mut bad = 0usize;
+            for e in &entries {
+                match &e.problem {
+                    None => println!("{:<24} ok", e.label),
+                    Some(p) => {
+                        bad += 1;
+                        println!("{:<24} CORRUPT: {p}", e.label);
+                    }
+                }
+            }
+            println!("verified {} variant(s), {bad} corrupt", entries.len());
+            if bad > 0 {
+                bail!("{bad} corrupt variant(s) in {}", root.display());
+            }
+            Ok(())
+        }
+        other => bail!("unknown registry action {other:?} (expected add | ls | verify)"),
+    }
+}
+
 fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
-    let model_name = args.require("model")?.to_string();
-    let model = ctx.load_model(&model_name)?;
+    let registry = match args.get("registry") {
+        Some(dir) => Some(std::sync::Arc::new(Registry::open(std::path::Path::new(dir))?)),
+        None => None,
+    };
+    // boot weights: a pinned/latest-good registry variant, or --model
+    let (model, variant) = if let Some(vspec) = args.get("variant") {
+        let reg = registry
+            .as_ref()
+            .context("--variant requires --registry DIR")?;
+        let (name, version) = match vspec.split_once('@') {
+            Some((n, v)) => {
+                let ver: u64 = v
+                    .trim_start_matches('v')
+                    .parse()
+                    .with_context(|| format!("bad --variant version in {vspec:?}"))?;
+                (n, Some(ver))
+            }
+            None => (vspec, None),
+        };
+        let (model, meta) = match version {
+            Some(v) => reg.load(name, v)?,
+            None => reg.load_latest_good(name)?,
+        };
+        info!("booting registry variant {}", meta.label());
+        (model, Some(meta))
+    } else {
+        let model_name = args.require("model")?;
+        (ctx.load_model(model_name)?, None)
+    };
     let n_requests = args.usize("requests", 200)?;
     let n_clients = args.usize("clients", 4)?;
     let default_cfg = ServerConfig::default();
@@ -294,6 +448,9 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
     };
     let sel = ctx.engine;
     let artifacts = ctx.artifacts.clone();
+    // keep a copy of registry-booted weights: the post-start swap below
+    // re-labels the slot with the registry version (name@vN, not name@local)
+    let boot_copy = variant.as_ref().map(|_| model.clone());
     let server = ScoringServer::start(model, cfg, move || -> Result<Box<dyn Engine>> {
         match sel {
             EngineSel::Native => Ok(Box::new(NativeEngine)),
@@ -303,12 +460,35 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
             }
         }
     })?;
+    if let (Some(meta), Some(m)) = (&variant, boot_copy) {
+        server
+            .admin()
+            .swap_in(m, &meta.label())
+            .context("activating registry variant")?;
+    }
+    // --config-file applies the same validate-then-commit path as
+    // POST /admin/reload, so a bad file is rejected loudly at boot
+    let config_file = args.get("config-file").map(PathBuf::from);
+    if let Some(p) = &config_file {
+        server
+            .admin()
+            .reload_from(p)
+            .with_context(|| format!("applying --config-file {}", p.display()))?;
+        info!("applied tuning from {}", p.display());
+    }
     // `--listen ADDR` runs the HTTP front end instead of the demo load-gen
     if let Some(addr) = args.get("listen") {
-        let mut http = HttpServer::bind(addr, server.handle(), server.status())?;
+        let admin_state = AdminState {
+            admin: server.admin(),
+            registry: registry.clone(),
+            config_file: config_file.clone(),
+        };
+        let mut http =
+            HttpServer::bind_with_admin(addr, server.handle(), server.status(), admin_state)?;
         let duration = args.usize("duration-s", 0)?;
         println!(
-            "listening on http://{} (POST /score, GET /healthz, GET /metrics)",
+            "listening on http://{} (POST /score, GET /healthz, GET /metrics, \
+             POST /admin/swap, POST /admin/reload)",
             http.addr()
         );
         if duration > 0 {

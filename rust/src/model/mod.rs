@@ -115,18 +115,45 @@ impl ModelWeights {
     /// Load `weights_<name>.npz` as written by `python/compile/train.py`.
     pub fn load(dir: &Path, cfg: &ModelConfig) -> Result<ModelWeights> {
         let path = dir.join(format!("weights_{}.npz", cfg.name));
-        let mut m = npz::read_npz_tensors(&path)
+        let m = npz::read_npz_tensors(&path)
             .with_context(|| format!("loading weights for model {}", cfg.name))?;
+        Self::from_arrays(m, cfg).with_context(|| format!("loading weights for model {}", cfg.name))
+    }
+
+    /// Assemble weights from a flat name → tensor map (the NPZ key layout).
+    ///
+    /// Accepts both uncompressed dumps (`L{i}.wg` stacked `(N,f,d)`, no
+    /// map) and merged-variant exports: when `L{i}.map` is present the
+    /// expert stack may hold `M ≤ N` experts and the `(M,N)` map redirects
+    /// the N-way router onto them (the registry round-trips compressed
+    /// variants through exactly this path).
+    pub fn from_arrays(
+        mut m: BTreeMap<String, Tensor>,
+        cfg: &ModelConfig,
+    ) -> Result<ModelWeights> {
+        let mut maps: Vec<Option<Tensor>> =
+            (0..cfg.n_layers).map(|i| m.remove(&format!("L{i}.map"))).collect();
         let mut take = |k: &str| -> Result<Tensor> {
             m.remove(k).with_context(|| format!("weights missing key {k:?}"))
         };
         let mut layers = Vec::with_capacity(cfg.n_layers);
         for i in 0..cfg.n_layers {
             let pre = |n: &str| format!("L{i}.{n}");
+            let map = maps[i].take();
             let wg = take(&pre("wg"))?;
             let wu = take(&pre("wu"))?;
             let wd = take(&pre("wd"))?;
-            let experts = split_experts(&wg, &wu, &wd, cfg)?;
+            let experts = split_experts(&wg, &wu, &wd, cfg, map.is_none())?;
+            if let Some(map) = &map {
+                if map.shape() != [experts.len(), cfg.n_experts] {
+                    bail!(
+                        "L{i}.map shape {:?} disagrees with {} experts over an {}-way router",
+                        map.shape(),
+                        experts.len(),
+                        cfg.n_experts
+                    );
+                }
+            }
             let shared = if cfg.shared_expert {
                 Some(Expert {
                     wg: take(&pre("swg"))?,
@@ -150,7 +177,7 @@ impl ModelWeights {
                     experts,
                     shared,
                     top_k: cfg.top_k,
-                    map: None,
+                    map,
                 },
             });
         }
@@ -192,6 +219,14 @@ impl ModelWeights {
     /// Export back to a flat NPZ (compressed-model artifact for deployment;
     /// also used by tests to round-trip).
     pub fn save(&self, path: &Path) -> Result<()> {
+        npz::write_npz(path, &self.to_arrays()?)
+    }
+
+    /// Flatten to the NPZ key layout ([`ModelWeights::from_arrays`] is the
+    /// inverse). Merged variants serialize their `(M,N)` routing maps as
+    /// `L{i}.map`; without them a compressed model would reload unservable
+    /// (M experts under an N-way router with no redirect).
+    pub fn to_arrays(&self) -> Result<BTreeMap<String, Tensor>> {
         let mut m: BTreeMap<String, Tensor> = BTreeMap::new();
         m.insert("tok_emb".into(), self.tok_emb.clone());
         m.insert("pos_emb".into(), self.pos_emb.clone());
@@ -218,19 +253,43 @@ impl ModelWeights {
                 m.insert(pre("swu"), s.wu.clone());
                 m.insert(pre("swd"), s.wd.clone());
             }
+            if let Some(map) = &l.moe.map {
+                m.insert(pre("map"), map.clone());
+            }
         }
-        npz::write_npz(path, &m)
+        Ok(m)
     }
 }
 
-fn split_experts(wg: &Tensor, wu: &Tensor, wd: &Tensor, cfg: &ModelConfig) -> Result<Vec<Expert>> {
+/// Split a stacked `(E,f,d)` dump into per-expert matrices. `expect_full`
+/// demands `E == cfg.n_experts` (uncompressed dumps, where no routing map
+/// exists to account for a different count); merged variants pass `false`
+/// and the map shape check in [`ModelWeights::from_arrays`] ties `E` down.
+fn split_experts(
+    wg: &Tensor,
+    wu: &Tensor,
+    wd: &Tensor,
+    cfg: &ModelConfig,
+    expect_full: bool,
+) -> Result<Vec<Expert>> {
     let (e, f, d) = match wg.shape() {
         [e, f, d] => (*e, *f, *d),
         s => bail!("expert stack must be 3-D, got {s:?}"),
     };
-    if e != cfg.n_experts || f != cfg.d_ff || d != cfg.d_model {
+    if (expect_full && e != cfg.n_experts) || f != cfg.d_ff || d != cfg.d_model {
         bail!("expert stack shape {:?} disagrees with config {}x{}x{}",
               wg.shape(), cfg.n_experts, cfg.d_ff, cfg.d_model);
+    }
+    if e == 0 || e > cfg.n_experts {
+        bail!("expert stack has {e} experts (config allows 1..={})", cfg.n_experts);
+    }
+    if wu.shape() != [e, f, d] || wd.shape() != [e, d, f] {
+        bail!(
+            "expert stacks disagree: wg {:?}, wu {:?}, wd {:?}",
+            wg.shape(),
+            wu.shape(),
+            wd.shape()
+        );
     }
     let mut out = Vec::with_capacity(e);
     for i in 0..e {
@@ -383,5 +442,44 @@ mod tests {
         );
         assert_eq!(back.n_params(), m.n_params());
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn merged_variant_roundtrip_keeps_map() {
+        let dir = std::env::temp_dir().join("mergemoe_model_test_merged");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut m = tiny_model(4, 2, false, 3);
+        for l in &mut m.layers {
+            l.moe.experts.truncate(2);
+            l.moe.map = Some(
+                Tensor::from_vec(&[2, 4], vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0]).unwrap(),
+            );
+        }
+        m.touch();
+        let path = dir.join("weights_tiny.npz");
+        m.save(&path).unwrap();
+        let back = ModelWeights::load(&dir, &m.cfg).unwrap();
+        assert_eq!(back.layers[0].moe.experts.len(), 2);
+        let map = back.layers[1].moe.map.as_ref().expect("map survives the round-trip");
+        assert_eq!(map.shape(), &[2, 4]);
+        assert_eq!(map.data(), m.layers[1].moe.map.as_ref().unwrap().data());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn reduced_stack_without_map_is_rejected() {
+        let m = tiny_model(4, 2, false, 4);
+        let mut arrays = m.to_arrays().unwrap();
+        // Drop the map-less model's stack down to 2 experts: unservable.
+        for key in ["L0.wg", "L0.wu", "L0.wd"] {
+            let t = arrays.remove(key).unwrap();
+            let half = t.len() / 2;
+            let s = t.shape().to_vec();
+            arrays.insert(
+                key.into(),
+                Tensor::from_vec(&[2, s[1], s[2]], t.data()[..half].to_vec()).unwrap(),
+            );
+        }
+        assert!(ModelWeights::from_arrays(arrays, &m.cfg).is_err());
     }
 }

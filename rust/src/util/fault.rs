@@ -24,7 +24,7 @@
 //! and the server runs the exact pre-existing execution — no plan object,
 //! no per-batch draws, no extra allocations.
 
-use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
 use std::sync::Arc;
 use std::time::Duration;
 
@@ -88,6 +88,62 @@ pub fn classify(e: &anyhow::Error) -> FaultClass {
     }
 }
 
+// ---------------------------------------------------------------------------
+// IO fail-points (registry atomic-write crash simulation)
+// ---------------------------------------------------------------------------
+
+/// Fail-at crossing index; negative = disarmed. Process-global on purpose:
+/// the gates sit deep in the registry write path and a simulated crash is
+/// a whole-process property, exactly like a real `kill -9`.
+static IO_FAIL_AT: AtomicI64 = AtomicI64::new(-1);
+/// Gate crossings since the last [`arm_io_fail`] call.
+static IO_CROSSINGS: AtomicU64 = AtomicU64::new(0);
+
+/// The typed error produced when an armed IO fail-point fires; carries the
+/// gate label (e.g. `"registry.fsync.weights"`) for assertions and logs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct InjectedIoFault {
+    /// Label of the gate that fired.
+    pub label: &'static str,
+}
+
+impl std::fmt::Display for InjectedIoFault {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "injected IO fault at gate {:?}", self.label)
+    }
+}
+
+impl std::error::Error for InjectedIoFault {}
+
+/// Arm (or with `None`, disarm) the global IO fail-point and reset the
+/// crossing counter. `Some(n)` makes the `n`-th (0-based) subsequent
+/// [`io_gate`] crossing fail; all other crossings pass. Tests sweep `n`
+/// over `0..crossings_of_a_clean_run` to kill the writer at every
+/// fsync/rename point in turn.
+pub fn arm_io_fail(fail_at: Option<u64>) {
+    IO_CROSSINGS.store(0, Ordering::SeqCst);
+    IO_FAIL_AT.store(fail_at.map_or(-1, |n| n as i64), Ordering::SeqCst);
+}
+
+/// Crossings counted since the last [`arm_io_fail`] — run a clean pass
+/// first to learn how many kill points a code path has.
+pub fn io_crossings() -> u64 {
+    IO_CROSSINGS.load(Ordering::SeqCst)
+}
+
+/// A named crash point on a durability-critical IO path. Free when
+/// disarmed (one relaxed load + add); when armed, the scheduled crossing
+/// returns a typed [`InjectedIoFault`] which callers propagate — the write
+/// aborts exactly as if the process died there, minus the exit.
+pub fn io_gate(label: &'static str) -> Result<()> {
+    let i = IO_CROSSINGS.fetch_add(1, Ordering::SeqCst);
+    let at = IO_FAIL_AT.load(Ordering::SeqCst);
+    if at >= 0 && i == at as u64 {
+        return Err(InjectedIoFault { label }.into());
+    }
+    Ok(())
+}
+
 /// Probabilities (per attempt) for the seeded mode.
 #[derive(Debug, Clone, Copy)]
 struct Rates {
@@ -117,6 +173,7 @@ pub struct FaultPlan {
     mode: Mode,
     cursor: AtomicU64,
     poison: Option<i32>,
+    io_fail: Option<u64>,
 }
 
 impl FaultPlan {
@@ -127,12 +184,18 @@ impl FaultPlan {
             mode: Mode::Seeded { seed, rates: Rates::default() },
             cursor: AtomicU64::new(0),
             poison: None,
+            io_fail: None,
         }
     }
 
     /// Exact per-attempt script; attempts past the end run clean.
     pub fn scripted(actions: Vec<FaultAction>) -> FaultPlan {
-        FaultPlan { mode: Mode::Scripted { actions }, cursor: AtomicU64::new(0), poison: None }
+        FaultPlan {
+            mode: Mode::Scripted { actions },
+            cursor: AtomicU64::new(0),
+            poison: None,
+            io_fail: None,
+        }
     }
 
     /// Mark `token` as poisoned: any attempt whose batch contains it fails
@@ -146,11 +209,14 @@ impl FaultPlan {
     /// pairs. `seed:N` selects seeded mode (required); optional rates
     /// `transient:P`, `fatal:P`, `panic:P`, `slow:P` (probabilities in
     /// `[0,1]`, defaults `0.05/0/0/0`), `slow-ms:N` (stall length, default
-    /// 10), and `poison:TOK` (poison token id).
+    /// 10), `poison:TOK` (poison token id), and `io-fail:N` (fail the
+    /// `N`-th IO gate crossing — armed via [`FaultPlan::arm_io`], used by
+    /// `mergemoe registry` to simulate a crash mid-persist).
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut seed: Option<u64> = None;
         let mut rates = Rates::default();
         let mut poison = None;
+        let mut io_fail = None;
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
@@ -178,6 +244,10 @@ impl FaultPlan {
                 "poison" => {
                     poison = Some(v.parse().with_context(|| format!("bad poison token {v:?}"))?)
                 }
+                "io-fail" => {
+                    io_fail =
+                        Some(v.parse().with_context(|| format!("bad io-fail index {v:?}"))?)
+                }
                 other => bail!("unknown fault spec key {other:?}"),
             }
         }
@@ -190,7 +260,18 @@ impl FaultPlan {
             mode: Mode::Seeded { seed, rates },
             cursor: AtomicU64::new(0),
             poison,
+            io_fail,
         })
+    }
+
+    /// Arm the process-global IO fail-point from this plan's `io-fail:N`
+    /// entry (no-op when absent). Called by the `registry` CLI entry point
+    /// so `MERGEMOE_FAULT=seed:1,io-fail:3 mergemoe registry add …`
+    /// simulates a crash at the 3rd durability gate.
+    pub fn arm_io(&self) {
+        if self.io_fail.is_some() {
+            arm_io_fail(self.io_fail);
+        }
     }
 
     /// Build a plan from `MERGEMOE_FAULT`, or `None` when unset/empty. A
@@ -343,6 +424,42 @@ mod tests {
         assert!(sched.contains(&FaultAction::Panic));
         assert!(sched.contains(&FaultAction::Slow(Duration::from_millis(25))));
         assert!(sched.contains(&FaultAction::None));
+    }
+
+    /// The IO gate is process-global, so the tests that arm it must not
+    /// interleave (cargo runs tests on parallel threads).
+    static IO_GATE_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
+    #[test]
+    fn io_gate_fires_at_exactly_the_armed_crossing() {
+        let _g = IO_GATE_LOCK.lock().unwrap();
+        arm_io_fail(Some(2));
+        assert!(io_gate("a").is_ok());
+        assert!(io_gate("b").is_ok());
+        let err = io_gate("c").unwrap_err();
+        let inj = err.downcast_ref::<InjectedIoFault>().expect("typed IO fault");
+        assert_eq!(inj.label, "c");
+        assert!(io_gate("d").is_ok(), "only the armed crossing fails");
+        assert_eq!(io_crossings(), 4);
+        arm_io_fail(None);
+        assert_eq!(io_crossings(), 0);
+        assert!(io_gate("e").is_ok());
+        arm_io_fail(None);
+    }
+
+    #[test]
+    fn parse_io_fail_key_arms_on_request() {
+        let _g = IO_GATE_LOCK.lock().unwrap();
+        let p = FaultPlan::parse("seed:1,io-fail:0").unwrap();
+        arm_io_fail(None);
+        p.arm_io();
+        assert!(io_gate("x").is_err());
+        arm_io_fail(None);
+        // plans without io-fail never touch the global
+        arm_io_fail(Some(0));
+        FaultPlan::parse("seed:1").unwrap().arm_io();
+        assert!(io_gate("y").is_err(), "arm_io without io-fail is a no-op");
+        arm_io_fail(None);
     }
 
     #[test]

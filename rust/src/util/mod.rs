@@ -7,6 +7,7 @@ pub mod json;
 pub mod logging;
 pub mod par;
 pub mod rng;
+pub mod sha256;
 
 /// Monotonic wall-clock helper used by metrics and the bench harness.
 pub fn now() -> std::time::Instant {

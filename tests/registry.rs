@@ -1,0 +1,461 @@
+//! Chaos suite for the crash-safe variant registry and the hot-swap /
+//! hot-reload serving path built on it:
+//!
+//! * torn-write sweep — the writer is killed (via the `io_gate` fail-point)
+//!   at *every* fsync/rename crossing of `Registry::add`; after each kill
+//!   the registry must reopen clean, with either the prior version intact
+//!   or the new one fully committed (the kill landed after the atomic
+//!   rename), never anything in between;
+//! * bit-flip — corrupting a stored blob yields a typed
+//!   `RegistryError::Corrupt`, quarantine (never deletion), and fallback to
+//!   the last good version;
+//! * hot-swap under live traffic — zero dropped or failed requests across
+//!   the swap (the ARCHITECTURE.md swap-atomicity ledger row);
+//! * failed swap — a probe-rejected candidate rolls back with the
+//!   incumbent untouched and still serving;
+//! * the full admin flow over HTTP — `/healthz` JSON shape, registry swap,
+//!   validate-then-commit reload and its rejection reporting;
+//! * an env-driven chaos run honoring `MERGEMOE_FAULT` (the ci.sh 3-seed
+//!   sweep), with registry writes and a mid-run swap in the mix.
+//!
+//! Everything runs on small synthetic models (no artifacts needed). Tests
+//! that arm the process-global IO fail-point or write through `io_gate`
+//! serialize on one mutex so parallel test threads cannot perturb each
+//! other's schedules.
+
+use std::io::{Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex, MutexGuard, OnceLock};
+use std::time::Duration;
+
+use mergemoe::config::ModelConfig;
+use mergemoe::coordinator::{
+    AdminState, FaultSetting, HttpServer, Registry, RegistryError, ScoringServer, ServerConfig,
+    VariantSpec,
+};
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::NativeEngine;
+use mergemoe::tensor::Tensor;
+use mergemoe::util::fault::{arm_io_fail, io_crossings, FaultPlan, InjectedIoFault};
+use mergemoe::util::json::Json;
+
+/// Serializes every test that arms or crosses the process-global IO
+/// fail-point.
+fn io_lock() -> MutexGuard<'static, ()> {
+    static LOCK: OnceLock<Mutex<()>> = OnceLock::new();
+    LOCK.get_or_init(|| Mutex::new(()))
+        .lock()
+        .unwrap_or_else(|p| p.into_inner())
+}
+
+fn tmp_root(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir()
+        .join("mergemoe_registry_chaos")
+        .join(format!("{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn cfg4() -> ModelConfig {
+    ModelConfig {
+        name: "regchaos".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: false,
+        n_params: 0,
+        merge_targets: vec![2],
+    }
+}
+
+fn model(seed: u64) -> ModelWeights {
+    synth_model(&cfg4(), seed)
+}
+
+fn spec() -> VariantSpec {
+    VariantSpec { method: "mergemoe".into(), ratio: 0.8, calib_source: "mixture".into() }
+}
+
+fn base_cfg() -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        seq_len: 64,
+        fault: FaultSetting::Off,
+        retry_backoff: Duration::from_micros(200),
+        drain_timeout: Duration::from_secs(5),
+        ..ServerConfig::default()
+    }
+}
+
+// ---------------------------------------------------------------------------
+// crash safety: kill the writer at every fsync/rename crossing
+// ---------------------------------------------------------------------------
+
+#[test]
+fn torn_write_at_every_io_crossing_leaves_registry_clean() {
+    let _g = io_lock();
+    let root = tmp_root("torn");
+    let m = model(21);
+
+    // clean run: installs v1 and counts the gate crossings of one add
+    arm_io_fail(None);
+    let reg = Registry::open(&root).unwrap();
+    reg.add("var", &m, &spec()).unwrap();
+    let n = io_crossings();
+    assert!(n >= 6, "expected at least the six named registry gates, saw {n}");
+
+    let mut committed = 1u64;
+    for kill in 0..n {
+        // "crash" the writer exactly at crossing `kill`
+        arm_io_fail(Some(kill));
+        let reg = Registry::open(&root).unwrap();
+        let err = reg.add("var", &m, &spec()).unwrap_err();
+        assert!(
+            err.downcast_ref::<InjectedIoFault>().is_some(),
+            "kill point {kill} must surface the injected fault, got: {err:#}"
+        );
+        arm_io_fail(None);
+
+        // recovery: reopen sweeps any staging leftovers to quarantine...
+        let reg = Registry::open(&root).unwrap();
+        let staged = std::fs::read_dir(root.join(".tmp")).unwrap().count();
+        assert_eq!(staged, 0, "kill point {kill} left files in .tmp after reopen");
+        // ...every published entry verifies clean...
+        for e in reg.verify().unwrap() {
+            assert!(
+                e.problem.is_none(),
+                "kill point {kill} left corrupt entry {}: {:?}",
+                e.label,
+                e.problem
+            );
+        }
+        // ...and the variant is loadable: prior version intact, or the kill
+        // landed after the atomic rename and the new version is complete
+        let (_, meta) = reg.load_latest_good("var").unwrap();
+        assert!(
+            meta.version == committed || meta.version == committed + 1,
+            "kill point {kill}: latest good v{} but last commit was v{committed}",
+            meta.version
+        );
+        committed = meta.version;
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// integrity: bit-flip detection, quarantine, fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn corrupt_blob_quarantines_and_falls_back_to_last_good() {
+    let _g = io_lock();
+    arm_io_fail(None);
+    let root = tmp_root("flip");
+    let reg = Registry::open(&root).unwrap();
+    let m1 = model(31);
+    reg.add("var", &m1, &spec()).unwrap();
+    reg.add("var", &model(32), &spec()).unwrap();
+
+    // flip one byte deep inside v2's stored weights
+    let wpath = root.join("var").join("v2").join("weights.npz");
+    let mut bytes = std::fs::read(&wpath).unwrap();
+    let mid = bytes.len() / 2;
+    bytes[mid] ^= 0x40;
+    std::fs::write(&wpath, &bytes).unwrap();
+
+    // a pinned load reports typed corruption and quarantines the entry...
+    let err = reg.load("var", 2).unwrap_err();
+    assert!(
+        matches!(err.downcast_ref::<RegistryError>(), Some(RegistryError::Corrupt { .. })),
+        "want Corrupt, got {err:#}"
+    );
+    assert!(!root.join("var").join("v2").exists(), "corrupt entry must leave the store");
+    let quarantined = std::fs::read_dir(root.join(".quarantine")).unwrap().count();
+    assert!(quarantined >= 1, "corrupt entry must be preserved, not deleted");
+
+    // ...and latest-good falls back to v1 with the original bytes
+    let (back, meta) = reg.load_latest_good("var").unwrap();
+    assert_eq!(meta.version, 1);
+    assert_eq!(back.tok_emb.data(), m1.tok_emb.data());
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// hot-swap atomicity under live traffic
+// ---------------------------------------------------------------------------
+
+#[test]
+fn hot_swap_under_load_drops_nothing() {
+    let server = ScoringServer::start(model(41), base_cfg(), || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let stop = Arc::new(AtomicBool::new(false));
+
+    // three clients hammer the server for the whole swap window; every
+    // request must succeed — in-flight batches finish on the old weights,
+    // later ones run on the new ones, nothing is dropped in between
+    let joins: Vec<_> = (0..3)
+        .map(|c| {
+            let hc = h.clone();
+            let stop = stop.clone();
+            std::thread::spawn(move || {
+                let mut done = 0usize;
+                while !stop.load(Ordering::Relaxed) {
+                    let (p, comp) =
+                        if c % 2 == 0 { ("c:abcd|", "abcd.") } else { ("r:abc|", "cba.") };
+                    let s = hc.score(p, comp).expect("no request may fail across the swap");
+                    assert!(s.is_finite());
+                    done += 1;
+                }
+                done
+            })
+        })
+        .collect();
+
+    std::thread::sleep(Duration::from_millis(30));
+    server.admin().swap_in(model(42), "regchaos@v2").unwrap();
+    std::thread::sleep(Duration::from_millis(30));
+    stop.store(true, Ordering::Relaxed);
+
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert!(total > 0, "load generator produced no traffic");
+    assert_eq!(server.status().variant(), "regchaos@v2");
+    let m = server.shutdown();
+    assert_eq!(m.errors, 0, "zero failed requests across the swap");
+    assert_eq!(m.swaps, 1);
+    assert_eq!(m.swap_rollbacks, 0);
+}
+
+#[test]
+fn failed_swap_rolls_back_and_serving_continues() {
+    let server = ScoringServer::start(model(51), base_cfg(), || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    assert!(h.score("c:abcd|", "abcd.").unwrap().is_finite());
+
+    // NaN embeddings score non-finite: the smoke probe must reject them
+    let mut bad = model(52);
+    let d = bad.cfg.d_model;
+    let v = bad.tok_emb.shape()[0];
+    bad.tok_emb = Tensor::from_vec(&[v, d], vec![f32::NAN; v * d]).unwrap();
+    bad.touch();
+    let err = server.admin().swap_in(bad, "regchaos@bad").unwrap_err();
+    assert!(format!("{err:#}").contains("rolled back"), "{err:#}");
+
+    // incumbent untouched: label unchanged, serving keeps working
+    assert_eq!(server.status().variant(), "regchaos@local");
+    assert!(h.score("c:abcd|", "abcd.").unwrap().is_finite());
+    let m = server.shutdown();
+    assert_eq!(m.swaps, 0);
+    assert_eq!(m.swap_rollbacks, 1);
+    assert_eq!(m.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// the full admin flow over HTTP (healthz JSON shape pinned here)
+// ---------------------------------------------------------------------------
+
+fn http_req(addr: SocketAddr, raw: &str) -> (u16, String) {
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.write_all(raw.as_bytes()).unwrap();
+    let mut buf = String::new();
+    s.read_to_string(&mut buf).unwrap();
+    let code = buf.split_whitespace().nth(1).and_then(|c| c.parse().ok()).unwrap_or(0);
+    let body = buf.split("\r\n\r\n").nth(1).unwrap_or("").to_string();
+    (code, body)
+}
+
+fn http_get(addr: SocketAddr, path: &str) -> (u16, String) {
+    http_req(addr, &format!("GET {path} HTTP/1.1\r\nHost: x\r\n\r\n"))
+}
+
+fn http_post(addr: SocketAddr, path: &str, body: &str) -> (u16, String) {
+    http_req(
+        addr,
+        &format!(
+            "POST {path} HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+            body.len()
+        ),
+    )
+}
+
+#[test]
+fn healthz_json_and_admin_flow_end_to_end() {
+    let _g = io_lock();
+    arm_io_fail(None);
+    let root = tmp_root("e2e");
+    let reg = Registry::open(&root).unwrap();
+    reg.add("served", &model(61), &spec()).unwrap();
+    reg.add("served", &model(62), &spec()).unwrap();
+    let reg = Arc::new(reg);
+    let cfg_path = root.join("tuning.json");
+    std::fs::write(&cfg_path, r#"{"queue_cap": 8, "deadline_ms": 200}"#).unwrap();
+
+    let server = ScoringServer::start(model(61), base_cfg(), || Ok(NativeEngine)).unwrap();
+    let admin = AdminState {
+        admin: server.admin(),
+        registry: Some(reg.clone()),
+        config_file: Some(cfg_path.clone()),
+    };
+    let mut http =
+        HttpServer::bind_with_admin("127.0.0.1:0", server.handle(), server.status(), admin)
+            .unwrap();
+    let addr = http.addr();
+
+    // the /healthz document shape (operators and probes depend on these keys)
+    let (code, body) = http_get(addr, "/healthz");
+    assert_eq!(code, 200, "{body}");
+    let j = Json::parse(&body).unwrap();
+    assert_eq!(j.get("status").unwrap().as_str().unwrap(), "ok");
+    assert_eq!(j.get("variant").unwrap().as_str().unwrap(), "regchaos@local");
+    assert_eq!(j.get("queue_depth").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(j.get("restarts_used").unwrap().as_usize().unwrap(), 0);
+    assert!(j.get("restart_budget").unwrap().as_usize().unwrap() >= 1);
+    assert_eq!(j.get("last_reload").unwrap().as_str().unwrap(), "never");
+    assert!(j.opt("degraded_reason").is_none(), "healthy server reports no reason");
+
+    // swap to the latest good registry version, then pin an older one
+    let (code, body) = http_post(addr, "/admin/swap", r#"{"name": "served"}"#);
+    assert_eq!(code, 200, "{body}");
+    let (_, body) = http_get(addr, "/healthz");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("variant").unwrap().as_str().unwrap(),
+        "served@v2"
+    );
+    let (code, body) = http_post(addr, "/admin/swap", r#"{"name": "served", "version": 1}"#);
+    assert_eq!(code, 200, "{body}");
+    let (_, body) = http_get(addr, "/healthz");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("variant").unwrap().as_str().unwrap(),
+        "served@v1"
+    );
+    // unknown variants are typed 404s and change nothing
+    let (code, _) = http_post(addr, "/admin/swap", r#"{"name": "ghost"}"#);
+    assert_eq!(code, 404);
+
+    // config reload: validate-then-commit, rejection visible on /healthz
+    let (code, body) = http_post(addr, "/admin/reload", "");
+    assert_eq!(code, 200, "{body}");
+    let (_, body) = http_get(addr, "/healthz");
+    assert_eq!(
+        Json::parse(&body).unwrap().get("last_reload").unwrap().as_str().unwrap(),
+        "ok"
+    );
+    std::fs::write(&cfg_path, r#"{"queue_cap": 0}"#).unwrap();
+    let (code, _) = http_post(addr, "/admin/reload", "");
+    assert_eq!(code, 422);
+    let (_, body) = http_get(addr, "/healthz");
+    assert!(
+        Json::parse(&body)
+            .unwrap()
+            .get("last_reload")
+            .unwrap()
+            .as_str()
+            .unwrap()
+            .starts_with("rejected:"),
+        "{body}"
+    );
+
+    // scoring worked through the whole admin session
+    let (code, body) =
+        http_post(addr, "/score", r#"{"prompt": "c:abcd|", "completion": "abcd."}"#);
+    assert_eq!(code, 200, "{body}");
+    assert!(Json::parse(&body).unwrap().get("score").unwrap().as_f64().unwrap().is_finite());
+
+    http.stop();
+    let m = server.shutdown();
+    assert_eq!(m.swaps, 2);
+    assert_eq!(m.swap_rollbacks, 0);
+    assert_eq!(m.reloads, 1);
+    assert_eq!(m.reload_failures, 1);
+    assert_eq!(m.errors, 0);
+    std::fs::remove_dir_all(&root).ok();
+}
+
+// ---------------------------------------------------------------------------
+// seeded chaos: the ci.sh MERGEMOE_FAULT sweep entry point
+// ---------------------------------------------------------------------------
+
+#[test]
+fn env_fault_chaos_with_registry_and_swap_survives() {
+    let _g = io_lock();
+    let spec_str = std::env::var("MERGEMOE_FAULT")
+        .ok()
+        .filter(|s| !s.trim().is_empty())
+        .unwrap_or_else(|| "seed:11,transient:0.25,slow:0.05,slow-ms:2,io-fail:9".into());
+    let plan = Arc::new(FaultPlan::parse(&spec_str).unwrap());
+
+    // registry writes under the plan's IO fail-point (if it has one): each
+    // add either fully commits or fails typed, and recovery is always clean
+    plan.arm_io();
+    let root = tmp_root("envchaos");
+    {
+        let reg = Registry::open(&root).unwrap();
+        for seed in 0..3u64 {
+            if let Err(e) = reg.add("chaos", &model(70 + seed), &spec()) {
+                // only the injected fault may interrupt a write
+                assert!(
+                    e.downcast_ref::<InjectedIoFault>().is_some(),
+                    "unexpected add failure: {e:#}"
+                );
+            }
+        }
+    }
+    arm_io_fail(None);
+    let reg = Registry::open(&root).unwrap();
+    for e in reg.verify().unwrap() {
+        assert!(e.problem.is_none(), "chaos writes left corruption: {}: {:?}", e.label, e.problem);
+    }
+
+    // serving chaos with a mid-run hot-swap from whatever committed
+    let cfg = ServerConfig {
+        fault: FaultSetting::Plan(plan.clone()),
+        restart_budget: 64,
+        ..base_cfg()
+    };
+    let server = ScoringServer::start(model(71), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let n_clients = 3;
+    let per = 8;
+    let joins: Vec<_> = (0..n_clients)
+        .map(|c| {
+            let hc = h.clone();
+            std::thread::spawn(move || {
+                let mut replied = 0usize;
+                for i in 0..per {
+                    let (p, comp) =
+                        if (c + i) % 2 == 0 { ("c:abcd|", "abcd.") } else { ("r:abc|", "cba.") };
+                    // liveness: every request gets a *typed* reply, never a
+                    // hang — success or failure both count
+                    match hc.score(p, comp) {
+                        Ok(s) => assert!(s.is_finite()),
+                        Err(e) => {
+                            let _ = e.to_string();
+                        }
+                    }
+                    replied += 1;
+                }
+                replied
+            })
+        })
+        .collect();
+    if let Ok((m, meta)) = reg.load_latest_good("chaos") {
+        // the swap may be rejected (e.g. mid-degrade probe trouble) but must
+        // never wedge the serving loop
+        let _ = server.admin().swap_in(m, &meta.label());
+    }
+    let total: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+    assert_eq!(total, n_clients * per, "every request must get a reply");
+    let m = server.shutdown();
+    assert_eq!(
+        m.requests + m.shed,
+        (n_clients * per) as u64,
+        "admitted + shed must account for every submission"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}

@@ -5,8 +5,14 @@
 //! The build environment has no registry access, so the real crate cannot be
 //! fetched; this stand-in keeps the same call-site syntax and semantics
 //! (context chaining, `{:#}` alternate formatting, `From<impl std::error::
-//! Error>`) while storing the chain as plain strings.
+//! Error>`, and [`Error::downcast_ref`] to the originating typed error).
+//! The context chain is stored as plain strings; the original error value
+//! is additionally kept as an `Any` payload so typed recovery — the fault
+//! classifier's `InjectedFault`, the registry's `RegistryError` — works
+//! through any number of `.context(..)` wrappers, exactly as with the real
+//! crate.
 
+use std::any::Any;
 use std::fmt::{self, Display};
 
 /// `anyhow::Result<T>` — result alias with [`Error`] as the default error.
@@ -18,17 +24,38 @@ pub type Result<T, E = Error> = std::result::Result<T, E>;
 pub struct Error {
     msg: String,
     source: Option<Box<Error>>,
+    /// The original typed error value (when constructed from one), kept so
+    /// `downcast_ref` can recover it through context wrappers.
+    payload: Option<Box<dyn Any + Send + Sync>>,
 }
 
 impl Error {
     /// Create an error from a printable message.
     pub fn msg<M: Display>(message: M) -> Error {
-        Error { msg: message.to_string(), source: None }
+        Error { msg: message.to_string(), source: None, payload: None }
     }
 
     /// Wrap this error with an outer context message.
     pub fn context<C: Display>(self, context: C) -> Error {
-        Error { msg: context.to_string(), source: Some(Box::new(self)) }
+        Error { msg: context.to_string(), source: Some(Box::new(self)), payload: None }
+    }
+
+    /// Recover the originating typed error, searching the context chain
+    /// outermost-first (real-`anyhow` downcast semantics).
+    pub fn downcast_ref<T: Any>(&self) -> Option<&T> {
+        let mut cur = Some(self);
+        while let Some(e) = cur {
+            if let Some(t) = e.payload.as_deref().and_then(|p| p.downcast_ref::<T>()) {
+                return Some(t);
+            }
+            cur = e.source.as_deref();
+        }
+        None
+    }
+
+    /// Whether the chain contains a `T` (see [`Error::downcast_ref`]).
+    pub fn is<T: Any>(&self) -> bool {
+        self.downcast_ref::<T>().is_some()
     }
 
     /// The error chain, outermost context first.
@@ -55,6 +82,7 @@ impl Error {
         Error {
             msg: e.to_string(),
             source: e.source().map(|s| Box::new(Error::from_std(s))),
+            payload: None,
         }
     }
 }
@@ -96,7 +124,58 @@ where
     E: std::error::Error + Send + Sync + 'static,
 {
     fn from(e: E) -> Error {
-        Error::from_std(&e)
+        let mut err = Error::from_std(&e);
+        err.payload = Some(Box::new(e));
+        err
+    }
+}
+
+/// Autoref-specialization machinery for the `anyhow!` macro (the same
+/// construction the real crate uses): `anyhow!(value)` must *preserve* a
+/// typed `std::error::Error` (so `bail!(InjectedFault { .. })` stays
+/// downcastable) while still accepting any `Display` value as an ad-hoc
+/// message. Method resolution picks `TraitKind` (by value, for
+/// `Into<Error>` types) over `AdhocKind` (by reference, for everything
+/// printable) without real specialization.
+#[doc(hidden)]
+pub mod kind {
+    use super::Error;
+    use std::fmt::Display;
+
+    #[doc(hidden)]
+    pub struct Adhoc;
+
+    #[doc(hidden)]
+    pub trait AdhocKind: Sized {
+        fn anyhow_kind(&self) -> Adhoc {
+            Adhoc
+        }
+    }
+    impl<T: Display> AdhocKind for &T {}
+
+    impl Adhoc {
+        #[doc(hidden)]
+        pub fn new<M: Display>(self, message: M) -> Error {
+            Error::msg(message)
+        }
+    }
+
+    #[doc(hidden)]
+    pub struct Trait;
+
+    #[doc(hidden)]
+    pub trait TraitKind: Sized {
+        fn anyhow_kind(&self) -> Trait {
+            Trait
+        }
+    }
+    impl<E: Into<Error>> TraitKind for E {}
+
+    impl Trait {
+        #[doc(hidden)]
+        pub fn new<E: Into<Error>>(self, error: E) -> Error {
+            error.into()
+        }
     }
 }
 
@@ -116,7 +195,7 @@ mod ext {
         E: std::error::Error + Send + Sync + 'static,
     {
         fn ext_context(self, msg: String) -> Error {
-            Error::from_std(&self).context(msg)
+            Error::from(self).context(msg)
         }
     }
 
@@ -184,7 +263,13 @@ macro_rules! anyhow {
         $crate::Error::msg(::std::format!($msg))
     };
     ($err:expr $(,)?) => {
-        $crate::Error::msg($err)
+        match $err {
+            e => {
+                #[allow(unused_imports)]
+                use $crate::kind::{AdhocKind, TraitKind};
+                (&e).anyhow_kind().new(e)
+            }
+        }
     };
     ($fmt:expr, $($arg:tt)*) => {
         $crate::Error::msg(::std::format!($fmt, $($arg)*))
@@ -246,6 +331,38 @@ mod tests {
         let owned = String::from("owned message");
         let e = anyhow!(owned.clone());
         assert_eq!(format!("{e}"), "owned message");
+    }
+
+    #[test]
+    fn downcast_survives_context_and_macros() {
+        #[derive(Debug, PartialEq)]
+        struct Typed(u32);
+        impl Display for Typed {
+            fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+                write!(f, "typed error {}", self.0)
+            }
+        }
+        impl std::error::Error for Typed {}
+
+        // From / `?` conversion keeps the payload
+        let e: Error = Typed(7).into();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(7)));
+        assert!(e.is::<Typed>());
+        // ... through context wrappers
+        let wrapped = e.context("outer").context("outermost");
+        assert_eq!(wrapped.downcast_ref::<Typed>(), Some(&Typed(7)));
+        // ... and through the anyhow!/bail! value branch
+        fn fails() -> Result<()> {
+            bail!(Typed(9))
+        }
+        assert_eq!(fails().unwrap_err().downcast_ref::<Typed>(), Some(&Typed(9)));
+        // Result::context on a typed error keeps it too
+        let r: Result<(), _> = Err(Typed(3));
+        let e = r.context("ctx").unwrap_err();
+        assert_eq!(e.downcast_ref::<Typed>(), Some(&Typed(3)));
+        // plain messages carry no payload
+        assert!(anyhow!("just text {}", 1).downcast_ref::<Typed>().is_none());
+        assert!(!Error::msg("x").is::<Typed>());
     }
 
     #[test]
