@@ -23,13 +23,21 @@ cargo test -q
 # run fault-free. The registry suite additionally gets an io-fail crossing
 # (varied per seed) so the crash-safety gates fire at different points.
 for seed in 11 223 4099; do
-    echo "==> fault-injection suite under MERGEMOE_FAULT seed:$seed"
+    echo "==> fault-injection + continuous-batching suites under MERGEMOE_FAULT seed:$seed"
     MERGEMOE_FAULT="seed:$seed,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
-        cargo test -q --test fault_injection
+        cargo test -q --test fault_injection --test continuous_batching
     echo "==> registry chaos suite under MERGEMOE_FAULT seed:$seed"
     MERGEMOE_FAULT="seed:$seed,transient:0.2,slow:0.05,slow-ms:2,io-fail:$((seed % 7))" \
         cargo test -q --test registry
 done
+
+# Multi-lane chaos: the same suites with four compute lanes behind the
+# collector, so lane supervision, drain, and the env-driven workload all
+# run genuinely concurrent at least once per CI run.
+echo "==> multi-lane chaos sweep (MERGEMOE_WORKERS=4, seed 31337)"
+MERGEMOE_WORKERS=4 \
+    MERGEMOE_FAULT="seed:31337,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
+    cargo test -q --test fault_injection --test continuous_batching
 
 # Registry CLI smoke: add a synthetic variant to a scratch registry, list
 # it, and verify its hashes end-to-end through the real binary.
@@ -39,6 +47,16 @@ rm -rf "$REG_DIR"
 ./target/release/mergemoe registry add --registry "$REG_DIR" --model beta --name ci-smoke
 ./target/release/mergemoe registry ls --registry "$REG_DIR" | grep -q "ci-smoke@v1"
 ./target/release/mergemoe registry verify --registry "$REG_DIR"
+
+# Serve smoke: the in-process demo load-gen end to end through the real
+# binary (synthetic-model fallback on a bare checkout), once on the
+# single-lane path and once with four lanes behind the collector.
+for workers in 1 4; do
+    echo "==> mergemoe serve smoke (--workers $workers)"
+    SERVE_OUT="$(./target/release/mergemoe serve --model beta --engine native \
+        --requests 40 --clients 4 --workers "$workers")"
+    grep -q "served:" <<<"$SERVE_OUT"
+done
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     echo "==> cargo fmt --check"

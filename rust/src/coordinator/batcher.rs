@@ -11,9 +11,12 @@
 //! padding waste, never against correctness (padding-invariance is a scorer
 //! test).
 //!
-//! Items whose deadline has already passed at flush time are partitioned
-//! into [`Batch::expired`] so the server can fail them *without* spending a
-//! forward pass on them.
+//! Items whose deadline has already passed are partitioned into
+//! [`Batch::expired`] so the server can fail them *without* spending a
+//! forward pass on them. Dead-on-arrival items are diverted the moment they
+//! are received: they never cap `flush_by` (an already-past deadline would
+//! collapse the batching window and flush live items as an undersized
+//! batch) and never count toward `max_batch`.
 //!
 //! The channel carries [`Ctl`] frames rather than bare payloads: a
 //! [`Ctl::Close`] sentinel enqueued behind the last admitted request is the
@@ -73,6 +76,31 @@ pub enum BatchDecision<T> {
     Shutdown,
 }
 
+/// Admit one received payload: dead-on-arrival items (deadline already
+/// past) go straight to `dead` — they must never open or shrink the flush
+/// window — while live items land in `live`, opening the `max_wait` window
+/// on the first one and capping it by their own (future) deadline.
+fn admit<T>(
+    payload: T,
+    deadline: Option<Instant>,
+    max_wait: Duration,
+    live: &mut Vec<WorkItem<T>>,
+    dead: &mut Vec<WorkItem<T>>,
+    flush_by: &mut Option<Instant>,
+) {
+    let enqueued = Instant::now();
+    let item = WorkItem { payload, enqueued };
+    if deadline.is_some_and(|d| d <= enqueued) {
+        dead.push(item);
+        return;
+    }
+    let fb = flush_by.get_or_insert(enqueued + max_wait);
+    if let Some(d) = deadline {
+        *fb = (*fb).min(flush_cap(d));
+    }
+    live.push(item);
+}
+
 /// Collect the next batch from `rx` under the (max_batch, max_wait) policy,
 /// with per-item deadlines supplied by `deadline_of`. Blocks until there is
 /// at least one item, a close sentinel, or the channel closes.
@@ -82,64 +110,66 @@ pub fn next_batch<T>(
     max_wait: Duration,
     deadline_of: impl Fn(&T) -> Option<Instant>,
 ) -> BatchDecision<T> {
-    // block for the first item
-    let first = loop {
-        match rx.recv() {
-            Ok(Ctl::Item(p)) => break WorkItem { payload: p, enqueued: Instant::now() },
-            Ok(Ctl::Close) | Err(_) => return BatchDecision::Shutdown,
-        }
-    };
+    let mut live: Vec<WorkItem<T>> = Vec::new();
+    let mut dead: Vec<WorkItem<T>> = Vec::new();
     let mut close = false;
-    let mut flush_by = first.enqueued + max_wait;
-    if let Some(d) = deadline_of(&first.payload) {
-        flush_by = flush_by.min(flush_cap(d));
+    // the flush window opens when the first *live* item arrives; a batch
+    // of only dead-on-arrival items flushes immediately so their failure
+    // replies are prompt
+    let mut flush_by: Option<Instant> = None;
+    // block for the first frame
+    match rx.recv() {
+        Ok(Ctl::Item(p)) => {
+            let d = deadline_of(&p);
+            admit(p, d, max_wait, &mut live, &mut dead, &mut flush_by);
+        }
+        Ok(Ctl::Close) | Err(_) => return BatchDecision::Shutdown,
     }
-    let mut items = vec![first];
     // greedy non-blocking drain: anything already queued joins the batch
     // without waiting out the flush deadline (a zero `max_wait` policy
     // still batches whatever has accumulated)
-    while items.len() < max_batch && !close {
+    while live.len() < max_batch && !close {
         match rx.try_recv() {
             Ok(Ctl::Item(p)) => {
-                if let Some(d) = deadline_of(&p) {
-                    flush_by = flush_by.min(flush_cap(d));
-                }
-                items.push(WorkItem { payload: p, enqueued: Instant::now() });
+                let d = deadline_of(&p);
+                admit(p, d, max_wait, &mut live, &mut dead, &mut flush_by);
             }
             Ok(Ctl::Close) => close = true,
             Err(TryRecvError::Empty) | Err(TryRecvError::Disconnected) => break,
         }
     }
     // timed fill: wait out the remaining window, capped by the earliest
-    // per-item deadline (deadline-aware flush)
-    while items.len() < max_batch && !close {
+    // live per-item deadline (deadline-aware flush); skipped entirely when
+    // no live item has opened a window
+    while live.len() < max_batch && !close {
+        let Some(fb) = flush_by else { break };
         let now = Instant::now();
-        if now >= flush_by {
+        if now >= fb {
             break;
         }
-        match rx.recv_timeout(flush_by - now) {
+        match rx.recv_timeout(fb - now) {
             Ok(Ctl::Item(p)) => {
-                if let Some(d) = deadline_of(&p) {
-                    flush_by = flush_by.min(flush_cap(d));
-                }
-                items.push(WorkItem { payload: p, enqueued: Instant::now() });
+                let d = deadline_of(&p);
+                admit(p, d, max_wait, &mut live, &mut dead, &mut flush_by);
             }
             Ok(Ctl::Close) => close = true,
             Err(RecvTimeoutError::Timeout) => break,
             Err(RecvTimeoutError::Disconnected) => break,
         }
     }
-    // partition out already-expired items; the common no-deadline path
-    // allocates nothing extra (an empty Vec has no buffer)
+    // re-check the live side: a deadline may have passed while we waited;
+    // the common no-deadline path allocates nothing extra (an empty Vec
+    // has no buffer)
     let now = Instant::now();
-    let any_expired =
-        items.iter().any(|it| deadline_of(&it.payload).is_some_and(|d| d <= now));
-    let (expired, ready): (Vec<_>, Vec<_>) = if any_expired {
-        items
+    let mut expired = dead;
+    let ready = if live.iter().any(|it| deadline_of(&it.payload).is_some_and(|d| d <= now)) {
+        let (newly_dead, still_live): (Vec<_>, Vec<_>) = live
             .into_iter()
-            .partition(|it| deadline_of(&it.payload).is_some_and(|d| d <= now))
+            .partition(|it| deadline_of(&it.payload).is_some_and(|d| d <= now));
+        expired.extend(newly_dead);
+        still_live
     } else {
-        (Vec::new(), items)
+        live
     };
     BatchDecision::Flush(Batch { ready, expired, close })
 }
@@ -235,6 +265,36 @@ mod tests {
         assert_eq!(b.expired[0].payload, 1);
         assert_eq!(b.ready.len(), 1);
         assert_eq!(b.ready[0].payload, 2);
+    }
+
+    #[test]
+    fn dead_on_arrival_item_does_not_collapse_the_batching_window() {
+        // Regression: an item arriving with an already-past deadline used to
+        // pull `flush_by` into the past, so live items trickling in behind it
+        // flushed as an undersized batch instead of filling the window. One
+        // expired + three live items under a long `max_wait` must still batch
+        // the live three.
+        let (tx, rx) = channel();
+        let past = Instant::now() - Duration::from_millis(50);
+        tx.send(Ctl::Item(1)).unwrap(); // live, opens the window
+        tx.send(Ctl::Item(99)).unwrap(); // dead on arrival
+        let sender = std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(40));
+            tx.send(Ctl::Item(2)).unwrap();
+            std::thread::sleep(Duration::from_millis(40));
+            tx.send(Ctl::Item(3)).unwrap();
+        });
+        // max_batch 3 so the batch closes as soon as the third live item
+        // lands; old code flushed after the greedy drain (ready == 1)
+        let b = flush_of(next_batch(&rx, 3, Duration::from_millis(300), |&x| {
+            (x == 99).then_some(past)
+        }));
+        sender.join().unwrap();
+        let mut ready: Vec<i32> = b.ready.iter().map(|it| it.payload).collect();
+        ready.sort_unstable();
+        assert_eq!(ready, vec![1, 2, 3], "live items must fill the window");
+        assert_eq!(b.expired.len(), 1);
+        assert_eq!(b.expired[0].payload, 99);
     }
 
     #[test]

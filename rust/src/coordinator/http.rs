@@ -14,7 +14,9 @@
 //!   reload, and the degradation reason when degraded.
 //! * `GET /metrics` — Prometheus-style text: request/batch counters, the
 //!   shed/expired/retried/splits/restarted hardening counters, the
-//!   reload/swap admin counters, queue depth, and p50/p99 latencies.
+//!   reload/swap admin counters, the continuous-batching gauges (`workers`,
+//!   `collector_idle`, `overlapped_batches_total`, per-lane
+//!   `lane_batches_total{lane="i"}`), queue depth, and p50/p99 latencies.
 //! * `POST /admin/swap` — body `{"name": "...", "version": N?}` (version
 //!   omitted = latest good): load + verify the variant from the registry
 //!   and atomically hot-swap it in. 404 unknown variant, 422 corrupt
@@ -234,6 +236,11 @@ fn parse_request<R: BufRead>(reader: &mut R) -> Result<Parsed> {
             return Ok(Parsed::Request { method, path, body });
         }
         if let Some(v) = h.to_ascii_lowercase().strip_prefix("content-length:") {
+            // duplicate Content-Length headers desync the pipelined-read
+            // framing (which value bounds the body?) — reject, don't pick one
+            if content_length.is_some() {
+                return Ok(Parsed::Reject { code: 400, why: "duplicate Content-Length\n" });
+            }
             match v.trim().parse::<usize>() {
                 Ok(n) => content_length = Some(n),
                 Err(_) => {
@@ -418,6 +425,9 @@ fn render_metrics(status: &ServerStatus) -> String {
     gauge("variant_swap_rollbacks_total", m.swap_rollbacks as f64);
     gauge("batches_total", m.batches as f64);
     gauge("batched_sequences_total", m.batched_sequences as f64);
+    gauge("overlapped_batches_total", m.overlapped as f64);
+    gauge("workers", status.workers() as f64);
+    gauge("collector_idle", if status.collector_idle() { 1.0 } else { 0.0 });
     gauge("mean_batch_size", m.mean_batch_size());
     gauge("throughput_rps", m.throughput_rps());
     gauge("queue_depth", status.queue_depth() as f64);
@@ -429,6 +439,11 @@ fn render_metrics(status: &ServerStatus) -> String {
     gauge("queue_wait_p99_seconds", m.queue_wait_p99().as_secs_f64());
     gauge("batch_latency_p50_seconds", m.batch_latency_p50().as_secs_f64());
     gauge("batch_latency_p99_seconds", m.batch_latency_p99().as_secs_f64());
+    // labeled per-lane series last: the `gauge` closure's borrow of `out`
+    // has ended by here
+    for (i, b) in m.lane_batches.iter().enumerate() {
+        out.push_str(&format!("mergemoe_lane_batches_total{{lane=\"{i}\"}} {b}\n"));
+    }
     out
 }
 
@@ -545,6 +560,16 @@ mod tests {
         // unparsable Content-Length
         let mut r =
             BufReader::new(&b"POST /s HTTP/1.1\r\nContent-Length: banana\r\n\r\n"[..]);
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 400);
+        // duplicate Content-Length: last-one-wins would desync framing —
+        // must be a 400, even when the values agree
+        let mut r = BufReader::new(
+            &b"POST /s HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 9\r\n\r\nhi"[..],
+        );
+        assert_eq!(reject_code(parse_request(&mut r).unwrap()), 400);
+        let mut r = BufReader::new(
+            &b"POST /s HTTP/1.1\r\nContent-Length: 2\r\nContent-Length: 2\r\n\r\nhi"[..],
+        );
         assert_eq!(reject_code(parse_request(&mut r).unwrap()), 400);
         // garbage request line
         let mut r = BufReader::new(&b"\r\n\r\n"[..]);

@@ -44,7 +44,10 @@ impl LatencyHistogram {
         Duration::from_micros(self.max_us)
     }
 
-    /// Approximate quantile (upper bound of the containing bucket).
+    /// Approximate quantile (upper bound of the containing bucket, clamped
+    /// to the observed maximum — the bucket bound alone can overshoot
+    /// `max()`, and the overflow bucket's bound is ~268s regardless of the
+    /// true tail).
     pub fn quantile(&self, q: f64) -> Duration {
         if self.count == 0 {
             return Duration::ZERO;
@@ -54,7 +57,7 @@ impl LatencyHistogram {
         for (i, &c) in self.buckets.iter().enumerate() {
             acc += c;
             if acc >= target {
-                return Duration::from_micros(1u64 << (i + 1));
+                return Duration::from_micros((1u64 << (i + 1)).min(self.max_us));
             }
         }
         self.max()
@@ -109,6 +112,13 @@ pub struct ServerMetrics {
     /// Variant hot-swaps rolled back (staging/probe failed; incumbent
     /// untouched).
     pub swap_rollbacks: u64,
+    /// Batches whose formation overlapped an in-flight forward pass (the
+    /// collector handed off while at least one lane was computing) — the
+    /// continuous-batching win made visible.
+    pub overlapped: u64,
+    /// Batches computed per lane, indexed by lane id (empty until the
+    /// first lane reports).
+    pub lane_batches: Vec<u64>,
 }
 
 impl ServerMetrics {
@@ -171,6 +181,15 @@ impl ServerMetrics {
             )
         } else {
             String::new()
+        } + &if self.overlapped > 0 || self.lane_batches.len() > 1 {
+            format!(
+                " lanes: n={} batches={:?} overlapped={}",
+                self.lane_batches.len().max(1),
+                self.lane_batches,
+                self.overlapped,
+            )
+        } else {
+            String::new()
         } + &if self.reloads + self.reload_failures + self.swaps + self.swap_rollbacks > 0 {
             format!(
                 " admin: reloads={} reload_failures={} swaps={} swap_rollbacks={}",
@@ -197,7 +216,21 @@ mod tests {
         let p99 = h.quantile(0.99);
         assert!(p50 <= p99);
         assert!(h.mean() > Duration::ZERO);
-        assert!(p99 <= h.max() * 2);
+        assert!(p99 <= h.max());
+    }
+
+    #[test]
+    fn quantile_never_exceeds_recorded_max() {
+        // Regression: the containing bucket's upper bound (2048µs here)
+        // used to be returned verbatim, overshooting the observed max.
+        let mut h = LatencyHistogram::default();
+        h.record(Duration::from_micros(1500));
+        assert_eq!(h.quantile(0.5), Duration::from_micros(1500));
+        assert_eq!(h.quantile(0.99), h.max());
+        // the overflow bucket must clamp too, not report ~268s
+        let mut big = LatencyHistogram::default();
+        big.record(Duration::from_secs(200));
+        assert_eq!(big.quantile(0.99), big.max());
     }
 
     #[test]
@@ -244,6 +277,17 @@ mod tests {
         assert!(m
             .report()
             .contains("admin: reloads=2 reload_failures=0 swaps=0 swap_rollbacks=1"));
+    }
+
+    #[test]
+    fn lane_counters_appear_in_report_only_when_multi_lane_or_overlapped() {
+        let mut m = ServerMetrics::default();
+        m.requests = 10;
+        m.lane_batches = vec![5];
+        assert!(!m.report().contains("lanes:"));
+        m.lane_batches = vec![3, 2];
+        m.overlapped = 4;
+        assert!(m.report().contains("lanes: n=2 batches=[3, 2] overlapped=4"));
     }
 
     #[test]

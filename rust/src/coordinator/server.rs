@@ -1,7 +1,23 @@
-//! The scoring server: a supervised worker thread owning the engine + model,
-//! fed by the dynamic batcher through a **bounded** admission queue,
+//! The scoring server: **continuous batching** over N supervised compute
+//! lanes, fed by the dynamic batcher through a **bounded** admission queue,
 //! answering option-scoring requests (the serving workload of the e2e
 //! example — a compressed model deployed behind a batched endpoint).
+//!
+//! Batch *formation* and batch *compute* run on different threads: a
+//! dedicated collector runs [`next_batch`] non-stop, so a request admitted
+//! during batch k's forward pass joins batch k+1 immediately instead of
+//! waiting out compute + `max_wait` serially. Formed batches cross a
+//! bounded MPMC [`WorkQueue`] (capacity = lane count, so formation runs at
+//! most one batch ahead per lane) to [`ServerConfig::workers`] compute
+//! lanes (`--workers` / `MERGEMOE_WORKERS`, default 1), each owning its own
+//! engine, workspace, and steady-state buffers. `workers = 1` reproduces
+//! the pre-split single-worker serving path: one lane executes batches in
+//! formation order, and per-request scores are bit-identical (scores are
+//! row-independent of batch composition; ARCHITECTURE.md ledger, pinned by
+//! `tests/continuous_batching.rs`). The formation-vs-compute overlap is
+//! observable: `overlapped` counts batches formed while a lane was mid
+//! forward pass, `collector_idle` and per-lane `lane_batches` land on
+//! `/metrics`.
 //!
 //! Overload hardening, end to end:
 //!
@@ -20,17 +36,19 @@
 //!   under capped exponential backoff; a batch that keeps failing is split
 //!   in half recursively, so one poison request fails alone instead of
 //!   failing its batchmates. Fatal errors fail the batch fast.
-//! * **Worker supervision** — a panic mid-batch is caught, the in-flight
-//!   requests are failed with [`ServeError::WorkerPanicked`], and the worker
+//! * **Lane supervision** — a panic mid-batch is caught, the in-flight
+//!   requests are failed with [`ServeError::WorkerPanicked`], and the lane
 //!   respawns with a fresh engine + workspace (panics can leave both
-//!   mid-update) up to [`ServerConfig::restart_budget`]; past the budget the
-//!   server degrades to fast-rejecting ([`ServeError::Degraded`], visible on
-//!   `/healthz`).
+//!   mid-update) under the **shared** [`ServerConfig::restart_budget`] all
+//!   lanes draw from; past the budget the server degrades to
+//!   fast-rejecting ([`ServeError::Degraded`], visible on `/healthz`).
 //! * **Graceful drain** — [`ScoringServer::shutdown`] / [`drain`](ScoringServer::drain)
 //!   stop admission (state flip observed by every handle clone), enqueue an
-//!   explicit close sentinel behind the admitted work, finish that work
-//!   under a drain timeout, and join. Shutdown never depends on clients
-//!   dropping their [`ServerHandle`] clones.
+//!   explicit close sentinel behind the admitted work, let the collector
+//!   flush the backlog into the lane queue and close it, then join every
+//!   lane once it has drained its share — all under a drain timeout.
+//!   Shutdown never depends on clients dropping their [`ServerHandle`]
+//!   clones.
 //!
 //! * **Atomic hot-swap** ([`AdminHandle::swap_in`]) — the serving weights
 //!   live in a mutex-guarded [`VariantSlot`] (an `Arc<ModelWeights>` plus a
@@ -55,18 +73,22 @@
 //! behaviors are reproducible tier-1 tests (`tests/fault_injection.rs`,
 //! `tests/registry.rs`), not claims. With no plan configured the
 //! steady-state loop is the exact unhardened execution: gather tokens,
-//! forward, score, reply — reusing one [`Workspace`], one logits tensor,
-//! one token buffer and one score buffer, so it runs without touching the
-//! allocator once the arena is warm (an `Arc` clone on swap is pointer
-//! bookkeeping, not a weight copy). Workspaces are per-worker by contract:
-//! never shared across threads.
+//! forward, score, reply — each lane reusing one [`Workspace`], one logits
+//! tensor, one token buffer and one score buffer, so it runs without
+//! touching the allocator once the arena is warm (an `Arc` clone on swap is
+//! pointer bookkeeping, not a weight copy). Workspaces are per-lane by
+//! contract: never shared across threads.
 //!
-//! Engine objects wrap PJRT client state and are not `Send`, so the worker
-//! *constructs* its engine inside the thread from a factory closure (called
-//! again on every respawn); clients hold a cheap cloneable handle.
+//! Engine objects wrap PJRT client state and are not `Send` (which is also
+//! why lanes cannot be handed [`Engine::fork`] results across threads), so
+//! every lane *constructs* its own engine inside its thread from one shared
+//! `Fn` factory closure (called again on every respawn) — equivalent
+//! independent ownership; clients hold a cheap cloneable handle.
 
 use std::panic::{catch_unwind, AssertUnwindSafe};
-use std::sync::atomic::{AtomicBool, AtomicIsize, AtomicU64, AtomicU8, AtomicUsize, Ordering};
+use std::sync::atomic::{
+    AtomicBool, AtomicIsize, AtomicU32, AtomicU64, AtomicU8, AtomicUsize, Ordering,
+};
 use std::sync::mpsc::{channel, Receiver, Sender, SyncSender, TrySendError};
 use std::sync::{mpsc::sync_channel, Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -83,6 +105,7 @@ use crate::model::ModelWeights;
 use crate::runtime::{Engine, NativeEngine};
 use crate::tensor::Tensor;
 use crate::util::fault::{classify, FaultAction, FaultClass, FaultPlan, InjectedFault};
+use crate::util::par::WorkQueue;
 
 /// Typed request-path errors: every way the hardened server can refuse or
 /// fail a request, distinguishable by clients (and mapped to HTTP statuses
@@ -162,6 +185,23 @@ pub struct ServerConfig {
     pub drain_timeout: Duration,
     /// Fault-injection source (see [`FaultSetting`]).
     pub fault: FaultSetting,
+    /// Compute lanes pulling formed batches from the collector. `1` (the
+    /// default) executes batches one at a time in formation order — the
+    /// single-worker serving path. Default: `MERGEMOE_WORKERS` or 1.
+    pub workers: usize,
+}
+
+fn env_workers() -> usize {
+    match std::env::var("MERGEMOE_WORKERS") {
+        Ok(v) => match v.parse::<usize>() {
+            Ok(n) if n >= 1 => n,
+            _ => {
+                crate::warnlog!("ignoring invalid MERGEMOE_WORKERS={v:?} (want integer >= 1)");
+                1
+            }
+        },
+        Err(_) => 1,
+    }
 }
 
 fn env_queue_cap() -> usize {
@@ -190,6 +230,7 @@ impl Default for ServerConfig {
             restart_budget: 3,
             drain_timeout: Duration::from_secs(5),
             fault: FaultSetting::FromEnv,
+            workers: env_workers(),
         }
     }
 }
@@ -253,8 +294,19 @@ struct Shared {
     last_reload: Mutex<String>,
     /// Why the server degraded (empty while healthy).
     degraded_reason: Mutex<String>,
-    /// Restart budget the worker booted with (for `/healthz` accounting).
+    /// Restart budget the server booted with (for `/healthz` accounting).
     restart_budget: u32,
+    /// Respawns still available — one pool shared by every lane.
+    restarts_left: AtomicU32,
+    /// Compute lanes the server booted with.
+    workers: usize,
+    /// True while the collector has no batch in hand (blocked in batch
+    /// formation / waiting for requests); false while handing a formed
+    /// batch to the lanes. `/metrics` gauge.
+    collector_idle: AtomicBool,
+    /// Lanes currently inside [`Lane::execute`]; the collector samples this
+    /// at handoff to count formation-vs-compute overlap (`overlapped`).
+    computing: AtomicUsize,
 }
 
 impl Shared {
@@ -285,7 +337,19 @@ impl Shared {
             last_reload: Mutex::new("never".into()),
             degraded_reason: Mutex::new(String::new()),
             restart_budget: cfg.restart_budget,
+            restarts_left: AtomicU32::new(cfg.restart_budget),
+            workers: cfg.workers.max(1),
+            collector_idle: AtomicBool::new(true),
+            computing: AtomicUsize::new(0),
         }
+    }
+
+    /// Claim one respawn from the shared restart budget. `false` once the
+    /// budget is exhausted — the claiming lane should degrade the server.
+    fn try_claim_restart(&self) -> bool {
+        self.restarts_left
+            .fetch_update(Ordering::AcqRel, Ordering::Acquire, |n| n.checked_sub(1))
+            .is_ok()
     }
 
     fn depth(&self) -> usize {
@@ -445,6 +509,17 @@ impl ServerStatus {
     /// Worker restart budget the server booted with.
     pub fn restart_budget(&self) -> u32 {
         self.shared.restart_budget
+    }
+
+    /// Compute lanes the server booted with.
+    pub fn workers(&self) -> usize {
+        self.shared.workers
+    }
+
+    /// True while the collector has no batch in hand (blocked in batch
+    /// formation / waiting for requests).
+    pub fn collector_idle(&self) -> bool {
+        self.shared.collector_idle.load(Ordering::Acquire)
     }
 }
 
@@ -643,18 +718,109 @@ enum BatchError {
     Failed(FaultClass, String),
 }
 
-/// The worker-side half: owns the engine and every steady-state buffer;
-/// holds the serving weights as an `Arc` refreshed from the shared
+/// A formed batch in flight from the collector to a lane.
+type FormedBatch = Vec<WorkItem<Request>>;
+
+/// Reply [`ServeError::DeadlineExceeded`] to an item whose deadline passed
+/// while queued (no forward pass was spent on it), recording its latency
+/// and the expiry counters.
+fn fail_expired(shared: &Shared, it: WorkItem<Request>) {
+    let r = &it.payload;
+    let mut m = shared.metrics.lock().unwrap();
+    m.requests += 1;
+    m.errors += 1;
+    m.expired += 1;
+    m.queue_latency.record(it.enqueued.duration_since(r.submitted));
+    m.total_latency.record(r.submitted.elapsed());
+    let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
+}
+
+/// Reply `err` to every item, recording request/error counters and latency
+/// (failures are visible in p99, not invisible).
+fn fail_all(shared: &Shared, items: Vec<WorkItem<Request>>, err: ServeError) {
+    let mut m = shared.metrics.lock().unwrap();
+    for it in items {
+        let r = &it.payload;
+        m.requests += 1;
+        m.errors += 1;
+        m.queue_latency.record(it.enqueued.duration_since(r.submitted));
+        m.total_latency.record(r.submitted.elapsed());
+        let _ = r.reply.send(Err(err.clone()));
+    }
+}
+
+/// Closes the lanes' work queue when dropped — attached to the collector
+/// thread so a collector that unwinds can never strand lanes in
+/// [`WorkQueue::pop`].
+struct CloseQueueOnDrop(Arc<WorkQueue<FormedBatch>>);
+
+impl Drop for CloseQueueOnDrop {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+/// The batch-formation half of the server: runs [`next_batch`] continuously
+/// on its own thread and hands every formed batch to the lanes' queue —
+/// which is what lets batch k+1 form while batch k computes. Expired items
+/// are failed here (they never cost a lane anything); their queue-depth
+/// decrement happens with the reply, while ready items are decremented by
+/// the lane that pops them (so `depth` keeps counting work the server has
+/// not yet started).
+fn run_collector(
+    shared: &Shared,
+    rx: &Receiver<Ctl<Request>>,
+    queue: &WorkQueue<FormedBatch>,
+    max_batch: usize,
+    max_wait: Duration,
+) {
+    loop {
+        shared.collector_idle.store(true, Ordering::Release);
+        let decision = next_batch(rx, max_batch, max_wait, |r: &Request| r.deadline);
+        shared.collector_idle.store(false, Ordering::Release);
+        match decision {
+            BatchDecision::Shutdown => break,
+            BatchDecision::Flush(batch) => {
+                if !batch.expired.is_empty() {
+                    shared
+                        .depth
+                        .fetch_sub(batch.expired.len() as isize, Ordering::Relaxed);
+                    for it in batch.expired {
+                        fail_expired(shared, it);
+                    }
+                }
+                if !batch.ready.is_empty() {
+                    // overlap counter: a lane is mid-forward right now, so
+                    // this batch formed during compute — the continuous
+                    // batching win, pinned by tests/continuous_batching.rs
+                    if shared.computing.load(Ordering::Acquire) > 0 {
+                        shared.metrics.lock().unwrap().overlapped += 1;
+                    }
+                    // only the collector itself closes the queue (on exit),
+                    // so a push can never observe a closed queue
+                    let _ = queue.push(batch.ready);
+                }
+                if batch.close {
+                    break;
+                }
+            }
+        }
+    }
+}
+
+/// One compute lane: owns an engine and every steady-state buffer; holds
+/// the serving weights as an `Arc` refreshed from the shared
 /// [`VariantSlot`] between batches (never mid-batch — an in-flight batch
-/// always finishes on the weights it started with). Lives entirely on the
-/// worker thread.
-struct Worker<E, F> {
+/// always finishes on the weights it started with). Lives entirely on its
+/// own thread; the engine factory is shared (`Arc<F>`, `Fn`) because every
+/// lane — and every supervised respawn — constructs from it.
+struct Lane<E, F> {
+    id: usize,
     model: Arc<ModelWeights>,
     cfg: ServerConfig,
     shared: Arc<Shared>,
-    make_engine: F,
+    make_engine: Arc<F>,
     engine: Option<E>,
-    restarts_left: u32,
     fault: Option<Arc<FaultPlan>>,
     /// Last observed [`Shared::model_gen`] / [`Shared::tuning_gen`].
     model_gen_seen: u64,
@@ -666,35 +832,21 @@ struct Worker<E, F> {
     scores: Vec<f64>,
 }
 
-impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
-    fn run(mut self, rx: Receiver<Ctl<Request>>) {
+impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
+    fn run(mut self, queue: &WorkQueue<FormedBatch>) {
         match (self.make_engine)() {
             Ok(e) => self.engine = Some(e),
             Err(e) => {
                 crate::warnlog!("engine construction failed: {e:#}");
                 self.degrade("engine construction failed");
+                // keep popping: an engine-less lane fails its share of the
+                // work fast instead of letting it pile up in the queue
             }
         }
-        loop {
+        while let Some(items) = queue.pop() {
+            self.shared.depth.fetch_sub(items.len() as isize, Ordering::Relaxed);
             self.refresh();
-            match next_batch(&rx, self.cfg.max_batch, self.cfg.max_wait, |r: &Request| {
-                r.deadline
-            }) {
-                BatchDecision::Shutdown => break,
-                BatchDecision::Flush(batch) => {
-                    let n = (batch.ready.len() + batch.expired.len()) as isize;
-                    self.shared.depth.fetch_sub(n, Ordering::Relaxed);
-                    for it in batch.expired {
-                        self.fail_expired(it);
-                    }
-                    if !batch.ready.is_empty() {
-                        self.dispatch(batch.ready);
-                    }
-                    if batch.close {
-                        break;
-                    }
-                }
-            }
+            self.dispatch(items);
         }
     }
 
@@ -722,10 +874,15 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
 
     fn dispatch(&mut self, items: Vec<WorkItem<Request>>) {
         if self.engine.is_none() {
-            self.fail_all(items, ServeError::Degraded);
+            fail_all(&self.shared, items, ServeError::Degraded);
             return;
         }
+        // overlap accounting: the collector samples `computing` while
+        // handing off (execute never unwinds — panics are contained in
+        // try_batch — so the decrement always runs)
+        self.shared.computing.fetch_add(1, Ordering::AcqRel);
         self.execute(items);
+        self.shared.computing.fetch_sub(1, Ordering::AcqRel);
     }
 
     /// Run one (sub-)batch to completion: retry transient failures under
@@ -741,7 +898,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
                 .into_iter()
                 .partition(|it| it.payload.deadline.is_some_and(|d| d <= now));
             for it in expired {
-                self.fail_expired(it);
+                fail_expired(&self.shared, it);
             }
             items = live;
         }
@@ -750,7 +907,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
         }
         // past the drain window, queued work is shed instead of computed
         if self.past_drain_deadline() {
-            self.fail_all(items, ServeError::ShuttingDown);
+            fail_all(&self.shared, items, ServeError::ShuttingDown);
             return;
         }
         let mut attempt = 0u32;
@@ -766,7 +923,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
                 }
                 Err(BatchError::Failed(FaultClass::Fatal, msg)) => {
                     crate::warnlog!("fatal engine error, failing batch of {}: {msg}", items.len());
-                    self.fail_all(items, ServeError::Engine(msg));
+                    fail_all(&self.shared, items, ServeError::Engine(msg));
                     return;
                 }
                 Err(BatchError::Failed(FaultClass::Transient, msg)) => {
@@ -784,7 +941,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
                             self.execute(items);
                             self.execute(right);
                         } else {
-                            self.fail_all(items, ServeError::Engine(msg));
+                            fail_all(&self.shared, items, ServeError::Engine(msg));
                         }
                         return;
                     }
@@ -808,7 +965,7 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
             self.tokens.extend_from_slice(&it.payload.tokens);
         }
         let t_batch = Instant::now();
-        let Worker { engine, ws, logits, tokens, scores, model, fault, .. } = self;
+        let Lane { engine, ws, logits, tokens, scores, model, fault, .. } = self;
         let engine = engine.as_mut().expect("dispatch() guarantees an engine");
         let result = catch_unwind(AssertUnwindSafe(|| -> Result<()> {
             if let Some(plan) = fault.as_deref() {
@@ -848,6 +1005,10 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
             m.batched_sequences += b as u64;
             m.batch_latency.record(t_batch.elapsed());
             m.wall_seconds = self.started.elapsed().as_secs_f64();
+            if m.lane_batches.len() < self.shared.workers {
+                m.lane_batches.resize(self.shared.workers, 0);
+            }
+            m.lane_batches[self.id] += 1;
         }
         match result {
             Ok(Ok(())) => Ok(()),
@@ -863,31 +1024,33 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
         }
     }
 
-    /// Supervisor: fail the in-flight requests, then respawn the worker
-    /// state (fresh engine + workspace) or degrade once the budget is gone.
+    /// Supervisor: fail the in-flight requests, then respawn the lane
+    /// state (fresh engine + workspace) or degrade once the shared restart
+    /// budget is gone.
     fn after_panic(&mut self, items: Vec<WorkItem<Request>>, msg: String) {
         crate::warnlog!(
-            "worker panicked mid-batch ({msg}); failing {} in-flight request(s)",
+            "lane {} panicked mid-batch ({msg}); failing {} in-flight request(s)",
+            self.id,
             items.len()
         );
-        self.fail_all(items, ServeError::WorkerPanicked);
+        fail_all(&self.shared, items, ServeError::WorkerPanicked);
         // the panic may have interrupted an arena or engine mid-update:
         // discard both and rebuild from scratch
         self.engine = None;
         self.ws = Workspace::new();
         self.logits = Tensor::default();
-        if self.restarts_left == 0 {
+        if !self.shared.try_claim_restart() {
             self.degrade("worker restart budget exhausted");
             return;
         }
-        self.restarts_left -= 1;
         match (self.make_engine)() {
             Ok(e) => {
                 self.engine = Some(e);
                 self.shared.metrics.lock().unwrap().restarted += 1;
                 crate::info!(
-                    "worker respawned with a fresh engine ({} restart(s) left)",
-                    self.restarts_left
+                    "lane {} respawned with a fresh engine ({} restart(s) left)",
+                    self.id,
+                    self.shared.restarts_left.load(Ordering::Relaxed)
                 );
             }
             Err(e) => {
@@ -924,30 +1087,6 @@ impl<E: Engine, F: FnMut() -> Result<E>> Worker<E, F> {
         }
     }
 
-    /// Reply `err` to every item, recording request/error counters and
-    /// latency (failures are visible in p99, not invisible).
-    fn fail_all(&self, items: Vec<WorkItem<Request>>, err: ServeError) {
-        let mut m = self.shared.metrics.lock().unwrap();
-        for it in items {
-            let r = &it.payload;
-            m.requests += 1;
-            m.errors += 1;
-            m.queue_latency.record(it.enqueued.duration_since(r.submitted));
-            m.total_latency.record(r.submitted.elapsed());
-            let _ = r.reply.send(Err(err.clone()));
-        }
-    }
-
-    fn fail_expired(&self, it: WorkItem<Request>) {
-        let r = &it.payload;
-        let mut m = self.shared.metrics.lock().unwrap();
-        m.requests += 1;
-        m.errors += 1;
-        m.expired += 1;
-        m.queue_latency.record(it.enqueued.duration_since(r.submitted));
-        m.total_latency.record(r.submitted.elapsed());
-        let _ = r.reply.send(Err(ServeError::DeadlineExceeded));
-    }
 }
 
 /// Capped exponential backoff: `base * 2^(attempt-1)`, capped at 100ms.
@@ -957,27 +1096,30 @@ fn backoff_delay(base: Duration, attempt: u32) -> Duration {
     base.saturating_mul(1u32 << shift).min(CAP)
 }
 
-/// The scoring server. Owns the supervised worker thread; dropping it (or
-/// calling [`ScoringServer::shutdown`]) drains and joins the worker.
+/// The scoring server. Owns the collector thread and every compute lane;
+/// dropping it (or calling [`ScoringServer::shutdown`]) drains and joins
+/// them all.
 pub struct ScoringServer {
     handle: ServerHandle,
     admin: AdminHandle,
     shared: Arc<Shared>,
     tx: SyncSender<Ctl<Request>>,
-    join: Option<std::thread::JoinHandle<()>>,
+    collector: Option<std::thread::JoinHandle<()>>,
+    lanes: Vec<std::thread::JoinHandle<()>>,
     drain_timeout: Duration,
 }
 
 impl ScoringServer {
-    /// Start the server. `make_engine` runs on the worker thread and builds
-    /// the backend (e.g. `|| PjrtEngine::new(manifest)`); it is called again
-    /// on every supervised respawn. Fails fast on construction errors (e.g.
-    /// an unresolvable padding token) instead of panicking on the first
+    /// Start the server. `make_engine` runs on each lane thread and builds
+    /// its backend (e.g. `|| PjrtEngine::new(manifest)`); it is shared by
+    /// every lane and called again on every supervised respawn, hence the
+    /// `Fn + Sync` bound. Fails fast on construction errors (e.g. an
+    /// unresolvable padding token) instead of panicking on the first
     /// request.
     pub fn start<E, F>(model: ModelWeights, cfg: ServerConfig, make_engine: F) -> Result<ScoringServer>
     where
         E: Engine,
-        F: FnMut() -> Result<E> + Send + 'static,
+        F: Fn() -> Result<E> + Send + Sync + 'static,
     {
         let pad = tasks::encode("\n").first().copied().ok_or_else(|| {
             anyhow!("cannot resolve pad token: encoding \"\\n\" produced no tokens")
@@ -1006,20 +1148,26 @@ impl ScoringServer {
             pad,
         };
         let drain_timeout = cfg.drain_timeout;
-        let restart_budget = cfg.restart_budget;
-        let shared2 = shared.clone();
-        let join = std::thread::spawn(move || {
-            // Steady-state serving buffers: one workspace per worker, one
+        let workers = cfg.workers.max(1);
+        // formed-batch queue: capacity = lane count, so the collector runs
+        // at most one batch ahead per lane before blocking (bounded memory,
+        // and requests keep accruing batching opportunity in the admission
+        // channel instead of being committed to stale batches early)
+        let queue = Arc::new(WorkQueue::new(workers));
+        let make_engine = Arc::new(make_engine);
+        let mut lanes = Vec::with_capacity(workers);
+        for id in 0..workers {
+            // Steady-state serving buffers: one workspace per lane, one
             // logits tensor, one token gather, one score buffer — reused
             // across every batch (and rebuilt fresh after a panic).
-            let worker = Worker {
-                model,
-                cfg,
-                shared: shared2,
-                make_engine,
+            let lane = Lane {
+                id,
+                model: model.clone(),
+                cfg: cfg.clone(),
+                shared: shared.clone(),
+                make_engine: make_engine.clone(),
                 engine: None,
-                restarts_left: restart_budget,
-                fault,
+                fault: fault.clone(),
                 model_gen_seen: 0,
                 tuning_gen_seen: 0,
                 started: Instant::now(),
@@ -1028,9 +1176,27 @@ impl ScoringServer {
                 tokens: Vec::new(),
                 scores: Vec::new(),
             };
-            worker.run(rx);
-        });
-        Ok(ScoringServer { handle, admin, shared, tx, join: Some(join), drain_timeout })
+            let q = queue.clone();
+            lanes.push(
+                std::thread::Builder::new()
+                    .name(format!("mergemoe-lane-{id}"))
+                    .spawn(move || lane.run(&q))
+                    .context("spawning compute lane")?,
+            );
+        }
+        let shared2 = shared.clone();
+        let (max_batch, max_wait) = (cfg.max_batch, cfg.max_wait);
+        let collector = std::thread::Builder::new()
+            .name("mergemoe-collector".into())
+            .spawn(move || {
+                // end-of-stream for every lane when the collector exits —
+                // normally *or* by unwinding: lanes drain what is queued,
+                // then stop
+                let close = CloseQueueOnDrop(queue);
+                run_collector(&shared2, &rx, &close.0, max_batch, max_wait);
+            })
+            .context("spawning batch collector")?;
+        Ok(ScoringServer { handle, admin, shared, tx, collector: Some(collector), lanes, drain_timeout })
     }
 
     /// A cloneable client handle.
@@ -1076,17 +1242,19 @@ impl ScoringServer {
     }
 
     fn close(&mut self, timeout: Duration) {
-        let Some(join) = self.join.take() else { return };
+        let Some(collector) = self.collector.take() else { return };
         self.shared.state.store(STATE_DRAINING, Ordering::Release);
         *self.shared.drain_deadline.lock().unwrap() = Some(Instant::now() + timeout);
         // Explicit close protocol: the sentinel queues FIFO behind every
-        // admitted request, so the worker finishes the backlog then exits.
-        // A full queue just means waiting for the live worker to free a
-        // slot; a vanished worker is observed via is_finished. Either way
-        // this terminates — shutdown does not depend on clients dropping
-        // their handle clones.
+        // admitted request; the collector flushes the backlog into the lane
+        // queue, closes it, and exits, and each lane drains its share then
+        // exits. A full admission queue just means waiting for the live
+        // collector to free a slot; a vanished collector is observed via
+        // is_finished. Either way this terminates — shutdown does not
+        // depend on clients dropping their handle clones, and past the
+        // drain deadline the lanes shed their remaining work fast.
         loop {
-            if join.is_finished() {
+            if collector.is_finished() {
                 break;
             }
             match self.tx.try_send(Ctl::Close) {
@@ -1095,7 +1263,12 @@ impl ScoringServer {
                 Err(TrySendError::Disconnected(_)) => break,
             }
         }
-        let _ = join.join();
+        // join order matters: the collector's exit closes the lane queue,
+        // which is what lets every lane observe end-of-stream
+        let _ = collector.join();
+        for lane in self.lanes.drain(..) {
+            let _ = lane.join();
+        }
     }
 }
 
@@ -1210,6 +1383,40 @@ mod tests {
         // (does not set the env var — just pins the default)
         let cfg = ServerConfig::default();
         assert!(cfg.queue_cap >= 1);
+        assert!(cfg.workers >= 1);
+    }
+
+    #[test]
+    fn multi_lane_server_answers_everything_with_identical_scores() {
+        let model = tiny_model(4, 2, false, 111);
+        let cfg = ServerConfig {
+            workers: 3,
+            max_batch: 4,
+            max_wait: Duration::from_millis(2),
+            seq_len: 64,
+            ..quiet_cfg()
+        };
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap();
+        assert_eq!(server.status().workers(), 3);
+        let h = server.handle();
+        let mut joins = Vec::new();
+        for _ in 0..24 {
+            let h = h.clone();
+            joins.push(std::thread::spawn(move || h.score("c:abcd|", "abcd.").unwrap()));
+        }
+        let scores: Vec<f64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        // identical requests score bit-identically no matter which lane ran
+        // them or which batch they landed in (row independence)
+        for s in &scores {
+            assert_eq!(s.to_bits(), scores[0].to_bits());
+        }
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.requests, 24);
+        assert_eq!(m.errors, 0);
+        // the per-lane counters partition the batch total
+        assert_eq!(m.lane_batches.iter().sum::<u64>(), m.batches);
+        assert!(m.lane_batches.len() <= 3);
     }
 
     #[test]

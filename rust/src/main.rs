@@ -66,7 +66,7 @@ fn usage() -> &'static str {
                 omitted = one source from --calib-tasks (default mixture)\n\
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
                 [--queue-cap N] [--deadline-ms N] [--retries N] [--restart-budget N]\n\
-                [--drain-ms N] [--listen ADDR[:PORT]] [--duration-s N]\n\
+                [--drain-ms N] [--workers N] [--listen ADDR[:PORT]] [--duration-s N]\n\
                 [--registry DIR [--variant NAME[@vN]]] [--config-file FILE.json]\n\
                 default: in-process demo load-gen; with --listen, serves the\n\
                 HTTP/1.1 API (POST /score, GET /healthz, GET /metrics, plus\n\
@@ -74,7 +74,9 @@ fn usage() -> &'static str {
                 --config-file is given) for --duration-s seconds (0 = forever).\n\
                 --variant boots from the registry (latest good version unless\n\
                 @vN pins one); --config-file applies validated tuning at boot\n\
-                and on each /admin/reload. overload knobs also via\n\
+                and on each /admin/reload. --workers N runs N compute lanes\n\
+                behind one continuous batch collector (default 1 = in-order;\n\
+                also via MERGEMOE_WORKERS). overload knobs also via\n\
                 MERGEMOE_QUEUE_CAP; fault injection via MERGEMOE_FAULT\n\
                 (seed:N[,transient:P][,fatal:P][,panic:P][,slow:P][,slow-ms:N]\n\
                 [,io-fail:N])\n\
@@ -115,6 +117,11 @@ fn run() -> Result<()> {
         // synthetic model — none of them require the artifacts manifest
         return cmd_registry(&artifacts, engine, &args);
     }
+    if args.subcommand.as_deref() == Some("serve") {
+        // serve also runs on a bare checkout (synthetic-model fallback on
+        // the native engine) so CI can smoke-test the server end to end
+        return cmd_serve(&artifacts, engine, &args);
+    }
     let mut ctx = Ctx::new(artifacts.clone(), engine)?;
     ctx.items = args.usize("items", ctx.items)?;
     ctx.batch = args.usize("batch", ctx.batch)?;
@@ -128,7 +135,6 @@ fn run() -> Result<()> {
         }
         "compress" => cmd_compress(&ctx, &args),
         "eval" => cmd_eval(&mut ctx, &args),
-        "serve" => cmd_serve(&ctx, &args),
         "stats" => cmd_stats(&ctx, &args),
         "selfcheck" => cmd_selfcheck(&ctx, &args),
         other => bail!("unknown subcommand {other:?}\n{}", usage()),
@@ -402,7 +408,11 @@ fn cmd_registry(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args)
     }
 }
 
-fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
+fn cmd_serve(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) -> Result<()> {
+    // Artifacts are optional (the `sweep`/`registry add` pattern): a bare
+    // checkout serves a synthetic model of the published shape on the
+    // native engine, which is what lets CI smoke-test the server.
+    let ctx = Ctx::new(artifacts.to_path_buf(), engine_sel).ok();
     let registry = match args.get("registry") {
         Some(dir) => Some(std::sync::Arc::new(Registry::open(std::path::Path::new(dir))?)),
         None => None,
@@ -430,7 +440,14 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
         (model, Some(meta))
     } else {
         let model_name = args.require("model")?;
-        (ctx.load_model(model_name)?, None)
+        let model = match &ctx {
+            Some(c) => c.load_model(model_name)?,
+            None => {
+                info!("no artifacts; serving a synthetic {model_name}-shaped model");
+                mergemoe::bench::load_or_synth(model_name).model
+            }
+        };
+        (model, None)
     };
     let n_requests = args.usize("requests", 200)?;
     let n_clients = args.usize("clients", 4)?;
@@ -438,16 +455,19 @@ fn cmd_serve(ctx: &Ctx, args: &Args) -> Result<()> {
     let cfg = ServerConfig {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
-        seq_len: ctx.manifest.seq_len,
+        seq_len: ctx.as_ref().map_or(default_cfg.seq_len, |c| c.manifest.seq_len),
         queue_cap: args.usize("queue-cap", default_cfg.queue_cap)?,
         deadline: args.opt_ms("deadline-ms")?,
         max_retries: args.usize("retries", default_cfg.max_retries as usize)? as u32,
         restart_budget: args.usize("restart-budget", default_cfg.restart_budget as usize)? as u32,
         drain_timeout: args.ms("drain-ms", default_cfg.drain_timeout)?,
+        workers: args.usize("workers", default_cfg.workers)?,
         ..default_cfg
     };
-    let sel = ctx.engine;
-    let artifacts = ctx.artifacts.clone();
+    // a bare checkout has no pallas artifact, so the lanes fall back to the
+    // native engine rather than booting degraded
+    let sel = if ctx.is_some() { engine_sel } else { EngineSel::Native };
+    let artifacts = artifacts.to_path_buf();
     // keep a copy of registry-booted weights: the post-start swap below
     // re-labels the slot with the registry version (name@vN, not name@local)
     let boot_copy = variant.as_ref().map(|_| model.clone());

@@ -809,6 +809,106 @@ where
     })
 }
 
+// ---------------------------------------------------------------------------
+// Bounded MPMC work queue: the collector→lanes primitive.
+// ---------------------------------------------------------------------------
+
+/// A bounded multi-producer multi-consumer work queue — [`Handoff`]'s
+/// sibling for the scoring server's continuous batcher, where one collector
+/// thread feeds N compute lanes.
+///
+/// Differences from [`Handoff`]: any number of threads may push or pop, and
+/// shutdown is one-sided and *public* — [`WorkQueue::close`] is the owner's
+/// explicit end-of-stream signal (pops drain what is queued, then return
+/// `None`; pushes at or after close return `false`). Items leave in FIFO
+/// order by lock acquisition: the queue itself never reorders, but which
+/// *consumer* wins a pop is scheduling-dependent — callers that need
+/// deterministic results must make them independent of consumer identity
+/// (the serving lanes do: per-request scores are independent of
+/// batch-to-lane assignment; see ARCHITECTURE.md).
+pub struct WorkQueue<T> {
+    inner: Mutex<WorkQueueInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+}
+
+struct WorkQueueInner<T> {
+    queue: VecDeque<T>,
+    capacity: usize,
+    closed: bool,
+}
+
+impl<T: Send> WorkQueue<T> {
+    /// A queue holding at most `capacity` items (clamped to ≥ 1).
+    pub fn new(capacity: usize) -> WorkQueue<T> {
+        WorkQueue {
+            inner: Mutex::new(WorkQueueInner {
+                queue: VecDeque::new(),
+                capacity: capacity.max(1),
+                closed: false,
+            }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+        }
+    }
+
+    /// Queue `item`, blocking while the queue is full. Returns `false`
+    /// (dropping `item`) once the queue is closed — the producer should
+    /// stop producing.
+    pub fn push(&self, item: T) -> bool {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if st.closed {
+                return false;
+            }
+            if st.queue.len() < st.capacity {
+                st.queue.push_back(item);
+                drop(st);
+                self.not_empty.notify_one();
+                return true;
+            }
+            st = self.not_full.wait(st).unwrap();
+        }
+    }
+
+    /// Dequeue the next item in push order, blocking while the queue is
+    /// empty and open. Returns `None` once the queue is closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut st = self.inner.lock().unwrap();
+        loop {
+            if let Some(v) = st.queue.pop_front() {
+                drop(st);
+                self.not_full.notify_one();
+                return Some(v);
+            }
+            if st.closed {
+                return None;
+            }
+            st = self.not_empty.wait(st).unwrap();
+        }
+    }
+
+    /// End-of-stream: consumers drain what is queued and then observe
+    /// `None`; blocked and future pushes return `false`. Idempotent.
+    pub fn close(&self) {
+        let mut st = self.inner.lock().unwrap();
+        st.closed = true;
+        drop(st);
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    /// Items currently queued (advisory: racy the instant it returns).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    /// Whether the queue is currently empty (advisory, like [`WorkQueue::len`]).
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -1138,5 +1238,96 @@ mod tests {
         let payload = result.expect_err("consumer panic must propagate");
         let msg = payload.downcast_ref::<&str>().copied().unwrap_or("");
         assert!(msg.contains("consumer boom"), "payload survived: {msg:?}");
+    }
+
+    #[test]
+    fn work_queue_is_fifo_with_a_single_consumer() {
+        let q = WorkQueue::new(8);
+        for i in 0..5u32 {
+            assert!(q.push(i));
+        }
+        assert_eq!(q.len(), 5);
+        q.close();
+        let mut got = Vec::new();
+        while let Some(v) = q.pop() {
+            got.push(v);
+        }
+        assert_eq!(got, vec![0, 1, 2, 3, 4], "close drains in push order");
+        assert!(q.is_empty());
+        assert!(q.pop().is_none(), "pop after drain stays None");
+    }
+
+    #[test]
+    fn work_queue_push_after_close_returns_false() {
+        let q = WorkQueue::new(2);
+        assert!(q.push(1u32));
+        q.close();
+        assert!(!q.push(2u32));
+        assert_eq!(q.pop(), Some(1));
+        assert_eq!(q.pop(), None);
+    }
+
+    #[test]
+    fn work_queue_multi_consumer_covers_every_item_exactly_once() {
+        let q = std::sync::Arc::new(WorkQueue::new(4));
+        let seen = std::sync::Arc::new(Mutex::new(Vec::new()));
+        let consumers: Vec<_> = (0..4)
+            .map(|_| {
+                let q = q.clone();
+                let seen = seen.clone();
+                std::thread::spawn(move || {
+                    while let Some(v) = q.pop() {
+                        seen.lock().unwrap().push(v);
+                    }
+                })
+            })
+            .collect();
+        for i in 0..100u32 {
+            assert!(q.push(i), "no consumer abandons an open queue");
+        }
+        q.close();
+        for c in consumers {
+            c.join().unwrap();
+        }
+        let mut got = seen.lock().unwrap().clone();
+        got.sort_unstable();
+        assert_eq!(got, (0..100).collect::<Vec<u32>>());
+    }
+
+    #[test]
+    fn work_queue_close_wakes_blocked_producers_and_consumers() {
+        // blocked consumer (empty queue) observes None on close
+        let q = std::sync::Arc::new(WorkQueue::<u32>::new(1));
+        let q2 = q.clone();
+        let consumer = std::thread::spawn(move || q2.pop());
+        // blocked producer (full queue) observes false on close
+        assert!(q.push(7), "open queue accepts a push");
+        let q3 = q.clone();
+        let producer = std::thread::spawn(move || {
+            let mut accepted = 0u32;
+            // fill until blocked-then-closed: the final push must return
+            // false rather than hang
+            loop {
+                if !q3.push(1000) {
+                    return accepted;
+                }
+                accepted += 1;
+            }
+        });
+        // close only once the consumer has taken its one item and the
+        // producer has refilled the queue — i.e. the producer is provably
+        // blocked in push — so the wake-on-close is what ends it
+        let t0 = std::time::Instant::now();
+        while !(consumer.is_finished() && q.len() == 1) {
+            assert!(
+                t0.elapsed() < std::time::Duration::from_secs(10),
+                "producer/consumer never reached the blocked state"
+            );
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        }
+        q.close();
+        let _ = consumer.join().unwrap();
+        let accepted = producer.join().unwrap();
+        assert!(accepted >= 1, "an open queue with capacity accepts pushes");
     }
 }

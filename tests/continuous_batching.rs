@@ -1,0 +1,331 @@
+//! Continuous-batching tests for the scoring server: the collector thread
+//! forms batch k+1 while the compute lanes run batch k, and N lanes
+//! (`ServerConfig::workers` / `MERGEMOE_WORKERS`) drain the formed-batch
+//! queue concurrently. These pin the three ledger claims:
+//!
+//! * overlap — a batch *forms during* an in-flight forward pass (the
+//!   `overlapped` counter is the witness);
+//! * bit-identity — per-request scores are bit-identical whether the
+//!   server runs 1 lane or many, serial or concurrent clients (sequences
+//!   are independent rows of the forward pass);
+//! * supervision + drain survive the collector/lane split — per-lane
+//!   panics respawn under one *shared* restart budget, and shutdown
+//!   completes every admitted request across all lanes.
+//!
+//! Native engine on a small synthetic model: runs on a bare checkout.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use anyhow::Result;
+use mergemoe::config::ModelConfig;
+use mergemoe::coordinator::{FaultSetting, ScoringServer, ServeError, ServerConfig};
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::workspace::Workspace;
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine};
+use mergemoe::tensor::Tensor;
+use mergemoe::util::fault::{FaultAction, FaultPlan};
+
+/// Same fixed model as tests/fault_injection.rs, so scores are comparable
+/// across the two suites.
+fn test_model() -> ModelWeights {
+    let cfg = ModelConfig {
+        name: "contbatch".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: false,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    synth_model(&cfg, 77)
+}
+
+/// Base config: explicit `workers` per test (the env default would let
+/// `MERGEMOE_WORKERS` change what a single-lane pin exercises).
+fn cfg_with_workers(workers: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        seq_len: 64,
+        fault: FaultSetting::Off,
+        retry_backoff: Duration::from_micros(200),
+        drain_timeout: Duration::from_secs(5),
+        workers,
+        ..ServerConfig::default()
+    }
+}
+
+/// Wait (bounded) until `pred` holds; panics on timeout so a broken
+/// condition fails the test instead of hanging it.
+fn wait_for(what: &str, mut pred: impl FnMut() -> bool) {
+    let t0 = Instant::now();
+    while !pred() {
+        assert!(t0.elapsed() < Duration::from_secs(10), "timed out waiting for {what}");
+        std::thread::sleep(Duration::from_millis(2));
+    }
+}
+
+// ---------------------------------------------------------------------------
+// the overlap pin: batch k+1 forms while batch k computes
+// ---------------------------------------------------------------------------
+
+/// A gate the test holds closed while an engine call is in flight. The
+/// engine-side wait is capped (8s) so a buggy test that never releases
+/// fails loudly instead of wedging the lane thread forever.
+struct Gate {
+    entered: AtomicUsize,
+    open: Mutex<bool>,
+    cv: Condvar,
+}
+
+impl Gate {
+    fn new() -> Arc<Gate> {
+        Arc::new(Gate { entered: AtomicUsize::new(0), open: Mutex::new(false), cv: Condvar::new() })
+    }
+
+    fn pass(&self) {
+        self.entered.fetch_add(1, Ordering::SeqCst);
+        let t0 = Instant::now();
+        let mut open = self.open.lock().unwrap();
+        while !*open && t0.elapsed() < Duration::from_secs(8) {
+            let (g, _) = self.cv.wait_timeout(open, Duration::from_millis(50)).unwrap();
+            open = g;
+        }
+    }
+
+    fn release(&self) {
+        *self.open.lock().unwrap() = true;
+        self.cv.notify_all();
+    }
+}
+
+/// Engine that parks every forward pass on the gate before delegating, so
+/// the test controls exactly when "batch k is computing".
+struct GatedEngine {
+    gate: Arc<Gate>,
+}
+
+impl Engine for GatedEngine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        self.gate.pass();
+        NativeEngine.logits(model, tokens, b, s)
+    }
+
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        self.gate.pass();
+        NativeEngine.logits_ws(model, tokens, b, s, ws, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "gated"
+    }
+}
+
+#[test]
+fn next_batch_forms_while_previous_batch_computes() {
+    let gate = Gate::new();
+    let g2 = gate.clone();
+    let server = ScoringServer::start(test_model(), cfg_with_workers(1), move || {
+        Ok(GatedEngine { gate: g2.clone() })
+    })
+    .unwrap();
+    let h = server.handle();
+    let status = server.status();
+
+    // request A reaches the (gated) engine: batch 1 is now computing
+    let ha = h.clone();
+    let a = std::thread::spawn(move || ha.score("c:abcd|", "abcd."));
+    let ge = gate.clone();
+    wait_for("batch 1 to enter the engine", move || ge.entered.load(Ordering::SeqCst) >= 1);
+
+    // request B arrives mid-compute; the collector must form and hand off
+    // batch 2 *now*, without waiting for batch 1 — the `overlapped`
+    // counter only increments when a handoff sees a lane mid-forward
+    let hb = h.clone();
+    let b = std::thread::spawn(move || hb.score("r:abc|", "cba."));
+    wait_for("batch 2 to form during batch 1's forward pass", || {
+        status.metrics().overlapped >= 1
+    });
+
+    gate.release();
+    assert!(a.join().unwrap().is_ok());
+    assert!(b.join().unwrap().is_ok());
+    let m = server.shutdown();
+    assert_eq!(m.batches, 2, "A and B must be separate batches");
+    assert_eq!(m.overlapped, 1, "exactly B's batch formed during compute");
+    assert_eq!(m.requests, 2);
+    assert_eq!(m.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity: lane count and batch composition never change a score
+// ---------------------------------------------------------------------------
+
+/// The fixed request set every identity test scores (distinct tasks, so
+/// a cross-wired reply would be caught by value, not just by count).
+const REQS: [(&str, &str); 4] =
+    [("c:abcd|", "abcd."), ("r:abc|", "cba."), ("c:xyxy|", "xyxy."), ("c:abab|", "abab.")];
+
+/// Score 12 requests (3 cycles of `REQS`) from 12 concurrent clients on a
+/// server with `workers` lanes; returns score bits indexed by request.
+fn concurrent_bits(workers: usize) -> Vec<u64> {
+    let server =
+        ScoringServer::start(test_model(), cfg_with_workers(workers), || Ok(NativeEngine))
+            .unwrap();
+    let h = server.handle();
+    let joins: Vec<_> = (0..12)
+        .map(|i| {
+            let hc = h.clone();
+            let (p, c) = REQS[i % REQS.len()];
+            std::thread::spawn(move || hc.score(p, c).unwrap().to_bits())
+        })
+        .collect();
+    let bits = joins.into_iter().map(|j| j.join().unwrap()).collect();
+    let m = server.shutdown();
+    assert_eq!(m.requests, 12);
+    assert_eq!(m.errors, 0);
+    bits
+}
+
+#[test]
+fn scores_are_bit_identical_across_lane_counts() {
+    // reference: one request per batch, single lane, serial client
+    let server =
+        ScoringServer::start(test_model(), cfg_with_workers(1), || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let want: Vec<u64> = (0..12)
+        .map(|i| {
+            let (p, c) = REQS[i % REQS.len()];
+            h.score(p, c).unwrap().to_bits()
+        })
+        .collect();
+    server.shutdown();
+
+    // single lane under concurrency: batches coalesce, scores must not move
+    assert_eq!(concurrent_bits(1), want, "workers=1 concurrent diverged from serial");
+    // multi-lane: requests land on arbitrary lanes in arbitrary batch
+    // compositions; every score still bit-identical (row independence)
+    assert_eq!(concurrent_bits(4), want, "workers=4 diverged from workers=1");
+}
+
+// ---------------------------------------------------------------------------
+// drain under multi-lane load: every admitted request completes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn drain_under_load_completes_all_admitted_across_lanes() {
+    // lane count honors MERGEMOE_WORKERS (the ci.sh multi-lane sweep sets
+    // it), clamped to >= 2 so the test is always genuinely multi-lane
+    let workers = ServerConfig::default().workers.max(2);
+    // the first `workers` batches stall (one per lane), so the backlog
+    // behind them is deterministically still queued when shutdown lands
+    let stalls: Vec<FaultAction> =
+        (0..workers).map(|_| FaultAction::Slow(Duration::from_millis(300))).collect();
+    let plan = Arc::new(FaultPlan::scripted(stalls));
+    let cfg =
+        ServerConfig { fault: FaultSetting::Plan(plan.clone()), ..cfg_with_workers(workers) };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+
+    // stall every lane back to back: each send waits until a lane has
+    // actually begun the stalled attempt before the next goes out, so two
+    // stall requests cannot coalesce into one batch
+    let mut stalled = Vec::new();
+    for i in 0..workers {
+        let hc = h.clone();
+        stalled.push(std::thread::spawn(move || hc.score("c:abcd|", "abcd.")));
+        let p = plan.clone();
+        wait_for("a lane to begin the stalled attempt", move || p.attempts() >= (i + 1) as u64);
+    }
+    // pile a backlog up behind the stalled lanes
+    let joins: Vec<_> = (0..8)
+        .map(|i| {
+            let hc = h.clone();
+            let (p, c) = REQS[i % REQS.len()];
+            std::thread::spawn(move || hc.score(p, c))
+        })
+        .collect();
+    wait_for("backlog to be admitted", || h.queue_depth() == 8);
+
+    // shut down while the backlog spans the collector, the formed-batch
+    // queue, and the stalled lanes
+    let shutdown = std::thread::spawn(move || server.shutdown());
+    for s in stalled {
+        assert!(s.join().unwrap().is_ok());
+    }
+    for j in joins {
+        assert!(j.join().unwrap().is_ok(), "drain must complete every admitted request");
+    }
+    let m = shutdown.join().unwrap();
+    assert_eq!(m.requests, (workers + 8) as u64);
+    assert_eq!(m.errors, 0);
+    assert_eq!(
+        m.lane_batches.iter().sum::<u64>(),
+        m.batches,
+        "every batch is attributed to exactly one lane"
+    );
+    // ...and new work is refused through the still-live handle clone
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::ShuttingDown));
+}
+
+// ---------------------------------------------------------------------------
+// supervision across lanes: respawn, then degrade, under ONE shared budget
+// ---------------------------------------------------------------------------
+
+#[test]
+fn lane_panics_respawn_under_shared_budget() {
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Panic, FaultAction::Panic]));
+    let cfg = ServerConfig {
+        fault: FaultSetting::Plan(plan.clone()),
+        restart_budget: 4,
+        ..cfg_with_workers(2)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    // two panics land on whichever lanes pop those batches; both respawn
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    // the fleet is healthy again: fresh engines serve the next request
+    assert!(h.score("c:abcd|", "abcd.").is_ok());
+    assert!(!server.status().degraded());
+    let m = server.shutdown();
+    assert_eq!(m.restarted, 2);
+    assert_eq!(m.errors, 2);
+}
+
+#[test]
+fn shared_budget_exhaustion_degrades_the_whole_server() {
+    // budget 1 across BOTH lanes: the first panic consumes it, the second
+    // (wherever it lands) must find it spent and degrade — a per-lane
+    // budget would have respawned a second time
+    let plan = Arc::new(FaultPlan::scripted(vec![FaultAction::Panic, FaultAction::Panic]));
+    let cfg = ServerConfig {
+        fault: FaultSetting::Plan(plan.clone()),
+        restart_budget: 1,
+        ..cfg_with_workers(2)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let status = server.status();
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::WorkerPanicked));
+    wait_for("degraded flag", || status.degraded());
+    assert_eq!(h.score("c:abcd|", "abcd."), Err(ServeError::Degraded));
+    let m = server.shutdown();
+    assert_eq!(m.restarted, 1, "only the single budgeted respawn happened");
+}

@@ -45,7 +45,10 @@ fn test_model() -> ModelWeights {
 }
 
 /// Base config for these tests: no env-sourced faults (each test scripts
-/// its own), short drain, tiny backoff so retries don't dominate runtime.
+/// its own), short drain, tiny backoff so retries don't dominate runtime,
+/// and a single compute lane so scripted fault schedules hit the one lane
+/// they were written for even when `MERGEMOE_WORKERS` is exported (the CI
+/// multi-lane sweep does; `env_fault_workload_survives` honors it).
 fn base_cfg() -> ServerConfig {
     ServerConfig {
         max_batch: 8,
@@ -54,6 +57,7 @@ fn base_cfg() -> ServerConfig {
         fault: FaultSetting::Off,
         retry_backoff: Duration::from_micros(200),
         drain_timeout: Duration::from_secs(5),
+        workers: 1,
         ..ServerConfig::default()
     }
 }
@@ -276,7 +280,15 @@ fn poison_request_fails_alone_after_batch_split() {
         FaultPlan::scripted(vec![FaultAction::Slow(Duration::from_millis(400))])
             .with_poison(poison_tok),
     );
-    let server = start_with_plan(ServerConfig { max_retries: 2, ..base_cfg() }, &plan);
+    // max_wait is generous here: the collector forms batches continuously,
+    // so the window must stay open long enough for all four requests to
+    // coalesce into one batch behind the stall
+    let cfg = ServerConfig {
+        max_retries: 2,
+        max_wait: Duration::from_millis(200),
+        ..base_cfg()
+    };
+    let server = start_with_plan(cfg, &plan);
     let h = server.handle();
     let stalled = stall_worker(&h, &plan);
 
@@ -447,7 +459,13 @@ fn env_fault_workload_survives() {
         .filter(|s| !s.trim().is_empty())
         .unwrap_or_else(|| "seed:7,transient:0.2,panic:0.05,slow:0.05,slow-ms:2".into());
     let plan = Arc::new(FaultPlan::parse(&spec).unwrap());
-    let cfg = ServerConfig { restart_budget: 64, ..base_cfg() };
+    // lane count comes from the environment here (MERGEMOE_WORKERS), so
+    // the ci.sh sweep exercises the same chaos workload multi-lane
+    let cfg = ServerConfig {
+        restart_budget: 64,
+        workers: ServerConfig::default().workers,
+        ..base_cfg()
+    };
     let server = start_with_plan(cfg, &plan);
     let h = server.handle();
     let n_clients = 3;
