@@ -21,7 +21,9 @@ cargo test -q
 # plans. Scoped to those test binaries on purpose — the rest of the suite
 # reads MERGEMOE_FAULT through the default FromEnv setting and is meant to
 # run fault-free. The registry suite additionally gets an io-fail crossing
-# (varied per seed) so the crash-safety gates fire at different points.
+# (varied per seed) so the crash-safety gates fire at different points; the
+# variant-cache suite composes a build-fail crossing on top, so cold
+# variant builds hit transient failures at seed-varied attempts.
 for seed in 11 223 4099; do
     echo "==> fault-injection + continuous-batching suites under MERGEMOE_FAULT seed:$seed"
     MERGEMOE_FAULT="seed:$seed,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
@@ -29,6 +31,9 @@ for seed in 11 223 4099; do
     echo "==> registry chaos suite under MERGEMOE_FAULT seed:$seed"
     MERGEMOE_FAULT="seed:$seed,transient:0.2,slow:0.05,slow-ms:2,io-fail:$((seed % 7))" \
         cargo test -q --test registry
+    echo "==> variant-cache chaos suite under MERGEMOE_FAULT seed:$seed (build-fail:$((seed % 5)), io-fail:$((seed % 7)))"
+    MERGEMOE_FAULT="seed:$seed,transient:0.2,slow:0.05,slow-ms:2,build-fail:$((seed % 5)),io-fail:$((seed % 7))" \
+        cargo test -q --test variant_cache
 done
 
 # Multi-lane chaos: the same suites with four compute lanes behind the
@@ -36,8 +41,8 @@ done
 # run genuinely concurrent at least once per CI run.
 echo "==> multi-lane chaos sweep (MERGEMOE_WORKERS=4, seed 31337)"
 MERGEMOE_WORKERS=4 \
-    MERGEMOE_FAULT="seed:31337,transient:0.2,panic:0.05,slow:0.05,slow-ms:2" \
-    cargo test -q --test fault_injection --test continuous_batching
+    MERGEMOE_FAULT="seed:31337,transient:0.2,panic:0.05,slow:0.05,slow-ms:2,build-fail:2" \
+    cargo test -q --test fault_injection --test continuous_batching --test variant_cache
 
 # Registry CLI smoke: add a synthetic variant to a scratch registry, list
 # it, and verify its hashes end-to-end through the real binary.
@@ -57,6 +62,56 @@ for workers in 1 4; do
         --requests 40 --clients 4 --workers "$workers")"
     grep -q "served:" <<<"$SERVE_OUT"
 done
+
+# Routed-/score smoke through the real wire protocol (bash /dev/tcp, no
+# curl dependency). Two short-lived servers:
+#   1. default budget — a routed request cold-builds its variant on demand;
+#   2. --cache-budget-mb 0 --route-fallback base — the variant can never be
+#      admitted (507 first, quarantined after), so routed traffic is served
+#      on the boot weights with the "fallback" marker.
+serve_smoke() { # serve_smoke <extra-flags...> ; sets SMOKE_PID + PORT
+    SMOKE_LOG=target/ci-serve-smoke.log
+    ./target/release/mergemoe serve --model beta --engine native --workers 2 \
+        --listen 127.0.0.1:0 "$@" >"$SMOKE_LOG" 2>&1 &
+    SMOKE_PID=$!
+    for _ in $(seq 100); do
+        grep -q "listening on" "$SMOKE_LOG" && break
+        sleep 0.2
+    done
+    PORT="$(sed -n 's#.*listening on http://[^:]*:\([0-9]*\).*#\1#p' "$SMOKE_LOG" | head -n1)"
+    [[ -n "$PORT" ]] || { echo "serve smoke: no listen line"; cat "$SMOKE_LOG"; exit 1; }
+}
+post_score() { # post_score <json-body> ; prints the full HTTP response
+    local body=$1
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'POST /score HTTP/1.1\r\nHost: localhost\r\nContent-Length: %s\r\nConnection: close\r\n\r\n%s' \
+        "${#body}" "$body" >&3
+    cat <&3
+    exec 3>&-
+}
+ROUTED_BODY='{"prompt":"c:abcd|","completion":"abcd.","method":"mergemoe","ratio":0.5,"calib_source":"mixture"}'
+
+get_path() { # get_path </path> ; prints the full HTTP response
+    exec 3<>"/dev/tcp/127.0.0.1/$PORT"
+    printf 'GET %s HTTP/1.1\r\nHost: localhost\r\nConnection: close\r\n\r\n' "$1" >&3
+    cat <&3
+    exec 3>&-
+}
+
+echo "==> mergemoe serve routed-/score smoke (cold build)"
+serve_smoke
+post_score "$ROUTED_BODY" | grep -q '"score"'        # cold: built on demand
+post_score "$ROUTED_BODY" | grep -q '"score"'        # warm: served from cache
+get_path /metrics | grep -q "mergemoe_cache_builds_total 1"
+kill "$SMOKE_PID" 2>/dev/null || true
+wait "$SMOKE_PID" 2>/dev/null || true
+
+echo "==> mergemoe serve routed-/score smoke (quarantine -> base fallback)"
+serve_smoke --cache-budget-mb 0 --route-fallback base
+post_score "$ROUTED_BODY" | grep -q "HTTP/1.1 507"   # typed budget rejection
+post_score "$ROUTED_BODY" | grep -q '"fallback"'     # quarantined -> boot weights, marked
+kill "$SMOKE_PID" 2>/dev/null || true
+wait "$SMOKE_PID" 2>/dev/null || true
 
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     echo "==> cargo fmt --check"

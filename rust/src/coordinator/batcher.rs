@@ -174,6 +174,26 @@ pub fn next_batch<T>(
     BatchDecision::Flush(Batch { ready, expired, close })
 }
 
+/// Partition a flushed batch into per-key groups — stable: arrival order
+/// is preserved inside each group, and groups appear in order of their
+/// first item. The collector uses this to split a mixed flush into
+/// per-variant batches, so batches handed to the compute lanes never mix
+/// variants (a lane resolves exactly one model per batch).
+pub fn partition_by_key<T, K: PartialEq>(
+    items: Vec<WorkItem<T>>,
+    key_of: impl Fn(&T) -> K,
+) -> Vec<(K, Vec<WorkItem<T>>)> {
+    let mut groups: Vec<(K, Vec<WorkItem<T>>)> = Vec::new();
+    for it in items {
+        let k = key_of(&it.payload);
+        match groups.iter_mut().find(|(gk, _)| *gk == k) {
+            Some((_, group)) => group.push(it),
+            None => groups.push((k, vec![it])),
+        }
+    }
+    groups
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -332,6 +352,24 @@ mod tests {
         let b = flush_of(next_batch(&rx, 8, Duration::from_secs(5), no_deadline));
         assert_eq!(b.ready.len(), 2);
         assert!(b.close, "close sentinel must be reported with the final flush");
+    }
+
+    #[test]
+    fn partition_by_key_is_stable_and_exhaustive() {
+        let now = Instant::now();
+        let items: Vec<WorkItem<i32>> =
+            [3, 1, 3, 2, 1, 3].iter().map(|&p| WorkItem { payload: p, enqueued: now }).collect();
+        let groups = partition_by_key(items, |&p| p % 10);
+        // groups in first-seen order, items in arrival order within each
+        let keys: Vec<i32> = groups.iter().map(|(k, _)| *k).collect();
+        assert_eq!(keys, vec![3, 1, 2]);
+        let sizes: Vec<usize> = groups.iter().map(|(_, g)| g.len()).collect();
+        assert_eq!(sizes, vec![3, 2, 1]);
+        assert_eq!(groups.iter().map(|(_, g)| g.len()).sum::<usize>(), 6);
+        // single-key batches collapse to one group (the common path)
+        let uniform: Vec<WorkItem<i32>> =
+            (0..4).map(|_| WorkItem { payload: 7, enqueued: now }).collect();
+        assert_eq!(partition_by_key(uniform, |&p| p).len(), 1);
     }
 
     #[test]

@@ -1,0 +1,974 @@
+//! Memory-budgeted in-process variant cache: single-flight builds, failure
+//! quarantine, pin-aware LRU eviction — the serving-side realization of the
+//! paper's "one base model yields a family of compressed variants" claim.
+//!
+//! [`VariantCache`] resolves a [`VariantKey`] `{method, m, calib}` to
+//! ready-to-score [`ModelWeights`] under a hard byte budget:
+//!
+//! * **hit** — pin the cached entry (LRU-refreshed) and hand out a
+//!   [`VariantLease`]; the pin count guarantees an entry with in-flight
+//!   batches is never evicted (the lease's `Drop` unpins).
+//! * **miss** — mark the slot *building* and populate it outside the lock:
+//!   first from the registry ([`Registry::load_latest_good`] under the
+//!   canonical variant name), else by compressing from the base model
+//!   ([`capture_calibration_source`] + [`compress_with_calib`]). Both the
+//!   capture and the merge are seeded, so a rebuild of an evicted variant
+//!   is **bit-identical** to the original (`tests/variant_cache.rs` pins
+//!   routed-score ≡ direct-compression identity on this).
+//! * **concurrent miss** — single-flight: every other requester parks on a
+//!   condvar, so N cold requests trigger exactly one build. Parked
+//!   requesters keep their deadlines: one that expires while parked fails
+//!   [`CacheError::DeadlineExceeded`] without computing anything.
+//! * **failed build** — transient failures retry under capped backoff
+//!   (deterministically drillable via `MERGEMOE_FAULT=…,build-fail:N`); a
+//!   fatal failure, a build panic, or retry exhaustion **quarantines** the
+//!   key, so subsequent requests fail fast and typed
+//!   ([`CacheError::VariantUnavailable`]) instead of re-triggering doomed
+//!   builds. The server's `--route-fallback base` policy may then route
+//!   that traffic to the boot variant with a `fallback=true` marker.
+//! * **admission** — entries account `n_params × 4` bytes against the
+//!   budget (`--cache-budget-mb` / `MERGEMOE_CACHE_BUDGET_MB`); unpinned
+//!   entries are LRU-evicted to make room, and a variant that cannot fit
+//!   even after evicting every unpinned entry is rejected typed
+//!   ([`CacheError::BudgetExceeded`]) — never an OOM. The base model lives
+//!   *outside* the budget: it is the compression source and the fallback
+//!   target, so it must never be evictable.
+//!
+//! Every lock acquisition is poison-tolerant (`unwrap_or_else(|e|
+//! e.into_inner())`): a panicking builder thread must not wedge the cache
+//! for the lanes that share it.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::calib::CalibSource;
+use crate::coordinator::pipeline::{
+    capture_calibration_source, compress_with_calib, CompressSpec,
+};
+use crate::coordinator::registry::Registry;
+use crate::info;
+use crate::merge::{Algorithm, NativeGram};
+use crate::model::workspace::Workspace;
+use crate::model::ModelWeights;
+use crate::util::fault::{classify, FaultAction, FaultClass, FaultPlan, InjectedFault};
+
+/// Canonical identity of a compressed variant: `{method, m, calib}` where
+/// `m` is the resolved per-layer expert target. Requests carry the paper's
+/// `{method, ratio, calib_source}` triple; [`VariantKey::resolve`]
+/// canonicalizes it (ratio → `m`, method/calib spellings normalized) so
+/// `"MergeMoE"` and `"mergemoe"` at the same ratio share one cache slot.
+#[derive(Debug, Clone, PartialEq, Eq, Hash)]
+pub struct VariantKey {
+    /// Canonical lowercase method name (round-trips [`Algorithm::from_name`]).
+    pub method: String,
+    /// Target expert count per merged layer (`round(ratio × n_experts)`).
+    pub m: usize,
+    /// Canonical calibration-source label (`"mixture"`, `"copy+parity"`, …).
+    pub calib: String,
+}
+
+impl VariantKey {
+    /// Validate and canonicalize a routing triple. `ratio` is the target
+    /// expert fraction `m / n_experts` in `(0, 1]`; the resolved `m` is
+    /// clamped to `[1, n_experts]`.
+    pub fn resolve(method: &str, ratio: f64, calib: &str, n_experts: usize) -> Result<VariantKey> {
+        let alg = Algorithm::from_name(method)
+            .with_context(|| format!("unknown compression method {method:?}"))?;
+        let source = CalibSource::parse(calib)
+            .with_context(|| format!("bad calibration source {calib:?}"))?;
+        if !(ratio > 0.0 && ratio <= 1.0) || !ratio.is_finite() {
+            bail!("ratio {ratio} outside (0, 1]");
+        }
+        let m = ((ratio * n_experts as f64).round() as usize).clamp(1, n_experts);
+        Ok(VariantKey {
+            method: alg.name().to_ascii_lowercase(),
+            m,
+            calib: source.label,
+        })
+    }
+
+    /// Human-readable identity, used in errors and logs: `mergemoe-m4-mixture`.
+    pub fn label(&self) -> String {
+        format!("{}-m{}-{}", self.method, self.m, self.calib)
+    }
+
+    /// The canonical registry name the cache probes before compressing:
+    /// `<base>-<method>-m<m>-<calib>` with every character the registry
+    /// rejects (e.g. the `+` in `"copy+parity"`) mapped to `_`.
+    pub fn registry_name(&self, base: &str) -> String {
+        let raw = format!("{base}-{}", self.label());
+        raw.chars()
+            .map(|c| if c.is_ascii_alphanumeric() || c == '.' || c == '_' || c == '-' { c } else { '_' })
+            .collect()
+    }
+}
+
+/// Typed cache outcomes — every failure mode a routed request can hit.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum CacheError {
+    /// The requester's deadline expired while parked on a build in flight.
+    DeadlineExceeded,
+    /// The variant is quarantined (its build failed fatally or exhausted
+    /// retries); requests fail fast instead of re-triggering the build.
+    VariantUnavailable {
+        /// [`VariantKey::label`] of the quarantined variant.
+        variant: String,
+        /// Why the variant was quarantined.
+        reason: String,
+    },
+    /// The variant cannot fit in the budget right now (or ever, if its own
+    /// size exceeds the whole budget — that case also quarantines).
+    BudgetExceeded {
+        /// [`VariantKey::label`] of the rejected variant.
+        variant: String,
+        /// Bytes the variant needs.
+        need_bytes: usize,
+        /// The configured cache budget in bytes.
+        budget_bytes: usize,
+    },
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::DeadlineExceeded => write!(f, "deadline exceeded while variant build in flight"),
+            CacheError::VariantUnavailable { variant, reason } => {
+                write!(f, "variant {variant} unavailable: {reason}")
+            }
+            CacheError::BudgetExceeded { variant, need_bytes, budget_bytes } => write!(
+                f,
+                "variant {variant} needs {need_bytes} B, cache budget {budget_bytes} B cannot admit it"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+/// Tuning knobs for [`VariantCache`].
+#[derive(Debug, Clone)]
+pub struct CacheConfig {
+    /// Hard byte budget over all cached variants (`--cache-budget-mb`).
+    pub budget_bytes: usize,
+    /// Transient-build retries before quarantine.
+    pub max_retries: u32,
+    /// Base backoff between build retries (doubled per retry, capped).
+    pub retry_backoff: Duration,
+    /// Calibration sequences per cold compression (the build spec).
+    pub n_calib_seqs: usize,
+    /// Calibration/merge seed — fixed, so rebuilds are bit-identical.
+    pub seed: u64,
+}
+
+impl Default for CacheConfig {
+    fn default() -> Self {
+        CacheConfig {
+            budget_bytes: default_budget_bytes(),
+            max_retries: 2,
+            retry_backoff: Duration::from_millis(1),
+            n_calib_seqs: 48,
+            seed: 0xC0FFEE,
+        }
+    }
+}
+
+/// `MERGEMOE_CACHE_BUDGET_MB` (MiB), default 256 MiB.
+pub fn default_budget_bytes() -> usize {
+    std::env::var("MERGEMOE_CACHE_BUDGET_MB")
+        .ok()
+        .and_then(|v| v.trim().parse::<usize>().ok())
+        .map(|mb| mb * 1024 * 1024)
+        .unwrap_or(256 * 1024 * 1024)
+}
+
+/// Monotonic counters the cache exposes on `/metrics` (`cache_*` gauges).
+#[derive(Debug, Default)]
+struct CacheCounters {
+    bytes: AtomicU64,
+    bytes_peak: AtomicU64,
+    entries: AtomicU64,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    builds: AtomicU64,
+    build_failures: AtomicU64,
+    registry_loads: AtomicU64,
+    evictions: AtomicU64,
+    quarantined: AtomicU64,
+}
+
+/// Point-in-time copy of the cache counters (see [`VariantCache::snapshot`]).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct CacheStats {
+    /// Bytes currently admitted (sum over ready entries; base excluded).
+    pub bytes: u64,
+    /// High-water mark of `bytes` — the acceptance gauge for "peak cache
+    /// bytes never exceed the budget".
+    pub bytes_peak: u64,
+    /// Configured budget in bytes.
+    pub budget_bytes: u64,
+    /// Ready entries currently cached.
+    pub entries: u64,
+    /// Checkouts served from a ready entry.
+    pub hits: u64,
+    /// Checkouts that took the builder role (cold slots).
+    pub misses: u64,
+    /// Successful builds (registry loads + compressions).
+    pub builds: u64,
+    /// Failed build attempts (each retry that failed counts once).
+    pub build_failures: u64,
+    /// Builds satisfied by [`Registry::load_latest_good`].
+    pub registry_loads: u64,
+    /// Entries LRU-evicted to admit another variant.
+    pub evictions: u64,
+    /// Keys moved to quarantine (fatal/exhausted/oversized builds).
+    pub quarantined: u64,
+}
+
+struct Entry {
+    model: Arc<ModelWeights>,
+    bytes: usize,
+    pins: usize,
+    last_use: u64,
+}
+
+enum Slot {
+    /// A build is in flight; requesters park on the condvar.
+    Building,
+    /// Ready to score.
+    Ready(Entry),
+    /// Build failed fatally — fail fast until the process restarts.
+    Quarantined { reason: String },
+}
+
+struct CacheInner {
+    slots: HashMap<VariantKey, Slot>,
+    /// Sum of `Ready` entry bytes (the budget accounting).
+    bytes: usize,
+    /// Monotonic LRU clock.
+    tick: u64,
+}
+
+/// The memory-budgeted variant cache (see the module docs for the contract).
+pub struct VariantCache {
+    base: Arc<ModelWeights>,
+    registry: Option<Arc<Registry>>,
+    cfg: CacheConfig,
+    fault: Option<Arc<FaultPlan>>,
+    inner: Mutex<CacheInner>,
+    cv: Condvar,
+    stats: CacheCounters,
+}
+
+impl std::fmt::Debug for VariantCache {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("VariantCache")
+            .field("base", &self.base.cfg.name)
+            .field("budget_bytes", &self.cfg.budget_bytes)
+            .finish()
+    }
+}
+
+/// A pinned checkout of one variant. Holding the lease guarantees the
+/// entry cannot be evicted; dropping it unpins (and wakes admission
+/// waiters). Lanes hold exactly one lease, for the duration of one batch.
+pub struct VariantLease {
+    cache: Arc<VariantCache>,
+    key: VariantKey,
+    model: Arc<ModelWeights>,
+}
+
+impl VariantLease {
+    /// The pinned weights.
+    pub fn model(&self) -> &Arc<ModelWeights> {
+        &self.model
+    }
+
+    /// The variant this lease pins.
+    pub fn key(&self) -> &VariantKey {
+        &self.key
+    }
+}
+
+impl Drop for VariantLease {
+    fn drop(&mut self) {
+        let mut g = self.cache.lock();
+        if let Some(Slot::Ready(e)) = g.slots.get_mut(&self.key) {
+            e.pins = e.pins.saturating_sub(1);
+        }
+        drop(g);
+        self.cache.cv.notify_all();
+    }
+}
+
+impl VariantCache {
+    /// Build a cache over `base` (the compression source, held outside the
+    /// budget). `registry` is probed before compressing; `fault` supplies
+    /// the `build-fail` schedule of a chaos plan (usually the server's).
+    pub fn new(
+        base: ModelWeights,
+        registry: Option<Arc<Registry>>,
+        cfg: CacheConfig,
+        fault: Option<Arc<FaultPlan>>,
+    ) -> VariantCache {
+        VariantCache {
+            base: Arc::new(base),
+            registry,
+            cfg,
+            fault,
+            inner: Mutex::new(CacheInner { slots: HashMap::new(), bytes: 0, tick: 0 }),
+            cv: Condvar::new(),
+            stats: CacheCounters::default(),
+        }
+    }
+
+    /// The base/boot weights (compression source and fallback target).
+    pub fn base(&self) -> &Arc<ModelWeights> {
+        &self.base
+    }
+
+    /// The configured byte budget.
+    pub fn budget_bytes(&self) -> usize {
+        self.cfg.budget_bytes
+    }
+
+    /// The exact [`CompressSpec`] a cold build uses for `key` — tests
+    /// rebuild reference variants from this to assert bit-identity between
+    /// routed scores and direct compression.
+    pub fn build_spec(&self, key: &VariantKey) -> CompressSpec {
+        let alg = Algorithm::from_name(&key.method)
+            .expect("VariantKey.method is canonical (resolve() validated it)");
+        let mut spec =
+            CompressSpec::new((0..self.base.cfg.n_layers).collect(), key.m, alg);
+        spec.n_calib_seqs = self.cfg.n_calib_seqs;
+        spec.calib_tasks = CalibSource::parse(&key.calib).ok().and_then(|s| s.tasks);
+        spec.seed = self.cfg.seed;
+        spec
+    }
+
+    /// Counter snapshot for `/metrics`.
+    pub fn snapshot(&self) -> CacheStats {
+        let s = &self.stats;
+        CacheStats {
+            bytes: s.bytes.load(Ordering::Relaxed),
+            bytes_peak: s.bytes_peak.load(Ordering::Relaxed),
+            budget_bytes: self.cfg.budget_bytes as u64,
+            entries: s.entries.load(Ordering::Relaxed),
+            hits: s.hits.load(Ordering::Relaxed),
+            misses: s.misses.load(Ordering::Relaxed),
+            builds: s.builds.load(Ordering::Relaxed),
+            build_failures: s.build_failures.load(Ordering::Relaxed),
+            registry_loads: s.registry_loads.load(Ordering::Relaxed),
+            evictions: s.evictions.load(Ordering::Relaxed),
+            quarantined: s.quarantined.load(Ordering::Relaxed),
+        }
+    }
+
+    /// Whether `key` currently has a ready (scoreable) entry.
+    pub fn contains(&self, key: &VariantKey) -> bool {
+        matches!(self.lock().slots.get(key), Some(Slot::Ready(_)))
+    }
+
+    /// Whether `key` is quarantined.
+    pub fn is_quarantined(&self, key: &VariantKey) -> bool {
+        matches!(self.lock().slots.get(key), Some(Slot::Quarantined { .. }))
+    }
+
+    fn lock(&self) -> MutexGuard<'_, CacheInner> {
+        self.inner.lock().unwrap_or_else(|e| e.into_inner())
+    }
+
+    /// Refresh the `bytes`/`entries` gauges from the locked state.
+    fn publish(&self, g: &CacheInner) {
+        self.stats.bytes.store(g.bytes as u64, Ordering::Relaxed);
+        self.stats.bytes_peak.fetch_max(g.bytes as u64, Ordering::Relaxed);
+        let n = g.slots.values().filter(|s| matches!(s, Slot::Ready(_))).count();
+        self.stats.entries.store(n as u64, Ordering::Relaxed);
+    }
+
+    /// Resolve `key` to a pinned lease: cache hit, or single-flight
+    /// build-and-admit, or a typed failure (see [`CacheError`]). `deadline`
+    /// bounds only the *parked* wait — the thread that takes the builder
+    /// role always finishes its build so the waiters (and later requests)
+    /// benefit from the work.
+    pub fn checkout(
+        self: &Arc<Self>,
+        key: &VariantKey,
+        deadline: Option<Instant>,
+    ) -> std::result::Result<VariantLease, CacheError> {
+        let mut g = self.lock();
+        loop {
+            match g.slots.get_mut(key) {
+                Some(Slot::Ready(e)) => {
+                    e.pins += 1;
+                    g.tick += 1;
+                    e.last_use = g.tick;
+                    let model = e.model.clone();
+                    self.stats.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok(VariantLease { cache: self.clone(), key: key.clone(), model });
+                }
+                Some(Slot::Quarantined { reason }) => {
+                    return Err(CacheError::VariantUnavailable {
+                        variant: key.label(),
+                        reason: reason.clone(),
+                    });
+                }
+                Some(Slot::Building) => match deadline {
+                    Some(d) => {
+                        let now = Instant::now();
+                        if now >= d {
+                            return Err(CacheError::DeadlineExceeded);
+                        }
+                        let (g2, _) = self
+                            .cv
+                            .wait_timeout(g, d - now)
+                            .unwrap_or_else(|e| e.into_inner());
+                        g = g2;
+                    }
+                    None => g = self.cv.wait(g).unwrap_or_else(|e| e.into_inner()),
+                },
+                None => {
+                    g.slots.insert(key.clone(), Slot::Building);
+                    self.stats.misses.fetch_add(1, Ordering::Relaxed);
+                    break;
+                }
+            }
+        }
+        drop(g);
+        // builder role: build outside the lock, then admit or quarantine.
+        // Every exit path below re-takes the lock, replaces the Building
+        // slot, and notifies — parked waiters can never wedge.
+        match self.build(key) {
+            Ok(model) => self.admit(key, model),
+            Err(reason) => {
+                let mut g = self.lock();
+                g.slots
+                    .insert(key.clone(), Slot::Quarantined { reason: reason.clone() });
+                drop(g);
+                self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+                self.cv.notify_all();
+                Err(CacheError::VariantUnavailable { variant: key.label(), reason })
+            }
+        }
+    }
+
+    /// Run build attempts under the retry policy. `Err` carries the
+    /// quarantine reason.
+    fn build(&self, key: &VariantKey) -> std::result::Result<ModelWeights, String> {
+        let mut attempt: u32 = 0;
+        loop {
+            let caught = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                self.build_once(key)
+            }));
+            let err = match caught {
+                Ok(Ok(model)) => {
+                    self.stats.builds.fetch_add(1, Ordering::Relaxed);
+                    return Ok(model);
+                }
+                Ok(Err(e)) => e,
+                Err(p) => {
+                    // a panicking build is fatal: the state it left behind
+                    // is unknown, so retrying could compound the damage
+                    self.stats.build_failures.fetch_add(1, Ordering::Relaxed);
+                    return Err(format!("build panicked: {}", panic_msg(&p)));
+                }
+            };
+            self.stats.build_failures.fetch_add(1, Ordering::Relaxed);
+            if classify(&err) == FaultClass::Fatal {
+                return Err(format!("fatal build failure: {err:#}"));
+            }
+            if attempt >= self.cfg.max_retries {
+                return Err(format!(
+                    "build failed after {} attempt(s): {err:#}",
+                    attempt + 1
+                ));
+            }
+            attempt += 1;
+            std::thread::sleep(build_backoff(self.cfg.retry_backoff, attempt));
+        }
+    }
+
+    /// One build attempt: fault gate, then registry, then compression.
+    fn build_once(&self, key: &VariantKey) -> Result<ModelWeights> {
+        if let Some(plan) = &self.fault {
+            match plan.next_build() {
+                FaultAction::None => {}
+                FaultAction::Transient => {
+                    return Err(InjectedFault { class: FaultClass::Transient }.into())
+                }
+                FaultAction::Fatal => {
+                    return Err(InjectedFault { class: FaultClass::Fatal }.into())
+                }
+                FaultAction::Slow(d) => std::thread::sleep(d),
+                FaultAction::Panic => panic!("injected build panic"),
+            }
+        }
+        if let Some(reg) = &self.registry {
+            let name = key.registry_name(&self.base.cfg.name);
+            // contains() first: "never registered" is the expected cold
+            // path and stays silent; a *registered* variant that will not
+            // load is worth a warning before falling back to compression
+            if reg.contains(&name) {
+                match reg.load_latest_good(&name) {
+                    Ok((model, meta))
+                        if model.cfg.n_layers == self.base.cfg.n_layers
+                            && model.cfg.d_model == self.base.cfg.d_model =>
+                    {
+                        info!("cache: {} served from registry ({})", key.label(), meta.label());
+                        self.stats.registry_loads.fetch_add(1, Ordering::Relaxed);
+                        return Ok(model);
+                    }
+                    Ok((_, meta)) => info!(
+                        "cache: registry variant {} shape-incompatible with base; compressing",
+                        meta.label()
+                    ),
+                    Err(e) => crate::warnlog!(
+                        "cache: registry variant {name} unloadable ({e:#}); compressing"
+                    ),
+                }
+            }
+        }
+        let spec = self.build_spec(key);
+        let source = CalibSource::parse(&key.calib).context("variant calibration source")?;
+        let calib =
+            capture_calibration_source(&self.base, spec.n_calib_seqs, &source, spec.seed)?;
+        let mut ws = Workspace::new();
+        // NativeGram on purpose: cold builds must be deterministic and
+        // runnable on a bare checkout (no pallas artifact required)
+        let (model, _report) =
+            compress_with_calib(&self.base, &spec, &mut NativeGram, &calib, &mut ws)?;
+        Ok(model)
+    }
+
+    /// Account and insert a built model, LRU-evicting unpinned entries as
+    /// needed. Returns the first pinned lease, or a typed budget rejection.
+    fn admit(
+        self: &Arc<Self>,
+        key: &VariantKey,
+        model: ModelWeights,
+    ) -> std::result::Result<VariantLease, CacheError> {
+        let bytes = model.n_params() * 4;
+        let mut g = self.lock();
+        if bytes > self.cfg.budget_bytes {
+            // can never fit — quarantine so later requests fail fast
+            let reason = format!(
+                "needs {bytes} B, exceeds the whole cache budget ({} B)",
+                self.cfg.budget_bytes
+            );
+            g.slots.insert(key.clone(), Slot::Quarantined { reason });
+            self.publish(&g);
+            drop(g);
+            self.stats.quarantined.fetch_add(1, Ordering::Relaxed);
+            self.cv.notify_all();
+            return Err(CacheError::BudgetExceeded {
+                variant: key.label(),
+                need_bytes: bytes,
+                budget_bytes: self.cfg.budget_bytes,
+            });
+        }
+        while g.bytes + bytes > self.cfg.budget_bytes {
+            let victim = g
+                .slots
+                .iter()
+                .filter_map(|(k, s)| match s {
+                    Slot::Ready(e) if e.pins == 0 => Some((k.clone(), e.last_use)),
+                    _ => None,
+                })
+                .min_by_key(|&(_, last_use)| last_use)
+                .map(|(k, _)| k);
+            match victim {
+                Some(vk) => {
+                    if let Some(Slot::Ready(e)) = g.slots.remove(&vk) {
+                        g.bytes -= e.bytes;
+                        self.stats.evictions.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+                None => {
+                    // everything still cached is pinned: reject typed and
+                    // clear the Building slot so a later request (after
+                    // pins release) may rebuild
+                    g.slots.remove(key);
+                    self.publish(&g);
+                    drop(g);
+                    self.cv.notify_all();
+                    return Err(CacheError::BudgetExceeded {
+                        variant: key.label(),
+                        need_bytes: bytes,
+                        budget_bytes: self.cfg.budget_bytes,
+                    });
+                }
+            }
+        }
+        g.bytes += bytes;
+        g.tick += 1;
+        let entry = Entry { model: Arc::new(model), bytes, pins: 1, last_use: g.tick };
+        let model = entry.model.clone();
+        g.slots.insert(key.clone(), Slot::Ready(entry));
+        self.publish(&g);
+        drop(g);
+        self.cv.notify_all();
+        Ok(VariantLease { cache: self.clone(), key: key.clone(), model })
+    }
+}
+
+/// Capped exponential backoff between build retries (mirrors the lane
+/// retry policy: base × 2^(attempt−1), never more than 100 ms).
+fn build_backoff(base: Duration, attempt: u32) -> Duration {
+    let mult = 1u32 << attempt.saturating_sub(1).min(10);
+    base.saturating_mul(mult).min(Duration::from_millis(100))
+}
+
+fn panic_msg(p: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = p.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = p.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "opaque panic payload".to_string()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::model::testutil::tiny_model;
+
+    fn test_cfg(budget: usize) -> CacheConfig {
+        CacheConfig {
+            budget_bytes: budget,
+            max_retries: 1,
+            retry_backoff: Duration::from_micros(100),
+            n_calib_seqs: 4,
+            seed: 7,
+        }
+    }
+
+    fn key(m: usize) -> VariantKey {
+        VariantKey::resolve("mergemoe", m as f64 / 4.0, "mixture", 4).unwrap()
+    }
+
+    /// Bytes one m-expert variant of the 4-expert tiny model occupies.
+    fn variant_bytes(m: usize) -> usize {
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 500),
+            None,
+            test_cfg(usize::MAX / 8),
+            None,
+        ));
+        let lease = cache.checkout(&key(m), None).unwrap();
+        drop(lease);
+        cache.snapshot().bytes as usize
+    }
+
+    #[test]
+    fn resolve_canonicalizes_and_validates() {
+        let a = VariantKey::resolve("MergeMoE", 0.5, "mixture", 8).unwrap();
+        let b = VariantKey::resolve("mergemoe", 0.5, "all", 8).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.m, 4);
+        assert_eq!(a.label(), "mergemoe-m4-mixture");
+        assert!(VariantKey::resolve("wat", 0.5, "mixture", 8).is_err());
+        assert!(VariantKey::resolve("average", 0.0, "mixture", 8).is_err());
+        assert!(VariantKey::resolve("average", 1.5, "mixture", 8).is_err());
+        assert!(VariantKey::resolve("average", 0.5, "wat", 8).is_err());
+        // registry names never contain charset the registry rejects
+        let k = VariantKey::resolve("average", 0.5, "copy+parity", 8).unwrap();
+        let name = k.registry_name("beta");
+        assert!(name
+            .chars()
+            .all(|c| c.is_ascii_alphanumeric() || c == '.' || c == '_' || c == '-'));
+        assert_eq!(name, "beta-average-m4-copy_parity");
+    }
+
+    #[test]
+    fn cold_build_then_hits() {
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 501),
+            None,
+            test_cfg(usize::MAX / 8),
+            None,
+        ));
+        let k = key(2);
+        let a = cache.checkout(&k, None).unwrap();
+        let uid = a.model().uid;
+        assert_eq!(a.model().layers[0].moe.n_experts(), 2);
+        drop(a);
+        let b = cache.checkout(&k, None).unwrap();
+        assert_eq!(b.model().uid, uid, "hit must return the same weights");
+        let s = cache.snapshot();
+        assert_eq!((s.builds, s.misses, s.hits), (1, 1, 1));
+        assert!(s.bytes > 0 && s.bytes_peak >= s.bytes);
+    }
+
+    #[test]
+    fn single_flight_concurrent_cold_requests_build_once() {
+        let plan = Arc::new(
+            FaultPlan::scripted(vec![])
+                .with_build_script(vec![FaultAction::Slow(Duration::from_millis(30))]),
+        );
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 502),
+            None,
+            test_cfg(usize::MAX / 8),
+            Some(plan),
+        ));
+        let k = key(2);
+        let mut joins = Vec::new();
+        for _ in 0..8 {
+            let c = cache.clone();
+            let kk = k.clone();
+            joins.push(std::thread::spawn(move || {
+                c.checkout(&kk, None).map(|l| l.model().uid)
+            }));
+        }
+        let uids: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap().unwrap()).collect();
+        assert!(uids.windows(2).all(|w| w[0] == w[1]), "all see one build");
+        let s = cache.snapshot();
+        assert_eq!(s.builds, 1, "exactly one build for 8 concurrent requests");
+        assert_eq!(s.misses, 1);
+        assert_eq!(s.hits, 7);
+    }
+
+    #[test]
+    fn parked_deadline_fails_without_computing() {
+        let plan = Arc::new(
+            FaultPlan::scripted(vec![])
+                .with_build_script(vec![FaultAction::Slow(Duration::from_millis(300))]),
+        );
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 503),
+            None,
+            test_cfg(usize::MAX / 8),
+            Some(plan),
+        ));
+        let k = key(2);
+        let builder = {
+            let c = cache.clone();
+            let kk = k.clone();
+            std::thread::spawn(move || c.checkout(&kk, None).map(|_| ()))
+        };
+        // wait for the builder to claim the slot
+        let t0 = Instant::now();
+        while cache.snapshot().misses == 0 && t0.elapsed() < Duration::from_secs(5) {
+            std::thread::sleep(Duration::from_micros(200));
+        }
+        let d = Instant::now() + Duration::from_millis(10);
+        let err = cache.checkout(&k, Some(d)).unwrap_err();
+        assert_eq!(err, CacheError::DeadlineExceeded);
+        assert!(Instant::now() >= d, "must have parked until the deadline");
+        builder.join().unwrap().unwrap();
+        assert_eq!(cache.snapshot().builds, 1);
+    }
+
+    #[test]
+    fn fatal_build_quarantines_and_fails_fast() {
+        let plan = Arc::new(
+            FaultPlan::scripted(vec![]).with_build_script(vec![FaultAction::Fatal]),
+        );
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 504),
+            None,
+            test_cfg(usize::MAX / 8),
+            Some(plan.clone()),
+        ));
+        let k = key(2);
+        match cache.checkout(&k, None) {
+            Err(CacheError::VariantUnavailable { variant, .. }) => {
+                assert_eq!(variant, k.label())
+            }
+            other => panic!("expected VariantUnavailable, got {other:?}"),
+        }
+        assert!(cache.is_quarantined(&k));
+        let attempts = plan.build_attempts();
+        assert_eq!(attempts, 1, "fatal fault must not retry");
+        // second request fails fast without a new build attempt
+        assert!(matches!(
+            cache.checkout(&k, None),
+            Err(CacheError::VariantUnavailable { .. })
+        ));
+        assert_eq!(plan.build_attempts(), attempts);
+        assert_eq!(cache.snapshot().quarantined, 1);
+    }
+
+    #[test]
+    fn transient_build_retries_then_succeeds() {
+        let plan = Arc::new(
+            FaultPlan::scripted(vec![]).with_build_script(vec![FaultAction::Transient]),
+        );
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 505),
+            None,
+            test_cfg(usize::MAX / 8),
+            Some(plan),
+        ));
+        let lease = cache.checkout(&key(2), None).unwrap();
+        drop(lease);
+        let s = cache.snapshot();
+        assert_eq!((s.builds, s.build_failures), (1, 1));
+    }
+
+    #[test]
+    fn retry_exhaustion_quarantines() {
+        let plan = Arc::new(FaultPlan::scripted(vec![]).with_build_script(vec![
+            FaultAction::Transient,
+            FaultAction::Transient, // max_retries = 1 → both attempts fail
+        ]));
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 506),
+            None,
+            test_cfg(usize::MAX / 8),
+            Some(plan),
+        ));
+        assert!(matches!(
+            cache.checkout(&key(2), None),
+            Err(CacheError::VariantUnavailable { .. })
+        ));
+        assert!(cache.is_quarantined(&key(2)));
+        assert_eq!(cache.snapshot().build_failures, 2);
+    }
+
+    #[test]
+    fn oversized_variant_rejected_typed_and_quarantined() {
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 507),
+            None,
+            test_cfg(8), // 8 bytes: nothing fits
+            None,
+        ));
+        match cache.checkout(&key(2), None) {
+            Err(CacheError::BudgetExceeded { need_bytes, budget_bytes, .. }) => {
+                assert!(need_bytes > budget_bytes);
+            }
+            other => panic!("expected BudgetExceeded, got {other:?}"),
+        }
+        assert!(cache.is_quarantined(&key(2)));
+        assert_eq!(cache.snapshot().bytes, 0);
+    }
+
+    #[test]
+    fn lru_evicts_oldest_unpinned_never_pinned() {
+        // budget fits exactly two m=2 variants (distinct calib sources)
+        let two = 2 * variant_bytes(2);
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 500),
+            None,
+            test_cfg(two),
+            None,
+        ));
+        let ka = VariantKey::resolve("mergemoe", 0.5, "copy", 4).unwrap();
+        let kb = VariantKey::resolve("mergemoe", 0.5, "parity", 4).unwrap();
+        let kc = VariantKey::resolve("mergemoe", 0.5, "mixture", 4).unwrap();
+        drop(cache.checkout(&ka, None).unwrap());
+        drop(cache.checkout(&kb, None).unwrap());
+        assert!(cache.contains(&ka) && cache.contains(&kb));
+        // third variant evicts the LRU (ka)
+        drop(cache.checkout(&kc, None).unwrap());
+        assert!(!cache.contains(&ka), "LRU entry must be evicted");
+        assert!(cache.contains(&kb) && cache.contains(&kc));
+        let s = cache.snapshot();
+        assert_eq!(s.evictions, 1);
+        assert!(s.bytes_peak as usize <= two, "peak {} > budget {two}", s.bytes_peak);
+        // pinned entries are never evicted: pin kb, ask for ka again —
+        // kc (unpinned) must be the victim
+        let pinned = cache.checkout(&kb, None).unwrap();
+        drop(cache.checkout(&ka, None).unwrap());
+        assert!(cache.contains(&kb), "pinned entry evicted");
+        assert!(!cache.contains(&kc));
+        // with both slots pinned, a third variant is rejected typed
+        let pinned2 = cache.checkout(&ka, None).unwrap();
+        match cache.checkout(&kc, None) {
+            Err(CacheError::BudgetExceeded { .. }) => {}
+            other => panic!("expected BudgetExceeded, got {other:?}"),
+        }
+        assert!(!cache.is_quarantined(&kc), "pin-blocked rejection is not a quarantine");
+        drop(pinned);
+        drop(pinned2);
+        // pins released → the same variant admits fine now
+        drop(cache.checkout(&kc, None).unwrap());
+        assert!(cache.contains(&kc));
+        let s = cache.snapshot();
+        assert!(s.bytes_peak as usize <= two, "peak {} > budget {two}", s.bytes_peak);
+    }
+
+    #[test]
+    fn rebuild_after_eviction_is_bit_identical() {
+        let two = 2 * variant_bytes(2);
+        let cache = Arc::new(VariantCache::new(
+            tiny_model(4, 2, false, 500),
+            None,
+            test_cfg(two),
+            None,
+        ));
+        let ka = VariantKey::resolve("mergemoe", 0.5, "copy", 4).unwrap();
+        let kb = VariantKey::resolve("mergemoe", 0.5, "parity", 4).unwrap();
+        let kc = VariantKey::resolve("mergemoe", 0.5, "mixture", 4).unwrap();
+        let first = cache.checkout(&ka, None).unwrap();
+        let wg0: Vec<f32> = first.model().layers[0].moe.experts[0].wg.data().to_vec();
+        drop(first);
+        // churn ka out, then fault it back in
+        drop(cache.checkout(&kb, None).unwrap());
+        drop(cache.checkout(&kc, None).unwrap());
+        assert!(!cache.contains(&ka));
+        let again = cache.checkout(&ka, None).unwrap();
+        assert_eq!(
+            again.model().layers[0].moe.experts[0].wg.data(),
+            &wg0[..],
+            "seeded rebuild must be bit-identical"
+        );
+    }
+
+    #[test]
+    fn registry_variant_preferred_over_compression() {
+        let dir = tempdir("cache-reg");
+        let reg = Arc::new(Registry::open(&dir).unwrap());
+        let base = tiny_model(4, 2, false, 508);
+        // pre-register a variant under the canonical cache name, with
+        // sentinel weights distinguishable from a fresh compression
+        let k = key(2);
+        let mut sentinel = base.clone();
+        for l in &mut sentinel.layers {
+            l.moe.experts.truncate(2);
+            for e in &mut l.moe.experts {
+                for v in e.wg.data_mut() {
+                    *v = 0.125;
+                }
+            }
+            l.moe.map = Some(crate::tensor::Tensor::zeros(&[2, 4]));
+        }
+        sentinel.touch();
+        let spec = crate::coordinator::registry::VariantSpec {
+            method: "mergemoe".into(),
+            ratio: 0.5,
+            calib_source: "mixture".into(),
+        };
+        reg.add(&k.registry_name(&base.cfg.name), &sentinel, &spec).unwrap();
+        let cache = Arc::new(VariantCache::new(
+            base,
+            Some(reg),
+            test_cfg(usize::MAX / 8),
+            None,
+        ));
+        let lease = cache.checkout(&k, None).unwrap();
+        assert!(lease.model().layers[0].moe.experts[0]
+            .wg
+            .data()
+            .iter()
+            .all(|&v| v == 0.125));
+        let s = cache.snapshot();
+        assert_eq!((s.builds, s.registry_loads), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn tempdir(tag: &str) -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!(
+            "mergemoe-{tag}-{}-{}",
+            std::process::id(),
+            crate::model::fresh_uid()
+        ));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+}

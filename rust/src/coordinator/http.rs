@@ -5,9 +5,18 @@
 //! Routes:
 //!
 //! * `POST /score` — body `{"prompt": "...", "completion": "..."}`, answers
-//!   `{"score": <mean completion log-prob>}`. Typed refusals map to
-//!   meaningful statuses: 429 overloaded, 504 deadline exceeded, 503
-//!   degraded/draining, 400 rejected, 500 engine/panic.
+//!   `{"score": <mean completion log-prob>}`. Optional routing fields
+//!   `method`/`ratio`/`calib_source` score on a compressed variant served
+//!   from the memory-budgeted [`VariantCache`](super::cache::VariantCache)
+//!   (all absent = boot variant, exactly the unrouted behavior; `ratio` is
+//!   required when routing, `method` defaults to `mergemoe`,
+//!   `calib_source` to `mixture`). A reply served by the
+//!   `--route-fallback base` policy carries `"fallback": true`. Typed
+//!   refusals map to meaningful statuses: 429 overloaded, 504 deadline
+//!   exceeded, 503 degraded/draining/variant-unavailable, 507 cache budget
+//!   exceeded, 400 rejected, 500 engine/panic; 429/503 responses carry a
+//!   numeric `Retry-After` header (queue-depth-derived for 429, fixed hint
+//!   for 503) so well-behaved clients back off.
 //! * `GET /healthz` — structured JSON: `status` (`ok`/`degraded`/
 //!   `draining`, HTTP 200/503), current `variant` (`name@vN`), queue
 //!   depth, worker restarts used vs budget, the outcome of the last config
@@ -284,20 +293,61 @@ fn handle_score(stream: TcpStream, handle: &ServerHandle, body: &[u8]) -> Result
         .and_then(|j| {
             let prompt = j.get("prompt")?.as_str()?.to_string();
             let completion = j.get("completion")?.as_str()?.to_string();
-            Ok((prompt, completion))
+            let method = match j.opt("method") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            };
+            let ratio = match j.opt("ratio") {
+                Some(v) => Some(v.as_f64()?),
+                None => None,
+            };
+            let calib = match j.opt("calib_source") {
+                Some(v) => Some(v.as_str()?.to_string()),
+                None => None,
+            };
+            Ok((prompt, completion, method, ratio, calib))
         });
-    let (prompt, completion) = match parsed {
+    let (prompt, completion, method, ratio, calib) = match parsed {
         Ok(pc) => pc,
         Err(e) => return respond_json_error(stream, 400, &format!("bad request: {e:#}")),
     };
-    match handle.score(&prompt, &completion) {
-        Ok(score) => {
-            let msg = Json::obj(vec![("score", Json::Num(score))]);
+    // all routing fields absent = boot variant (exactly the unrouted path)
+    let variant = if method.is_none() && ratio.is_none() && calib.is_none() {
+        None
+    } else {
+        let Some(ratio) = ratio else {
+            return respond_json_error(
+                stream,
+                400,
+                "ratio is required when routing (method/calib_source given)",
+            );
+        };
+        let method = method.as_deref().unwrap_or("mergemoe");
+        let calib = calib.as_deref().unwrap_or("mixture");
+        match handle.resolve_variant(method, ratio, calib) {
+            Ok(key) => Some(key),
+            Err(e) => return respond_json_error(stream, 400, &e.to_string()),
+        }
+    };
+    match handle.score_routed(&prompt, &completion, variant) {
+        Ok(outcome) => {
+            let mut fields = vec![("score", Json::Num(outcome.score))];
+            // marker only when fallback actually happened: the common-case
+            // response shape is unchanged
+            if outcome.fallback {
+                fields.push(("fallback", Json::Bool(true)));
+            }
+            let msg = Json::obj(fields);
             respond(stream, 200, "application/json", &msg.to_string())
         }
         Err(e) => {
             let code = status_of(&e);
-            respond_json_error(stream, code, &e.to_string())
+            let mut extra = Vec::new();
+            if let Some(secs) = retry_after_hint(code, handle.queue_depth()) {
+                extra.push(("Retry-After", secs.to_string()));
+            }
+            let body = Json::obj(vec![("error", Json::str(&e.to_string()))]).to_string();
+            respond_with_headers(stream, code, "application/json", &extra, &body)
         }
     }
 }
@@ -375,8 +425,21 @@ fn status_of(e: &ServeError) -> u16 {
         ServeError::Overloaded => 429,
         ServeError::DeadlineExceeded => 504,
         ServeError::Degraded | ServeError::ShuttingDown => 503,
+        ServeError::VariantUnavailable(_) => 503,
+        ServeError::BudgetExceeded(_) => 507,
         ServeError::Rejected(_) => 400,
         ServeError::WorkerPanicked | ServeError::Engine(_) => 500,
+    }
+}
+
+/// Numeric `Retry-After` (seconds) for backpressure statuses: 429 scales
+/// with the queue backlog (a deeper queue earns a longer back-off), 503 is
+/// a fixed hint. Other statuses carry no header.
+fn retry_after_hint(code: u16, queue_depth: usize) -> Option<u64> {
+    match code {
+        429 => Some(1 + queue_depth as u64 / 32),
+        503 => Some(2),
+        _ => None,
     }
 }
 
@@ -423,6 +486,7 @@ fn render_metrics(status: &ServerStatus) -> String {
     gauge("config_reload_failures_total", m.reload_failures as f64);
     gauge("variant_swaps_total", m.swaps as f64);
     gauge("variant_swap_rollbacks_total", m.swap_rollbacks as f64);
+    gauge("fallback_scores_total", m.fallbacks as f64);
     gauge("batches_total", m.batches as f64);
     gauge("batched_sequences_total", m.batched_sequences as f64);
     gauge("overlapped_batches_total", m.overlapped as f64);
@@ -439,6 +503,20 @@ fn render_metrics(status: &ServerStatus) -> String {
     gauge("queue_wait_p99_seconds", m.queue_wait_p99().as_secs_f64());
     gauge("batch_latency_p50_seconds", m.batch_latency_p50().as_secs_f64());
     gauge("batch_latency_p99_seconds", m.batch_latency_p99().as_secs_f64());
+    // variant-cache gauges: the bytes/budget pair is the acceptance
+    // surface for "peak cache bytes never exceed the budget"
+    let c = status.cache_stats();
+    gauge("cache_bytes", c.bytes as f64);
+    gauge("cache_bytes_peak", c.bytes_peak as f64);
+    gauge("cache_budget_bytes", c.budget_bytes as f64);
+    gauge("cache_entries", c.entries as f64);
+    gauge("cache_hits_total", c.hits as f64);
+    gauge("cache_misses_total", c.misses as f64);
+    gauge("cache_builds_total", c.builds as f64);
+    gauge("cache_build_failures_total", c.build_failures as f64);
+    gauge("cache_registry_loads_total", c.registry_loads as f64);
+    gauge("cache_evictions_total", c.evictions as f64);
+    gauge("cache_quarantined", c.quarantined as f64);
     // labeled per-lane series last: the `gauge` closure's borrow of `out`
     // has ended by here
     for (i, b) in m.lane_batches.iter().enumerate() {
@@ -460,6 +538,7 @@ fn reason(code: u16) -> &'static str {
         500 => "Internal Server Error",
         503 => "Service Unavailable",
         504 => "Gateway Timeout",
+        507 => "Insufficient Storage",
         _ => "",
     }
 }
@@ -469,12 +548,26 @@ fn respond_json_error(stream: TcpStream, code: u16, msg: &str) -> Result<()> {
     respond(stream, code, "application/json", &body)
 }
 
-fn respond(mut stream: TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
-    let head = format!(
-        "HTTP/1.1 {code} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\nConnection: close\r\n\r\n",
+fn respond(stream: TcpStream, code: u16, ctype: &str, body: &str) -> Result<()> {
+    respond_with_headers(stream, code, ctype, &[], body)
+}
+
+fn respond_with_headers(
+    mut stream: TcpStream,
+    code: u16,
+    ctype: &str,
+    extra: &[(&str, String)],
+    body: &str,
+) -> Result<()> {
+    let mut head = format!(
+        "HTTP/1.1 {code} {}\r\nContent-Type: {ctype}\r\nContent-Length: {}\r\n",
         reason(code),
         body.len(),
     );
+    for (name, value) in extra {
+        head.push_str(&format!("{name}: {value}\r\n"));
+    }
+    head.push_str("Connection: close\r\n\r\n");
     stream.write_all(head.as_bytes()).context("write response head")?;
     stream.write_all(body.as_bytes()).context("write response body")?;
     stream.flush().context("flush response")?;
@@ -489,11 +582,17 @@ mod tests {
     use crate::model::testutil::tiny_model;
     use crate::runtime::NativeEngine;
 
-    fn request(addr: SocketAddr, raw: &str) -> (u16, String) {
+    /// Raw response text, head + body (for asserting on headers).
+    fn request_raw(addr: SocketAddr, raw: &str) -> String {
         let mut s = TcpStream::connect(addr).unwrap();
         s.write_all(raw.as_bytes()).unwrap();
         let mut buf = String::new();
         s.read_to_string(&mut buf).unwrap();
+        buf
+    }
+
+    fn request(addr: SocketAddr, raw: &str) -> (u16, String) {
+        let buf = request_raw(addr, raw);
         let code = buf
             .split_whitespace()
             .nth(1)
@@ -751,6 +850,84 @@ mod tests {
         assert_eq!(m.reloads, 1);
         assert_eq!(m.reload_failures, 1);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn retry_after_hints_are_numeric_and_depth_scaled() {
+        // 429 scales with the backlog; 503 is a fixed hint; success and
+        // client-error statuses carry no header
+        assert_eq!(retry_after_hint(429, 0), Some(1));
+        assert_eq!(retry_after_hint(429, 64), Some(3));
+        assert_eq!(retry_after_hint(503, 0), Some(2));
+        assert_eq!(retry_after_hint(200, 10), None);
+        assert_eq!(retry_after_hint(400, 10), None);
+    }
+
+    #[test]
+    fn backpressure_responses_carry_numeric_retry_after_header() {
+        let server = test_server();
+        let handle = server.handle();
+        let mut http = HttpServer::bind("127.0.0.1:0", handle, server.status()).unwrap();
+        let addr = http.addr();
+        // draining server: /score answers 503 — the deterministic
+        // backpressure status to pin the header on
+        server.shutdown();
+        let body = r#"{"prompt": "c:ab|", "completion": "ab."}"#;
+        let raw = request_raw(
+            addr,
+            &format!(
+                "POST /score HTTP/1.1\r\nHost: x\r\nContent-Length: {}\r\n\r\n{body}",
+                body.len()
+            ),
+        );
+        assert!(raw.starts_with("HTTP/1.1 503"), "{raw}");
+        let head = raw.split("\r\n\r\n").next().unwrap();
+        let value = head
+            .lines()
+            .find_map(|l| l.strip_prefix("Retry-After: "))
+            .unwrap_or_else(|| panic!("no Retry-After header in:\n{head}"));
+        let secs: u64 = value.trim().parse().expect("Retry-After must be numeric");
+        assert!(secs >= 1);
+        http.stop();
+    }
+
+    #[test]
+    fn routed_score_builds_variant_and_validates_fields() {
+        let server = test_server();
+        let mut http =
+            HttpServer::bind("127.0.0.1:0", server.handle(), server.status()).unwrap();
+        let addr = http.addr();
+        // cold routed request: the cache compresses the variant on demand
+        let (code, body) = post_score(
+            addr,
+            r#"{"prompt": "c:abcd|", "completion": "abcd.", "method": "average", "ratio": 0.5, "calib_source": "copy"}"#,
+        );
+        assert_eq!(code, 200, "body: {body}");
+        let j = Json::parse(&body).unwrap();
+        let routed = j.get("score").unwrap().as_f64().unwrap();
+        assert!(routed.is_finite() && routed < 0.0);
+        assert!(j.opt("fallback").is_none(), "no fallback marker without fallback");
+        // the boot-path score differs from the merged variant's
+        let (_, body) = post_score(addr, r#"{"prompt": "c:abcd|", "completion": "abcd."}"#);
+        let boot = Json::parse(&body).unwrap().get("score").unwrap().as_f64().unwrap();
+        assert!((routed - boot).abs() > 0.0, "merge changed the weights");
+        // routing field validation: missing ratio, bad ratio, bad method
+        let (code, _) = post_score(addr, r#"{"prompt": "a|", "completion": "b.", "method": "average"}"#);
+        assert_eq!(code, 400, "ratio required when routing");
+        let (code, _) =
+            post_score(addr, r#"{"prompt": "a|", "completion": "b.", "ratio": 1.5}"#);
+        assert_eq!(code, 400);
+        let (code, _) = post_score(
+            addr,
+            r#"{"prompt": "a|", "completion": "b.", "method": "wat", "ratio": 0.5}"#,
+        );
+        assert_eq!(code, 400);
+        // cache gauges landed on /metrics
+        let (_, body) = get(addr, "/metrics");
+        assert!(body.contains("mergemoe_cache_builds_total 1"), "{body}");
+        assert!(body.contains("mergemoe_cache_budget_bytes"), "{body}");
+        http.stop();
+        server.shutdown();
     }
 
     #[test]

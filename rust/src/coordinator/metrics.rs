@@ -116,6 +116,10 @@ pub struct ServerMetrics {
     /// collector handed off while at least one lane was computing) — the
     /// continuous-batching win made visible.
     pub overlapped: u64,
+    /// Requests answered on the boot variant because their requested
+    /// variant was quarantined (`--route-fallback base`); each such reply
+    /// carries `fallback=true`.
+    pub fallbacks: u64,
     /// Batches computed per lane, indexed by lane id (empty until the
     /// first lane reports).
     pub lane_batches: Vec<u64>,
@@ -197,6 +201,10 @@ impl ServerMetrics {
             )
         } else {
             String::new()
+        } + &if self.fallbacks > 0 {
+            format!(" routing: fallbacks={}", self.fallbacks)
+        } else {
+            String::new()
         }
     }
 }
@@ -265,6 +273,15 @@ mod tests {
         m.shed = 1;
         m.expired = 1;
         assert!(m.report().contains("faults: errors=2 shed=1 expired=1"));
+    }
+
+    #[test]
+    fn fallback_counter_appears_in_report_only_when_nonzero() {
+        let mut m = ServerMetrics::default();
+        m.requests = 10;
+        assert!(!m.report().contains("routing:"));
+        m.fallbacks = 3;
+        assert!(m.report().contains("routing: fallbacks=3"));
     }
 
     #[test]

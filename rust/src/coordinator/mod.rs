@@ -1,8 +1,10 @@
 //! Layer-3 coordination: the compression pipeline (offline path), the
-//! batched scoring server (request path) with metrics, and the crash-safe
-//! variant registry feeding hot-swaps.
+//! batched scoring server (request path) with metrics, the memory-budgeted
+//! variant cache behind per-request routing, and the crash-safe variant
+//! registry feeding hot-swaps.
 
 pub mod batcher;
+pub mod cache;
 pub mod http;
 pub mod metrics;
 pub mod pipeline;
@@ -10,6 +12,7 @@ pub mod registry;
 pub mod server;
 
 pub use crate::calib::CalibSource;
+pub use cache::{CacheConfig, CacheError, CacheStats, VariantCache, VariantKey, VariantLease};
 pub use http::{AdminState, HttpServer};
 pub use pipeline::{
     capture_calibration, capture_calibration_source, compress, compress_with_calib,
@@ -17,6 +20,6 @@ pub use pipeline::{
 };
 pub use registry::{Registry, RegistryError, VariantMeta, VariantSpec};
 pub use server::{
-    AdminHandle, FaultSetting, ScoringServer, ServeError, ServerConfig, ServerHandle,
-    ServerStatus,
+    AdminHandle, FaultSetting, RouteFallback, ScoreOutcome, ScoringServer, ServeError,
+    ServerConfig, ServerHandle, ServerStatus,
 };

@@ -318,6 +318,14 @@ impl Registry {
             .max())
     }
 
+    /// True iff at least one version of `name` is published (loadable or
+    /// not — integrity is [`Registry::load`]'s job). Lets callers
+    /// distinguish "never registered" (expected, silent) from "registered
+    /// but unloadable" (worth a warning) without attempting a full load.
+    pub fn contains(&self, name: &str) -> bool {
+        matches!(self.latest(name), Ok(Some(_)))
+    }
+
     /// Load and verify one specific version. On any integrity failure the
     /// entry is quarantined and a typed [`RegistryError::Corrupt`] is
     /// returned (callers fall back via [`Registry::load_latest_good`]).

@@ -95,8 +95,10 @@ use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use super::batcher::{next_batch, BatchDecision, Ctl, WorkItem};
+use super::batcher::{next_batch, partition_by_key, BatchDecision, Ctl, WorkItem};
+use super::cache::{CacheConfig, CacheError, CacheStats, VariantCache, VariantKey};
 use super::metrics::ServerMetrics;
+use super::registry::Registry;
 use crate::config::ServerTuning;
 use crate::eval::tasks;
 use crate::model::native::target_logprobs_into;
@@ -128,6 +130,13 @@ pub enum ServeError {
     Rejected(String),
     /// The engine failed this request fatally or exhausted its retries.
     Engine(String),
+    /// The requested variant is quarantined (its build failed fatally or
+    /// exhausted retries) and the fallback policy is
+    /// [`RouteFallback::Reject`].
+    VariantUnavailable(String),
+    /// The requested variant cannot fit the cache budget even after
+    /// evicting every unpinned entry.
+    BudgetExceeded(String),
 }
 
 impl std::fmt::Display for ServeError {
@@ -140,11 +149,53 @@ impl std::fmt::Display for ServeError {
             ServeError::ShuttingDown => write!(f, "server shutting down"),
             ServeError::Rejected(why) => write!(f, "request rejected: {why}"),
             ServeError::Engine(why) => write!(f, "engine failure: {why}"),
+            ServeError::VariantUnavailable(why) => {
+                write!(f, "variant unavailable: {why}")
+            }
+            ServeError::BudgetExceeded(why) => {
+                write!(f, "cache budget exceeded: {why}")
+            }
         }
     }
 }
 
 impl std::error::Error for ServeError {}
+
+/// A successful routed score: the value plus whether the configured
+/// [`RouteFallback::Base`] policy served it on the boot variant because the
+/// requested variant was quarantined.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ScoreOutcome {
+    /// Mean completion log-probability (what [`ServerHandle::score`]
+    /// returns unwrapped).
+    pub score: f64,
+    /// True iff this score was computed on the boot variant *instead of*
+    /// the requested one (quarantine fallback).
+    pub fallback: bool,
+}
+
+/// What to do with traffic routed at a quarantined variant
+/// (`--route-fallback`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RouteFallback {
+    /// Fail fast with the typed [`ServeError::VariantUnavailable`]. The
+    /// default: never silently answer with different weights.
+    #[default]
+    Reject,
+    /// Serve on the boot variant, marking the response `fallback=true`.
+    Base,
+}
+
+impl RouteFallback {
+    /// Parse a `--route-fallback` value (`"base"` or `"reject"`).
+    pub fn parse(s: &str) -> Result<RouteFallback> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "reject" => Ok(RouteFallback::Reject),
+            "base" | "boot" => Ok(RouteFallback::Base),
+            other => bail!("unknown route-fallback {other:?} (want base|reject)"),
+        }
+    }
+}
 
 /// How the server sources its fault-injection plan.
 #[derive(Debug, Clone, Default)]
@@ -189,6 +240,11 @@ pub struct ServerConfig {
     /// default) executes batches one at a time in formation order — the
     /// single-worker serving path. Default: `MERGEMOE_WORKERS` or 1.
     pub workers: usize,
+    /// Variant-cache tuning (byte budget, build retries, calibration size).
+    /// The budget default honors `MERGEMOE_CACHE_BUDGET_MB`.
+    pub cache: CacheConfig,
+    /// Policy for traffic routed at a quarantined variant.
+    pub route_fallback: RouteFallback,
 }
 
 fn env_workers() -> usize {
@@ -231,6 +287,8 @@ impl Default for ServerConfig {
             drain_timeout: Duration::from_secs(5),
             fault: FaultSetting::FromEnv,
             workers: env_workers(),
+            cache: CacheConfig::default(),
+            route_fallback: RouteFallback::Reject,
         }
     }
 }
@@ -242,11 +300,23 @@ struct Request {
     completion_len: usize,
     submitted: Instant,
     deadline: Option<Instant>,
-    reply: Sender<Result<f64, ServeError>>,
+    /// Which compressed variant to score on; `None` = the boot/hot-swapped
+    /// slot (exactly the pre-routing behavior). The collector never mixes
+    /// variants within a batch.
+    variant: Option<VariantKey>,
+    reply: Sender<Result<ScoreOutcome, ServeError>>,
 }
 
 const STATE_RUNNING: u8 = 0;
 const STATE_DRAINING: u8 = 1;
+
+/// Poison-tolerant lock for observability paths: a thread that panicked
+/// while holding one of these mutexes must never take down `/healthz` or
+/// `/metrics` — the guarded values (counters, label strings) stay readable
+/// whatever the poisoner was mid-writing.
+fn lock_tolerant<T>(m: &Mutex<T>) -> std::sync::MutexGuard<'_, T> {
+    m.lock().unwrap_or_else(|e| e.into_inner())
+}
 
 /// The hot-swappable serving weights: what the worker forwards with, plus
 /// the `name@vN` label `/healthz` reports. Guarded by `Shared::slot`; the
@@ -307,6 +377,11 @@ struct Shared {
     /// Lanes currently inside [`Lane::execute`]; the collector samples this
     /// at handoff to count formation-vs-compute overlap (`overlapped`).
     computing: AtomicUsize,
+    /// Memory-budgeted compressed-variant cache; lanes check routed batches
+    /// out of it per batch (pin for the duration of compute).
+    cache: Arc<VariantCache>,
+    /// Policy for traffic routed at a quarantined variant.
+    route_fallback: RouteFallback,
 }
 
 impl Shared {
@@ -315,6 +390,7 @@ impl Shared {
         model: Arc<ModelWeights>,
         label: String,
         fault: Option<Arc<FaultPlan>>,
+        cache: Arc<VariantCache>,
     ) -> Shared {
         Shared {
             state: AtomicU8::new(STATE_RUNNING),
@@ -341,6 +417,8 @@ impl Shared {
             workers: cfg.workers.max(1),
             collector_idle: AtomicBool::new(true),
             computing: AtomicUsize::new(0),
+            cache,
+            route_fallback: cfg.route_fallback,
         }
     }
 
@@ -392,6 +470,44 @@ impl ServerHandle {
         completion: &str,
         deadline: Option<Duration>,
     ) -> Result<f64, ServeError> {
+        self.score_routed_with_deadline(prompt, completion, None, deadline)
+            .map(|o| o.score)
+    }
+
+    /// Resolve a `{method, ratio, calib_source}` triple against the base
+    /// (boot) model into a canonical [`VariantKey`], rejecting unknown
+    /// methods, out-of-range ratios, and unparsable calibration sources
+    /// with [`ServeError::Rejected`].
+    pub fn resolve_variant(
+        &self,
+        method: &str,
+        ratio: f64,
+        calib: &str,
+    ) -> Result<VariantKey, ServeError> {
+        VariantKey::resolve(method, ratio, calib, self.shared.cache.base().cfg.n_experts)
+            .map_err(|e| ServeError::Rejected(format!("{e:#}")))
+    }
+
+    /// Score on a specific compressed variant (`None` = boot variant —
+    /// exactly [`score`](Self::score)). The variant is built/loaded on
+    /// demand by the cache; the outcome says whether fallback served it.
+    pub fn score_routed(
+        &self,
+        prompt: &str,
+        completion: &str,
+        variant: Option<VariantKey>,
+    ) -> Result<ScoreOutcome, ServeError> {
+        self.score_routed_with_deadline(prompt, completion, variant, self.shared.hot_deadline())
+    }
+
+    /// [`score_routed`](Self::score_routed) with an explicit deadline.
+    pub fn score_routed_with_deadline(
+        &self,
+        prompt: &str,
+        completion: &str,
+        variant: Option<VariantKey>,
+        deadline: Option<Duration>,
+    ) -> Result<ScoreOutcome, ServeError> {
         let ptoks = tasks::encode(prompt);
         let ctoks = tasks::encode(completion);
         let prompt_len = ptoks.len();
@@ -414,7 +530,7 @@ impl ServerHandle {
         // here when a reload tightened the cap below the channel's size —
         // the structural `try_send` bound below remains the backstop
         if self.shared.depth() >= self.shared.soft_cap.load(Ordering::Relaxed) {
-            self.shared.metrics.lock().unwrap().shed += 1;
+            lock_tolerant(&self.shared.metrics).shed += 1;
             return Err(ServeError::Overloaded);
         }
         let mut toks = ptoks;
@@ -428,6 +544,7 @@ impl ServerHandle {
             completion_len,
             submitted,
             deadline: deadline.map(|d| submitted + d),
+            variant,
             reply: rtx,
         };
         match self.tx.try_send(Ctl::Item(req)) {
@@ -435,7 +552,7 @@ impl ServerHandle {
                 self.shared.depth.fetch_add(1, Ordering::Relaxed);
             }
             Err(TrySendError::Full(_)) => {
-                self.shared.metrics.lock().unwrap().shed += 1;
+                lock_tolerant(&self.shared.metrics).shed += 1;
                 return Err(ServeError::Overloaded);
             }
             Err(TrySendError::Disconnected(_)) => {
@@ -463,7 +580,7 @@ pub struct ServerStatus {
 impl ServerStatus {
     /// Snapshot of the rolled-up serving metrics.
     pub fn metrics(&self) -> ServerMetrics {
-        self.shared.metrics.lock().unwrap().clone()
+        lock_tolerant(&self.shared.metrics).clone()
     }
 
     /// True once the worker's restart budget is exhausted (the server
@@ -484,13 +601,13 @@ impl ServerStatus {
 
     /// `name@vN` label of the variant currently serving.
     pub fn variant(&self) -> String {
-        self.shared.slot.lock().unwrap().label.clone()
+        lock_tolerant(&self.shared.slot).label.clone()
     }
 
     /// Outcome of the most recent config reload attempt (`"never"`, `"ok"`,
     /// or `"rejected: <why>"`).
     pub fn last_reload(&self) -> String {
-        self.shared.last_reload.lock().unwrap().clone()
+        lock_tolerant(&self.shared.last_reload).clone()
     }
 
     /// Why the server degraded; `None` while healthy.
@@ -498,12 +615,17 @@ impl ServerStatus {
         if !self.degraded() {
             return None;
         }
-        Some(self.shared.degraded_reason.lock().unwrap().clone())
+        Some(lock_tolerant(&self.shared.degraded_reason).clone())
+    }
+
+    /// Snapshot of the variant-cache gauges/counters (`/metrics`).
+    pub fn cache_stats(&self) -> CacheStats {
+        self.shared.cache.snapshot()
     }
 
     /// Worker restarts consumed so far.
     pub fn restarts_used(&self) -> u64 {
-        self.shared.metrics.lock().unwrap().restarted
+        lock_tolerant(&self.shared.metrics).restarted
     }
 
     /// Worker restart budget the server booted with.
@@ -561,12 +683,12 @@ impl AdminHandle {
                     // generation always finds the new model in the slot
                     self.shared.model_gen.fetch_add(1, Ordering::Release);
                 }
-                self.shared.metrics.lock().unwrap().swaps += 1;
+                lock_tolerant(&self.shared.metrics).swaps += 1;
                 crate::info!("hot-swapped serving variant to {label}");
                 Ok(())
             }
             Err(e) => {
-                self.shared.metrics.lock().unwrap().swap_rollbacks += 1;
+                lock_tolerant(&self.shared.metrics).swap_rollbacks += 1;
                 crate::warnlog!("hot-swap to {label} rolled back: {e:#}");
                 Err(e.context("hot-swap rolled back; incumbent variant unchanged"))
             }
@@ -642,7 +764,7 @@ impl AdminHandle {
                     self.shared.tuning_gen.fetch_add(1, Ordering::Release);
                 }
                 *self.shared.last_reload.lock().unwrap() = "ok".into();
-                self.shared.metrics.lock().unwrap().reloads += 1;
+                lock_tolerant(&self.shared.metrics).reloads += 1;
                 crate::info!("config reload committed");
                 Ok(())
             }
@@ -668,7 +790,7 @@ impl AdminHandle {
 
     fn record_reload_failure(&self, e: &anyhow::Error) {
         *self.shared.last_reload.lock().unwrap() = format!("rejected: {e:#}");
-        self.shared.metrics.lock().unwrap().reload_failures += 1;
+        lock_tolerant(&self.shared.metrics).reload_failures += 1;
         crate::warnlog!("config reload rejected (incumbent tuning kept): {e:#}");
     }
 }
@@ -718,15 +840,22 @@ enum BatchError {
     Failed(FaultClass, String),
 }
 
-/// A formed batch in flight from the collector to a lane.
-type FormedBatch = Vec<WorkItem<Request>>;
+/// A formed batch in flight from the collector to a lane: one variant per
+/// batch (the collector splits a flush by [`Request::variant`], so a lane
+/// checks out at most one cache entry per batch and scores never mix
+/// weights).
+struct FormedBatch {
+    /// `None` = boot/hot-swapped slot.
+    variant: Option<VariantKey>,
+    items: Vec<WorkItem<Request>>,
+}
 
 /// Reply [`ServeError::DeadlineExceeded`] to an item whose deadline passed
 /// while queued (no forward pass was spent on it), recording its latency
 /// and the expiry counters.
 fn fail_expired(shared: &Shared, it: WorkItem<Request>) {
     let r = &it.payload;
-    let mut m = shared.metrics.lock().unwrap();
+    let mut m = lock_tolerant(&shared.metrics);
     m.requests += 1;
     m.errors += 1;
     m.expired += 1;
@@ -738,7 +867,7 @@ fn fail_expired(shared: &Shared, it: WorkItem<Request>) {
 /// Reply `err` to every item, recording request/error counters and latency
 /// (failures are visible in p99, not invisible).
 fn fail_all(shared: &Shared, items: Vec<WorkItem<Request>>, err: ServeError) {
-    let mut m = shared.metrics.lock().unwrap();
+    let mut m = lock_tolerant(&shared.metrics);
     for it in items {
         let r = &it.payload;
         m.requests += 1;
@@ -794,11 +923,19 @@ fn run_collector(
                     // this batch formed during compute — the continuous
                     // batching win, pinned by tests/continuous_batching.rs
                     if shared.computing.load(Ordering::Acquire) > 0 {
-                        shared.metrics.lock().unwrap().overlapped += 1;
+                        lock_tolerant(&shared.metrics).overlapped += 1;
                     }
-                    // only the collector itself closes the queue (on exit),
-                    // so a push can never observe a closed queue
-                    let _ = queue.push(batch.ready);
+                    // one formed batch per distinct variant: routing must
+                    // never mix weights within a forward pass. Stable
+                    // partition, so the workers=1 path still executes
+                    // requests in formation order per variant.
+                    // Only the collector itself closes the queue (on exit),
+                    // so a push can never observe a closed queue.
+                    for (variant, items) in
+                        partition_by_key(batch.ready, |r: &Request| r.variant.clone())
+                    {
+                        let _ = queue.push(FormedBatch { variant, items });
+                    }
                 }
                 if batch.close {
                     break;
@@ -830,6 +967,10 @@ struct Lane<E, F> {
     logits: Tensor,
     tokens: Vec<i32>,
     scores: Vec<f64>,
+    /// True while the current batch is being served on the boot variant
+    /// *instead of* its requested one ([`RouteFallback::Base`]); stamped
+    /// into every [`ScoreOutcome`] the batch replies with.
+    fallback: bool,
 }
 
 impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
@@ -843,10 +984,10 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
                 // work fast instead of letting it pile up in the queue
             }
         }
-        while let Some(items) = queue.pop() {
-            self.shared.depth.fetch_sub(items.len() as isize, Ordering::Relaxed);
+        while let Some(batch) = queue.pop() {
+            self.shared.depth.fetch_sub(batch.items.len() as isize, Ordering::Relaxed);
             self.refresh();
-            self.dispatch(items);
+            self.dispatch(batch);
         }
     }
 
@@ -872,17 +1013,80 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
         }
     }
 
-    fn dispatch(&mut self, items: Vec<WorkItem<Request>>) {
+    fn dispatch(&mut self, batch: FormedBatch) {
         if self.engine.is_none() {
-            fail_all(&self.shared, items, ServeError::Degraded);
+            fail_all(&self.shared, batch.items, ServeError::Degraded);
             return;
         }
         // overlap accounting: the collector samples `computing` while
-        // handing off (execute never unwinds — panics are contained in
-        // try_batch — so the decrement always runs)
+        // handing off (route/execute never unwind — panics are contained
+        // in try_batch — so the decrement always runs)
         self.shared.computing.fetch_add(1, Ordering::AcqRel);
-        self.execute(items);
+        self.route(batch);
         self.shared.computing.fetch_sub(1, Ordering::AcqRel);
+    }
+
+    /// Resolve the batch's variant through the cache, then execute on the
+    /// checked-out weights. The cache lease pins the variant for the whole
+    /// execution (including retries and splits) so LRU eviction can never
+    /// free weights mid-forward-pass; the lane's boot/slot model is swapped
+    /// back afterwards. Cache refusals become typed replies — or, for a
+    /// quarantined variant under [`RouteFallback::Base`], a boot-variant
+    /// score marked `fallback=true`.
+    fn route(&mut self, batch: FormedBatch) {
+        let FormedBatch { variant, items } = batch;
+        self.fallback = false;
+        let Some(key) = variant else {
+            self.execute(items);
+            return;
+        };
+        // the earliest per-item deadline bounds how long a parked checkout
+        // may wait on another thread's in-flight build of the same variant
+        let deadline = items.iter().filter_map(|it| it.payload.deadline).min();
+        match self.shared.cache.checkout(&key, deadline) {
+            Ok(lease) => {
+                let boot = std::mem::replace(&mut self.model, lease.model().clone());
+                self.execute(items);
+                self.model = boot;
+                drop(lease); // unpin only after the last sub-batch finished
+            }
+            Err(CacheError::DeadlineExceeded) => {
+                // the *earliest* deadline expired while parked; fail exactly
+                // the expired items and re-route the rest (their later
+                // deadlines grant more parking budget). Terminates: each
+                // pass removes at least the item whose deadline fired.
+                let now = Instant::now();
+                let (expired, live): (Vec<_>, Vec<_>) = items
+                    .into_iter()
+                    .partition(|it| it.payload.deadline.is_some_and(|d| d <= now));
+                for it in expired {
+                    fail_expired(&self.shared, it);
+                }
+                if !live.is_empty() {
+                    self.route(FormedBatch { variant: Some(key), items: live });
+                }
+            }
+            Err(CacheError::VariantUnavailable { variant, reason }) => {
+                match self.shared.route_fallback {
+                    RouteFallback::Base => {
+                        crate::debuglog!(
+                            "variant {variant} unavailable ({reason}); serving batch on boot variant"
+                        );
+                        self.fallback = true;
+                        self.execute(items);
+                        self.fallback = false;
+                    }
+                    RouteFallback::Reject => fail_all(
+                        &self.shared,
+                        items,
+                        ServeError::VariantUnavailable(format!("{variant}: {reason}")),
+                    ),
+                }
+            }
+            Err(e @ CacheError::BudgetExceeded { .. }) => {
+                fail_all(&self.shared, items, ServeError::BudgetExceeded(format!("{e}")));
+            }
+        }
     }
 
     /// Run one (sub-)batch to completion: retry transient failures under
@@ -932,7 +1136,7 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
                         if items.len() > 1 {
                             // persistent transient failure: split so one
                             // poison request cannot fail its batchmates
-                            self.shared.metrics.lock().unwrap().splits += 1;
+                            lock_tolerant(&self.shared.metrics).splits += 1;
                             crate::debuglog!(
                                 "splitting batch of {} after {attempt} failed attempts",
                                 items.len()
@@ -945,7 +1149,7 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
                         }
                         return;
                     }
-                    self.shared.metrics.lock().unwrap().retried += 1;
+                    lock_tolerant(&self.shared.metrics).retried += 1;
                     let backoff = backoff_delay(self.cfg.retry_backoff, attempt);
                     if !backoff.is_zero() {
                         std::thread::sleep(backoff);
@@ -1000,7 +1204,7 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
         // one batch-counter + compute-latency sample per executed attempt,
         // success or failure, so p99 reflects bad batches too
         {
-            let mut m = self.shared.metrics.lock().unwrap();
+            let mut m = lock_tolerant(&self.shared.metrics);
             m.batches += 1;
             m.batched_sequences += b as u64;
             m.batch_latency.record(t_batch.elapsed());
@@ -1046,7 +1250,7 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
         match (self.make_engine)() {
             Ok(e) => {
                 self.engine = Some(e);
-                self.shared.metrics.lock().unwrap().restarted += 1;
+                lock_tolerant(&self.shared.metrics).restarted += 1;
                 crate::info!(
                     "lane {} respawned with a fresh engine ({} restart(s) left)",
                     self.id,
@@ -1062,7 +1266,9 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
 
     fn degrade(&self, why: &str) {
         crate::warnlog!("server degraded ({why}): fast-rejecting until restarted");
-        *self.shared.degraded_reason.lock().unwrap() = why.to_string();
+        // poison-tolerant: a lane must be able to degrade the server even
+        // if another panicked lane poisoned the reason lock first
+        *lock_tolerant(&self.shared.degraded_reason) = why.to_string();
         self.shared.degraded.store(true, Ordering::Release);
     }
 
@@ -1077,13 +1283,16 @@ impl<E: Engine, F: Fn() -> Result<E>> Lane<E, F> {
     }
 
     fn reply_ok(&mut self, items: Vec<WorkItem<Request>>) {
-        let mut m = self.shared.metrics.lock().unwrap();
+        let mut m = lock_tolerant(&self.shared.metrics);
+        if self.fallback {
+            m.fallbacks += items.len() as u64;
+        }
         for (bi, it) in items.iter().enumerate() {
             let r = &it.payload;
             m.requests += 1;
             m.queue_latency.record(it.enqueued.duration_since(r.submitted));
             m.total_latency.record(r.submitted.elapsed());
-            let _ = r.reply.send(Ok(self.scores[bi]));
+            let _ = r.reply.send(Ok(ScoreOutcome { score: self.scores[bi], fallback: self.fallback }));
         }
     }
 
@@ -1121,6 +1330,24 @@ impl ScoringServer {
         E: Engine,
         F: Fn() -> Result<E> + Send + Sync + 'static,
     {
+        ScoringServer::start_with_registry(model, cfg, None, make_engine)
+    }
+
+    /// [`start`](Self::start) with a registry for the variant cache to
+    /// probe before compressing from scratch: a routed request whose
+    /// variant has a good registry version loads it instead of re-running
+    /// compression. `None` (what `start` passes) means every cold variant
+    /// is compressed from the boot model.
+    pub fn start_with_registry<E, F>(
+        model: ModelWeights,
+        cfg: ServerConfig,
+        registry: Option<Arc<Registry>>,
+        make_engine: F,
+    ) -> Result<ScoringServer>
+    where
+        E: Engine,
+        F: Fn() -> Result<E> + Send + Sync + 'static,
+    {
         let pad = tasks::encode("\n").first().copied().ok_or_else(|| {
             anyhow!("cannot resolve pad token: encoding \"\\n\" produced no tokens")
         })?;
@@ -1130,11 +1357,15 @@ impl ScoringServer {
             FaultSetting::Plan(p) => Some(p.clone()),
         };
         let (tx, rx) = sync_channel::<Ctl<Request>>(cfg.queue_cap.max(1));
-        let model = Arc::new(model);
+        // the cache owns the canonical base Arc (compression source +
+        // fallback target, outside the byte budget); the slot and lanes
+        // boot from the same Arc
+        let cache = Arc::new(VariantCache::new(model, registry, cfg.cache.clone(), fault.clone()));
+        let model = cache.base().clone();
         // until a registry swap replaces it, the booted weights serve under
         // their model name (no registry version to cite)
         let label = format!("{}@local", model.cfg.name);
-        let shared = Arc::new(Shared::new(&cfg, model.clone(), label, fault.clone()));
+        let shared = Arc::new(Shared::new(&cfg, model.clone(), label, fault.clone(), cache));
         let handle = ServerHandle {
             tx: tx.clone(),
             shared: shared.clone(),
@@ -1175,6 +1406,7 @@ impl ScoringServer {
                 logits: Tensor::default(),
                 tokens: Vec::new(),
                 scores: Vec::new(),
+                fallback: false,
             };
             let q = queue.clone();
             lanes.push(
@@ -1216,7 +1448,7 @@ impl ScoringServer {
 
     /// Snapshot of the rolled-up serving metrics.
     pub fn metrics(&self) -> ServerMetrics {
-        self.shared.metrics.lock().unwrap().clone()
+        lock_tolerant(&self.shared.metrics).clone()
     }
 
     /// Requests currently queued.
@@ -1238,7 +1470,7 @@ impl ScoringServer {
     /// Never hangs, regardless of how many handle clones clients still hold.
     pub fn drain(mut self, timeout: Duration) -> ServerMetrics {
         self.close(timeout);
-        self.shared.metrics.lock().unwrap().clone()
+        lock_tolerant(&self.shared.metrics).clone()
     }
 
     fn close(&mut self, timeout: Duration) {
@@ -1488,6 +1720,76 @@ mod tests {
         let m = server.shutdown();
         assert_eq!(m.reloads, 1);
         assert_eq!(m.reload_failures, 1);
+    }
+
+    #[test]
+    fn routed_score_serves_compressed_variant_with_outcome() {
+        let model = tiny_model(4, 2, false, 112);
+        let cfg = ServerConfig {
+            cache: CacheConfig { n_calib_seqs: 8, ..Default::default() },
+            ..quiet_cfg()
+        };
+        let server = ScoringServer::start(model, cfg, || Ok(NativeEngine)).unwrap();
+        let h = server.handle();
+        let key = h.resolve_variant("average", 0.5, "copy").unwrap();
+        let a = h.score_routed("c:abcd|", "abcd.", Some(key.clone())).unwrap();
+        assert!(a.score.is_finite() && !a.fallback);
+        // second request hits the cached variant — no rebuild — and is
+        // bit-identical to the first
+        let b = h.score_routed("c:abcd|", "abcd.", Some(key)).unwrap();
+        assert_eq!(a.score.to_bits(), b.score.to_bits());
+        let stats = server.status().cache_stats();
+        assert_eq!(stats.builds, 1);
+        assert_eq!(stats.hits, 1);
+        // unknown method rejected typed at resolution, not at compute
+        assert!(matches!(
+            h.resolve_variant("wat", 0.5, "copy"),
+            Err(ServeError::Rejected(_))
+        ));
+        drop(h);
+        let m = server.shutdown();
+        assert_eq!(m.errors, 0);
+        assert_eq!(m.fallbacks, 0);
+    }
+
+    #[test]
+    fn healthz_survives_poisoned_observability_locks() {
+        use super::super::http::HttpServer;
+        use std::io::{Read as _, Write as _};
+
+        let model = tiny_model(4, 2, false, 113);
+        let server = ScoringServer::start(model, quiet_cfg(), || Ok(NativeEngine)).unwrap();
+        let status = server.status();
+        let mut http = HttpServer::bind("127.0.0.1:0", server.handle(), status.clone()).unwrap();
+        let addr = http.addr();
+        // poison every mutex /healthz and /metrics read: a thread panics
+        // while holding each lock
+        let shared = status.shared.clone();
+        std::thread::spawn(move || {
+            let _a = shared.degraded_reason.lock().unwrap();
+            let _b = shared.metrics.lock().unwrap();
+            let _c = shared.last_reload.lock().unwrap();
+            let _d = shared.slot.lock().unwrap();
+            panic!("poisoning observability locks");
+        })
+        .join()
+        .unwrap_err();
+        // direct getters keep answering
+        assert_eq!(status.variant(), "tiny@local");
+        assert_eq!(status.last_reload(), "never");
+        let _ = status.metrics();
+        assert!(status.degraded_reason().is_none());
+        // and /healthz still answers over the wire
+        let mut s = std::net::TcpStream::connect(addr).unwrap();
+        s.write_all(b"GET /healthz HTTP/1.1\r\nHost: x\r\n\r\n").unwrap();
+        let mut buf = String::new();
+        s.read_to_string(&mut buf).unwrap();
+        assert!(
+            buf.starts_with("HTTP/1.1 200"),
+            "poisoned locks must not take down health reporting:\n{buf}"
+        );
+        http.stop();
+        server.shutdown();
     }
 
     #[test]

@@ -21,8 +21,8 @@ use anyhow::{bail, Context, Result};
 
 use mergemoe::calib;
 use mergemoe::coordinator::{
-    compress, AdminState, CalibSource, CompressSpec, HttpServer, Registry, ScoringServer,
-    ServerConfig, VariantSpec,
+    compress, AdminState, CalibSource, CompressSpec, HttpServer, Registry, RouteFallback,
+    ScoringServer, ServerConfig, VariantSpec,
 };
 use mergemoe::eval::tasks::{Task, ALL_TASKS};
 use mergemoe::eval::{run_sweep, SweepSpec};
@@ -68,10 +68,18 @@ fn usage() -> &'static str {
                 [--queue-cap N] [--deadline-ms N] [--retries N] [--restart-budget N]\n\
                 [--drain-ms N] [--workers N] [--listen ADDR[:PORT]] [--duration-s N]\n\
                 [--registry DIR [--variant NAME[@vN]]] [--config-file FILE.json]\n\
+                [--cache-budget-mb N] [--route-fallback base|reject]\n\
                 default: in-process demo load-gen; with --listen, serves the\n\
                 HTTP/1.1 API (POST /score, GET /healthz, GET /metrics, plus\n\
                 POST /admin/swap and /admin/reload when --registry or\n\
                 --config-file is given) for --duration-s seconds (0 = forever).\n\
+                POST /score takes optional method/ratio/calib_source fields to\n\
+                score on a compressed variant, built on demand (registry\n\
+                first, else compressed from the boot model) into an in-process\n\
+                cache bounded by --cache-budget-mb (default 256, also via\n\
+                MERGEMOE_CACHE_BUDGET_MB); --route-fallback base serves\n\
+                quarantined-variant traffic on the boot weights with\n\
+                fallback=true (default reject = typed 503).\n\
                 --variant boots from the registry (latest good version unless\n\
                 @vN pins one); --config-file applies validated tuning at boot\n\
                 and on each /admin/reload. --workers N runs N compute lanes\n\
@@ -79,7 +87,7 @@ fn usage() -> &'static str {
                 also via MERGEMOE_WORKERS). overload knobs also via\n\
                 MERGEMOE_QUEUE_CAP; fault injection via MERGEMOE_FAULT\n\
                 (seed:N[,transient:P][,fatal:P][,panic:P][,slow:P][,slow-ms:N]\n\
-                [,io-fail:N])\n\
+                [,io-fail:N][,build-fail:N])\n\
      registry:  <add|ls|verify> --registry DIR\n\
                 add: --model NAME [--name VARIANT] [--m M --alg ALG\n\
                 [--layers l1,l2] [--calib-seqs N] [--calib-tasks t1,t2]]\n\
@@ -452,6 +460,13 @@ fn cmd_serve(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     let n_requests = args.usize("requests", 200)?;
     let n_clients = args.usize("clients", 4)?;
     let default_cfg = ServerConfig::default();
+    // the CacheConfig default already honors MERGEMOE_CACHE_BUDGET_MB; the
+    // flag overrides it
+    let mut cache = default_cfg.cache.clone();
+    cache.budget_bytes = args
+        .usize("cache-budget-mb", cache.budget_bytes / (1024 * 1024))?
+        .saturating_mul(1024 * 1024);
+    let route_fallback = RouteFallback::parse(args.get_or("route-fallback", "reject"))?;
     let cfg = ServerConfig {
         max_batch: args.usize("max-batch", 32)?,
         max_wait: Duration::from_millis(args.usize("max-wait-ms", 3)? as u64),
@@ -462,6 +477,8 @@ fn cmd_serve(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
         restart_budget: args.usize("restart-budget", default_cfg.restart_budget as usize)? as u32,
         drain_timeout: args.ms("drain-ms", default_cfg.drain_timeout)?,
         workers: args.usize("workers", default_cfg.workers)?,
+        cache,
+        route_fallback,
         ..default_cfg
     };
     // a bare checkout has no pallas artifact, so the lanes fall back to the
@@ -471,15 +488,22 @@ fn cmd_serve(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     // keep a copy of registry-booted weights: the post-start swap below
     // re-labels the slot with the registry version (name@vN, not name@local)
     let boot_copy = variant.as_ref().map(|_| model.clone());
-    let server = ScoringServer::start(model, cfg, move || -> Result<Box<dyn Engine>> {
-        match sel {
-            EngineSel::Native => Ok(Box::new(NativeEngine)),
-            EngineSel::Pjrt => {
-                let manifest = config::Manifest::load(&artifacts)?;
-                Ok(Box::new(PjrtEngine::new(manifest)?))
+    // the registry doubles as the cache's variant source: a routed request
+    // whose variant is registered loads it instead of re-compressing
+    let server = ScoringServer::start_with_registry(
+        model,
+        cfg,
+        registry.clone(),
+        move || -> Result<Box<dyn Engine>> {
+            match sel {
+                EngineSel::Native => Ok(Box::new(NativeEngine)),
+                EngineSel::Pjrt => {
+                    let manifest = config::Manifest::load(&artifacts)?;
+                    Ok(Box::new(PjrtEngine::new(manifest)?))
+                }
             }
-        }
-    })?;
+        },
+    )?;
     if let (Some(meta), Some(m)) = (&variant, boot_copy) {
         server
             .admin()

@@ -167,13 +167,21 @@ enum Mode {
 }
 
 /// A deterministic fault schedule. Thread-safe: the server consults it via
-/// [`FaultPlan::next`], which advances an atomic attempt cursor.
+/// [`FaultPlan::next`], which advances an atomic attempt cursor. Variant
+/// *cache builds* draw from a separate cursor ([`FaultPlan::next_build`])
+/// so a chaos plan can perturb both compute attempts and cold-build
+/// attempts without the two schedules aliasing each other.
 #[derive(Debug)]
 pub struct FaultPlan {
     mode: Mode,
     cursor: AtomicU64,
     poison: Option<i32>,
     io_fail: Option<u64>,
+    /// `build-fail:N` — fail the `N`-th (0-based) cache build attempt.
+    build_fail: Option<u64>,
+    /// Exact per-build-attempt script (takes precedence over `build_fail`).
+    build_script: Option<Vec<FaultAction>>,
+    build_cursor: AtomicU64,
 }
 
 impl FaultPlan {
@@ -185,6 +193,9 @@ impl FaultPlan {
             cursor: AtomicU64::new(0),
             poison: None,
             io_fail: None,
+            build_fail: None,
+            build_script: None,
+            build_cursor: AtomicU64::new(0),
         }
     }
 
@@ -195,6 +206,9 @@ impl FaultPlan {
             cursor: AtomicU64::new(0),
             poison: None,
             io_fail: None,
+            build_fail: None,
+            build_script: None,
+            build_cursor: AtomicU64::new(0),
         }
     }
 
@@ -205,18 +219,31 @@ impl FaultPlan {
         self
     }
 
+    /// Exact per-*build*-attempt script for the variant cache: build
+    /// attempt `i` takes `actions[i]` (past the end = clean). Takes
+    /// precedence over `build-fail:N`. Tests use this to force a fatal
+    /// first build (immediate quarantine) or `Transient × (retries+1)`
+    /// (retry-exhaustion quarantine) deterministically.
+    pub fn with_build_script(mut self, actions: Vec<FaultAction>) -> FaultPlan {
+        self.build_script = Some(actions);
+        self
+    }
+
     /// Parse the `MERGEMOE_FAULT` grammar: comma-separated `key:value`
     /// pairs. `seed:N` selects seeded mode (required); optional rates
     /// `transient:P`, `fatal:P`, `panic:P`, `slow:P` (probabilities in
     /// `[0,1]`, defaults `0.05/0/0/0`), `slow-ms:N` (stall length, default
-    /// 10), `poison:TOK` (poison token id), and `io-fail:N` (fail the
+    /// 10), `poison:TOK` (poison token id), `io-fail:N` (fail the
     /// `N`-th IO gate crossing — armed via [`FaultPlan::arm_io`], used by
-    /// `mergemoe registry` to simulate a crash mid-persist).
+    /// `mergemoe registry` to simulate a crash mid-persist), and
+    /// `build-fail:N` (fail the `N`-th variant-cache build attempt with a
+    /// transient fault, exercising the cache's retry-under-backoff path).
     pub fn parse(spec: &str) -> Result<FaultPlan> {
         let mut seed: Option<u64> = None;
         let mut rates = Rates::default();
         let mut poison = None;
         let mut io_fail = None;
+        let mut build_fail = None;
         for part in spec.split(',') {
             let part = part.trim();
             if part.is_empty() {
@@ -248,6 +275,11 @@ impl FaultPlan {
                     io_fail =
                         Some(v.parse().with_context(|| format!("bad io-fail index {v:?}"))?)
                 }
+                "build-fail" => {
+                    build_fail = Some(
+                        v.parse().with_context(|| format!("bad build-fail index {v:?}"))?,
+                    )
+                }
                 other => bail!("unknown fault spec key {other:?}"),
             }
         }
@@ -261,6 +293,9 @@ impl FaultPlan {
             cursor: AtomicU64::new(0),
             poison,
             io_fail,
+            build_fail,
+            build_script: None,
+            build_cursor: AtomicU64::new(0),
         })
     }
 
@@ -330,6 +365,28 @@ impl FaultPlan {
     /// Attempts consumed so far.
     pub fn attempts(&self) -> u64 {
         self.cursor.load(Ordering::Relaxed)
+    }
+
+    /// Consume and return the next *cache build* attempt's action. A
+    /// separate cursor from [`FaultPlan::next`]: with a `build_script`,
+    /// build attempt `i` takes `script[i]`; otherwise `build-fail:N` fails
+    /// the `N`-th build attempt with [`FaultAction::Transient`] (so under
+    /// chaos sweeps the retry path — not a permanent quarantine — is
+    /// exercised, and the run still completes). Everything else runs clean.
+    pub fn next_build(&self) -> FaultAction {
+        let i = self.build_cursor.fetch_add(1, Ordering::Relaxed);
+        if let Some(script) = &self.build_script {
+            return script.get(i as usize).copied().unwrap_or(FaultAction::None);
+        }
+        match self.build_fail {
+            Some(n) if n == i => FaultAction::Transient,
+            _ => FaultAction::None,
+        }
+    }
+
+    /// Build attempts consumed so far (via [`FaultPlan::next_build`]).
+    pub fn build_attempts(&self) -> u64 {
+        self.build_cursor.load(Ordering::Relaxed)
     }
 
     /// Whether this batch trips the poison-token condition.
@@ -410,6 +467,32 @@ mod tests {
         assert!(FaultPlan::parse("seed:1,transient:0.8,fatal:0.8").is_err());
         assert!(FaultPlan::parse("seed:1,wat:2").is_err());
         assert!(FaultPlan::parse("seed:1,noval").is_err());
+    }
+
+    #[test]
+    fn build_fail_fires_at_exactly_the_named_attempt() {
+        let p = FaultPlan::parse("seed:1,build-fail:2").unwrap();
+        assert_eq!(p.next_build(), FaultAction::None);
+        assert_eq!(p.next_build(), FaultAction::None);
+        assert_eq!(p.next_build(), FaultAction::Transient);
+        assert_eq!(p.next_build(), FaultAction::None);
+        assert_eq!(p.build_attempts(), 4);
+        // the build cursor is independent of the batch-attempt cursor
+        assert_eq!(p.attempts(), 0);
+        // plans without build-fail never fail builds
+        let q = FaultPlan::parse("seed:1,transient:1.0").unwrap();
+        assert!((0..16).all(|_| q.next_build() == FaultAction::None));
+    }
+
+    #[test]
+    fn build_script_takes_precedence_and_runs_exactly() {
+        let p = FaultPlan::scripted(vec![]).with_build_script(vec![
+            FaultAction::Fatal,
+            FaultAction::Transient,
+        ]);
+        assert_eq!(p.next_build(), FaultAction::Fatal);
+        assert_eq!(p.next_build(), FaultAction::Transient);
+        assert_eq!(p.next_build(), FaultAction::None);
     }
 
     #[test]

@@ -1,0 +1,445 @@
+//! Variant-cache routing tests: a routed `/score` request names a
+//! `{method, ratio, calib_source}` triple and the server resolves it
+//! through the memory-budgeted [`VariantCache`]. These pin the four
+//! ledger claims:
+//!
+//! * single-flight — N concurrent cold requests for one variant trigger
+//!   exactly ONE build; everyone else parks on the in-flight slot;
+//! * eviction under budget pressure — with a budget that fits 2 of 3
+//!   variants, round-robin traffic completes every request with the
+//!   bit-exact score of the variant it asked for (evict/rebuild cycles
+//!   never cross-wire weights), and peak cache bytes stay ≤ budget;
+//! * quarantine + fallback — a fatally failing build quarantines the
+//!   variant (typed fast-fail, no rebuild storm); `--route-fallback base`
+//!   instead serves quarantined traffic on the boot weights with the
+//!   `fallback` marker set;
+//! * bit-identity — a routed score equals compressing the same spec
+//!   directly (`capture_calibration_source` + `compress_with_calib`) and
+//!   scoring the result, across 1 and 4 lanes.
+//!
+//! Native engine on a small synthetic model: runs on a bare checkout.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use mergemoe::config::ModelConfig;
+use mergemoe::coordinator::{
+    capture_calibration_source, compress_with_calib, CacheConfig, CalibSource, FaultSetting,
+    RouteFallback, ScoringServer, ServeError, ServerConfig, VariantCache, VariantKey,
+};
+use mergemoe::merge::NativeGram;
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::workspace::Workspace;
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::NativeEngine;
+use mergemoe::util::fault::{FaultAction, FaultPlan};
+
+/// Same shape as tests/continuous_batching.rs (4 experts, so ratio 0.5
+/// resolves to m=2), under its own name/seed.
+fn test_model() -> ModelWeights {
+    let cfg = ModelConfig {
+        name: "varcache".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: false,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    synth_model(&cfg, 91)
+}
+
+/// Cache knobs every test shares: tiny calibration (speed), fast retries,
+/// fixed seed so rebuilds after eviction are bit-identical.
+fn test_cache_cfg(budget_bytes: usize) -> CacheConfig {
+    CacheConfig {
+        budget_bytes,
+        max_retries: 1,
+        retry_backoff: Duration::from_micros(100),
+        n_calib_seqs: 8,
+        seed: 0xC0FFEE,
+    }
+}
+
+fn cfg_with_workers(workers: usize) -> ServerConfig {
+    ServerConfig {
+        max_batch: 8,
+        max_wait: Duration::from_millis(2),
+        seq_len: 64,
+        queue_cap: 64,
+        fault: FaultSetting::Off,
+        retry_backoff: Duration::from_micros(200),
+        drain_timeout: Duration::from_secs(5),
+        workers,
+        cache: test_cache_cfg(1 << 30),
+        ..ServerConfig::default()
+    }
+}
+
+/// The sweep path the cache's cold build must reproduce bit for bit:
+/// the cache's own [`VariantCache::build_spec`] fed through
+/// `capture_calibration_source` + `compress_with_calib` on `NativeGram`.
+fn reference_model(key: &VariantKey, cache_cfg: &CacheConfig) -> ModelWeights {
+    let probe = VariantCache::new(test_model(), None, cache_cfg.clone(), None);
+    let spec = probe.build_spec(key);
+    let source = CalibSource::parse(&key.calib).unwrap();
+    let calib =
+        capture_calibration_source(probe.base(), spec.n_calib_seqs, &source, spec.seed).unwrap();
+    let mut ws = Workspace::new();
+    let (model, _report) =
+        compress_with_calib(probe.base(), &spec, &mut NativeGram, &calib, &mut ws).unwrap();
+    model
+}
+
+/// Score `reqs` on `model` through an unrouted single-lane server — the
+/// pre-routing serving path, used as the bit-identity reference.
+fn direct_bits(model: ModelWeights, reqs: &[(&str, &str)]) -> Vec<u64> {
+    let server = ScoringServer::start(model, cfg_with_workers(1), || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let bits = reqs.iter().map(|&(p, c)| h.score(p, c).unwrap().to_bits()).collect();
+    server.shutdown();
+    bits
+}
+
+/// Fixed request set (distinct tasks, so a cross-wired reply is caught by
+/// value, not just by count).
+const REQS: [(&str, &str); 4] =
+    [("c:abcd|", "abcd."), ("r:abc|", "cba."), ("c:xyxy|", "xyxy."), ("c:abab|", "abab.")];
+
+// ---------------------------------------------------------------------------
+// single-flight: 8 concurrent cold requests, exactly 1 build
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eight_concurrent_cold_requests_build_exactly_once() {
+    // max_batch 1 forces one checkout per request: 8 requests race for the
+    // cold slot across 4 lanes instead of coalescing into one batch
+    let cfg = ServerConfig { max_batch: 1, ..cfg_with_workers(4) };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let key = h.resolve_variant("average", 0.5, "copy").unwrap();
+
+    let joins: Vec<_> = (0..8)
+        .map(|_| {
+            let hc = h.clone();
+            let k = key.clone();
+            std::thread::spawn(move || hc.score_routed("c:abcd|", "abcd.", Some(k)).unwrap())
+        })
+        .collect();
+    let outs: Vec<_> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+
+    let bits = outs[0].score.to_bits();
+    for o in &outs {
+        assert!(!o.fallback, "no quarantine in play, nothing may be marked fallback");
+        assert_eq!(o.score.to_bits(), bits, "all 8 scored the same variant");
+    }
+    let stats = server.status().cache_stats();
+    assert_eq!(stats.builds, 1, "single-flight: 8 cold requests, ONE build");
+    assert_eq!(stats.misses, 1, "only the builder took the cold path");
+    assert_eq!(stats.build_failures, 0);
+    assert_eq!(stats.quarantined, 0);
+    let m = server.shutdown();
+    assert_eq!(m.requests, 8);
+    assert_eq!(m.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// eviction under budget pressure: right scores, bounded bytes
+// ---------------------------------------------------------------------------
+
+#[test]
+fn eviction_under_budget_pressure_never_serves_wrong_variant() {
+    // three variants, two of one size (m=2) and one smaller (m=1), with
+    // pairwise-distinct scores; budget = 2 × the m=2 size, so any two fit
+    // and the third always forces an eviction
+    let cache_cfg = test_cache_cfg(1 << 30);
+    let triples = [("mergemoe", 0.5, "mixture"), ("average", 0.5, "copy"), ("mergemoe", 0.25, "mixture")];
+    let mut keys = Vec::new();
+    let mut want = Vec::new(); // per-variant reference bits for REQS[0]
+    let mut m2_bytes = 0usize;
+    for &(method, ratio, calib) in &triples {
+        let key = VariantKey::resolve(method, ratio, calib, 4).unwrap();
+        let model = reference_model(&key, &cache_cfg);
+        if key.m == 2 {
+            m2_bytes = model.n_params() * 4;
+        }
+        want.push(direct_bits(model, &REQS[..1])[0]);
+        keys.push(key);
+    }
+    assert!(m2_bytes > 0);
+    assert_eq!(
+        want.iter().collect::<std::collections::HashSet<_>>().len(),
+        3,
+        "the three variants must be distinguishable by score for this test to mean anything"
+    );
+
+    let budget = 2 * m2_bytes;
+    let cfg = ServerConfig {
+        cache: CacheConfig { budget_bytes: budget, ..cache_cfg },
+        ..cfg_with_workers(2)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+
+    // one client per variant, hammering concurrently: evict/rebuild churn
+    // with lanes pinning entries mid-batch
+    const ROUNDS: usize = 6;
+    let joins: Vec<_> = keys
+        .iter()
+        .zip(&want)
+        .map(|(key, &want_bits)| {
+            let hc = h.clone();
+            let k = key.clone();
+            std::thread::spawn(move || {
+                for round in 0..ROUNDS {
+                    let out =
+                        hc.score_routed(REQS[0].0, REQS[0].1, Some(k.clone())).unwrap_or_else(
+                            |e| panic!("round {round} of {} failed: {e}", k.label()),
+                        );
+                    assert!(!out.fallback);
+                    assert_eq!(
+                        out.score.to_bits(),
+                        want_bits,
+                        "round {round}: {} served some other variant's weights",
+                        k.label()
+                    );
+                }
+            })
+        })
+        .collect();
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    // deterministic tail: one sequential round-robin cycle. The cache holds
+    // at most 2 of the 3 variants, so at least one access here is a miss
+    // that must evict + rebuild — churn is guaranteed even if the threads
+    // above happened to run serially
+    for (key, &want_bits) in keys.iter().zip(&want) {
+        let out = h.score_routed(REQS[0].0, REQS[0].1, Some(key.clone())).unwrap();
+        assert_eq!(out.score.to_bits(), want_bits, "{} after churn", key.label());
+    }
+
+    let stats = server.status().cache_stats();
+    assert!(stats.evictions >= 2, "3 variants under a 2-variant budget must evict");
+    assert!(
+        stats.builds >= 4,
+        "evicted variants were rebuilt on return (builds = {})",
+        stats.builds
+    );
+    assert!(
+        stats.bytes_peak <= budget as u64,
+        "peak cache bytes {} exceeded the budget {}",
+        stats.bytes_peak,
+        budget
+    );
+    assert!(stats.bytes <= budget as u64);
+    assert_eq!(stats.quarantined, 0);
+    let m = server.shutdown();
+    assert_eq!(m.requests, (3 * ROUNDS + 3) as u64);
+    assert_eq!(m.errors, 0, "every admitted request completed");
+    assert_eq!(m.fallbacks, 0);
+}
+
+// ---------------------------------------------------------------------------
+// quarantine + fallback
+// ---------------------------------------------------------------------------
+
+#[test]
+fn fatal_build_quarantines_and_fails_fast_typed() {
+    let plan = Arc::new(FaultPlan::scripted(vec![]).with_build_script(vec![FaultAction::Fatal]));
+    let cfg = ServerConfig {
+        fault: FaultSetting::Plan(plan.clone()),
+        ..cfg_with_workers(1)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let key = h.resolve_variant("mergemoe", 0.5, "mixture").unwrap();
+
+    // first request takes the builder role and hits the fatal injection
+    let err = h.score_routed("c:abcd|", "abcd.", Some(key.clone())).unwrap_err();
+    assert!(
+        matches!(err, ServeError::VariantUnavailable(_)),
+        "fatal build must surface typed, got {err:?}"
+    );
+    // second request fails fast from quarantine — no second build attempt
+    let err2 = h.score_routed("c:abcd|", "abcd.", Some(key.clone())).unwrap_err();
+    assert!(matches!(err2, ServeError::VariantUnavailable(_)));
+    assert_eq!(plan.build_attempts(), 1, "quarantine must not re-trigger the build");
+
+    let stats = server.status().cache_stats();
+    assert_eq!(stats.quarantined, 1);
+    assert_eq!(stats.build_failures, 1, "fatal = no retries");
+    assert_eq!(stats.builds, 0);
+
+    // boot-path traffic is untouched by the quarantine
+    assert!(h.score("c:abcd|", "abcd.").is_ok());
+    let m = server.shutdown();
+    assert_eq!(m.fallbacks, 0, "RouteFallback::Reject never serves fallback traffic");
+}
+
+#[test]
+fn route_fallback_base_serves_quarantined_traffic_on_boot_weights() {
+    // reference: the boot score on an unrouted, fault-free server
+    let boot_bits = direct_bits(test_model(), &REQS[..1])[0];
+
+    let plan = Arc::new(FaultPlan::scripted(vec![]).with_build_script(vec![FaultAction::Fatal]));
+    let cfg = ServerConfig {
+        fault: FaultSetting::Plan(plan.clone()),
+        route_fallback: RouteFallback::Base,
+        ..cfg_with_workers(1)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+    let key = h.resolve_variant("mergemoe", 0.5, "mixture").unwrap();
+
+    // the build fails fatally; instead of a typed reject the request is
+    // served on the boot weights, visibly marked
+    let out = h.score_routed(REQS[0].0, REQS[0].1, Some(key.clone())).unwrap();
+    assert!(out.fallback, "quarantined traffic under --route-fallback base must be marked");
+    assert_eq!(out.score.to_bits(), boot_bits, "fallback scores on the boot weights");
+
+    // a second routed request: still quarantined, still served + marked
+    let out2 = h.score_routed(REQS[0].0, REQS[0].1, Some(key)).unwrap();
+    assert!(out2.fallback);
+    assert_eq!(plan.build_attempts(), 1);
+
+    // unrouted traffic on the same server is NOT marked
+    let plain = h.score_routed(REQS[0].0, REQS[0].1, None).unwrap();
+    assert!(!plain.fallback);
+    assert_eq!(plain.score.to_bits(), boot_bits);
+
+    let m = server.shutdown();
+    assert_eq!(m.fallbacks, 2, "exactly the two quarantined-variant requests fell back");
+    assert_eq!(m.errors, 0);
+}
+
+// ---------------------------------------------------------------------------
+// env-driven chaos: the ci.sh seeded sweep lands here
+// ---------------------------------------------------------------------------
+
+/// `FaultSetting::FromEnv` (the server default): ci.sh reruns this suite
+/// under seeded `MERGEMOE_FAULT` plans with `build-fail:N` and `io-fail:N`
+/// composed in. The contract under chaos: every admitted request resolves
+/// to a typed outcome (an `Ok` score or a `ServeError` — the unwraps
+/// below would panic on anything else), every `Ok` is bit-exact for the
+/// variant it asked for, and peak cache bytes never exceed the budget.
+/// With the env unset this runs fault-free and every request succeeds.
+#[test]
+fn seeded_chaos_round_robin_stays_typed_and_bit_exact() {
+    let cache_cfg = test_cache_cfg(1 << 30);
+    let triples = [("mergemoe", 0.5, "mixture"), ("average", 0.5, "copy"), ("mergemoe", 0.25, "mixture")];
+    let mut keys = Vec::new();
+    let mut want = Vec::new();
+    let mut m2_bytes = 0usize;
+    for &(method, ratio, calib) in &triples {
+        let key = VariantKey::resolve(method, ratio, calib, 4).unwrap();
+        let model = reference_model(&key, &cache_cfg);
+        if key.m == 2 {
+            m2_bytes = model.n_params() * 4;
+        }
+        want.push(direct_bits(model, &REQS[..1])[0]);
+        keys.push(key);
+    }
+
+    let budget = 2 * m2_bytes;
+    let cfg = ServerConfig {
+        fault: FaultSetting::FromEnv,
+        cache: CacheConfig { budget_bytes: budget, ..cache_cfg },
+        ..cfg_with_workers(2)
+    };
+    let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+    let h = server.handle();
+
+    let joins: Vec<_> = keys
+        .iter()
+        .zip(&want)
+        .map(|(key, &want_bits)| {
+            let hc = h.clone();
+            let k = key.clone();
+            std::thread::spawn(move || {
+                let mut ok = 0usize;
+                for _ in 0..6 {
+                    match hc.score_routed(REQS[0].0, REQS[0].1, Some(k.clone())) {
+                        Ok(out) => {
+                            assert!(!out.fallback, "Reject mode never serves fallback");
+                            assert_eq!(
+                                out.score.to_bits(),
+                                want_bits,
+                                "chaos must fail requests typed, never cross-wire {}",
+                                k.label()
+                            );
+                            ok += 1;
+                        }
+                        // injected engine faults / exhausted retries /
+                        // degradation surface typed — that IS the contract
+                        Err(_) => {}
+                    }
+                }
+                ok
+            })
+        })
+        .collect();
+    let ok: usize = joins.into_iter().map(|j| j.join().unwrap()).sum();
+
+    let stats = server.status().cache_stats();
+    assert!(
+        stats.bytes_peak <= budget as u64,
+        "peak cache bytes {} exceeded the budget {} under chaos",
+        stats.bytes_peak,
+        budget
+    );
+    server.shutdown();
+    if std::env::var("MERGEMOE_FAULT").is_err() {
+        assert_eq!(ok, 18, "fault-free run must succeed every request");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// bit-identity: routed score ≡ direct compression + scoring, lanes 1 and 4
+// ---------------------------------------------------------------------------
+
+#[test]
+fn routed_scores_match_direct_compression_across_lane_counts() {
+    let cache_cfg = test_cache_cfg(1 << 30);
+    let key = VariantKey::resolve("mergemoe", 0.5, "mixture", 4).unwrap();
+    // the sweep path: compress with the cache's own spec, score directly
+    let want = direct_bits(reference_model(&key, &cache_cfg), &REQS);
+
+    for workers in [1usize, 4] {
+        let cfg = ServerConfig { cache: cache_cfg.clone(), ..cfg_with_workers(workers) };
+        let server = ScoringServer::start(test_model(), cfg, || Ok(NativeEngine)).unwrap();
+        let h = server.handle();
+        let hk = h.resolve_variant("MergeMoE", 0.5, "mixture").unwrap();
+        assert_eq!(hk, key, "resolve canonicalizes spellings to one cache identity");
+
+        // concurrent clients: arbitrary lanes, arbitrary batch splits
+        let joins: Vec<_> = (0..12)
+            .map(|i| {
+                let hc = h.clone();
+                let k = hk.clone();
+                let (p, c) = REQS[i % REQS.len()];
+                std::thread::spawn(move || {
+                    let out = hc.score_routed(p, c, Some(k)).unwrap();
+                    assert!(!out.fallback);
+                    out.score.to_bits()
+                })
+            })
+            .collect();
+        let bits: Vec<u64> = joins.into_iter().map(|j| j.join().unwrap()).collect();
+        for (i, &b) in bits.iter().enumerate() {
+            assert_eq!(
+                b,
+                want[i % REQS.len()],
+                "workers={workers}: routed score diverged from the sweep path"
+            );
+        }
+        let stats = server.status().cache_stats();
+        assert_eq!(stats.builds, 1, "one cold build serves all 12 requests");
+        let m = server.shutdown();
+        assert_eq!(m.errors, 0);
+    }
+}
