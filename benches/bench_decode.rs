@@ -1,0 +1,110 @@
+//! Decode-path benchmark: prefill tokens/sec (one full forward over the
+//! context window) vs autoregressive decode tokens/sec through the KV cache
+//! (`Engine::decode_step` on the native engine) vs the re-prefill fallback
+//! every KV-less backend gets from the trait default — the O(S) / O(S²)
+//! per-token contrast that motivates ROADMAP direction 5. The generation
+//! loop is the real `eval::generate_into` on warm caller-owned buffers, so
+//! the numbers include sampling. Falls back to a synthetic `beta`-shaped
+//! model on a bare checkout. Emits `BENCH_decode.json`.
+
+use anyhow::Result;
+
+use mergemoe::bench::{self, Bencher};
+use mergemoe::calib;
+use mergemoe::eval::{generate_into, Sampler};
+use mergemoe::model::workspace::{KvScratch, Workspace};
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine};
+use mergemoe::tensor::Tensor;
+use mergemoe::util::par;
+use mergemoe::util::rng::Rng;
+
+/// The trait-default decode path (full re-prefill per token), made concrete
+/// so the bench can time it against the native KV override on identical
+/// forward kernels — the same shape a backend without an incremental path
+/// (PJRT) gets for free.
+struct ReprefillEngine;
+
+impl Engine for ReprefillEngine {
+    fn logits(&mut self, model: &ModelWeights, tokens: &[i32], b: usize, s: usize)
+        -> Result<Tensor> {
+        NativeEngine.logits(model, tokens, b, s)
+    }
+
+    fn logits_ws(
+        &mut self,
+        model: &ModelWeights,
+        tokens: &[i32],
+        b: usize,
+        s: usize,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        NativeEngine.logits_ws(model, tokens, b, s, ws, out)
+    }
+
+    fn name(&self) -> &'static str {
+        "reprefill"
+    }
+}
+
+fn main() -> Result<()> {
+    let bm = bench::load_or_synth("beta");
+    let model = bm.model;
+    let s = bm.seq_len;
+    let threads = par::max_threads();
+    println!(
+        "bench_decode: model=beta ({}), {threads} threads, context {s}",
+        if bm.from_artifacts { "trained artifacts" } else { "synthetic weights" }
+    );
+
+    let b = Bencher::from_env();
+    let mut out = Vec::new();
+
+    // ---- prefill: one batched forward over the full window ----
+    let tokens = calib::sample_sequences(None, 1, s, 7);
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    out.push(b.run_items(&format!("decode/prefill/s{s}"), s as f64, || {
+        NativeEngine.logits_ws(&model, &tokens, 1, s, &mut ws, &mut logits).unwrap()
+    }));
+
+    // ---- autoregressive decode: prompt -> window, greedy sampling ----
+    // (greedy keeps every iteration on the identical token sequence)
+    let prompt = &tokens[..8.min(s)];
+    let max_new = if bench::quick_mode() { 16.min(s - prompt.len()) } else { s - prompt.len() };
+    let mut sampler = Sampler::greedy();
+    let mut kv = KvScratch::new();
+    let mut toks = Vec::new();
+    let mut run = |engine: &mut dyn Engine, ws: &mut Workspace, logits: &mut Tensor,
+                   kv: &mut KvScratch, toks: &mut Vec<i32>| {
+        let mut rng = Rng::new(11);
+        let stats = generate_into(
+            engine, &model, prompt, max_new, &mut sampler, &mut rng, kv, ws, logits, toks,
+        )
+        .unwrap();
+        assert_eq!(stats.produced, max_new);
+    };
+    out.push(b.run_items(&format!("decode/kv/t{threads}/new{max_new}"), max_new as f64, || {
+        run(&mut NativeEngine, &mut ws, &mut logits, &mut kv, &mut toks)
+    }));
+    out.push(b.run_items(&format!("decode/reprefill/new{max_new}"), max_new as f64, || {
+        run(&mut ReprefillEngine, &mut ws, &mut logits, &mut kv, &mut toks)
+    }));
+
+    println!("\n=== bench_decode (items = tokens) ===");
+    for summary in &out {
+        println!("{}", summary.report());
+    }
+    let kv_s = out.iter().find(|x| x.name.starts_with("decode/kv/"));
+    let rp = out.iter().find(|x| x.name.starts_with("decode/reprefill/"));
+    if let (Some(k), Some(r)) = (kv_s, rp) {
+        println!(
+            "kv cache: {:.2}x over re-prefill decode at {max_new} new tokens",
+            r.mean.as_secs_f64() / k.mean.as_secs_f64()
+        );
+    }
+    let path = bench::write_report("decode", &out)?;
+    println!("wrote {}", path.display());
+    Ok(())
+}

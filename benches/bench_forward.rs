@@ -8,11 +8,13 @@
 //! This binary also carries the **allocation probes** for the zero-alloc
 //! acceptance check: a counting global allocator measures heap allocations
 //! (a) per request in the steady-state serving loop (tokens → logits →
-//! per-token log-probs through one warm `Workspace`) and (b) per scored
+//! per-token log-probs through one warm `Workspace`), (b) per scored
 //! chunk in the evaluation-sweep scorer path (prepared items streamed
-//! through one warm `EvalScratch`). After warmup both counts must be 0;
-//! `MERGEMOE_STRICT_ALLOC=1` (set by ci.sh) turns a non-zero count into a
-//! hard failure.
+//! through one warm `EvalScratch`), and (c) per generated token in the
+//! autoregressive decode loop (`eval::generate_into` through one warm
+//! `KvScratch` + workspace, sampling included). After warmup every count
+//! must be 0; `MERGEMOE_STRICT_ALLOC=1` (set by ci.sh) turns a non-zero
+//! count into a hard failure.
 
 use std::alloc::{GlobalAlloc, Layout, System};
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -22,11 +24,13 @@ use mergemoe::calib;
 use mergemoe::config::Manifest;
 use mergemoe::eval::scorer::{score_prepared_ws, PreparedItems};
 use mergemoe::eval::tasks::{gen_items, Task};
+use mergemoe::eval::{generate_into, Sampler};
 use mergemoe::model::native::target_logprobs_into;
-use mergemoe::model::workspace::{EvalScratch, Workspace};
+use mergemoe::model::workspace::{EvalScratch, KvScratch, Workspace};
 use mergemoe::runtime::{Engine, NativeEngine, PjrtEngine};
 use mergemoe::tensor::Tensor;
 use mergemoe::util::par;
+use mergemoe::util::rng::Rng;
 
 /// Counts every allocator entry point; `System` does the real work.
 struct CountingAlloc;
@@ -135,6 +139,43 @@ fn main() -> anyhow::Result<()> {
     let per_chunk = (after - before) as f64 / (iters * chunks_per_pass) as f64;
     println!("steady-state allocs/chunk (scorer): {per_chunk:.2} (target 0)");
     if per_chunk > 0.0 {
+        zero_alloc = false;
+    }
+
+    // ---- allocation probe: autoregressive decode loop ----
+    println!("\n=== allocation probe (decode loop through one KvScratch) ===");
+    let dec_tokens = calib::sample_sequences(None, 1, s, 13);
+    let dec_prompt = &dec_tokens[..8.min(s)];
+    let max_new = s - dec_prompt.len();
+    // temperature + truncation so the probe covers the sampler's scratch,
+    // not just the greedy argmax shortcut
+    let mut sampler = Sampler::new(0.8, 8, 0.9);
+    let mut kv = KvScratch::new();
+    let mut gen_tokens = Vec::new();
+    // warmup: size the KV slabs, the sampler scratch, and the token buffer
+    // to their high-water marks (a fresh stack Rng per run keeps the token
+    // stream identical without touching the heap)
+    for _ in 0..3 {
+        let mut rng = Rng::new(17);
+        generate_into(
+            &mut NativeEngine, &model, dec_prompt, max_new, &mut sampler, &mut rng,
+            &mut kv, &mut ws, &mut ws_logits, &mut gen_tokens,
+        )?;
+    }
+    let iters = 10u64;
+    let before = ALLOC_CALLS.load(Ordering::Relaxed);
+    for _ in 0..iters {
+        let mut rng = Rng::new(17);
+        generate_into(
+            &mut NativeEngine, &model, dec_prompt, max_new, &mut sampler, &mut rng,
+            &mut kv, &mut ws, &mut ws_logits, &mut gen_tokens,
+        )?;
+        std::hint::black_box(&gen_tokens);
+    }
+    let after = ALLOC_CALLS.load(Ordering::Relaxed);
+    let per_tok = (after - before) as f64 / (iters * max_new as u64) as f64;
+    println!("steady-state allocs/token (decode): {per_tok:.2} (target 0)");
+    if per_tok > 0.0 {
         zero_alloc = false;
     }
 

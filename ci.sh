@@ -113,6 +113,23 @@ post_score "$ROUTED_BODY" | grep -q '"fallback"'     # quarantined -> boot weigh
 kill "$SMOKE_PID" 2>/dev/null || true
 wait "$SMOKE_PID" 2>/dev/null || true
 
+# Generate smoke: seeded sampling through the KV-cache decode path must
+# reproduce the exact token sequence across runs AND thread counts (the
+# decode forward is thread-invariant; tests/decode_consistency.rs pins the
+# bit-identity, this pins the end-to-end binary).
+echo "==> mergemoe generate smoke (seeded, --threads 1 vs 8)"
+GEN_FLAGS=(--model beta --engine native --prompt "c:abcd|" \
+    --max-new 24 --temp 0.8 --top-k 8 --top-p 0.9 --seed 7)
+GEN_T1="$(./target/release/mergemoe generate "${GEN_FLAGS[@]}" --threads 1 | grep '^tokens:')"
+GEN_T8="$(./target/release/mergemoe generate "${GEN_FLAGS[@]}" --threads 8 | grep '^tokens:')"
+[[ -n "$GEN_T1" ]] || { echo "generate smoke: no tokens line"; exit 1; }
+[[ "$GEN_T1" == "$GEN_T8" ]] || {
+    echo "generate smoke: token sequence differs across thread counts"
+    echo "  t1: $GEN_T1"
+    echo "  t8: $GEN_T8"
+    exit 1
+}
+
 if [[ "${SKIP_LINT:-0}" != "1" ]]; then
     echo "==> cargo fmt --check"
     cargo fmt --check
@@ -132,7 +149,7 @@ fi
 if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     # Perf trajectory: one quick-mode bench on every run, diffed against the
     # committed baseline so regressions surface in CI output, not archaeology.
-    echo "==> quick bench (bench_par + bench_gemm + bench_forward)"
+    echo "==> quick bench (bench_par + bench_gemm + bench_forward + bench_decode)"
     REPORT_DIR=target/bench-reports
     mkdir -p "$REPORT_DIR"
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_par
@@ -140,9 +157,13 @@ if [[ "${SKIP_BENCH:-0}" != "1" ]]; then
     # a regression in it) lands in every PR's perf report.
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_gemm
     # Zero-alloc gate: the counting-allocator probes (serving loop + sweep
-    # scorer path) hard-fail the run on any steady-state allocation.
+    # scorer path + autoregressive decode loop) hard-fail the run on any
+    # steady-state allocation.
     MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" MERGEMOE_STRICT_ALLOC=1 \
         cargo bench --bench bench_forward
+    # Decode trajectory: prefill vs KV-cache decode vs re-prefill fallback
+    # tokens/sec, so the O(S)-per-token win lands in every PR's perf report.
+    MERGEMOE_BENCH_QUICK=1 MERGEMOE_BENCH_DIR="$REPORT_DIR" cargo bench --bench bench_decode
 
     if ls benches/baseline/BENCH_*.json >/dev/null 2>&1; then
         # --max-regress makes the diff a gate: >15% p50 regression on any

@@ -1,14 +1,17 @@
 //! Evaluation harness: the seven synthetic multiple-choice benchmark tasks
 //! (substitutes for WinoGrande / ARC / Hellaswag / PIQA / SQuAD / MRPC, see
 //! DESIGN.md §2), the workspace-backed likelihood scorer that grades them,
-//! and the [`sweep`] subsystem that evaluates a whole
+//! the [`sweep`] subsystem that evaluates a whole
 //! {calibration source × method × ratio × task} comparison grid in one
-//! pipelined invocation (`mergemoe sweep`).
+//! pipelined invocation (`mergemoe sweep`), and the seeded [`sample`]
+//! generation loop behind `mergemoe generate`.
 
+pub mod sample;
 pub mod scorer;
 pub mod sweep;
 pub mod tasks;
 
+pub use sample::{argmax, generate, generate_into, GenerateStats, Sampler};
 pub use scorer::{score_items, score_items_scored, Accuracy, PreparedItems};
 pub use sweep::{run_sweep, SweepReport, SweepSpec};
 pub use tasks::{gen_items, Task, TaskItem, ALL_TASKS};

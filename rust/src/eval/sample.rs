@@ -1,0 +1,367 @@
+//! Seeded token sampling and the autoregressive generation loop
+//! (`mergemoe generate`).
+//!
+//! A [`Sampler`] turns one logits row into a token id: greedy argmax,
+//! temperature-scaled softmax sampling, and the standard truncation
+//! filters — top-k (only the k highest-logit tokens are candidates, via
+//! [`ops::top_k_order`]) and top-p (the minimal descending prefix of the
+//! candidate distribution holding at least `p` of its probability mass).
+//! Randomness comes from the caller's [`Rng`], so equal seeds reproduce
+//! equal token sequences bit for bit — across runs *and* thread counts,
+//! because the decode forward underneath is thread-invariant
+//! (`tests/decode_consistency.rs` pins both).
+//!
+//! [`generate_into`] drives an [`Engine::decode_step`] loop over a growing
+//! prefix: the native engine serves it from the KV cache (O(S) per token),
+//! any other backend through the default re-prefill fallback — same tokens
+//! either way. Generation stops cleanly at the model's trained context
+//! window (`pos_emb` rows) and reports how many tokens were produced; it
+//! never trips the forward pass's typed
+//! [`ContextOverflow`](crate::model::native::ContextOverflow).
+//!
+//! The sampler and the loop follow the workspace discipline: every buffer
+//! (candidate ordering, probabilities, the token vector, the KV slabs) is
+//! caller- or self-owned and reused, so a warm generation allocates
+//! nothing (`benches/bench_forward.rs` probes the loop under the counting
+//! allocator).
+
+use anyhow::{bail, Result};
+
+use crate::model::native::ContextOverflow;
+use crate::model::workspace::{KvScratch, Workspace};
+use crate::model::ModelWeights;
+use crate::runtime::Engine;
+use crate::tensor::{ops, Tensor};
+use crate::util::rng::Rng;
+
+/// Index of the row maximum, ties broken toward the lower index — exactly
+/// the head of [`ops::top_k_order`], so greedy decoding and a `top_k = 1`
+/// sampler agree by construction.
+pub fn argmax(row: &[f32]) -> usize {
+    assert!(!row.is_empty(), "argmax of an empty row");
+    let mut best = 0;
+    for (i, v) in row.iter().enumerate().skip(1) {
+        if v.total_cmp(&row[best]) == std::cmp::Ordering::Greater {
+            best = i;
+        }
+    }
+    best
+}
+
+/// Reusable token sampler over logits rows. Construction fixes the policy;
+/// [`Sampler::sample`] draws tokens. Internal scratch (candidate order,
+/// candidate probabilities) is retained across calls, so a warm sampler
+/// never allocates.
+#[derive(Debug, Clone, Default)]
+pub struct Sampler {
+    temperature: f32,
+    top_k: usize,
+    top_p: f32,
+    probs: Vec<f32>,
+    order: Vec<usize>,
+}
+
+impl Sampler {
+    /// Deterministic argmax decoding (`temperature = 0`): [`Sampler::sample`]
+    /// never touches the RNG.
+    pub fn greedy() -> Sampler {
+        Sampler::new(0.0, 0, 1.0)
+    }
+
+    /// Temperature sampling with optional truncation: `temperature <= 0`
+    /// means greedy, `top_k = 0` disables the top-k filter, `top_p >= 1`
+    /// disables the nucleus filter. The filters compose in the standard
+    /// order — top-k restricts the candidate set, top-p then keeps the
+    /// minimal high-probability prefix of it.
+    pub fn new(temperature: f32, top_k: usize, top_p: f32) -> Sampler {
+        Sampler { temperature, top_k, top_p, probs: Vec::new(), order: Vec::new() }
+    }
+
+    /// Draw one token id from a logits row. Greedy configurations return
+    /// [`argmax`] without consuming randomness; sampling configurations
+    /// consume exactly one `rng.f64()` draw per call, so a seeded stream
+    /// replays the same token sequence on identical logits.
+    pub fn sample(&mut self, row: &[f32], rng: &mut Rng) -> usize {
+        assert!(!row.is_empty(), "sampling from an empty logits row");
+        if self.temperature <= 0.0 {
+            return argmax(row);
+        }
+        let k = if self.top_k == 0 { row.len() } else { self.top_k.min(row.len()) };
+        ops::top_k_order(row, k, &mut self.order);
+        // softmax over the candidates at temperature T, computed against the
+        // candidate max (order[0]; positive 1/T preserves the logit order)
+        let inv_t = 1.0 / self.temperature;
+        let m = row[self.order[0]] * inv_t;
+        self.probs.clear();
+        let mut total = 0.0f64;
+        for &i in &self.order {
+            let p = (row[i] * inv_t - m).exp();
+            self.probs.push(p);
+            total += p as f64;
+        }
+        // nucleus: the shortest descending prefix with mass >= top_p·total
+        let mut keep = self.order.len();
+        if (self.top_p as f64) < 1.0 {
+            let target = self.top_p as f64 * total;
+            let mut mass = 0.0f64;
+            for (n, &p) in self.probs.iter().enumerate() {
+                mass += p as f64;
+                if mass >= target {
+                    keep = n + 1;
+                    break;
+                }
+            }
+        }
+        let kept: f64 = self.probs[..keep].iter().map(|&p| p as f64).sum();
+        // inverse-CDF draw over the kept prefix, in fixed descending order
+        let r = rng.f64() * kept;
+        let mut mass = 0.0f64;
+        for (n, &p) in self.probs[..keep].iter().enumerate() {
+            mass += p as f64;
+            if r < mass {
+                return self.order[n];
+            }
+        }
+        self.order[keep - 1]
+    }
+}
+
+/// What a generation run produced (the token ids themselves land in the
+/// caller's buffer).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GenerateStats {
+    /// New tokens appended after the prompt.
+    pub produced: usize,
+    /// Whether the run stopped early because the next token would sit past
+    /// the trained context window (`pos_emb` rows).
+    pub hit_context_limit: bool,
+}
+
+/// Autoregressive generation through a caller-owned arena: decode the
+/// prompt, then sample-and-extend until `max_new` tokens were produced or
+/// the trained context window is full. `tokens` is cleared and receives
+/// prompt + generated ids; `kv` is reset and left warm (its slabs cover the
+/// whole run — a second call on the same buffers allocates nothing).
+///
+/// A prompt longer than the context window surfaces the forward pass's
+/// typed [`ContextOverflow`](crate::model::native::ContextOverflow);
+/// running *into* the window mid-generation is a clean stop with
+/// [`GenerateStats::hit_context_limit`] set.
+#[allow(clippy::too_many_arguments)]
+pub fn generate_into(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    prompt: &[i32],
+    max_new: usize,
+    sampler: &mut Sampler,
+    rng: &mut Rng,
+    kv: &mut KvScratch,
+    ws: &mut Workspace,
+    logits: &mut Tensor,
+    tokens: &mut Vec<i32>,
+) -> Result<GenerateStats> {
+    if prompt.is_empty() {
+        bail!("generate: empty prompt (the decode loop needs at least one token)");
+    }
+    let context = model.pos_emb.shape()[0];
+    if prompt.len() > context {
+        // the prompt alone cannot be decoded — typed, not a silent 0-token
+        // "success" (a prompt exactly filling the window is the clean-stop
+        // case below instead)
+        return Err(ContextOverflow { pos: context, context }.into());
+    }
+    kv.reset();
+    tokens.clear();
+    tokens.extend_from_slice(prompt);
+    let mut stats = GenerateStats { produced: 0, hit_context_limit: false };
+    for _ in 0..max_new {
+        if tokens.len() >= context {
+            stats.hit_context_limit = true;
+            break;
+        }
+        engine.decode_step(model, tokens, kv, ws, logits)?;
+        let next = sampler.sample(logits.row(0), rng) as i32;
+        tokens.push(next);
+        stats.produced += 1;
+    }
+    Ok(stats)
+}
+
+/// Allocating wrapper around [`generate_into`]: spins up throwaway
+/// buffers and returns the full token sequence. Results are bit-identical
+/// to the arena path.
+pub fn generate(
+    engine: &mut dyn Engine,
+    model: &ModelWeights,
+    prompt: &[i32],
+    max_new: usize,
+    sampler: &mut Sampler,
+    rng: &mut Rng,
+) -> Result<(Vec<i32>, GenerateStats)> {
+    let mut kv = KvScratch::new();
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    let mut tokens = Vec::new();
+    let stats = generate_into(
+        engine, model, prompt, max_new, sampler, rng, &mut kv, &mut ws, &mut logits, &mut tokens,
+    )?;
+    Ok((tokens, stats))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn softmax(row: &[f32], temp: f32) -> Vec<f64> {
+        let m = row.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+        let exps: Vec<f64> = row.iter().map(|&v| (((v - m) / temp) as f64).exp()).collect();
+        let z: f64 = exps.iter().sum();
+        exps.into_iter().map(|e| e / z).collect()
+    }
+
+    fn random_row(rng: &mut Rng, n: usize) -> Vec<f32> {
+        (0..n).map(|_| (rng.f32() - 0.5) * 6.0).collect()
+    }
+
+    #[test]
+    fn greedy_equals_argmax_and_skips_the_rng() {
+        let mut rng = Rng::new(40);
+        let mut s = Sampler::greedy();
+        for _ in 0..50 {
+            let row = random_row(&mut rng, 31);
+            let mut order = Vec::new();
+            ops::top_k_order(&row, 1, &mut order);
+            let mut probe = Rng::new(1234);
+            let before = probe.clone().next_u64();
+            let got = s.sample(&row, &mut probe);
+            assert_eq!(got, order[0], "greedy must equal top_k_order's head");
+            assert_eq!(got, argmax(&row));
+            assert_eq!(probe.next_u64(), before, "greedy must not consume randomness");
+        }
+    }
+
+    #[test]
+    fn same_seed_same_token_stream() {
+        let mut rng = Rng::new(41);
+        let row = random_row(&mut rng, 47);
+        let mut a = Sampler::new(0.9, 12, 0.95);
+        let mut b = Sampler::new(0.9, 12, 0.95);
+        let mut ra = Rng::new(77);
+        let mut rb = Rng::new(77);
+        let xs: Vec<usize> = (0..200).map(|_| a.sample(&row, &mut ra)).collect();
+        let ys: Vec<usize> = (0..200).map(|_| b.sample(&row, &mut rb)).collect();
+        assert_eq!(xs, ys);
+        let mut rc = Rng::new(78);
+        let zs: Vec<usize> = (0..200).map(|_| a.sample(&row, &mut rc)).collect();
+        assert_ne!(xs, zs, "a different seed should move some draw in 200");
+    }
+
+    #[test]
+    fn top_k_never_emits_outside_the_k_best() {
+        let mut rng = Rng::new(42);
+        for &k in &[1usize, 3, 8] {
+            let row = random_row(&mut rng, 40);
+            let mut order = Vec::new();
+            ops::top_k_order(&row, k, &mut order);
+            let mut s = Sampler::new(1.3, k, 1.0);
+            let mut draw = Rng::new(9);
+            for _ in 0..300 {
+                let t = s.sample(&row, &mut draw);
+                assert!(order.contains(&t), "token {t} outside the top-{k} set");
+            }
+        }
+    }
+
+    #[test]
+    fn top_p_nucleus_is_the_minimal_covering_prefix() {
+        let mut rng = Rng::new(43);
+        for case in 0..20u64 {
+            let row = random_row(&mut rng, 30);
+            let temp = 0.7f32;
+            let top_p = 0.85f32;
+            // Reference nucleus with the sampler's own candidate arithmetic
+            // (f32 exponentials against the candidate max, f64 cumulation),
+            // so the prefix boundary is bit-exact — no tolerance games at
+            // the mass threshold.
+            let inv_t = 1.0 / temp;
+            let mut order = Vec::new();
+            ops::top_k_order(&row, row.len(), &mut order);
+            let m = row[order[0]] * inv_t;
+            let exps: Vec<f32> = order.iter().map(|&i| (row[i] * inv_t - m).exp()).collect();
+            let total: f64 = exps.iter().map(|&e| e as f64).sum();
+            let target = top_p as f64 * total;
+            let mut keep = order.len();
+            let mut mass = 0.0f64;
+            for (n, &e) in exps.iter().enumerate() {
+                mass += e as f64;
+                if mass >= target {
+                    keep = n + 1;
+                    break;
+                }
+            }
+            // the covering property: the prefix holds >= p of the mass and
+            // no shorter prefix does
+            let covered: f64 = exps[..keep].iter().map(|&e| e as f64).sum();
+            assert!(covered >= target, "case {case}: nucleus mass {covered} < {target}");
+            if keep > 1 {
+                let shorter: f64 = exps[..keep - 1].iter().map(|&e| e as f64).sum();
+                assert!(shorter < target, "case {case}: prefix not minimal");
+            }
+            let nucleus = &order[..keep];
+            // the sampler only ever emits nucleus members, and reaches every
+            // non-negligible one in a long run
+            let mut s = Sampler::new(temp, 0, top_p);
+            let mut draw = Rng::new(case + 100);
+            let mut seen = vec![false; row.len()];
+            for _ in 0..2000 {
+                let t = s.sample(&row, &mut draw);
+                assert!(nucleus.contains(&t), "case {case}: token {t} outside the nucleus");
+                seen[t] = true;
+            }
+            for (n, &i) in nucleus.iter().enumerate() {
+                if exps[n] as f64 / covered > 0.05 {
+                    assert!(seen[i], "case {case}: nucleus member {i} never drawn");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn temperature_to_zero_converges_to_greedy() {
+        let mut rng = Rng::new(44);
+        for _ in 0..30 {
+            let mut row = random_row(&mut rng, 25);
+            // pin a >= 0.5 logit gap under the max so the convergence is
+            // exact, not statistical: at T <= 1e-3 every other token's
+            // probability underflows to zero
+            let best = argmax(&row);
+            row[best] += 0.5;
+            for &temp in &[1e-3f32, 1e-4] {
+                let mut s = Sampler::new(temp, 0, 1.0);
+                let mut draw = Rng::new(5);
+                for _ in 0..50 {
+                    assert_eq!(s.sample(&row, &mut draw), best);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn sampled_distribution_tracks_softmax() {
+        // a coarse statistical check that unfiltered sampling follows the
+        // temperature-scaled softmax (2% absolute tolerance on 20k draws)
+        let row = vec![2.0f32, 1.0, 0.0, -1.0];
+        let p = softmax(&row, 1.0);
+        let mut s = Sampler::new(1.0, 0, 1.0);
+        let mut draw = Rng::new(6);
+        let mut counts = [0usize; 4];
+        let n = 20_000;
+        for _ in 0..n {
+            counts[s.sample(&row, &mut draw)] += 1;
+        }
+        for i in 0..4 {
+            let freq = counts[i] as f64 / n as f64;
+            assert!((freq - p[i]).abs() < 0.02, "token {i}: freq {freq} vs p {}", p[i]);
+        }
+    }
+}

@@ -6,6 +6,8 @@
 //!   eval      evaluate a model on the task suite   (mergemoe eval --model beta)
 //!   sweep     evaluate the whole method × ratio ×  (mergemoe sweep --model beta
 //!             task comparison grid in one run          --methods average,msmoe,mergemoe --ms 6,8)
+//!   generate  seeded autoregressive sampling       (mergemoe generate --prompt "c:abcd|"
+//!             through the KV-cache decode path         --max-new 32 --temp 0.8 --seed 7)
 //!   serve     run the batched scoring server demo  (mergemoe serve --model beta)
 //!   registry  manage the crash-safe variant store  (mergemoe registry ls --registry DIR)
 //!   stats     dump expert usage frequencies        (mergemoe stats --model beta)
@@ -24,8 +26,8 @@ use mergemoe::coordinator::{
     compress, AdminState, CalibSource, CompressSpec, HttpServer, Registry, RouteFallback,
     ScoringServer, ServerConfig, VariantSpec,
 };
-use mergemoe::eval::tasks::{Task, ALL_TASKS};
-use mergemoe::eval::{run_sweep, SweepSpec};
+use mergemoe::eval::tasks::{self, Task, ALL_TASKS};
+use mergemoe::eval::{generate, run_sweep, Sampler, SweepSpec};
 use mergemoe::exp::{self, Ctx, EngineSel};
 use mergemoe::merge::{Algorithm, NativeGram};
 use mergemoe::model::ModelWeights;
@@ -44,7 +46,7 @@ fn main() {
 }
 
 fn usage() -> &'static str {
-    "usage: mergemoe <repro|compress|eval|sweep|serve|registry|stats|selfcheck> [flags]\n\
+    "usage: mergemoe <repro|compress|eval|sweep|generate|serve|registry|stats|selfcheck> [flags]\n\
      common flags: --artifacts DIR --engine native|pjrt --items N --seed N\n\
                    --threads N (worker threads; default: MERGEMOE_THREADS env\n\
                    or all cores; 1 = fully serial)\n\
@@ -64,6 +66,16 @@ fn usage() -> &'static str {
                 checkouts). each calibration source is a task name, an\n\
                 a+b task combination, or \"mixture\" (Table 4's rows);\n\
                 omitted = one source from --calib-tasks (default mixture)\n\
+     generate:  [--model NAME] [--prompt STR] [--max-new N] [--temp T]\n\
+                [--top-k K] [--top-p P] [--seed N]\n\
+                seeded autoregressive sampling through the KV-cache decode\n\
+                path (native engine; pjrt decodes via re-prefill). --temp 0\n\
+                (default) is greedy; --top-k/--top-p truncate the candidate\n\
+                set. prints a deterministic \"tokens:\" id line — the same\n\
+                --seed reproduces the same sequence across runs and\n\
+                --threads settings (synthetic-model fallback on bare\n\
+                checkouts); generation stops cleanly at the trained context\n\
+                window\n\
      serve:     --model NAME [--requests N] [--clients N] [--max-batch N] [--max-wait-ms N]\n\
                 [--queue-cap N] [--deadline-ms N] [--retries N] [--restart-budget N]\n\
                 [--drain-ms N] [--workers N] [--listen ADDR[:PORT]] [--duration-s N]\n\
@@ -129,6 +141,11 @@ fn run() -> Result<()> {
         // serve also runs on a bare checkout (synthetic-model fallback on
         // the native engine) so CI can smoke-test the server end to end
         return cmd_serve(&artifacts, engine, &args);
+    }
+    if args.subcommand.as_deref() == Some("generate") {
+        // generate also runs on a bare checkout (synthetic-model fallback),
+        // which is what lets CI pin an exact token sequence
+        return cmd_generate(&artifacts, engine, &args);
     }
     let mut ctx = Ctx::new(artifacts.clone(), engine)?;
     ctx.items = args.usize("items", ctx.items)?;
@@ -307,6 +324,66 @@ fn cmd_sweep(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) ->
     print!("{}", exp::tables::sweep_markdown(&rep));
     let path = exp::report::save_sweep(&artifacts.join("reports"), &rep)?;
     println!("[sweep report saved to {} (+ .md)]", path.display());
+    Ok(())
+}
+
+/// `mergemoe generate`: seeded autoregressive sampling through the KV-cache
+/// decode path (ROADMAP direction 5). Deterministic by construction — equal
+/// seeds reproduce equal token sequences across runs and `--threads`
+/// settings (`tests/decode_consistency.rs` pins this; ci.sh smokes it by
+/// diffing two runs).
+fn cmd_generate(artifacts: &std::path::Path, engine_sel: EngineSel, args: &Args) -> Result<()> {
+    let model_name = args.get_or("model", "beta").to_string();
+    // same ctx-optional pattern as `sweep`: a bare checkout generates from a
+    // synthetic model of the published shape on the native engine
+    let ctx = Ctx::new(artifacts.to_path_buf(), engine_sel).ok();
+    let model = match &ctx {
+        Some(c) => c.load_model(&model_name)?,
+        None => {
+            info!("no artifacts; generating from a synthetic {model_name}-shaped model");
+            mergemoe::bench::load_or_synth(&model_name).model
+        }
+    };
+    let mut engine: Box<dyn Engine> = match (&ctx, engine_sel) {
+        (Some(c), EngineSel::Pjrt) => c.make_engine()?,
+        _ => Box::new(NativeEngine),
+    };
+    let prompt_text = args.get_or("prompt", "c:abcd|").to_string();
+    for c in prompt_text.chars() {
+        if !tasks::CHARSET.contains(c) {
+            bail!(
+                "--prompt char {c:?} is outside the model alphabet {:?}",
+                tasks::CHARSET
+            );
+        }
+    }
+    let prompt = tasks::encode(&prompt_text);
+    let max_new = args.usize("max-new", 32)?;
+    let temp = args.f64("temp", 0.0)? as f32;
+    let top_k = args.usize("top-k", 0)?;
+    let top_p = args.f64("top-p", 1.0)? as f32;
+    let seed = args.usize("seed", 2026)? as u64;
+    let mut sampler = Sampler::new(temp, top_k, top_p);
+    let mut rng = Rng::new(seed);
+    let t0 = std::time::Instant::now();
+    let (tokens, stats) =
+        generate(engine.as_mut(), &model, &prompt, max_new, &mut sampler, &mut rng)?;
+    let dt = t0.elapsed().as_secs_f64();
+    // the ids line is the CI smoke's determinism anchor — keep it greppable
+    let ids: Vec<String> = tokens.iter().map(|t| t.to_string()).collect();
+    println!("tokens: {}", ids.join(" "));
+    let text: String = tokens
+        .iter()
+        .map(|&t| tasks::CHARSET.as_bytes().get(t as usize).map_or('?', |&b| b as char))
+        .collect();
+    println!("text: {text:?}");
+    println!(
+        "produced {} token(s) in {dt:.3}s ({:.0} tok/s, engine={}{})",
+        stats.produced,
+        stats.produced as f64 / dt.max(1e-9),
+        engine.name(),
+        if stats.hit_context_limit { ", stopped at the trained context window" } else { "" }
+    );
     Ok(())
 }
 

@@ -34,7 +34,7 @@
 
 use anyhow::{bail, Result};
 
-use super::workspace::{ExpertScratch, Workspace};
+use super::workspace::{ExpertScratch, KvScratch, Workspace};
 use super::{Expert, Layer, ModelWeights, MoeLayer};
 use crate::moe::routing::route_tokens_into;
 use crate::tensor::{ops, Tensor};
@@ -51,6 +51,32 @@ pub struct LayerCapture {
     /// Sum of routing weights per expert (soft frequency): len E.
     pub weight_mass: Vec<f64>,
 }
+
+/// Typed error for addressing a position past the trained context window:
+/// the position table (`pos_emb`) has no row for it, so the forward pass
+/// refuses up front instead of panicking on an out-of-bounds index. Callers
+/// that drive generation (`eval::sample::generate_into`) stop cleanly at
+/// the window instead of tripping this; direct oversized prefills surface
+/// it through the `anyhow` chain (`downcast_ref::<ContextOverflow>`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ContextOverflow {
+    /// First position that has no `pos_emb` row.
+    pub pos: usize,
+    /// Trained context length (`pos_emb` rows).
+    pub context: usize,
+}
+
+impl std::fmt::Display for ContextOverflow {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "position {} is past the trained context window ({} positions)",
+            self.pos, self.context
+        )
+    }
+}
+
+impl std::error::Error for ContextOverflow {}
 
 fn dims2(x: &Tensor, what: &str) -> Result<(usize, usize)> {
     match x.shape() {
@@ -302,6 +328,147 @@ fn attn_forward_ws(
     h.axpy(1.0, &ws.proj)
 }
 
+/// Single-token causal attention over the cached prefix (the decode twin of
+/// [`attn_forward_ws`]): `h` is the one-row residual of the token at
+/// `pos`, `kcache`/`vcache` hold rows `0..pos` of this layer's keys/values
+/// and receive row `pos` here. The inner arithmetic — per-head dot order,
+/// `1/√hd` scaling, max-subtracted softmax over the causal prefix, the
+/// `w == 0.0` skip, value accumulation in `ki` order — mirrors
+/// [`attn_forward_ws`]'s `qi = pos` iteration exactly, and the QKV/output
+/// projections are single-row GEMMs of the same row-independent kernels,
+/// so the step is bit-identical to the last row of a full prefill
+/// (`tests/decode_consistency.rs`). Serial by construction: one query row
+/// is below every parallel threshold.
+fn attn_decode_ws(
+    layer: &Layer,
+    h: &mut Tensor,
+    n_heads: usize,
+    pos: usize,
+    kcache: &mut Tensor,
+    vcache: &mut Tensor,
+    ws: &mut Workspace,
+) -> Result<()> {
+    let d = h.cols();
+    let hd = d / n_heads;
+    ops::layernorm_into(h, &layer.ln1_g, &layer.ln1_b, &mut ws.x)?;
+    ws.q.reuse2(1, d);
+    ws.k.reuse2(1, d);
+    ws.v.reuse2(1, d);
+    ops::matmul_bt_into(&ws.x, &layer.wq, &mut ws.q)?;
+    ops::matmul_bt_into(&ws.x, &layer.wk, &mut ws.k)?;
+    ops::matmul_bt_into(&ws.x, &layer.wv, &mut ws.v)?;
+    kcache.row_mut(pos).copy_from_slice(ws.k.row(0));
+    vcache.row_mut(pos).copy_from_slice(ws.v.row(0));
+    let scale = 1.0 / (hd as f32).sqrt();
+    ws.ctx.reuse2(1, d);
+    ws.ctx.data_mut().fill(0.0);
+    if d > 0 {
+        // full-width scores row (the slab capacity, not pos+1) so the
+        // buffer reaches its high-water size on the first step and the
+        // whole generation stays allocation-free; entries [0..=pos] are
+        // written before they are read
+        ws.scores.reuse2(1, kcache.shape()[0]);
+        let qd = ws.q.data();
+        let kd = kcache.data();
+        let vd = vcache.data();
+        let scores = ws.scores.data_mut();
+        let cslab = ws.ctx.data_mut();
+        for head in 0..n_heads {
+            let off = head * hd;
+            let qrow = &qd[off..off + hd];
+            for ki in 0..=pos {
+                let krow = &kd[ki * d + off..ki * d + off + hd];
+                let mut dot = 0.0;
+                for (a, b2) in qrow.iter().zip(krow) {
+                    dot += a * b2;
+                }
+                scores[ki] = dot * scale;
+            }
+            let pre = &mut scores[..=pos];
+            let m = pre.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let mut z = 0.0;
+            for v2 in pre.iter_mut() {
+                *v2 = (*v2 - m).exp();
+                z += *v2;
+            }
+            let orow = &mut cslab[off..off + hd];
+            for ki in 0..=pos {
+                let w = pre[ki] / z;
+                if w == 0.0 {
+                    continue;
+                }
+                let vrow = &vd[ki * d + off..ki * d + off + hd];
+                for (o, &vv) in orow.iter_mut().zip(vrow) {
+                    *o += w * vv;
+                }
+            }
+        }
+    }
+    ws.proj.reuse2(1, d);
+    ops::matmul_bt_into(&ws.ctx, &layer.wo, &mut ws.proj)?;
+    h.axpy(1.0, &ws.proj)
+}
+
+/// One autoregressive decode step: run `token` at position `kv.len`
+/// attending over the cached prefix, append its keys/values to `kv`, and
+/// write the next-token logits (1, V) into `logits`. Everything outside
+/// attention is per-row arithmetic (embedding, layernorms, the MoE layer on
+/// a one-token batch, the head GEMM), so together with [`attn_decode_ws`]
+/// the step reproduces the last logits row of a full forward over the
+/// prefix bit for bit — the KV cache turns O(S²) re-prefill into O(S) per
+/// token without changing a single bit of output.
+///
+/// Decoding past the trained context window (`pos_emb` rows) returns a
+/// typed [`ContextOverflow`] instead of indexing out of bounds. A warm
+/// `(kv, ws)` pair decodes with zero heap allocations
+/// (`benches/bench_forward.rs` probes the loop).
+pub fn decode_step_ws(
+    model: &ModelWeights,
+    token: i32,
+    kv: &mut KvScratch,
+    ws: &mut Workspace,
+    logits: &mut Tensor,
+) -> Result<()> {
+    let context = model.pos_emb.shape()[0];
+    let pos = kv.len;
+    if pos >= context {
+        return Err(ContextOverflow { pos, context }.into());
+    }
+    let d = model.cfg.d_model;
+    kv.ensure(model.layers.len(), context, d);
+    let mut h = std::mem::take(&mut ws.h);
+    h.reuse2(1, d);
+    {
+        let tk = token as usize;
+        for (j, o) in h.data_mut().iter_mut().enumerate() {
+            *o = model.tok_emb.at2(tk, j) + model.pos_emb.at2(pos, j);
+        }
+    }
+    for (li, layer) in model.layers.iter().enumerate() {
+        attn_decode_ws(
+            layer,
+            &mut h,
+            model.cfg.n_heads,
+            pos,
+            &mut kv.k[li],
+            &mut kv.v[li],
+            ws,
+        )?;
+        ops::layernorm_into(&h, &layer.ln2_g, &layer.ln2_b, &mut ws.x)?;
+        let x = std::mem::take(&mut ws.x);
+        let moe_result = moe_forward_ws(&layer.moe, &x, ws);
+        ws.x = x;
+        moe_result?;
+        h.axpy(1.0, &ws.moe_out)?;
+    }
+    ops::layernorm_into(&h, &model.lnf_g, &model.lnf_b, &mut ws.x)?;
+    logits.reuse2(1, model.head.shape()[0]);
+    ops::matmul_bt_into(&ws.x, &model.head, logits)?;
+    ws.h = h;
+    kv.len = pos + 1;
+    Ok(())
+}
+
 /// Full forward pass through a caller-owned workspace. `tokens` is (B, S)
 /// of vocab ids; the logits (B·S, V) land in `logits` (resized in place).
 /// If `capture` is set, per-layer calibration records are appended (the
@@ -317,6 +484,10 @@ pub fn forward_ws(
 ) -> Result<()> {
     if tokens.len() != b * s {
         bail!("token buffer {} != {b}x{s}", tokens.len());
+    }
+    let context = model.pos_emb.shape()[0];
+    if s > context {
+        return Err(ContextOverflow { pos: context, context }.into());
     }
     let d = model.cfg.d_model;
     // embed (row-parallel: token rows are independent)
@@ -473,6 +644,51 @@ mod tests {
         moe.map = Some(Tensor::eye(4));
         let (y1, _, _) = moe_forward(&moe, &x).unwrap();
         assert!(y0.rel_err(&y1) < 1e-6);
+    }
+
+    #[test]
+    fn decode_steps_match_full_prefill_rows() {
+        let m = tiny_model(4, 2, true, 11);
+        let tokens: Vec<i32> = (0..12).map(|i| (i * 7 % 47) as i32).collect();
+        let mut kv = KvScratch::new();
+        let mut ws = Workspace::new();
+        let mut step = Tensor::default();
+        for (t, &tok) in tokens.iter().enumerate() {
+            decode_step_ws(&m, tok, &mut kv, &mut ws, &mut step).unwrap();
+            let full = forward(&m, &tokens[..=t], 1, t + 1, None).unwrap();
+            assert_eq!(step.data(), full.rows_slice(t, t + 1).data(), "step {t}");
+        }
+        assert_eq!(kv.len, tokens.len());
+    }
+
+    #[test]
+    fn decode_past_context_is_typed_overflow() {
+        let m = tiny_model(4, 2, false, 12);
+        let context = m.pos_emb.shape()[0];
+        let mut kv = KvScratch::new();
+        let mut ws = Workspace::new();
+        let mut step = Tensor::default();
+        for _ in 0..context {
+            decode_step_ws(&m, 3, &mut kv, &mut ws, &mut step).unwrap();
+        }
+        let err = decode_step_ws(&m, 3, &mut kv, &mut ws, &mut step).unwrap_err();
+        let ov = err
+            .downcast_ref::<ContextOverflow>()
+            .expect("context overflow must be typed");
+        assert_eq!(*ov, ContextOverflow { pos: context, context });
+        assert_eq!(kv.len, context, "failed step must not advance the cache");
+    }
+
+    #[test]
+    fn oversized_prefill_is_typed_overflow() {
+        let m = tiny_model(4, 2, false, 13);
+        let context = m.pos_emb.shape()[0];
+        let tokens: Vec<i32> = (0..context as i32 + 1).map(|i| i % 47).collect();
+        let err = forward(&m, &tokens, 1, context + 1, None).unwrap_err();
+        assert!(
+            err.downcast_ref::<ContextOverflow>().is_some(),
+            "oversized prefill must fail typed, got {err:#}"
+        );
     }
 
     #[test]

@@ -34,6 +34,60 @@
 
 use crate::tensor::Tensor;
 
+/// Per-layer K/V slabs for the autoregressive decode path
+/// (`model::native::decode_step_ws`): one `(context, d_model)` tensor pair
+/// per transformer layer, holding the keys/values of every already-decoded
+/// position so a new token attends over the cached prefix instead of
+/// re-running the full prefill.
+///
+/// Unlike every [`Workspace`] buffer, slab **contents are state, not
+/// scratch**: rows `0..len` must survive across decode steps, so the slabs
+/// are sized once to the model's full trained context (`pos_emb` rows) and
+/// only re-pointed when the model shape changes — a warm cache never
+/// touches the allocator again (the decode-loop probe in
+/// `benches/bench_forward.rs` counts). Ownership follows the workspace
+/// rule: one cache per decode stream, never shared across threads.
+#[derive(Default)]
+pub struct KvScratch {
+    /// Cached keys, one `(context, d)` slab per layer; rows `0..len` valid.
+    pub k: Vec<Tensor>,
+    /// Cached values, same layout as `k`.
+    pub v: Vec<Tensor>,
+    /// Number of cached positions (the next token decodes at this position).
+    pub len: usize,
+}
+
+impl KvScratch {
+    pub fn new() -> KvScratch {
+        KvScratch::default()
+    }
+
+    /// Forget every cached position (capacity is retained — restarting a
+    /// generation on a warm cache allocates nothing).
+    pub fn reset(&mut self) {
+        self.len = 0;
+    }
+
+    /// Size the slabs for `n_layers` layers of width `d` over a `context`-
+    /// position window. A no-op once the shape matches, which is what keeps
+    /// warm cache rows intact: `Tensor::reuse2` contents are unspecified,
+    /// so it is only called when the model shape actually changed (and the
+    /// cache is emptied, since any cached rows belong to the old model).
+    pub fn ensure(&mut self, n_layers: usize, context: usize, d: usize) {
+        let shaped = self.k.len() == n_layers
+            && self.k.iter().chain(&self.v).all(|t| t.shape() == [context, d]);
+        if shaped {
+            return;
+        }
+        self.k.resize_with(n_layers, Tensor::default);
+        self.v.resize_with(n_layers, Tensor::default);
+        for t in self.k.iter_mut().chain(&mut self.v) {
+            t.reuse2(context, d);
+        }
+        self.len = 0;
+    }
+}
+
 /// Per-expert (or shared-expert) scratch: the token gather, its routing
 /// weights, and the fused SwiGLU activation panel. One slot per expert lane
 /// so the per-expert fan-out runs without allocation. The kernel layer's
@@ -190,5 +244,28 @@ mod tests {
         ws.experts.resize_with(4, ExpertScratch::new);
         ws.experts[3].tok_idx.push(7);
         assert_eq!(ws.experts.len(), 4);
+    }
+
+    #[test]
+    fn kv_scratch_keeps_rows_across_ensure_at_same_shape() {
+        let mut kv = KvScratch::new();
+        kv.ensure(2, 8, 4);
+        assert_eq!(kv.k.len(), 2);
+        assert_eq!(kv.k[0].shape(), &[8, 4]);
+        kv.k[0].row_mut(3).copy_from_slice(&[1.0, 2.0, 3.0, 4.0]);
+        kv.len = 4;
+        // same shape: cached rows and len survive
+        kv.ensure(2, 8, 4);
+        assert_eq!(kv.len, 4);
+        assert_eq!(kv.k[0].row(3), &[1.0, 2.0, 3.0, 4.0]);
+        // reset keeps capacity, drops positions
+        kv.reset();
+        assert_eq!(kv.len, 0);
+        assert_eq!(kv.k[0].shape(), &[8, 4]);
+        // shape change re-points and empties
+        kv.len = 2;
+        kv.ensure(3, 8, 4);
+        assert_eq!(kv.len, 0);
+        assert_eq!(kv.k.len(), 3);
     }
 }

@@ -2,9 +2,9 @@
 //! experiments) talks to a [`Engine`], so the native reference path and the
 //! PJRT artifact path are interchangeable and cross-checkable.
 
-use anyhow::Result;
+use anyhow::{bail, Result};
 
-use crate::model::workspace::Workspace;
+use crate::model::workspace::{KvScratch, Workspace};
 use crate::model::{native, ModelWeights};
 use crate::tensor::Tensor;
 
@@ -29,6 +29,42 @@ pub trait Engine {
         out: &mut Tensor,
     ) -> Result<()> {
         *out = self.logits(model, tokens, b, s)?;
+        Ok(())
+    }
+
+    /// Advance an autoregressive decode to the end of `prefix`, writing the
+    /// next-token logits (1, V) of the last position into `out`. `kv` holds
+    /// the cached positions: entries `0..kv.len` must correspond to
+    /// `prefix[0..kv.len]` (an empty/reset cache means "start over"), and
+    /// the call requires `kv.len < prefix.len()` — there must be something
+    /// new to decode.
+    ///
+    /// The default **re-prefills**: a full forward over the prefix, keeping
+    /// only the last logits row. Backends with no incremental path (PJRT
+    /// runs fixed-shape compiled artifacts) stay correct through it, and
+    /// its existence is what makes the KV path falsifiable — the native
+    /// override must match it bit for bit at every step
+    /// (`tests/decode_consistency.rs`). The fallback allocates a full
+    /// logits buffer per step and costs O(prefix²) per token; `kv` is
+    /// advanced for bookkeeping only.
+    fn decode_step(
+        &mut self,
+        model: &ModelWeights,
+        prefix: &[i32],
+        kv: &mut KvScratch,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        let s = prefix.len();
+        if kv.len >= s {
+            bail!("decode_step: {} positions cached, nothing new in a {s}-token prefix", kv.len);
+        }
+        let mut full = Tensor::default();
+        self.logits_ws(model, prefix, 1, s, ws, &mut full)?;
+        let v = full.cols();
+        out.reuse2(1, v);
+        out.data_mut().copy_from_slice(&full.data()[(s - 1) * v..]);
+        kv.len = s;
         Ok(())
     }
 
@@ -63,6 +99,17 @@ impl Engine for Box<dyn Engine> {
         (**self).logits_ws(model, tokens, b, s, ws, out)
     }
 
+    fn decode_step(
+        &mut self,
+        model: &ModelWeights,
+        prefix: &[i32],
+        kv: &mut KvScratch,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        (**self).decode_step(model, prefix, kv, ws, out)
+    }
+
     fn fork(&self) -> Option<Box<dyn Engine + Send>> {
         (**self).fork()
     }
@@ -91,6 +138,30 @@ impl Engine for NativeEngine {
         out: &mut Tensor,
     ) -> Result<()> {
         native::forward_ws(model, tokens, b, s, None, ws, out)
+    }
+
+    fn decode_step(
+        &mut self,
+        model: &ModelWeights,
+        prefix: &[i32],
+        kv: &mut KvScratch,
+        ws: &mut Workspace,
+        out: &mut Tensor,
+    ) -> Result<()> {
+        // The KV path: catch up every uncached position one token at a time
+        // (the first call walks the whole prompt, later calls run exactly
+        // one step). Each step is bit-identical to the matching row of a
+        // full prefill, so this agrees with the default re-prefill fallback
+        // bit for bit while doing O(prefix) work per token instead of
+        // O(prefix²).
+        let s = prefix.len();
+        if kv.len >= s {
+            bail!("decode_step: {} positions cached, nothing new in a {s}-token prefix", kv.len);
+        }
+        while kv.len < s {
+            native::decode_step_ws(model, prefix[kv.len], kv, ws, out)?;
+        }
+        Ok(())
     }
 
     fn fork(&self) -> Option<Box<dyn Engine + Send>> {
@@ -122,6 +193,65 @@ mod tests {
         assert!(forked.is_some());
         let boxed: Box<dyn Engine> = Box::new(NativeEngine);
         assert!(boxed.fork().is_some(), "Box<dyn Engine> must forward fork");
+    }
+
+    /// Delegates the forward pass to the native engine but keeps the
+    /// trait's default `decode_step` (the re-prefill fallback) — the same
+    /// shape a backend without a KV path, like PJRT, gets for free.
+    struct ReprefillEngine;
+
+    impl Engine for ReprefillEngine {
+        fn logits(
+            &mut self,
+            model: &ModelWeights,
+            tokens: &[i32],
+            b: usize,
+            s: usize,
+        ) -> Result<Tensor> {
+            NativeEngine.logits(model, tokens, b, s)
+        }
+
+        fn logits_ws(
+            &mut self,
+            model: &ModelWeights,
+            tokens: &[i32],
+            b: usize,
+            s: usize,
+            ws: &mut Workspace,
+            out: &mut Tensor,
+        ) -> Result<()> {
+            NativeEngine.logits_ws(model, tokens, b, s, ws, out)
+        }
+
+        fn name(&self) -> &'static str {
+            "reprefill"
+        }
+    }
+
+    #[test]
+    fn kv_decode_matches_reprefill_fallback_bitwise() {
+        let m = tiny_model(4, 2, true, 72);
+        let prompt: Vec<i32> = (0..10).map(|i| (i * 3 % 47) as i32).collect();
+        let mut kv_a = KvScratch::new();
+        let mut kv_b = KvScratch::new();
+        let mut ws_a = Workspace::new();
+        let mut ws_b = Workspace::new();
+        let mut out_a = Tensor::default();
+        let mut out_b = Tensor::default();
+        for t in 0..prompt.len() {
+            NativeEngine
+                .decode_step(&m, &prompt[..=t], &mut kv_a, &mut ws_a, &mut out_a)
+                .unwrap();
+            ReprefillEngine
+                .decode_step(&m, &prompt[..=t], &mut kv_b, &mut ws_b, &mut out_b)
+                .unwrap();
+            assert_eq!(out_a.data(), out_b.data(), "step {t}");
+            assert_eq!(kv_a.len, t + 1);
+            assert_eq!(kv_b.len, t + 1, "fallback must keep the bookkeeping");
+        }
+        // nothing new to decode is a caller error on both paths
+        assert!(NativeEngine.decode_step(&m, &prompt, &mut kv_a, &mut ws_a, &mut out_a).is_err());
+        assert!(ReprefillEngine.decode_step(&m, &prompt, &mut kv_b, &mut ws_b, &mut out_b).is_err());
     }
 
     #[test]

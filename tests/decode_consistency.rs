@@ -1,0 +1,187 @@
+//! Decode-vs-prefill bit-identity (the regression harness of the KV-cache
+//! decode path): at every step t, `Engine::decode_step` must reproduce the
+//! last logits row of a full forward over `prompt[..=t]` **bit for bit** —
+//! across 1/2/8 worker threads, through warm-reused `KvScratch`/`Workspace`
+//! buffers, on the base model and a compressed (routing-map redirect)
+//! variant. On top of the forward identity, seeded generation must replay
+//! the same token sequence across runs and thread counts, and running into
+//! the trained context window must stop cleanly (typed `ContextOverflow`
+//! only when the prompt alone does not fit).
+
+use std::sync::Mutex;
+
+use mergemoe::eval::{generate, generate_into, Sampler};
+use mergemoe::model::native::{forward, ContextOverflow};
+use mergemoe::model::testprops::synth_model;
+use mergemoe::model::workspace::{KvScratch, Workspace};
+use mergemoe::model::ModelWeights;
+use mergemoe::runtime::{Engine, NativeEngine};
+use mergemoe::tensor::Tensor;
+use mergemoe::util::par;
+use mergemoe::util::rng::Rng;
+
+/// Serializes tests that sweep the global thread knob.
+static THREAD_KNOB: Mutex<()> = Mutex::new(());
+
+const SWEEP: [usize; 3] = [1, 2, 8];
+
+fn with_threads<R>(n: usize, f: impl FnOnce() -> R) -> R {
+    par::set_max_threads(n);
+    let out = f();
+    par::set_max_threads(1);
+    out
+}
+
+fn base_model() -> ModelWeights {
+    let cfg = mergemoe::config::ModelConfig {
+        name: "decode".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    synth_model(&cfg, 0xDEC0)
+}
+
+/// A merged-style variant: 2 real experts under the 4-way router with a
+/// (2, 4) summation map, so decode also exercises the routing-redirect
+/// (`r2 = r · mapᵀ`) path compressed deployments run on.
+fn compressed_model() -> ModelWeights {
+    let mut m = base_model();
+    for l in &mut m.layers {
+        l.moe.experts.truncate(2);
+        l.moe.map = Some(
+            Tensor::from_vec(&[2, 4], vec![1.0, 0.0, 1.0, 0.0, 0.0, 1.0, 0.0, 1.0]).unwrap(),
+        );
+    }
+    m.touch();
+    m
+}
+
+#[test]
+fn decode_bit_identical_to_full_prefill_across_threads() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    for (which, model) in [("base", base_model()), ("compressed", compressed_model())] {
+        let prompt: Vec<i32> = (0..16).map(|i| ((i * 7 + 3) % 47) as i32).collect();
+        // reference: a fresh full-prefill forward over every prefix, serial
+        let refs: Vec<Vec<f32>> = (0..prompt.len())
+            .map(|t| {
+                let full =
+                    with_threads(1, || forward(&model, &prompt[..=t], 1, t + 1, None).unwrap());
+                full.row(t).to_vec()
+            })
+            .collect();
+        // one warm scratch set swept across thread counts and repeat rounds:
+        // bit-identity must survive buffer reuse, not just a cold start
+        let mut kv = KvScratch::new();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::default();
+        for t in SWEEP {
+            for round in 0..2 {
+                kv.reset();
+                with_threads(t, || {
+                    for step in 0..prompt.len() {
+                        NativeEngine
+                            .decode_step(&model, &prompt[..=step], &mut kv, &mut ws, &mut out)
+                            .unwrap();
+                        assert_eq!(
+                            out.row(0),
+                            &refs[step][..],
+                            "{which} threads {t} round {round} step {step}: \
+                             KV decode diverged from full prefill"
+                        );
+                    }
+                });
+                assert_eq!(kv.len, prompt.len(), "{which} threads {t} round {round}");
+            }
+        }
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn generate_reproduces_across_runs_and_thread_counts() {
+    let _guard = THREAD_KNOB.lock().unwrap();
+    let prev = par::max_threads();
+    let model = base_model();
+    let prompt: Vec<i32> = (0..8).map(|i| ((i * 5 + 1) % 47) as i32).collect();
+    let run = |threads: usize| {
+        with_threads(threads, || {
+            let mut sampler = Sampler::new(0.8, 8, 0.9);
+            let mut rng = Rng::new(2026);
+            generate(&mut NativeEngine, &model, &prompt, 24, &mut sampler, &mut rng).unwrap()
+        })
+    };
+    let (ref_tokens, ref_stats) = run(1);
+    assert_eq!(ref_stats.produced, 24);
+    assert!(!ref_stats.hit_context_limit);
+    assert_eq!(ref_tokens.len(), prompt.len() + 24);
+    assert!(ref_tokens.iter().all(|&t| (0..47).contains(&t)));
+    for t in SWEEP {
+        // twice per thread count: across-run AND across-thread reproduction
+        for round in 0..2 {
+            let (tokens, stats) = run(t);
+            assert_eq!(tokens, ref_tokens, "threads {t} round {round}");
+            assert_eq!(stats, ref_stats, "threads {t} round {round}");
+        }
+    }
+    par::set_max_threads(prev);
+}
+
+#[test]
+fn warm_arena_generation_matches_allocating_path() {
+    let model = compressed_model();
+    let prompt: Vec<i32> = vec![1, 2, 3, 4, 5];
+    let mut sampler = Sampler::new(1.1, 0, 0.95);
+    let mut rng = Rng::new(9);
+    let (want, want_stats) =
+        generate(&mut NativeEngine, &model, &prompt, 20, &mut sampler, &mut rng).unwrap();
+    let mut kv = KvScratch::new();
+    let mut ws = Workspace::new();
+    let mut logits = Tensor::default();
+    let mut tokens = Vec::new();
+    for round in 0..3 {
+        let mut rng = Rng::new(9);
+        let stats = generate_into(
+            &mut NativeEngine, &model, &prompt, 20, &mut sampler, &mut rng,
+            &mut kv, &mut ws, &mut logits, &mut tokens,
+        )
+        .unwrap();
+        assert_eq!(tokens, want, "round {round}");
+        assert_eq!(stats, want_stats, "round {round}");
+    }
+}
+
+#[test]
+fn generation_stops_cleanly_at_the_context_window() {
+    let model = base_model();
+    let context = model.pos_emb.shape()[0];
+    let mut sampler = Sampler::greedy();
+    let mut rng = Rng::new(1);
+    // 4 positions of room: asks for 10, produces 4, reports the stop
+    let prompt: Vec<i32> = (0..context as i32 - 4).map(|i| i % 47).collect();
+    let (tokens, stats) =
+        generate(&mut NativeEngine, &model, &prompt, 10, &mut sampler, &mut rng).unwrap();
+    assert_eq!(stats.produced, 4);
+    assert!(stats.hit_context_limit);
+    assert_eq!(tokens.len(), context);
+    // a prompt exactly filling the window: clean stop, zero produced
+    let full: Vec<i32> = (0..context as i32).map(|i| i % 47).collect();
+    let (tokens, stats) =
+        generate(&mut NativeEngine, &model, &full, 10, &mut sampler, &mut rng).unwrap();
+    assert_eq!(stats.produced, 0);
+    assert!(stats.hit_context_limit);
+    assert_eq!(tokens, full);
+    // an over-long prompt surfaces the typed overflow instead of a silent
+    // zero-token success
+    let long: Vec<i32> = (0..context as i32 + 1).map(|i| i % 47).collect();
+    let err = generate(&mut NativeEngine, &model, &long, 1, &mut sampler, &mut rng).unwrap_err();
+    let ov = err.downcast_ref::<ContextOverflow>().unwrap_or_else(|| panic!("got {err:#}"));
+    assert_eq!(*ov, ContextOverflow { pos: context, context });
+}

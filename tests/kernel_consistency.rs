@@ -12,7 +12,9 @@
 //!   pack buffers included) are bit-identical;
 //! * the scorer pipeline agrees across kernels (accuracy-critical scores
 //!   move by no more than numeric noise), keeping the eval-sweep
-//!   method-ordering gate meaningful on every host.
+//!   method-ordering gate meaningful on every host;
+//! * the KV-cache decode step agrees across kernels (its decode-vs-prefill
+//!   bit-identity *within* a kernel lives in `tests/decode_consistency.rs`).
 //!
 //! Every test takes the same knob mutex: the kernel choice is process-wide
 //! state, exactly like the thread knob in the sibling suites.
@@ -240,6 +242,53 @@ fn expert_forward_agrees_across_kernels() {
         let si = with_kernel(simd, || expert_forward(ex, &x).unwrap());
         assert!(rel_err(&si, &sc) < 1e-4);
     }
+}
+
+#[test]
+fn kv_decode_agrees_across_kernels() {
+    // The KV-cache decode step drives the same GEMM family as prefill on
+    // one-row shapes; scalar vs the detected SIMD family must agree to the
+    // same tolerance as the rest of the forward pipeline. (Bit-identity of
+    // decode vs prefill *within* a kernel lives in
+    // `tests/decode_consistency.rs`.)
+    use mergemoe::model::testprops::synth_model;
+    use mergemoe::model::workspace::{KvScratch, Workspace};
+    use mergemoe::runtime::{Engine, NativeEngine};
+    let _guard = KERNEL_KNOB.lock().unwrap();
+    let Some(simd) = detected_simd() else {
+        return;
+    };
+    let cfg = mergemoe::config::ModelConfig {
+        name: "kerneld".into(),
+        n_layers: 2,
+        d_model: 16,
+        n_heads: 2,
+        d_ff: 8,
+        n_experts: 4,
+        top_k: 2,
+        shared_expert: true,
+        n_params: 0,
+        merge_targets: vec![2],
+    };
+    let model = synth_model(&cfg, 0x51D7);
+    let prompt: Vec<i32> = (0..12).map(|i| ((i * 9 + 2) % 47) as i32).collect();
+    let run = || {
+        let mut kv = KvScratch::new();
+        let mut ws = Workspace::new();
+        let mut out = Tensor::default();
+        let mut rows = Vec::new();
+        for t in 0..prompt.len() {
+            NativeEngine
+                .decode_step(&model, &prompt[..=t], &mut kv, &mut ws, &mut out)
+                .unwrap();
+            rows.extend_from_slice(out.row(0));
+        }
+        Tensor::from_vec(&[prompt.len(), out.cols()], rows).unwrap()
+    };
+    let sc = with_kernel(Kind::Scalar, run);
+    let si = with_kernel(simd, run);
+    let err = rel_err(&si, &sc);
+    assert!(err < 1e-4, "decode scalar-vs-simd rel err {err}");
 }
 
 #[test]
